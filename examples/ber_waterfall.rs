@@ -1,0 +1,86 @@
+//! BER waterfall: reproduce the verification methodology of paper §V-B
+//! (Fig 8/Fig 9) — sweep Eb/N0, measure BER for the optimal decoder,
+//! the tiled baseline, the parallel-traceback decoder, and hard-decision
+//! mode, against the union bounds.
+//!
+//! ```bash
+//! cargo run --release --example ber_waterfall
+//! ```
+
+use std::sync::Arc;
+
+use viterbi::ber::{
+    hard_viterbi_ber, measure_point_parallel, soft_viterbi_ber, BerConfig, DistanceSpectrum,
+};
+use viterbi::code::CodeSpec;
+use viterbi::frames::plan::FrameGeometry;
+use viterbi::util::threadpool::ThreadPool;
+use viterbi::viterbi::{
+    HardEngine, ParallelTraceback, ScalarEngine, SharedEngine, StartPolicy, TiledEngine,
+    TracebackMode,
+};
+
+fn main() {
+    let spec = CodeSpec::standard_k7();
+    let pool = ThreadPool::with_default_parallelism();
+    let cfg = BerConfig {
+        block_bits: 16_384,
+        target_errors: 120,
+        max_bits: 1_500_000,
+        seed: 0xBEEF_CAFE,
+        puncture: None,
+    };
+
+    let engines: Vec<(&str, SharedEngine)> = vec![
+        ("optimal (whole-stream)", Arc::new(ScalarEngine::new(spec.clone()))),
+        (
+            "tiled serial-tb",
+            Arc::new(TiledEngine::new(
+                spec.clone(),
+                FrameGeometry::new(256, 20, 20),
+                TracebackMode::FrameSerial,
+            )),
+        ),
+        (
+            "unified parallel-tb",
+            Arc::new(TiledEngine::new(
+                spec.clone(),
+                FrameGeometry::new(256, 20, 45),
+                TracebackMode::Parallel(ParallelTraceback::new(
+                    32,
+                    45,
+                    StartPolicy::StoredArgmax,
+                )),
+            )),
+        ),
+        (
+            "hard-decision",
+            Arc::new(HardEngine::new(ScalarEngine::new(spec.clone()))),
+        ),
+    ];
+
+    println!(
+        "{:>8} {:>24} {:>24} {:>24} {:>24} {:>12} {:>12}",
+        "Eb/N0", "optimal", "tiled", "parallel-tb", "hard", "soft-bound", "hard-bound"
+    );
+    let s = DistanceSpectrum::k7_171_133();
+    for tenth in [20i32, 25, 30, 35, 40, 45, 50] {
+        let db = tenth as f64 / 10.0;
+        let mut row = format!("{db:>8.1}");
+        for (_, engine) in &engines {
+            let p = measure_point_parallel(&spec, Arc::clone(engine), &cfg, db, &pool);
+            row += &format!(
+                " {:>17.3e}({:>4})",
+                p.ber,
+                if p.reliable { "ok" } else { "~" }
+            );
+        }
+        row += &format!(
+            " {:>12.3e} {:>12.3e}",
+            soft_viterbi_ber(db, 0.5, &s),
+            hard_viterbi_ber(db, 0.5, &s)
+        );
+        println!("{row}");
+    }
+    println!("\n(soft gains ≈2 dB over hard; tiled/parallel-tb track the optimal curve)");
+}

@@ -1,0 +1,24 @@
+//! Profiling harness for the forward-pass hot loop (§Perf): runs
+//! 30k frame forwards so `perf record target/release/examples/profloop`
+//! lands squarely on the ACS butterfly.
+use viterbi::channel::{bpsk, llr, AwgnChannel, Rng64};
+use viterbi::code::{encode, CodeSpec, Termination, Trellis};
+use viterbi::viterbi::{FrameScratch, frame::forward_frame};
+fn main() {
+    let spec = CodeSpec::standard_k7();
+    let trellis = Trellis::new(spec.clone());
+    let mut rng = Rng64::seeded(6);
+    let span_len = 321usize;
+    let mut msg = vec![0u8; span_len];
+    rng.fill_bits(&mut msg);
+    let coded = encode(&spec, &msg, Termination::Truncated);
+    let ch = AwgnChannel::new(3.0, 0.5);
+    let rx = ch.transmit(&bpsk::modulate(&coded), &mut rng);
+    let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+    let mut scratch = FrameScratch::new(64, span_len);
+    let mut acc = 0u32;
+    for _ in 0..30000 {
+        acc ^= forward_frame(&trellis, &llrs, None, &[], &mut scratch);
+    }
+    println!("{acc}");
+}

@@ -1,0 +1,54 @@
+//! Quickstart: encode a message, push it through a noisy channel, and
+//! decode it with the paper's unified parallel-traceback decoder.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use viterbi::channel::{bpsk, llr, AwgnChannel, Rng64};
+use viterbi::code::{encode, CodeSpec, Termination};
+use viterbi::frames::plan::FrameGeometry;
+use viterbi::util::bits::count_bit_errors;
+use viterbi::viterbi::{
+    Engine, ParallelTraceback, StartPolicy, StreamEnd, TiledEngine, TracebackMode,
+};
+
+fn main() {
+    // 1. The industry-standard (2,1,7) code with generators 171, 133.
+    let spec = CodeSpec::standard_k7();
+
+    // 2. A random 10k-bit message, encoded with trellis termination.
+    let mut rng = Rng64::seeded(2020);
+    let mut message = vec![0u8; 10_000];
+    rng.fill_bits(&mut message);
+    let coded = encode(&spec, &message, Termination::Terminated);
+    println!("message: {} bits -> {} coded bits", message.len(), coded.len());
+
+    // 3. BPSK over AWGN at Eb/N0 = 3 dB, LLRs at the receiver.
+    let channel = AwgnChannel::new(3.0, spec.rate());
+    let received = channel.transmit(&bpsk::modulate(&coded), &mut rng);
+    let llrs = llr::llrs_from_samples(&received, channel.sigma());
+
+    // 4. Decode with the paper's configuration: frames of f=256 with
+    //    overlaps v1=20 / v2=45, parallel traceback in f0=32 subframes,
+    //    stored-argmax start states.
+    let engine = TiledEngine::new(
+        spec.clone(),
+        FrameGeometry::new(256, 20, 45),
+        TracebackMode::Parallel(ParallelTraceback::new(32, 45, StartPolicy::StoredArgmax)),
+    );
+    let stages = message.len() + (spec.k - 1) as usize;
+    let decoded = engine.decode_stream(&llrs, stages, StreamEnd::Terminated);
+
+    // 5. Compare.
+    let errors = count_bit_errors(&decoded[..message.len()], &message);
+    println!(
+        "decoded with {}: {} bit errors out of {} (BER {:.2e})",
+        engine.name(),
+        errors,
+        message.len(),
+        errors as f64 / message.len() as f64
+    );
+    assert!(errors < 50, "unexpectedly high error count");
+    println!("quickstart OK");
+}

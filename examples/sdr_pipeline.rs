@@ -1,0 +1,134 @@
+//! End-to-end serving driver (the repo's E2E validation run, recorded
+//! in EXPERIMENTS.md §E2E).
+//!
+//! Loads the AOT-compiled XLA decode artifact (built by
+//! `make artifacts` — python runs only there), starts the L3 decode
+//! service with dynamic batching, fires a closed-loop workload of
+//! noisy SDR streams at it, and reports throughput, latency
+//! percentiles, batching occupancy, and end-to-end BER vs theory.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example sdr_pipeline            # PJRT backend
+//! cargo run --release --example sdr_pipeline -- native  # native backend
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use viterbi::ber::{soft_viterbi_ber, DistanceSpectrum};
+use viterbi::channel::{bpsk, llr, AwgnChannel, Rng64};
+use viterbi::code::{encode, CodeSpec, Termination};
+use viterbi::coordinator::{BackendSpec, BatchPolicy, DecodeServer, ServerConfig};
+use viterbi::frames::plan::FrameGeometry;
+use viterbi::util::bits::count_bit_errors;
+use viterbi::viterbi::StreamEnd;
+
+const EBN0_DB: f64 = 4.0;
+const STREAM_BITS: usize = 8 * 1024;
+const REQUESTS: usize = 96;
+const CLIENTS: usize = 8;
+
+fn main() -> anyhow::Result<()> {
+    let backend_arg = std::env::args().nth(1).unwrap_or_else(|| "pjrt".into());
+    let backend = match backend_arg.as_str() {
+        "pjrt" => BackendSpec::Pjrt {
+            artifact: "ptb_f256_v45_b8".into(),
+            artifact_dir: None,
+        },
+        "native" => BackendSpec::Native {
+            spec: CodeSpec::standard_k7(),
+            geo: FrameGeometry::new(256, 20, 45),
+            f0: Some(32),
+        },
+        other => anyhow::bail!("unknown backend {other:?} (pjrt|native)"),
+    };
+
+    let server = Arc::new(DecodeServer::start(ServerConfig {
+        backend,
+        batch: BatchPolicy {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_millis(1),
+        },
+        high_watermark: 4096,
+        low_watermark: 1024,
+    })?);
+    let spec = server.chunker().spec.clone();
+
+    // Pre-generate the workload: REQUESTS noisy streams.
+    println!(
+        "generating {} streams of {} bits at Eb/N0 = {} dB…",
+        REQUESTS, STREAM_BITS, EBN0_DB
+    );
+    let channel = AwgnChannel::new(EBN0_DB, spec.rate());
+    let mut rng = Rng64::seeded(42);
+    let mut workload = Vec::with_capacity(REQUESTS);
+    for _ in 0..REQUESTS {
+        let mut msg = vec![0u8; STREAM_BITS];
+        rng.fill_bits(&mut msg);
+        let coded = encode(&spec, &msg, Termination::Truncated);
+        let rx = channel.transmit(&bpsk::modulate(&coded), &mut rng);
+        let llrs = llr::llrs_from_samples(&rx, channel.sigma());
+        workload.push((msg, llrs));
+    }
+
+    // Closed-loop clients: each submits its share and waits.
+    println!("serving with {} concurrent clients…", CLIENTS);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    let workload = Arc::new(workload);
+    for c in 0..CLIENTS {
+        let server = Arc::clone(&server);
+        let workload = Arc::clone(&workload);
+        handles.push(std::thread::spawn(move || {
+            let mut errors = 0usize;
+            let mut bits = 0usize;
+            let mut i = c;
+            while i < workload.len() {
+                let (msg, llrs) = &workload[i];
+                let resp = server.decode_blocking(llrs.clone(), StreamEnd::Truncated);
+                errors += count_bit_errors(&resp.bits[..msg.len()], msg);
+                bits += msg.len();
+                i += CLIENTS;
+            }
+            (errors, bits)
+        }));
+    }
+    let (mut total_errors, mut total_bits) = (0usize, 0usize);
+    for h in handles {
+        let (e, b) = h.join().expect("client thread");
+        total_errors += e;
+        total_bits += b;
+    }
+    let wall = t0.elapsed();
+
+    let m = server.metrics();
+    let ber = total_errors as f64 / total_bits as f64;
+    let bound = soft_viterbi_ber(EBN0_DB, 0.5, &DistanceSpectrum::k7_171_133());
+    println!("\n==== sdr_pipeline results ====");
+    println!("backend:            {}", server.backend_name());
+    println!("streams decoded:    {REQUESTS} ({total_bits} information bits)");
+    println!(
+        "wall time:          {:.2?}  ->  throughput {:.2} Mb/s",
+        wall,
+        total_bits as f64 / wall.as_secs_f64() / 1e6
+    );
+    println!(
+        "request latency:    p50 {:?}  p99 {:?}",
+        m.p50_latency, m.p99_latency
+    );
+    println!(
+        "batching:           {} batches, mean occupancy {:.2}, mean exec {:?}",
+        m.batches, m.mean_batch_occupancy, m.mean_batch_exec
+    );
+    println!(
+        "end-to-end BER:     {ber:.3e}   (union bound at {EBN0_DB} dB: {bound:.3e})"
+    );
+    anyhow::ensure!(m.responses as usize == REQUESTS, "lost responses");
+    anyhow::ensure!(
+        ber < bound * 3.0 + 1e-6,
+        "BER {ber} out of line with bound {bound}"
+    );
+    println!("sdr_pipeline OK");
+    Ok(())
+}

@@ -1,0 +1,113 @@
+"""AOT build: lower the L2 decode graphs to HLO *text* artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from the repo's python/ directory, via ``make artifacts``):
+
+    python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per entry in :data:`CONFIGS` plus a
+``manifest.txt`` the rust runtime parses. Manifest line format::
+
+    name kind batch L f v1 v2 f0 k beta g0 g1
+
+(kind ∈ {unified, ref}; generators in octal.)
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+
+from .kernels.viterbi_pallas import KernelConfig
+from .model import decode_batch, decode_batch_ref, example_inputs
+
+# ---------------------------------------------------------------------------
+# Artifact matrix.
+#
+# BER sweeps use the rust native engines (bit-exact vs these kernels —
+# enforced by rust/tests/pjrt_vs_native.rs); artifacts cover the paper's
+# operating points and the serving batch buckets (DESIGN.md §8).
+# ---------------------------------------------------------------------------
+K7 = dict(k=7, generators=(0o171, 0o133))
+
+CONFIGS = [
+    # (name, cfg, batch, kind)
+    # Paper operating point, serial traceback (Table IV row anchor).
+    ("serial_f256_v20_b8", KernelConfig(f=256, v1=20, v2=20, f0=256, **K7), 8, "unified"),
+    # Paper operating point, parallel traceback (Table V / Table III
+    # reliable cell: f0=32, v2=45).
+    ("ptb_f256_v45_b1", KernelConfig(f=256, v1=20, v2=45, f0=32, **K7), 1, "unified"),
+    ("ptb_f256_v45_b8", KernelConfig(f=256, v1=20, v2=45, f0=32, **K7), 8, "unified"),
+    ("ptb_f256_v45_b32", KernelConfig(f=256, v1=20, v2=45, f0=32, **K7), 32, "unified"),
+    # Small fast config for rust integration tests.
+    ("test_k5_f32_b2", KernelConfig(k=5, generators=(0o23, 0o35), f=32, v1=8, v2=12, f0=8), 2, "unified"),
+    # Pure-jnp baseline graph at the test shape (AOT cross-check).
+    ("ref_k5_f32_b2", KernelConfig(k=5, generators=(0o23, 0o35), f=32, v1=8, v2=12, f0=8), 2, "ref"),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default elides big constant
+    # payloads as "{...}", which the 0.5.1 text parser silently reads
+    # as zeros — the trellis tables would vanish from the artifact.
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "HLO text contains elided constants"
+    return text
+
+
+def build_one(name: str, cfg: KernelConfig, batch: int, kind: str, out_dir: str) -> str:
+    fn = decode_batch(cfg, batch) if kind == "unified" else decode_batch_ref(cfg, batch)
+    lowered = jax.jit(fn).lower(*example_inputs(cfg, batch))
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def manifest_line(name: str, cfg: KernelConfig, batch: int, kind: str) -> str:
+    g = " ".join(f"{x:o}" for x in cfg.generators)
+    return (
+        f"{name} {kind} {batch} {cfg.L} {cfg.f} {cfg.v1} {cfg.v2} "
+        f"{min(cfg.f0, cfg.f)} {cfg.k} {len(cfg.generators)} {g}"
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", help="build only configs whose name contains this")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    lines = []
+    for name, cfg, batch, kind in CONFIGS:
+        if args.only and args.only not in name:
+            continue
+        path = build_one(name, cfg, batch, kind, args.out_dir)
+        size = os.path.getsize(path)
+        print(f"  {name:26s} [{kind:7s}] batch={batch:<3d} L={cfg.L:<4d} -> {path} ({size//1024} KiB)")
+        lines.append(manifest_line(name, cfg, batch, kind))
+
+    mpath = os.path.join(args.out_dir, "manifest.txt")
+    with open(mpath, "w") as f:
+        f.write("# name kind batch L f v1 v2 f0 k beta generators(octal)...\n")
+        f.write("\n".join(lines) + "\n")
+    print(f"  manifest -> {mpath} ({len(lines)} artifacts)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,39 @@
+"""Gather helpers for AOT-artifact-friendly HLO.
+
+History: during bring-up, decode artifacts returned all-zero outputs on
+the deployment XLA (xla_extension 0.5.1). The root cause was *not* the
+gathers but ``as_hlo_text()`` eliding large constant payloads as
+``{...}``, which the 0.5.1 text parser silently accepts as empty — the
+trellis tables vanished from the artifact (fix: ``as_hlo_text(True)``
+in ``aot.py``; regression-guarded there and by
+rust/tests/runtime_pjrt.rs).
+
+These helpers remain in the graphs for two reasons:
+
+* they emit the simplest possible gather form (1-D indices,
+  ``index_vector_dim=1``), keeping the artifact robust against old
+  backends' gather corner cases, and
+* linearized gathers into a flattened operand (``take2``) lower to a
+  single gather instead of a gather-of-gathers, which is also the
+  layout the TPU kernel wants (one VMEM vector index stream).
+"""
+
+import jax.numpy as jnp
+
+
+def take1(arr: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """``arr[idx]`` for 1-D ``arr`` and any-shape ``idx``, emitting a
+    1-D-index gather."""
+    flat = jnp.ravel(idx)
+    return arr[flat].reshape(idx.shape)
+
+
+def take2(mat: jnp.ndarray, rows: jnp.ndarray, cols: jnp.ndarray) -> jnp.ndarray:
+    """``mat[rows, cols]`` (elementwise zip) via a linearized 1-D gather.
+
+    ``rows`` and ``cols`` must have the same shape.
+    """
+    n_cols = mat.shape[1]
+    flat = mat.reshape(-1)
+    lin = jnp.ravel(rows) * n_cols + jnp.ravel(cols)
+    return flat[lin].reshape(rows.shape)

@@ -1,0 +1,166 @@
+"""Pure-jnp correctness oracle for the Viterbi frame kernel.
+
+Implements the paper's Alg. 1 (forward) + Alg. 2 (backward) with
+jax.lax.scan, plus the frame-level variants the Pallas kernel must
+match bit-for-bit:
+
+* ``forward_ref``      — path metrics, decisions, per-stage argmax
+* ``decode_frame_ref`` — serial traceback over the whole frame
+* ``decode_frame_parallel_tb_ref`` — the paper's parallel subframe
+  traceback with stored-argmax start states (§IV-D)
+
+Tie-breaking matches rust: on equal path metrics the d=0 predecessor
+(state 2j) wins; argmax over states picks the lowest state index.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .gather_compat import take1, take2
+from .trellis import Trellis
+
+
+def _tables(trellis: Trellis):
+    prev = jnp.asarray(trellis.prev)              # (S, 2)
+    prev_out = jnp.asarray(trellis.prev_output)   # (S, 2)
+    return prev, prev_out
+
+
+def stage_metrics(llr_t: jnp.ndarray, beta: int) -> jnp.ndarray:
+    """(2^beta,) branch metrics for one stage (paper eq. 2)."""
+    words = jnp.arange(1 << beta)
+    signs = 1.0 - 2.0 * ((words[:, None] >> jnp.arange(beta)[None, :]) & 1)
+    return (signs * llr_t[None, :]).sum(axis=1).astype(jnp.float32)
+
+
+def forward_ref(trellis: Trellis, llrs: jnp.ndarray, start_state=None):
+    """Forward procedure over a frame.
+
+    Args:
+      llrs: (L, beta) float32 stage-major LLRs.
+      start_state: int or None; None = all states start equal.
+
+    Returns:
+      decisions: (L, S) int32 in {0,1} — winning predecessor slot.
+      pm_final: (S,) float32 final path metrics.
+      argmax_per_stage: (L,) int32 — argmax state after every stage
+        (superset of any boundary-state record the kernel keeps).
+    """
+    prev, prev_out = _tables(trellis)
+    S = trellis.spec.num_states
+    beta = trellis.spec.beta
+    if start_state is None:
+        pm0 = jnp.zeros((S,), dtype=jnp.float32)
+    else:
+        pm0 = jnp.full((S,), -jnp.inf, dtype=jnp.float32).at[start_state].set(0.0)
+
+    def step(pm, llr_t):
+        bm = stage_metrics(llr_t, beta)            # (2^beta,)
+        cand = take1(pm, prev) + take1(bm, prev_out)   # (S, 2)
+        # d=0 wins ties: strict greater-than for d=1.
+        sel1 = cand[:, 1] > cand[:, 0]
+        pm_new = jnp.where(sel1, cand[:, 1], cand[:, 0])
+        dec = sel1.astype(jnp.int32)
+        return pm_new, (dec, jnp.argmax(pm_new).astype(jnp.int32))
+
+    pm_final, (decisions, argmax_per_stage) = jax.lax.scan(step, pm0, llrs)
+    return decisions, pm_final, argmax_per_stage
+
+
+def traceback_ref(trellis: Trellis, decisions: jnp.ndarray, start_state):
+    """Serial traceback (Alg. 2) from ``start_state`` at the last stage.
+
+    Returns (L,) int32 decoded bits (bit t = input that entered the
+    state at stage t on the survivor path).
+    """
+    k = trellis.spec.k
+    mask = trellis.spec.state_mask
+
+    def step(state, dec_t):
+        bit = state >> (k - 2)
+        nxt = (2 * state + take1(dec_t, state)) & mask
+        return nxt, bit
+
+    _, bits = jax.lax.scan(
+        step, jnp.asarray(start_state, jnp.int32), decisions, reverse=True
+    )
+    return bits.astype(jnp.int32)
+
+
+def decode_frame_ref(trellis: Trellis, llrs: jnp.ndarray, start_state=None,
+                     tb_state=None):
+    """Whole-frame decode with serial traceback.
+
+    tb_state: traceback start state; None = argmax of final metrics.
+    Returns (L,) int32 bits.
+    """
+    decisions, pm, _ = forward_ref(trellis, llrs, start_state)
+    start = jnp.argmax(pm).astype(jnp.int32) if tb_state is None else tb_state
+    return traceback_ref(trellis, decisions, start)
+
+
+def subframe_geometry(L: int, head: int, out_len: int, f0: int, v2: int):
+    """Static parallel-traceback geometry (numpy, trace-time).
+
+    Returns (starts, emit_lo, emit_hi): per-subframe traceback start
+    stage (inclusive) and emit window [emit_lo, emit_hi) in frame-stage
+    coordinates. Mirrors rust viterbi::unified.
+    """
+    n_sub = (out_len + f0 - 1) // f0
+    idx = np.arange(n_sub)
+    starts = np.minimum(head + (idx + 1) * f0 + v2, L) - 1
+    emit_lo = head + idx * f0
+    emit_hi = head + np.minimum((idx + 1) * f0, out_len)
+    return starts.astype(np.int64), emit_lo.astype(np.int64), emit_hi.astype(np.int64)
+
+
+def decode_frame_parallel_tb_ref(
+    trellis: Trellis,
+    llrs: jnp.ndarray,
+    head: int,
+    out_len: int,
+    f0: int,
+    v2: int,
+    start_state=None,
+    tb_state=None,
+):
+    """The paper's unified decode: forward + parallel subframe traceback
+    with stored-argmax start states. Returns (out_len,) int32 bits.
+
+    ``tb_state``: overrides the start state of subframes whose traceback
+    begins at the frame's final stage (terminated-stream support).
+    """
+    L = llrs.shape[0]
+    k = trellis.spec.k
+    mask = trellis.spec.state_mask
+    decisions, pm, argmax_per_stage = forward_ref(trellis, llrs, start_state)
+    starts, emit_lo, emit_hi = subframe_geometry(L, head, out_len, f0, v2)
+    n_sub = len(starts)
+
+    final_best = jnp.argmax(pm).astype(jnp.int32)
+    out = jnp.zeros((out_len,), dtype=jnp.int32)
+    for s in range(n_sub):
+        T = int(starts[s])
+        if T == L - 1:
+            st = final_best if tb_state is None else jnp.asarray(tb_state, jnp.int32)
+        else:
+            st = argmax_per_stage[T]
+        state = st
+        for t in range(T, int(emit_lo[s]) - 1, -1):
+            bit = state >> (k - 2)
+            if int(emit_lo[s]) <= t < int(emit_hi[s]):
+                out = out.at[t - head].set(bit)
+            state = (2 * state + decisions[t, state]) & mask
+    return out
+
+
+def awgn_llrs(coded_bits: np.ndarray, ebn0_db: float, rate: float,
+              rng: np.random.Generator) -> np.ndarray:
+    """Simulated receiver front end matching rust channel::awgn:
+    BPSK (0→+1) + AWGN, LLR = 2y/sigma^2. Returns float32, flat
+    (stage-major, lane-minor) — caller reshapes to (L, beta)."""
+    sigma = float(np.sqrt(1.0 / (2.0 * rate * 10.0 ** (ebn0_db / 10.0))))
+    tx = 1.0 - 2.0 * coded_bits.astype(np.float64)
+    rx = tx + rng.normal(0.0, sigma, size=tx.shape)
+    return (2.0 * rx / sigma**2).astype(np.float32)

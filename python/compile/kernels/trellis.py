@@ -1,0 +1,120 @@
+"""Convolutional-code trellis tables (numpy, build-time).
+
+Conventions match the rust side exactly (rust/src/code/trellis.rs and
+DESIGN.md §7): a state holds the most recent k-1 input bits, MSB =
+newest; consuming bit b in state i moves to
+
+    next(i, b) = (b << (k-2)) | (i >> 1)
+
+and emits parity(g & r) per generator g with register r = (b << (k-1)) | i.
+State j's predecessors are (2j + d) & mask for decision bit d, and the
+input bit that entered j is j >> (k-2).
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import numpy as np
+
+
+def _parity(x: int) -> int:
+    return bin(x).count("1") & 1
+
+
+@dataclass(frozen=True)
+class CodeSpec:
+    """A rate-1/beta convolutional code with constraint length k."""
+
+    k: int
+    generators: Tuple[int, ...]
+
+    def __post_init__(self):
+        if not (3 <= self.k <= 16):
+            raise ValueError(f"constraint length {self.k} unsupported")
+        if len(self.generators) < 2:
+            raise ValueError("need at least two generators")
+        for g in self.generators:
+            if g == 0 or g >= (1 << self.k):
+                raise ValueError(f"generator {g:o} invalid for k={self.k}")
+
+    @property
+    def beta(self) -> int:
+        return len(self.generators)
+
+    @property
+    def num_states(self) -> int:
+        return 1 << (self.k - 1)
+
+    @property
+    def state_mask(self) -> int:
+        return self.num_states - 1
+
+    @staticmethod
+    def standard_k7() -> "CodeSpec":
+        """The (2,1,7) code with generators 171, 133 (octal)."""
+        return CodeSpec(7, (0o171, 0o133))
+
+    @staticmethod
+    def standard_k5() -> "CodeSpec":
+        return CodeSpec(5, (0o23, 0o35))
+
+
+@dataclass
+class Trellis:
+    """Tabulated FSM for a CodeSpec (all int32 numpy arrays)."""
+
+    spec: CodeSpec
+    next: np.ndarray = field(init=False)         # (S, 2)
+    output: np.ndarray = field(init=False)       # (S, 2) branch output words
+    prev: np.ndarray = field(init=False)         # (S, 2)
+    prev_output: np.ndarray = field(init=False)  # (S, 2)
+
+    def __post_init__(self):
+        k, S = self.spec.k, self.spec.num_states
+        mask = self.spec.state_mask
+        nxt = np.zeros((S, 2), dtype=np.int32)
+        out = np.zeros((S, 2), dtype=np.int32)
+        for i in range(S):
+            for b in range(2):
+                nxt[i, b] = (b << (k - 2)) | (i >> 1)
+                r = (b << (k - 1)) | i
+                word = 0
+                for gi, g in enumerate(self.spec.generators):
+                    word |= _parity(g & r) << gi
+                out[i, b] = word
+        prev = np.zeros((S, 2), dtype=np.int32)
+        prev_out = np.zeros((S, 2), dtype=np.int32)
+        for j in range(S):
+            b_in = j >> (k - 2)
+            for d in range(2):
+                i = (2 * j + d) & mask
+                prev[j, d] = i
+                prev_out[j, d] = out[i, b_in]
+                assert nxt[i, b_in] == j
+        self.next, self.output = nxt, out
+        self.prev, self.prev_output = prev, prev_out
+
+    def encode(self, bits: np.ndarray, terminate: bool = True) -> np.ndarray:
+        """Encode a message; returns the coded bit stream
+        (stage-major, lane-minor), optionally with k-1 zero tail bits."""
+        bits = np.asarray(bits, dtype=np.int64)
+        tail = self.spec.k - 1 if terminate else 0
+        msg = np.concatenate([bits, np.zeros(tail, dtype=np.int64)])
+        coded = np.zeros(len(msg) * self.spec.beta, dtype=np.int8)
+        state = 0
+        for t, b in enumerate(msg):
+            word = int(self.output[state, b])
+            for lane in range(self.spec.beta):
+                coded[t * self.spec.beta + lane] = (word >> lane) & 1
+            state = int(self.next[state, b])
+        if terminate:
+            assert state == 0
+        return coded
+
+
+def branch_metric_table(llr_t: np.ndarray, beta: int) -> np.ndarray:
+    """The 2^beta expanded per-stage branch metrics (paper eq. 2 with the
+    repetitive-pattern + complement-halving structure of §IV-B)."""
+    words = np.arange(1 << beta)
+    signs = 1.0 - 2.0 * ((words[:, None] >> np.arange(beta)[None, :]) & 1)
+    return (signs * np.asarray(llr_t)[None, :]).sum(axis=1)

@@ -1,0 +1,221 @@
+"""L1 — the unified Viterbi frame-decode Pallas kernel (paper Alg. 3).
+
+One grid program decodes one frame: the forward procedure (branch
+metrics + ACS + survivor decisions) and the backward procedure
+(parallel subframe traceback, §IV-D) are fused in a single kernel, so
+survivor decisions never leave on-chip memory — the TPU analogue of the
+paper's shared-memory-only unified CUDA kernel (DESIGN.md §3):
+
+* CUDA thread block ↔ grid program (one frame each);
+* 2^{k-1} threads over states ↔ 64-wide vectorized ACS on the VPU;
+* shared-memory survivor matrix ↔ the (L, S) decisions value that
+  lives in VMEM for the lifetime of the program;
+* parallel traceback threads ↔ the vectorized subframe walk.
+
+The kernel is lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and correctness (pytest vs ref.py)
+plus the VMEM footprint model (rust memmodel) carry the TPU story.
+
+Geometry is static per compiled artifact: every frame is
+L = v1 + f + v2 stages and decodes the middle f. Stream edges are
+handled by the rust chunker (zero-LLR padding = neutral metrics).
+The initial path-metric row is an explicit input so the first frame
+can pin the encoder start state (and streaming decoders can chain
+frames).
+"""
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .gather_compat import take1, take2
+from .trellis import CodeSpec, Trellis
+from .ref import subframe_geometry
+
+
+@dataclass(frozen=True)
+class KernelConfig:
+    """Static geometry + code for one compiled kernel variant."""
+
+    k: int = 7
+    generators: Tuple[int, ...] = (0o171, 0o133)
+    f: int = 256
+    v1: int = 20
+    v2: int = 20
+    # Subframe size for the parallel traceback; f0 >= f degenerates to
+    # the serial-traceback tiled kernel (method (b) baseline).
+    f0: int = 32
+
+    @property
+    def spec(self) -> CodeSpec:
+        return CodeSpec(self.k, self.generators)
+
+    @property
+    def L(self) -> int:
+        return self.v1 + self.f + self.v2
+
+    @property
+    def name(self) -> str:
+        mode = "ptb" if self.f0 < self.f else "serial"
+        return (
+            f"viterbi_k{self.k}_f{self.f}_v{self.v1}_{self.v2}"
+            f"_{mode}{min(self.f0, self.f)}"
+        )
+
+    def vmem_bytes(self) -> dict:
+        """Estimated VMEM residency per program (the §Perf model):
+        decisions dominate; see rust memmodel::smem for the breakdown."""
+        S = 1 << (self.k - 1)
+        beta = len(self.generators)
+        return {
+            "llr": self.L * beta * 4,
+            "decisions_bitpacked": (S + 7) // 8 * self.L,
+            "decisions_int32": S * self.L * 4,  # interpret-mode layout
+            "pm": 2 * S * 4,
+            "argmax_trail": self.L * 4,
+        }
+
+
+def _traceback_maps(cfg: KernelConfig):
+    """Static (numpy) maps for the vectorized parallel traceback.
+
+    Returns:
+      starts:   (n_sub,) traceback start stage per subframe (inclusive)
+      max_steps: loop trip count
+      w_idx, s_idx: (f,) assembly gather — decoded bit for output
+        position t' comes from walk step w_idx[t'] of subframe s_idx[t'].
+    """
+    starts, emit_lo, emit_hi = subframe_geometry(
+        cfg.L, cfg.v1, cfg.f, min(cfg.f0, cfg.f), cfg.v2
+    )
+    del emit_hi
+    steps = starts - emit_lo + 1
+    max_steps = int(steps.max())
+    tprime = np.arange(cfg.f)
+    s_idx = np.minimum(tprime // min(cfg.f0, cfg.f), len(starts) - 1)
+    w_idx = starts[s_idx] - (cfg.v1 + tprime)
+    assert (w_idx >= 0).all() and (w_idx < max_steps).all()
+    return starts, max_steps, s_idx.astype(np.int32), w_idx.astype(np.int32)
+
+
+def _kernel_body(
+    cfg: KernelConfig,
+    llr_ref,
+    pm0_ref,
+    prev_ref,
+    prev_out_ref,
+    starts_ref,
+    s_idx_ref,
+    w_idx_ref,
+    out_ref,
+):
+    """The fused forward + parallel-traceback kernel for one frame.
+
+    The trellis tables and static traceback maps arrive as (broadcast)
+    kernel inputs — Pallas requires captured arrays to be explicit
+    operands; they are compile-time constants in the surrounding jit.
+    """
+    beta = cfg.spec.beta
+    k = cfg.k
+    mask = cfg.spec.state_mask
+    prev = prev_ref[...]             # (S, 2)
+    prev_out = prev_out_ref[...]     # (S, 2)
+
+    llr = llr_ref[0]   # (L, beta) — VMEM block
+    pm0 = pm0_ref[0]   # (S,)
+
+    # ---- forward: ACS over all states, one stage per scan step ----
+    words = jnp.arange(1 << beta)
+    signs = (1.0 - 2.0 * ((words[:, None] >> jnp.arange(beta)[None, :]) & 1)).astype(
+        jnp.float32
+    )
+
+    def fwd(pm, llr_t):
+        # 2^{beta-1} unique branch metrics, expanded (paper §IV-B):
+        bm = (signs * llr_t[None, :]).sum(axis=1)
+        cand = take1(pm, prev) + take1(bm, prev_out)   # (S, 2)
+        sel1 = cand[:, 1] > cand[:, 0]            # ties → d=0 (rust parity)
+        pm_new = jnp.where(sel1, cand[:, 1], cand[:, 0])
+        return pm_new, (sel1, jnp.argmax(pm_new).astype(jnp.int32))
+
+    _, (decisions, argmax_trail) = jax.lax.scan(fwd, pm0, llr)
+    # decisions: (L, S) bool — the survivor matrix, resident on-chip.
+
+    # ---- backward: all subframes walk in lockstep (paper Fig 5) ----
+    _, max_steps, _, _ = _traceback_maps(cfg)  # static trip count
+    starts = starts_ref[...]
+    states0 = take1(argmax_trail, starts)         # stored-argmax policy
+
+    def walk(carry, w):
+        states = carry                            # (n_sub,)
+        t = jnp.maximum(starts - w, 0)
+        bits = (states >> (k - 2)).astype(jnp.int32)
+        dec = take2(decisions, t, states).astype(jnp.int32)
+        states = (2 * states + dec) & mask
+        return states, bits
+
+    _, walk_bits = jax.lax.scan(
+        walk, states0, jnp.arange(max_steps, dtype=jnp.int32)
+    )
+    # walk_bits: (max_steps, n_sub) → static gather to output order.
+    out_ref[0, :] = take2(walk_bits, w_idx_ref[...], s_idx_ref[...])
+
+
+def make_unified_decoder(cfg: KernelConfig, batch: int, interpret: bool = True):
+    """Build the batched frame decoder.
+
+    Returns a function (llr_frames (B, L, beta) f32, pm0 (B, S) f32)
+    → bits (B, f) int32. The trellis/traceback tables are bound as
+    constants (they become HLO constants in the AOT artifact).
+    """
+    trellis = Trellis(cfg.spec)
+    S = cfg.spec.num_states
+    beta = cfg.spec.beta
+    kernel = partial(_kernel_body, cfg)
+    starts_np, _, s_idx_np, w_idx_np = _traceback_maps(cfg)
+    n_sub = len(starts_np)
+
+    prev = jnp.asarray(trellis.prev, jnp.int32)
+    prev_out = jnp.asarray(trellis.prev_output, jnp.int32)
+    starts = jnp.asarray(starts_np, jnp.int32)
+    s_idx = jnp.asarray(s_idx_np, jnp.int32)
+    w_idx = jnp.asarray(w_idx_np, jnp.int32)
+
+    whole = lambda *shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, cfg.L, beta), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, S), lambda i: (i, 0)),
+            whole(S, 2),
+            whole(S, 2),
+            whole(n_sub),
+            whole(cfg.f),
+            whole(cfg.f),
+        ],
+        out_specs=pl.BlockSpec((1, cfg.f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, cfg.f), jnp.int32),
+        interpret=interpret,
+    )
+
+    def decode(llr_frames, pm0):
+        return call(llr_frames, pm0, prev, prev_out, starts, s_idx, w_idx)
+
+    return decode
+
+
+def uniform_pm0(batch: int, S: int, pin_first: bool = False) -> jnp.ndarray:
+    """Initial path-metric rows: all-equal, optionally pinning frame 0
+    to encoder state 0 (stream head)."""
+    pm0 = jnp.zeros((batch, S), dtype=jnp.float32)
+    if pin_first and batch > 0:
+        row = jnp.full((S,), -1e30, dtype=jnp.float32).at[0].set(0.0)
+        pm0 = pm0.at[0].set(row)
+    return pm0

@@ -1,0 +1,88 @@
+"""L2 — the JAX decode graph.
+
+The "model" of this serving system is the batched frame decoder: LLR
+frames in, decoded bits out, with the L1 Pallas kernel doing the work.
+This module builds the jit-able functions that ``aot.py`` lowers to the
+HLO artifacts the rust runtime executes; python never runs at serve
+time.
+
+Two graph variants are exported per configuration:
+
+* ``decode_batch``        — the unified kernel (paper method (c));
+* ``decode_batch_ref``    — the pure-jnp tiled baseline (method (b)),
+  used for kernel-vs-ref AOT cross-checks and as the baseline engine
+  artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import decode_frame_ref
+from .kernels.trellis import Trellis
+from .kernels.viterbi_pallas import KernelConfig, make_unified_decoder
+
+
+def decode_batch(cfg: KernelConfig, batch: int):
+    """Batched unified decode: (llr (B,L,beta) f32, pm0 (B,S) f32) →
+    (bits (B,f) int32,). Tuple-wrapped for the AOT interchange."""
+    kernel = make_unified_decoder(cfg, batch)
+
+    def fn(llr_frames, pm0):
+        return (kernel(llr_frames, pm0),)
+
+    return fn
+
+
+def decode_batch_ref(cfg: KernelConfig, batch: int):
+    """Batched pure-jnp tiled baseline (serial traceback, method (b)).
+
+    Same signature as :func:`decode_batch`; the traceback here is the
+    whole-frame serial walk, emitting only the middle f stages.
+    """
+    trellis = Trellis(cfg.spec)
+    del batch  # vmap handles any leading dim
+
+    def one(llr, pm0):
+        decisions, pm, _ = _forward_with_pm0(trellis, llr, pm0)
+        start = jnp.argmax(pm).astype(jnp.int32)
+        from .kernels.ref import traceback_ref
+
+        bits = traceback_ref(trellis, decisions, start)
+        return bits[cfg.v1 : cfg.v1 + cfg.f]
+
+    def fn(llr_frames, pm0):
+        return (jax.vmap(one)(llr_frames, pm0),)
+
+    return fn
+
+
+def _forward_with_pm0(trellis: Trellis, llrs, pm0):
+    """forward_ref variant taking an explicit initial PM row (matches
+    the kernel's input contract)."""
+    from .kernels.ref import stage_metrics
+
+    prev = jnp.asarray(trellis.prev)
+    prev_out = jnp.asarray(trellis.prev_output)
+    beta = trellis.spec.beta
+
+    from .kernels.gather_compat import take1
+
+    def step(pm, llr_t):
+        bm = stage_metrics(llr_t, beta)
+        cand = take1(pm, prev) + take1(bm, prev_out)
+        sel1 = cand[:, 1] > cand[:, 0]
+        pm_new = jnp.where(sel1, cand[:, 1], cand[:, 0])
+        return pm_new, (sel1.astype(jnp.int32), jnp.argmax(pm_new).astype(jnp.int32))
+
+    pm_final, (decisions, trail) = jax.lax.scan(step, pm0, llrs)
+    return decisions, pm_final, trail
+
+
+def example_inputs(cfg: KernelConfig, batch: int):
+    """ShapeDtypeStructs for lowering."""
+    S = cfg.spec.num_states
+    beta = cfg.spec.beta
+    return (
+        jax.ShapeDtypeStruct((batch, cfg.L, beta), jnp.float32),
+        jax.ShapeDtypeStruct((batch, S), jnp.float32),
+    )

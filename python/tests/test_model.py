@@ -1,0 +1,94 @@
+"""L2 model + AOT lowering tests: shapes, kernel-vs-ref-graph parity,
+and HLO-text emission (the exact path `make artifacts` exercises)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.aot import manifest_line, to_hlo_text
+from compile.kernels.viterbi_pallas import KernelConfig, uniform_pm0
+from compile.model import decode_batch, decode_batch_ref, example_inputs
+
+from .test_kernel import encode_frames
+
+
+SMALL = KernelConfig(k=5, generators=(0o23, 0o35), f=32, v1=8, v2=12, f0=8)
+
+
+def test_example_input_shapes():
+    llr, pm0 = example_inputs(SMALL, 3)
+    assert llr.shape == (3, SMALL.L, 2) and llr.dtype == jnp.float32
+    assert pm0.shape == (3, 16) and pm0.dtype == jnp.float32
+
+
+def test_decode_batch_output_shape():
+    fn = decode_batch(SMALL, 2)
+    rng = np.random.default_rng(0)
+    frames, pm0, _ = encode_frames(SMALL, 2, rng, ebn0_db=4.0)
+    (out,) = fn(frames, pm0)
+    assert out.shape == (2, SMALL.f)
+    assert out.dtype == jnp.int32
+    assert set(np.unique(np.asarray(out))) <= {0, 1}
+
+
+def test_unified_vs_ref_graph_serial_mode():
+    # With f0 = f the unified kernel is a serial-traceback decoder and
+    # must match the pure-jnp baseline graph bit-for-bit.
+    cfg = KernelConfig(k=5, generators=(0o23, 0o35), f=32, v1=8, v2=12, f0=32)
+    rng = np.random.default_rng(1)
+    frames, pm0, _ = encode_frames(cfg, 2, rng, ebn0_db=2.0)
+    (a,) = decode_batch(cfg, 2)(frames, pm0)
+    (b,) = decode_batch_ref(cfg, 2)(frames, pm0)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ref_graph_recovers_noiseless():
+    rng = np.random.default_rng(2)
+    frames, pm0, bits = encode_frames(SMALL, 3, rng)
+    (out,) = decode_batch_ref(SMALL, 3)(frames, pm0)
+    np.testing.assert_array_equal(np.asarray(out).reshape(-1), bits)
+
+
+@pytest.mark.parametrize("kind", ["unified", "ref"])
+def test_hlo_text_lowering(kind):
+    fn = decode_batch(SMALL, 2) if kind == "unified" else decode_batch_ref(SMALL, 2)
+    lowered = jax.jit(fn).lower(*example_inputs(SMALL, 2))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[2,52,2]" in text            # llr input shape
+    assert "s32[2,32]" in text              # bits output shape
+    # No Mosaic custom-calls may survive: interpret-mode lowering only.
+    assert "tpu_custom_call" not in text
+    assert "mosaic" not in text.lower()
+
+
+def test_hlo_executes_on_cpu_backend():
+    # Round-trip sanity: the lowered module compiled by the local CPU
+    # backend must reproduce the eager kernel output.
+    fn = decode_batch(SMALL, 2)
+    rng = np.random.default_rng(3)
+    frames, pm0, _ = encode_frames(SMALL, 2, rng, ebn0_db=3.0)
+    eager = np.asarray(fn(frames, pm0)[0])
+    compiled = jax.jit(fn).lower(frames, pm0).compile()
+    jitted = np.asarray(compiled(frames, pm0)[0])
+    np.testing.assert_array_equal(eager, jitted)
+
+
+def test_manifest_line_format():
+    line = manifest_line("x", SMALL, 2, "unified")
+    parts = line.split()
+    assert parts == ["x", "unified", "2", "52", "32", "8", "12", "8", "5", "2", "23", "35"]
+
+
+def test_pm0_pinning_changes_first_frame_only():
+    rng = np.random.default_rng(4)
+    frames, _, _ = encode_frames(SMALL, 2, rng, ebn0_db=0.0)
+    fn = decode_batch(SMALL, 2)
+    pinned = uniform_pm0(2, 16, pin_first=True)
+    free = uniform_pm0(2, 16, pin_first=False)
+    (a,) = fn(frames, pinned)
+    (b,) = fn(frames, free)
+    # Frame 1 (not pinned in either) must be identical.
+    np.testing.assert_array_equal(np.asarray(a)[1], np.asarray(b)[1])

@@ -1,0 +1,78 @@
+"""Tests for the build-time trellis tables (parity with rust code/trellis)."""
+
+import numpy as np
+import pytest
+
+from compile.kernels.trellis import CodeSpec, Trellis, branch_metric_table
+
+
+@pytest.fixture(scope="module")
+def k7():
+    return Trellis(CodeSpec.standard_k7())
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        CodeSpec(5, (0o171, 0o133))  # polys wider than k
+    with pytest.raises(ValueError):
+        CodeSpec(7, (0o171,))  # single generator
+
+
+def test_state_graph_consistency(k7):
+    S = k7.spec.num_states
+    for i in range(S):
+        for b in range(2):
+            j = int(k7.next[i, b])
+            assert 0 <= j < S
+            d = list(k7.prev[j]).index(i)
+            assert k7.prev_output[j, d] == k7.output[i, b]
+            assert (j >> (k7.spec.k - 2)) == b
+
+
+def test_known_first_transition(k7):
+    # From state 0 input 1: next = 0b100000, outputs = MSBs of both polys.
+    assert k7.next[0, 1] == 0b100000
+    assert k7.output[0, 1] == 0b11
+    assert k7.next[0, 0] == 0 and k7.output[0, 0] == 0
+
+
+def test_impulse_response_reads_generators(k7):
+    outs = []
+    state = 0
+    for b in [1, 0, 0, 0, 0, 0, 0]:
+        outs.append(int(k7.output[state, b]))
+        state = int(k7.next[state, b])
+    for gi, g in enumerate(k7.spec.generators):
+        bits = [(o >> gi) & 1 for o in outs]
+        expect = [(g >> s) & 1 for s in range(k7.spec.k - 1, -1, -1)]
+        assert bits == expect
+
+
+def test_complement_pairs(k7):
+    full = (1 << k7.spec.beta) - 1
+    assert ((k7.output[:, 0] ^ k7.output[:, 1]) == full).all()
+
+
+def test_encode_known_vector(k7):
+    coded = k7.spec and k7.encode(np.array([1, 0, 0, 0, 0, 0, 0]), terminate=False)
+    o0 = coded[0::2].tolist()
+    o1 = coded[1::2].tolist()
+    assert o0 == [1, 1, 1, 1, 0, 0, 1]   # 171 octal
+    assert o1 == [1, 0, 1, 1, 0, 1, 1]   # 133 octal
+
+
+def test_encode_terminates_at_zero(k7):
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2, 50)
+    coded = k7.encode(bits, terminate=True)
+    assert len(coded) == (50 + 6) * 2
+    # all-zero message encodes to zeros
+    assert (k7.encode(np.zeros(10, dtype=int)) == 0).all()
+
+
+def test_branch_metric_table_matches_eq2():
+    llr = np.array([1.5, -0.75])
+    t = branch_metric_table(llr, 2)
+    assert np.allclose(t, [0.75, -2.25, 2.25, -0.75])
+    # complement property (paper eq. 8)
+    assert np.allclose(t[[0, 1]], -t[[3, 2]])

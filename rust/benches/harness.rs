@@ -1,0 +1,96 @@
+//! Shared micro-benchmark harness (criterion is not fetchable in this
+//! offline image; `cargo bench` drives these with `harness = false`).
+//!
+//! Methodology: warm-up runs, then N timed samples of the closure;
+//! reports mean ± stddev, min, and a derived throughput when the
+//! caller supplies a per-iteration work amount.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+}
+
+/// Time `iters_per_sample` invocations of `f`, `samples` times.
+pub fn bench<F: FnMut()>(name: &str, samples: usize, iters_per_sample: usize, mut f: F) -> BenchResult {
+    // Warm-up: one sample's worth.
+    for _ in 0..iters_per_sample {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters_per_sample {
+            f();
+        }
+        times.push(t0.elapsed().as_secs_f64() / iters_per_sample as f64);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
+        / (times.len().max(2) - 1) as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    BenchResult {
+        name: name.to_string(),
+        samples: times,
+        mean_s: mean,
+        stddev_s: var.sqrt(),
+        min_s: min,
+    }
+}
+
+impl BenchResult {
+    /// Print with optional throughput (work units per iteration).
+    pub fn report(&self, work_per_iter: Option<(f64, &str)>) {
+        let mut line = format!(
+            "{:40} {:>12} ± {:>10}  (min {:>12})",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.stddev_s),
+            fmt_time(self.min_s),
+        );
+        if let Some((work, unit)) = work_per_iter {
+            line += &format!("   {:>10.3} {unit}", work / self.mean_s / 1e9);
+        }
+        println!("{line}");
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Parse `--quick` / filter args that cargo bench passes through.
+pub struct BenchArgs {
+    pub quick: bool,
+    pub filter: Option<String>,
+}
+
+pub fn parse_args() -> BenchArgs {
+    let mut quick = false;
+    let mut filter = None;
+    for a in std::env::args().skip(1) {
+        match a.as_str() {
+            "--quick" => quick = true,
+            "--bench" => {}
+            s if !s.starts_with('-') => filter = Some(s.to_string()),
+            _ => {}
+        }
+    }
+    BenchArgs { quick, filter }
+}
+
+pub fn matches_filter(args: &BenchArgs, name: &str) -> bool {
+    args.filter.as_deref().map(|f| name.contains(f)).unwrap_or(true)
+}

@@ -1,0 +1,114 @@
+//! Micro-benchmarks of the decode hot paths: the ACS stage loop, the
+//! whole-frame forward pass, the two traceback variants, the encoder,
+//! and the channel front end. These are the units the §Perf pass
+//! iterates on.
+//!
+//! ```bash
+//! cargo bench --bench kernels [-- --quick] [-- acs]
+//! ```
+
+mod harness;
+
+use viterbi::channel::{bpsk, llr, AwgnChannel, Rng64};
+use viterbi::code::{encode, CodeSpec, Termination, Trellis};
+use viterbi::frames::plan::{FrameGeometry, FrameSpan};
+use viterbi::viterbi::{
+    tiled::decode_frame_serial, unified::decode_frame_parallel_tb, FrameScratch,
+    ParallelTraceback, ScalarDecoder, StartPolicy, TracebackStart,
+};
+
+fn main() {
+    let args = harness::parse_args();
+    let samples = if args.quick { 5 } else { 20 };
+
+    let spec = CodeSpec::standard_k7();
+    let trellis = Trellis::new(spec.clone());
+    let mut rng = Rng64::seeded(6);
+
+    // A realistic noisy frame at the paper's operating point.
+    let geo = FrameGeometry::new(256, 20, 45);
+    let span_len = geo.span();
+    let mut msg = vec![0u8; span_len];
+    rng.fill_bits(&mut msg);
+    let coded = encode(&spec, &msg, Termination::Truncated);
+    let ch = AwgnChannel::new(3.0, 0.5);
+    let rx = ch.transmit(&bpsk::modulate(&coded), &mut rng);
+    let frame_llrs = llr::llrs_from_samples(&rx, ch.sigma());
+    let span = FrameSpan { index: 1, start: 0, len: span_len, out_start: 20, out_len: 256 };
+
+    if harness::matches_filter(&args, "forward+serial_tb") {
+        let mut scratch = FrameScratch::new(64, span_len);
+        let mut out = vec![0u8; 256];
+        let r = harness::bench("frame/forward+serial_tb (321 stages)", samples, 20, || {
+            decode_frame_serial(
+                &trellis,
+                &frame_llrs,
+                &span,
+                None,
+                TracebackStart::BestMetric,
+                &mut scratch,
+                &mut out,
+            );
+            std::hint::black_box(&out);
+        });
+        r.report(Some((256.0, "Gb/s")));
+    }
+
+    if harness::matches_filter(&args, "forward+parallel_tb") {
+        let mut scratch = FrameScratch::new(64, span_len);
+        let mut out = vec![0u8; 256];
+        let ptb = ParallelTraceback::new(32, 45, StartPolicy::StoredArgmax);
+        let r = harness::bench("frame/forward+parallel_tb (f0=32)", samples, 20, || {
+            decode_frame_parallel_tb(
+                &trellis,
+                &frame_llrs,
+                &span,
+                None,
+                TracebackStart::BestMetric,
+                &ptb,
+                &mut scratch,
+                &mut out,
+            );
+            std::hint::black_box(&out);
+        });
+        r.report(Some((256.0, "Gb/s")));
+    }
+
+    if harness::matches_filter(&args, "scalar_stream") {
+        let n = 1 << 15;
+        let mut bits = vec![0u8; n];
+        rng.fill_bits(&mut bits);
+        let coded = encode(&spec, &bits, Termination::Terminated);
+        let stream: Vec<f32> =
+            coded.iter().map(|&b| if b == 0 { 2.0 } else { -2.0 }).collect();
+        let mut dec = ScalarDecoder::new(spec.clone());
+        let r = harness::bench("stream/scalar whole-stream (32k bits)", samples, 1, || {
+            let out = dec.decode(&stream, Some(0), TracebackStart::State(0));
+            std::hint::black_box(&out);
+        });
+        r.report(Some((n as f64, "Gb/s")));
+    }
+
+    if harness::matches_filter(&args, "encoder") {
+        let mut bits = vec![0u8; 1 << 16];
+        rng.fill_bits(&mut bits);
+        let r = harness::bench("substrate/encoder (64k bits)", samples, 5, || {
+            let out = encode(&spec, &bits, Termination::Terminated);
+            std::hint::black_box(&out);
+        });
+        r.report(Some(((1 << 16) as f64, "Gb/s")));
+    }
+
+    if harness::matches_filter(&args, "channel") {
+        let tx = bpsk::modulate(&vec![0u8; 1 << 16]);
+        let ch = AwgnChannel::new(3.0, 0.5);
+        let mut rng2 = Rng64::seeded(7);
+        let mut out = Vec::new();
+        let r = harness::bench("substrate/awgn+llr (64k samples)", samples, 5, || {
+            ch.transmit_into(&tx, &mut out, &mut rng2);
+            let l = llr::llrs_from_samples(&out, ch.sigma());
+            std::hint::black_box(&l);
+        });
+        r.report(Some(((1 << 16) as f64, "Gsamples/s")));
+    }
+}

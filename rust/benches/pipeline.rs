@@ -1,0 +1,94 @@
+//! Bench: end-to-end serving pipeline — the L3 coordinator over both
+//! backends (native engine and the PJRT AOT artifact), measuring
+//! request throughput and the batching machinery's overhead.
+//!
+//! ```bash
+//! make artifacts && cargo bench --bench pipeline [-- --quick]
+//! ```
+
+mod harness;
+
+use std::sync::Arc;
+
+use viterbi::channel::{bpsk, llr, AwgnChannel, Rng64};
+use viterbi::code::{encode, CodeSpec, Termination};
+use viterbi::coordinator::{BackendSpec, BatchPolicy, DecodeServer, ServerConfig};
+use viterbi::frames::plan::FrameGeometry;
+use viterbi::viterbi::StreamEnd;
+
+fn workload(spec: &CodeSpec, streams: usize, bits: usize) -> Vec<Vec<f32>> {
+    let ch = AwgnChannel::new(4.0, spec.rate());
+    let mut rng = Rng64::seeded(8);
+    (0..streams)
+        .map(|_| {
+            let mut msg = vec![0u8; bits];
+            rng.fill_bits(&mut msg);
+            let coded = encode(spec, &msg, Termination::Truncated);
+            let rx = ch.transmit(&bpsk::modulate(&coded), &mut rng);
+            llr::llrs_from_samples(&rx, ch.sigma())
+        })
+        .collect()
+}
+
+fn bench_backend(name: &str, backend: BackendSpec, streams: usize, bits: usize, samples: usize) {
+    let server = match DecodeServer::start(ServerConfig {
+        backend,
+        batch: BatchPolicy {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_micros(500),
+        },
+        high_watermark: 8192,
+        low_watermark: 2048,
+    }) {
+        Ok(s) => Arc::new(s),
+        Err(e) => {
+            println!("{name}: SKIP ({e:#})");
+            return;
+        }
+    };
+    let spec = server.chunker().spec.clone();
+    let payloads = Arc::new(workload(&spec, streams, bits));
+
+    let r = harness::bench(name, samples, 1, || {
+        let ids: Vec<_> = payloads
+            .iter()
+            .map(|llrs| server.submit(llrs.clone(), StreamEnd::Truncated))
+            .collect();
+        for id in ids {
+            let resp = server.wait(id);
+            std::hint::black_box(&resp.bits);
+        }
+    });
+    r.report(Some(((streams * bits) as f64, "Gb/s")));
+    println!("{:40} {}", "", server.metrics().render());
+}
+
+fn main() {
+    let args = harness::parse_args();
+    let (streams, bits, samples) =
+        if args.quick { (16, 4096, 3) } else { (64, 8192, 5) };
+
+    println!("== pipeline bench: {streams} streams × {bits} bits ==\n");
+    if harness::matches_filter(&args, "native") {
+        bench_backend(
+            "pipeline/native parallel-tb backend",
+            BackendSpec::Native {
+                spec: CodeSpec::standard_k7(),
+                geo: FrameGeometry::new(256, 20, 45),
+                f0: Some(32),
+            },
+            streams,
+            bits,
+            samples,
+        );
+    }
+    if harness::matches_filter(&args, "pjrt") {
+        bench_backend(
+            "pipeline/pjrt AOT-artifact backend",
+            BackendSpec::Pjrt { artifact: "ptb_f256_v45_b8".into(), artifact_dir: None },
+            streams,
+            bits,
+            samples,
+        );
+    }
+}

@@ -1,0 +1,65 @@
+//! Bench: Table IV — regular (serial-traceback) decoder throughput over
+//! the paper's f × v2 grid, on the multithreaded native engine, with
+//! the V100 occupancy-model prediction alongside.
+//!
+//! ```bash
+//! cargo bench --bench table4              # full grid
+//! cargo bench --bench table4 -- --quick   # 2×2 corner
+//! ```
+
+mod harness;
+
+use std::sync::Arc;
+
+use viterbi::channel::Rng64;
+use viterbi::code::CodeSpec;
+use viterbi::frames::plan::FrameGeometry;
+use viterbi::memmodel::{GpuParams, OccupancyModel};
+use viterbi::util::threadpool::ThreadPool;
+use viterbi::viterbi::{Engine, ParallelEngine, StreamEnd, TiledEngine, TracebackMode};
+
+fn main() {
+    let args = harness::parse_args();
+    let (fs, v2s): (Vec<usize>, Vec<usize>) = if args.quick {
+        (vec![64, 256], vec![10, 40])
+    } else {
+        (vec![32, 64, 128, 256, 512], vec![10, 20, 30, 40])
+    };
+    let stream_bits = if args.quick { 1 << 18 } else { 1 << 21 };
+    let samples = if args.quick { 3 } else { 5 };
+
+    let pool = Arc::new(ThreadPool::with_default_parallelism());
+    let model = OccupancyModel::new(GpuParams::v100(), 7, 2);
+    let spec = CodeSpec::standard_k7();
+    let mut rng = Rng64::seeded(4);
+    let llrs: Vec<f32> = (0..stream_bits * 2)
+        .map(|_| (rng.uniform() as f32 - 0.5) * 8.0)
+        .collect();
+
+    println!("== Table IV bench: serial-traceback decoder throughput ==");
+    println!("stream: {stream_bits} bits; pool: {} threads\n", pool.size());
+    for &v2 in &v2s {
+        for &f in &fs {
+            let name = format!("table4/f={f}/v2={v2}");
+            if !harness::matches_filter(&args, &name) {
+                continue;
+            }
+            let geo = FrameGeometry::new(f, 20, v2);
+            let engine = ParallelEngine::new(
+                TiledEngine::new(spec.clone(), geo, TracebackMode::FrameSerial),
+                Arc::clone(&pool),
+            );
+            let r = harness::bench(&name, samples, 1, || {
+                let out = engine.decode_stream(&llrs, stream_bits, StreamEnd::Truncated);
+                std::hint::black_box(&out);
+            });
+            r.report(Some((stream_bits as f64, "Gb/s")));
+            println!(
+                "{:40} V100 occupancy model: {:.2} Gb/s ({} blocks/SM)",
+                "",
+                model.serial_traceback(geo).gbps,
+                model.serial_traceback(geo).blocks_per_sm
+            );
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Bench: Table V — unified parallel-traceback decoder throughput over
+//! the paper's f0 × v2 grid (f = 256), native engine + V100 model.
+//!
+//! ```bash
+//! cargo bench --bench table5 [-- --quick]
+//! ```
+
+mod harness;
+
+use std::sync::Arc;
+
+use viterbi::channel::Rng64;
+use viterbi::code::CodeSpec;
+use viterbi::frames::plan::FrameGeometry;
+use viterbi::memmodel::{GpuParams, OccupancyModel};
+use viterbi::util::threadpool::ThreadPool;
+use viterbi::viterbi::{
+    Engine, ParallelEngine, ParallelTraceback, StartPolicy, StreamEnd, TiledEngine,
+    TracebackMode,
+};
+
+fn main() {
+    let args = harness::parse_args();
+    let (f0s, v2s): (Vec<usize>, Vec<usize>) = if args.quick {
+        (vec![8, 32], vec![25, 45])
+    } else {
+        (vec![8, 16, 24, 32, 40, 48, 56], vec![25, 30, 35, 40, 45])
+    };
+    let stream_bits = if args.quick { 1 << 18 } else { 1 << 21 };
+    let samples = if args.quick { 3 } else { 5 };
+    let (f, v1) = (256usize, 20usize);
+
+    let pool = Arc::new(ThreadPool::with_default_parallelism());
+    let model = OccupancyModel::new(GpuParams::v100(), 7, 2);
+    let spec = CodeSpec::standard_k7();
+    let mut rng = Rng64::seeded(5);
+    let llrs: Vec<f32> = (0..stream_bits * 2)
+        .map(|_| (rng.uniform() as f32 - 0.5) * 8.0)
+        .collect();
+
+    println!("== Table V bench: parallel-traceback decoder throughput ==");
+    println!("f = {f}; stream: {stream_bits} bits; pool: {} threads\n", pool.size());
+    for &v2 in &v2s {
+        for &f0 in &f0s {
+            let name = format!("table5/f0={f0}/v2={v2}");
+            if !harness::matches_filter(&args, &name) {
+                continue;
+            }
+            let geo = FrameGeometry::new(f, v1, v2);
+            let mode = TracebackMode::Parallel(ParallelTraceback::new(
+                f0,
+                v2,
+                StartPolicy::StoredArgmax,
+            ));
+            let engine =
+                ParallelEngine::new(TiledEngine::new(spec.clone(), geo, mode), Arc::clone(&pool));
+            let r = harness::bench(&name, samples, 1, || {
+                let out = engine.decode_stream(&llrs, stream_bits, StreamEnd::Truncated);
+                std::hint::black_box(&out);
+            });
+            r.report(Some((stream_bits as f64, "Gb/s")));
+            println!(
+                "{:40} V100 occupancy model: {:.2} Gb/s",
+                "",
+                model.parallel_traceback(geo, f0).gbps
+            );
+        }
+    }
+}

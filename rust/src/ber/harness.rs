@@ -1,0 +1,268 @@
+//! BER measurement harness — the paper's Fig 8 verification loop:
+//! generate bits → encode → (puncture) → BPSK → AWGN → LLRs →
+//! (de-puncture) → decode → count errors, repeated until enough errors
+//! have been observed for the estimate to be valid (the paper's rule of
+//! thumb: a BER below 100/n is not yet trustworthy).
+
+use std::sync::{Arc, Mutex};
+
+use crate::channel::{bpsk, llr, AwgnChannel, Rng64};
+use crate::code::{encode, depuncture_llrs, puncture, CodeSpec, PuncturePattern, Termination};
+use crate::util::threadpool::ThreadPool;
+use crate::viterbi::{Engine, StreamEnd};
+
+/// One BER measurement point.
+#[derive(Debug, Clone, Copy)]
+pub struct BerPoint {
+    pub ebn0_db: f64,
+    pub ber: f64,
+    pub bit_errors: u64,
+    pub bits_tested: u64,
+    /// True when ≥ the requested error target was observed (the
+    /// estimate is statistically meaningful).
+    pub reliable: bool,
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BerConfig {
+    /// Message bits per simulated block.
+    pub block_bits: usize,
+    /// Stop once this many bit errors have been seen…
+    pub target_errors: u64,
+    /// …or once this many message bits have been tested.
+    pub max_bits: u64,
+    /// Base RNG seed (per-point seeds derive from it).
+    pub seed: u64,
+    /// Puncturing applied between encoder and channel (None = rate 1/2).
+    pub puncture: Option<PuncturePattern>,
+}
+
+impl Default for BerConfig {
+    fn default() -> Self {
+        BerConfig {
+            block_bits: 16_384,
+            target_errors: 200,
+            max_bits: 4_000_000,
+            seed: 0xBE12_0001,
+            puncture: None,
+        }
+    }
+}
+
+/// Simulate one block; returns (errors, bits).
+fn run_block(
+    spec: &CodeSpec,
+    engine: &dyn Engine,
+    cfg: &BerConfig,
+    ch: &AwgnChannel,
+    rng: &mut Rng64,
+    scratch: &mut BlockScratch,
+) -> (u64, u64) {
+    let n = cfg.block_bits;
+    scratch.msg.resize(n, 0);
+    rng.fill_bits(&mut scratch.msg);
+    let coded = encode(spec, &scratch.msg, Termination::Terminated);
+    let stages = n + (spec.k - 1) as usize;
+
+    let tx_bits = match &cfg.puncture {
+        Some(p) => puncture(&coded, spec.beta as usize, p),
+        None => coded,
+    };
+    let tx = bpsk::modulate(&tx_bits);
+    ch.transmit_into(&tx, &mut scratch.rx, rng);
+    llr::llrs_from_samples_into(&scratch.rx, ch.sigma(), &mut scratch.llrs);
+    let llrs_full = match &cfg.puncture {
+        Some(p) => depuncture_llrs(&scratch.llrs, spec.beta as usize, p, stages),
+        None => std::mem::take(&mut scratch.llrs),
+    };
+
+    let out = engine.decode_stream(&llrs_full, stages, StreamEnd::Terminated);
+    if cfg.puncture.is_none() {
+        scratch.llrs = llrs_full; // give the buffer back
+    }
+    let errors = crate::util::bits::count_bit_errors(&out[..n], &scratch.msg) as u64;
+    (errors, n as u64)
+}
+
+struct BlockScratch {
+    msg: Vec<u8>,
+    rx: Vec<f32>,
+    llrs: Vec<f32>,
+}
+
+impl BlockScratch {
+    fn new() -> Self {
+        BlockScratch { msg: Vec::new(), rx: Vec::new(), llrs: Vec::new() }
+    }
+}
+
+/// Measure BER at one Eb/N0 point (single-threaded).
+pub fn measure_point(
+    spec: &CodeSpec,
+    engine: &dyn Engine,
+    cfg: &BerConfig,
+    ebn0_db: f64,
+) -> BerPoint {
+    // Eb/N0 is defined per *information* bit: the effective rate
+    // includes puncturing.
+    let rate = effective_rate(spec, cfg);
+    let ch = AwgnChannel::new(ebn0_db, rate);
+    let mut rng = Rng64::seeded(cfg.seed ^ (ebn0_db * 1000.0) as u64);
+    let mut scratch = BlockScratch::new();
+    let (mut errs, mut bits) = (0u64, 0u64);
+    while errs < cfg.target_errors && bits < cfg.max_bits {
+        let (e, b) = run_block(spec, engine, cfg, &ch, &mut rng, &mut scratch);
+        errs += e;
+        bits += b;
+    }
+    BerPoint {
+        ebn0_db,
+        ber: errs as f64 / bits as f64,
+        bit_errors: errs,
+        bits_tested: bits,
+        reliable: errs >= cfg.target_errors.min(100),
+    }
+}
+
+/// Measure BER at one point using every pool thread (blocks simulated
+/// concurrently with independent RNG streams; used by the sweep
+/// regenerators where wall-clock matters).
+pub fn measure_point_parallel(
+    spec: &CodeSpec,
+    engine: crate::viterbi::engine::SharedEngine,
+    cfg: &BerConfig,
+    ebn0_db: f64,
+    pool: &ThreadPool,
+) -> BerPoint {
+    let rate = effective_rate(spec, cfg);
+    let ch = AwgnChannel::new(ebn0_db, rate);
+    let state = Arc::new(Mutex::new((0u64, 0u64))); // (errors, bits)
+    let workers = pool.size();
+    let base = Rng64::seeded(cfg.seed ^ (ebn0_db * 1000.0) as u64);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send>> = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let spec = spec.clone();
+        let engine = Arc::clone(&engine);
+        let cfg = cfg.clone();
+        let ch = ch.clone();
+        let state = Arc::clone(&state);
+        let mut rng = base.stream(w as u64 + 1);
+        jobs.push(Box::new(move || {
+            let mut scratch = BlockScratch::new();
+            loop {
+                {
+                    let s = state.lock().unwrap();
+                    if s.0 >= cfg.target_errors || s.1 >= cfg.max_bits {
+                        break;
+                    }
+                }
+                let (e, b) = run_block(&spec, engine.as_ref(), &cfg, &ch, &mut rng, &mut scratch);
+                let mut s = state.lock().unwrap();
+                s.0 += e;
+                s.1 += b;
+            }
+        }));
+    }
+    pool.run_batch(jobs);
+    let (errs, bits) = *state.lock().unwrap();
+    BerPoint {
+        ebn0_db,
+        ber: errs as f64 / bits as f64,
+        bit_errors: errs,
+        bits_tested: bits,
+        reliable: errs >= cfg.target_errors.min(100),
+    }
+}
+
+/// Sweep a range of Eb/N0 values (a BER waterfall curve).
+pub fn sweep(
+    spec: &CodeSpec,
+    engine: &dyn Engine,
+    cfg: &BerConfig,
+    ebn0_dbs: &[f64],
+) -> Vec<BerPoint> {
+    ebn0_dbs.iter().map(|&db| measure_point(spec, engine, cfg, db)).collect()
+}
+
+fn effective_rate(spec: &CodeSpec, cfg: &BerConfig) -> f64 {
+    match &cfg.puncture {
+        Some(p) => p.effective_rate(),
+        None => spec.rate(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ber::theory::{soft_viterbi_ber, DistanceSpectrum};
+    use crate::viterbi::ScalarEngine;
+
+    fn quick_cfg() -> BerConfig {
+        BerConfig {
+            block_bits: 4096,
+            target_errors: 60,
+            max_bits: 600_000,
+            seed: 0xABCD,
+            puncture: None,
+        }
+    }
+
+    #[test]
+    fn measured_ber_tracks_union_bound() {
+        // At 3 dB the (171,133) soft decoder BER is a few e-4; the
+        // union bound upper-bounds it and is tight to within ~5×.
+        let spec = CodeSpec::standard_k7();
+        let engine = ScalarEngine::new(spec.clone());
+        let p = measure_point(&spec, &engine, &quick_cfg(), 3.0);
+        assert!(p.reliable, "needed more bits: {:?}", p);
+        let bound = soft_viterbi_ber(3.0, 0.5, &DistanceSpectrum::k7_171_133());
+        assert!(
+            p.ber < bound * 2.0 && p.ber > bound / 30.0,
+            "measured {} vs bound {}",
+            p.ber,
+            bound
+        );
+    }
+
+    #[test]
+    fn ber_decreases_with_snr() {
+        let spec = CodeSpec::standard_k7();
+        let engine = ScalarEngine::new(spec.clone());
+        let cfg = quick_cfg();
+        let pts = sweep(&spec, &engine, &cfg, &[2.0, 4.0]);
+        assert!(pts[0].ber > pts[1].ber, "{:?}", pts);
+    }
+
+    #[test]
+    fn parallel_measure_agrees_with_serial_scale() {
+        let spec = CodeSpec::standard_k7();
+        let engine: crate::viterbi::engine::SharedEngine =
+            Arc::new(ScalarEngine::new(spec.clone()));
+        let pool = ThreadPool::new(4);
+        let cfg = quick_cfg();
+        let p = measure_point_parallel(&spec, Arc::clone(&engine), &cfg, 3.0, &pool);
+        let s = measure_point(&spec, engine.as_ref(), &cfg, 3.0);
+        assert!(p.reliable && s.reliable);
+        // Same distribution, different realizations: within 3× of each
+        // other is a loose but meaningful agreement check.
+        let ratio = p.ber / s.ber;
+        assert!(ratio > 1.0 / 3.0 && ratio < 3.0, "parallel {} vs serial {}", p.ber, s.ber);
+    }
+
+    #[test]
+    fn punctured_ber_is_worse() {
+        let spec = CodeSpec::standard_k7();
+        let engine = ScalarEngine::new(spec.clone());
+        let mut cfg = quick_cfg();
+        let base = measure_point(&spec, &engine, &cfg, 4.0);
+        cfg.puncture = Some(PuncturePattern::rate_3_4());
+        let punct = measure_point(&spec, &engine, &cfg, 4.0);
+        assert!(
+            punct.ber > base.ber,
+            "3/4-punctured BER {} should exceed rate-1/2 BER {}",
+            punct.ber,
+            base.ber
+        );
+    }
+}

@@ -1,0 +1,128 @@
+//! The paper's BER-quality metric (§V-B, Tables II and III): the
+//! horizontal distance, in dB of Eb/N0, between the measured BER curve
+//! and the theoretical curve — "how much clearer the signal should be
+//! than it should be in theory" to reach a reference BER.
+
+use super::harness::BerPoint;
+use super::theory::{soft_viterbi_ber, DistanceSpectrum};
+
+/// Interpolate the Eb/N0 (dB) at which a measured curve crosses
+/// `target_ber`, using log-linear interpolation between sample points.
+/// Returns None if the curve never crosses the target within the swept
+/// range.
+pub fn ebn0_at_ber(points: &[BerPoint], target_ber: f64) -> Option<f64> {
+    assert!(target_ber > 0.0);
+    // Points must be sorted by Eb/N0; BER assumed (noisily) decreasing.
+    for w in points.windows(2) {
+        let (a, b) = (&w[0], &w[1]);
+        if a.ber >= target_ber && b.ber <= target_ber && b.ber > 0.0 && a.ber > 0.0 {
+            let la = a.ber.ln();
+            let lb = b.ber.ln();
+            let lt = target_ber.ln();
+            let frac = if (lb - la).abs() < 1e-30 { 0.5 } else { (lt - la) / (lb - la) };
+            return Some(a.ebn0_db + frac * (b.ebn0_db - a.ebn0_db));
+        }
+    }
+    None
+}
+
+/// Eb/N0 (dB) at which the *theoretical* soft-decision curve reaches
+/// `target_ber`, found by bisection on the union bound.
+pub fn theoretical_ebn0_at_ber(
+    target_ber: f64,
+    rate: f64,
+    spectrum: &DistanceSpectrum,
+) -> f64 {
+    let (mut lo, mut hi) = (-2.0f64, 15.0f64);
+    for _ in 0..80 {
+        let mid = 0.5 * (lo + hi);
+        if soft_viterbi_ber(mid, rate, spectrum) > target_ber {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// The paper's table metric: measured-curve Eb/N0 at `target_ber` minus
+/// theoretical Eb/N0 at the same BER (dB). Positive = implementation
+/// loss. Returns None when the measured curve never reaches the target.
+pub fn ebn0_distance_db(
+    points: &[BerPoint],
+    target_ber: f64,
+    rate: f64,
+    spectrum: &DistanceSpectrum,
+) -> Option<f64> {
+    let measured = ebn0_at_ber(points, target_ber)?;
+    let theory = theoretical_ebn0_at_ber(target_ber, rate, spectrum);
+    Some(measured - theory)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(ebn0_db: f64, ber: f64) -> BerPoint {
+        BerPoint { ebn0_db, ber, bit_errors: 1000, bits_tested: 1_000_000, reliable: true }
+    }
+
+    #[test]
+    fn interpolates_crossing() {
+        let pts = vec![pt(3.0, 1e-2), pt(4.0, 1e-4)];
+        // log-linear: 1e-3 sits exactly halfway.
+        let x = ebn0_at_ber(&pts, 1e-3).unwrap();
+        assert!((x - 3.5).abs() < 1e-9, "{x}");
+    }
+
+    #[test]
+    fn none_when_out_of_range() {
+        let pts = vec![pt(3.0, 1e-2), pt(4.0, 1e-3)];
+        assert!(ebn0_at_ber(&pts, 1e-6).is_none());
+        assert!(ebn0_at_ber(&pts, 0.5).is_none());
+    }
+
+    #[test]
+    fn exact_hit_at_sample() {
+        let pts = vec![pt(2.0, 1e-1), pt(3.0, 1e-3), pt(4.0, 1e-5)];
+        let x = ebn0_at_ber(&pts, 1e-3).unwrap();
+        assert!((x - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn theory_inversion_consistent() {
+        let s = DistanceSpectrum::k7_171_133();
+        let db = theoretical_ebn0_at_ber(1e-4, 0.5, &s);
+        let back = soft_viterbi_ber(db, 0.5, &s);
+        assert!((back.ln() - (1e-4f64).ln()).abs() < 0.05, "{db} → {back}");
+    }
+
+    #[test]
+    fn distance_zero_for_theoretical_curve() {
+        // A "measured" curve sampled from the theory itself must show
+        // ~0 dB distance.
+        let s = DistanceSpectrum::k7_171_133();
+        let pts: Vec<BerPoint> = (20..=60)
+            .map(|t| {
+                let db = t as f64 / 10.0;
+                pt(db, soft_viterbi_ber(db, 0.5, &s))
+            })
+            .collect();
+        let d = ebn0_distance_db(&pts, 1e-4, 0.5, &s).unwrap();
+        assert!(d.abs() < 0.05, "distance {d} dB");
+    }
+
+    #[test]
+    fn degraded_curve_shows_positive_distance() {
+        // Shift the theoretical curve right by 0.7 dB → metric ≈ 0.7.
+        let s = DistanceSpectrum::k7_171_133();
+        let pts: Vec<BerPoint> = (20..=70)
+            .map(|t| {
+                let db = t as f64 / 10.0;
+                pt(db, soft_viterbi_ber(db - 0.7, 0.5, &s))
+            })
+            .collect();
+        let d = ebn0_distance_db(&pts, 1e-4, 0.5, &s).unwrap();
+        assert!((d - 0.7).abs() < 0.05, "distance {d} dB");
+    }
+}

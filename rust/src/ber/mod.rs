@@ -1,0 +1,13 @@
+//! BER evaluation substrate: the Fig 8 simulation harness, closed-form
+//! theoretical curves (the `bertool` substitute), and the paper's
+//! Eb/N0-distance quality metric used in Tables II and III.
+
+pub mod harness;
+pub mod metric;
+pub mod theory;
+
+pub use harness::{measure_point, measure_point_parallel, sweep, BerConfig, BerPoint};
+pub use metric::{ebn0_at_ber, ebn0_distance_db, theoretical_ebn0_at_ber};
+pub use theory::{
+    hard_viterbi_ber, q_function, soft_viterbi_ber, uncoded_bpsk_ber, DistanceSpectrum,
+};

@@ -1,0 +1,244 @@
+//! Theoretical BER curves (the paper compares against MATLAB's
+//! `bertool`; we use the same closed forms).
+//!
+//! * Uncoded BPSK over AWGN: `Pb = Q(sqrt(2·Eb/N0))`.
+//! * Soft-decision Viterbi: the union bound over the code's distance
+//!   spectrum, `Pb ≤ Σ_d c_d · Q(sqrt(2·d·R·Eb/N0))`, with the
+//!   information-weight spectrum c_d tabulated for the standard codes.
+//! * Hard-decision Viterbi: union bound with pairwise error from the
+//!   binomial tail at crossover p = Q(sqrt(2·R·Eb/N0)).
+
+/// Q-function via the complementary error function.
+pub fn q_function(x: f64) -> f64 {
+    0.5 * erfc(x / std::f64::consts::SQRT_2)
+}
+
+/// erfc with ~1e-12 relative accuracy (continued-fraction / series
+/// combination; no libm erfc on stable without external crates).
+pub fn erfc(x: f64) -> f64 {
+    if x < 0.0 {
+        return 2.0 - erfc(-x);
+    }
+    if x < 2.0 {
+        // erfc = 1 − erf, erf by Taylor/Maclaurin with enough terms.
+        1.0 - erf_series(x)
+    } else {
+        // Asymptotic continued fraction, stable for x ≥ 2:
+        // erfc(x) = exp(−x²)/√π · 1/(x + (1/2)/(x + 1/(x + (3/2)/(x + …))))
+        // with partial numerators a_n = n/2, evaluated backwards.
+        let mut cf = 0.0;
+        for n in (1..=80).rev() {
+            cf = (n as f64 / 2.0) / (x + cf);
+        }
+        (-x * x).exp() / ((x + cf) * std::f64::consts::PI.sqrt())
+    }
+}
+
+fn erf_series(x: f64) -> f64 {
+    // erf(x) = 2/√π · Σ (−1)^n x^{2n+1} / (n!(2n+1))
+    let mut term = x;
+    let mut sum = x;
+    let x2 = x * x;
+    for n in 1..200 {
+        term *= -x2 / n as f64;
+        let add = term / (2 * n + 1) as f64;
+        sum += add;
+        if add.abs() < 1e-17 * sum.abs() {
+            break;
+        }
+    }
+    sum * 2.0 / std::f64::consts::PI.sqrt()
+}
+
+/// Information-weight distance spectrum of a convolutional code: pairs
+/// (d, c_d) starting at the free distance.
+#[derive(Debug, Clone)]
+pub struct DistanceSpectrum {
+    pub dfree: u32,
+    /// c_d for d = dfree, dfree+1, … (information-bit weights).
+    pub coefficients: Vec<f64>,
+}
+
+impl DistanceSpectrum {
+    /// Spectrum of the (2,1,7) code with generators (171,133).
+    /// dfree = 10; c_d = 36, 0, 211, 0, 1404, 0, 11633, 0, 77433, 0
+    /// (standard tabulation, e.g. Proakis Table 8-2-1 / Frenger et al.).
+    pub fn k7_171_133() -> Self {
+        DistanceSpectrum {
+            dfree: 10,
+            coefficients: vec![
+                36.0, 0.0, 211.0, 0.0, 1404.0, 0.0, 11633.0, 0.0, 77433.0, 0.0,
+            ],
+        }
+    }
+
+    /// Spectrum of the (2,1,5) code (23,35): dfree = 7,
+    /// c_d = 4, 12, 20, 72, 225, 500, 1324, 3680.
+    pub fn k5_23_35() -> Self {
+        DistanceSpectrum {
+            dfree: 7,
+            coefficients: vec![4.0, 12.0, 20.0, 72.0, 225.0, 500.0, 1324.0, 3680.0],
+        }
+    }
+
+    /// Effective spectra for the punctured (171,133) code, from the
+    /// standard tabulations (Haccoun & Bégin, IEEE Trans. Comm. 1989).
+    pub fn k7_punctured_2_3() -> Self {
+        DistanceSpectrum {
+            dfree: 6,
+            coefficients: vec![3.0, 70.0, 285.0, 1276.0, 6160.0, 27128.0],
+        }
+    }
+
+    pub fn k7_punctured_3_4() -> Self {
+        DistanceSpectrum {
+            dfree: 5,
+            coefficients: vec![42.0, 201.0, 1492.0, 10469.0, 62935.0, 379644.0],
+        }
+    }
+}
+
+/// Uncoded BPSK BER.
+pub fn uncoded_bpsk_ber(ebn0_db: f64) -> f64 {
+    let ebn0 = 10f64.powf(ebn0_db / 10.0);
+    q_function((2.0 * ebn0).sqrt())
+}
+
+/// Union-bound BER for soft-decision Viterbi decoding at rate `rate`.
+pub fn soft_viterbi_ber(ebn0_db: f64, rate: f64, spectrum: &DistanceSpectrum) -> f64 {
+    let ebn0 = 10f64.powf(ebn0_db / 10.0);
+    let mut pb = 0.0;
+    for (i, &cd) in spectrum.coefficients.iter().enumerate() {
+        if cd == 0.0 {
+            continue;
+        }
+        let d = (spectrum.dfree + i as u32) as f64;
+        pb += cd * q_function((2.0 * d * rate * ebn0).sqrt());
+    }
+    pb.min(0.5)
+}
+
+/// Union-bound BER for hard-decision Viterbi decoding.
+pub fn hard_viterbi_ber(ebn0_db: f64, rate: f64, spectrum: &DistanceSpectrum) -> f64 {
+    let ebn0 = 10f64.powf(ebn0_db / 10.0);
+    let p = q_function((2.0 * rate * ebn0).sqrt());
+    let mut pb = 0.0;
+    for (i, &cd) in spectrum.coefficients.iter().enumerate() {
+        if cd == 0.0 {
+            continue;
+        }
+        let d = spectrum.dfree + i as u32;
+        pb += cd * pairwise_error_hard(d, p);
+    }
+    pb.min(0.5)
+}
+
+/// P2(d): probability the wrong path at Hamming distance d wins under
+/// hard decisions with crossover p.
+fn pairwise_error_hard(d: u32, p: f64) -> f64 {
+    let q = 1.0 - p;
+    if d % 2 == 1 {
+        // Σ_{e=(d+1)/2}^{d} C(d,e) p^e q^{d−e}
+        ((d + 1) / 2..=d).map(|e| binom(d, e) * p.powi(e as i32) * q.powi((d - e) as i32)).sum()
+    } else {
+        let half = d / 2;
+        let tie = 0.5 * binom(d, half) * p.powi(half as i32) * q.powi(half as i32);
+        let tail: f64 = (half + 1..=d)
+            .map(|e| binom(d, e) * p.powi(e as i32) * q.powi((d - e) as i32))
+            .sum();
+        tie + tail
+    }
+}
+
+fn binom(n: u32, k: u32) -> f64 {
+    let k = k.min(n - k);
+    let mut r = 1.0f64;
+    for i in 0..k {
+        r = r * (n - i) as f64 / (i + 1) as f64;
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q_function_reference_values() {
+        // Q(0)=0.5, Q(1)≈0.158655, Q(3)≈1.3499e-3, Q(5)≈2.8665e-7
+        assert!((q_function(0.0) - 0.5).abs() < 1e-12);
+        assert!((q_function(1.0) - 0.158_655_25).abs() < 1e-7);
+        assert!((q_function(3.0) - 1.349_898e-3).abs() < 1e-8);
+        assert!((q_function(5.0) - 2.866_516e-7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn erfc_negative_symmetry() {
+        assert!((erfc(-1.0) - (2.0 - erfc(1.0))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uncoded_ber_reference() {
+        // At 9.6 dB uncoded BPSK gives ~1e-5 (textbook anchor).
+        let ber = uncoded_bpsk_ber(9.6);
+        assert!((ber / 1.0e-5) > 0.8 && (ber / 1.0e-5) < 1.3, "{ber}");
+    }
+
+    #[test]
+    fn soft_bound_monotone_decreasing() {
+        let s = DistanceSpectrum::k7_171_133();
+        let mut prev = f64::INFINITY;
+        for tenth_db in 0..=100 {
+            let b = soft_viterbi_ber(tenth_db as f64 / 10.0, 0.5, &s);
+            assert!(b <= prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn coding_gain_visible() {
+        // At 6 dB the coded (171,133) soft bound must sit far below the
+        // uncoded curve (~5 dB asymptotic coding gain).
+        let s = DistanceSpectrum::k7_171_133();
+        let coded = soft_viterbi_ber(6.0, 0.5, &s);
+        let uncoded = uncoded_bpsk_ber(6.0);
+        assert!(coded < uncoded / 50.0, "coded {coded} vs uncoded {uncoded}");
+    }
+
+    #[test]
+    fn soft_bound_anchor_value() {
+        // Well-known anchor: (171,133) soft-decision union bound is
+        // ≈1e-5..1e-6 around 4.0–4.5 dB.
+        let s = DistanceSpectrum::k7_171_133();
+        let b = soft_viterbi_ber(4.5, 0.5, &s);
+        assert!(b > 1e-7 && b < 1e-4, "bound at 4.5 dB = {b}");
+    }
+
+    #[test]
+    fn hard_worse_than_soft() {
+        let s = DistanceSpectrum::k7_171_133();
+        for db in [3.0, 5.0, 7.0] {
+            assert!(
+                hard_viterbi_ber(db, 0.5, &s) > soft_viterbi_ber(db, 0.5, &s),
+                "at {db} dB"
+            );
+        }
+    }
+
+    #[test]
+    fn punctured_spectra_order() {
+        // Higher puncturing rate → weaker code → higher BER at same Eb/N0.
+        let r12 = soft_viterbi_ber(5.0, 0.5, &DistanceSpectrum::k7_171_133());
+        let r23 = soft_viterbi_ber(5.0, 2.0 / 3.0, &DistanceSpectrum::k7_punctured_2_3());
+        let r34 = soft_viterbi_ber(5.0, 0.75, &DistanceSpectrum::k7_punctured_3_4());
+        assert!(r12 < r23, "1/2 ({r12}) vs 2/3 ({r23})");
+        assert!(r23 < r34, "2/3 ({r23}) vs 3/4 ({r34})");
+    }
+
+    #[test]
+    fn binom_values() {
+        assert_eq!(binom(5, 2), 10.0);
+        assert_eq!(binom(10, 0), 1.0);
+        assert_eq!(binom(10, 10), 1.0);
+    }
+}

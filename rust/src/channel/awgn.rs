@@ -1,0 +1,129 @@
+//! AWGN channel simulation (paper Fig 8, step 3).
+//!
+//! For unit-energy BPSK over a rate-R code, the noise standard deviation
+//! at a given Eb/N0 is
+//!
+//! ```text
+//! sigma = sqrt( 1 / (2 · R · 10^(EbN0_dB/10)) )
+//! ```
+//!
+//! (The paper's "2^-(Eb/N0)/20" is a typo for the standard decibel
+//! scaling — the standard form is what makes the paper's BER curves
+//! match MATLAB's `bertool`; see DESIGN.md §4.)
+
+use super::rng::Rng64;
+
+/// AWGN channel with a fixed Eb/N0 operating point.
+#[derive(Debug, Clone)]
+pub struct AwgnChannel {
+    /// Eb/N0 in dB.
+    pub ebn0_db: f64,
+    /// Code rate R (information bits per transmitted bit), e.g. 1/2.
+    pub code_rate: f64,
+    sigma: f64,
+}
+
+impl AwgnChannel {
+    pub fn new(ebn0_db: f64, code_rate: f64) -> Self {
+        assert!(code_rate > 0.0 && code_rate <= 1.0, "invalid code rate {code_rate}");
+        let sigma = noise_sigma(ebn0_db, code_rate);
+        AwgnChannel { ebn0_db, code_rate, sigma }
+    }
+
+    /// Noise standard deviation for this operating point.
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    /// Transmit symbols through the channel: y = x + n, n ~ N(0, sigma²).
+    pub fn transmit(&self, symbols: &[f32], rng: &mut Rng64) -> Vec<f32> {
+        symbols
+            .iter()
+            .map(|&x| x + rng.gaussian_scaled(self.sigma) as f32)
+            .collect()
+    }
+
+    /// In-place variant used by the hot BER loop to avoid reallocation.
+    pub fn transmit_into(&self, symbols: &[f32], out: &mut Vec<f32>, rng: &mut Rng64) {
+        out.clear();
+        out.extend(
+            symbols
+                .iter()
+                .map(|&x| x + rng.gaussian_scaled(self.sigma) as f32),
+        );
+    }
+}
+
+/// sigma = sqrt(1 / (2 · R · Eb/N0_linear)).
+pub fn noise_sigma(ebn0_db: f64, code_rate: f64) -> f64 {
+    let ebn0 = 10f64.powf(ebn0_db / 10.0);
+    (1.0 / (2.0 * code_rate * ebn0)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::bpsk;
+
+    #[test]
+    fn sigma_reference_values() {
+        // Rate 1/2 at 0 dB: sigma = sqrt(1/(2*0.5*1)) = 1.
+        assert!((noise_sigma(0.0, 0.5) - 1.0).abs() < 1e-12);
+        // Uncoded at 0 dB: sigma = sqrt(1/2).
+        assert!((noise_sigma(0.0, 1.0) - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-12);
+        // Higher Eb/N0 → less noise.
+        assert!(noise_sigma(6.0, 0.5) < noise_sigma(3.0, 0.5));
+    }
+
+    #[test]
+    fn transmit_adds_zero_mean_noise() {
+        let ch = AwgnChannel::new(3.0, 0.5);
+        let mut rng = Rng64::seeded(17);
+        let tx = vec![1.0f32; 100_000];
+        let rx = ch.transmit(&tx, &mut rng);
+        let mean: f64 = rx.iter().map(|&x| x as f64).sum::<f64>() / rx.len() as f64;
+        let var: f64 = rx
+            .iter()
+            .map(|&x| (x as f64 - mean).powi(2))
+            .sum::<f64>()
+            / rx.len() as f64;
+        assert!((mean - 1.0).abs() < 0.01, "mean {mean}");
+        assert!((var - ch.sigma() * ch.sigma()).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn uncoded_ber_matches_q_function() {
+        // Sanity-check the whole channel: uncoded BPSK BER at 4 dB
+        // should be Q(sqrt(2*Eb/N0)) ≈ 1.25e-2.
+        let ch = AwgnChannel::new(4.0, 1.0);
+        let mut rng = Rng64::seeded(23);
+        let n = 400_000usize;
+        let mut bits = vec![0u8; n];
+        rng.fill_bits(&mut bits);
+        let tx = bpsk::modulate(&bits);
+        let rx = ch.transmit(&tx, &mut rng);
+        let errors = rx
+            .iter()
+            .zip(bits.iter())
+            .filter(|(&y, &b)| bpsk::hard_bit(y) != b)
+            .count();
+        let ber = errors as f64 / n as f64;
+        let expected = 1.25e-2;
+        assert!(
+            (ber - expected).abs() / expected < 0.15,
+            "uncoded BER {ber} vs Q-function {expected}"
+        );
+    }
+
+    #[test]
+    fn transmit_into_matches_transmit() {
+        let ch = AwgnChannel::new(2.0, 0.5);
+        let tx = vec![1.0f32, -1.0, 1.0, -1.0];
+        let mut r1 = Rng64::seeded(3);
+        let mut r2 = Rng64::seeded(3);
+        let a = ch.transmit(&tx, &mut r1);
+        let mut b = Vec::new();
+        ch.transmit_into(&tx, &mut b, &mut r2);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,50 @@
+//! BPSK modulation: bit 0 → +1.0, bit 1 → −1.0 (the convention that
+//! makes a positive LLR mean "probably zero", matching the paper §II-C).
+
+/// Map one bit to its BPSK symbol.
+#[inline(always)]
+pub fn modulate_bit(bit: u8) -> f32 {
+    debug_assert!(bit <= 1);
+    1.0 - 2.0 * bit as f32
+}
+
+/// Modulate a bit vector into symbols.
+pub fn modulate(bits: &[u8]) -> Vec<f32> {
+    bits.iter().map(|&b| modulate_bit(b)).collect()
+}
+
+/// Hard demodulation: sign → bit (used by the hard-decision decoder
+/// path and by tests).
+#[inline(always)]
+pub fn hard_bit(symbol: f32) -> u8 {
+    (symbol < 0.0) as u8
+}
+
+/// Hard-demodulate a symbol vector.
+pub fn demodulate_hard(symbols: &[f32]) -> Vec<u8> {
+    symbols.iter().map(|&s| hard_bit(s)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mapping_convention() {
+        assert_eq!(modulate_bit(0), 1.0);
+        assert_eq!(modulate_bit(1), -1.0);
+    }
+
+    #[test]
+    fn roundtrip_noiseless() {
+        let bits = vec![0, 1, 1, 0, 1, 0, 0, 1];
+        assert_eq!(demodulate_hard(&modulate(&bits)), bits);
+    }
+
+    #[test]
+    fn hard_bit_boundary() {
+        assert_eq!(hard_bit(0.0), 0); // exact zero decides 0 (sign convention)
+        assert_eq!(hard_bit(-0.0001), 1);
+        assert_eq!(hard_bit(0.0001), 0);
+    }
+}

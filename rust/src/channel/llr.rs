@@ -1,0 +1,59 @@
+//! LLR formation at the receiver (paper §II-C).
+//!
+//! For BPSK (+1 ↔ bit 0) over AWGN with noise variance sigma², the
+//! log-likelihood ratio of a received sample y is
+//!
+//! ```text
+//! llr(y) = ln P(bit=0 | y) / P(bit=1 | y) = 2·y / sigma²
+//! ```
+//!
+//! A positive LLR favours bit 0, matching the paper. The max-metric
+//! Viterbi recursion is invariant to positive scaling of the LLRs, so
+//! the decoder works with any consistent scale; the scale matters only
+//! when LLRs are quantized (see [`super::quantize`]).
+
+/// Convert received samples to LLRs given the channel noise sigma.
+pub fn llrs_from_samples(samples: &[f32], sigma: f64) -> Vec<f32> {
+    let scale = (2.0 / (sigma * sigma)) as f32;
+    samples.iter().map(|&y| y * scale).collect()
+}
+
+/// In-place variant for the hot BER loop.
+pub fn llrs_from_samples_into(samples: &[f32], sigma: f64, out: &mut Vec<f32>) {
+    let scale = (2.0 / (sigma * sigma)) as f32;
+    out.clear();
+    out.extend(samples.iter().map(|&y| y * scale));
+}
+
+/// Hard-decision "LLRs": map a received sample to ±1 by sign. Feeding
+/// these to the soft decoder implements hard-decision Viterbi exactly
+/// (all branch metrics become ±Hamming-style agreements).
+pub fn hard_llrs(samples: &[f32]) -> Vec<f32> {
+    samples.iter().map(|&y| if y < 0.0 { -1.0 } else { 1.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llr_sign_and_scale() {
+        let l = llrs_from_samples(&[1.0, -0.5], 1.0);
+        assert_eq!(l, vec![2.0, -1.0]);
+        let l2 = llrs_from_samples(&[1.0], 0.5);
+        assert!((l2[0] - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn into_matches() {
+        let s = [0.3f32, -1.2, 0.0];
+        let mut out = Vec::new();
+        llrs_from_samples_into(&s, 0.8, &mut out);
+        assert_eq!(out, llrs_from_samples(&s, 0.8));
+    }
+
+    #[test]
+    fn hard_llrs_are_signs() {
+        assert_eq!(hard_llrs(&[0.2, -3.0, 0.0]), vec![1.0, -1.0, 1.0]);
+    }
+}

@@ -1,0 +1,18 @@
+//! Channel simulation substrate (paper Fig 8): deterministic RNG, BPSK
+//! modulation, AWGN channel, LLR formation and fixed-point quantization.
+//!
+//! The simulated transmitter/receiver chain is:
+//!
+//! ```text
+//! bits → encoder → BPSK modulate → AWGN → LLRs → (quantize) → decoder
+//! ```
+
+pub mod awgn;
+pub mod bpsk;
+pub mod llr;
+pub mod quantize;
+pub mod rng;
+
+pub use awgn::{noise_sigma, AwgnChannel};
+pub use quantize::LlrQuantizer;
+pub use rng::Rng64;

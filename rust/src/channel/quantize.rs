@@ -1,0 +1,97 @@
+//! Fixed-point LLR quantization.
+//!
+//! Real receivers (and the paper's GPU implementation, which stores
+//! LLRs compactly in shared memory) quantize soft inputs to a few bits.
+//! This module provides symmetric uniform quantization to `bits`-bit
+//! signed integers with saturation, plus the dequantized f32 view the
+//! decoders consume. BER impact of quantization is exercised in the
+//! integration tests and available as an ablation in the CLI.
+
+/// Symmetric uniform quantizer for LLRs.
+#[derive(Debug, Clone, Copy)]
+pub struct LlrQuantizer {
+    /// Number of bits including sign (2..=8).
+    pub bits: u32,
+    /// Full-scale LLR magnitude mapped to the max code.
+    pub full_scale: f32,
+}
+
+impl LlrQuantizer {
+    pub fn new(bits: u32, full_scale: f32) -> Self {
+        assert!((2..=8).contains(&bits), "quantizer bits out of range");
+        assert!(full_scale > 0.0);
+        LlrQuantizer { bits, full_scale }
+    }
+
+    /// Max positive code, e.g. 3 bits → 3 (codes −4..3 clamp to ±3).
+    #[inline]
+    pub fn max_code(&self) -> i32 {
+        (1 << (self.bits - 1)) - 1
+    }
+
+    /// Quantize one LLR to a signed code with saturation.
+    #[inline]
+    pub fn quantize(&self, llr: f32) -> i8 {
+        let m = self.max_code() as f32;
+        let scaled = llr / self.full_scale * m;
+        scaled.round().clamp(-m, m) as i8
+    }
+
+    /// Dequantize a code back to an LLR value.
+    #[inline]
+    pub fn dequantize(&self, code: i8) -> f32 {
+        code as f32 / self.max_code() as f32 * self.full_scale
+    }
+
+    /// Quantize a vector and return the dequantized f32 view (what the
+    /// decoder actually consumes after fixed-point emulation).
+    pub fn roundtrip(&self, llrs: &[f32]) -> Vec<f32> {
+        llrs.iter().map(|&x| self.dequantize(self.quantize(x))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saturates_at_full_scale() {
+        let q = LlrQuantizer::new(3, 4.0);
+        assert_eq!(q.max_code(), 3);
+        assert_eq!(q.quantize(100.0), 3);
+        assert_eq!(q.quantize(-100.0), -3);
+    }
+
+    #[test]
+    fn zero_maps_to_zero() {
+        let q = LlrQuantizer::new(4, 8.0);
+        assert_eq!(q.quantize(0.0), 0);
+        assert_eq!(q.dequantize(0), 0.0);
+    }
+
+    #[test]
+    fn monotone_and_symmetric() {
+        let q = LlrQuantizer::new(4, 6.0);
+        let mut prev = i8::MIN;
+        for i in -60..=60 {
+            let x = i as f32 / 10.0;
+            let c = q.quantize(x);
+            assert!(c >= prev, "quantizer not monotone");
+            prev = c;
+            assert_eq!(q.quantize(-x), -c, "quantizer not symmetric at {x}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let q = LlrQuantizer::new(6, 8.0);
+        let step = 8.0 / q.max_code() as f32;
+        for i in -80..=80 {
+            let x = i as f32 / 10.0;
+            let y = q.dequantize(q.quantize(x));
+            if x.abs() <= 8.0 {
+                assert!((x - y).abs() <= step / 2.0 + 1e-6, "error at {x}: {y}");
+            }
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Minimal command-line argument parser (clap is not fetchable in this
+//! offline image). Supports `--flag`, `--key value`, `--key=value`,
+//! and positional arguments, with typed accessors and unknown-flag
+//! detection.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+    /// Order-preserved flag names for unknown-flag reporting.
+    seen: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // `--` terminates flags; rest is positional.
+                    args.positional.extend(it);
+                    break;
+                }
+                let (key, val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let value = match val {
+                    Some(v) => v,
+                    None => {
+                        // Take the next token as the value unless it
+                        // looks like another flag.
+                        match it.peek() {
+                            Some(nxt) if !nxt.starts_with("--") => it.next().unwrap(),
+                            _ => String::from("true"),
+                        }
+                    }
+                };
+                if args.flags.insert(key.clone(), value).is_some() {
+                    bail!("duplicate flag --{key}");
+                }
+                args.seen.push(key);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Error if any flag is not in `allowed` (catches typos).
+    pub fn check_known(&self, allowed: &[&str]) -> Result<()> {
+        for k in &self.seen {
+            if !allowed.contains(&k.as_str()) {
+                bail!("unknown flag --{k}; allowed: {allowed:?}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse("exp table2 --full --threads 8 --out=results");
+        assert_eq!(a.pos(0), Some("exp"));
+        assert_eq!(a.pos(1), Some("table2"));
+        assert!(a.has("full"));
+        assert_eq!(a.get_usize("threads", 1).unwrap(), 8);
+        assert_eq!(a.get("out"), Some("results"));
+    }
+
+    #[test]
+    fn boolean_flag_before_flag() {
+        let a = parse("--quick --seed 7");
+        assert_eq!(a.get("quick"), Some("true"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse("decode -- --not-a-flag");
+        assert_eq!(a.pos(0), Some("decode"));
+        assert_eq!(a.pos(1), Some("--not-a-flag"));
+    }
+
+    #[test]
+    fn duplicate_flag_rejected() {
+        assert!(Args::parse(["--x".into(), "1".into(), "--x".into(), "2".into()]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = parse("--threds 8");
+        assert!(a.check_known(&["threads"]).is_err());
+        assert!(a.check_known(&["threds"]).is_ok());
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("--threads eight");
+        assert!(a.get_usize("threads", 1).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("");
+        assert_eq!(a.get_usize("threads", 4).unwrap(), 4);
+        assert_eq!(a.get_f64("ebn0", 3.5).unwrap(), 3.5);
+    }
+}

@@ -1,0 +1,6 @@
+//! Command-line interface plumbing (hand-rolled; clap unavailable in
+//! this offline image).
+
+pub mod args;
+
+pub use args::Args;

@@ -1,0 +1,146 @@
+//! Convolutional encoder (paper §II-A, Fig 1a): streaming state-machine
+//! encoder with optional trellis termination (k−1 zero tail bits).
+
+use super::params::CodeSpec;
+use super::trellis::Trellis;
+
+/// Whether the encoder appends k−1 zero bits so the trellis ends in
+/// state 0 (termination makes the final traceback start-state known).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Termination {
+    /// No tail; the stream is truncated (the paper's streaming mode —
+    /// frames handle convergence via overlaps instead).
+    Truncated,
+    /// Append k−1 zero input bits; output includes their coded bits.
+    Terminated,
+}
+
+/// Streaming convolutional encoder.
+#[derive(Debug, Clone)]
+pub struct Encoder {
+    trellis: Trellis,
+    state: u32,
+}
+
+impl Encoder {
+    pub fn new(spec: CodeSpec) -> Self {
+        Encoder { trellis: Trellis::new(spec), state: 0 }
+    }
+
+    pub fn from_trellis(trellis: Trellis) -> Self {
+        Encoder { trellis, state: 0 }
+    }
+
+    pub fn spec(&self) -> &CodeSpec {
+        &self.trellis.spec
+    }
+
+    pub fn state(&self) -> u32 {
+        self.state
+    }
+
+    pub fn reset(&mut self) {
+        self.state = 0;
+    }
+
+    /// Encode one input bit, pushing β output bits (bit 0 = generator 0
+    /// first, matching the paper's serialization of the β outputs).
+    pub fn push_bit(&mut self, bit: u8, out: &mut Vec<u8>) {
+        debug_assert!(bit <= 1);
+        let (next, word) = self.trellis.step(self.state, bit);
+        self.state = next;
+        for g in 0..self.trellis.spec.beta {
+            out.push(((word >> g) & 1) as u8);
+        }
+    }
+
+    /// Encode a whole message. Returns β·(n + tail) output bits.
+    pub fn encode(&mut self, bits: &[u8], term: Termination) -> Vec<u8> {
+        let tail = match term {
+            Termination::Truncated => 0,
+            Termination::Terminated => (self.trellis.spec.k - 1) as usize,
+        };
+        let mut out = Vec::with_capacity((bits.len() + tail) * self.trellis.spec.beta as usize);
+        for &b in bits {
+            self.push_bit(b, &mut out);
+        }
+        for _ in 0..tail {
+            self.push_bit(0, &mut out);
+        }
+        out
+    }
+}
+
+/// One-shot convenience: encode `bits` with a fresh encoder.
+pub fn encode(spec: &CodeSpec, bits: &[u8], term: Termination) -> Vec<u8> {
+    Encoder::new(spec.clone()).encode(bits, term)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_length() {
+        let spec = CodeSpec::standard_k7();
+        let bits = vec![1, 0, 1, 1, 0];
+        assert_eq!(encode(&spec, &bits, Termination::Truncated).len(), 10);
+        assert_eq!(encode(&spec, &bits, Termination::Terminated).len(), (5 + 6) * 2);
+    }
+
+    #[test]
+    fn all_zero_message_encodes_to_zero() {
+        let spec = CodeSpec::standard_k7();
+        let out = encode(&spec, &[0; 20], Termination::Terminated);
+        assert!(out.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn termination_returns_to_zero_state() {
+        let spec = CodeSpec::standard_k7();
+        let mut enc = Encoder::new(spec);
+        let _ = enc.encode(&[1, 1, 0, 1, 0, 0, 1, 1], Termination::Terminated);
+        assert_eq!(enc.state(), 0);
+    }
+
+    #[test]
+    fn known_vector_k7() {
+        // Classic check for (171,133): input 1 produces output bits
+        // (g0 MSB, g1 MSB) = (1,1) then the rest of the impulse response.
+        let spec = CodeSpec::standard_k7();
+        let out = encode(&spec, &[1, 0, 0, 0, 0, 0, 0], Termination::Truncated);
+        // g0=1111001 ⇒ stream on output 0: 1,1,1,1,0,0,1
+        // g1=1011011 ⇒ stream on output 1: 1,0,1,1,0,1,1
+        let o0: Vec<u8> = out.iter().step_by(2).copied().collect();
+        let o1: Vec<u8> = out.iter().skip(1).step_by(2).copied().collect();
+        assert_eq!(o0, vec![1, 1, 1, 1, 0, 0, 1]);
+        assert_eq!(o1, vec![1, 0, 1, 1, 0, 1, 1]);
+    }
+
+    #[test]
+    fn linearity() {
+        // Code is linear over GF(2): enc(a ⊕ b) = enc(a) ⊕ enc(b).
+        let spec = CodeSpec::standard_k5();
+        let a = vec![1, 0, 1, 1, 0, 0, 1, 0];
+        let b = vec![0, 1, 1, 0, 1, 0, 1, 1];
+        let ab: Vec<u8> = a.iter().zip(&b).map(|(x, y)| x ^ y).collect();
+        let ea = encode(&spec, &a, Termination::Truncated);
+        let eb = encode(&spec, &b, Termination::Truncated);
+        let eab = encode(&spec, &ab, Termination::Truncated);
+        let xor: Vec<u8> = ea.iter().zip(&eb).map(|(x, y)| x ^ y).collect();
+        assert_eq!(eab, xor);
+    }
+
+    #[test]
+    fn streaming_equals_oneshot() {
+        let spec = CodeSpec::standard_k7();
+        let bits = vec![1, 1, 0, 1, 0, 1, 1, 1, 0, 0, 1];
+        let oneshot = encode(&spec, &bits, Termination::Truncated);
+        let mut enc = Encoder::new(spec);
+        let mut streamed = Vec::new();
+        for &b in &bits {
+            enc.push_bit(b, &mut streamed);
+        }
+        assert_eq!(oneshot, streamed);
+    }
+}

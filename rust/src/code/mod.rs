@@ -1,0 +1,12 @@
+//! Convolutional-code substrate: code specifications, the tabulated
+//! encoder FSM (trellis), the streaming encoder, and puncturing.
+
+pub mod encoder;
+pub mod params;
+pub mod puncture;
+pub mod trellis;
+
+pub use encoder::{encode, Encoder, Termination};
+pub use params::CodeSpec;
+pub use puncture::{depuncture_llrs, puncture, punctured_len, PuncturePattern};
+pub use trellis::Trellis;

@@ -1,0 +1,120 @@
+//! Convolutional-code specification: (β, 1, k) codes with arbitrary
+//! constraint length and generator polynomials (paper §II-A).
+
+/// A rate-1/β convolutional code with constraint length `k`.
+///
+/// Generator polynomials are given in the conventional bit order of the
+/// paper's eq. (1): bit k−1 (MSB) multiplies the current input bit
+/// `in_t`, bit 0 multiplies the oldest register bit `in_{t−k+1}`. The
+/// usual octal notations (e.g. 171, 133 for the K=7 standard code) are
+/// already in this order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CodeSpec {
+    /// Constraint length k (register length including the current bit).
+    pub k: u32,
+    /// Output bits per input bit (β ≥ 2 before puncturing).
+    pub beta: u32,
+    /// β generator polynomials, each k bits.
+    pub generators: Vec<u32>,
+}
+
+impl CodeSpec {
+    pub fn new(k: u32, generators: Vec<u32>) -> Self {
+        assert!((3..=16).contains(&k), "constraint length {k} unsupported");
+        assert!(generators.len() >= 2, "need at least two generators");
+        for &g in &generators {
+            assert!(g != 0, "zero generator polynomial");
+            assert!(g < (1 << k), "generator {g:#o} wider than k={k} bits");
+        }
+        let beta = generators.len() as u32;
+        CodeSpec { k, beta, generators }
+    }
+
+    /// The industry-standard (2,1,7) code with generators 171, 133
+    /// (octal) — used by WiFi, DVB, GSM, and the paper's evaluation.
+    pub fn standard_k7() -> Self {
+        CodeSpec::new(7, vec![0o171, 0o133])
+    }
+
+    /// The (2,1,9) code with generators 561, 753 (octal) — CDMA/IS-95.
+    pub fn standard_k9() -> Self {
+        CodeSpec::new(9, vec![0o561, 0o753])
+    }
+
+    /// The (2,1,5) code with generators 23, 35 (octal) — shorter code
+    /// used in tests where 16 states keep oracles easy to eyeball.
+    pub fn standard_k5() -> Self {
+        CodeSpec::new(5, vec![0o23, 0o35])
+    }
+
+    /// The rate-1/3 LTE convolutional code (3,1,7): 133, 171, 165.
+    pub fn standard_k7_r3() -> Self {
+        CodeSpec::new(7, vec![0o133, 0o171, 0o165])
+    }
+
+    /// Number of trellis states, 2^{k−1}.
+    #[inline]
+    pub fn num_states(&self) -> usize {
+        1usize << (self.k - 1)
+    }
+
+    /// State index mask.
+    #[inline]
+    pub fn state_mask(&self) -> u32 {
+        (self.num_states() - 1) as u32
+    }
+
+    /// Base code rate 1/β (before puncturing).
+    #[inline]
+    pub fn rate(&self) -> f64 {
+        1.0 / self.beta as f64
+    }
+
+    /// Whether the code satisfies the "standard convolutional code"
+    /// property the paper exploits (§IV-B, eq. 8): complementing all
+    /// output bits of a branch negates its metric. True whenever every
+    /// generator has its MSB and LSB set — which all standard codes do.
+    /// The *useful* property for the metric table is unconditional
+    /// (the 2^β patterns always come in complement pairs); this flag
+    /// records whether branch outputs actually cover complement pairs.
+    pub fn is_standard(&self) -> bool {
+        self.generators.iter().all(|&g| g & 1 == 1 && (g >> (self.k - 1)) & 1 == 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k7_spec() {
+        let c = CodeSpec::standard_k7();
+        assert_eq!(c.k, 7);
+        assert_eq!(c.beta, 2);
+        assert_eq!(c.num_states(), 64);
+        assert_eq!(c.state_mask(), 63);
+        assert_eq!(c.rate(), 0.5);
+        assert!(c.is_standard());
+    }
+
+    #[test]
+    fn other_standard_codes() {
+        assert_eq!(CodeSpec::standard_k5().num_states(), 16);
+        assert_eq!(CodeSpec::standard_k9().num_states(), 256);
+        assert_eq!(CodeSpec::standard_k7_r3().beta, 3);
+        assert!(CodeSpec::standard_k5().is_standard());
+        assert!(CodeSpec::standard_k9().is_standard());
+    }
+
+    #[test]
+    #[should_panic(expected = "wider than")]
+    fn rejects_wide_generator() {
+        CodeSpec::new(5, vec![0o171, 0o133]); // K=7 polys on K=5 code
+    }
+
+    #[test]
+    #[should_panic(expected = "at least two")]
+    fn rejects_single_generator() {
+        CodeSpec::new(7, vec![0o171]);
+    }
+}

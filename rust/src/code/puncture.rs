@@ -1,0 +1,230 @@
+//! Puncturing and de-puncturing (paper §IV-E).
+//!
+//! Puncturing deletes encoder output bits according to a periodic
+//! pattern mask, raising the code rate; the receiver re-inserts neutral
+//! (zero-LLR) values at the deleted positions before Viterbi decoding.
+//!
+//! Patterns are expressed over the mother code's output lanes: for a
+//! rate-1/2 mother code, the standard DVB/WiFi patterns are
+//!
+//! ```text
+//! rate 2/3: P = [1 1; 1 0]        (period 2 input bits, keep 3 of 4)
+//! rate 3/4: P = [1 1 0; 1 0 1]    (period 3 input bits, keep 4 of 6)
+//! ```
+//!
+//! Rows are output lanes (generator index), columns are stages.
+
+use super::params::CodeSpec;
+
+/// A periodic puncturing pattern.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PuncturePattern {
+    /// β rows × period columns; `keep[lane][col]` = transmit this bit.
+    pub keep: Vec<Vec<bool>>,
+    /// Human-readable rate label, e.g. "3/4".
+    pub label: String,
+}
+
+impl PuncturePattern {
+    pub fn new(keep: Vec<Vec<bool>>, label: &str) -> Self {
+        assert!(!keep.is_empty());
+        let period = keep[0].len();
+        assert!(period > 0);
+        assert!(keep.iter().all(|row| row.len() == period), "ragged pattern");
+        assert!(
+            (0..period).all(|c| keep.iter().any(|row| row[c])),
+            "pattern deletes an entire stage"
+        );
+        PuncturePattern { keep, label: label.to_string() }
+    }
+
+    /// Identity pattern (rate 1/β — no puncturing).
+    pub fn none(beta: u32) -> Self {
+        PuncturePattern::new(vec![vec![true]; beta as usize], "1/2")
+    }
+
+    /// Standard rate-2/3 pattern for a rate-1/2 mother code.
+    pub fn rate_2_3() -> Self {
+        PuncturePattern::new(vec![vec![true, true], vec![true, false]], "2/3")
+    }
+
+    /// Standard rate-3/4 pattern for a rate-1/2 mother code.
+    pub fn rate_3_4() -> Self {
+        PuncturePattern::new(
+            vec![vec![true, true, false], vec![true, false, true]],
+            "3/4",
+        )
+    }
+
+    /// Look up a pattern by rate label.
+    pub fn by_label(label: &str) -> Option<Self> {
+        match label {
+            "1/2" | "none" => Some(Self::none(2)),
+            "2/3" => Some(Self::rate_2_3()),
+            "3/4" => Some(Self::rate_3_4()),
+            _ => None,
+        }
+    }
+
+    /// Pattern period in stages (input bits).
+    pub fn period(&self) -> usize {
+        self.keep[0].len()
+    }
+
+    /// Number of output lanes (must equal the code's β).
+    pub fn lanes(&self) -> usize {
+        self.keep.len()
+    }
+
+    /// Kept bits per period.
+    pub fn kept_per_period(&self) -> usize {
+        self.keep.iter().flatten().filter(|&&k| k).count()
+    }
+
+    /// Effective code rate for a β-lane mother code:
+    /// period input bits / kept output bits.
+    pub fn effective_rate(&self) -> f64 {
+        self.period() as f64 / self.kept_per_period() as f64
+    }
+
+    /// Validate against a code spec.
+    pub fn check_against(&self, spec: &CodeSpec) {
+        assert_eq!(
+            self.lanes(),
+            spec.beta as usize,
+            "pattern lanes != code beta"
+        );
+    }
+}
+
+/// Puncture an encoded bit stream (lane-interleaved: stage-major,
+/// lane-minor, as produced by [`super::encoder::Encoder`]).
+pub fn puncture(encoded: &[u8], beta: usize, pat: &PuncturePattern) -> Vec<u8> {
+    assert_eq!(encoded.len() % beta, 0, "encoded length not a lane multiple");
+    assert_eq!(pat.lanes(), beta);
+    let stages = encoded.len() / beta;
+    let mut out = Vec::with_capacity(encoded.len() * pat.kept_per_period() / (pat.period() * beta) + beta);
+    for t in 0..stages {
+        let col = t % pat.period();
+        for lane in 0..beta {
+            if pat.keep[lane][col] {
+                out.push(encoded[t * beta + lane]);
+            }
+        }
+    }
+    out
+}
+
+/// De-puncture received LLRs: re-insert `0.0` (neutral) at punctured
+/// positions, restoring the mother code's stage-major layout.
+/// `stages` is the number of trellis stages the decoder will run.
+pub fn depuncture_llrs(
+    punctured: &[f32],
+    beta: usize,
+    pat: &PuncturePattern,
+    stages: usize,
+) -> Vec<f32> {
+    assert_eq!(pat.lanes(), beta);
+    let expected = punctured_len(stages, beta, pat);
+    assert_eq!(
+        punctured.len(),
+        expected,
+        "punctured stream length {} != expected {} for {} stages",
+        punctured.len(),
+        expected,
+        stages
+    );
+    let mut out = vec![0.0f32; stages * beta];
+    let mut src = 0usize;
+    for t in 0..stages {
+        let col = t % pat.period();
+        for lane in 0..beta {
+            if pat.keep[lane][col] {
+                out[t * beta + lane] = punctured[src];
+                src += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Number of transmitted bits for `stages` trellis stages under `pat`.
+pub fn punctured_len(stages: usize, beta: usize, pat: &PuncturePattern) -> usize {
+    assert_eq!(pat.lanes(), beta);
+    let full_periods = stages / pat.period();
+    let mut n = full_periods * pat.kept_per_period();
+    for t in full_periods * pat.period()..stages {
+        let col = t % pat.period();
+        n += (0..beta).filter(|&l| pat.keep[l][col]).count();
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates() {
+        assert!((PuncturePattern::none(2).effective_rate() - 0.5).abs() < 1e-12);
+        assert!((PuncturePattern::rate_2_3().effective_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((PuncturePattern::rate_3_4().effective_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn puncture_2_3_keeps_3_of_4() {
+        // stages 0..4, lanes a,b: stream a0 b0 a1 b1 a2 b2 a3 b3
+        // pattern keeps a0 b0 a1 | a2 b2 a3
+        let encoded = vec![10, 20, 11, 21, 12, 22, 13, 23];
+        let out = puncture(&encoded, 2, &PuncturePattern::rate_2_3());
+        assert_eq!(out, vec![10, 20, 11, 12, 22, 13]);
+    }
+
+    #[test]
+    fn depuncture_inverts_puncture_positions() {
+        let pat = PuncturePattern::rate_3_4();
+        let stages = 11; // not a multiple of the period on purpose
+        let encoded: Vec<u8> = (0..stages * 2).map(|i| (i % 2) as u8).collect();
+        let tx = puncture(&encoded, 2, &pat);
+        assert_eq!(tx.len(), punctured_len(stages, 2, &pat));
+        let llrs: Vec<f32> = tx.iter().map(|&b| if b == 0 { 1.0 } else { -1.0 }).collect();
+        let rx = depuncture_llrs(&llrs, 2, &pat, stages);
+        assert_eq!(rx.len(), stages * 2);
+        // Positions that survived match; punctured positions are 0.
+        let mut src = 0;
+        for t in 0..stages {
+            let col = t % pat.period();
+            for lane in 0..2 {
+                let v = rx[t * 2 + lane];
+                if pat.keep[lane][col] {
+                    assert_eq!(v, llrs[src]);
+                    src += 1;
+                } else {
+                    assert_eq!(v, 0.0, "punctured position not neutral");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn punctured_len_partial_period() {
+        let pat = PuncturePattern::rate_2_3();
+        // period 2, keeps 3; 5 stages = 2 full periods (6) + col 0 (2) = 8
+        assert_eq!(punctured_len(5, 2, &pat), 8);
+        assert_eq!(punctured_len(4, 2, &pat), 6);
+        assert_eq!(punctured_len(0, 2, &pat), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "deletes an entire stage")]
+    fn rejects_stage_deleting_pattern() {
+        PuncturePattern::new(vec![vec![true, false], vec![true, false]], "bad");
+    }
+
+    #[test]
+    fn by_label_lookup() {
+        assert!(PuncturePattern::by_label("2/3").is_some());
+        assert!(PuncturePattern::by_label("3/4").is_some());
+        assert!(PuncturePattern::by_label("7/8").is_none());
+    }
+}

@@ -1,0 +1,220 @@
+//! Precomputed trellis (encoder FSM) tables.
+//!
+//! Conventions (DESIGN.md §7): a state holds the most recent k−1 input
+//! bits, MSB = newest. Consuming input bit `b` in state `i` moves to
+//!
+//! ```text
+//! next(i, b) = (b << (k−2)) | (i >> 1)
+//! ```
+//!
+//! and emits, for each generator g, `parity(g & r)` with the k-bit
+//! register `r = (b << (k−1)) | i`. Consequently state `j`'s two
+//! predecessors are `(2j) & mask` and `(2j + 1) & mask`, and the input
+//! bit that *entered* j is its MSB, `j >> (k−2)` — which is exactly the
+//! bit traceback emits (paper Alg 2, α_in).
+
+use super::params::CodeSpec;
+use crate::util::bits::parity;
+
+/// Fully tabulated trellis for a [`CodeSpec`].
+#[derive(Debug, Clone)]
+pub struct Trellis {
+    pub spec: CodeSpec,
+    /// `next[i][b]` — successor of state i on input bit b.
+    pub next: Vec<[u32; 2]>,
+    /// `output[i][b]` — β-bit branch output word (bit 0 = generator 0).
+    pub output: Vec<[u32; 2]>,
+    /// `prev[j]` — the two predecessors of state j, in decision-bit
+    /// order: `prev[j][d] = (2j + d) & mask`.
+    pub prev: Vec<[u32; 2]>,
+    /// `prev_output[j][d]` — branch output word on the edge
+    /// `prev[j][d] → j`.
+    pub prev_output: Vec<[u32; 2]>,
+    /// True when `output[i][1]` is the bitwise complement of
+    /// `output[i][0]` for every state — i.e. every generator taps the
+    /// current input bit (MSB set). All standard codes qualify; this
+    /// enables the butterfly ACS fast path (σ targets j and j+S/2 share
+    /// predecessors (2j, 2j+1) with metrics ±g).
+    butterfly: bool,
+    /// `sign_lanes[lane][i] = ±1`: the sign with which LLR lane `lane`
+    /// enters the input-bit-0 branch metric of state i
+    /// (+1 if `output[i][0]` has a 0 in that lane). Lets the per-stage
+    /// branch metrics be computed as a vectorizable
+    /// `g[i] = Σ_lane sign_lanes[lane][i] · llr[lane]` (§Perf).
+    pub sign_lanes: Vec<Vec<f32>>,
+}
+
+impl Trellis {
+    pub fn new(spec: CodeSpec) -> Self {
+        let ns = spec.num_states();
+        let mask = spec.state_mask();
+        let k = spec.k;
+        let mut next = vec![[0u32; 2]; ns];
+        let mut output = vec![[0u32; 2]; ns];
+        for i in 0..ns as u32 {
+            for b in 0..2u32 {
+                next[i as usize][b as usize] = (b << (k - 2)) | (i >> 1);
+                let r = ((b << (k - 1)) | i) as u64;
+                let mut word = 0u32;
+                for (gi, &g) in spec.generators.iter().enumerate() {
+                    word |= (parity(g as u64 & r) as u32) << gi;
+                }
+                output[i as usize][b as usize] = word;
+            }
+        }
+        let mut prev = vec![[0u32; 2]; ns];
+        let mut prev_output = vec![[0u32; 2]; ns];
+        for j in 0..ns as u32 {
+            let b_in = j >> (k - 2); // input bit that enters j
+            for d in 0..2u32 {
+                let i = (2 * j + d) & mask;
+                prev[j as usize][d as usize] = i;
+                prev_output[j as usize][d as usize] = output[i as usize][b_in as usize];
+                debug_assert_eq!(next[i as usize][b_in as usize], j);
+            }
+        }
+        let full = (1u32 << spec.beta) - 1;
+        let butterfly =
+            (0..ns).all(|i| output[i][0] ^ output[i][1] == full);
+        let sign_lanes = (0..spec.beta as usize)
+            .map(|lane| {
+                (0..ns)
+                    .map(|i| if (output[i][0] >> lane) & 1 == 0 { 1.0 } else { -1.0 })
+                    .collect()
+            })
+            .collect();
+        Trellis { spec, next, output, prev, prev_output, butterfly, sign_lanes }
+    }
+
+    /// Whether the butterfly ACS fast path applies (see field docs).
+    #[inline]
+    pub fn butterfly_ok(&self) -> bool {
+        self.butterfly
+    }
+
+    #[inline]
+    pub fn num_states(&self) -> usize {
+        self.spec.num_states()
+    }
+
+    /// Input bit that enters state j (the traceback-emitted bit).
+    #[inline]
+    pub fn input_bit_of(&self, j: u32) -> u8 {
+        (j >> (self.spec.k - 2)) as u8
+    }
+
+    /// Successor state and output word for (state, input bit).
+    #[inline]
+    pub fn step(&self, state: u32, bit: u8) -> (u32, u32) {
+        let i = state as usize;
+        let b = bit as usize;
+        (self.next[i][b], self.output[i][b])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k7() -> Trellis {
+        Trellis::new(CodeSpec::standard_k7())
+    }
+
+    #[test]
+    fn state_graph_is_consistent() {
+        let t = k7();
+        let ns = t.num_states() as u32;
+        for i in 0..ns {
+            for b in 0..2u8 {
+                let (j, _) = t.step(i, b);
+                assert!(j < ns);
+                // i must be one of j's predecessors with matching output.
+                let d = t.prev[j as usize].iter().position(|&p| p == i).unwrap();
+                assert_eq!(t.prev_output[j as usize][d], t.output[i as usize][b as usize]);
+                // entering bit of j is b.
+                assert_eq!(t.input_bit_of(j), b);
+            }
+        }
+    }
+
+    #[test]
+    fn every_state_has_two_distinct_predecessors() {
+        let t = k7();
+        for j in 0..t.num_states() {
+            assert_ne!(t.prev[j][0], t.prev[j][1]);
+            assert_eq!(t.prev[j][0] ^ t.prev[j][1], 1, "predecessors differ in LSB");
+        }
+    }
+
+    #[test]
+    fn zero_state_zero_input_emits_zero() {
+        // All-zero input keeps the FSM at state 0 emitting 0s (linear code).
+        let t = k7();
+        let (j, out) = t.step(0, 0);
+        assert_eq!(j, 0);
+        assert_eq!(out, 0);
+    }
+
+    #[test]
+    fn known_first_transition_k7() {
+        // From state 0, input 1: register r = 1000000. Outputs are the
+        // MSBs of the generators: g=171 (1111001) → 1; g=133 (1011011) → 1.
+        let t = k7();
+        let (j, out) = t.step(0, 1);
+        assert_eq!(j, 0b100000);
+        assert_eq!(out, 0b11);
+    }
+
+    #[test]
+    fn impulse_response_matches_generators() {
+        // Feeding 1 followed by zeros reads each generator out MSB-first
+        // on the corresponding output bit (the code is linear & causal).
+        let t = k7();
+        let spec = &t.spec;
+        let mut state = 0u32;
+        let mut outs: Vec<u32> = Vec::new();
+        let input = [1u8, 0, 0, 0, 0, 0, 0];
+        for &b in &input {
+            let (ns, o) = t.step(state, b);
+            state = ns;
+            outs.push(o);
+        }
+        for (gi, &g) in spec.generators.iter().enumerate() {
+            let bits: Vec<u32> = outs.iter().map(|o| (o >> gi) & 1).collect();
+            let expect: Vec<u32> =
+                (0..spec.k).rev().map(|s| (g >> s) & 1).collect();
+            assert_eq!(bits, expect, "generator {gi} impulse response");
+        }
+    }
+
+    #[test]
+    fn complement_pairs_property_k7() {
+        // Standard-code property (paper eq. 8): for each state the two
+        // outgoing branch outputs are complements of each other.
+        let t = k7();
+        let full = (1u32 << t.spec.beta) - 1;
+        for i in 0..t.num_states() {
+            assert_eq!(t.output[i][0] ^ t.output[i][1], full, "state {i}");
+        }
+    }
+
+    #[test]
+    fn works_for_all_builtin_codes() {
+        for spec in [
+            CodeSpec::standard_k5(),
+            CodeSpec::standard_k7(),
+            CodeSpec::standard_k9(),
+            CodeSpec::standard_k7_r3(),
+        ] {
+            let t = Trellis::new(spec);
+            // Each state must be reachable from exactly two states.
+            let mut in_deg = vec![0u32; t.num_states()];
+            for i in 0..t.num_states() {
+                for b in 0..2 {
+                    in_deg[t.next[i][b] as usize] += 1;
+                }
+            }
+            assert!(in_deg.iter().all(|&d| d == 2));
+        }
+    }
+}

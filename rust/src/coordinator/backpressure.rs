@@ -1,0 +1,140 @@
+//! Admission control: a watermark gate on in-flight frames.
+//!
+//! The SDR front end produces LLRs at line rate; if the decoder falls
+//! behind, queues grow without bound. The gate tracks in-flight frames
+//! and either blocks producers (streaming mode) or rejects new requests
+//! (serving mode) above the high watermark, releasing at the low
+//! watermark to avoid thrash.
+
+use std::sync::{Condvar, Mutex};
+
+/// Gate decision for non-blocking admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    Accepted,
+    Rejected,
+}
+
+/// Watermark-based backpressure gate.
+pub struct BackpressureGate {
+    state: Mutex<State>,
+    drained: Condvar,
+    high: usize,
+    low: usize,
+}
+
+struct State {
+    in_flight: usize,
+    /// Set once above high; cleared at low (hysteresis).
+    saturated: bool,
+}
+
+impl BackpressureGate {
+    pub fn new(high: usize, low: usize) -> Self {
+        assert!(low < high, "low watermark must be below high");
+        BackpressureGate {
+            state: Mutex::new(State { in_flight: 0, saturated: false }),
+            drained: Condvar::new(),
+            high,
+            low,
+        }
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.state.lock().unwrap().in_flight
+    }
+
+    /// Non-blocking admission of `frames` new frames.
+    pub fn try_admit(&self, frames: usize) -> Admission {
+        let mut s = self.state.lock().unwrap();
+        self.update_saturation(&mut s);
+        if s.saturated || s.in_flight + frames > self.high {
+            s.saturated = true;
+            Admission::Rejected
+        } else {
+            s.in_flight += frames;
+            self.update_saturation(&mut s);
+            Admission::Accepted
+        }
+    }
+
+    /// Blocking admission: waits until the gate drains below low.
+    pub fn admit_blocking(&self, frames: usize) {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            self.update_saturation(&mut s);
+            if !s.saturated && s.in_flight + frames <= self.high {
+                s.in_flight += frames;
+                self.update_saturation(&mut s);
+                return;
+            }
+            s = self.drained.wait(s).unwrap();
+        }
+    }
+
+    /// Mark `frames` frames finished.
+    pub fn release(&self, frames: usize) {
+        let mut s = self.state.lock().unwrap();
+        assert!(s.in_flight >= frames, "release underflow");
+        s.in_flight -= frames;
+        self.update_saturation(&mut s);
+        if !s.saturated {
+            self.drained.notify_all();
+        }
+    }
+
+    fn update_saturation(&self, s: &mut State) {
+        if s.in_flight >= self.high {
+            s.saturated = true;
+        } else if s.in_flight <= self.low {
+            s.saturated = false;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn admits_until_high_watermark() {
+        let g = BackpressureGate::new(10, 4);
+        assert_eq!(g.try_admit(6), Admission::Accepted);
+        assert_eq!(g.try_admit(4), Admission::Accepted);
+        assert_eq!(g.try_admit(1), Admission::Rejected);
+        assert_eq!(g.in_flight(), 10);
+    }
+
+    #[test]
+    fn hysteresis_holds_until_low() {
+        let g = BackpressureGate::new(10, 4);
+        g.try_admit(10);
+        g.release(3); // 7 in flight, still above low → stays saturated
+        assert_eq!(g.try_admit(1), Admission::Rejected);
+        g.release(3); // 4 ≤ low → unsaturated
+        assert_eq!(g.try_admit(1), Admission::Accepted);
+    }
+
+    #[test]
+    fn blocking_admission_wakes_on_drain() {
+        let g = Arc::new(BackpressureGate::new(8, 2));
+        g.try_admit(8);
+        let g2 = Arc::clone(&g);
+        let waiter = std::thread::spawn(move || {
+            g2.admit_blocking(4);
+            g2.in_flight()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        g.release(8); // drain to 0 ≤ low → waiter admitted
+        let seen = waiter.join().unwrap();
+        assert_eq!(seen, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "release underflow")]
+    fn release_underflow_panics() {
+        let g = BackpressureGate::new(4, 1);
+        g.release(1);
+    }
+}

@@ -1,0 +1,210 @@
+//! Dynamic batcher: groups frame jobs into bucket-sized batches for
+//! the executor.
+//!
+//! Policy (the standard serving trade-off):
+//! * flush as soon as `max_batch` jobs are queued (throughput), or
+//! * flush a partial batch once the oldest queued job has waited
+//!   `max_wait` (latency bound), or
+//! * flush whatever is left at shutdown.
+//!
+//! The batcher is a pure state machine (no threads) so it can be
+//! property-tested; the server drives it from its pump thread.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::FrameJob;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Largest batch to emit (the biggest executor bucket).
+    pub max_batch: usize,
+    /// Deadline for partial batches.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A flushed batch of frame jobs.
+#[derive(Debug)]
+pub struct Batch {
+    pub jobs: Vec<FrameJob>,
+    /// Why the batch was emitted (for metrics).
+    pub reason: FlushReason,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushReason {
+    Full,
+    Deadline,
+    Shutdown,
+}
+
+/// The batcher state machine.
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: VecDeque<FrameJob>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch > 0);
+        Batcher { policy, queue: VecDeque::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Enqueue a job; returns a full batch if one is now ready.
+    pub fn push(&mut self, job: FrameJob) -> Option<Batch> {
+        self.queue.push_back(job);
+        if self.queue.len() >= self.policy.max_batch {
+            Some(self.take(self.policy.max_batch, FlushReason::Full))
+        } else {
+            None
+        }
+    }
+
+    /// Check the deadline; returns a partial batch if the oldest job
+    /// has waited past `max_wait`.
+    pub fn poll_deadline(&mut self, now: Instant) -> Option<Batch> {
+        let oldest = self.queue.front()?;
+        if now.duration_since(oldest.submitted_at) >= self.policy.max_wait {
+            let n = self.queue.len().min(self.policy.max_batch);
+            Some(self.take(n, FlushReason::Deadline))
+        } else {
+            None
+        }
+    }
+
+    /// Time until the oldest job's deadline (None when queue empty) —
+    /// lets the pump thread sleep precisely instead of busy-polling.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        let oldest = self.queue.front()?;
+        let waited = now.duration_since(oldest.submitted_at);
+        Some(self.policy.max_wait.saturating_sub(waited))
+    }
+
+    /// Drain everything (shutdown path). May return more than one
+    /// batch worth; callers loop.
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let n = self.queue.len().min(self.policy.max_batch);
+            out.push(self.take(n, FlushReason::Shutdown));
+        }
+        out
+    }
+
+    fn take(&mut self, n: usize, reason: FlushReason) -> Batch {
+        let jobs: Vec<FrameJob> = self.queue.drain(..n).collect();
+        Batch { jobs, reason }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::rng::Rng64;
+    use crate::util::check;
+
+    fn job(id: u64, idx: usize, at: Instant) -> FrameJob {
+        FrameJob {
+            request_id: id,
+            frame_index: idx,
+            llr_block: Vec::new(),
+            pin_state0: idx == 0,
+            submitted_at: at,
+        }
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(1) });
+        let t = Instant::now();
+        assert!(b.push(job(1, 0, t)).is_none());
+        assert!(b.push(job(1, 1, t)).is_none());
+        let batch = b.push(job(1, 2, t)).expect("full");
+        assert_eq!(batch.jobs.len(), 3);
+        assert_eq!(batch.reason, FlushReason::Full);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_flushes_partial() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) });
+        let old = Instant::now() - Duration::from_millis(10);
+        b.push(job(1, 0, old));
+        b.push(job(2, 0, old));
+        let batch = b.poll_deadline(Instant::now()).expect("deadline");
+        assert_eq!(batch.jobs.len(), 2);
+        assert_eq!(batch.reason, FlushReason::Deadline);
+    }
+
+    #[test]
+    fn no_deadline_before_wait() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(10) });
+        b.push(job(1, 0, Instant::now()));
+        assert!(b.poll_deadline(Instant::now()).is_none());
+        assert!(b.next_deadline(Instant::now()).unwrap() > Duration::from_secs(9));
+    }
+
+    #[test]
+    fn flush_all_drains_in_order() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(1) });
+        let t = Instant::now();
+        for i in 0..5 {
+            b.push(job(1, i, t));
+        }
+        // 5 jobs with max_batch 2: push flushed at 2 and 4, leaving 1.
+        assert_eq!(b.len(), 1);
+        let rest = b.flush_all();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].jobs[0].frame_index, 4);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn property_no_job_lost_or_duplicated() {
+        check::forall(
+            "batcher conserves jobs",
+            100,
+            0xBA7C,
+            |rng: &mut Rng64| {
+                let n = rng.gen_range_usize(1, 100);
+                let max_batch = rng.gen_range_usize(1, 12);
+                (n, max_batch)
+            },
+            |&(n, max_batch)| {
+                let mut b = Batcher::new(BatchPolicy {
+                    max_batch,
+                    max_wait: Duration::from_secs(1),
+                });
+                let t = Instant::now();
+                let mut seen: Vec<usize> = Vec::new();
+                for i in 0..n {
+                    if let Some(batch) = b.push(job(1, i, t)) {
+                        assert!(batch.jobs.len() <= max_batch);
+                        seen.extend(batch.jobs.iter().map(|j| j.frame_index));
+                    }
+                }
+                for batch in b.flush_all() {
+                    assert!(batch.jobs.len() <= max_batch);
+                    seen.extend(batch.jobs.iter().map(|j| j.frame_index));
+                }
+                // FIFO order, each job exactly once.
+                assert_eq!(seen, (0..n).collect::<Vec<_>>());
+            },
+        );
+    }
+}

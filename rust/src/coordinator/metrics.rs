@@ -1,0 +1,138 @@
+//! Service metrics: counters, batch occupancy, and latency histograms.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats::{LatencyHistogram, Summary};
+
+/// Shared metrics registry (Mutex-guarded; the hot path touches it once
+/// per batch, not per frame).
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    requests: u64,
+    responses: u64,
+    frames: u64,
+    batches: u64,
+    decoded_bits: u64,
+    rejected: u64,
+    batch_occupancy: Summary,
+    request_latency: LatencyHistogram,
+    batch_exec: Summary,
+}
+
+/// A point-in-time snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub frames: u64,
+    pub batches: u64,
+    pub decoded_bits: u64,
+    pub rejected: u64,
+    pub mean_batch_occupancy: f64,
+    pub p50_latency: Duration,
+    pub p99_latency: Duration,
+    pub mean_batch_exec: Duration,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn on_request(&self) {
+        self.inner.lock().unwrap().requests += 1;
+    }
+
+    pub fn on_reject(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn on_batch(&self, jobs: usize, bucket: usize, exec: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.frames += jobs as u64;
+        m.batch_occupancy.add(jobs as f64 / bucket.max(1) as f64);
+        m.batch_exec.add(exec.as_secs_f64());
+    }
+
+    pub fn on_response(&self, bits: usize, latency_ns: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.responses += 1;
+        m.decoded_bits += bits as u64;
+        m.request_latency.record(latency_ns);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            requests: m.requests,
+            responses: m.responses,
+            frames: m.frames,
+            batches: m.batches,
+            decoded_bits: m.decoded_bits,
+            rejected: m.rejected,
+            mean_batch_occupancy: m.batch_occupancy.mean(),
+            p50_latency: Duration::from_nanos(m.request_latency.quantile_ns(0.5)),
+            p99_latency: Duration::from_nanos(m.request_latency.quantile_ns(0.99)),
+            mean_batch_exec: Duration::from_secs_f64(
+                if m.batch_exec.count() == 0 { 0.0 } else { m.batch_exec.mean() },
+            ),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// One-line human-readable summary.
+    pub fn render(&self) -> String {
+        format!(
+            "req={} resp={} rej={} frames={} batches={} bits={} occ={:.2} \
+             p50={:?} p99={:?} exec={:?}",
+            self.requests,
+            self.responses,
+            self.rejected,
+            self.frames,
+            self.batches,
+            self.decoded_bits,
+            self.mean_batch_occupancy,
+            self.p50_latency,
+            self.p99_latency,
+            self.mean_batch_exec,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.on_request();
+        m.on_request();
+        m.on_batch(6, 8, Duration::from_millis(3));
+        m.on_response(1000, 5_000_000);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.responses, 1);
+        assert_eq!(s.frames, 6);
+        assert_eq!(s.decoded_bits, 1000);
+        assert!((s.mean_batch_occupancy - 0.75).abs() < 1e-9);
+        assert!(s.p50_latency >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn render_contains_fields() {
+        let m = Metrics::new();
+        m.on_request();
+        let line = m.snapshot().render();
+        assert!(line.contains("req=1"));
+        assert!(line.contains("occ="));
+    }
+}

@@ -1,0 +1,23 @@
+//! L3 coordinator — the serving layer: stream chunking, dynamic
+//! batching, backend routing (PJRT artifact or native engine),
+//! backpressure, reassembly, and metrics.
+//!
+//! See `server::DecodeServer` for the thread topology.
+
+pub mod backpressure;
+pub mod batcher;
+pub mod chunker;
+pub mod metrics;
+pub mod reassembler;
+pub mod request;
+pub mod server;
+pub mod worker;
+
+pub use backpressure::{Admission, BackpressureGate};
+pub use batcher::{Batch, BatchPolicy, Batcher, FlushReason};
+pub use chunker::Chunker;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use reassembler::Reassembler;
+pub use request::{DecodeRequest, DecodeResponse, FrameJob, FrameResult, RequestId};
+pub use server::{DecodeServer, ServerConfig};
+pub use worker::{BackendSpec, BatchDecoder, NativeBatchDecoder, PjrtBatchDecoder};

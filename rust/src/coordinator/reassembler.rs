@@ -1,0 +1,138 @@
+//! Reassembler: collects per-frame results and reconstitutes each
+//! request's decoded bit stream (inverse of the chunker).
+
+use std::collections::HashMap;
+
+use super::request::{DecodeResponse, FrameResult, RequestId};
+
+/// Book-keeping for one in-flight request.
+struct Pending {
+    bits: Vec<u8>,
+    /// Total frames expected.
+    frames: usize,
+    /// Frames received so far.
+    received: usize,
+    /// True stream length in stages (for tail truncation).
+    stages: usize,
+    /// Frame output length f.
+    f: usize,
+    submitted_at: std::time::Instant,
+}
+
+/// Collects [`FrameResult`]s until a request completes.
+#[derive(Default)]
+pub struct Reassembler {
+    pending: HashMap<RequestId, Pending>,
+}
+
+impl Reassembler {
+    pub fn new() -> Self {
+        Reassembler { pending: HashMap::new() }
+    }
+
+    /// Register a request before its frames are submitted.
+    pub fn expect(
+        &mut self,
+        id: RequestId,
+        frames: usize,
+        stages: usize,
+        f: usize,
+        submitted_at: std::time::Instant,
+    ) {
+        let prev = self.pending.insert(
+            id,
+            Pending {
+                bits: vec![0u8; frames * f],
+                frames,
+                received: 0,
+                stages,
+                f,
+                submitted_at,
+            },
+        );
+        assert!(prev.is_none(), "duplicate request id {id}");
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Accept one frame result; returns the finished response when this
+    /// was the request's last outstanding frame.
+    pub fn accept(&mut self, fr: FrameResult) -> Option<DecodeResponse> {
+        let p = self
+            .pending
+            .get_mut(&fr.request_id)
+            .unwrap_or_else(|| panic!("frame for unknown request {}", fr.request_id));
+        assert!(fr.frame_index < p.frames, "frame index out of range");
+        assert!(fr.bits.len() >= p.f, "short frame result");
+        let off = fr.frame_index * p.f;
+        p.bits[off..off + p.f].copy_from_slice(&fr.bits[..p.f]);
+        p.received += 1;
+        if p.received < p.frames {
+            return None;
+        }
+        let p = self.pending.remove(&fr.request_id).unwrap();
+        let mut bits = p.bits;
+        bits.truncate(p.stages);
+        Some(DecodeResponse {
+            id: fr.request_id,
+            bits,
+            latency_ns: p.submitted_at.elapsed().as_nanos() as u64,
+            frames: p.frames,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn fr(id: RequestId, idx: usize, fill: u8, f: usize) -> FrameResult {
+        FrameResult { request_id: id, frame_index: idx, bits: vec![fill; f] }
+    }
+
+    #[test]
+    fn completes_after_all_frames() {
+        let mut r = Reassembler::new();
+        r.expect(1, 3, 70, 32, Instant::now());
+        assert!(r.accept(fr(1, 0, 0, 32)).is_none());
+        assert!(r.accept(fr(1, 2, 2, 32)).is_none());
+        let resp = r.accept(fr(1, 1, 1, 32)).expect("complete");
+        assert_eq!(resp.bits.len(), 70); // truncated from 96
+        assert_eq!(&resp.bits[..32], &[0u8; 32][..]);
+        assert_eq!(&resp.bits[32..64], &[1u8; 32][..]);
+        assert_eq!(&resp.bits[64..70], &[2u8; 6][..]);
+        assert_eq!(resp.frames, 3);
+        assert_eq!(r.in_flight(), 0);
+    }
+
+    #[test]
+    fn out_of_order_and_interleaved_requests() {
+        let mut r = Reassembler::new();
+        r.expect(1, 2, 64, 32, Instant::now());
+        r.expect(2, 1, 20, 32, Instant::now());
+        assert!(r.accept(fr(1, 1, 9, 32)).is_none());
+        let resp2 = r.accept(fr(2, 0, 5, 32)).expect("req 2 done");
+        assert_eq!(resp2.bits, vec![5u8; 20]);
+        let resp1 = r.accept(fr(1, 0, 3, 32)).expect("req 1 done");
+        assert_eq!(&resp1.bits[..32], &[3u8; 32][..]);
+        assert_eq!(&resp1.bits[32..], &[9u8; 32][..]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown request")]
+    fn rejects_unknown_request() {
+        let mut r = Reassembler::new();
+        r.accept(fr(99, 0, 0, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate request id")]
+    fn rejects_duplicate_expect() {
+        let mut r = Reassembler::new();
+        r.expect(1, 1, 8, 8, Instant::now());
+        r.expect(1, 1, 8, 8, Instant::now());
+    }
+}

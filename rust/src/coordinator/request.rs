@@ -1,0 +1,64 @@
+//! Request/response types for the decode service.
+
+use std::time::Instant;
+
+use crate::viterbi::StreamEnd;
+
+/// Monotonically increasing request identifier.
+pub type RequestId = u64;
+
+/// One decode request: a stream of soft LLRs.
+#[derive(Debug, Clone)]
+pub struct DecodeRequest {
+    pub id: RequestId,
+    /// Stage-major LLRs (β per trellis stage).
+    pub llrs: Vec<f32>,
+    /// Number of trellis stages (llrs.len() / β).
+    pub stages: usize,
+    pub end: StreamEnd,
+    /// Submission timestamp (set by the server).
+    pub submitted_at: Instant,
+}
+
+impl DecodeRequest {
+    pub fn new(id: RequestId, llrs: Vec<f32>, beta: usize, end: StreamEnd) -> Self {
+        assert_eq!(llrs.len() % beta, 0, "LLR length not a multiple of beta");
+        let stages = llrs.len() / beta;
+        DecodeRequest { id, llrs, stages, end, submitted_at: Instant::now() }
+    }
+}
+
+/// The decoded stream.
+#[derive(Debug, Clone)]
+pub struct DecodeResponse {
+    pub id: RequestId,
+    pub bits: Vec<u8>,
+    /// End-to-end latency in nanoseconds.
+    pub latency_ns: u64,
+    /// Number of frames the stream was split into.
+    pub frames: usize,
+}
+
+/// One frame of work cut from a request (uniform artifact geometry).
+#[derive(Debug, Clone)]
+pub struct FrameJob {
+    pub request_id: RequestId,
+    /// Frame index within the request.
+    pub frame_index: usize,
+    /// Zero-padded LLR block, length L·β.
+    pub llr_block: Vec<f32>,
+    /// Pin the initial path metric to state 0 (stream head).
+    pub pin_state0: bool,
+    /// Submission time of the owning request (for deadline batching).
+    pub submitted_at: Instant,
+}
+
+/// Result of decoding one frame.
+#[derive(Debug, Clone)]
+pub struct FrameResult {
+    pub request_id: RequestId,
+    pub frame_index: usize,
+    /// f decoded bits (possibly over-length for the tail frame; the
+    /// reassembler truncates).
+    pub bits: Vec<u8>,
+}

@@ -1,0 +1,398 @@
+//! The decode server: the L3 coordination layer tying chunker →
+//! batcher → executor → reassembler together.
+//!
+//! Thread topology (all std threads; no async runtime in this image):
+//!
+//! ```text
+//! caller ──submit()──► [pump thread] ──batches──► [executor thread]
+//!    ▲   chunk+admit      batcher                  builds backend,
+//!    │                                             decodes, completes
+//!    └───wait()◄── completion table ◄── reassembler ┘
+//! ```
+//!
+//! The executor thread *owns* the backend (PJRT handles are Rc-based
+//! and must not cross threads); it receives only plain-data batches.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::viterbi::StreamEnd;
+use super::backpressure::{Admission, BackpressureGate};
+use super::batcher::{Batch, BatchPolicy, Batcher};
+use super::chunker::Chunker;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::reassembler::Reassembler;
+use super::request::{DecodeRequest, DecodeResponse, FrameJob, RequestId};
+use super::worker::BackendSpec;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub backend: BackendSpec,
+    pub batch: BatchPolicy,
+    /// Backpressure watermarks (in-flight frames).
+    pub high_watermark: usize,
+    pub low_watermark: usize,
+}
+
+impl ServerConfig {
+    pub fn native_default() -> Self {
+        ServerConfig {
+            backend: BackendSpec::Native {
+                spec: crate::code::CodeSpec::standard_k7(),
+                geo: crate::frames::plan::FrameGeometry::new(256, 20, 45),
+                f0: Some(32),
+            },
+            batch: BatchPolicy::default(),
+            high_watermark: 4096,
+            low_watermark: 1024,
+        }
+    }
+}
+
+enum PumpMsg {
+    Jobs(Vec<FrameJob>),
+    Shutdown,
+}
+
+enum ExecMsg {
+    Batch(Batch),
+    Shutdown,
+}
+
+struct Completion {
+    done: Mutex<HashMap<RequestId, DecodeResponse>>,
+    ready: Condvar,
+}
+
+/// The decode service.
+pub struct DecodeServer {
+    chunker: Chunker,
+    next_id: Mutex<RequestId>,
+    pump_tx: mpsc::Sender<PumpMsg>,
+    completion: Arc<Completion>,
+    gate: Arc<BackpressureGate>,
+    metrics: Arc<Metrics>,
+    reassembler: Arc<Mutex<Reassembler>>,
+    pump: Option<std::thread::JoinHandle<()>>,
+    executor: Option<std::thread::JoinHandle<Result<()>>>,
+    backend_name: Arc<Mutex<String>>,
+}
+
+impl DecodeServer {
+    pub fn start(cfg: ServerConfig) -> Result<Self> {
+        let (spec, geo) = cfg.backend.resolve_geometry().context("resolving backend")?;
+        let chunker = Chunker::new(spec, geo);
+        let metrics = Arc::new(Metrics::new());
+        let gate = Arc::new(BackpressureGate::new(cfg.high_watermark, cfg.low_watermark));
+        let completion = Arc::new(Completion {
+            done: Mutex::new(HashMap::new()),
+            ready: Condvar::new(),
+        });
+        let reassembler = Arc::new(Mutex::new(Reassembler::new()));
+        let backend_name = Arc::new(Mutex::new(String::from("<starting>")));
+
+        let (pump_tx, pump_rx) = mpsc::channel::<PumpMsg>();
+        let (exec_tx, exec_rx) = mpsc::channel::<ExecMsg>();
+
+        // Executor thread: builds the backend, then serves batches.
+        let executor = {
+            let backend_spec = cfg.backend.clone();
+            let completion = Arc::clone(&completion);
+            let reassembler = Arc::clone(&reassembler);
+            let gate = Arc::clone(&gate);
+            let metrics = Arc::clone(&metrics);
+            let backend_name = Arc::clone(&backend_name);
+            std::thread::Builder::new()
+                .name("viterbi-executor".into())
+                .spawn(move || -> Result<()> {
+                    let mut backend = backend_spec.build().context("building backend")?;
+                    *backend_name.lock().unwrap() = backend.name();
+                    let bucket = backend.max_batch();
+                    while let Ok(msg) = exec_rx.recv() {
+                        let batch = match msg {
+                            ExecMsg::Batch(b) => b,
+                            ExecMsg::Shutdown => break,
+                        };
+                        let n = batch.jobs.len();
+                        let t0 = Instant::now();
+                        let results = backend.decode_batch(&batch.jobs)?;
+                        metrics.on_batch(n, bucket, t0.elapsed());
+                        gate.release(n);
+                        let mut done_now = Vec::new();
+                        {
+                            let mut r = reassembler.lock().unwrap();
+                            for fr in results {
+                                if let Some(resp) = r.accept(fr) {
+                                    done_now.push(resp);
+                                }
+                            }
+                        }
+                        if !done_now.is_empty() {
+                            let mut done = completion.done.lock().unwrap();
+                            for resp in done_now {
+                                metrics.on_response(resp.bits.len(), resp.latency_ns);
+                                done.insert(resp.id, resp);
+                            }
+                            completion.ready.notify_all();
+                        }
+                    }
+                    Ok(())
+                })
+                .expect("spawn executor")
+        };
+
+        // Pump thread: batching state machine driven by the job channel.
+        let pump = {
+            let policy = cfg.batch;
+            std::thread::Builder::new()
+                .name("viterbi-pump".into())
+                .spawn(move || {
+                    let mut batcher = Batcher::new(policy);
+                    loop {
+                        let timeout = batcher
+                            .next_deadline(Instant::now())
+                            .unwrap_or(Duration::from_millis(50));
+                        match pump_rx.recv_timeout(timeout) {
+                            Ok(PumpMsg::Jobs(jobs)) => {
+                                for job in jobs {
+                                    if let Some(batch) = batcher.push(job) {
+                                        let _ = exec_tx.send(ExecMsg::Batch(batch));
+                                    }
+                                }
+                            }
+                            Ok(PumpMsg::Shutdown) => {
+                                for batch in batcher.flush_all() {
+                                    let _ = exec_tx.send(ExecMsg::Batch(batch));
+                                }
+                                let _ = exec_tx.send(ExecMsg::Shutdown);
+                                return;
+                            }
+                            Err(mpsc::RecvTimeoutError::Timeout) => {}
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                let _ = exec_tx.send(ExecMsg::Shutdown);
+                                return;
+                            }
+                        }
+                        if let Some(batch) = batcher.poll_deadline(Instant::now()) {
+                            let _ = exec_tx.send(ExecMsg::Batch(batch));
+                        }
+                    }
+                })
+                .expect("spawn pump")
+        };
+
+        Ok(DecodeServer {
+            chunker,
+            next_id: Mutex::new(1),
+            pump_tx,
+            completion,
+            gate,
+            metrics,
+            reassembler,
+            pump: Some(pump),
+            executor: Some(executor),
+            backend_name,
+        })
+    }
+
+    /// The decode geometry (for producing well-formed requests).
+    pub fn chunker(&self) -> &Chunker {
+        &self.chunker
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn backend_name(&self) -> String {
+        self.backend_name.lock().unwrap().clone()
+    }
+
+    pub fn in_flight_frames(&self) -> usize {
+        self.gate.in_flight()
+    }
+
+    /// Submit a decode request (non-blocking admission). Returns the
+    /// request id, or None if backpressure rejected it.
+    pub fn try_submit(&self, llrs: Vec<f32>, end: StreamEnd) -> Option<RequestId> {
+        self.submit_inner(llrs, end, false)
+    }
+
+    /// Submit, blocking if the service is saturated.
+    pub fn submit(&self, llrs: Vec<f32>, end: StreamEnd) -> RequestId {
+        self.submit_inner(llrs, end, true).expect("blocking submit cannot be rejected")
+    }
+
+    fn submit_inner(&self, llrs: Vec<f32>, end: StreamEnd, block: bool) -> Option<RequestId> {
+        let beta = self.chunker.spec.beta as usize;
+        let id = {
+            let mut next = self.next_id.lock().unwrap();
+            let id = *next;
+            *next += 1;
+            id
+        };
+        let req = DecodeRequest::new(id, llrs, beta, end);
+        let jobs = self.chunker.chunk(&req);
+        let n = jobs.len();
+        self.metrics.on_request();
+        if n == 0 {
+            // Empty stream: complete immediately.
+            let resp = DecodeResponse { id, bits: Vec::new(), latency_ns: 0, frames: 0 };
+            self.metrics.on_response(0, 0);
+            self.completion.done.lock().unwrap().insert(id, resp);
+            self.completion.ready.notify_all();
+            return Some(id);
+        }
+        if block {
+            self.gate.admit_blocking(n);
+        } else if self.gate.try_admit(n) == Admission::Rejected {
+            self.metrics.on_reject();
+            return None;
+        }
+        self.reassembler.lock().unwrap().expect(
+            id,
+            n,
+            req.stages,
+            self.chunker.geo.f,
+            req.submitted_at,
+        );
+        self.pump_tx.send(PumpMsg::Jobs(jobs)).expect("pump thread alive");
+        Some(id)
+    }
+
+    /// Block until the response for `id` is ready.
+    pub fn wait(&self, id: RequestId) -> DecodeResponse {
+        let mut done = self.completion.done.lock().unwrap();
+        loop {
+            if let Some(resp) = done.remove(&id) {
+                return resp;
+            }
+            done = self.completion.ready.wait(done).unwrap();
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn decode_blocking(&self, llrs: Vec<f32>, end: StreamEnd) -> DecodeResponse {
+        let id = self.submit(llrs, end);
+        self.wait(id)
+    }
+}
+
+impl Drop for DecodeServer {
+    fn drop(&mut self) {
+        let _ = self.pump_tx.send(PumpMsg::Shutdown);
+        if let Some(p) = self.pump.take() {
+            let _ = p.join();
+        }
+        if let Some(e) = self.executor.take() {
+            match e.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(err)) => eprintln!("executor error at shutdown: {err:#}"),
+                Err(_) => eprintln!("executor panicked"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Rng64;
+    use crate::code::{encode, CodeSpec, Termination};
+    use crate::frames::plan::FrameGeometry;
+
+    fn native_server(max_wait_ms: u64) -> DecodeServer {
+        DecodeServer::start(ServerConfig {
+            backend: BackendSpec::Native {
+                spec: CodeSpec::standard_k5(),
+                geo: FrameGeometry::new(32, 8, 12),
+                f0: Some(8),
+            },
+            batch: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(max_wait_ms),
+            },
+            high_watermark: 256,
+            low_watermark: 64,
+        })
+        .unwrap()
+    }
+
+    fn noiseless_request(seed: u64, n: usize) -> (Vec<u8>, Vec<f32>) {
+        let spec = CodeSpec::standard_k5();
+        let mut rng = Rng64::seeded(seed);
+        let mut bits = vec![0u8; n];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Truncated);
+        let llrs = enc.iter().map(|&b| if b == 0 { 3.0 } else { -3.0 }).collect();
+        (bits, llrs)
+    }
+
+    #[test]
+    fn end_to_end_decode() {
+        let server = native_server(1);
+        let (bits, llrs) = noiseless_request(90, 100);
+        let resp = server.decode_blocking(llrs, StreamEnd::Truncated);
+        assert_eq!(resp.bits, bits);
+        assert_eq!(resp.frames, 4);
+        assert!(resp.latency_ns > 0);
+        let m = server.metrics();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.responses, 1);
+        assert_eq!(m.frames, 4);
+    }
+
+    #[test]
+    fn concurrent_requests_all_complete() {
+        let server = Arc::new(native_server(1));
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let server = Arc::clone(&server);
+            handles.push(std::thread::spawn(move || {
+                let (bits, llrs) = noiseless_request(100 + t, 64 + (t as usize) * 13);
+                let resp = server.decode_blocking(llrs, StreamEnd::Truncated);
+                assert_eq!(resp.bits, bits, "stream {t}");
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = server.metrics();
+        assert_eq!(m.responses, 8);
+        assert_eq!(server.in_flight_frames(), 0);
+        // Batching actually happened: fewer batches than frames.
+        assert!(m.batches < m.frames, "batches {} frames {}", m.batches, m.frames);
+    }
+
+    #[test]
+    fn empty_request_completes_immediately() {
+        let server = native_server(1);
+        let resp = server.decode_blocking(Vec::new(), StreamEnd::Truncated);
+        assert!(resp.bits.is_empty());
+        assert_eq!(resp.frames, 0);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batches() {
+        // A single 1-frame request through a max_batch=4 server must
+        // still complete (deadline path).
+        let server = native_server(1);
+        let (bits, llrs) = noiseless_request(91, 20);
+        let resp = server.decode_blocking(llrs, StreamEnd::Truncated);
+        assert_eq!(resp.bits, bits);
+    }
+
+    #[test]
+    fn backend_name_resolves() {
+        let server = native_server(1);
+        // Give the executor a moment to build.
+        let (_, llrs) = noiseless_request(92, 32);
+        let _ = server.decode_blocking(llrs, StreamEnd::Truncated);
+        assert!(server.backend_name().starts_with("native:"));
+    }
+}

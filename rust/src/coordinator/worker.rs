@@ -1,0 +1,253 @@
+//! Batch decoders: the executor-side backends the router can target.
+//!
+//! A [`BatchDecoder`] lives entirely on the executor thread (the PJRT
+//! handles are `Rc`-based and must not cross threads), so the server
+//! passes a [`BackendSpec`] — plain data — and the executor thread
+//! *builds* its backend after it starts.
+
+use anyhow::{Context, Result};
+
+use crate::code::CodeSpec;
+use crate::frames::plan::{FrameGeometry, FrameSpan};
+use crate::runtime::{ExecutorPool, Manifest, PjrtRuntime};
+use crate::viterbi::{
+    Engine as _, FrameScratch, ParallelTraceback, StartPolicy, StreamEnd, TiledEngine,
+    TracebackMode,
+};
+use super::request::{FrameJob, FrameResult};
+
+/// Plain-data description of a backend (Send-able across threads).
+#[derive(Debug, Clone)]
+pub enum BackendSpec {
+    /// Execute the named AOT artifact family via PJRT.
+    Pjrt { artifact: String, artifact_dir: Option<std::path::PathBuf> },
+    /// Native rust engine with the given configuration.
+    Native {
+        spec: CodeSpec,
+        geo: FrameGeometry,
+        /// None = serial per-frame traceback; Some(f0) = parallel.
+        f0: Option<usize>,
+    },
+}
+
+impl BackendSpec {
+    /// Resolve the decode geometry without constructing the backend
+    /// (the server needs it for chunking before the executor starts).
+    pub fn resolve_geometry(&self) -> Result<(CodeSpec, FrameGeometry)> {
+        match self {
+            BackendSpec::Pjrt { artifact, artifact_dir } => {
+                let dir = artifact_dir.clone().unwrap_or_else(Manifest::default_dir);
+                let manifest = Manifest::load(&dir)?;
+                let meta = manifest
+                    .find(artifact)
+                    .with_context(|| format!("artifact {artifact:?} not in manifest"))?;
+                Ok((meta.spec.clone(), meta.geo))
+            }
+            BackendSpec::Native { spec, geo, .. } => Ok((spec.clone(), *geo)),
+        }
+    }
+
+    /// Build the backend (called on the executor thread).
+    pub fn build(&self) -> Result<Box<dyn BatchDecoder>> {
+        match self {
+            BackendSpec::Pjrt { artifact, artifact_dir } => {
+                let dir = artifact_dir.clone().unwrap_or_else(Manifest::default_dir);
+                let manifest = Manifest::load(&dir)?;
+                let rt = PjrtRuntime::cpu()?;
+                let pool = ExecutorPool::load_family(&rt, &manifest, artifact)?;
+                Ok(Box::new(PjrtBatchDecoder { pool }))
+            }
+            BackendSpec::Native { spec, geo, f0 } => {
+                let mode = match f0 {
+                    None => TracebackMode::FrameSerial,
+                    Some(f0) => TracebackMode::Parallel(ParallelTraceback::new(
+                        *f0,
+                        geo.v2,
+                        StartPolicy::StoredArgmax,
+                    )),
+                };
+                let engine = TiledEngine::new(spec.clone(), *geo, mode);
+                let scratch = FrameScratch::new(spec.num_states(), geo.span());
+                Ok(Box::new(NativeBatchDecoder { engine, scratch, max_batch: 32 }))
+            }
+        }
+    }
+}
+
+/// Executor-side batch decode interface.
+pub trait BatchDecoder {
+    /// Decode a batch of uniform frame jobs.
+    fn decode_batch(&mut self, jobs: &[FrameJob]) -> Result<Vec<FrameResult>>;
+    /// The decode geometry (spec, geo).
+    fn geometry(&self) -> (CodeSpec, FrameGeometry);
+    /// Largest batch worth submitting at once.
+    fn max_batch(&self) -> usize;
+    fn name(&self) -> String;
+}
+
+/// PJRT-artifact backend.
+pub struct PjrtBatchDecoder {
+    pool: ExecutorPool,
+}
+
+impl BatchDecoder for PjrtBatchDecoder {
+    fn decode_batch(&mut self, jobs: &[FrameJob]) -> Result<Vec<FrameResult>> {
+        let meta = self.pool.meta().clone();
+        let beta = meta.spec.beta as usize;
+        let states = meta.states();
+        let mut out = Vec::with_capacity(jobs.len());
+        let mut next = 0usize;
+        while next < jobs.len() {
+            let remaining = jobs.len() - next;
+            let exe = self.pool.bucket_for(remaining);
+            let b = exe.meta().batch;
+            let take = remaining.min(b);
+            let mut llr = vec![0.0f32; b * meta.l * beta];
+            let mut pm0 = vec![0.0f32; b * states];
+            for (slot, job) in jobs[next..next + take].iter().enumerate() {
+                anyhow::ensure!(
+                    job.llr_block.len() == meta.l * beta,
+                    "job block length mismatch"
+                );
+                llr[slot * meta.l * beta..(slot + 1) * meta.l * beta]
+                    .copy_from_slice(&job.llr_block);
+                if job.pin_state0 {
+                    for s in 1..states {
+                        pm0[slot * states + s] = -1e30;
+                    }
+                }
+            }
+            let bits = exe.decode(&llr, &pm0)?;
+            for (slot, job) in jobs[next..next + take].iter().enumerate() {
+                out.push(FrameResult {
+                    request_id: job.request_id,
+                    frame_index: job.frame_index,
+                    bits: bits[slot * meta.geo.f..(slot + 1) * meta.geo.f].to_vec(),
+                });
+            }
+            next += take;
+        }
+        Ok(out)
+    }
+
+    fn geometry(&self) -> (CodeSpec, FrameGeometry) {
+        let m = self.pool.meta();
+        (m.spec.clone(), m.geo)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.pool.max_bucket().meta().batch
+    }
+
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.pool.meta().name)
+    }
+}
+
+/// Native-engine backend (the CPU baseline the router can fall back
+/// to, and the apples-to-apples comparator in the benches).
+pub struct NativeBatchDecoder {
+    engine: TiledEngine,
+    scratch: FrameScratch,
+    max_batch: usize,
+}
+
+impl BatchDecoder for NativeBatchDecoder {
+    fn decode_batch(&mut self, jobs: &[FrameJob]) -> Result<Vec<FrameResult>> {
+        let geo = self.engine.geo;
+        let beta = self.engine.spec().beta as usize;
+        let l = geo.span();
+        let mut out = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            anyhow::ensure!(job.llr_block.len() == l * beta, "job block length mismatch");
+            // Uniform frame: decode the middle f stages of the block.
+            let span = FrameSpan {
+                index: if job.pin_state0 { 0 } else { 1 },
+                start: 0,
+                len: l,
+                out_start: geo.v1,
+                out_len: geo.f,
+            };
+            let mut bits = vec![0u8; geo.f];
+            self.engine.decode_frame(
+                &job.llr_block,
+                &span,
+                usize::MAX, // never the implicit "last" frame
+                StreamEnd::Truncated,
+                &mut self.scratch,
+                &mut bits,
+            );
+            out.push(FrameResult {
+                request_id: job.request_id,
+                frame_index: job.frame_index,
+                bits,
+            });
+        }
+        Ok(out)
+    }
+
+    fn geometry(&self) -> (CodeSpec, FrameGeometry) {
+        (self.engine.spec().clone(), self.engine.geo)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn name(&self) -> String {
+        format!("native:{}", self.engine.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Rng64;
+    use crate::code::{encode, Termination};
+    use crate::coordinator::chunker::Chunker;
+    use crate::coordinator::request::DecodeRequest;
+    use crate::viterbi::StreamEnd;
+
+    #[test]
+    fn native_backend_decodes_jobs() {
+        let spec = CodeSpec::standard_k5();
+        let geo = FrameGeometry::new(32, 8, 12);
+        let backend_spec = BackendSpec::Native { spec: spec.clone(), geo, f0: Some(8) };
+        let (rspec, rgeo) = backend_spec.resolve_geometry().unwrap();
+        assert_eq!(rspec, spec);
+        assert_eq!(rgeo, geo);
+        let mut backend = backend_spec.build().unwrap();
+        assert!(backend.name().starts_with("native:"));
+
+        let mut rng = Rng64::seeded(80);
+        let mut bits = vec![0u8; 96];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Truncated);
+        let llrs: Vec<f32> =
+            enc.iter().map(|&b| if b == 0 { 3.0 } else { -3.0 }).collect();
+        let req = DecodeRequest::new(1, llrs, 2, StreamEnd::Truncated);
+        let jobs = Chunker::new(spec, geo).chunk(&req);
+        let results = backend.decode_batch(&jobs).unwrap();
+        assert_eq!(results.len(), 3);
+        let mut decoded = Vec::new();
+        for r in &results {
+            decoded.extend_from_slice(&r.bits);
+        }
+        assert_eq!(decoded, bits);
+    }
+
+    #[test]
+    fn native_rejects_malformed_job() {
+        let spec = CodeSpec::standard_k5();
+        let geo = FrameGeometry::new(32, 8, 12);
+        let mut backend = BackendSpec::Native { spec, geo, f0: None }.build().unwrap();
+        let bad = FrameJob {
+            request_id: 1,
+            frame_index: 0,
+            llr_block: vec![0.0; 7],
+            pin_state0: true,
+            submitted_at: std::time::Instant::now(),
+        };
+        assert!(backend.decode_batch(&[bad]).is_err());
+    }
+}

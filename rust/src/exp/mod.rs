@@ -1,0 +1,247 @@
+//! Experiment registry: one regenerator per table/figure in the
+//! paper's evaluation section (DESIGN.md §6 maps each to its modules).
+//!
+//! Every experiment prints a paper-style table to stdout and, when
+//! `--out` is given, writes a machine-readable JSON record used by
+//! EXPERIMENTS.md.
+
+pub mod ber_tables;
+pub mod punctured;
+pub mod table1;
+pub mod throughput;
+
+use std::io::Write as _;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Effort level for the sweeps (BER sims dominate the cost).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Effort {
+    /// Reduced grids and bit budgets (~seconds; CI-friendly).
+    Quick,
+    /// The paper's full grids (~minutes).
+    Full,
+}
+
+/// Options shared by all experiments.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    pub effort: Effort,
+    /// Directory for JSON result dumps (None = stdout only).
+    pub out_dir: Option<PathBuf>,
+    /// Worker threads for the sweep harnesses.
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            effort: Effort::Quick,
+            out_dir: None,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            seed: 0x5EED_2020,
+        }
+    }
+}
+
+/// An experiment regenerator.
+pub struct Experiment {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub run: fn(&ExpOptions) -> Result<Json>,
+}
+
+/// All experiments, in paper order.
+pub fn registry() -> Vec<Experiment> {
+    vec![
+        Experiment {
+            id: "table1",
+            title: "Table I — parallelism & global-memory usage per method",
+            run: table1::run,
+        },
+        Experiment {
+            id: "fig9",
+            title: "Fig 9 — effect of v2 on BER (f=256)",
+            run: ber_tables::run_fig9,
+        },
+        Experiment {
+            id: "table2",
+            title: "Table II — Eb/N0 distance vs theory over f × v2",
+            run: ber_tables::run_table2,
+        },
+        Experiment {
+            id: "fig10",
+            title: "Fig 10 — BER over (v2, f0) in parallel traceback",
+            run: ber_tables::run_fig10,
+        },
+        Experiment {
+            id: "table3",
+            title: "Table III — Eb/N0 distance over f0 × v2 (parallel traceback)",
+            run: ber_tables::run_table3,
+        },
+        Experiment {
+            id: "fig11",
+            title: "Fig 11 — traceback start-state policy vs BER",
+            run: ber_tables::run_fig11,
+        },
+        Experiment {
+            id: "table4",
+            title: "Table IV — decoder throughput (Gb/s) over f × v2",
+            run: throughput::run_table4,
+        },
+        Experiment {
+            id: "table5",
+            title: "Table V — throughput (Gb/s) over f0 × v2, parallel traceback",
+            run: throughput::run_table5,
+        },
+        Experiment {
+            id: "punctured",
+            title: "§V-A — punctured rates 2/3 and 3/4 BER vs theory",
+            run: punctured::run,
+        },
+    ]
+}
+
+/// Run one experiment by id (or "all").
+pub fn run_by_id(id: &str, opts: &ExpOptions) -> Result<()> {
+    let reg = registry();
+    if id == "all" {
+        for e in &reg {
+            run_one(e, opts)?;
+        }
+        return Ok(());
+    }
+    let exp = reg
+        .iter()
+        .find(|e| e.id == id)
+        .with_context(|| {
+            let ids: Vec<&str> = reg.iter().map(|e| e.id).collect();
+            format!("unknown experiment {id:?}; available: {ids:?} or 'all'")
+        })?;
+    run_one(exp, opts)
+}
+
+fn run_one(exp: &Experiment, opts: &ExpOptions) -> Result<()> {
+    println!("== {} ==", exp.title);
+    let t0 = std::time::Instant::now();
+    let record = (exp.run)(opts)?;
+    println!("   ({:.1?})", t0.elapsed());
+    if let Some(dir) = &opts.out_dir {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", exp.id));
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", record.render())?;
+        println!("   wrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// Render an aligned text table (first row = header).
+pub fn render_table(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let cols = rows.iter().map(|r| r.len()).max().unwrap();
+    let mut width = vec![0usize; cols];
+    for r in rows {
+        for (i, cell) in r.iter().enumerate() {
+            width[i] = width[i].max(cell.chars().count());
+        }
+    }
+    let mut out = String::new();
+    for (ri, r) in rows.iter().enumerate() {
+        for (i, cell) in r.iter().enumerate() {
+            let pad = width[i] - cell.chars().count();
+            out.push_str("  ");
+            // Right-align numeric cells, left-align the first column.
+            if i == 0 {
+                out.push_str(cell);
+                out.push_str(&" ".repeat(pad));
+            } else {
+                out.push_str(&" ".repeat(pad));
+                out.push_str(cell);
+            }
+        }
+        out.push('\n');
+        if ri == 0 {
+            let total: usize = width.iter().sum::<usize>() + 2 * cols;
+            out.push_str(&"-".repeat(total));
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Format a small positive number like the paper's tables (3 digits).
+pub fn fmt_metric(x: f64) -> String {
+    if !x.is_finite() {
+        return ">range".into();
+    }
+    if x >= 0.01 {
+        format!("{x:.3}")
+    } else {
+        format!("{x:.2e}")
+    }
+}
+
+/// Eb/N0 grid helper.
+pub fn ebn0_grid(lo: f64, hi: f64, step: f64) -> Vec<f64> {
+    let mut v = Vec::new();
+    let mut x = lo;
+    while x <= hi + 1e-9 {
+        v.push((x * 100.0).round() / 100.0);
+        x += step;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique_and_complete() {
+        let reg = registry();
+        let ids: Vec<&str> = reg.iter().map(|e| e.id).collect();
+        for want in [
+            "table1", "fig9", "table2", "fig10", "table3", "fig11", "table4", "table5",
+            "punctured",
+        ] {
+            assert!(ids.contains(&want), "missing {want}");
+        }
+        let mut dedup = ids.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len(), "duplicate ids");
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run_by_id("nope", &ExpOptions::default()).is_err());
+    }
+
+    #[test]
+    fn table_rendering_aligns() {
+        let t = render_table(&[
+            vec!["h1".into(), "header2".into()],
+            vec!["a".into(), "1".into()],
+            vec!["bb".into(), "22".into()],
+        ]);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("header2"));
+        assert!(lines[1].starts_with('-'));
+    }
+
+    #[test]
+    fn grid_and_fmt() {
+        assert_eq!(ebn0_grid(2.0, 3.0, 0.5), vec![2.0, 2.5, 3.0]);
+        assert_eq!(fmt_metric(0.72), "0.720");
+        assert_eq!(fmt_metric(0.0009), "9.00e-4");
+        assert_eq!(fmt_metric(f64::INFINITY), ">range");
+    }
+}

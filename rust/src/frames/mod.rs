@@ -1,0 +1,6 @@
+//! Frame tiling: geometry planning (paper Fig 2), stream chunking into
+//! overlapping frame LLR blocks, and reassembly of decoded bits.
+
+pub mod plan;
+
+pub use plan::{overhead_factor, plan_frames, FrameGeometry, FrameSpan};

@@ -1,0 +1,177 @@
+//! Frame tiling geometry (paper Fig 2): an n-stage stream is split into
+//! frames of `f` decoded stages, each extended by a left overlap `v1`
+//! (path-metric warm-up) and a right overlap `v2` (traceback
+//! convergence). Overlapping stages are decoded but discarded.
+
+/// Tiling parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameGeometry {
+    /// Decoded stages per frame (D in Table I).
+    pub f: usize,
+    /// Left overlap (warm-up) stages.
+    pub v1: usize,
+    /// Right overlap (traceback convergence) stages.
+    pub v2: usize,
+}
+
+impl FrameGeometry {
+    pub fn new(f: usize, v1: usize, v2: usize) -> Self {
+        assert!(f > 0, "frame size must be positive");
+        FrameGeometry { f, v1, v2 }
+    }
+
+    /// Total stages processed per interior frame (D + L in Table I).
+    pub fn span(&self) -> usize {
+        self.v1 + self.f + self.v2
+    }
+}
+
+/// One frame's position within the stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameSpan {
+    /// Frame index.
+    pub index: usize,
+    /// First stage processed (includes left overlap).
+    pub start: usize,
+    /// Number of stages processed.
+    pub len: usize,
+    /// First decoded stage (≥ start).
+    pub out_start: usize,
+    /// Number of decoded stages.
+    pub out_len: usize,
+}
+
+impl FrameSpan {
+    /// Offset of the first decoded stage within the frame.
+    pub fn head(&self) -> usize {
+        self.out_start - self.start
+    }
+
+    /// Stages after the decoded region (the right/traceback overlap).
+    pub fn tail(&self) -> usize {
+        self.len - self.head() - self.out_len
+    }
+}
+
+/// Compute the frame decomposition of an n-stage stream.
+///
+/// Frame i decodes output region [i·f, min((i+1)·f, n)). The first
+/// frame has no left overlap (the encoder start state is known); the
+/// last frame has no right overlap (its traceback starts at the true
+/// stream end).
+pub fn plan_frames(stages: usize, geo: FrameGeometry) -> Vec<FrameSpan> {
+    if stages == 0 {
+        return Vec::new();
+    }
+    let count = (stages + geo.f - 1) / geo.f;
+    let mut spans = Vec::with_capacity(count);
+    for i in 0..count {
+        let out_start = i * geo.f;
+        let out_end = ((i + 1) * geo.f).min(stages);
+        let start = out_start.saturating_sub(geo.v1);
+        let end = (out_end + geo.v2).min(stages);
+        spans.push(FrameSpan {
+            index: i,
+            start,
+            len: end - start,
+            out_start,
+            out_len: out_end - out_start,
+        });
+    }
+    spans
+}
+
+/// Stage-overhead factor of a plan: processed stages / decoded stages.
+/// This is the "(1 + v/f)" work inflation in Table I row (b)/(c).
+pub fn overhead_factor(spans: &[FrameSpan]) -> f64 {
+    let processed: usize = spans.iter().map(|s| s.len).sum();
+    let decoded: usize = spans.iter().map(|s| s.out_len).sum();
+    processed as f64 / decoded as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::rng::Rng64;
+    use crate::util::check;
+
+    #[test]
+    fn covers_stream_exactly_once() {
+        let spans = plan_frames(1000, FrameGeometry::new(256, 20, 20));
+        let mut covered = vec![0u32; 1000];
+        for s in &spans {
+            for t in s.out_start..s.out_start + s.out_len {
+                covered[t] += 1;
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn first_and_last_frames_clip_overlaps() {
+        let spans = plan_frames(1000, FrameGeometry::new(256, 20, 30));
+        assert_eq!(spans[0].start, 0);
+        assert_eq!(spans[0].head(), 0);
+        let last = spans.last().unwrap();
+        assert_eq!(last.start + last.len, 1000);
+        assert_eq!(last.tail(), 0);
+        // Interior frame has both overlaps.
+        assert_eq!(spans[1].head(), 20);
+        assert_eq!(spans[1].tail(), 30);
+        assert_eq!(spans[1].len, 256 + 50);
+    }
+
+    #[test]
+    fn single_frame_stream() {
+        let spans = plan_frames(100, FrameGeometry::new(256, 20, 20));
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].start, 0);
+        assert_eq!(spans[0].len, 100);
+        assert_eq!(spans[0].out_len, 100);
+    }
+
+    #[test]
+    fn empty_stream() {
+        assert!(plan_frames(0, FrameGeometry::new(64, 8, 8)).is_empty());
+    }
+
+    #[test]
+    fn overhead_matches_table1_formula() {
+        // For n >> f with both overlaps, overhead ≈ 1 + (v1+v2)/f.
+        let geo = FrameGeometry::new(128, 16, 16);
+        let spans = plan_frames(128 * 1000, geo);
+        let oh = overhead_factor(&spans);
+        let expect = 1.0 + 32.0 / 128.0;
+        assert!((oh - expect).abs() < 0.01, "overhead {oh} vs {expect}");
+    }
+
+    #[test]
+    fn property_partition_and_bounds() {
+        check::forall(
+            "frame plan partitions the stream",
+            200,
+            0xF00D,
+            |rng: &mut Rng64| {
+                let (f, v1, v2) = check::gen_frame_geometry(rng);
+                let stages = rng.gen_range_usize(1, 2000);
+                (stages, FrameGeometry::new(f, v1, v2))
+            },
+            |&(stages, geo)| {
+                let spans = plan_frames(stages, geo);
+                // Output regions partition [0, stages).
+                let mut next = 0usize;
+                for s in &spans {
+                    assert_eq!(s.out_start, next);
+                    assert!(s.out_len > 0);
+                    // Processed window contains the output window.
+                    assert!(s.start <= s.out_start);
+                    assert!(s.start + s.len >= s.out_start + s.out_len);
+                    assert!(s.start + s.len <= stages);
+                    assert!(s.head() <= geo.v1 && s.tail() <= geo.v2);
+                    next = s.out_start + s.out_len;
+                }
+                assert_eq!(next, stages);
+            },
+        );
+    }
+}

@@ -1,0 +1,32 @@
+//! # viterbi-repro
+//!
+//! Reproduction of *"High-Throughput and Memory-Efficient Parallel
+//! Viterbi Decoder for Convolutional Codes on GPU"* (Mohammadidoost &
+//! Hashemi, 2020) as a three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — SDR decode service: stream chunking into
+//!   overlapping frames, dynamic batching, routing to either the
+//!   AOT-compiled XLA artifact (via PJRT) or the native engines, plus
+//!   the full simulation substrate (encoder, channel, BER harness,
+//!   analytic GPU occupancy model) and the paper's baselines.
+//! * **L2** — `python/compile/model.py`: batched JAX decode graph.
+//! * **L1** — `python/compile/kernels/viterbi_pallas.py`: the unified
+//!   forward+parallel-traceback frame kernel.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index,
+//! and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod ber;
+pub mod channel;
+pub mod cli;
+pub mod code;
+pub mod coordinator;
+pub mod exp;
+pub mod frames;
+pub mod memmodel;
+pub mod runtime;
+pub mod util;
+pub mod viterbi;
+
+/// Crate version, re-exported for the CLI banner.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,244 @@
+//! `viterbi-repro` — CLI entry point.
+//!
+//! ```text
+//! viterbi-repro list                         list experiments
+//! viterbi-repro exp <id|all> [--full] [--out DIR] [--threads N]
+//! viterbi-repro ber [--ebn0 DB] [--bits N] [--engine E]
+//! viterbi-repro demo [--bits N] [--ebn0 DB]  encode→channel→decode roundtrip
+//! viterbi-repro serve [--requests N] [--backend pjrt|native] [--artifact NAME]
+//! viterbi-repro info                         platform + artifact inventory
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use viterbi::ber::{measure_point_parallel, soft_viterbi_ber, BerConfig, DistanceSpectrum};
+use viterbi::channel::{bpsk, llr, AwgnChannel, Rng64};
+use viterbi::cli::Args;
+use viterbi::code::{encode, CodeSpec, Termination};
+use viterbi::coordinator::{BackendSpec, BatchPolicy, DecodeServer, ServerConfig};
+use viterbi::exp::{run_by_id, Effort, ExpOptions};
+use viterbi::frames::plan::FrameGeometry;
+use viterbi::util::bits::count_bit_errors;
+use viterbi::util::threadpool::ThreadPool;
+use viterbi::viterbi::{
+    ParallelTraceback, ScalarEngine, SharedEngine, StartPolicy, StreamEnd, TiledEngine,
+    TracebackMode,
+};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.pos(0) {
+        None | Some("help") => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        Some("list") => cmd_list(),
+        Some("exp") => cmd_exp(&args),
+        Some("ber") => cmd_ber(&args),
+        Some("demo") => cmd_demo(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("info") => cmd_info(),
+        Some(other) => bail!("unknown command {other:?}; try `viterbi-repro help`"),
+    }
+}
+
+const HELP: &str = "\
+viterbi-repro — parallel Viterbi decoder reproduction (rust+JAX+Pallas)
+
+USAGE:
+  viterbi-repro list
+  viterbi-repro exp <id|all> [--full] [--out DIR] [--threads N] [--seed S]
+  viterbi-repro ber [--ebn0 DB] [--engine scalar|tiled|ptb] [--threads N]
+  viterbi-repro demo [--bits N] [--ebn0 DB]
+  viterbi-repro serve [--requests N] [--backend pjrt|native] [--artifact NAME]
+  viterbi-repro info
+";
+
+fn cmd_list() -> Result<()> {
+    for e in viterbi::exp::registry() {
+        println!("  {:10} {}", e.id, e.title);
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    args.check_known(&["full", "quick", "out", "threads", "seed"])?;
+    let id = args.pos(1).context("exp requires an experiment id (see `list`)")?;
+    let mut opts = ExpOptions::default();
+    if args.has("full") {
+        opts.effort = Effort::Full;
+    }
+    if let Some(dir) = args.get("out") {
+        opts.out_dir = Some(dir.into());
+    }
+    opts.threads = args.get_usize("threads", opts.threads)?;
+    opts.seed = args.get_u64("seed", opts.seed)?;
+    run_by_id(id, &opts)
+}
+
+fn cmd_ber(args: &Args) -> Result<()> {
+    args.check_known(&["ebn0", "engine", "threads", "bits", "seed"])?;
+    let ebn0 = args.get_f64("ebn0", 3.0)?;
+    let threads = args.get_usize("threads", 8)?;
+    let spec = CodeSpec::standard_k7();
+    let engine: SharedEngine = match args.get("engine").unwrap_or("scalar") {
+        "scalar" => Arc::new(ScalarEngine::new(spec.clone())),
+        "tiled" => Arc::new(TiledEngine::new(
+            spec.clone(),
+            FrameGeometry::new(256, 20, 20),
+            TracebackMode::FrameSerial,
+        )),
+        "ptb" => Arc::new(TiledEngine::new(
+            spec.clone(),
+            FrameGeometry::new(256, 20, 45),
+            TracebackMode::Parallel(ParallelTraceback::new(32, 45, StartPolicy::StoredArgmax)),
+        )),
+        other => bail!("unknown engine {other:?} (scalar|tiled|ptb)"),
+    };
+    let cfg = BerConfig {
+        max_bits: args.get_u64("bits", 2_000_000)?,
+        seed: args.get_u64("seed", 0xBE12)?,
+        ..BerConfig::default()
+    };
+    let pool = ThreadPool::new(threads);
+    let p = measure_point_parallel(&spec, engine, &cfg, ebn0, &pool);
+    let bound = soft_viterbi_ber(ebn0, 0.5, &DistanceSpectrum::k7_171_133());
+    println!(
+        "Eb/N0={:.2} dB  BER={:.3e}  ({} errors / {} bits, reliable={})  union-bound={:.3e}",
+        p.ebn0_db, p.ber, p.bit_errors, p.bits_tested, p.reliable, bound
+    );
+    Ok(())
+}
+
+fn cmd_demo(args: &Args) -> Result<()> {
+    args.check_known(&["bits", "ebn0", "seed"])?;
+    let n = args.get_usize("bits", 4096)?;
+    let ebn0 = args.get_f64("ebn0", 4.0)?;
+    let spec = CodeSpec::standard_k7();
+    let mut rng = Rng64::seeded(args.get_u64("seed", 1)?);
+
+    let mut msg = vec![0u8; n];
+    rng.fill_bits(&mut msg);
+    let coded = encode(&spec, &msg, Termination::Terminated);
+    println!("encoded {} message bits -> {} coded bits (rate 1/2 + tail)", n, coded.len());
+
+    let ch = AwgnChannel::new(ebn0, 0.5);
+    let rx = ch.transmit(&bpsk::modulate(&coded), &mut rng);
+    let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+    println!("channel: AWGN Eb/N0={ebn0} dB (sigma={:.4})", ch.sigma());
+
+    let engine = TiledEngine::new(
+        spec,
+        FrameGeometry::new(256, 20, 45),
+        TracebackMode::Parallel(ParallelTraceback::new(32, 45, StartPolicy::StoredArgmax)),
+    );
+    use viterbi::viterbi::Engine as _;
+    let t0 = std::time::Instant::now();
+    let out = engine.decode_stream(&llrs, n + 6, StreamEnd::Terminated);
+    let dt = t0.elapsed();
+    let errors = count_bit_errors(&out[..n], &msg);
+    println!(
+        "decoded with {} in {:.2?} ({:.1} Mb/s): {} bit errors (BER {:.2e})",
+        engine.name(),
+        dt,
+        n as f64 / dt.as_secs_f64() / 1e6,
+        errors,
+        errors as f64 / n as f64
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.check_known(&["requests", "backend", "artifact", "bits", "batch-wait-us", "threads", "seed"])?;
+    let requests = args.get_usize("requests", 64)?;
+    let n_bits = args.get_usize("bits", 4096)?;
+    let backend = match args.get("backend").unwrap_or("native") {
+        "pjrt" => BackendSpec::Pjrt {
+            artifact: args.get("artifact").unwrap_or("ptb_f256_v45_b8").to_string(),
+            artifact_dir: None,
+        },
+        "native" => BackendSpec::Native {
+            spec: CodeSpec::standard_k7(),
+            geo: FrameGeometry::new(256, 20, 45),
+            f0: Some(32),
+        },
+        other => bail!("unknown backend {other:?} (pjrt|native)"),
+    };
+    let server = DecodeServer::start(ServerConfig {
+        backend,
+        batch: BatchPolicy {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_micros(args.get_u64("batch-wait-us", 2000)?),
+        },
+        high_watermark: 4096,
+        low_watermark: 1024,
+    })?;
+
+    // Generate noisy requests up front.
+    let spec = server.chunker().spec.clone();
+    let rate = spec.rate();
+    let mut rng = Rng64::seeded(args.get_u64("seed", 7)?);
+    let ch = AwgnChannel::new(4.0, rate);
+    let mut payloads = Vec::new();
+    for _ in 0..requests {
+        let mut msg = vec![0u8; n_bits];
+        rng.fill_bits(&mut msg);
+        let coded = encode(&spec, &msg, Termination::Truncated);
+        let rx = ch.transmit(&bpsk::modulate(&coded), &mut rng);
+        payloads.push((msg, llr::llrs_from_samples(&rx, ch.sigma())));
+    }
+
+    println!("serving {requests} requests of {n_bits} bits each…");
+    let t0 = std::time::Instant::now();
+    let ids: Vec<_> = payloads
+        .iter()
+        .map(|(_, llrs)| server.submit(llrs.clone(), StreamEnd::Truncated))
+        .collect();
+    let mut total_errors = 0usize;
+    for (id, (msg, _)) in ids.into_iter().zip(&payloads) {
+        let resp = server.wait(id);
+        total_errors += count_bit_errors(&resp.bits[..msg.len()], msg);
+    }
+    let dt = t0.elapsed();
+    let total_bits = requests * n_bits;
+    println!(
+        "backend={} decoded {} bits in {:.2?} -> {:.1} Mb/s, BER {:.2e}",
+        server.backend_name(),
+        total_bits,
+        dt,
+        total_bits as f64 / dt.as_secs_f64() / 1e6,
+        total_errors as f64 / total_bits as f64,
+    );
+    println!("metrics: {}", server.metrics().render());
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("viterbi-repro v{}", viterbi::VERSION);
+    match viterbi::runtime::open_default_manifest() {
+        Ok(m) => {
+            println!("artifacts ({}):", m.dir.display());
+            for a in &m.artifacts {
+                println!(
+                    "  {:24} kind={:?} batch={:<3} L={:<4} f={} v1={} v2={} f0={} k={}",
+                    a.name, a.kind, a.batch, a.l, a.geo.f, a.geo.v1, a.geo.v2, a.f0, a.spec.k
+                );
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e:#})"),
+    }
+    match viterbi::runtime::PjrtRuntime::cpu() {
+        Ok(rt) => println!("pjrt platform: {}", rt.platform()),
+        Err(e) => println!("pjrt: unavailable ({e:#})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! Analytic GPU memory & occupancy model.
+//!
+//! The paper's core argument is *memory-driven*: the unified kernel
+//! keeps all intermediate data (branch metrics, path metrics, survivor
+//! paths) in shared memory, so (i) global-memory traffic for survivors
+//! disappears (Table I) and (ii) throughput becomes a function of how
+//! many blocks fit per SM given their shared-memory footprint. This
+//! module reproduces that arithmetic with V100 parameters, yielding
+//! Table I and the predicted *shape* of Tables IV/V on the paper's own
+//! hardware — our measured CPU numbers are reported next to these
+//! predictions in EXPERIMENTS.md.
+
+pub mod occupancy;
+pub mod smem;
+
+pub use occupancy::{GpuParams, OccupancyModel, ThroughputEstimate};
+pub use smem::{global_memory_table, FootprintBreakdown, Method, SmemLayout};

@@ -1,0 +1,259 @@
+//! Shared-memory footprint accounting (paper §IV-B/C/F) and the
+//! global-memory comparison of Table I.
+//!
+//! All sizes are in bytes for one frame-processing block, for a code
+//! with `s = 2^{k−1}` states and β output lanes, frame geometry
+//! (f, v1, v2) and parallel-traceback subframe size f0.
+
+use crate::frames::plan::FrameGeometry;
+
+/// The three method families compared in Table I.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Refs [2]-[3]: one frame = whole stream, serial traceback.
+    WholeStream,
+    /// Refs [4]-[10]: tiled frames, survivors in global memory,
+    /// serial per-frame traceback.
+    TiledGlobal,
+    /// The paper: unified kernel, survivors in shared memory,
+    /// parallel traceback.
+    Unified,
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::WholeStream => "(a) refs [2]-[3]",
+            Method::TiledGlobal => "(b) refs [4]-[10]",
+            Method::Unified => "(c) proposed",
+        }
+    }
+}
+
+/// Byte-level breakdown of one block's shared-memory footprint under
+/// the paper's §IV-B/§IV-C/§IV-F optimizations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FootprintBreakdown {
+    /// De-punctured LLR frame: β · span · 4 B (f32).
+    pub llr_bytes: usize,
+    /// Branch metrics after the repetitive-pattern + complement-halving
+    /// optimizations: 2^{β−1} · S · 4 B with stage sub-folding factor S
+    /// (S = span when not folded).
+    pub branch_metric_bytes: usize,
+    /// Path metrics: two ping-pong rows of s f32 (σ needs only the
+    /// previous stage, §IV-C).
+    pub path_metric_bytes: usize,
+    /// Survivor decisions: 1 bit per state per stage, bit-packed.
+    pub survivor_bytes: usize,
+    /// Parallel-traceback boundary states: one u32 per subframe.
+    pub boundary_bytes: usize,
+}
+
+impl FootprintBreakdown {
+    pub fn total(&self) -> usize {
+        self.llr_bytes
+            + self.branch_metric_bytes
+            + self.path_metric_bytes
+            + self.survivor_bytes
+            + self.boundary_bytes
+    }
+}
+
+/// Shared-memory layout calculator for one frame block.
+#[derive(Debug, Clone, Copy)]
+pub struct SmemLayout {
+    pub k: u32,
+    pub beta: u32,
+    pub geo: FrameGeometry,
+    /// Subframe size for parallel traceback (None = serial traceback).
+    pub f0: Option<usize>,
+    /// Warp-efficient sub-folding factor S (§IV-B): branch metrics are
+    /// produced and consumed in S-stage slices instead of all at once.
+    pub fold_stages: Option<usize>,
+    /// Array-lifetime reuse (§IV-F): overlap the de-punctured-frame
+    /// array with the survivor array, and boundary states with PM.
+    pub reuse_arrays: bool,
+}
+
+impl SmemLayout {
+    pub fn states(&self) -> usize {
+        1usize << (self.k - 1)
+    }
+
+    pub fn span(&self) -> usize {
+        self.geo.span()
+    }
+
+    /// Naive footprint (paper eq. 6 for branch metrics; full survivor
+    /// and PM matrices, no optimizations) — the strawman.
+    pub fn naive(&self) -> FootprintBreakdown {
+        let s = self.states();
+        let span = self.span();
+        FootprintBreakdown {
+            llr_bytes: self.beta as usize * span * 4,
+            // eq. (6): 2^k × span entries (both branches per state).
+            branch_metric_bytes: 2 * s * span * 4,
+            path_metric_bytes: s * span * 4,
+            // one byte per (state, stage) predecessor index.
+            survivor_bytes: s * span,
+            boundary_bytes: 0,
+        }
+    }
+
+    /// Optimized footprint with the paper's §IV-B/C/F strategies plus
+    /// our bit-packed survivors (the Pallas kernel's layout).
+    pub fn optimized(&self) -> FootprintBreakdown {
+        let s = self.states();
+        let span = self.span();
+        let fold = self.fold_stages.unwrap_or(span).min(span);
+        // eq. (9): 2^{β−1} unique metrics per stage, folded to S stages.
+        let branch_metric_bytes = (1usize << (self.beta - 1)) * fold * 4;
+        let path_metric_bytes = 2 * s * 4; // ping-pong rows (§IV-C)
+        let survivor_bytes = (s + 7) / 8 * span; // 1 bit/state/stage
+        let n_sub = match self.f0 {
+            Some(f0) => (self.geo.f + f0 - 1) / f0,
+            None => 0,
+        };
+        let llr_bytes = self.beta as usize * span * 4;
+        let boundary_bytes = n_sub * 4;
+        let mut b = FootprintBreakdown {
+            llr_bytes,
+            branch_metric_bytes,
+            path_metric_bytes,
+            survivor_bytes,
+            boundary_bytes,
+        };
+        if self.reuse_arrays {
+            // §IV-F: survivor array shares storage with the de-punctured
+            // frame (their lifetimes are disjoint: the frame is consumed
+            // as survivors are produced, stage by stage, within a fold
+            // slice), and boundary states share with a PM row.
+            let shared = b.llr_bytes.max(b.survivor_bytes);
+            b.survivor_bytes = shared;
+            b.llr_bytes = 0;
+            b.boundary_bytes = 0; // folded into PM row slack
+        }
+        b
+    }
+}
+
+/// Global-memory usage for intermediate (survivor) data per Table I,
+/// in *entries* as the paper states them (O-notation made concrete).
+///
+/// Returns (frames, frame_size_stages, parallelism_pm, parallelism_tb,
+/// global_entries) for a stream of `n` stages.
+pub fn global_memory_table(
+    method: Method,
+    k: u32,
+    n: usize,
+    geo: FrameGeometry,
+    f0: Option<usize>,
+) -> (usize, usize, usize, usize, usize) {
+    let s = 1usize << (k - 1);
+    let v = geo.v1 + geo.v2;
+    match method {
+        Method::WholeStream => (1, n, s, 1, s * n),
+        Method::TiledGlobal => {
+            let frames = (n + geo.f - 1) / geo.f;
+            // Table I row (b): O(2^{K−1} N (1 + 2L/D)); the paper's L is
+            // the overlap length per side.
+            let entries = s * n * (geo.f + 2 * v) / geo.f;
+            (frames, geo.f + 2 * v, s, 1, entries)
+        }
+        Method::Unified => {
+            let frames = (n + geo.f - 1) / geo.f;
+            let tb_par = match f0 {
+                Some(f0) => (geo.f + f0 - 1) / f0,
+                None => 1,
+            };
+            (frames, geo.f + v, s, tb_par, 0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> SmemLayout {
+        SmemLayout {
+            k: 7,
+            beta: 2,
+            geo: FrameGeometry::new(256, 20, 45),
+            f0: Some(32),
+            fold_stages: None,
+            reuse_arrays: false,
+        }
+    }
+
+    #[test]
+    fn optimized_is_much_smaller_than_naive() {
+        let l = layout();
+        let naive = l.naive().total();
+        let opt = l.optimized().total();
+        assert!(
+            opt * 10 < naive,
+            "optimized {opt} B should be ≥10× below naive {naive} B"
+        );
+    }
+
+    #[test]
+    fn branch_metric_halving() {
+        // eq. (7) vs eq. (9): complement halving exactly halves the BM
+        // array for β=2.
+        let mut l = layout();
+        l.fold_stages = None;
+        let full_patterns = (1usize << l.beta) * l.span() * 4;
+        assert_eq!(l.optimized().branch_metric_bytes * 2, full_patterns);
+    }
+
+    #[test]
+    fn folding_shrinks_bm() {
+        let mut l = layout();
+        l.fold_stages = Some(32);
+        let folded = l.optimized().branch_metric_bytes;
+        l.fold_stages = None;
+        let unfolded = l.optimized().branch_metric_bytes;
+        assert_eq!(folded, 32 * 2 * 4);
+        assert!(folded < unfolded);
+    }
+
+    #[test]
+    fn survivors_bitpacked() {
+        let l = layout();
+        // 64 states → 8 B per stage.
+        assert_eq!(l.optimized().survivor_bytes, 8 * l.span());
+    }
+
+    #[test]
+    fn reuse_eliminates_llr_array() {
+        let mut l = layout();
+        l.reuse_arrays = true;
+        let b = l.optimized();
+        assert_eq!(b.llr_bytes, 0);
+        assert_eq!(b.boundary_bytes, 0);
+        // Shared array is the max of the two lifetimes.
+        assert_eq!(b.survivor_bytes, (2 * l.span() * 4).max(8 * l.span()));
+    }
+
+    #[test]
+    fn table1_proposed_uses_no_global_memory() {
+        let geo = FrameGeometry::new(256, 20, 20);
+        let (_, _, pm_par, tb_par, global) =
+            global_memory_table(Method::Unified, 7, 1 << 20, geo, Some(32));
+        assert_eq!(global, 0);
+        assert_eq!(pm_par, 64);
+        assert_eq!(tb_par, 8);
+    }
+
+    #[test]
+    fn table1_ordering() {
+        let geo = FrameGeometry::new(256, 20, 20);
+        let n = 1 << 20;
+        let (_, _, _, _, ga) = global_memory_table(Method::WholeStream, 7, n, geo, None);
+        let (_, _, _, _, gb) = global_memory_table(Method::TiledGlobal, 7, n, geo, None);
+        let (_, _, _, _, gc) = global_memory_table(Method::Unified, 7, n, geo, Some(32));
+        assert!(gb > ga, "tiled stores overlaps too");
+        assert_eq!(gc, 0);
+    }
+}

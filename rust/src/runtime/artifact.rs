@@ -1,0 +1,247 @@
+//! AOT artifact manifest: metadata for every compiled HLO module
+//! emitted by `python/compile/aot.py` (see DESIGN.md §8).
+//!
+//! Manifest line format (whitespace-separated, `#` comments):
+//!
+//! ```text
+//! name kind batch L f v1 v2 f0 k beta g0 g1 ...
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::code::CodeSpec;
+use crate::frames::plan::FrameGeometry;
+
+/// Graph variant recorded in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// The unified Pallas kernel (serial when f0 = f).
+    Unified,
+    /// The pure-jnp tiled baseline graph.
+    Ref,
+}
+
+/// Metadata for one compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// Frames per execution (static batch).
+    pub batch: usize,
+    /// Stages per frame (v1 + f + v2).
+    pub l: usize,
+    pub geo: FrameGeometry,
+    /// Parallel-traceback subframe size (= f for serial).
+    pub f0: usize,
+    pub spec: CodeSpec,
+    /// Path of the `.hlo.txt` file.
+    pub path: PathBuf,
+}
+
+impl ArtifactMeta {
+    /// Number of trellis states of the artifact's code.
+    pub fn states(&self) -> usize {
+        self.spec.num_states()
+    }
+
+    /// f32 elements of the LLR input (B · L · β).
+    pub fn llr_len(&self) -> usize {
+        self.batch * self.l * self.spec.beta as usize
+    }
+
+    /// f32 elements of the pm0 input (B · S).
+    pub fn pm0_len(&self) -> usize {
+        self.batch * self.states()
+    }
+
+    /// i32 elements of the output (B · f).
+    pub fn out_len(&self) -> usize {
+        self.batch * self.geo.f
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading manifest {}", mpath.display()))?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            artifacts.push(
+                parse_line(line, dir)
+                    .with_context(|| format!("manifest line {}", lineno + 1))?,
+            );
+        }
+        if artifacts.is_empty() {
+            bail!("manifest {} lists no artifacts", mpath.display());
+        }
+        Ok(Manifest { artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// Default artifact directory: `$VITERBI_ARTIFACTS` or `artifacts/`
+    /// relative to the workspace root.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("VITERBI_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All artifacts that decode the same configuration, keyed for
+    /// batch-bucket routing: same kind/geometry/f0/code, any batch.
+    pub fn batch_family(&self, like: &ArtifactMeta) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> = self
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == like.kind
+                    && a.geo == like.geo
+                    && a.f0 == like.f0
+                    && a.spec == like.spec
+            })
+            .collect();
+        v.sort_by_key(|a| a.batch);
+        v
+    }
+}
+
+fn parse_line(line: &str, dir: &Path) -> Result<ArtifactMeta> {
+    let tok: Vec<&str> = line.split_whitespace().collect();
+    if tok.len() < 12 {
+        bail!("expected ≥12 fields, got {}: {line:?}", tok.len());
+    }
+    let name = tok[0].to_string();
+    let kind = match tok[1] {
+        "unified" => ArtifactKind::Unified,
+        "ref" => ArtifactKind::Ref,
+        other => bail!("unknown artifact kind {other:?}"),
+    };
+    let nums: Vec<usize> = tok[2..10]
+        .iter()
+        .map(|s| s.parse::<usize>().with_context(|| format!("field {s:?}")))
+        .collect::<Result<_>>()?;
+    let (batch, l, f, v1, v2, f0, k, beta) =
+        (nums[0], nums[1], nums[2], nums[3], nums[4], nums[5], nums[6], nums[7]);
+    if tok.len() != 10 + beta {
+        bail!("expected {beta} generators, got {}", tok.len() - 10);
+    }
+    let generators: Vec<u32> = tok[10..10 + beta]
+        .iter()
+        .map(|s| u32::from_str_radix(s, 8).with_context(|| format!("octal generator {s:?}")))
+        .collect::<Result<_>>()?;
+    let spec = CodeSpec::new(k as u32, generators);
+    if l != v1 + f + v2 {
+        bail!("inconsistent geometry: L={l} != v1+f+v2={}", v1 + f + v2);
+    }
+    let path = dir.join(format!("{name}.hlo.txt"));
+    if !path.exists() {
+        bail!("artifact file missing: {}", path.display());
+    }
+    Ok(ArtifactMeta {
+        name,
+        kind,
+        batch,
+        l,
+        geo: FrameGeometry::new(f, v1, v2),
+        f0,
+        spec,
+        path,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str, files: &[&str]) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), body).unwrap();
+        for f in files {
+            std::fs::write(dir.join(format!("{f}.hlo.txt")), "HloModule stub").unwrap();
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("viterbi-manifest-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let d = tmpdir("ok");
+        write_manifest(
+            &d,
+            "# comment\nfoo unified 8 296 256 20 20 256 7 2 171 133\n",
+            &["foo"],
+        );
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.batch, 8);
+        assert_eq!(a.l, 296);
+        assert_eq!(a.geo.f, 256);
+        assert_eq!(a.spec.generators, vec![0o171, 0o133]);
+        assert_eq!(a.llr_len(), 8 * 296 * 2);
+        assert_eq!(a.pm0_len(), 8 * 64);
+        assert_eq!(a.out_len(), 8 * 256);
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        let d = tmpdir("badgeo");
+        write_manifest(&d, "foo unified 8 300 256 20 20 256 7 2 171 133\n", &["foo"]);
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        let d = tmpdir("nofile");
+        write_manifest(&d, "foo unified 8 296 256 20 20 256 7 2 171 133\n", &[]);
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn batch_family_sorted() {
+        let d = tmpdir("family");
+        write_manifest(
+            &d,
+            "a unified 8 296 256 20 20 32 7 2 171 133\n\
+             b unified 1 296 256 20 20 32 7 2 171 133\n\
+             c unified 32 296 256 20 20 32 7 2 171 133\n\
+             other unified 8 296 256 20 20 256 7 2 171 133\n",
+            &["a", "b", "c", "other"],
+        );
+        let m = Manifest::load(&d).unwrap();
+        let fam = m.batch_family(m.find("a").unwrap());
+        let batches: Vec<usize> = fam.iter().map(|a| a.batch).collect();
+        assert_eq!(batches, vec![1, 8, 32]);
+    }
+
+    #[test]
+    fn find_by_name() {
+        let d = tmpdir("find");
+        write_manifest(&d, "zzz ref 2 52 32 8 12 8 5 2 23 35\n", &["zzz"]);
+        let m = Manifest::load(&d).unwrap();
+        assert!(m.find("zzz").is_some());
+        assert!(m.find("nope").is_none());
+        assert_eq!(m.find("zzz").unwrap().kind, ArtifactKind::Ref);
+    }
+}

@@ -1,0 +1,128 @@
+//! [`PjrtEngine`] — the AOT-artifact-backed stream decoder, exposing
+//! the same [`Engine`] interface as the native decoders so the BER
+//! harness, benches, and coordinator can route to it interchangeably.
+//!
+//! Frames here are *uniform*: every frame spans exactly L = v1 + f + v2
+//! stages (the artifact's static shape). Stream edges are padded with
+//! zero LLRs, which are metric-neutral (branch metrics 0 ⇒ equal path
+//! metrics), reproducing the "unknown history" initial condition.
+
+use anyhow::Result;
+
+use crate::code::CodeSpec;
+use crate::viterbi::{Engine, StreamEnd};
+use super::executor::ExecutorPool;
+
+/// Stream decoder over an [`ExecutorPool`].
+pub struct PjrtEngine {
+    pool: ExecutorPool,
+    name: String,
+}
+
+impl PjrtEngine {
+    pub fn new(pool: ExecutorPool) -> Self {
+        let m = pool.meta();
+        let name = format!(
+            "pjrt[{} f={} v1={} v2={} f0={} buckets={:?}]",
+            m.name,
+            m.geo.f,
+            m.geo.v1,
+            m.geo.v2,
+            m.f0,
+            pool.bucket_sizes()
+        );
+        PjrtEngine { pool, name }
+    }
+
+    pub fn pool(&self) -> &ExecutorPool {
+        &self.pool
+    }
+
+    /// Build the uniform padded LLR block for stream frame `index`
+    /// (stages `[index·f − v1, index·f + f + v2)`, zero-padded outside
+    /// `[0, stages)`).
+    pub fn frame_block(&self, llrs: &[f32], stages: usize, index: usize, out: &mut [f32]) {
+        let m = self.pool.meta();
+        let beta = m.spec.beta as usize;
+        debug_assert_eq!(out.len(), m.l * beta);
+        out.iter_mut().for_each(|x| *x = 0.0);
+        let start = index as isize * m.geo.f as isize - m.geo.v1 as isize;
+        for row in 0..m.l {
+            let t = start + row as isize;
+            if t >= 0 && (t as usize) < stages {
+                let src = t as usize * beta;
+                out[row * beta..(row + 1) * beta].copy_from_slice(&llrs[src..src + beta]);
+            }
+        }
+    }
+
+    /// Decode a whole stream through the artifact, batching frames into
+    /// the pool's buckets. Returns decoded bits (length `stages`).
+    pub fn decode_stream_result(&self, llrs: &[f32], stages: usize) -> Result<Vec<u8>> {
+        let m = self.pool.meta();
+        let beta = m.spec.beta as usize;
+        anyhow::ensure!(llrs.len() == stages * beta, "llr length mismatch");
+        if stages == 0 {
+            return Ok(Vec::new());
+        }
+        let f = m.geo.f;
+        let n_frames = (stages + f - 1) / f;
+        let states = m.states();
+        let mut out = vec![0u8; n_frames * f];
+
+        let mut next = 0usize;
+        while next < n_frames {
+            let remaining = n_frames - next;
+            let exe = self.pool.bucket_for(remaining);
+            let b = exe.meta().batch;
+            let take = remaining.min(b);
+            let mut llr_block = vec![0.0f32; b * m.l * beta];
+            let mut pm0 = vec![0.0f32; b * states];
+            for slot in 0..take {
+                let frame_idx = next + slot;
+                self.frame_block(
+                    llrs,
+                    stages,
+                    frame_idx,
+                    &mut llr_block[slot * m.l * beta..(slot + 1) * m.l * beta],
+                );
+                if frame_idx == 0 {
+                    // Pin the stream head to encoder state 0.
+                    for s in 1..states {
+                        pm0[slot * states + s] = -1e30;
+                    }
+                }
+            }
+            let bits = exe.decode(&llr_block, &pm0)?;
+            out[next * f..(next + take) * f].copy_from_slice(&bits[..take * f]);
+            next += take;
+        }
+        out.truncate(stages);
+        Ok(out)
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn spec(&self) -> &CodeSpec {
+        &self.pool.meta().spec
+    }
+
+    /// `end` is accepted for interface parity; the artifact always
+    /// starts its final traceback from the best metric (the terminated
+    /// state-0 start differs only in the last ≲ k·5 stages, which the
+    /// zero-LLR tail padding already dominates).
+    fn decode_stream(&self, llrs: &[f32], stages: usize, _end: StreamEnd) -> Vec<u8> {
+        self.decode_stream_result(llrs, stages)
+            .expect("PJRT decode failed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-backed integration tests live in rust/tests/runtime_pjrt.rs;
+    // frame_block geometry is covered there against the native chunker.
+}

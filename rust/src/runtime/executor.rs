@@ -1,0 +1,196 @@
+//! PJRT execution of the AOT decode artifacts.
+//!
+//! One [`DecoderExecutable`] wraps one compiled HLO module (one
+//! (config, batch) pair); [`ExecutorPool`] holds the batch-bucket
+//! family the coordinator routes over. Compilation happens once at
+//! load; the serve path is `execute → to_literal → to_vec` only.
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{ArtifactMeta, Manifest};
+
+/// Shared PJRT CPU client (one per process).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact.
+    pub fn load(&self, meta: &ArtifactMeta) -> Result<DecoderExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", meta.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {}", meta.name))?;
+        Ok(DecoderExecutable { meta: meta.clone(), exe: Mutex::new(exe) })
+    }
+}
+
+/// One compiled decode executable (one static batch size).
+pub struct DecoderExecutable {
+    meta: ArtifactMeta,
+    // The xla crate's PjRtLoadedExecutable is not Sync; serialize
+    // executions per executable (the pool holds one per bucket and the
+    // coordinator runs one executor thread per bucket anyway).
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+}
+
+impl DecoderExecutable {
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Decode one batch of frames.
+    ///
+    /// * `llrs` — `batch · L · β` f32, frame-major, stage-major within
+    ///   a frame, lane-minor (the layout every other engine uses).
+    /// * `pm0` — `batch · S` f32 initial path-metric rows.
+    ///
+    /// Returns `batch · f` decoded bits.
+    pub fn decode(&self, llrs: &[f32], pm0: &[f32]) -> Result<Vec<u8>> {
+        let m = &self.meta;
+        if llrs.len() != m.llr_len() {
+            bail!("llr length {} != expected {}", llrs.len(), m.llr_len());
+        }
+        if pm0.len() != m.pm0_len() {
+            bail!("pm0 length {} != expected {}", pm0.len(), m.pm0_len());
+        }
+        let beta = m.spec.beta as usize;
+        let x = xla::Literal::vec1(llrs)
+            .reshape(&[m.batch as i64, m.l as i64, beta as i64])
+            .context("reshaping llr literal")?;
+        let y = xla::Literal::vec1(pm0)
+            .reshape(&[m.batch as i64, m.states() as i64])
+            .context("reshaping pm0 literal")?;
+        let exe = self.exe.lock().unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&[x, y])
+            .with_context(|| format!("executing {}", m.name))?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        drop(exe);
+        // aot.py lowers with return_tuple=True → 1-tuple of s32[B,f].
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let vals = out.to_vec::<i32>().context("reading result values")?;
+        if vals.len() != m.out_len() {
+            bail!("output length {} != expected {}", vals.len(), m.out_len());
+        }
+        Ok(vals.into_iter().map(|v| (v & 1) as u8).collect())
+    }
+
+    /// Build a uniform pm0 buffer (all states equal), optionally
+    /// pinning frame 0 to encoder state 0 (stream head).
+    pub fn uniform_pm0(&self, pin_first: bool) -> Vec<f32> {
+        uniform_pm0(self.meta.batch, self.meta.states(), pin_first)
+    }
+}
+
+/// All-equal initial path metrics with optional state-0 pin on frame 0.
+pub fn uniform_pm0(batch: usize, states: usize, pin_first: bool) -> Vec<f32> {
+    let mut pm0 = vec![0.0f32; batch * states];
+    if pin_first && batch > 0 {
+        // Match python uniform_pm0: -1e30 on non-zero states.
+        for s in 1..states {
+            pm0[s] = -1e30;
+        }
+    }
+    pm0
+}
+
+/// The batch-bucket family of executables for one decode config.
+pub struct ExecutorPool {
+    /// Sorted ascending by batch size.
+    buckets: Vec<DecoderExecutable>,
+}
+
+impl ExecutorPool {
+    /// Load every artifact in `metas` (must share config, differ in
+    /// batch).
+    pub fn load(rt: &PjrtRuntime, metas: &[&ArtifactMeta]) -> Result<Self> {
+        if metas.is_empty() {
+            bail!("executor pool needs at least one artifact");
+        }
+        let mut buckets = metas
+            .iter()
+            .map(|m| rt.load(m))
+            .collect::<Result<Vec<_>>>()?;
+        buckets.sort_by_key(|e| e.meta().batch);
+        Ok(ExecutorPool { buckets })
+    }
+
+    /// Load the whole batch family of the named artifact from a
+    /// manifest.
+    pub fn load_family(rt: &PjrtRuntime, manifest: &Manifest, name: &str) -> Result<Self> {
+        let like = manifest
+            .find(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?;
+        let family = manifest.batch_family(like);
+        Self::load(rt, &family)
+    }
+
+    pub fn bucket_sizes(&self) -> Vec<usize> {
+        self.buckets.iter().map(|e| e.meta().batch).collect()
+    }
+
+    /// Smallest bucket that fits `frames` frames (or the largest bucket
+    /// if none fits — the caller splits).
+    pub fn bucket_for(&self, frames: usize) -> &DecoderExecutable {
+        self.buckets
+            .iter()
+            .find(|e| e.meta().batch >= frames)
+            .unwrap_or_else(|| self.buckets.last().unwrap())
+    }
+
+    /// Largest bucket (used to split oversize batches).
+    pub fn max_bucket(&self) -> &DecoderExecutable {
+        self.buckets.last().unwrap()
+    }
+
+    /// Geometry shared by the family.
+    pub fn meta(&self) -> &ArtifactMeta {
+        self.buckets[0].meta()
+    }
+}
+
+/// Open the default manifest directory (helper shared by CLI/examples).
+pub fn open_default_manifest() -> Result<Manifest> {
+    let dir = Manifest::default_dir();
+    Manifest::load(&dir).with_context(|| {
+        format!(
+            "loading artifact manifest from {} — run `make artifacts` first \
+             (or set VITERBI_ARTIFACTS)",
+            dir.display()
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_pm0_shapes() {
+        let pm0 = uniform_pm0(2, 4, true);
+        assert_eq!(pm0, vec![0.0, -1e30, -1e30, -1e30, 0.0, 0.0, 0.0, 0.0]);
+        let free = uniform_pm0(2, 4, false);
+        assert!(free.iter().all(|&x| x == 0.0));
+    }
+
+    // PJRT-backed tests live in rust/tests/runtime_pjrt.rs (they need
+    // `make artifacts` to have run).
+}

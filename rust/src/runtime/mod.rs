@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the HLO-text artifacts built by
+//! `python/compile/aot.py` and executes them on the request path.
+//! Python never runs at serve time — the compiled XLA executable is
+//! the only trace of it.
+
+pub mod artifact;
+pub mod engine;
+pub mod executor;
+
+pub use artifact::{ArtifactKind, ArtifactMeta, Manifest};
+pub use engine::PjrtEngine;
+pub use executor::{
+    open_default_manifest, uniform_pm0, DecoderExecutable, ExecutorPool, PjrtRuntime,
+};

@@ -1,0 +1,127 @@
+//! Bit-level helpers shared across the encoder, decoder and puncturing
+//! substrates: parity, packing/unpacking of bit vectors, and bit-exact
+//! comparisons used by the BER harness.
+
+/// Parity (XOR-reduction) of the set bits of `x`.
+///
+/// This is the inner operation of the convolutional encoder: the output
+/// bit for generator `g` and register `r` is `parity(g & r)`.
+#[inline(always)]
+pub fn parity(x: u64) -> u8 {
+    (x.count_ones() & 1) as u8
+}
+
+/// Pack a slice of bits (`0`/`1` bytes) into `u64` words, LSB-first.
+///
+/// The last word is zero-padded. Returns the packed words; the caller
+/// keeps track of the original length.
+pub fn pack_bits(bits: &[u8]) -> Vec<u64> {
+    let mut words = vec![0u64; (bits.len() + 63) / 64];
+    for (i, &b) in bits.iter().enumerate() {
+        debug_assert!(b <= 1, "pack_bits expects 0/1 bytes");
+        if b != 0 {
+            words[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    words
+}
+
+/// Unpack `n` bits from `u64` words produced by [`pack_bits`].
+pub fn unpack_bits(words: &[u64], n: usize) -> Vec<u8> {
+    assert!(words.len() * 64 >= n, "not enough words for {n} bits");
+    let mut bits = Vec::with_capacity(n);
+    for i in 0..n {
+        bits.push(((words[i / 64] >> (i % 64)) & 1) as u8);
+    }
+    bits
+}
+
+/// Count positions where two equal-length bit slices differ.
+///
+/// Used by the BER harness to compare decoder output with the original
+/// message. Panics if lengths differ — a length mismatch is a framing
+/// bug, not a channel error, and must not be silently truncated.
+pub fn count_bit_errors(a: &[u8], b: &[u8]) -> usize {
+    assert_eq!(a.len(), b.len(), "bit-error comparison on unequal lengths");
+    a.iter().zip(b.iter()).filter(|(x, y)| x != y).count()
+}
+
+/// Hamming distance between the low `width` bits of two words.
+#[inline(always)]
+pub fn hamming(a: u32, b: u32, width: u32) -> u32 {
+    ((a ^ b) & ((1u32 << width) - 1)).count_ones()
+}
+
+/// Reverse the low `width` bits of `x` (e.g. to convert between
+/// generator-polynomial bit orders).
+pub fn reverse_bits(x: u32, width: u32) -> u32 {
+    let mut out = 0u32;
+    for i in 0..width {
+        if (x >> i) & 1 != 0 {
+            out |= 1 << (width - 1 - i);
+        }
+    }
+    out
+}
+
+/// Convert an octal-notation generator polynomial (as conventionally
+/// written, e.g. `0o171`) into its k-bit binary form. This is the
+/// identity on the value; it exists to make call sites self-documenting.
+#[inline]
+pub fn octal(poly: u32) -> u32 {
+    poly
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parity_basics() {
+        assert_eq!(parity(0), 0);
+        assert_eq!(parity(1), 1);
+        assert_eq!(parity(0b1011), 1);
+        assert_eq!(parity(0b1111), 0);
+        assert_eq!(parity(u64::MAX), 0);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let bits: Vec<u8> = (0..131).map(|i| ((i * 7 + 3) % 5 == 0) as u8).collect();
+        let words = pack_bits(&bits);
+        assert_eq!(words.len(), 3);
+        assert_eq!(unpack_bits(&words, bits.len()), bits);
+    }
+
+    #[test]
+    fn pack_empty() {
+        assert!(pack_bits(&[]).is_empty());
+        assert!(unpack_bits(&[], 0).is_empty());
+    }
+
+    #[test]
+    fn bit_errors_counts() {
+        assert_eq!(count_bit_errors(&[0, 1, 1, 0], &[0, 1, 1, 0]), 0);
+        assert_eq!(count_bit_errors(&[0, 1, 1, 0], &[1, 1, 0, 0]), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bit_errors_length_mismatch_panics() {
+        count_bit_errors(&[0, 1], &[0]);
+    }
+
+    #[test]
+    fn hamming_masks_width() {
+        assert_eq!(hamming(0b11, 0b00, 2), 2);
+        assert_eq!(hamming(0b111, 0b011, 2), 0); // bit 2 outside width
+    }
+
+    #[test]
+    fn reverse_bits_works() {
+        assert_eq!(reverse_bits(0b110, 3), 0b011);
+        assert_eq!(reverse_bits(0b1011011, 7), 0b1101101);
+        // 171 octal = 1111001 is a palindrome-free check
+        assert_eq!(reverse_bits(0o171, 7), 0b1001111);
+    }
+}

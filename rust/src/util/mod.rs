@@ -1,0 +1,13 @@
+//! Infrastructure utilities: bit manipulation, statistics, a JSON
+//! writer, a std-thread pool, and a mini property-testing harness.
+//!
+//! These exist as first-class library code because this image's crate
+//! mirror only carries the `xla` closure — rayon, serde, criterion and
+//! proptest are not fetchable, so their (small) required subsets are
+//! implemented and tested here.
+
+pub mod bits;
+pub mod check;
+pub mod json;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,235 @@
+//! A small work-stealing-free thread pool built on std threads and
+//! channels. rayon/tokio are not fetchable in this offline image, so the
+//! frame-parallel decoder and the coordinator worker pool run on this.
+//!
+//! Design: one injector queue (mutex-protected VecDeque) + condvar.
+//! Jobs are boxed closures. `scope`-style parallel-for is provided via
+//! [`ThreadPool::run_batch`], which blocks until every submitted job in
+//! the batch has completed (panics in jobs are propagated).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` worker threads (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("viterbi-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, size }
+    }
+
+    /// Pool sized to the machine: one thread per logical CPU.
+    pub fn with_default_parallelism() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget submission.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Box::new(job));
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Run `jobs` to completion, blocking the caller. If any job panics,
+    /// this panics after all jobs have finished (no job is lost).
+    pub fn run_batch(&self, jobs: Vec<Job>) {
+        let total = jobs.len();
+        if total == 0 {
+            return;
+        }
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let panicked = Arc::new(AtomicUsize::new(0));
+        for job in jobs {
+            let done = Arc::clone(&done);
+            let panicked = Arc::clone(&panicked);
+            self.submit(move || {
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    panicked.fetch_add(1, Ordering::SeqCst);
+                }
+                let (lock, cv) = &*done;
+                let mut n = lock.lock().unwrap();
+                *n += 1;
+                cv.notify_all();
+            });
+        }
+        let (lock, cv) = &*done;
+        let mut n = lock.lock().unwrap();
+        while *n < total {
+            n = cv.wait(n).unwrap();
+        }
+        let p = panicked.load(Ordering::SeqCst);
+        assert!(p == 0, "{p} job(s) panicked in ThreadPool::run_batch");
+    }
+
+    /// Parallel-for over `0..n`: calls `f(i)` for each index, splitting
+    /// the range into `chunks ≈ 4 × pool size` contiguous blocks.
+    ///
+    /// `f` must be `Sync` because multiple workers call it concurrently.
+    pub fn for_each_index<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        if n == 0 {
+            return;
+        }
+        let f = Arc::new(f);
+        let chunks = (self.size * 4).min(n).max(1);
+        let per = (n + chunks - 1) / chunks;
+        let mut jobs: Vec<Job> = Vec::with_capacity(chunks);
+        for c in 0..chunks {
+            let lo = c * per;
+            let hi = ((c + 1) * per).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = Arc::clone(&f);
+            jobs.push(Box::new(move || {
+                for i in lo..hi {
+                    f(i);
+                }
+            }));
+        }
+        self.run_batch(jobs);
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break Some(job);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(job) => {
+                // Worker survives job panics; run_batch reports them.
+                let _ = catch_unwind(AssertUnwindSafe(job));
+            }
+            None => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let jobs: Vec<Job> = (0..100)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                Box::new(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }) as Job
+            })
+            .collect();
+        pool.run_batch(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn for_each_index_covers_range() {
+        let pool = ThreadPool::new(3);
+        let hits = Arc::new(Mutex::new(vec![0u8; 1013]));
+        let h = Arc::clone(&hits);
+        pool.for_each_index(1013, move |i| {
+            h.lock().unwrap()[i] += 1;
+        });
+        assert!(hits.lock().unwrap().iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.run_batch(Vec::new());
+        let called = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&called);
+        pool.for_each_index(0, move |_| {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(called.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked in ThreadPool::run_batch")]
+    fn propagates_job_panics() {
+        let pool = ThreadPool::new(2);
+        let jobs: Vec<Job> = vec![
+            Box::new(|| {}),
+            Box::new(|| panic!("boom")),
+            Box::new(|| {}),
+        ];
+        pool.run_batch(jobs);
+    }
+
+    #[test]
+    fn pool_survives_panic_and_keeps_working() {
+        let pool = ThreadPool::new(1);
+        let jobs: Vec<Job> = vec![Box::new(|| panic!("first"))];
+        let _ = catch_unwind(AssertUnwindSafe(|| pool.run_batch(jobs)));
+        let ok = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&ok);
+        pool.run_batch(vec![Box::new(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        }) as Job]);
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,257 @@
+//! The `Engine` abstraction: every decoder variant (whole-stream
+//! scalar, tiled serial-traceback, unified parallel-traceback, and the
+//! PJRT-artifact-backed engine in `runtime`) decodes a stream of LLRs
+//! behind the same interface, so the BER harness, the benches and the
+//! coordinator can swap them freely.
+
+use crate::code::{CodeSpec, Trellis};
+use crate::frames::plan::{plan_frames, FrameGeometry};
+use super::frame::FrameScratch;
+use super::scalar::{ScalarDecoder, TracebackStart};
+use super::tiled::decode_frame_serial;
+use super::unified::{decode_frame_parallel_tb, ParallelTraceback};
+
+/// How a stream ends, which fixes the final traceback start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamEnd {
+    /// Trellis terminated with k−1 zero tail bits: ends in state 0.
+    Terminated,
+    /// Truncated: final start state is the argmax path metric.
+    Truncated,
+}
+
+/// A stream decoder: LLRs in (stage-major, β per stage), bits out.
+///
+/// Deliberately *not* `Send + Sync`: the PJRT-backed engine wraps
+/// `Rc`-based xla-crate handles and must stay on one thread (the
+/// coordinator gives it a dedicated executor thread). Thread-safe
+/// engines are expressed as `dyn Engine + Send + Sync` (see
+/// [`SharedEngine`]).
+pub trait Engine {
+    fn name(&self) -> &str;
+
+    /// Decode `stages` trellis stages. `llrs.len() == stages · β`.
+    fn decode_stream(&self, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8>;
+
+    /// The code this engine decodes.
+    fn spec(&self) -> &CodeSpec;
+}
+
+/// A thread-safe engine handle (native engines all qualify).
+pub type SharedEngine = std::sync::Arc<dyn Engine + Send + Sync>;
+
+/// Method (a): whole-stream decode, no tiling.
+pub struct ScalarEngine {
+    spec: CodeSpec,
+}
+
+impl ScalarEngine {
+    pub fn new(spec: CodeSpec) -> Self {
+        ScalarEngine { spec }
+    }
+}
+
+impl Engine for ScalarEngine {
+    fn name(&self) -> &str {
+        "scalar"
+    }
+
+    fn spec(&self) -> &CodeSpec {
+        &self.spec
+    }
+
+    fn decode_stream(&self, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+        assert_eq!(llrs.len(), stages * self.spec.beta as usize);
+        let mut dec = ScalarDecoder::new(self.spec.clone());
+        let tb = match end {
+            StreamEnd::Terminated => TracebackStart::State(0),
+            StreamEnd::Truncated => TracebackStart::BestMetric,
+        };
+        dec.decode(llrs, Some(0), tb)
+    }
+}
+
+/// Per-frame traceback mode.
+#[derive(Debug, Clone, Copy)]
+pub enum TracebackMode {
+    /// Method (b): one serial traceback per frame.
+    FrameSerial,
+    /// Method (c), the paper's proposal: parallel subframe traceback.
+    Parallel(ParallelTraceback),
+}
+
+/// Tiled engine: frames decoded sequentially (single thread). The
+/// multithreaded variant lives in [`super::parallel`].
+pub struct TiledEngine {
+    spec: CodeSpec,
+    trellis: Trellis,
+    pub geo: FrameGeometry,
+    pub mode: TracebackMode,
+    name: String,
+}
+
+impl TiledEngine {
+    pub fn new(spec: CodeSpec, geo: FrameGeometry, mode: TracebackMode) -> Self {
+        let trellis = Trellis::new(spec.clone());
+        let name = match mode {
+            TracebackMode::FrameSerial => format!("tiled(f={},v1={},v2={})", geo.f, geo.v1, geo.v2),
+            TracebackMode::Parallel(p) => format!(
+                "unified(f={},v1={},v2={},f0={})",
+                geo.f, geo.v1, geo.v2, p.f0
+            ),
+        };
+        TiledEngine { spec, trellis, geo, mode, name }
+    }
+
+    /// Decode one frame into `out` (used by the multithreaded driver
+    /// and the coordinator workers too).
+    pub fn decode_frame(
+        &self,
+        llrs: &[f32],
+        span: &crate::frames::plan::FrameSpan,
+        stages: usize,
+        end: StreamEnd,
+        scratch: &mut FrameScratch,
+        out: &mut [u8],
+    ) {
+        let start_state = if span.index == 0 { Some(0) } else { None };
+        let is_last = span.out_start + span.out_len == stages;
+        let tb = match (is_last, end) {
+            (true, StreamEnd::Terminated) => TracebackStart::State(0),
+            _ => TracebackStart::BestMetric,
+        };
+        match &self.mode {
+            TracebackMode::FrameSerial => {
+                decode_frame_serial(&self.trellis, llrs, span, start_state, tb, scratch, out)
+            }
+            TracebackMode::Parallel(ptb) => decode_frame_parallel_tb(
+                &self.trellis,
+                llrs,
+                span,
+                start_state,
+                tb,
+                ptb,
+                scratch,
+                out,
+            ),
+        }
+    }
+
+    pub fn trellis(&self) -> &Trellis {
+        &self.trellis
+    }
+}
+
+impl Engine for TiledEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn spec(&self) -> &CodeSpec {
+        &self.spec
+    }
+
+    fn decode_stream(&self, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+        let beta = self.spec.beta as usize;
+        assert_eq!(llrs.len(), stages * beta);
+        let spans = plan_frames(stages, self.geo);
+        let mut scratch = FrameScratch::new(self.trellis.num_states(), self.geo.span());
+        let mut out = vec![0u8; stages];
+        for span in &spans {
+            let fl = &llrs[span.start * beta..(span.start + span.len) * beta];
+            self.decode_frame(
+                fl,
+                span,
+                stages,
+                end,
+                &mut scratch,
+                &mut out[span.out_start..span.out_start + span.out_len],
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{bpsk, llr, AwgnChannel, Rng64};
+    use crate::code::{encode, Termination};
+    use crate::util::bits::count_bit_errors;
+    use crate::viterbi::unified::StartPolicy;
+
+    fn noisy_setup(
+        n: usize,
+        ebn0: f64,
+        seed: u64,
+    ) -> (Vec<u8>, Vec<f32>, usize, CodeSpec) {
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(seed);
+        let mut bits = vec![0u8; n];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let stages = n + 6;
+        let ch = AwgnChannel::new(ebn0, 0.5);
+        let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+        let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+        (bits, llrs, stages, spec)
+    }
+
+    #[test]
+    fn engines_agree_on_clean_channel() {
+        let (bits, llrs, stages, spec) = noisy_setup(5000, 10.0, 40);
+        let engines: Vec<Box<dyn Engine>> = vec![
+            Box::new(ScalarEngine::new(spec.clone())),
+            Box::new(TiledEngine::new(
+                spec.clone(),
+                FrameGeometry::new(256, 20, 20),
+                TracebackMode::FrameSerial,
+            )),
+            Box::new(TiledEngine::new(
+                spec.clone(),
+                FrameGeometry::new(256, 20, 45),
+                TracebackMode::Parallel(ParallelTraceback::new(
+                    32,
+                    45,
+                    StartPolicy::StoredArgmax,
+                )),
+            )),
+        ];
+        for e in &engines {
+            let out = e.decode_stream(&llrs, stages, StreamEnd::Terminated);
+            assert_eq!(&out[..bits.len()], &bits[..], "engine {}", e.name());
+        }
+    }
+
+    #[test]
+    fn engine_names() {
+        let spec = CodeSpec::standard_k7();
+        assert_eq!(ScalarEngine::new(spec.clone()).name(), "scalar");
+        let t = TiledEngine::new(
+            spec.clone(),
+            FrameGeometry::new(128, 16, 24),
+            TracebackMode::FrameSerial,
+        );
+        assert_eq!(t.name(), "tiled(f=128,v1=16,v2=24)");
+    }
+
+    #[test]
+    fn tiled_ber_tracks_scalar_at_moderate_snr() {
+        let (bits, llrs, stages, spec) = noisy_setup(40_000, 3.0, 41);
+        let scalar = ScalarEngine::new(spec.clone());
+        let tiled = TiledEngine::new(
+            spec.clone(),
+            FrameGeometry::new(256, 20, 30),
+            TracebackMode::FrameSerial,
+        );
+        let es = count_bit_errors(
+            &scalar.decode_stream(&llrs, stages, StreamEnd::Terminated)[..bits.len()],
+            &bits,
+        );
+        let et = count_bit_errors(
+            &tiled.decode_stream(&llrs, stages, StreamEnd::Terminated)[..bits.len()],
+            &bits,
+        );
+        assert!(et as f64 <= es as f64 * 1.4 + 10.0, "tiled {et} vs scalar {es}");
+    }
+}

@@ -1,0 +1,216 @@
+//! Shared per-frame forward procedure (Alg 3 lines 1–18) used by both
+//! the serial-traceback tiled decoder and the proposed unified
+//! parallel-traceback decoder.
+//!
+//! The survivor matrix for one frame lives entirely in a reusable
+//! scratch buffer — the CPU analogue of the paper's shared-memory-only
+//! intermediate data (Table I row (c): global memory usage "none").
+
+use crate::code::Trellis;
+use super::scalar::{acs_stage_from_llrs, argmax, pm_rows, AcsScratch, DecisionMatrix};
+
+/// Reusable per-frame scratch: survivor decisions, path-metric
+/// ping-pong rows, and recorded boundary argmax states.
+pub struct FrameScratch {
+    pub(crate) decisions: DecisionMatrix,
+    pub(crate) pm: [Vec<f32>; 2],
+    pub(crate) acs: AcsScratch,
+    /// Capacity in stages of `decisions`.
+    cap: usize,
+    /// argmax σ state recorded at requested stages (parallel traceback
+    /// start states, paper §IV-D "storing states with maximum PM").
+    pub(crate) boundary_states: Vec<u32>,
+}
+
+impl FrameScratch {
+    pub fn new(num_states: usize, max_stages: usize) -> Self {
+        FrameScratch {
+            decisions: DecisionMatrix::new(num_states, max_stages),
+            pm: [vec![0.0; num_states], vec![0.0; num_states]],
+            acs: AcsScratch::new(num_states),
+            cap: max_stages,
+            boundary_states: Vec::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Grow to hold at least `stages` stages.
+    pub fn ensure(&mut self, num_states: usize, stages: usize) {
+        if stages > self.cap {
+            self.decisions = DecisionMatrix::new(num_states, stages);
+            self.cap = stages;
+        }
+    }
+}
+
+/// Run the forward procedure over `stages` stages of `llrs`
+/// (stage-major, β per stage). Fills `scratch.decisions`; records the
+/// argmax state after each stage listed in `boundaries` (stage indices
+/// within the frame, strictly increasing) into
+/// `scratch.boundary_states`; returns the argmax state of the final
+/// stage.
+///
+/// `start_state = Some(s)` pins the initial path metric to state `s`
+/// (first frame of a stream); `None` starts all states equal (interior
+/// frames — the left overlap v1 warms the metrics up).
+pub fn forward_frame(
+    trellis: &Trellis,
+    llrs: &[f32],
+    start_state: Option<u32>,
+    boundaries: &[usize],
+    scratch: &mut FrameScratch,
+) -> u32 {
+    let beta = trellis.spec.beta as usize;
+    let ns = trellis.num_states();
+    debug_assert_eq!(llrs.len() % beta, 0);
+    let stages = llrs.len() / beta;
+    assert!(stages > 0, "empty frame");
+    scratch.ensure(ns, stages);
+    debug_assert!(boundaries.windows(2).all(|w| w[0] < w[1]));
+    debug_assert!(boundaries.iter().all(|&b| b < stages));
+
+    match start_state {
+        Some(s) => {
+            scratch.pm[0].iter_mut().for_each(|x| *x = f32::NEG_INFINITY);
+            scratch.pm[0][s as usize] = 0.0;
+        }
+        None => scratch.pm[0].iter_mut().for_each(|x| *x = 0.0),
+    }
+    scratch.boundary_states.clear();
+    let mut b_iter = boundaries.iter().peekable();
+
+    let mut final_best = 0u32;
+    for t in 0..stages {
+        let llr_t = &llrs[t * beta..(t + 1) * beta];
+        let (prev_row, cur_row) = pm_rows(&mut scratch.pm, t & 1);
+        let words = scratch.decisions.stage_mut(t);
+        acs_stage_from_llrs(trellis, llr_t, prev_row, &mut scratch.acs, cur_row, words);
+        if let Some(&&b) = b_iter.peek() {
+            if b == t {
+                scratch.boundary_states.push(argmax(cur_row) as u32);
+                b_iter.next();
+            }
+        }
+        if t == stages - 1 {
+            final_best = argmax(cur_row) as u32;
+        }
+    }
+    final_best
+}
+
+/// Trace back from `start` at stage `from` (inclusive) down to stage
+/// `to` (inclusive), writing decoded bits for stages in
+/// `[emit_lo, emit_hi)` into `out[t - emit_lo]`. Returns the state at
+/// entry to stage `to` (i.e. the predecessor chain's endpoint).
+pub fn traceback_segment(
+    trellis: &Trellis,
+    scratch: &FrameScratch,
+    start: u32,
+    from: usize,
+    to: usize,
+    emit_lo: usize,
+    emit_hi: usize,
+    out: &mut [u8],
+) -> u32 {
+    debug_assert!(from >= to);
+    debug_assert!(emit_hi >= emit_lo);
+    debug_assert!(out.len() >= emit_hi - emit_lo);
+    let k = trellis.spec.k;
+    let mask = trellis.spec.state_mask();
+    let mut j = start;
+    let mut t = from;
+    loop {
+        if t >= emit_lo && t < emit_hi {
+            out[t - emit_lo] = (j >> (k - 2)) as u8;
+        }
+        let d = scratch.decisions.get(t, j);
+        j = (2 * j + d) & mask;
+        if t == to {
+            break;
+        }
+        t -= 1;
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Rng64;
+    use crate::code::{encode, CodeSpec, Termination, Trellis};
+
+    fn noiseless(enc: &[u8]) -> Vec<f32> {
+        enc.iter().map(|&b| if b == 0 { 3.0 } else { -3.0 }).collect()
+    }
+
+    #[test]
+    fn forward_plus_full_traceback_equals_scalar() {
+        let spec = CodeSpec::standard_k7();
+        let trellis = Trellis::new(spec.clone());
+        let mut rng = Rng64::seeded(4);
+        let mut bits = vec![0u8; 100];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Truncated);
+        let llrs = noiseless(&enc);
+        let mut scratch = FrameScratch::new(trellis.num_states(), 128);
+        let best = forward_frame(&trellis, &llrs, Some(0), &[], &mut scratch);
+        let mut out = vec![0u8; 100];
+        traceback_segment(&trellis, &scratch, best, 99, 0, 0, 100, &mut out);
+        assert_eq!(out, bits);
+    }
+
+    #[test]
+    fn boundary_states_recorded_in_order() {
+        let spec = CodeSpec::standard_k5();
+        let trellis = Trellis::new(spec.clone());
+        let mut rng = Rng64::seeded(9);
+        let mut bits = vec![0u8; 60];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Truncated);
+        let llrs = noiseless(&enc);
+        let mut scratch = FrameScratch::new(trellis.num_states(), 64);
+        let boundaries = [9usize, 29, 49];
+        let _ = forward_frame(&trellis, &llrs, Some(0), &boundaries, &mut scratch);
+        assert_eq!(scratch.boundary_states.len(), 3);
+        // On a noiseless channel the argmax state at stage t is the true
+        // encoder state after t+1 bits.
+        let mut state = 0u32;
+        let mut states_at = Vec::new();
+        for (t, &b) in bits.iter().enumerate() {
+            let (ns, _) = trellis.step(state, b);
+            state = ns;
+            if boundaries.contains(&t) {
+                states_at.push(state);
+            }
+        }
+        assert_eq!(scratch.boundary_states, states_at);
+    }
+
+    #[test]
+    fn traceback_emit_window() {
+        let spec = CodeSpec::standard_k5();
+        let trellis = Trellis::new(spec.clone());
+        let mut rng = Rng64::seeded(10);
+        let mut bits = vec![0u8; 40];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Truncated);
+        let llrs = noiseless(&enc);
+        let mut scratch = FrameScratch::new(trellis.num_states(), 40);
+        let best = forward_frame(&trellis, &llrs, Some(0), &[], &mut scratch);
+        // Emit only stages [10, 20).
+        let mut out = vec![0u8; 10];
+        traceback_segment(&trellis, &scratch, best, 39, 10, 10, 20, &mut out);
+        assert_eq!(out, &bits[10..20]);
+    }
+
+    #[test]
+    fn scratch_grows() {
+        let mut s = FrameScratch::new(64, 8);
+        assert_eq!(s.capacity(), 8);
+        s.ensure(64, 100);
+        assert!(s.capacity() >= 100);
+    }
+}

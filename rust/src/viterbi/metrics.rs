@@ -1,0 +1,161 @@
+//! Branch-metric computation (paper §II-B eq. 2 and §IV-B).
+//!
+//! The paper's shared-memory optimization chain is reproduced here as
+//! three equivalent strategies, all tested against each other:
+//!
+//! 1. **On-the-fly** — evaluate eq. (2) per branch during the ACS loop.
+//! 2. **Repetitive patterns** — per stage there are only 2^β distinct
+//!    metric values (llr_t is shared by all branches); tabulate them.
+//! 3. **Complement halving** — the 2^β values come in (m, −m) pairs
+//!    (eq. 8), so 2^{β−1} values suffice.
+//!
+//! The decoders use strategy 3 through [`StageMetrics`].
+
+/// Per-stage table of the 2^{β−1} unique branch metrics.
+///
+/// `metric(word)` for a β-bit branch-output word is `+table[word]` if
+/// word < 2^{β−1} else `−table[word ^ full]` — but we keep the full 2^β
+/// expansion in `expanded` for branchless hot-loop indexing, which costs
+/// nothing here (β ≤ 3 ⇒ ≤ 8 f32).
+#[derive(Debug, Clone)]
+pub struct StageMetrics {
+    /// Expanded 2^β metric values, indexed by branch-output word.
+    expanded: [f32; 8],
+    beta: u32,
+}
+
+impl StageMetrics {
+    /// Build the table for one stage from its β LLRs.
+    /// `llr[b]` corresponds to output-word bit b (generator b).
+    #[inline]
+    pub fn from_llrs(llr: &[f32]) -> Self {
+        let beta = llr.len() as u32;
+        debug_assert!((1..=3).contains(&beta));
+        let mut expanded = [0.0f32; 8];
+        let half = 1usize << (beta - 1);
+        let full = (1usize << beta) - 1;
+        // Compute the first half directly (strategy 2 on 2^{β−1} words)…
+        for w in 0..half {
+            let mut m = 0.0f32;
+            for (b, &l) in llr.iter().enumerate() {
+                let sign = if (w >> b) & 1 == 0 { 1.0 } else { -1.0 };
+                m += sign * l;
+            }
+            expanded[w] = m;
+        }
+        // …and mirror the complements (strategy 3, eq. 8).
+        for w in half..=full {
+            expanded[w] = -expanded[w ^ full];
+        }
+        StageMetrics { expanded, beta }
+    }
+
+    /// Metric for a branch-output word (eq. 2).
+    #[inline(always)]
+    pub fn metric(&self, word: u32) -> f32 {
+        debug_assert!(word < (1 << self.beta));
+        self.expanded[word as usize]
+    }
+
+    /// Direct (unoptimized) evaluation of eq. (2) — the on-the-fly
+    /// strategy, kept as the oracle for the table.
+    pub fn direct(llr: &[f32], word: u32) -> f32 {
+        llr.iter()
+            .enumerate()
+            .map(|(b, &l)| if (word >> b) & 1 == 0 { l } else { -l })
+            .sum()
+    }
+}
+
+/// Hard-decision stage metric: agreement count with the received word,
+/// scaled to match the soft convention (maximize). Equivalent to
+/// β − 2·Hamming(word, rx).
+#[derive(Debug, Clone, Copy)]
+pub struct HardStageMetrics {
+    rx_word: u32,
+    beta: u32,
+}
+
+impl HardStageMetrics {
+    pub fn new(rx_word: u32, beta: u32) -> Self {
+        debug_assert!(rx_word < (1 << beta));
+        HardStageMetrics { rx_word, beta }
+    }
+
+    /// Build from hard bits (0/1 per lane).
+    pub fn from_bits(bits: &[u8]) -> Self {
+        let mut w = 0u32;
+        for (b, &bit) in bits.iter().enumerate() {
+            w |= (bit as u32 & 1) << b;
+        }
+        HardStageMetrics::new(w, bits.len() as u32)
+    }
+
+    #[inline(always)]
+    pub fn metric(&self, word: u32) -> f32 {
+        let dist = (word ^ self.rx_word).count_ones();
+        (self.beta as f32) - 2.0 * dist as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_matches_direct_beta2() {
+        let llr = [1.5f32, -0.75];
+        let t = StageMetrics::from_llrs(&llr);
+        for w in 0..4 {
+            assert_eq!(t.metric(w), StageMetrics::direct(&llr, w), "word {w}");
+        }
+        // Explicit values: word 00 → l0+l1, 01 → −l0+l1, 10 → l0−l1, 11 → −l0−l1.
+        assert_eq!(t.metric(0b00), 0.75);
+        assert_eq!(t.metric(0b01), -2.25);
+        assert_eq!(t.metric(0b10), 2.25);
+        assert_eq!(t.metric(0b11), -0.75);
+    }
+
+    #[test]
+    fn complement_pairs_negate() {
+        let llr = [0.3f32, 2.0, -1.1];
+        let t = StageMetrics::from_llrs(&llr);
+        for w in 0..8u32 {
+            assert!(
+                (t.metric(w) + t.metric(w ^ 0b111)).abs() < 1e-6,
+                "complement pair {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn beta3_matches_direct() {
+        let llr = [0.2f32, -0.4, 1.7];
+        let t = StageMetrics::from_llrs(&llr);
+        for w in 0..8 {
+            assert!((t.metric(w) - StageMetrics::direct(&llr, w)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn hard_metric_is_affine_hamming() {
+        let h = HardStageMetrics::from_bits(&[1, 0]);
+        assert_eq!(h.metric(0b01), 2.0); // exact match
+        assert_eq!(h.metric(0b00), 0.0); // 1 bit off
+        assert_eq!(h.metric(0b11), 0.0);
+        assert_eq!(h.metric(0b10), -2.0); // both off
+    }
+
+    #[test]
+    fn hard_equals_soft_with_sign_llrs() {
+        // Hard decoding == soft decoding on ±1 LLRs: the metrics must
+        // agree exactly (this justifies channel::llr::hard_llrs).
+        let bits = [1u8, 0];
+        let h = HardStageMetrics::from_bits(&bits);
+        let llr: Vec<f32> = bits.iter().map(|&b| if b == 0 { 1.0 } else { -1.0 }).collect();
+        let s = StageMetrics::from_llrs(&llr);
+        for w in 0..4 {
+            assert_eq!(h.metric(w), s.metric(w), "word {w}");
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! The Viterbi decoder family: the whole-stream reference (method (a)
+//! in Table I), the tiled serial-traceback baseline (method (b), refs
+//! [4]–[10]), the paper's unified parallel-traceback decoder (method
+//! (c)), the hard-decision adapter, and the frame-parallel
+//! multithreaded driver.
+
+pub mod engine;
+pub mod frame;
+pub mod hard;
+pub mod metrics;
+pub mod parallel;
+pub mod scalar;
+pub mod streaming;
+pub mod tiled;
+pub mod unified;
+
+pub use engine::{Engine, ScalarEngine, SharedEngine, StreamEnd, TiledEngine, TracebackMode};
+pub use frame::FrameScratch;
+pub use hard::HardEngine;
+pub use parallel::ParallelEngine;
+pub use scalar::{ScalarDecoder, TracebackStart};
+pub use streaming::StreamingDecoder;
+pub use unified::{ParallelTraceback, StartPolicy};

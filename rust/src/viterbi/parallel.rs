@@ -1,0 +1,190 @@
+//! Frame-parallel multithreaded decode driver — the CPU analogue of
+//! launching the unified kernel over a grid of frames (one GPU block ↔
+//! one pool job here). Used by the throughput benches (Tables IV/V) and
+//! by the coordinator's native-engine path.
+
+use std::sync::Arc;
+
+use crate::frames::plan::{plan_frames, FrameSpan};
+use crate::util::threadpool::ThreadPool;
+use super::engine::{Engine, StreamEnd, TiledEngine};
+use super::frame::FrameScratch;
+
+/// Multithreaded wrapper around a [`TiledEngine`].
+pub struct ParallelEngine {
+    inner: Arc<TiledEngine>,
+    pool: Arc<ThreadPool>,
+    name: String,
+}
+
+impl ParallelEngine {
+    pub fn new(inner: TiledEngine, pool: Arc<ThreadPool>) -> Self {
+        let name = format!("parallel[{}]×{}", inner.name(), pool.size());
+        ParallelEngine { inner: Arc::new(inner), pool, name }
+    }
+
+    pub fn inner(&self) -> &TiledEngine {
+        &self.inner
+    }
+
+    /// Decode with explicit frame spans (reused by the coordinator,
+    /// which plans frames across request boundaries itself).
+    pub fn decode_spans(
+        &self,
+        llrs: &[f32],
+        stages: usize,
+        end: StreamEnd,
+        spans: &[FrameSpan],
+    ) -> Vec<u8> {
+        let beta = self.inner.spec().beta as usize;
+        assert_eq!(llrs.len(), stages * beta);
+        let mut out = vec![0u8; stages];
+        if spans.is_empty() {
+            return out;
+        }
+
+        // Give each worker job a chunk of frames. Frames write to
+        // disjoint output regions; the unsafe shared-slice wrapper
+        // expresses exactly that (checked by debug assertions and the
+        // disjointness proof: spans partition [0, stages)).
+        let out_ptr = SharedOut(out.as_mut_ptr());
+        let llrs = Arc::new(llrs.to_vec());
+        let spans_arc = Arc::new(spans.to_vec());
+        let inner = Arc::clone(&self.inner);
+        let geo_span = self.inner.geo.span();
+
+        let n = spans.len();
+        let jobs = (self.pool.size() * 4).min(n).max(1);
+        let per = (n + jobs - 1) / jobs;
+        let mut batch: Vec<Box<dyn FnOnce() + Send>> = Vec::with_capacity(jobs);
+        for c in 0..jobs {
+            let lo = c * per;
+            let hi = ((c + 1) * per).min(n);
+            if lo >= hi {
+                break;
+            }
+            let inner = Arc::clone(&inner);
+            let llrs = Arc::clone(&llrs);
+            let spans = Arc::clone(&spans_arc);
+            let out_ptr = out_ptr;
+            batch.push(Box::new(move || {
+                // Rebind the whole wrapper so edition-2021 disjoint
+                // capture doesn't pull in the bare `*mut u8`.
+                let out_ptr: SharedOut = out_ptr;
+                let mut scratch =
+                    FrameScratch::new(inner.trellis().num_states(), geo_span);
+                for span in &spans[lo..hi] {
+                    let fl = &llrs[span.start * beta..(span.start + span.len) * beta];
+                    // SAFETY: spans have pairwise-disjoint
+                    // [out_start, out_start+out_len) regions (guaranteed
+                    // by plan_frames and asserted in its property test),
+                    // so concurrent writes never alias.
+                    let dst = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            out_ptr.0.add(span.out_start),
+                            span.out_len,
+                        )
+                    };
+                    inner.decode_frame(fl, span, stages, end, &mut scratch, dst);
+                }
+            }));
+        }
+        self.pool.run_batch(batch);
+        out
+    }
+}
+
+/// Send-able raw pointer to the output buffer; safety argument at the
+/// single use site.
+#[derive(Clone, Copy)]
+struct SharedOut(*mut u8);
+unsafe impl Send for SharedOut {}
+unsafe impl Sync for SharedOut {}
+
+impl Engine for ParallelEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn spec(&self) -> &crate::code::CodeSpec {
+        self.inner.spec()
+    }
+
+    fn decode_stream(&self, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+        let spans = plan_frames(stages, self.inner.geo);
+        self.decode_spans(llrs, stages, end, &spans)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{bpsk, llr, AwgnChannel, Rng64};
+    use crate::code::{encode, CodeSpec, Termination};
+    use crate::frames::plan::FrameGeometry;
+    use crate::viterbi::engine::TracebackMode;
+    use crate::viterbi::unified::{ParallelTraceback, StartPolicy};
+
+    fn make_parallel(mode: TracebackMode, geo: FrameGeometry, threads: usize) -> ParallelEngine {
+        let spec = CodeSpec::standard_k7();
+        ParallelEngine::new(
+            TiledEngine::new(spec, geo, mode),
+            Arc::new(ThreadPool::new(threads)),
+        )
+    }
+
+    #[test]
+    fn parallel_equals_sequential() {
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(50);
+        let mut bits = vec![0u8; 50_000];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let stages = bits.len() + 6;
+        let ch = AwgnChannel::new(2.5, 0.5);
+        let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+        let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+
+        for mode in [
+            TracebackMode::FrameSerial,
+            TracebackMode::Parallel(ParallelTraceback::new(32, 45, StartPolicy::StoredArgmax)),
+        ] {
+            let geo = FrameGeometry::new(256, 20, 45);
+            let seq = TiledEngine::new(spec.clone(), geo, mode);
+            let seq_out = seq.decode_stream(&llrs, stages, StreamEnd::Terminated);
+            let par = make_parallel(mode, geo, 8);
+            let par_out = par.decode_stream(&llrs, stages, StreamEnd::Terminated);
+            assert_eq!(seq_out, par_out, "mode {:?}", par.name());
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(51);
+        let mut bits = vec![0u8; 4000];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let stages = bits.len() + 6;
+        let llrs: Vec<f32> =
+            enc.iter().map(|&b| if b == 0 { 3.0 } else { -3.0 }).collect();
+        let par = make_parallel(
+            TracebackMode::FrameSerial,
+            FrameGeometry::new(128, 20, 20),
+            1,
+        );
+        let out = par.decode_stream(&llrs, stages, StreamEnd::Terminated);
+        assert_eq!(&out[..bits.len()], &bits[..]);
+    }
+
+    #[test]
+    fn empty_stream_is_empty() {
+        let par = make_parallel(
+            TracebackMode::FrameSerial,
+            FrameGeometry::new(64, 8, 8),
+            2,
+        );
+        let out = par.decode_stream(&[], 0, StreamEnd::Truncated);
+        assert!(out.is_empty());
+    }
+}

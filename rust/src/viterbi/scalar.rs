@@ -1,0 +1,569 @@
+//! Whole-stream Viterbi decoder — the paper's Alg. 1 + Alg. 2, method
+//! (a) in Table I. This is the BER-optimal reference every other engine
+//! is measured against, and the "1 frame, serial traceback" baseline of
+//! refs [2], [3].
+//!
+//! Survivor decisions are bit-packed: state j's decision at stage t is
+//! one bit selecting which of the two predecessors `(2j + d) & mask`
+//! won, so a stage needs 2^{k−1} bits (one u64 word for K=7). This is
+//! the same packing the Pallas kernel uses in VMEM.
+
+use crate::code::{CodeSpec, Trellis};
+use super::metrics::StageMetrics;
+
+/// Reusable ACS temporaries (hoisted out of the per-stage loop so the
+/// hot path never zero-initializes buffers — §Perf iteration 4).
+pub(crate) struct AcsScratch {
+    pub g: Vec<f32>,
+    pub s0: Vec<f32>,
+    pub s1: Vec<f32>,
+}
+
+impl AcsScratch {
+    pub fn new(num_states: usize) -> Self {
+        AcsScratch {
+            g: vec![0.0; num_states],
+            s0: vec![0.0; num_states / 2 + 1],
+            s1: vec![0.0; num_states / 2 + 1],
+        }
+    }
+}
+
+/// Decision storage: one bit per state per stage.
+pub(crate) struct DecisionMatrix {
+    words_per_stage: usize,
+    data: Vec<u64>,
+}
+
+impl DecisionMatrix {
+    pub fn new(num_states: usize, stages: usize) -> Self {
+        let words_per_stage = (num_states + 63) / 64;
+        DecisionMatrix { words_per_stage, data: vec![0u64; words_per_stage * stages] }
+    }
+
+    #[inline(always)]
+    pub fn stage_mut(&mut self, t: usize) -> &mut [u64] {
+        &mut self.data[t * self.words_per_stage..(t + 1) * self.words_per_stage]
+    }
+
+    #[inline(always)]
+    pub fn get(&self, t: usize, state: u32) -> u32 {
+        let w = self.data[t * self.words_per_stage + (state as usize >> 6)];
+        ((w >> (state & 63)) & 1) as u32
+    }
+}
+
+/// Where the traceback starts (paper Alg 2 line 1 uses the argmax; a
+/// terminated stream is known to end in state 0).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TracebackStart {
+    /// argmax over final path metrics (truncated streams).
+    BestMetric,
+    /// Fixed state (0 for a terminated trellis).
+    State(u32),
+}
+
+/// Whole-stream soft-decision Viterbi decoder.
+pub struct ScalarDecoder {
+    trellis: Trellis,
+    /// Ping-pong path-metric rows (σ in the paper) — §IV-C: only two
+    /// stage rows are ever live.
+    pm: [Vec<f32>; 2],
+    acs: AcsScratch,
+}
+
+impl ScalarDecoder {
+    pub fn new(spec: CodeSpec) -> Self {
+        let trellis = Trellis::new(spec);
+        let ns = trellis.num_states();
+        ScalarDecoder {
+            trellis,
+            pm: [vec![0.0; ns], vec![0.0; ns]],
+            acs: AcsScratch::new(ns),
+        }
+    }
+
+    pub fn trellis(&self) -> &Trellis {
+        &self.trellis
+    }
+
+    /// Decode `stages` trellis stages from stage-major LLRs
+    /// (`llrs.len() == stages · β`). Returns the decoded input bits.
+    ///
+    /// `start_state`: the known encoder start state (0 for a fresh
+    /// encoder); all-state start (unknown) is expressed by passing
+    /// `None`, which initializes all path metrics equal — the mode
+    /// frames other than the first use.
+    pub fn decode(
+        &mut self,
+        llrs: &[f32],
+        start_state: Option<u32>,
+        tb: TracebackStart,
+    ) -> Vec<u8> {
+        let beta = self.trellis.spec.beta as usize;
+        assert_eq!(llrs.len() % beta, 0, "LLR length not a multiple of beta");
+        let stages = llrs.len() / beta;
+        let ns = self.trellis.num_states();
+
+        let mut decisions = DecisionMatrix::new(ns, stages);
+        self.forward(llrs, stages, start_state, &mut decisions);
+
+        // After stage t the current row is pm[(t+1) & 1]; the final
+        // stage t = stages−1 therefore leaves σ in pm[stages & 1].
+        let cur = stages & 1;
+        let start = match tb {
+            TracebackStart::BestMetric => argmax(&self.pm[cur]) as u32,
+            TracebackStart::State(s) => {
+                assert!((s as usize) < ns);
+                s
+            }
+        };
+        self.traceback(&decisions, stages, start)
+    }
+
+    /// Forward procedure (Alg 1): fills `decisions`; leaves the final σ
+    /// row in `self.pm[(stages & 1) ^ 1]`.
+    fn forward(
+        &mut self,
+        llrs: &[f32],
+        stages: usize,
+        start_state: Option<u32>,
+        decisions: &mut DecisionMatrix,
+    ) {
+        let ns = self.trellis.num_states();
+        let beta = self.trellis.spec.beta as usize;
+        match start_state {
+            Some(s) => {
+                // Strongly prefer the known start state.
+                self.pm[0].iter_mut().for_each(|x| *x = f32::NEG_INFINITY);
+                self.pm[0][s as usize] = 0.0;
+            }
+            None => self.pm[0].iter_mut().for_each(|x| *x = 0.0),
+        }
+        for t in 0..stages {
+            let llr_t = &llrs[t * beta..(t + 1) * beta];
+            let (prev_row, cur_row) = pm_rows(&mut self.pm, t & 1);
+            let words = decisions.stage_mut(t);
+            acs_stage_from_llrs(&self.trellis, llr_t, prev_row, &mut self.acs, cur_row, words);
+            // Periodic renormalization keeps σ bounded on long streams
+            // (the GPU code relies on short frames instead).
+            if t % 4096 == 4095 {
+                let m = cur_row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                cur_row.iter_mut().for_each(|x| *x -= m);
+            }
+            debug_assert_eq!(words.len(), (ns + 63) / 64);
+        }
+    }
+
+    /// Backward procedure (Alg 2): trace from `start` at the last stage
+    /// back to stage 0, emitting the input bit entering each state.
+    fn traceback(&self, decisions: &DecisionMatrix, stages: usize, start: u32) -> Vec<u8> {
+        let k = self.trellis.spec.k;
+        let mask = self.trellis.spec.state_mask();
+        let mut out = vec![0u8; stages];
+        let mut j = start;
+        for t in (0..stages).rev() {
+            out[t] = (j >> (k - 2)) as u8;
+            let d = decisions.get(t, j);
+            j = (2 * j + d) & mask;
+        }
+        out
+    }
+
+    /// Final path metrics after a `decode` call (for tests/inspection).
+    pub fn final_metrics(&self, stages: usize) -> &[f32] {
+        &self.pm[stages & 1]
+    }
+}
+
+/// Split the ping-pong buffer into (previous, current) rows.
+#[inline(always)]
+pub(crate) fn pm_rows(pm: &mut [Vec<f32>; 2], t_parity: usize) -> (&[f32], &mut [f32]) {
+    let (a, b) = pm.split_at_mut(1);
+    if t_parity == 0 {
+        (&a[0], &mut b[0])
+    } else {
+        (&b[0], &mut a[0])
+    }
+}
+
+/// One ACS stage over all states: σ_t[j] = max_d (σ_{t−1}[prev[j][d]] +
+/// δ(prev_output[j][d])), recording the winning d into `words`.
+///
+/// This is the hot loop of every native engine. It exploits the
+/// shift-register trellis structure (the §Perf butterfly rewrite —
+/// see EXPERIMENTS.md §Perf):
+///
+/// * states `j` and `j + S/2` share the predecessor pair `(2j, 2j+1)`
+///   (prev[j][d] = (2j + d) & mask), so one pass over `j < S/2`
+///   produces both halves with sequential reads of the previous row;
+/// * `branch(i, b=1) = complement(branch(i, b=0))` for every state of
+///   every code under this convention (the LSB of each generator taps
+///   the current input bit… in general eq. (8) holds per-state because
+///   the two branch outputs differ in every generator that taps in_t;
+///   the trellis builder asserts it), so metric(i, 1) = −metric(i, 0)
+///   and a single per-state metric `g[i]` suffices;
+/// * decision bits accumulate in registers, not read-modify-write
+///   memory.
+///
+/// `g` is the per-predecessor branch metric for input bit 0:
+/// `g[i] = sm.metric(output[i][0])`, filled by [`fill_branch_metrics`].
+#[inline(always)]
+pub(crate) fn acs_stage_butterfly(
+    half: usize,
+    prev_row: &[f32],
+    g: &[f32],
+    s0: &mut [f32],
+    s1: &mut [f32],
+    cur_row: &mut [f32],
+    words: &mut [u64],
+) {
+    debug_assert_eq!(prev_row.len(), 2 * half);
+    debug_assert_eq!(g.len(), 2 * half);
+    assert!(prev_row.len() == 2 * half && g.len() == 2 * half && cur_row.len() == 2 * half);
+    assert!(s0.len() >= half && s1.len() >= half);
+    let (lo, hi) = cur_row.split_at_mut(half);
+
+    // Phase 1 (vectorizable): maxes + decision differences. The
+    // decision bit is the sign of (m_a − m_b), which matches the strict
+    // `m_b > m_a` comparison including ties (x − x = +0.0 under RN for
+    // every finite x, so equal metrics give sign 0 = keep d = 0).
+    for j in 0..half {
+        let a = prev_row[2 * j];
+        let b = prev_row[2 * j + 1];
+        let ga = g[2 * j];
+        let gb = g[2 * j + 1];
+        // Target j (entering bit 0): metrics +g; target j+half: −g.
+        let m0a = a + ga;
+        let m0b = b + gb;
+        let m1a = a - ga;
+        let m1b = b - gb;
+        lo[j] = m0a.max(m0b);
+        hi[j] = m1a.max(m1b);
+        s0[j] = m0a - m0b;
+        s1[j] = m1a - m1b;
+    }
+
+    // Phase 2: pack the sign bits (movmskps-accelerated on x86_64).
+    if half >= 64 {
+        for (w, chunk) in s0[..half].chunks_exact(64).enumerate() {
+            words[w] = pack_signs64(chunk);
+        }
+        for (w, chunk) in s1[..half].chunks_exact(64).enumerate() {
+            words[(half >> 6) + w] = pack_signs64(chunk);
+        }
+    } else {
+        // Sub-word state counts (k < 7): both halves land in word 0.
+        words[0] = pack_signs64(&s0[..half]) | (pack_signs64(&s1[..half]) << half);
+    }
+}
+
+/// Pack the sign bits of up to 64 f32s into a u64 (bit j = sign of
+/// `s[j]`). Uses `movmskps` on x86_64 (SSE2 is baseline there); plain
+/// shifts elsewhere.
+#[inline(always)]
+pub(crate) fn pack_signs64(s: &[f32]) -> u64 {
+    debug_assert!(s.len() <= 64);
+    let mut acc = 0u64;
+    let mut j = 0usize;
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        use std::arch::x86_64::{_mm_loadu_ps, _mm_movemask_ps};
+        while j + 4 <= s.len() {
+            let v = _mm_loadu_ps(s.as_ptr().add(j));
+            acc |= (_mm_movemask_ps(v) as u64) << j;
+            j += 4;
+        }
+    }
+    while j < s.len() {
+        acc |= ((s[j].to_bits() >> 31) as u64) << j;
+        j += 1;
+    }
+    acc
+}
+
+/// Per-predecessor branch metrics for input bit 0 (`g[i]`), as the
+/// vectorizable sign-lane sum `g[i] = Σ_lane sign[lane][i] · llr[lane]`
+/// (§Perf: replaces the per-stage lookup table with SIMD-friendly FMAs).
+#[inline(always)]
+pub(crate) fn fill_branch_metrics(trellis: &Trellis, llr_t: &[f32], g: &mut [f32]) {
+    match llr_t.len() {
+        2 => {
+            let (l0, l1) = (llr_t[0], llr_t[1]);
+            let s0 = &trellis.sign_lanes[0];
+            let s1 = &trellis.sign_lanes[1];
+            for ((gi, &a), &b) in g.iter_mut().zip(s0.iter()).zip(s1.iter()) {
+                *gi = a * l0 + b * l1;
+            }
+        }
+        3 => {
+            let (l0, l1, l2) = (llr_t[0], llr_t[1], llr_t[2]);
+            let s0 = &trellis.sign_lanes[0];
+            let s1 = &trellis.sign_lanes[1];
+            let s2 = &trellis.sign_lanes[2];
+            for (((gi, &a), &b), &c) in
+                g.iter_mut().zip(s0.iter()).zip(s1.iter()).zip(s2.iter())
+            {
+                *gi = a * l0 + b * l1 + c * l2;
+            }
+        }
+        _ => {
+            let sm = StageMetrics::from_llrs(llr_t);
+            for (i, gi) in g.iter_mut().enumerate() {
+                *gi = sm.metric(trellis.output[i][0]);
+            }
+        }
+    }
+}
+
+/// One ACS stage from raw per-stage LLRs: butterfly fast path when the
+/// code qualifies, generic table path otherwise.
+#[inline(always)]
+pub(crate) fn acs_stage_from_llrs(
+    trellis: &Trellis,
+    llr_t: &[f32],
+    prev_row: &[f32],
+    acs: &mut AcsScratch,
+    cur_row: &mut [f32],
+    words: &mut [u64],
+) {
+    let ns = trellis.num_states();
+    if trellis.butterfly_ok() && llr_t.len() == 2 {
+        // Fused β=2 path: branch metrics computed inline from the
+        // sign lanes, no g round-trip (§Perf iteration 6).
+        let (s0, s1) = (&mut acs.s0, &mut acs.s1);
+        acs_stage_butterfly_b2(
+            ns / 2,
+            prev_row,
+            &trellis.sign_lanes[0],
+            &trellis.sign_lanes[1],
+            llr_t[0],
+            llr_t[1],
+            s0,
+            s1,
+            cur_row,
+            words,
+        );
+    } else if trellis.butterfly_ok() {
+        fill_branch_metrics(trellis, llr_t, &mut acs.g);
+        let (s0, s1) = (&mut acs.s0, &mut acs.s1);
+        acs_stage_butterfly(ns / 2, prev_row, &acs.g, s0, s1, cur_row, words);
+    } else {
+        let sm = StageMetrics::from_llrs(llr_t);
+        acs_stage(trellis, &sm, prev_row, cur_row, words);
+    }
+}
+
+/// Fused β=2 butterfly: branch metrics `g = sl0·l0 + sl1·l1` computed
+/// inline from the static sign lanes (one pass, fully vectorizable).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn acs_stage_butterfly_b2(
+    half: usize,
+    prev_row: &[f32],
+    sl0: &[f32],
+    sl1: &[f32],
+    l0: f32,
+    l1: f32,
+    s0: &mut [f32],
+    s1: &mut [f32],
+    cur_row: &mut [f32],
+    words: &mut [u64],
+) {
+    assert!(
+        prev_row.len() == 2 * half
+            && sl0.len() == 2 * half
+            && sl1.len() == 2 * half
+            && cur_row.len() == 2 * half
+    );
+    assert!(s0.len() >= half && s1.len() >= half);
+    let (lo, hi) = cur_row.split_at_mut(half);
+    for j in 0..half {
+        let a = prev_row[2 * j];
+        let b = prev_row[2 * j + 1];
+        let ga = sl0[2 * j] * l0 + sl1[2 * j] * l1;
+        let gb = sl0[2 * j + 1] * l0 + sl1[2 * j + 1] * l1;
+        let m0a = a + ga;
+        let m0b = b + gb;
+        let m1a = a - ga;
+        let m1b = b - gb;
+        lo[j] = m0a.max(m0b);
+        hi[j] = m1a.max(m1b);
+        s0[j] = m0a - m0b;
+        s1[j] = m1a - m1b;
+    }
+    if half >= 64 {
+        for (w, chunk) in s0[..half].chunks_exact(64).enumerate() {
+            words[w] = pack_signs64(chunk);
+        }
+        for (w, chunk) in s1[..half].chunks_exact(64).enumerate() {
+            words[(half >> 6) + w] = pack_signs64(chunk);
+        }
+    } else {
+        words[0] = pack_signs64(&s0[..half]) | (pack_signs64(&s1[..half]) << half);
+    }
+}
+
+/// Generic (table-driven) ACS stage — the readable reference the
+/// butterfly is tested against, and the fallback for exotic codes.
+#[inline(always)]
+pub(crate) fn acs_stage(
+    trellis: &Trellis,
+    sm: &StageMetrics,
+    prev_row: &[f32],
+    cur_row: &mut [f32],
+    words: &mut [u64],
+) {
+    let ns = trellis.num_states();
+    for w in words.iter_mut() {
+        *w = 0;
+    }
+    for j in 0..ns {
+        let p0 = trellis.prev[j][0] as usize;
+        let p1 = trellis.prev[j][1] as usize;
+        let m0 = prev_row[p0] + sm.metric(trellis.prev_output[j][0]);
+        let m1 = prev_row[p1] + sm.metric(trellis.prev_output[j][1]);
+        let take1 = m1 > m0;
+        cur_row[j] = if take1 { m1 } else { m0 };
+        words[j >> 6] |= (take1 as u64) << (j & 63);
+    }
+}
+
+#[inline]
+pub(crate) fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bm = f32::NEG_INFINITY;
+    for (i, &x) in row.iter().enumerate() {
+        if x > bm {
+            bm = x;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{bpsk, llr, AwgnChannel, Rng64};
+    use crate::code::{encode, Termination};
+
+    fn noiseless_llrs(encoded: &[u8]) -> Vec<f32> {
+        encoded.iter().map(|&b| if b == 0 { 4.0 } else { -4.0 }).collect()
+    }
+
+    #[test]
+    fn decodes_noiseless_truncated() {
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(1);
+        let mut bits = vec![0u8; 200];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Truncated);
+        let mut dec = ScalarDecoder::new(spec);
+        let out = dec.decode(&noiseless_llrs(&enc), Some(0), TracebackStart::BestMetric);
+        assert_eq!(out, bits);
+    }
+
+    #[test]
+    fn decodes_noiseless_terminated_from_state0() {
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(2);
+        let mut bits = vec![0u8; 120];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let mut dec = ScalarDecoder::new(spec);
+        let out = dec.decode(&noiseless_llrs(&enc), Some(0), TracebackStart::State(0));
+        assert_eq!(&out[..bits.len()], &bits[..]);
+        // Tail bits decode as zeros.
+        assert!(out[bits.len()..].iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn corrects_isolated_hard_errors() {
+        // dfree = 10 for (171,133): up to 4 flipped coded bits spread
+        // far apart must always be corrected.
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(3);
+        let mut bits = vec![0u8; 300];
+        rng.fill_bits(&mut bits);
+        let mut enc = encode(&spec, &bits, Termination::Terminated);
+        for &pos in &[10usize, 150, 320, 500] {
+            enc[pos] ^= 1;
+        }
+        let mut dec = ScalarDecoder::new(spec);
+        let out = dec.decode(&noiseless_llrs(&enc), Some(0), TracebackStart::State(0));
+        assert_eq!(&out[..bits.len()], &bits[..]);
+    }
+
+    #[test]
+    fn soft_beats_hard_at_low_snr() {
+        // End-to-end sanity: soft-decision LLRs must produce no more
+        // errors than sign-only LLRs on the same noisy realization.
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(7);
+        let mut bits = vec![0u8; 4000];
+        rng.fill_bits(&mut bits);
+        let encd = encode(&spec, &bits, Termination::Terminated);
+        let ch = AwgnChannel::new(1.5, 0.5);
+        let rx = ch.transmit(&bpsk::modulate(&encd), &mut rng);
+        let soft = llr::llrs_from_samples(&rx, ch.sigma());
+        let hard = llr::hard_llrs(&rx);
+        let mut dec = ScalarDecoder::new(spec);
+        let out_s = dec.decode(&soft, Some(0), TracebackStart::State(0));
+        let err_s = crate::util::bits::count_bit_errors(&out_s[..bits.len()], &bits);
+        let out_h = dec.decode(&hard, Some(0), TracebackStart::State(0));
+        let err_h = crate::util::bits::count_bit_errors(&out_h[..bits.len()], &bits);
+        assert!(
+            err_s <= err_h,
+            "soft ({err_s}) worse than hard ({err_h})"
+        );
+    }
+
+    #[test]
+    fn unknown_start_converges() {
+        // With all-equal initial metrics the decoder must still recover
+        // the message except possibly the first few bits.
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(5);
+        let mut bits = vec![0u8; 150];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Truncated);
+        let mut dec = ScalarDecoder::new(spec);
+        let out = dec.decode(&noiseless_llrs(&enc), None, TracebackStart::BestMetric);
+        assert_eq!(&out[8..], &bits[8..], "tail must match after convergence");
+    }
+
+    #[test]
+    fn long_stream_renormalization_is_safe() {
+        let spec = CodeSpec::standard_k5();
+        let mut rng = Rng64::seeded(6);
+        let mut bits = vec![0u8; 10_000];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let mut dec = ScalarDecoder::new(spec);
+        let out = dec.decode(&noiseless_llrs(&enc), Some(0), TracebackStart::State(0));
+        assert_eq!(&out[..bits.len()], &bits[..]);
+    }
+
+    #[test]
+    fn works_for_rate_third_code() {
+        let spec = CodeSpec::standard_k7_r3();
+        let mut rng = Rng64::seeded(8);
+        let mut bits = vec![0u8; 100];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let mut dec = ScalarDecoder::new(spec);
+        let out = dec.decode(&noiseless_llrs(&enc), Some(0), TracebackStart::State(0));
+        assert_eq!(&out[..bits.len()], &bits[..]);
+    }
+
+    #[test]
+    fn decision_matrix_packing() {
+        let mut m = DecisionMatrix::new(64, 3);
+        m.stage_mut(1)[0] = 0b1010;
+        assert_eq!(m.get(1, 1), 1);
+        assert_eq!(m.get(1, 2), 0);
+        assert_eq!(m.get(1, 3), 1);
+        assert_eq!(m.get(0, 1), 0);
+    }
+}

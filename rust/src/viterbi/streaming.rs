@@ -1,0 +1,285 @@
+//! Continuous streaming decoder — decode an unbounded LLR stream in
+//! arbitrary-size chunks with **path-metric carry** instead of frame
+//! overlaps.
+//!
+//! The tiled decoders re-derive state history from the v1/v2 overlaps
+//! (paper Fig 2) so frames are independent — that is what buys
+//! parallelism. A continuous receiver on one decode lane can do better:
+//! carry the final path-metric row from one chunk into the next (the
+//! same mechanism as the AOT kernel's explicit `pm0` input) and emit
+//! bits with a fixed decision *delay* D: after each chunk, trace back
+//! from the current best state and release every bit older than D
+//! stages — the classic sliding-window Viterbi. No overlap work is
+//! wasted; the cost is the decision latency D.
+//!
+//! This is the "streaming" ablation of DESIGN.md: overlap-based
+//! (parallel, the paper) vs state-carry (serial, this module);
+//! `exp table4`'s work-overhead column quantifies what the overlaps
+//! cost.
+
+use std::collections::VecDeque;
+
+use crate::code::{CodeSpec, Trellis};
+use super::scalar::{acs_stage_from_llrs, argmax, AcsScratch};
+
+/// Sliding-window streaming Viterbi decoder.
+pub struct StreamingDecoder {
+    trellis: Trellis,
+    /// Decision words for every not-yet-released stage (front = oldest).
+    /// One entry per stage (supports up to 64 states per word group).
+    pending: VecDeque<Vec<u64>>,
+    /// Path metrics after the newest processed stage.
+    pm: Vec<f32>,
+    pm_next: Vec<f32>,
+    acs: AcsScratch,
+    /// Decision delay D: bits older than this are released.
+    delay: usize,
+    /// Total stages consumed (for bookkeeping/tests).
+    consumed: u64,
+}
+
+impl StreamingDecoder {
+    /// `delay` of ≈ 5·k stages loses nothing measurable (the same
+    /// convergence argument as the paper's v2; see tests).
+    pub fn new(spec: CodeSpec, delay: usize) -> Self {
+        let trellis = Trellis::new(spec);
+        let ns = trellis.num_states();
+        let mut pm = vec![f32::NEG_INFINITY; ns];
+        pm[0] = 0.0; // streams start at the encoder's zero state
+        StreamingDecoder {
+            pending: VecDeque::new(),
+            pm,
+            pm_next: vec![0.0; ns],
+            acs: AcsScratch::new(ns),
+            trellis,
+            delay,
+            consumed: 0,
+        }
+    }
+
+    pub fn spec(&self) -> &CodeSpec {
+        &self.trellis.spec
+    }
+
+    pub fn pending_stages(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn consumed_stages(&self) -> u64 {
+        self.consumed
+    }
+
+    /// Feed `stages = llrs.len()/β` new stages; returns the bits whose
+    /// decision delay has expired (possibly empty).
+    pub fn push(&mut self, llrs: &[f32]) -> Vec<u8> {
+        let beta = self.trellis.spec.beta as usize;
+        assert_eq!(llrs.len() % beta, 0, "LLR length not a multiple of beta");
+        let stages = llrs.len() / beta;
+        let ns = self.trellis.num_states();
+        let words_per_stage = (ns + 63) / 64;
+
+        for t in 0..stages {
+            let mut words = vec![0u64; words_per_stage];
+            acs_stage_from_llrs(
+                &self.trellis,
+                &llrs[t * beta..(t + 1) * beta],
+                &self.pm,
+                &mut self.acs,
+                &mut self.pm_next,
+                &mut words,
+            );
+            std::mem::swap(&mut self.pm, &mut self.pm_next);
+            self.pending.push_back(words);
+        }
+        self.consumed += stages as u64;
+        // Renormalize to keep metrics bounded on endless streams.
+        if self.consumed % 4096 < stages as u64 {
+            let m = self.pm.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            if m.is_finite() {
+                self.pm.iter_mut().for_each(|x| *x -= m);
+            }
+        }
+
+        if self.pending.len() > self.delay {
+            let release = self.pending.len() - self.delay;
+            self.release(release, argmax(&self.pm) as u32)
+        } else {
+            Vec::new()
+        }
+    }
+
+    /// Flush everything still pending. `final_state` pins the traceback
+    /// start (Some(0) for a terminated stream); None = best metric.
+    pub fn finish(mut self, final_state: Option<u32>) -> Vec<u8> {
+        let n = self.pending.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let start = final_state.unwrap_or_else(|| argmax(&self.pm) as u32);
+        self.release(n, start)
+    }
+
+    /// Trace back through all pending decisions from `start`, emit the
+    /// oldest `count` bits, and drop them from the window.
+    fn release(&mut self, count: usize, start: u32) -> Vec<u8> {
+        let k = self.trellis.spec.k;
+        let mask = self.trellis.spec.state_mask();
+        let n = self.pending.len();
+        debug_assert!(count <= n);
+        let mut out = vec![0u8; count];
+        let mut j = start;
+        for t in (0..n).rev() {
+            if t < count {
+                out[t] = (j >> (k - 2)) as u8;
+            }
+            let words = &self.pending[t];
+            let d = ((words[(j as usize) >> 6] >> (j & 63)) & 1) as u32;
+            j = (2 * j + d) & mask;
+        }
+        self.pending.drain(..count);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{bpsk, llr, AwgnChannel, Rng64};
+    use crate::code::{encode, Termination};
+    use crate::util::bits::count_bit_errors;
+    use crate::viterbi::{Engine, ScalarEngine, StreamEnd};
+
+    fn noiseless(enc: &[u8]) -> Vec<f32> {
+        enc.iter().map(|&b| if b == 0 { 3.0 } else { -3.0 }).collect()
+    }
+
+    #[test]
+    fn exact_on_noiseless_stream_in_chunks() {
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(600);
+        let mut bits = vec![0u8; 2000];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let llrs = noiseless(&enc);
+
+        let mut dec = StreamingDecoder::new(spec, 64);
+        let mut out = Vec::new();
+        // Irregular chunk sizes, in stages.
+        let mut pos = 0usize;
+        for &chunk in [7usize, 100, 3, 512, 259, 700, 300, 125].iter() {
+            let take = chunk.min(llrs.len() / 2 - pos);
+            out.extend(dec.push(&llrs[pos * 2..(pos + take) * 2]));
+            pos += take;
+        }
+        out.extend(dec.push(&llrs[pos * 2..]));
+        out.extend(dec.finish(Some(0)));
+        assert_eq!(out.len(), bits.len() + 6);
+        assert_eq!(&out[..bits.len()], &bits[..]);
+    }
+
+    #[test]
+    fn matches_whole_stream_decoder_on_noisy_data() {
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(601);
+        let mut bits = vec![0u8; 30_000];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let ch = AwgnChannel::new(2.0, 0.5);
+        let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+        let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+        let stages = bits.len() + 6;
+
+        let scalar = ScalarEngine::new(spec.clone());
+        let whole = scalar.decode_stream(&llrs, stages, StreamEnd::Terminated);
+        let e_whole = count_bit_errors(&whole[..bits.len()], &bits);
+
+        let mut dec = StreamingDecoder::new(spec, 96);
+        let mut out = Vec::new();
+        for chunk in llrs.chunks(2 * 777) {
+            out.extend(dec.push(chunk));
+        }
+        out.extend(dec.finish(Some(0)));
+        let e_stream = count_bit_errors(&out[..bits.len()], &bits);
+        // Delay 96 ≈ 14·k: indistinguishable from full traceback.
+        assert!(
+            (e_stream as i64 - e_whole as i64).abs() <= (e_whole / 10 + 3) as i64,
+            "streaming {e_stream} vs whole {e_whole}"
+        );
+    }
+
+    #[test]
+    fn short_delay_degrades() {
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(602);
+        let mut bits = vec![0u8; 40_000];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let ch = AwgnChannel::new(2.0, 0.5);
+        let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+        let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+
+        // Small chunks make the decision horizon bind: with delay 2
+        // and 25-stage chunks every released bit is 2..27 stages from
+        // the horizon — far inside the convergence window.
+        let errs = |delay: usize| {
+            let mut dec = StreamingDecoder::new(spec.clone(), delay);
+            let mut out = Vec::new();
+            for chunk in llrs.chunks(2 * 25) {
+                out.extend(dec.push(chunk));
+            }
+            out.extend(dec.finish(Some(0)));
+            count_bit_errors(&out[..bits.len()], &bits)
+        };
+        let short = errs(2);
+        let long = errs(96);
+        assert!(
+            short > long * 2,
+            "delay=2 ({short}) should be much worse than delay=96 ({long})"
+        );
+    }
+
+    #[test]
+    fn emission_is_prefix_stable() {
+        // Bits already released must not depend on how much later data
+        // arrives (determinism of the sliding window).
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(603);
+        let mut bits = vec![0u8; 3000];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Truncated);
+        let ch = AwgnChannel::new(3.0, 0.5);
+        let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+        let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+
+        let run = |chunk_stages: usize| {
+            let mut dec = StreamingDecoder::new(spec.clone(), 80);
+            let mut out = Vec::new();
+            for chunk in llrs.chunks(2 * chunk_stages) {
+                out.extend(dec.push(chunk));
+            }
+            (out, dec)
+        };
+        let (a, _) = run(100);
+        let (b, _) = run(250);
+        let common = a.len().min(b.len());
+        // Released prefixes agree except possibly the last few bits
+        // near each emission horizon (they were released from different
+        // traceback snapshots, but 80 stages of convergence make them
+        // equal in practice).
+        assert_eq!(&a[..common.saturating_sub(80)], &b[..common.saturating_sub(80)]);
+    }
+
+    #[test]
+    fn counters_track_state() {
+        let spec = CodeSpec::standard_k5();
+        let mut dec = StreamingDecoder::new(spec, 16);
+        assert_eq!(dec.pending_stages(), 0);
+        let out = dec.push(&[0.5; 2 * 10]);
+        assert!(out.is_empty(), "below delay, nothing released");
+        assert_eq!(dec.pending_stages(), 10);
+        assert_eq!(dec.consumed_stages(), 10);
+        let out = dec.push(&[0.5; 2 * 10]);
+        assert_eq!(out.len(), 4); // 20 pending − 16 delay
+        assert_eq!(dec.pending_stages(), 16);
+    }
+}

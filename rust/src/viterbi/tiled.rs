@@ -1,0 +1,192 @@
+//! Tiled frame decoder with *serial* per-frame traceback — method (b)
+//! of Table I, the prior state of the art (refs [4]–[10]) and the
+//! baseline for the paper's Tables II and IV.
+//!
+//! Each frame runs the forward procedure over `v1 + f + v2` stages and
+//! then a single traceback from the frame's last stage; the first `v1`
+//! and last `v2` decoded stages are discarded.
+
+use crate::code::Trellis;
+use crate::frames::plan::FrameSpan;
+use super::frame::{forward_frame, traceback_segment, FrameScratch};
+use super::scalar::TracebackStart;
+
+/// Decode one frame with serial traceback.
+///
+/// * `llrs` — the frame's stage-major LLRs (`span.len · β` values).
+/// * `span` — geometry within the stream (only offsets relative to the
+///   frame are used here).
+/// * `start_state` — pinned initial state (first frame) or `None`.
+/// * `tb` — traceback start at the frame's final stage; interior frames
+///   use `BestMetric`, the stream's last frame may use `State(0)` when
+///   the trellis is terminated.
+/// * `out` — receives `span.out_len` decoded bits.
+pub fn decode_frame_serial(
+    trellis: &Trellis,
+    llrs: &[f32],
+    span: &FrameSpan,
+    start_state: Option<u32>,
+    tb: TracebackStart,
+    scratch: &mut FrameScratch,
+    out: &mut [u8],
+) {
+    let beta = trellis.spec.beta as usize;
+    assert_eq!(llrs.len(), span.len * beta, "frame LLR length mismatch");
+    assert!(out.len() >= span.out_len);
+    let best = forward_frame(trellis, llrs, start_state, &[], scratch);
+    let start = match tb {
+        TracebackStart::BestMetric => best,
+        TracebackStart::State(s) => s,
+    };
+    let head = span.head();
+    traceback_segment(
+        trellis,
+        scratch,
+        start,
+        span.len - 1,
+        head,
+        head,
+        head + span.out_len,
+        out,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{bpsk, llr, AwgnChannel, Rng64};
+    use crate::code::{encode, CodeSpec, Termination};
+    use crate::frames::plan::{plan_frames, FrameGeometry};
+    use crate::util::bits::count_bit_errors;
+    use crate::viterbi::scalar::ScalarDecoder;
+
+    fn noiseless(enc: &[u8]) -> Vec<f32> {
+        enc.iter().map(|&b| if b == 0 { 3.0 } else { -3.0 }).collect()
+    }
+
+    /// Decode a whole stream frame-by-frame (the single-threaded tiled
+    /// pipeline used by the tests; the engine module wires the same
+    /// pieces with threading).
+    fn decode_stream(
+        spec: &CodeSpec,
+        llrs: &[f32],
+        stages: usize,
+        geo: FrameGeometry,
+        terminated: bool,
+    ) -> Vec<u8> {
+        let trellis = Trellis::new(spec.clone());
+        let beta = spec.beta as usize;
+        let spans = plan_frames(stages, geo);
+        let mut scratch = FrameScratch::new(trellis.num_states(), geo.span());
+        let mut out = vec![0u8; stages];
+        for span in &spans {
+            let fl = &llrs[span.start * beta..(span.start + span.len) * beta];
+            let start_state = if span.index == 0 { Some(0) } else { None };
+            let is_last = span.out_start + span.out_len == stages;
+            let tb = if is_last && terminated {
+                TracebackStart::State(0)
+            } else {
+                TracebackStart::BestMetric
+            };
+            decode_frame_serial(
+                &trellis,
+                fl,
+                span,
+                start_state,
+                tb,
+                &mut scratch,
+                &mut out[span.out_start..span.out_start + span.out_len],
+            );
+        }
+        out
+    }
+
+    #[test]
+    fn tiled_equals_scalar_on_noiseless() {
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(20);
+        let mut bits = vec![0u8; 2000];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let stages = bits.len() + 6;
+        let llrs = noiseless(&enc);
+        let tiled = decode_stream(&spec, &llrs, stages, FrameGeometry::new(256, 20, 20), true);
+        assert_eq!(&tiled[..bits.len()], &bits[..]);
+    }
+
+    #[test]
+    fn tiled_close_to_scalar_on_noisy() {
+        // With adequate overlaps the tiled decoder must match the
+        // whole-stream decoder almost everywhere (paper: v2=20 reaches
+        // theoretical performance).
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(21);
+        let mut bits = vec![0u8; 20_000];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let stages = bits.len() + 6;
+        let ch = AwgnChannel::new(3.0, 0.5);
+        let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+        let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+
+        let mut scalar = ScalarDecoder::new(spec.clone());
+        let whole = scalar.decode(&llrs, Some(0), TracebackStart::State(0));
+        let err_whole = count_bit_errors(&whole[..bits.len()], &bits);
+
+        let tiled = decode_stream(&spec, &llrs, stages, FrameGeometry::new(256, 20, 20), true);
+        let err_tiled = count_bit_errors(&tiled[..bits.len()], &bits);
+
+        // Allow a tiny degradation margin (finite overlap).
+        assert!(
+            err_tiled as f64 <= err_whole as f64 * 1.3 + 5.0,
+            "tiled errors {err_tiled} vs whole-stream {err_whole}"
+        );
+    }
+
+    #[test]
+    fn short_v2_degrades_ber() {
+        // The central claim behind Table II: insufficient traceback
+        // overlap hurts BER.
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(22);
+        let mut bits = vec![0u8; 30_000];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let stages = bits.len() + 6;
+        let ch = AwgnChannel::new(2.0, 0.5);
+        let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+        let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+
+        let errs = |v2: usize| {
+            let out = decode_stream(&spec, &llrs, stages, FrameGeometry::new(64, 20, v2), true);
+            count_bit_errors(&out[..bits.len()], &bits)
+        };
+        let e0 = errs(0);
+        let e20 = errs(20);
+        assert!(
+            e0 > e20 * 2,
+            "v2=0 ({e0} errors) should be much worse than v2=20 ({e20})"
+        );
+    }
+
+    #[test]
+    fn frame_llr_slice_must_match() {
+        let spec = CodeSpec::standard_k5();
+        let trellis = Trellis::new(spec);
+        let span = FrameSpan { index: 0, start: 0, len: 4, out_start: 0, out_len: 4 };
+        let mut scratch = FrameScratch::new(16, 4);
+        let mut out = [0u8; 4];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            decode_frame_serial(
+                &trellis,
+                &[0.0; 6], // wrong length
+                &span,
+                Some(0),
+                TracebackStart::BestMetric,
+                &mut scratch,
+                &mut out,
+            )
+        }));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,325 @@
+//! The paper's proposed decoder (§IV): unified forward + **parallel
+//! traceback** within each frame — method (c) of Table I.
+//!
+//! The decoded region of a frame is split into subframes of `f0` stages
+//! (paper Fig 5). Every subframe is traced back independently: it
+//! starts `v2` stages to the right of its decode region (inside its
+//! right-hand neighbour) so the survivor path converges before bits are
+//! kept. Start states come from one of three policies (§IV-D, Fig 11):
+//!
+//! * [`StartPolicy::StoredArgmax`] — during the forward pass the argmax
+//!   path-metric state is recorded at every subframe traceback start
+//!   stage ("a reasonable amount of memory is used and convergence is
+//!   not postponed") — the paper's chosen design;
+//! * [`StartPolicy::Random`] — random start state ("convergence will
+//!   take longer", hurts BER — reproduced in Fig 11);
+//! * [`StartPolicy::Fixed`] — a pinned state, the worst case.
+
+use crate::channel::rng::Rng64;
+use crate::code::Trellis;
+use crate::frames::plan::FrameSpan;
+use super::frame::{forward_frame, traceback_segment, FrameScratch};
+use super::scalar::TracebackStart;
+
+/// Traceback start-state policy (paper §IV-D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StartPolicy {
+    /// Use the argmax-σ state recorded at the boundary stage during the
+    /// forward pass.
+    StoredArgmax,
+    /// Random state, seeded deterministically per (frame, subframe).
+    Random { seed: u64 },
+    /// Always start from the given state.
+    Fixed(u32),
+}
+
+/// Parallel-traceback configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelTraceback {
+    /// Decoded stages per subframe (f0 in the paper, `D/D'` per Table I).
+    pub f0: usize,
+    /// Traceback convergence overlap per subframe (the paper reuses the
+    /// frame's v2 for this).
+    pub v2: usize,
+    pub policy: StartPolicy,
+}
+
+impl ParallelTraceback {
+    pub fn new(f0: usize, v2: usize, policy: StartPolicy) -> Self {
+        assert!(f0 > 0, "subframe size must be positive");
+        ParallelTraceback { f0, v2, policy }
+    }
+
+    /// Number of subframes for a frame decoding `out_len` stages.
+    pub fn num_subframes(&self, out_len: usize) -> usize {
+        (out_len + self.f0 - 1) / self.f0
+    }
+}
+
+/// Decode one frame with the unified parallel-traceback algorithm.
+///
+/// Arguments mirror [`super::tiled::decode_frame_serial`]; `tb` applies
+/// only to subframes whose traceback starts at the frame's final stage
+/// (where the "true" start state — global argmax or the terminated
+/// state 0 — is available).
+pub fn decode_frame_parallel_tb(
+    trellis: &Trellis,
+    llrs: &[f32],
+    span: &FrameSpan,
+    start_state: Option<u32>,
+    tb: TracebackStart,
+    ptb: &ParallelTraceback,
+    scratch: &mut FrameScratch,
+    out: &mut [u8],
+) {
+    let beta = trellis.spec.beta as usize;
+    assert_eq!(llrs.len(), span.len * beta, "frame LLR length mismatch");
+    assert!(out.len() >= span.out_len);
+    let head = span.head();
+    let n_sub = ptb.num_subframes(span.out_len);
+
+    // Traceback start stage of each subframe (inclusive).
+    let starts: Vec<usize> = (0..n_sub)
+        .map(|s| (head + (s + 1) * ptb.f0 + ptb.v2).min(span.len) - 1)
+        .collect();
+    // Boundary stages whose argmax state must be recorded during the
+    // forward pass (deduplicated; strictly increasing for forward_frame).
+    let mut boundaries: Vec<usize> = starts.clone();
+    boundaries.dedup();
+
+    let final_best = forward_frame(trellis, llrs, start_state, &boundaries, scratch);
+
+    // Map each subframe to its recorded boundary state.
+    let state_of = |stage: usize, scratch: &FrameScratch| -> u32 {
+        let idx = boundaries.binary_search(&stage).expect("boundary recorded");
+        scratch.boundary_states[idx]
+    };
+
+    let mut rng_base = match ptb.policy {
+        StartPolicy::Random { seed } => {
+            Some(Rng64::seeded(seed ^ (span.index as u64).wrapping_mul(0x9e3779b97f4a7c15)))
+        }
+        _ => None,
+    };
+
+    for s in 0..n_sub {
+        let emit_lo = head + s * ptb.f0;
+        let emit_hi = head + ((s + 1) * ptb.f0).min(span.out_len);
+        let from = starts[s];
+        let at_final_stage = from == span.len - 1;
+        let start = if at_final_stage {
+            // The true start is available here: global argmax (or the
+            // terminated state) — no policy needed (paper §IV-D: "only
+            // the path metrics of the final stage is available").
+            match tb {
+                TracebackStart::BestMetric => final_best,
+                TracebackStart::State(st) => st,
+            }
+        } else {
+            match ptb.policy {
+                StartPolicy::StoredArgmax => state_of(from, scratch),
+                StartPolicy::Random { .. } => {
+                    let ns = trellis.num_states();
+                    rng_base.as_mut().unwrap().gen_range_usize(0, ns) as u32
+                }
+                StartPolicy::Fixed(st) => st,
+            }
+        };
+        traceback_segment(
+            trellis,
+            scratch,
+            start,
+            from,
+            emit_lo,
+            emit_lo,
+            emit_hi,
+            &mut out[emit_lo - head..emit_hi - head],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{bpsk, llr, AwgnChannel, Rng64};
+    use crate::code::{encode, CodeSpec, Termination};
+    use crate::frames::plan::{plan_frames, FrameGeometry};
+    use crate::util::bits::count_bit_errors;
+
+    fn noiseless(enc: &[u8]) -> Vec<f32> {
+        enc.iter().map(|&b| if b == 0 { 3.0 } else { -3.0 }).collect()
+    }
+
+    fn decode_stream(
+        spec: &CodeSpec,
+        llrs: &[f32],
+        stages: usize,
+        geo: FrameGeometry,
+        ptb: &ParallelTraceback,
+        terminated: bool,
+    ) -> Vec<u8> {
+        let trellis = Trellis::new(spec.clone());
+        let beta = spec.beta as usize;
+        let spans = plan_frames(stages, geo);
+        let mut scratch = FrameScratch::new(trellis.num_states(), geo.span());
+        let mut out = vec![0u8; stages];
+        for span in &spans {
+            let fl = &llrs[span.start * beta..(span.start + span.len) * beta];
+            let start_state = if span.index == 0 { Some(0) } else { None };
+            let is_last = span.out_start + span.out_len == stages;
+            let tb = if is_last && terminated {
+                TracebackStart::State(0)
+            } else {
+                TracebackStart::BestMetric
+            };
+            decode_frame_parallel_tb(
+                &trellis,
+                fl,
+                span,
+                start_state,
+                tb,
+                ptb,
+                &mut scratch,
+                &mut out[span.out_start..span.out_start + span.out_len],
+            );
+        }
+        out
+    }
+
+    #[test]
+    fn noiseless_exact_recovery() {
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(30);
+        let mut bits = vec![0u8; 3000];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let stages = bits.len() + 6;
+        let llrs = noiseless(&enc);
+        let ptb = ParallelTraceback::new(32, 45, StartPolicy::StoredArgmax);
+        let out = decode_stream(&spec, &llrs, stages, FrameGeometry::new(256, 20, 45), &ptb, true);
+        assert_eq!(&out[..bits.len()], &bits[..]);
+    }
+
+    #[test]
+    fn subframe_counts() {
+        let ptb = ParallelTraceback::new(32, 45, StartPolicy::StoredArgmax);
+        assert_eq!(ptb.num_subframes(256), 8);
+        assert_eq!(ptb.num_subframes(250), 8);
+        assert_eq!(ptb.num_subframes(1), 1);
+    }
+
+    #[test]
+    fn stored_argmax_close_to_serial_tb_on_noisy() {
+        // Paper Table III: with v2=45, f0=32 the parallel traceback is
+        // "reliable" — error counts must be close to the serial-tb tiled
+        // decoder on the same realization.
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(31);
+        let mut bits = vec![0u8; 30_000];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let stages = bits.len() + 6;
+        let ch = AwgnChannel::new(3.0, 0.5);
+        let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+        let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+
+        let geo = FrameGeometry::new(256, 20, 45);
+        let ptb = ParallelTraceback::new(32, 45, StartPolicy::StoredArgmax);
+        let par = decode_stream(&spec, &llrs, stages, geo, &ptb, true);
+        let err_par = count_bit_errors(&par[..bits.len()], &bits);
+
+        // Serial tiled baseline on same geometry.
+        let ser = {
+            use crate::viterbi::tiled::decode_frame_serial;
+            let trellis = crate::code::Trellis::new(spec.clone());
+            let spans = plan_frames(stages, geo);
+            let mut scratch = FrameScratch::new(trellis.num_states(), geo.span());
+            let mut out = vec![0u8; stages];
+            for span in &spans {
+                let fl = &llrs[span.start * 2..(span.start + span.len) * 2];
+                let ss = if span.index == 0 { Some(0) } else { None };
+                let is_last = span.out_start + span.out_len == stages;
+                let tb = if is_last { TracebackStart::State(0) } else { TracebackStart::BestMetric };
+                decode_frame_serial(&trellis, fl, span, ss, tb, &mut scratch,
+                    &mut out[span.out_start..span.out_start + span.out_len]);
+            }
+            out
+        };
+        let err_ser = count_bit_errors(&ser[..bits.len()], &bits);
+        assert!(
+            err_par as f64 <= err_ser as f64 * 1.5 + 10.0,
+            "parallel tb errors {err_par} vs serial {err_ser}"
+        );
+    }
+
+    #[test]
+    fn random_start_worse_than_stored_argmax() {
+        // Fig 11: random traceback start states degrade BER at equal v2.
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(32);
+        let mut bits = vec![0u8; 40_000];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let stages = bits.len() + 6;
+        let ch = AwgnChannel::new(3.0, 0.5);
+        let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+        let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+
+        let geo = FrameGeometry::new(256, 20, 20);
+        let run = |policy| {
+            let ptb = ParallelTraceback::new(32, 20, policy);
+            let out = decode_stream(&spec, &llrs, stages, geo, &ptb, true);
+            count_bit_errors(&out[..bits.len()], &bits)
+        };
+        let stored = run(StartPolicy::StoredArgmax);
+        let random = run(StartPolicy::Random { seed: 99 });
+        assert!(
+            random > stored,
+            "random start ({random}) should be worse than stored argmax ({stored})"
+        );
+    }
+
+    #[test]
+    fn tiny_f0_still_correct_noiseless() {
+        let spec = CodeSpec::standard_k5();
+        let mut rng = Rng64::seeded(33);
+        let mut bits = vec![0u8; 500];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let stages = bits.len() + 4;
+        let llrs = noiseless(&enc);
+        let ptb = ParallelTraceback::new(1, 16, StartPolicy::StoredArgmax);
+        let out = decode_stream(&spec, &llrs, stages, FrameGeometry::new(64, 8, 16), &ptb, true);
+        assert_eq!(&out[..bits.len()], &bits[..]);
+    }
+
+    #[test]
+    fn f0_larger_than_frame_degenerates_to_serial() {
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(34);
+        let mut bits = vec![0u8; 2000];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let stages = bits.len() + 6;
+        let ch = AwgnChannel::new(4.0, 0.5);
+        let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+        let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+        let geo = FrameGeometry::new(128, 20, 20);
+        let ptb = ParallelTraceback::new(100_000, 20, StartPolicy::StoredArgmax);
+        let par = decode_stream(&spec, &llrs, stages, geo, &ptb, true);
+        // Compare against serial tiled.
+        let trellis = crate::code::Trellis::new(spec.clone());
+        let spans = plan_frames(stages, geo);
+        let mut scratch = FrameScratch::new(trellis.num_states(), geo.span());
+        let mut ser = vec![0u8; stages];
+        for span in &spans {
+            let fl = &llrs[span.start * 2..(span.start + span.len) * 2];
+            let ss = if span.index == 0 { Some(0) } else { None };
+            let is_last = span.out_start + span.out_len == stages;
+            let tb = if is_last { TracebackStart::State(0) } else { TracebackStart::BestMetric };
+            crate::viterbi::tiled::decode_frame_serial(&trellis, fl, span, ss, tb, &mut scratch,
+                &mut ser[span.out_start..span.out_start + span.out_len]);
+        }
+        assert_eq!(par, ser, "f0 ≥ out_len must reduce to serial traceback");
+    }
+}

@@ -1,0 +1,228 @@
+//! Coordinator property and stress tests: chunker/reassembler
+//! roundtrips under random geometries, batcher conservation under
+//! interleavings, and server stress with mixed stream lengths.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use viterbi::channel::Rng64;
+use viterbi::code::{encode, CodeSpec, Termination};
+use viterbi::coordinator::{
+    BackendSpec, BatchPolicy, Batcher, Chunker, DecodeServer, FrameJob, Reassembler,
+    ServerConfig,
+};
+use viterbi::frames::plan::FrameGeometry;
+use viterbi::util::check;
+use viterbi::viterbi::StreamEnd;
+
+#[test]
+fn property_chunker_blocks_reconstruct_stream() {
+    // Every stream LLR must appear in at least one frame block at the
+    // right in-block position; padding must be exactly the out-of-range
+    // stages.
+    check::forall(
+        "chunker covers the stream with correct offsets",
+        60,
+        0xC0DE,
+        |rng| {
+            let (f, v1, v2) = check::gen_frame_geometry(rng);
+            let stages = rng.gen_range_usize(1, 800);
+            (f, v1, v2, stages, rng.next_u64())
+        },
+        |&(f, v1, v2, stages, seed)| {
+            let spec = CodeSpec::standard_k5();
+            let geo = FrameGeometry::new(f, v1, v2);
+            let chunker = Chunker::new(spec, geo);
+            let mut rng = Rng64::seeded(seed);
+            // Unique nonzero values so positions are identifiable.
+            let llrs: Vec<f32> = (0..stages * 2).map(|i| i as f32 + 1.0).collect();
+            let _ = rng.next_u64();
+            let req = viterbi::coordinator::DecodeRequest::new(
+                1,
+                llrs.clone(),
+                2,
+                StreamEnd::Truncated,
+            );
+            let jobs = chunker.chunk(&req);
+            assert_eq!(jobs.len(), chunker.frame_count(stages));
+            for job in &jobs {
+                let start = job.frame_index as isize * f as isize - v1 as isize;
+                for row in 0..geo.span() {
+                    let t = start + row as isize;
+                    let got = &job.llr_block[row * 2..row * 2 + 2];
+                    if t >= 0 && (t as usize) < stages {
+                        let src = t as usize * 2;
+                        assert_eq!(got, &llrs[src..src + 2], "frame {} row {row}", job.frame_index);
+                    } else {
+                        assert_eq!(got, &[0.0, 0.0], "padding at frame {} row {row}", job.frame_index);
+                    }
+                }
+            }
+            // Decoded regions tile the stream.
+            let covered: usize = jobs.len() * f;
+            assert!(covered >= stages);
+        },
+    );
+}
+
+#[test]
+fn property_reassembler_any_completion_order() {
+    check::forall(
+        "reassembler completes under any frame arrival order",
+        60,
+        0xA55E,
+        |rng| {
+            let frames = rng.gen_range_usize(1, 24);
+            let f = rng.gen_range_usize(1, 64);
+            let stages = rng.gen_range_usize((frames - 1) * f + 1, frames * f + 1);
+            // A random arrival permutation.
+            let mut order: Vec<usize> = (0..frames).collect();
+            for i in (1..frames).rev() {
+                let j = rng.gen_range_usize(0, i + 1);
+                order.swap(i, j);
+            }
+            (frames, f, stages, order)
+        },
+        |(frames, f, stages, order)| {
+            let mut r = Reassembler::new();
+            r.expect(9, *frames, *stages, *f, Instant::now());
+            let mut resp = None;
+            for (k, &idx) in order.iter().enumerate() {
+                let fr = viterbi::coordinator::FrameResult {
+                    request_id: 9,
+                    frame_index: idx,
+                    bits: vec![(idx % 2) as u8; *f],
+                };
+                let got = r.accept(fr);
+                if k + 1 < order.len() {
+                    assert!(got.is_none(), "completed early");
+                } else {
+                    resp = got;
+                }
+            }
+            let resp = resp.expect("must complete on last frame");
+            assert_eq!(resp.bits.len(), *stages);
+            for (t, &b) in resp.bits.iter().enumerate() {
+                assert_eq!(b, ((t / f) % 2) as u8, "bit {t}");
+            }
+        },
+    );
+}
+
+#[test]
+fn property_batcher_respects_fifo_and_bounds_under_deadline_interleaving() {
+    check::forall(
+        "batcher FIFO under mixed push/deadline",
+        60,
+        0xBA7C2,
+        |rng| {
+            let max_batch = rng.gen_range_usize(1, 10);
+            let ops = rng.gen_range_usize(1, 120);
+            let plan: Vec<bool> = (0..ops).map(|_| rng.gen_range_usize(0, 4) == 0).collect();
+            (max_batch, plan)
+        },
+        |(max_batch, plan)| {
+            let mut b = Batcher::new(BatchPolicy {
+                max_batch: *max_batch,
+                max_wait: Duration::from_millis(0), // every poll flushes
+            });
+            let mut emitted = Vec::new();
+            let mut pushed = 0usize;
+            for &do_poll in plan {
+                if do_poll {
+                    if let Some(batch) = b.poll_deadline(Instant::now()) {
+                        emitted.extend(batch.jobs.iter().map(|j| j.frame_index));
+                    }
+                } else {
+                    let job = FrameJob {
+                        request_id: 1,
+                        frame_index: pushed,
+                        llr_block: Vec::new(),
+                        pin_state0: false,
+                        submitted_at: Instant::now(),
+                    };
+                    pushed += 1;
+                    if let Some(batch) = b.push(job) {
+                        assert!(batch.jobs.len() <= *max_batch);
+                        emitted.extend(batch.jobs.iter().map(|j| j.frame_index));
+                    }
+                }
+            }
+            for batch in b.flush_all() {
+                emitted.extend(batch.jobs.iter().map(|j| j.frame_index));
+            }
+            assert_eq!(emitted, (0..pushed).collect::<Vec<_>>());
+        },
+    );
+}
+
+#[test]
+fn server_stress_mixed_lengths_and_rejection() {
+    let server = Arc::new(
+        DecodeServer::start(ServerConfig {
+            backend: BackendSpec::Native {
+                spec: CodeSpec::standard_k5(),
+                geo: FrameGeometry::new(32, 8, 12),
+                f0: Some(8),
+            },
+            batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
+            high_watermark: 512,
+            low_watermark: 128,
+        })
+        .unwrap(),
+    );
+    let spec = CodeSpec::standard_k5();
+    let mut handles = Vec::new();
+    for t in 0..6u64 {
+        let server = Arc::clone(&server);
+        let spec = spec.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng64::seeded(900 + t);
+            for i in 0..20usize {
+                let n = 1 + ((t as usize * 31 + i * 57) % 300);
+                let mut msg = vec![0u8; n];
+                rng.fill_bits(&mut msg);
+                let enc = encode(&spec, &msg, Termination::Truncated);
+                let llrs: Vec<f32> =
+                    enc.iter().map(|&b| if b == 0 { 4.0 } else { -4.0 }).collect();
+                let resp = server.decode_blocking(llrs, StreamEnd::Truncated);
+                assert_eq!(resp.bits.len(), n);
+                // Noiseless: all but the trailing (no right context for
+                // the final stages of truncated streams) bits match.
+                let check_len = n.saturating_sub(8);
+                assert_eq!(&resp.bits[..check_len], &msg[..check_len], "t={t} i={i} n={n}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = server.metrics();
+    assert_eq!(m.responses, 120);
+    assert_eq!(server.in_flight_frames(), 0);
+}
+
+#[test]
+fn try_submit_rejects_when_saturated() {
+    // A tiny watermark + a big request forces rejection.
+    let server = DecodeServer::start(ServerConfig {
+        backend: BackendSpec::Native {
+            spec: CodeSpec::standard_k5(),
+            geo: FrameGeometry::new(32, 8, 12),
+            f0: None,
+        },
+        batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(5) },
+        high_watermark: 4,
+        low_watermark: 1,
+    })
+    .unwrap();
+    // 10 frames > high watermark of 4 → immediate rejection.
+    let llrs = vec![0.5f32; 32 * 10 * 2];
+    assert!(server.try_submit(llrs, StreamEnd::Truncated).is_none());
+    assert_eq!(server.metrics().rejected, 1);
+    // A 1-frame request is accepted and completes.
+    let llrs = vec![0.5f32; 32 * 2];
+    let id = server.try_submit(llrs, StreamEnd::Truncated).expect("small request fits");
+    let resp = server.wait(id);
+    assert_eq!(resp.bits.len(), 32);
+}

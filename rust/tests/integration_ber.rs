@@ -1,0 +1,274 @@
+//! Cross-module integration: the full Fig-8 chain (encode → puncture →
+//! BPSK → AWGN → LLR → depuncture → decode) through every engine
+//! variant, plus property tests on the code/channel substrates.
+
+use std::sync::Arc;
+
+use viterbi::ber::{measure_point, soft_viterbi_ber, BerConfig, DistanceSpectrum};
+use viterbi::channel::{bpsk, llr, AwgnChannel, LlrQuantizer, Rng64};
+use viterbi::code::{
+    depuncture_llrs, encode, puncture, CodeSpec, PuncturePattern, Termination,
+};
+use viterbi::frames::plan::FrameGeometry;
+use viterbi::util::bits::count_bit_errors;
+use viterbi::util::check;
+use viterbi::util::threadpool::ThreadPool;
+use viterbi::viterbi::{
+    Engine, HardEngine, ParallelEngine, ParallelTraceback, ScalarEngine, StartPolicy,
+    StreamEnd, TiledEngine, TracebackMode,
+};
+
+fn engines(spec: &CodeSpec) -> Vec<Box<dyn Engine>> {
+    vec![
+        Box::new(ScalarEngine::new(spec.clone())),
+        Box::new(TiledEngine::new(
+            spec.clone(),
+            FrameGeometry::new(128, 20, 30),
+            TracebackMode::FrameSerial,
+        )),
+        Box::new(TiledEngine::new(
+            spec.clone(),
+            FrameGeometry::new(256, 20, 45),
+            TracebackMode::Parallel(ParallelTraceback::new(32, 45, StartPolicy::StoredArgmax)),
+        )),
+        Box::new(ParallelEngine::new(
+            TiledEngine::new(
+                spec.clone(),
+                FrameGeometry::new(256, 20, 45),
+                TracebackMode::Parallel(ParallelTraceback::new(
+                    32,
+                    45,
+                    StartPolicy::StoredArgmax,
+                )),
+            ),
+            Arc::new(ThreadPool::new(4)),
+        )),
+    ]
+}
+
+#[test]
+fn every_engine_survives_the_full_chain() {
+    let spec = CodeSpec::standard_k7();
+    let mut rng = Rng64::seeded(500);
+    let n = 20_000usize;
+    let mut msg = vec![0u8; n];
+    rng.fill_bits(&mut msg);
+    let coded = encode(&spec, &msg, Termination::Terminated);
+    let ch = AwgnChannel::new(4.0, 0.5);
+    let rx = ch.transmit(&bpsk::modulate(&coded), &mut rng);
+    let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+    let stages = n + 6;
+
+    for engine in engines(&spec) {
+        let out = engine.decode_stream(&llrs, stages, StreamEnd::Terminated);
+        let errors = count_bit_errors(&out[..n], &msg);
+        let ber = errors as f64 / n as f64;
+        assert!(
+            ber < 3e-4,
+            "engine {} BER {ber:.2e} too high at 4 dB",
+            engine.name()
+        );
+    }
+}
+
+#[test]
+fn punctured_chain_all_rates() {
+    let spec = CodeSpec::standard_k7();
+    let engine = TiledEngine::new(
+        spec.clone(),
+        FrameGeometry::new(256, 32, 32),
+        TracebackMode::FrameSerial,
+    );
+    let mut rng = Rng64::seeded(501);
+    let n = 30_000usize;
+    let mut msg = vec![0u8; n];
+    rng.fill_bits(&mut msg);
+    let coded = encode(&spec, &msg, Termination::Terminated);
+    let stages = n + 6;
+
+    let mut bers = Vec::new();
+    for label in ["1/2", "2/3", "3/4"] {
+        let pat = PuncturePattern::by_label(label).unwrap();
+        let tx = puncture(&coded, 2, &pat);
+        let ch = AwgnChannel::new(4.5, pat.effective_rate());
+        let rx = ch.transmit(&bpsk::modulate(&tx), &mut rng);
+        let rx_llrs = llr::llrs_from_samples(&rx, ch.sigma());
+        let full = depuncture_llrs(&rx_llrs, 2, &pat, stages);
+        let out = engine.decode_stream(&full, stages, StreamEnd::Terminated);
+        bers.push(count_bit_errors(&out[..n], &msg) as f64 / n as f64);
+    }
+    // Monotone degradation with rate (allowing zero-error ties at the
+    // strongest rates).
+    assert!(bers[0] <= bers[1] + 1e-9, "1/2 {0:?} vs 2/3 {1:?}", bers[0], bers[1]);
+    assert!(bers[1] <= bers[2] + 1e-9, "2/3 {0:?} vs 3/4 {1:?}", bers[1], bers[2]);
+    assert!(bers[2] < 0.05, "3/4 BER way off: {}", bers[2]);
+}
+
+#[test]
+fn quantized_llrs_cost_little_at_6bits() {
+    let spec = CodeSpec::standard_k7();
+    let engine = ScalarEngine::new(spec.clone());
+    let mut rng = Rng64::seeded(502);
+    let n = 30_000usize;
+    let mut msg = vec![0u8; n];
+    rng.fill_bits(&mut msg);
+    let coded = encode(&spec, &msg, Termination::Terminated);
+    let ch = AwgnChannel::new(3.0, 0.5);
+    let rx = ch.transmit(&bpsk::modulate(&coded), &mut rng);
+    let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+    let stages = n + 6;
+
+    let e_float = count_bit_errors(
+        &engine.decode_stream(&llrs, stages, StreamEnd::Terminated)[..n],
+        &msg,
+    );
+    let q6 = LlrQuantizer::new(6, 16.0);
+    let e_q6 = count_bit_errors(
+        &engine.decode_stream(&q6.roundtrip(&llrs), stages, StreamEnd::Terminated)[..n],
+        &msg,
+    );
+    let q2 = LlrQuantizer::new(2, 16.0);
+    let e_q2 = count_bit_errors(
+        &engine.decode_stream(&q2.roundtrip(&llrs), stages, StreamEnd::Terminated)[..n],
+        &msg,
+    );
+    assert!(
+        (e_q6 as f64) <= e_float as f64 * 1.5 + 5.0,
+        "6-bit quantization too lossy: {e_q6} vs {e_float}"
+    );
+    assert!(e_q2 >= e_q6, "2-bit ({e_q2}) should not beat 6-bit ({e_q6})");
+}
+
+#[test]
+fn harness_matches_direct_loop() {
+    // The BerConfig-driven harness and a hand-rolled loop must agree
+    // on the same seed-derived channel (consistency of the Fig-8 path).
+    let spec = CodeSpec::standard_k7();
+    let engine = ScalarEngine::new(spec.clone());
+    let cfg = BerConfig {
+        block_bits: 4096,
+        target_errors: 50,
+        max_bits: 300_000,
+        seed: 77,
+        puncture: None,
+    };
+    let p = measure_point(&spec, &engine, &cfg, 3.0);
+    assert!(p.reliable);
+    let bound = soft_viterbi_ber(3.0, 0.5, &DistanceSpectrum::k7_171_133());
+    assert!(p.ber <= bound * 2.0, "measured {} vs bound {}", p.ber, bound);
+}
+
+#[test]
+fn hard_adapter_composes_with_tiled() {
+    let spec = CodeSpec::standard_k7();
+    let eng = HardEngine::new(TiledEngine::new(
+        spec.clone(),
+        FrameGeometry::new(128, 20, 30),
+        TracebackMode::FrameSerial,
+    ));
+    let mut rng = Rng64::seeded(503);
+    let mut msg = vec![0u8; 5000];
+    rng.fill_bits(&mut msg);
+    let coded = encode(&spec, &msg, Termination::Terminated);
+    // 20 scattered hard errors, far apart: correctable.
+    let mut rx = coded.clone();
+    for i in 0..20 {
+        rx[i * 497] ^= 1;
+    }
+    let out = eng.decode_bits(&rx, msg.len() + 6, StreamEnd::Terminated);
+    assert_eq!(&out[..msg.len()], &msg[..]);
+}
+
+#[test]
+fn property_roundtrip_noiseless_random_geometry() {
+    check::forall(
+        "noiseless decode is exact for any frame geometry",
+        40,
+        0xD0_0D,
+        |rng| {
+            let (f, v1, v2) = check::gen_frame_geometry(rng);
+            let f0 = rng.gen_range_usize(1, f.max(2));
+            let n = rng.gen_range_usize(50, 1500);
+            let seed = rng.next_u64();
+            (f, v1, v2.max(18), f0, n, seed)
+        },
+        |&(f, v1, v2, f0, n, seed)| {
+            let spec = CodeSpec::standard_k7();
+            let mut rng = Rng64::seeded(seed);
+            let mut msg = vec![0u8; n];
+            rng.fill_bits(&mut msg);
+            let coded = encode(&spec, &msg, Termination::Terminated);
+            let llrs: Vec<f32> =
+                coded.iter().map(|&b| if b == 0 { 3.0 } else { -3.0 }).collect();
+            let engine = TiledEngine::new(
+                spec,
+                FrameGeometry::new(f, v1, v2),
+                TracebackMode::Parallel(ParallelTraceback::new(
+                    f0,
+                    v2,
+                    StartPolicy::StoredArgmax,
+                )),
+            );
+            let out = engine.decode_stream(&llrs, n + 6, StreamEnd::Terminated);
+            assert_eq!(&out[..n], &msg[..], "f={f} v1={v1} v2={v2} f0={f0} n={n}");
+        },
+    );
+}
+
+#[test]
+fn property_puncture_depuncture_positions() {
+    check::forall(
+        "depuncture inverts puncture positions",
+        100,
+        0xD00D2,
+        |rng| {
+            let label = ["1/2", "2/3", "3/4"][rng.gen_range_usize(0, 3)];
+            let stages = rng.gen_range_usize(1, 400);
+            (label, stages, rng.next_u64())
+        },
+        |&(label, stages, seed)| {
+            let pat = PuncturePattern::by_label(label).unwrap();
+            let mut rng = Rng64::seeded(seed);
+            let llrs = check::gen_llrs(&mut rng, viterbi::code::punctured_len(stages, 2, &pat), 4.0);
+            let full = depuncture_llrs(&llrs, 2, &pat, stages);
+            assert_eq!(full.len(), stages * 2);
+            // Every original value appears in order; punctured slots are 0.
+            let mut kept: Vec<f32> = Vec::new();
+            for t in 0..stages {
+                let col = t % pat.period();
+                for lane in 0..2 {
+                    if pat.keep[lane][col] {
+                        kept.push(full[t * 2 + lane]);
+                    }
+                }
+            }
+            assert_eq!(kept, llrs);
+        },
+    );
+}
+
+#[test]
+fn property_llr_scale_invariance() {
+    // Max-metric Viterbi must be invariant to positive LLR scaling.
+    check::forall(
+        "decoder invariant under positive LLR scaling",
+        20,
+        0x5CA1E,
+        |rng| (rng.next_u64(), 0.25 + rng.uniform() * 10.0),
+        |&(seed, scale)| {
+            let spec = CodeSpec::standard_k7();
+            let engine = ScalarEngine::new(spec.clone());
+            let mut rng = Rng64::seeded(seed);
+            let mut msg = vec![0u8; 800];
+            rng.fill_bits(&mut msg);
+            let coded = encode(&spec, &msg, Termination::Terminated);
+            let ch = AwgnChannel::new(1.0, 0.5);
+            let rx = ch.transmit(&bpsk::modulate(&coded), &mut rng);
+            let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+            let scaled: Vec<f32> = llrs.iter().map(|&x| x * scale as f32).collect();
+            let a = engine.decode_stream(&llrs, 806, StreamEnd::Terminated);
+            let b = engine.decode_stream(&scaled, 806, StreamEnd::Terminated);
+            assert_eq!(a, b, "scale {scale}");
+        },
+    );
+}
