@@ -4,6 +4,10 @@
 //! Methodology: warm-up runs, then N timed samples of the closure;
 //! reports mean ± stddev, min, and a derived throughput when the
 //! caller supplies a per-iteration work amount.
+//!
+//! Included via `mod harness;` by each bench target; not every target
+//! uses every helper.
+#![allow(dead_code)]
 
 use std::time::Instant;
 

@@ -1,0 +1,235 @@
+//! The [`Measurement`] record and the `BENCH_*.json` line-delimited
+//! JSON writer/reader. Every field is documented in BENCHMARKS.md
+//! ("The record schema"); changing this struct means updating that
+//! table and bumping [`SCHEMA_VERSION`].
+
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::util::json::{Json, ObjBuilder};
+
+/// Schema tag stamped into every record so readers can reject files
+/// written by an incompatible harness.
+pub const SCHEMA_VERSION: &str = "viterbi-bench/1";
+
+/// One engine × scenario benchmark measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Measurement {
+    /// Registry name of the engine (`scalar`, `tiled`, `unified`,
+    /// `parallel`, `streaming`, `hard`).
+    pub engine: String,
+    /// Full configured engine name, e.g. `unified(f=256,v1=20,v2=45,f0=32)`.
+    pub engine_detail: String,
+    /// Constraint length K of the code.
+    pub k: u32,
+    /// Mother-code rate label, e.g. `1/2`.
+    pub rate: String,
+    /// Puncturing label (`none`, `2/3`, `3/4`).
+    pub puncture: String,
+    /// Decoded stages per frame (f).
+    pub frame_len: usize,
+    /// Frames of payload per measured stream.
+    pub batch_frames: usize,
+    /// Information bits decoded per timed iteration (= trellis stages).
+    pub stream_bits: usize,
+    /// Timed samples taken (after warmup).
+    pub samples: usize,
+    /// Warmup iterations discarded before timing.
+    pub warmup: usize,
+    /// Worker threads available to the engine.
+    pub threads: usize,
+    /// Median throughput over the samples, Mbit/s of information bits.
+    pub median_mbps: f64,
+    /// Mean throughput, Mbit/s.
+    pub mean_mbps: f64,
+    /// Sample standard deviation of throughput, Mbit/s.
+    pub stddev_mbps: f64,
+    /// Fastest sample, Mbit/s.
+    pub max_mbps: f64,
+    /// Analytic peak resident traceback working memory in bytes
+    /// (`memmodel::traceback_working_bytes`, per-engine rule in the
+    /// registry entry).
+    pub peak_traceback_bytes: usize,
+    /// RNG seed the workload was generated from (reproducibility).
+    pub seed: u64,
+}
+
+impl Measurement {
+    /// Serialize to one JSON object (one `BENCH_*.json` line).
+    pub fn to_json(&self) -> Json {
+        ObjBuilder::new()
+            .str("schema", SCHEMA_VERSION)
+            .str("engine", &self.engine)
+            .str("engine_detail", &self.engine_detail)
+            .num("k", self.k as f64)
+            .str("rate", &self.rate)
+            .str("puncture", &self.puncture)
+            .num("frame_len", self.frame_len as f64)
+            .num("batch_frames", self.batch_frames as f64)
+            .num("stream_bits", self.stream_bits as f64)
+            .num("samples", self.samples as f64)
+            .num("warmup", self.warmup as f64)
+            .num("threads", self.threads as f64)
+            .num("median_mbps", self.median_mbps)
+            .num("mean_mbps", self.mean_mbps)
+            .num("stddev_mbps", self.stddev_mbps)
+            .num("max_mbps", self.max_mbps)
+            .num("peak_traceback_bytes", self.peak_traceback_bytes as f64)
+            // Serialized as a string: a u64 seed does not fit losslessly
+            // in a JSON number (f64 mantissa), and the seed must allow
+            // bit-exact reruns.
+            .str("seed", &self.seed.to_string())
+            .build()
+    }
+
+    /// Deserialize from a parsed JSON object, validating the schema tag
+    /// and the presence/type of every field.
+    pub fn from_json(j: &Json) -> Result<Measurement, String> {
+        let schema = str_field(j, "schema")?;
+        if schema != SCHEMA_VERSION {
+            return Err(format!(
+                "unsupported schema {schema:?} (this harness reads {SCHEMA_VERSION:?})"
+            ));
+        }
+        Ok(Measurement {
+            engine: str_field(j, "engine")?,
+            engine_detail: str_field(j, "engine_detail")?,
+            k: num_field(j, "k")? as u32,
+            rate: str_field(j, "rate")?,
+            puncture: str_field(j, "puncture")?,
+            frame_len: num_field(j, "frame_len")? as usize,
+            batch_frames: num_field(j, "batch_frames")? as usize,
+            stream_bits: num_field(j, "stream_bits")? as usize,
+            samples: num_field(j, "samples")? as usize,
+            warmup: num_field(j, "warmup")? as usize,
+            threads: num_field(j, "threads")? as usize,
+            median_mbps: num_field(j, "median_mbps")?,
+            mean_mbps: num_field(j, "mean_mbps")?,
+            stddev_mbps: num_field(j, "stddev_mbps")?,
+            max_mbps: num_field(j, "max_mbps")?,
+            peak_traceback_bytes: num_field(j, "peak_traceback_bytes")? as usize,
+            seed: str_field(j, "seed")?
+                .parse::<u64>()
+                .map_err(|_| "field \"seed\" is not a u64".to_string())?,
+        })
+    }
+}
+
+fn str_field(j: &Json, key: &str) -> Result<String, String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing or non-string field {key:?}"))
+}
+
+fn num_field(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing or non-numeric field {key:?}"))
+}
+
+/// Write records as line-delimited JSON (one object per line).
+pub fn write_jsonl(path: &Path, records: &[Measurement]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    for r in records {
+        writeln!(f, "{}", r.to_json().render())?;
+    }
+    Ok(())
+}
+
+/// Read a line-delimited `BENCH_*.json` file back into records. Blank
+/// lines are skipped; any malformed line aborts with its line number.
+pub fn read_jsonl(path: &Path) -> Result<Vec<Measurement>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading {}: {e}", path.display()))?;
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        out.push(Measurement::from_json(&j).map_err(|e| format!("line {}: {e}", lineno + 1))?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Measurement {
+        Measurement {
+            engine: "unified".into(),
+            engine_detail: "unified(f=256,v1=20,v2=45,f0=32)".into(),
+            k: 7,
+            rate: "1/2".into(),
+            puncture: "none".into(),
+            frame_len: 256,
+            batch_frames: 4,
+            stream_bits: 1024,
+            samples: 9,
+            warmup: 2,
+            threads: 8,
+            median_mbps: 41.25,
+            mean_mbps: 40.9,
+            stddev_mbps: 1.1,
+            max_mbps: 42.0,
+            peak_traceback_bytes: 3080,
+            seed: 0xBE12,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_record() {
+        let m = sample();
+        let j = m.to_json();
+        let back = Measurement::from_json(&j).unwrap();
+        assert_eq!(back, m);
+        // And through the textual form too.
+        let reparsed = crate::util::json::Json::parse(&j.render()).unwrap();
+        assert_eq!(Measurement::from_json(&reparsed).unwrap(), m);
+    }
+
+    #[test]
+    fn rejects_wrong_schema_and_missing_fields() {
+        let mut j = sample().to_json();
+        if let Json::Obj(fields) = &mut j {
+            fields[0].1 = Json::str("other-harness/9");
+        }
+        assert!(Measurement::from_json(&j).unwrap_err().contains("unsupported schema"));
+        let partial = Json::parse(r#"{"schema":"viterbi-bench/1","engine":"scalar"}"#).unwrap();
+        assert!(Measurement::from_json(&partial).is_err());
+    }
+
+    #[test]
+    fn seed_above_2_53_survives_roundtrip() {
+        // A u64 seed does not fit in an f64 mantissa; the string
+        // serialization must preserve it exactly.
+        let mut m = sample();
+        m.seed = (1u64 << 53) + 1;
+        let back = Measurement::from_json(&Json::parse(&m.to_json().render()).unwrap()).unwrap();
+        assert_eq!(back.seed, m.seed);
+    }
+
+    #[test]
+    fn jsonl_file_roundtrip() {
+        let mut a = sample();
+        let mut b = sample();
+        b.engine = "scalar".into();
+        b.median_mbps = 12.0;
+        a.seed = 1;
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("BENCH_test_{}.json", std::process::id()));
+        write_jsonl(&path, &[a.clone(), b.clone()]).unwrap();
+        let back = read_jsonl(&path).unwrap();
+        assert_eq!(back, vec![a, b]);
+        // Every line is independently well-formed JSON.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            assert!(Json::parse(line).is_ok());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

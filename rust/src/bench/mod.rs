@@ -1,0 +1,29 @@
+//! Benchmark/measurement subsystem — the repo's rebar-style harness
+//! (modeled on BurntSushi/rebar's METHODOLOGY/FORMAT split; see
+//! BENCHMARKS.md for the methodology and the record schema).
+//!
+//! Three pieces:
+//!
+//! * [`Measurement`] — one engine × scenario measurement record:
+//!   engine identity, code parameters, frame geometry, throughput
+//!   statistics (median/mean/stddev of Mbit/s over timed samples) and
+//!   the analytic peak resident traceback memory from `memmodel`.
+//! * [`measurement::write_jsonl`] / [`measurement::read_jsonl`] — the
+//!   line-delimited `BENCH_*.json` writer/reader built on
+//!   `util::json` (one record per line, so files concatenate and
+//!   diff cleanly across perf PRs).
+//! * [`runner`] — runs any subset of the engine registry
+//!   (`viterbi::registry`) over a declarative [`scenario`] matrix and
+//!   produces the records. The `bench` CLI subcommand
+//!   (`viterbi-repro bench`) is a thin wrapper over this module.
+//!
+//! Every future perf PR is judged against the `BENCH_*.json` baselines
+//! this subsystem emits (ROADMAP "fast as the hardware allows").
+
+pub mod measurement;
+pub mod runner;
+pub mod scenario;
+
+pub use measurement::{read_jsonl, write_jsonl, Measurement, SCHEMA_VERSION};
+pub use runner::{run_matrix, run_scenario, BenchOptions};
+pub use scenario::{matrix, parse_engines, parse_frame_lens, Scenario};

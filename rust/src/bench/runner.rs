@@ -1,0 +1,204 @@
+//! The benchmark runner: builds each scenario's engine from the
+//! registry, generates a deterministic random-LLR workload, and times
+//! decode passes into a [`Measurement`].
+//!
+//! Methodology (BENCHMARKS.md "Methodology" documents the rationale):
+//! warmup iterations are run and discarded, then each timed sample is
+//! one full-stream decode; throughput counts *information* bits (one
+//! decoded bit per trellis stage), and the headline statistic is the
+//! **median** over samples — robust against scheduler noise, exactly
+//! as rebar argues for.
+
+use std::time::Instant;
+
+use crate::channel::Rng64;
+use crate::code::CodeSpec;
+use crate::frames::plan::FrameGeometry;
+use crate::util::stats::{median, Summary};
+use crate::viterbi::registry::{self, BuildParams, EngineSpec};
+use crate::viterbi::{Engine as _, StreamEnd};
+use super::measurement::Measurement;
+use super::scenario::Scenario;
+
+/// Knobs shared by every scenario in one `bench` run.
+#[derive(Debug, Clone)]
+pub struct BenchOptions {
+    /// Timed samples per scenario (median of these is the headline).
+    pub samples: usize,
+    /// Discarded warmup iterations per scenario.
+    pub warmup: usize,
+    /// Worker threads for the multithreaded engines.
+    pub threads: usize,
+    /// Workload RNG seed (recorded in every Measurement).
+    pub seed: u64,
+    /// Left overlap v1 for the frame-based engines.
+    pub v1: usize,
+    /// Right overlap v2 for the frame-based engines.
+    pub v2: usize,
+    /// Parallel-traceback subframe size f0.
+    pub f0: usize,
+    /// Decision delay for the streaming engine.
+    pub delay: usize,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions {
+            samples: 9,
+            warmup: 2,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            seed: 0xBE12_2020,
+            v1: 20,
+            v2: 45,
+            f0: 32,
+            delay: 96,
+        }
+    }
+}
+
+impl BenchOptions {
+    fn build_params(&self, frame_len: usize, stream_stages: usize) -> BuildParams {
+        BuildParams {
+            spec: CodeSpec::standard_k7(),
+            geo: FrameGeometry::new(frame_len, self.v1, self.v2),
+            f0: self.f0,
+            threads: self.threads,
+            delay: self.delay,
+            stream_stages,
+        }
+    }
+}
+
+/// Run one scenario with an already-resolved registry entry.
+pub fn run_scenario(entry: &EngineSpec, sc: &Scenario, opts: &BenchOptions) -> Measurement {
+    assert!(opts.samples > 0, "need at least one timed sample");
+    let stages = sc.frame_len * sc.frames.max(1);
+    let params = opts.build_params(sc.frame_len, stages);
+    let engine = (entry.build)(&params);
+    let beta = params.spec.beta as usize;
+
+    // Deterministic random-LLR workload: decode work is
+    // data-independent (fixed trellis), so noise is a valid throughput
+    // workload; the seed is recorded for bit-exact reruns.
+    let mut rng = Rng64::seeded(opts.seed ^ stages as u64);
+    let llrs: Vec<f32> = (0..stages * beta)
+        .map(|_| (rng.uniform() as f32 - 0.5) * 8.0)
+        .collect();
+
+    for _ in 0..opts.warmup {
+        std::hint::black_box(engine.decode_stream(&llrs, stages, StreamEnd::Truncated));
+    }
+    let mut mbps = Vec::with_capacity(opts.samples);
+    for _ in 0..opts.samples {
+        let t0 = Instant::now();
+        let out = engine.decode_stream(&llrs, stages, StreamEnd::Truncated);
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(&out);
+        mbps.push(stages as f64 / dt / 1e6);
+    }
+    let mut summary = Summary::new();
+    mbps.iter().for_each(|&x| summary.add(x));
+
+    Measurement {
+        engine: entry.name.to_string(),
+        engine_detail: engine.name().to_string(),
+        k: params.spec.k,
+        rate: format!("1/{}", params.spec.beta),
+        puncture: "none".to_string(),
+        frame_len: sc.frame_len,
+        batch_frames: sc.frames,
+        stream_bits: stages,
+        samples: opts.samples,
+        warmup: opts.warmup,
+        threads: opts.threads,
+        median_mbps: median(&mbps),
+        mean_mbps: summary.mean(),
+        stddev_mbps: if opts.samples > 1 { summary.stddev() } else { 0.0 },
+        max_mbps: summary.max(),
+        peak_traceback_bytes: (entry.traceback_bytes)(&params),
+        seed: opts.seed,
+    }
+}
+
+/// Run a whole scenario matrix, calling `progress` after each record
+/// (the CLI prints the table row there). Unknown engine names panic —
+/// resolve scenarios through [`super::scenario::parse_engines`] first.
+pub fn run_matrix<F: FnMut(&Measurement)>(
+    scenarios: &[Scenario],
+    opts: &BenchOptions,
+    mut progress: F,
+) -> Vec<Measurement> {
+    let mut out = Vec::with_capacity(scenarios.len());
+    for sc in scenarios {
+        let entry = registry::find(&sc.engine)
+            .unwrap_or_else(|| panic!("engine {:?} not in registry", sc.engine));
+        let m = run_scenario(&entry, sc, opts);
+        progress(&m);
+        out.push(m);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::scenario::matrix;
+
+    fn quick_opts() -> BenchOptions {
+        BenchOptions { samples: 3, warmup: 1, threads: 2, ..BenchOptions::default() }
+    }
+
+    #[test]
+    fn scenario_produces_sane_measurement() {
+        let entry = registry::find("unified").unwrap();
+        let sc = Scenario { engine: "unified".into(), frame_len: 128, frames: 4 };
+        let m = run_scenario(&entry, &sc, &quick_opts());
+        assert_eq!(m.engine, "unified");
+        assert!(m.engine_detail.contains("f=128"));
+        assert_eq!(m.stream_bits, 512);
+        assert_eq!(m.k, 7);
+        assert_eq!(m.rate, "1/2");
+        assert!(m.median_mbps > 0.0 && m.median_mbps.is_finite());
+        assert!(m.mean_mbps > 0.0);
+        assert!(m.max_mbps >= m.median_mbps);
+        assert!(m.peak_traceback_bytes > 0);
+    }
+
+    #[test]
+    fn matrix_runs_all_cells_and_reports_progress() {
+        let scenarios = matrix(
+            &["scalar".to_string(), "streaming".to_string()],
+            &[64],
+            2,
+        );
+        let mut seen = 0usize;
+        let records = run_matrix(&scenarios, &quick_opts(), |_| seen += 1);
+        assert_eq!(records.len(), 2);
+        assert_eq!(seen, 2);
+        assert_eq!(records[0].engine, "scalar");
+        assert_eq!(records[1].engine, "streaming");
+    }
+
+    #[test]
+    fn unified_working_set_smaller_than_scalar_on_long_streams() {
+        // The paper's memory claim, as recorded by the bench records.
+        let opts = quick_opts();
+        let long = Scenario { engine: String::new(), frame_len: 256, frames: 64 };
+        let scalar = run_scenario(
+            &registry::find("scalar").unwrap(),
+            &Scenario { engine: "scalar".into(), ..long.clone() },
+            &opts,
+        );
+        let unified = run_scenario(
+            &registry::find("unified").unwrap(),
+            &Scenario { engine: "unified".into(), ..long },
+            &opts,
+        );
+        assert!(
+            unified.peak_traceback_bytes < scalar.peak_traceback_bytes / 10,
+            "unified {} B vs scalar {} B",
+            unified.peak_traceback_bytes,
+            scalar.peak_traceback_bytes
+        );
+    }
+}

@@ -1,0 +1,107 @@
+//! Declarative benchmark scenarios: the (engine × frame length) matrix
+//! the runner sweeps, plus the CLI-argument parsers for engine subsets
+//! and frame-length lists.
+
+use crate::viterbi::registry;
+
+/// One cell of the benchmark matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Scenario {
+    /// Registry name of the engine to run.
+    pub engine: String,
+    /// Decoded stages per frame (f) for the frame-based engines; the
+    /// whole-stream engines inherit it only through the stream length.
+    pub frame_len: usize,
+    /// Frames of payload per measured stream (stream length =
+    /// `frame_len · frames` stages).
+    pub frames: usize,
+}
+
+/// Build the full matrix: every engine crossed with every frame length.
+pub fn matrix(engines: &[String], frame_lens: &[usize], frames: usize) -> Vec<Scenario> {
+    let mut out = Vec::with_capacity(engines.len() * frame_lens.len());
+    for engine in engines {
+        for &frame_len in frame_lens {
+            out.push(Scenario { engine: engine.clone(), frame_len, frames });
+        }
+    }
+    out
+}
+
+/// Parse `--engines`: `all` or a comma-separated subset of registry
+/// names. Unknown names error with the list of valid ones.
+pub fn parse_engines(arg: &str) -> Result<Vec<String>, String> {
+    let known: Vec<&'static str> = registry::registry().iter().map(|e| e.name).collect();
+    if arg == "all" {
+        return Ok(known.iter().map(|s| s.to_string()).collect());
+    }
+    let mut out = Vec::new();
+    for name in arg.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        if !known.contains(&name) {
+            return Err(format!("unknown engine {name:?}; known engines: {known:?} or 'all'"));
+        }
+        if !out.iter().any(|n| n == name) {
+            out.push(name.to_string());
+        }
+    }
+    if out.is_empty() {
+        return Err("no engines selected".to_string());
+    }
+    Ok(out)
+}
+
+/// Parse `--frame-lens`: a comma-separated list of positive integers.
+pub fn parse_frame_lens(arg: &str) -> Result<Vec<usize>, String> {
+    let mut out = Vec::new();
+    for tok in arg.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let f: usize = tok
+            .parse()
+            .map_err(|_| format!("bad frame length {tok:?} (expected an integer)"))?;
+        if f == 0 {
+            return Err("frame length must be positive".to_string());
+        }
+        out.push(f);
+    }
+    if out.is_empty() {
+        return Err("no frame lengths given".to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_is_cross_product() {
+        let m = matrix(
+            &["scalar".to_string(), "unified".to_string()],
+            &[64, 256],
+            4,
+        );
+        assert_eq!(m.len(), 4);
+        assert_eq!(m[0], Scenario { engine: "scalar".into(), frame_len: 64, frames: 4 });
+        assert_eq!(m[3], Scenario { engine: "unified".into(), frame_len: 256, frames: 4 });
+    }
+
+    #[test]
+    fn engines_all_expands_registry() {
+        let all = parse_engines("all").unwrap();
+        assert_eq!(all, vec!["scalar", "tiled", "unified", "parallel", "streaming", "hard"]);
+    }
+
+    #[test]
+    fn engines_subset_and_errors() {
+        assert_eq!(parse_engines("scalar,unified").unwrap(), vec!["scalar", "unified"]);
+        assert_eq!(parse_engines(" scalar , scalar ").unwrap(), vec!["scalar"]);
+        assert!(parse_engines("warp9").unwrap_err().contains("unknown engine"));
+        assert!(parse_engines("").is_err());
+    }
+
+    #[test]
+    fn frame_lens_parse() {
+        assert_eq!(parse_frame_lens("64,256").unwrap(), vec![64, 256]);
+        assert!(parse_frame_lens("0").is_err());
+        assert!(parse_frame_lens("abc").is_err());
+    }
+}

@@ -1,5 +1,12 @@
 //! Command-line interface plumbing (hand-rolled; clap unavailable in
 //! this offline image).
+//!
+//! Subcommand conventions: every subcommand calls
+//! [`Args::check_known`] with its full flag list so typos fail fast,
+//! and comma-separated list flags (e.g. `bench --engines a,b`,
+//! `bench --frame-lens 64,256`) are parsed by the owning subsystem
+//! (`bench::scenario`) so the valid values live next to their
+//! registry.
 
 pub mod args;
 

@@ -1,6 +1,6 @@
 //! Precomputed trellis (encoder FSM) tables.
 //!
-//! Conventions (DESIGN.md §7): a state holds the most recent k−1 input
+//! Conventions (DESIGN.md §5): a state holds the most recent k−1 input
 //! bits, MSB = newest. Consuming input bit `b` in state `i` moves to
 //!
 //! ```text

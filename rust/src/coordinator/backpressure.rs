@@ -11,7 +11,9 @@ use std::sync::{Condvar, Mutex};
 /// Gate decision for non-blocking admission.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Admission {
+    /// The request's frames were admitted and counted in-flight.
     Accepted,
+    /// The gate is saturated; the request was not admitted.
     Rejected,
 }
 
@@ -30,6 +32,7 @@ struct State {
 }
 
 impl BackpressureGate {
+    /// Build a gate with the given high/low watermarks (`low < high`).
     pub fn new(high: usize, low: usize) -> Self {
         assert!(low < high, "low watermark must be below high");
         BackpressureGate {
@@ -40,6 +43,7 @@ impl BackpressureGate {
         }
     }
 
+    /// Frames currently admitted and not yet released.
     pub fn in_flight(&self) -> usize {
         self.state.lock().unwrap().in_flight
     }

@@ -33,15 +33,20 @@ impl Default for BatchPolicy {
 /// A flushed batch of frame jobs.
 #[derive(Debug)]
 pub struct Batch {
+    /// The batched frame jobs, in FIFO submission order.
     pub jobs: Vec<FrameJob>,
     /// Why the batch was emitted (for metrics).
     pub reason: FlushReason,
 }
 
+/// Why a batch left the batcher.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FlushReason {
+    /// `max_batch` jobs were queued.
     Full,
+    /// The oldest queued job reached `max_wait`.
     Deadline,
+    /// The server is shutting down and drained the queue.
     Shutdown,
 }
 
@@ -52,15 +57,18 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Build a batcher with the given policy (`max_batch > 0`).
     pub fn new(policy: BatchPolicy) -> Self {
         assert!(policy.max_batch > 0);
         Batcher { policy, queue: VecDeque::new() }
     }
 
+    /// Jobs currently queued.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Whether the queue is empty.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }

@@ -9,11 +9,14 @@ use super::request::{DecodeRequest, FrameJob};
 /// Uniform-frame chunker for one decode configuration.
 #[derive(Debug, Clone)]
 pub struct Chunker {
+    /// The code the backend decodes.
     pub spec: CodeSpec,
+    /// The backend's (static) frame geometry.
     pub geo: FrameGeometry,
 }
 
 impl Chunker {
+    /// Build a chunker for one decode configuration.
     pub fn new(spec: CodeSpec, geo: FrameGeometry) -> Self {
         Chunker { spec, geo }
     }

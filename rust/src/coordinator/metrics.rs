@@ -28,31 +28,46 @@ struct Inner {
 /// A point-in-time snapshot for reporting.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
+    /// Requests submitted.
     pub requests: u64,
+    /// Responses completed.
     pub responses: u64,
+    /// Frames decoded.
     pub frames: u64,
+    /// Batches executed.
     pub batches: u64,
+    /// Information bits returned to callers.
     pub decoded_bits: u64,
+    /// Requests rejected by backpressure.
     pub rejected: u64,
+    /// Mean batch fill fraction (jobs / bucket size).
     pub mean_batch_occupancy: f64,
+    /// Median end-to-end request latency.
     pub p50_latency: Duration,
+    /// 99th-percentile end-to-end request latency.
     pub p99_latency: Duration,
+    /// Mean backend execution time per batch.
     pub mean_batch_exec: Duration,
 }
 
 impl Metrics {
+    /// Fresh, all-zero metrics.
     pub fn new() -> Self {
         Metrics::default()
     }
 
+    /// Count one submitted request.
     pub fn on_request(&self) {
         self.inner.lock().unwrap().requests += 1;
     }
 
+    /// Count one backpressure rejection.
     pub fn on_reject(&self) {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    /// Record one executed batch of `jobs` jobs in a `bucket`-sized
+    /// executor slot that took `exec`.
     pub fn on_batch(&self, jobs: usize, bucket: usize, exec: Duration) {
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
@@ -61,6 +76,8 @@ impl Metrics {
         m.batch_exec.add(exec.as_secs_f64());
     }
 
+    /// Record one completed response of `bits` bits with the given
+    /// end-to-end latency.
     pub fn on_response(&self, bits: usize, latency_ns: u64) {
         let mut m = self.inner.lock().unwrap();
         m.responses += 1;
@@ -68,6 +85,7 @@ impl Metrics {
         m.request_latency.record(latency_ns);
     }
 
+    /// Take a consistent point-in-time snapshot.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         MetricsSnapshot {

@@ -4,6 +4,8 @@
 //!
 //! See `server::DecodeServer` for the thread topology.
 
+#![warn(missing_docs)]
+
 pub mod backpressure;
 pub mod batcher;
 pub mod chunker;

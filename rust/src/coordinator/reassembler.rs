@@ -26,6 +26,7 @@ pub struct Reassembler {
 }
 
 impl Reassembler {
+    /// Fresh reassembler with no in-flight requests.
     pub fn new() -> Self {
         Reassembler { pending: HashMap::new() }
     }
@@ -53,6 +54,7 @@ impl Reassembler {
         assert!(prev.is_none(), "duplicate request id {id}");
     }
 
+    /// Requests registered but not yet completed.
     pub fn in_flight(&self) -> usize {
         self.pending.len()
     }

@@ -10,17 +10,20 @@ pub type RequestId = u64;
 /// One decode request: a stream of soft LLRs.
 #[derive(Debug, Clone)]
 pub struct DecodeRequest {
+    /// Unique request identifier.
     pub id: RequestId,
     /// Stage-major LLRs (β per trellis stage).
     pub llrs: Vec<f32>,
     /// Number of trellis stages (llrs.len() / β).
     pub stages: usize,
+    /// How the stream ends (fixes the final traceback start).
     pub end: StreamEnd,
     /// Submission timestamp (set by the server).
     pub submitted_at: Instant,
 }
 
 impl DecodeRequest {
+    /// Build a request, deriving the stage count from `beta`.
     pub fn new(id: RequestId, llrs: Vec<f32>, beta: usize, end: StreamEnd) -> Self {
         assert_eq!(llrs.len() % beta, 0, "LLR length not a multiple of beta");
         let stages = llrs.len() / beta;
@@ -31,7 +34,9 @@ impl DecodeRequest {
 /// The decoded stream.
 #[derive(Debug, Clone)]
 pub struct DecodeResponse {
+    /// The request this response answers.
     pub id: RequestId,
+    /// Decoded bits, one per trellis stage of the request.
     pub bits: Vec<u8>,
     /// End-to-end latency in nanoseconds.
     pub latency_ns: u64,
@@ -42,6 +47,7 @@ pub struct DecodeResponse {
 /// One frame of work cut from a request (uniform artifact geometry).
 #[derive(Debug, Clone)]
 pub struct FrameJob {
+    /// The request this frame belongs to.
     pub request_id: RequestId,
     /// Frame index within the request.
     pub frame_index: usize,
@@ -56,7 +62,9 @@ pub struct FrameJob {
 /// Result of decoding one frame.
 #[derive(Debug, Clone)]
 pub struct FrameResult {
+    /// The request this frame belongs to.
     pub request_id: RequestId,
+    /// Frame index within the request.
     pub frame_index: usize,
     /// f decoded bits (possibly over-length for the tail frame; the
     /// reassembler truncates).

@@ -32,14 +32,19 @@ use super::worker::BackendSpec;
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// Which decode backend the executor thread builds.
     pub backend: BackendSpec,
+    /// Dynamic-batching policy for the pump thread.
     pub batch: BatchPolicy,
-    /// Backpressure watermarks (in-flight frames).
+    /// Backpressure high watermark (in-flight frames).
     pub high_watermark: usize,
+    /// Backpressure low watermark (release threshold).
     pub low_watermark: usize,
 }
 
 impl ServerConfig {
+    /// A ready-to-run native-backend configuration at the paper's
+    /// operating point.
     pub fn native_default() -> Self {
         ServerConfig {
             backend: BackendSpec::Native {
@@ -84,6 +89,8 @@ pub struct DecodeServer {
 }
 
 impl DecodeServer {
+    /// Start the service: spawns the pump and executor threads and
+    /// resolves the backend's decode geometry for chunking.
     pub fn start(cfg: ServerConfig) -> Result<Self> {
         let (spec, geo) = cfg.backend.resolve_geometry().context("resolving backend")?;
         let chunker = Chunker::new(spec, geo);
@@ -205,14 +212,17 @@ impl DecodeServer {
         &self.chunker
     }
 
+    /// Snapshot of the service metrics.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
     }
 
+    /// Name of the backend the executor built (`native:…` / `pjrt:…`).
     pub fn backend_name(&self) -> String {
         self.backend_name.lock().unwrap().clone()
     }
 
+    /// Frames admitted and not yet decoded.
     pub fn in_flight_frames(&self) -> usize {
         self.gate.in_flight()
     }

@@ -82,6 +82,7 @@ pub trait BatchDecoder {
     fn geometry(&self) -> (CodeSpec, FrameGeometry);
     /// Largest batch worth submitting at once.
     fn max_batch(&self) -> usize;
+    /// Backend name for metrics/logs (`native:…` / `pjrt:…`).
     fn name(&self) -> String;
 }
 

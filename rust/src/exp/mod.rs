@@ -4,6 +4,10 @@
 //! Every experiment prints a paper-style table to stdout and, when
 //! `--out` is given, writes a machine-readable JSON record used by
 //! EXPERIMENTS.md.
+//!
+//! Experiments answer "does this match the paper?"; for tracked perf
+//! baselines over the engine registry use the `bench` subcommand and
+//! its `BENCH_*.json` records instead (`crate::bench`, BENCHMARKS.md).
 
 pub mod ber_tables;
 pub mod punctured;

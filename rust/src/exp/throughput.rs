@@ -6,6 +6,10 @@
 //! * **V100 model** — the calibrated occupancy model's prediction for
 //!   the paper's hardware (memmodel::occupancy), whose *shape* across
 //!   the grid is the reproduced result.
+//!
+//! These regenerators reproduce the paper's grids; the `bench`
+//! subcommand (`crate::bench`) is the harness that tracks this repo's
+//! own perf trajectory as `BENCH_*.json` records (BENCHMARKS.md).
 
 use std::sync::Arc;
 use std::time::Instant;

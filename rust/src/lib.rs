@@ -8,14 +8,24 @@
 //!   overlapping frames, dynamic batching, routing to either the
 //!   AOT-compiled XLA artifact (via PJRT) or the native engines, plus
 //!   the full simulation substrate (encoder, channel, BER harness,
-//!   analytic GPU occupancy model) and the paper's baselines.
+//!   analytic GPU occupancy model), the paper's baselines, and the
+//!   rebar-style benchmark subsystem ([`bench`]) that emits the
+//!   `BENCH_*.json` perf baselines.
 //! * **L2** — `python/compile/model.py`: batched JAX decode graph.
 //! * **L1** — `python/compile/kernels/viterbi_pallas.py`: the unified
 //!   forward+parallel-traceback frame kernel.
 //!
-//! See DESIGN.md for the system inventory and the per-experiment index,
-//! and EXPERIMENTS.md for paper-vs-measured results.
+//! The decoder engine family is enumerated by [`viterbi::registry`] —
+//! `scalar`, `tiled`, `unified`, `parallel`, `streaming`, `hard` —
+//! which the `bench` CLI subcommand, the docs and the registry smoke
+//! test all read from.
+//!
+//! See README.md for the quickstart, DESIGN.md for the system
+//! inventory and the per-experiment index, EXPERIMENTS.md for
+//! paper-vs-measured results, and BENCHMARKS.md for the measurement
+//! methodology and the `BENCH_*.json` record schema.
 
+pub mod bench;
 pub mod ber;
 pub mod channel;
 pub mod cli;

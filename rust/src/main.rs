@@ -3,6 +3,7 @@
 //! ```text
 //! viterbi-repro list                         list experiments
 //! viterbi-repro exp <id|all> [--full] [--out DIR] [--threads N]
+//! viterbi-repro bench [--engines E,..|all] [--frames N] [--out FILE]
 //! viterbi-repro ber [--ebn0 DB] [--bits N] [--engine E]
 //! viterbi-repro demo [--bits N] [--ebn0 DB]  encode→channel→decode roundtrip
 //! viterbi-repro serve [--requests N] [--backend pjrt|native] [--artifact NAME]
@@ -11,8 +12,9 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use viterbi::bench::{self, BenchOptions};
 use viterbi::ber::{measure_point_parallel, soft_viterbi_ber, BerConfig, DistanceSpectrum};
 use viterbi::channel::{bpsk, llr, AwgnChannel, Rng64};
 use viterbi::cli::Args;
@@ -43,6 +45,7 @@ fn run() -> Result<()> {
         }
         Some("list") => cmd_list(),
         Some("exp") => cmd_exp(&args),
+        Some("bench") => cmd_bench(&args),
         Some("ber") => cmd_ber(&args),
         Some("demo") => cmd_demo(&args),
         Some("serve") => cmd_serve(&args),
@@ -57,10 +60,17 @@ viterbi-repro — parallel Viterbi decoder reproduction (rust+JAX+Pallas)
 USAGE:
   viterbi-repro list
   viterbi-repro exp <id|all> [--full] [--out DIR] [--threads N] [--seed S]
+  viterbi-repro bench [--engines E,..|all] [--frames N] [--frame-lens F,..]
+                      [--samples S] [--threads N] [--seed S] [--out FILE] [--list]
   viterbi-repro ber [--ebn0 DB] [--engine scalar|tiled|ptb] [--threads N]
   viterbi-repro demo [--bits N] [--ebn0 DB]
   viterbi-repro serve [--requests N] [--backend pjrt|native] [--artifact NAME]
   viterbi-repro info
+
+The bench subcommand runs any subset of the engine registry over a
+frame-length matrix and writes one line-delimited JSON record per
+cell to FILE (default BENCH_run.json, overwritten each run — use
+--out for named baselines); see BENCHMARKS.md.
 ";
 
 fn cmd_list() -> Result<()> {
@@ -83,6 +93,78 @@ fn cmd_exp(args: &Args) -> Result<()> {
     opts.threads = args.get_usize("threads", opts.threads)?;
     opts.seed = args.get_u64("seed", opts.seed)?;
     run_by_id(id, &opts)
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "engines", "frames", "frame-lens", "samples", "warmup", "threads", "seed", "out",
+        "list", "v1", "v2", "f0", "delay",
+    ])?;
+    if args.has("list") {
+        println!("registered engines (viterbi::registry):");
+        for e in viterbi::viterbi::registry() {
+            println!("  {:10} {}", e.name, e.description);
+        }
+        return Ok(());
+    }
+
+    let engines =
+        bench::parse_engines(args.get("engines").unwrap_or("all")).map_err(|e| anyhow!(e))?;
+    let frame_lens = bench::parse_frame_lens(args.get("frame-lens").unwrap_or("64,256"))
+        .map_err(|e| anyhow!(e))?;
+    let frames = args.get_usize("frames", 64)?;
+    if frames == 0 {
+        bail!("--frames must be positive");
+    }
+    let defaults = BenchOptions::default();
+    let opts = BenchOptions {
+        samples: args.get_usize("samples", defaults.samples)?.max(1),
+        warmup: args.get_usize("warmup", defaults.warmup)?,
+        threads: args.get_usize("threads", defaults.threads)?.max(1),
+        seed: args.get_u64("seed", defaults.seed)?,
+        v1: args.get_usize("v1", defaults.v1)?,
+        v2: args.get_usize("v2", defaults.v2)?,
+        f0: args.get_usize("f0", defaults.f0)?.max(1),
+        delay: args.get_usize("delay", defaults.delay)?.max(1),
+    };
+    let out_path = std::path::PathBuf::from(args.get("out").unwrap_or("BENCH_run.json"));
+
+    let scenarios = bench::matrix(&engines, &frame_lens, frames);
+    println!(
+        "bench: {} engines × {} frame lengths, {} frames/stream, {} samples (+{} warmup), \
+         {} threads",
+        engines.len(),
+        frame_lens.len(),
+        frames,
+        opts.samples,
+        opts.warmup,
+        opts.threads
+    );
+    println!(
+        "{:>10} {:>8} {:>12} {:>12} {:>12} {:>12} {:>14}",
+        "engine", "f", "bits", "median Mb/s", "mean Mb/s", "stddev", "tb mem (B)"
+    );
+    let records = bench::run_matrix(&scenarios, &opts, |m| {
+        println!(
+            "{:>10} {:>8} {:>12} {:>12.2} {:>12.2} {:>12.2} {:>14}",
+            m.engine,
+            m.frame_len,
+            m.stream_bits,
+            m.median_mbps,
+            m.mean_mbps,
+            m.stddev_mbps,
+            m.peak_traceback_bytes
+        );
+    });
+    bench::write_jsonl(&out_path, &records)
+        .with_context(|| format!("writing {}", out_path.display()))?;
+    println!(
+        "wrote {} record(s) to {} (schema {})",
+        records.len(),
+        out_path.display(),
+        viterbi::bench::SCHEMA_VERSION
+    );
+    Ok(())
 }
 
 fn cmd_ber(args: &Args) -> Result<()> {

@@ -14,4 +14,6 @@ pub mod occupancy;
 pub mod smem;
 
 pub use occupancy::{GpuParams, OccupancyModel, ThroughputEstimate};
-pub use smem::{global_memory_table, FootprintBreakdown, Method, SmemLayout};
+pub use smem::{
+    global_memory_table, traceback_working_bytes, FootprintBreakdown, Method, SmemLayout,
+};

@@ -137,6 +137,20 @@ impl SmemLayout {
     }
 }
 
+/// Peak resident traceback working memory, in bytes, for a decoder
+/// that keeps `stages` stages of bit-packed survivor decisions plus
+/// two ping-pong path-metric rows live — the CPU analogue of the
+/// paper's shared-memory survivor budget, and the number the benchmark
+/// subsystem records as `peak_traceback_bytes` (BENCHMARKS.md).
+///
+/// For whole-stream decoders `stages` is the stream length; for the
+/// tiled/unified engines it is the frame span (v1 + f + v2); for the
+/// streaming decoder it is the decision delay window.
+pub fn traceback_working_bytes(states: usize, stages: usize) -> usize {
+    let words_per_stage = (states + 63) / 64;
+    words_per_stage * 8 * stages + 2 * states * 4
+}
+
 /// Global-memory usage for intermediate (survivor) data per Table I,
 /// in *entries* as the paper states them (O-notation made concrete).
 ///
@@ -244,6 +258,15 @@ mod tests {
         assert_eq!(global, 0);
         assert_eq!(pm_par, 64);
         assert_eq!(tb_par, 8);
+    }
+
+    #[test]
+    fn traceback_working_bytes_matches_layouts() {
+        // K=7: 64 states → one u64 decision word per stage (8 B) plus
+        // two 64-entry f32 PM rows (512 B).
+        assert_eq!(traceback_working_bytes(64, 100), 8 * 100 + 512);
+        // Sub-word state counts still pay one word per stage.
+        assert_eq!(traceback_working_bytes(16, 10), 8 * 10 + 2 * 16 * 4);
     }
 
     #[test]

@@ -28,6 +28,8 @@ pub enum StreamEnd {
 /// engines are expressed as `dyn Engine + Send + Sync` (see
 /// [`SharedEngine`]).
 pub trait Engine {
+    /// Human-readable engine name (includes the configuration, e.g.
+    /// `unified(f=256,v1=20,v2=45,f0=32)`).
     fn name(&self) -> &str;
 
     /// Decode `stages` trellis stages. `llrs.len() == stages · β`.
@@ -46,6 +48,7 @@ pub struct ScalarEngine {
 }
 
 impl ScalarEngine {
+    /// Build a whole-stream engine for `spec`.
     pub fn new(spec: CodeSpec) -> Self {
         ScalarEngine { spec }
     }
@@ -85,12 +88,16 @@ pub enum TracebackMode {
 pub struct TiledEngine {
     spec: CodeSpec,
     trellis: Trellis,
+    /// Frame tiling geometry (f, v1, v2).
     pub geo: FrameGeometry,
+    /// Per-frame traceback mode (serial or parallel subframes).
     pub mode: TracebackMode,
     name: String,
 }
 
 impl TiledEngine {
+    /// Build a tiled engine for `spec` with geometry `geo` and the
+    /// given traceback mode.
     pub fn new(spec: CodeSpec, geo: FrameGeometry, mode: TracebackMode) -> Self {
         let trellis = Trellis::new(spec.clone());
         let name = match mode {
@@ -137,6 +144,7 @@ impl TiledEngine {
         }
     }
 
+    /// The engine's precomputed trellis tables.
     pub fn trellis(&self) -> &Trellis {
         &self.trellis
     }

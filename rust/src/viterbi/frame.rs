@@ -23,6 +23,7 @@ pub struct FrameScratch {
 }
 
 impl FrameScratch {
+    /// Allocate scratch for frames of up to `max_stages` stages.
     pub fn new(num_states: usize, max_stages: usize) -> Self {
         FrameScratch {
             decisions: DecisionMatrix::new(num_states, max_stages),
@@ -33,6 +34,7 @@ impl FrameScratch {
         }
     }
 
+    /// Current capacity in stages.
     pub fn capacity(&self) -> usize {
         self.cap
     }

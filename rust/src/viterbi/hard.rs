@@ -9,6 +9,25 @@
 use crate::code::CodeSpec;
 use super::engine::{Engine, StreamEnd};
 
+/// Registry entry for the hard-decision adapter (over the whole-stream
+/// reference engine, the configuration §II-C evaluates).
+pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
+    use crate::viterbi::registry::{BuildParams, EngineSpec};
+    EngineSpec {
+        name: "hard",
+        description: "hard-decision adapter: sign-clamped LLRs through the whole-stream \
+                      reference decoder (paper §II-C)",
+        build: |p: &BuildParams| {
+            std::sync::Arc::new(HardEngine::new(crate::viterbi::ScalarEngine::new(
+                p.spec.clone(),
+            )))
+        },
+        traceback_bytes: |p: &BuildParams| {
+            crate::memmodel::traceback_working_bytes(p.spec.num_states(), p.stream_stages)
+        },
+    }
+}
+
 /// Hard-decision adapter over a soft engine.
 pub struct HardEngine<E: Engine> {
     inner: E,
@@ -16,6 +35,7 @@ pub struct HardEngine<E: Engine> {
 }
 
 impl<E: Engine> HardEngine<E> {
+    /// Wrap `inner`; its name is reported as `hard[<inner>]`.
     pub fn new(inner: E) -> Self {
         let name = format!("hard[{}]", inner.name());
         HardEngine { inner, name }

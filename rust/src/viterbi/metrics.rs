@@ -77,6 +77,7 @@ pub struct HardStageMetrics {
 }
 
 impl HardStageMetrics {
+    /// Build from the received β-bit hard word.
     pub fn new(rx_word: u32, beta: u32) -> Self {
         debug_assert!(rx_word < (1 << beta));
         HardStageMetrics { rx_word, beta }
@@ -91,6 +92,7 @@ impl HardStageMetrics {
         HardStageMetrics::new(w, bits.len() as u32)
     }
 
+    /// Agreement-count metric for a branch-output word.
     #[inline(always)]
     pub fn metric(&self, word: u32) -> f32 {
         let dist = (word ^ self.rx_word).count_ones();

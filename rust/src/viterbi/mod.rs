@@ -1,14 +1,32 @@
-//! The Viterbi decoder family: the whole-stream reference (method (a)
-//! in Table I), the tiled serial-traceback baseline (method (b), refs
-//! [4]–[10]), the paper's unified parallel-traceback decoder (method
-//! (c)), the hard-decision adapter, and the frame-parallel
-//! multithreaded driver.
+//! The Viterbi decoder family behind the shared [`Engine`] interface,
+//! enumerated — name, description, constructor, memory estimate — by
+//! the [`registry`] (the single source of truth the `bench` CLI
+//! subcommand, DESIGN.md §3 and the registry smoke test all read):
+//!
+//! * `scalar` — whole-stream reference, one serial traceback (Table I
+//!   method (a), refs [2]–[3]);
+//! * `tiled` — tiled frames with serial per-frame traceback (method
+//!   (b), refs [4]–[10]);
+//! * `unified` — the paper's unified forward + parallel subframe
+//!   traceback (method (c));
+//! * `parallel` — frame-parallel multithreaded driver over the unified
+//!   engine (the CPU analogue of the GPU grid);
+//! * `streaming` — sliding-window decoder with path-metric carry (the
+//!   overlap-free single-lane ablation);
+//! * `hard` — hard-decision adapter over any soft engine (§II-C).
+//!
+//! A seventh engine, the PJRT-artifact-backed [`crate::runtime::PjrtEngine`],
+//! implements the same interface but lives in `runtime` because it is
+//! gated on the AOT artifacts being built (`make artifacts`).
+
+#![warn(missing_docs)]
 
 pub mod engine;
 pub mod frame;
 pub mod hard;
 pub mod metrics;
 pub mod parallel;
+pub mod registry;
 pub mod scalar;
 pub mod streaming;
 pub mod tiled;
@@ -18,6 +36,7 @@ pub use engine::{Engine, ScalarEngine, SharedEngine, StreamEnd, TiledEngine, Tra
 pub use frame::FrameScratch;
 pub use hard::HardEngine;
 pub use parallel::ParallelEngine;
+pub use registry::{registry, BuildParams, EngineSpec};
 pub use scalar::{ScalarDecoder, TracebackStart};
-pub use streaming::StreamingDecoder;
+pub use streaming::{StreamingDecoder, StreamingEngine};
 pub use unified::{ParallelTraceback, StartPolicy};

@@ -10,6 +10,27 @@ use crate::util::threadpool::ThreadPool;
 use super::engine::{Engine, StreamEnd, TiledEngine};
 use super::frame::FrameScratch;
 
+/// Registry entry for the frame-parallel multithreaded driver.
+pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
+    use crate::viterbi::registry::{pool_of, BuildParams, EngineSpec};
+    EngineSpec {
+        name: "parallel",
+        description: "frame-parallel multithreaded driver over the unified engine \
+                      (one pool job per frame, the CPU analogue of the GPU grid)",
+        build: |p: &BuildParams| {
+            // Same inner configuration as the `unified` entry, so the
+            // two rows are directly comparable in BENCH records.
+            let inner = super::unified::unified_inner(p);
+            Arc::new(ParallelEngine::new(inner, pool_of(p.threads)))
+        },
+        traceback_bytes: |p: &BuildParams| {
+            // One frame scratch per in-flight pool job.
+            crate::memmodel::traceback_working_bytes(p.spec.num_states(), p.geo.span())
+                * p.threads.max(1)
+        },
+    }
+}
+
 /// Multithreaded wrapper around a [`TiledEngine`].
 pub struct ParallelEngine {
     inner: Arc<TiledEngine>,
@@ -18,11 +39,13 @@ pub struct ParallelEngine {
 }
 
 impl ParallelEngine {
+    /// Wrap `inner`, fanning frames out over `pool`.
     pub fn new(inner: TiledEngine, pool: Arc<ThreadPool>) -> Self {
         let name = format!("parallel[{}]×{}", inner.name(), pool.size());
         ParallelEngine { inner: Arc::new(inner), pool, name }
     }
 
+    /// The wrapped single-threaded engine.
     pub fn inner(&self) -> &TiledEngine {
         &self.inner
     }

@@ -1,0 +1,162 @@
+//! The engine registry: one [`EngineSpec`] per decoder variant, the
+//! single source of truth enumerated by the `bench` CLI subcommand,
+//! the docs (DESIGN.md §3, BENCHMARKS.md) and the registry smoke test
+//! (`rust/tests/registry_smoke.rs`).
+//!
+//! Each engine module contributes its own entry via an `engine_entry()`
+//! function, so adding a decoder variant means adding one module plus
+//! one line in [`registry`] — dropping an engine from the registry
+//! breaks the smoke test, which guards against silently losing
+//! coverage.
+
+use std::sync::Arc;
+
+use crate::code::CodeSpec;
+use crate::frames::plan::FrameGeometry;
+use crate::util::threadpool::ThreadPool;
+use super::engine::SharedEngine;
+
+/// Parameters every registry engine is built from.
+///
+/// One uniform parameter bundle keeps the registry's `build` signature
+/// identical across engines; each engine reads only the fields it
+/// needs (the scalar engine ignores the geometry, the streaming engine
+/// only reads `delay`, …).
+#[derive(Debug, Clone)]
+pub struct BuildParams {
+    /// The convolutional code to decode.
+    pub spec: CodeSpec,
+    /// Frame geometry for the tiled/unified/parallel engines.
+    pub geo: FrameGeometry,
+    /// Parallel-traceback subframe size (unified/parallel engines).
+    pub f0: usize,
+    /// Worker threads for the frame-parallel engine.
+    pub threads: usize,
+    /// Decision delay for the streaming engine (stages).
+    pub delay: usize,
+    /// Stream length in stages the engine will be asked to decode —
+    /// used only by the per-engine memory estimate (the whole-stream
+    /// engines' survivor storage scales with it).
+    pub stream_stages: usize,
+}
+
+impl BuildParams {
+    /// The paper's reference configuration: (171,133) K=7 code, frames
+    /// of f=256 with v1=20 / v2=45, f0=32 subframes, 96-stage
+    /// streaming delay.
+    pub fn paper_default() -> BuildParams {
+        BuildParams {
+            spec: CodeSpec::standard_k7(),
+            geo: FrameGeometry::new(256, 20, 45),
+            f0: 32,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            delay: 96,
+            stream_stages: 1 << 16,
+        }
+    }
+}
+
+/// One engine family's registry entry.
+#[derive(Clone, Copy)]
+pub struct EngineSpec {
+    /// Stable identifier used by `bench --engines` and the BENCH_*.json
+    /// `engine` field.
+    pub name: &'static str,
+    /// One-line description rendered by `bench --list` and quoted in
+    /// DESIGN.md.
+    pub description: &'static str,
+    /// Construct a ready-to-use engine from the shared parameters.
+    pub build: fn(&BuildParams) -> SharedEngine,
+    /// Estimated peak resident traceback working memory (survivor
+    /// decisions + path-metric rows) in bytes, for the BENCH_*.json
+    /// `peak_traceback_bytes` field (see memmodel::smem).
+    pub traceback_bytes: fn(&BuildParams) -> usize,
+}
+
+impl std::fmt::Debug for EngineSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EngineSpec")
+            .field("name", &self.name)
+            .field("description", &self.description)
+            .finish()
+    }
+}
+
+/// All registered engines, in Table-I order: reference first, then the
+/// baselines, then the paper's proposal and its derived drivers.
+pub fn registry() -> Vec<EngineSpec> {
+    vec![
+        super::scalar::engine_entry(),
+        super::tiled::engine_entry(),
+        super::unified::engine_entry(),
+        super::parallel::engine_entry(),
+        super::streaming::engine_entry(),
+        super::hard::engine_entry(),
+    ]
+}
+
+/// Look an engine up by its registry name.
+pub fn find(name: &str) -> Option<EngineSpec> {
+    registry().into_iter().find(|e| e.name == name)
+}
+
+/// Convenience used by the parallel engine's entry: a shared pool of
+/// `threads` workers.
+pub(crate) fn pool_of(threads: usize) -> Arc<ThreadPool> {
+    Arc::new(ThreadPool::new(threads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::viterbi::Engine as _;
+
+    #[test]
+    fn names_unique_and_expected() {
+        let reg = registry();
+        let names: Vec<&str> = reg.iter().map(|e| e.name).collect();
+        assert_eq!(
+            names,
+            vec!["scalar", "tiled", "unified", "parallel", "streaming", "hard"]
+        );
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate engine names");
+    }
+
+    #[test]
+    fn find_resolves_names() {
+        assert!(find("unified").is_some());
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn every_entry_builds_and_reports_memory() {
+        let mut params = BuildParams::paper_default();
+        params.threads = 2;
+        params.stream_stages = 4096;
+        for e in registry() {
+            let engine = (e.build)(&params);
+            assert_eq!(engine.spec().k, 7, "{}", e.name);
+            assert!(!engine.name().is_empty(), "{}", e.name);
+            assert!((e.traceback_bytes)(&params) > 0, "{}", e.name);
+            assert!(!e.description.is_empty(), "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn whole_stream_memory_scales_with_stream() {
+        let mut a = BuildParams::paper_default();
+        a.stream_stages = 1 << 10;
+        let mut b = a.clone();
+        b.stream_stages = 1 << 16;
+        let scalar = find("scalar").unwrap();
+        let unified = find("unified").unwrap();
+        // Whole-stream survivor storage grows with the stream…
+        assert!((scalar.traceback_bytes)(&b) > (scalar.traceback_bytes)(&a));
+        // …while the unified frame engine's working set does not (the
+        // paper's memory argument, Table I).
+        assert_eq!((unified.traceback_bytes)(&a), (unified.traceback_bytes)(&b));
+    }
+}

@@ -72,7 +72,23 @@ pub struct ScalarDecoder {
     acs: AcsScratch,
 }
 
+/// Registry entry for the whole-stream reference engine (method (a)).
+pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
+    use crate::viterbi::registry::{BuildParams, EngineSpec};
+    EngineSpec {
+        name: "scalar",
+        description: "whole-stream reference decoder, one serial traceback (Table I method (a))",
+        build: |p: &BuildParams| {
+            std::sync::Arc::new(crate::viterbi::ScalarEngine::new(p.spec.clone()))
+        },
+        traceback_bytes: |p: &BuildParams| {
+            crate::memmodel::traceback_working_bytes(p.spec.num_states(), p.stream_stages)
+        },
+    }
+}
+
 impl ScalarDecoder {
+    /// Build a decoder (and its trellis tables) for `spec`.
     pub fn new(spec: CodeSpec) -> Self {
         let trellis = Trellis::new(spec);
         let ns = trellis.num_states();
@@ -83,6 +99,7 @@ impl ScalarDecoder {
         }
     }
 
+    /// The decoder's precomputed trellis tables.
     pub fn trellis(&self) -> &Trellis {
         &self.trellis
     }

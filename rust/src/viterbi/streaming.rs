@@ -20,7 +20,26 @@
 use std::collections::VecDeque;
 
 use crate::code::{CodeSpec, Trellis};
+use super::engine::{Engine, StreamEnd};
 use super::scalar::{acs_stage_from_llrs, argmax, AcsScratch};
+
+/// Registry entry for the sliding-window streaming decoder.
+pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
+    use crate::viterbi::registry::{BuildParams, EngineSpec};
+    EngineSpec {
+        name: "streaming",
+        description: "sliding-window decoder with path-metric carry and a fixed decision \
+                      delay (the overlap-free single-lane ablation)",
+        build: |p: &BuildParams| {
+            std::sync::Arc::new(StreamingEngine::new(p.spec.clone(), p.delay))
+        },
+        traceback_bytes: |p: &BuildParams| {
+            // The live window holds `delay` stages of decisions plus the
+            // carried path-metric rows.
+            crate::memmodel::traceback_working_bytes(p.spec.num_states(), p.delay)
+        },
+    }
+}
 
 /// Sliding-window streaming Viterbi decoder.
 pub struct StreamingDecoder {
@@ -57,14 +76,17 @@ impl StreamingDecoder {
         }
     }
 
+    /// The code this decoder decodes.
     pub fn spec(&self) -> &CodeSpec {
         &self.trellis.spec
     }
 
+    /// Stages consumed but not yet released (the live window).
     pub fn pending_stages(&self) -> usize {
         self.pending.len()
     }
 
+    /// Total stages consumed since construction.
     pub fn consumed_stages(&self) -> u64 {
         self.consumed
     }
@@ -137,6 +159,48 @@ impl StreamingDecoder {
             j = (2 * j + d) & mask;
         }
         self.pending.drain(..count);
+        out
+    }
+}
+
+/// Whole-stream [`Engine`] adapter over [`StreamingDecoder`]: each
+/// `decode_stream` call runs a fresh decoder over the stream (push
+/// everything, then flush), so the adapter is stateless and shareable
+/// like every other registry engine. A terminated stream flushes from
+/// state 0; a truncated one from the best final metric.
+pub struct StreamingEngine {
+    spec: CodeSpec,
+    delay: usize,
+    name: String,
+}
+
+impl StreamingEngine {
+    /// Build an adapter decoding `spec` with decision delay `delay`.
+    pub fn new(spec: CodeSpec, delay: usize) -> Self {
+        let name = format!("streaming(delay={delay})");
+        StreamingEngine { spec, delay, name }
+    }
+}
+
+impl Engine for StreamingEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn spec(&self) -> &CodeSpec {
+        &self.spec
+    }
+
+    fn decode_stream(&self, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+        let beta = self.spec.beta as usize;
+        assert_eq!(llrs.len(), stages * beta);
+        let mut dec = StreamingDecoder::new(self.spec.clone(), self.delay);
+        let mut out = dec.push(llrs);
+        let final_state = match end {
+            StreamEnd::Terminated => Some(0),
+            StreamEnd::Truncated => None,
+        };
+        out.extend(dec.finish(final_state));
         out
     }
 }
@@ -267,6 +331,28 @@ mod tests {
         // traceback snapshots, but 80 stages of convergence make them
         // equal in practice).
         assert_eq!(&a[..common.saturating_sub(80)], &b[..common.saturating_sub(80)]);
+    }
+
+    #[test]
+    fn engine_adapter_matches_manual_flush() {
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(604);
+        let mut bits = vec![0u8; 1500];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let llrs = noiseless(&enc);
+        let stages = bits.len() + 6;
+
+        let eng = StreamingEngine::new(spec.clone(), 64);
+        let via_engine = eng.decode_stream(&llrs, stages, StreamEnd::Terminated);
+
+        let mut dec = StreamingDecoder::new(spec, 64);
+        let mut manual = dec.push(&llrs);
+        manual.extend(dec.finish(Some(0)));
+
+        assert_eq!(via_engine, manual);
+        assert_eq!(&via_engine[..bits.len()], &bits[..]);
+        assert!(eng.name().contains("delay=64"));
     }
 
     #[test]

@@ -11,6 +11,25 @@ use crate::frames::plan::FrameSpan;
 use super::frame::{forward_frame, traceback_segment, FrameScratch};
 use super::scalar::TracebackStart;
 
+/// Registry entry for the tiled serial-traceback engine (method (b)).
+pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
+    use crate::viterbi::registry::{BuildParams, EngineSpec};
+    EngineSpec {
+        name: "tiled",
+        description: "tiled frames with one serial traceback per frame (Table I method (b))",
+        build: |p: &BuildParams| {
+            std::sync::Arc::new(crate::viterbi::TiledEngine::new(
+                p.spec.clone(),
+                p.geo,
+                crate::viterbi::TracebackMode::FrameSerial,
+            ))
+        },
+        traceback_bytes: |p: &BuildParams| {
+            crate::memmodel::traceback_working_bytes(p.spec.num_states(), p.geo.span())
+        },
+    }
+}
+
 /// Decode one frame with serial traceback.
 ///
 /// * `llrs` — the frame's stage-major LLRs (`span.len · β` values).

@@ -21,6 +21,40 @@ use crate::frames::plan::FrameSpan;
 use super::frame::{forward_frame, traceback_segment, FrameScratch};
 use super::scalar::TracebackStart;
 
+/// The unified engine's configuration from shared build params —
+/// used by both the `unified` registry entry and the `parallel`
+/// driver's entry, so the two always benchmark the same inner engine.
+pub(crate) fn unified_inner(
+    p: &crate::viterbi::registry::BuildParams,
+) -> crate::viterbi::TiledEngine {
+    crate::viterbi::TiledEngine::new(
+        p.spec.clone(),
+        p.geo,
+        crate::viterbi::TracebackMode::Parallel(ParallelTraceback::new(
+            p.f0,
+            p.geo.v2,
+            StartPolicy::StoredArgmax,
+        )),
+    )
+}
+
+/// Registry entry for the paper's unified parallel-traceback engine
+/// (method (c)).
+pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
+    use crate::viterbi::registry::{BuildParams, EngineSpec};
+    EngineSpec {
+        name: "unified",
+        description: "unified forward + parallel subframe traceback, the paper's proposal \
+                      (Table I method (c))",
+        build: |p: &BuildParams| std::sync::Arc::new(unified_inner(p)),
+        traceback_bytes: |p: &BuildParams| {
+            let boundaries = (p.geo.f + p.f0 - 1) / p.f0;
+            crate::memmodel::traceback_working_bytes(p.spec.num_states(), p.geo.span())
+                + boundaries * 4
+        },
+    }
+}
+
 /// Traceback start-state policy (paper §IV-D).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StartPolicy {
@@ -41,10 +75,12 @@ pub struct ParallelTraceback {
     /// Traceback convergence overlap per subframe (the paper reuses the
     /// frame's v2 for this).
     pub v2: usize,
+    /// Where each subframe's traceback starts (§IV-D).
     pub policy: StartPolicy,
 }
 
 impl ParallelTraceback {
+    /// Build a configuration; `f0` must be positive.
     pub fn new(f0: usize, v2: usize, policy: StartPolicy) -> Self {
         assert!(f0 > 0, "subframe size must be positive");
         ParallelTraceback { f0, v2, policy }

@@ -1,0 +1,60 @@
+//! Registry smoke test: every engine in `viterbi::registry` must
+//! round-trip a K=7, rate-1/2 frame at high SNR with zero bit errors.
+//! This guards the registry against silently dropping an engine (the
+//! bench harness, the docs and the CLI all enumerate engines from it).
+
+use viterbi::channel::{bpsk, llr, AwgnChannel, Rng64};
+use viterbi::code::{encode, CodeSpec, Termination};
+use viterbi::frames::plan::FrameGeometry;
+use viterbi::util::bits::count_bit_errors;
+use viterbi::viterbi::{registry, BuildParams, Engine as _, StreamEnd};
+
+fn high_snr_workload(n: usize, seed: u64) -> (Vec<u8>, Vec<f32>, usize) {
+    let spec = CodeSpec::standard_k7();
+    let mut rng = Rng64::seeded(seed);
+    let mut bits = vec![0u8; n];
+    rng.fill_bits(&mut bits);
+    let coded = encode(&spec, &bits, Termination::Terminated);
+    // 10 dB Eb/N0: far above the waterfall; any correct decoder is
+    // error-free here, so a single bit error means a real defect.
+    let ch = AwgnChannel::new(10.0, spec.rate());
+    let rx = ch.transmit(&bpsk::modulate(&coded), &mut rng);
+    let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+    (bits, llrs, n + 6)
+}
+
+#[test]
+fn every_registry_engine_roundtrips_k7_frame_error_free() {
+    let params = BuildParams {
+        spec: CodeSpec::standard_k7(),
+        geo: FrameGeometry::new(256, 20, 45),
+        f0: 32,
+        threads: 4,
+        delay: 96,
+        stream_stages: 4096 + 6,
+    };
+    let (bits, llrs, stages) = high_snr_workload(4096, 0x5140);
+    let reg = registry();
+    assert_eq!(reg.len(), 6, "engine silently dropped from the registry");
+    for entry in &reg {
+        let engine = (entry.build)(&params);
+        let out = engine.decode_stream(&llrs, stages, StreamEnd::Terminated);
+        assert_eq!(out.len(), stages, "{}: wrong output length", entry.name);
+        let errors = count_bit_errors(&out[..bits.len()], &bits);
+        assert_eq!(
+            errors, 0,
+            "{} ({}) must decode a high-SNR K=7 rate-1/2 frame error-free",
+            entry.name,
+            engine.name()
+        );
+    }
+}
+
+#[test]
+fn registry_names_match_bench_cli_contract() {
+    // The names the `bench --engines` flag accepts are exactly these;
+    // BENCHMARKS.md documents them. Renaming one is a breaking change
+    // to recorded BENCH_*.json baselines.
+    let names: Vec<&str> = registry().iter().map(|e| e.name).collect();
+    assert_eq!(names, ["scalar", "tiled", "unified", "parallel", "streaming", "hard"]);
+}

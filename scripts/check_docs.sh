@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# Docs consistency gate (CI "docs" job): every repo path referenced by
+# the top-level docs must exist. Two reference forms are checked:
+#   1. inline-backtick paths rooted at rust/, python/, examples/,
+#      scripts/ or .github/  (e.g. `rust/src/bench/measurement.rs`)
+#   2. relative markdown links  (e.g. [DESIGN.md](DESIGN.md))
+# Paths inside fenced code blocks are intentionally not parsed; quote
+# a path in backticks or a link if it must be kept alive.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+docs=(README.md DESIGN.md EXPERIMENTS.md BENCHMARKS.md)
+fail=0
+
+for d in "${docs[@]}"; do
+    if [ ! -f "$d" ]; then
+        echo "MISSING DOC: $d"
+        fail=1
+        continue
+    fi
+    refs=$(grep -o '`[^`]*`' "$d" | tr -d '`' \
+        | grep -E '^(rust/|python/|examples/|scripts/|\.github/)' || true)
+    links=$(grep -oE '\]\([^)]+\)' "$d" | sed -E 's/^\]\(//; s/\)$//' \
+        | grep -vE '^(https?:|#|mailto:)' || true)
+    for ref in $refs $links; do
+        ref="${ref%%#*}"
+        [ -z "$ref" ] && continue
+        if [ ! -e "$ref" ]; then
+            echo "$d: stale reference: $ref"
+            fail=1
+        fi
+    done
+done
+
+if [ "$fail" -eq 0 ]; then
+    echo "docs OK: all referenced paths exist"
+fi
+exit "$fail"
