@@ -9,14 +9,14 @@ use std::path::Path;
 use crate::util::json::{Json, ObjBuilder};
 
 /// Schema tag stamped into every record so readers can reject files
-/// written by an incompatible harness.
-pub const SCHEMA_VERSION: &str = "viterbi-bench/1";
+/// written by an incompatible harness. v2 added `lane_width`.
+pub const SCHEMA_VERSION: &str = "viterbi-bench/2";
 
 /// One engine × scenario benchmark measurement.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Measurement {
     /// Registry name of the engine (`scalar`, `tiled`, `unified`,
-    /// `parallel`, `streaming`, `hard`).
+    /// `parallel`, `lanes`, `lanes-mt`, `streaming`, `hard`).
     pub engine: String,
     /// Full configured engine name, e.g. `unified(f=256,v1=20,v2=45,f0=32)`.
     pub engine_detail: String,
@@ -38,6 +38,9 @@ pub struct Measurement {
     pub warmup: usize,
     /// Worker threads available to the engine.
     pub threads: usize,
+    /// Frames the engine decodes in SIMD lockstep: 1 for per-frame
+    /// engines, the configured L for the lane-batched family.
+    pub lane_width: usize,
     /// Median throughput over the samples, Mbit/s of information bits.
     pub median_mbps: f64,
     /// Mean throughput, Mbit/s.
@@ -70,6 +73,7 @@ impl Measurement {
             .num("samples", self.samples as f64)
             .num("warmup", self.warmup as f64)
             .num("threads", self.threads as f64)
+            .num("lane_width", self.lane_width as f64)
             .num("median_mbps", self.median_mbps)
             .num("mean_mbps", self.mean_mbps)
             .num("stddev_mbps", self.stddev_mbps)
@@ -103,6 +107,7 @@ impl Measurement {
             samples: num_field(j, "samples")? as usize,
             warmup: num_field(j, "warmup")? as usize,
             threads: num_field(j, "threads")? as usize,
+            lane_width: num_field(j, "lane_width")? as usize,
             median_mbps: num_field(j, "median_mbps")?,
             mean_mbps: num_field(j, "mean_mbps")?,
             stddev_mbps: num_field(j, "stddev_mbps")?,
@@ -171,6 +176,7 @@ mod tests {
             samples: 9,
             warmup: 2,
             threads: 8,
+            lane_width: 1,
             median_mbps: 41.25,
             mean_mbps: 40.9,
             stddev_mbps: 1.1,
@@ -198,7 +204,7 @@ mod tests {
             fields[0].1 = Json::str("other-harness/9");
         }
         assert!(Measurement::from_json(&j).unwrap_err().contains("unsupported schema"));
-        let partial = Json::parse(r#"{"schema":"viterbi-bench/1","engine":"scalar"}"#).unwrap();
+        let partial = Json::parse(r#"{"schema":"viterbi-bench/2","engine":"scalar"}"#).unwrap();
         assert!(Measurement::from_json(&partial).is_err());
     }
 

@@ -39,6 +39,8 @@ pub struct BenchOptions {
     pub f0: usize,
     /// Decision delay for the streaming engine.
     pub delay: usize,
+    /// Lane width L for the lane-batched engines.
+    pub lanes: usize,
 }
 
 impl Default for BenchOptions {
@@ -52,6 +54,7 @@ impl Default for BenchOptions {
             v2: 45,
             f0: 32,
             delay: 96,
+            lanes: 64,
         }
     }
 }
@@ -64,6 +67,7 @@ impl BenchOptions {
             f0: self.f0,
             threads: self.threads,
             delay: self.delay,
+            lanes: self.lanes,
             stream_stages,
         }
     }
@@ -111,6 +115,7 @@ pub fn run_scenario(entry: &EngineSpec, sc: &Scenario, opts: &BenchOptions) -> M
         samples: opts.samples,
         warmup: opts.warmup,
         threads: opts.threads,
+        lane_width: (entry.lane_width)(&params),
         median_mbps: median(&mbps),
         mean_mbps: summary.mean(),
         stddev_mbps: if opts.samples > 1 { summary.stddev() } else { 0.0 },
@@ -158,10 +163,24 @@ mod tests {
         assert_eq!(m.stream_bits, 512);
         assert_eq!(m.k, 7);
         assert_eq!(m.rate, "1/2");
+        assert_eq!(m.lane_width, 1);
         assert!(m.median_mbps > 0.0 && m.median_mbps.is_finite());
         assert!(m.mean_mbps > 0.0);
         assert!(m.max_mbps >= m.median_mbps);
         assert!(m.peak_traceback_bytes > 0);
+    }
+
+    #[test]
+    fn lanes_scenario_records_lane_width() {
+        let entry = registry::find("lanes").unwrap();
+        let sc = Scenario { engine: "lanes".into(), frame_len: 64, frames: 8 };
+        let mut opts = quick_opts();
+        opts.lanes = 16;
+        let m = run_scenario(&entry, &sc, &opts);
+        assert_eq!(m.engine, "lanes");
+        assert_eq!(m.lane_width, 16);
+        assert!(m.engine_detail.contains("L=16"));
+        assert!(m.median_mbps > 0.0 && m.median_mbps.is_finite());
     }
 
     #[test]

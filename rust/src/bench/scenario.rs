@@ -87,7 +87,13 @@ mod tests {
     #[test]
     fn engines_all_expands_registry() {
         let all = parse_engines("all").unwrap();
-        assert_eq!(all, vec!["scalar", "tiled", "unified", "parallel", "streaming", "hard"]);
+        assert_eq!(
+            all,
+            vec![
+                "scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "streaming",
+                "hard"
+            ]
+        );
     }
 
     #[test]

@@ -9,10 +9,12 @@ use anyhow::{Context, Result};
 
 use crate::code::CodeSpec;
 use crate::frames::plan::{FrameGeometry, FrameSpan};
+use crate::lanes::acs::lane_fast_path;
+use crate::lanes::{decode_lane_group, LaneJob, LaneScratch, MAX_LANES};
 use crate::runtime::{ExecutorPool, Manifest, PjrtRuntime};
 use crate::viterbi::{
     Engine as _, FrameScratch, ParallelTraceback, StartPolicy, StreamEnd, TiledEngine,
-    TracebackMode,
+    TracebackMode, TracebackStart,
 };
 use super::request::{FrameJob, FrameResult};
 
@@ -68,7 +70,23 @@ impl BackendSpec {
                 };
                 let engine = TiledEngine::new(spec.clone(), *geo, mode);
                 let scratch = FrameScratch::new(spec.num_states(), geo.span());
-                Ok(Box::new(NativeBatchDecoder { engine, scratch, max_batch: 32 }))
+                // Full batches of uniform frame jobs take the SIMD lane
+                // path when the code supports it. A serial-traceback
+                // backend (f0 = None) uses f0 = f, which degenerates the
+                // parallel traceback to exactly the serial one.
+                let lane = if lane_fast_path(engine.trellis()) {
+                    let ptb = ParallelTraceback::new(
+                        f0.unwrap_or(geo.f),
+                        geo.v2,
+                        StartPolicy::StoredArgmax,
+                    );
+                    let scratch =
+                        LaneScratch::new(spec.num_states(), geo.span(), MAX_LANES);
+                    Some((ptb, scratch))
+                } else {
+                    None
+                };
+                Ok(Box::new(NativeBatchDecoder { engine, scratch, lane, max_batch: 32 }))
             }
         }
     }
@@ -150,7 +168,35 @@ impl BatchDecoder for PjrtBatchDecoder {
 pub struct NativeBatchDecoder {
     engine: TiledEngine,
     scratch: FrameScratch,
+    /// Lane-group traceback config + scratch; `None` for codes outside
+    /// the lane fast path (those always decode per frame).
+    lane: Option<(ParallelTraceback, LaneScratch)>,
     max_batch: usize,
+}
+
+impl NativeBatchDecoder {
+    /// Per-frame decode of one job (the non-batched path).
+    fn decode_one(&mut self, job: &FrameJob) -> FrameResult {
+        let geo = self.engine.geo;
+        // Uniform frame: decode the middle f stages of the block.
+        let span = FrameSpan {
+            index: if job.pin_state0 { 0 } else { 1 },
+            start: 0,
+            len: geo.span(),
+            out_start: geo.v1,
+            out_len: geo.f,
+        };
+        let mut bits = vec![0u8; geo.f];
+        self.engine.decode_frame(
+            &job.llr_block,
+            &span,
+            usize::MAX, // never the implicit "last" frame
+            StreamEnd::Truncated,
+            &mut self.scratch,
+            &mut bits,
+        );
+        FrameResult { request_id: job.request_id, frame_index: job.frame_index, bits }
+    }
 }
 
 impl BatchDecoder for NativeBatchDecoder {
@@ -158,31 +204,52 @@ impl BatchDecoder for NativeBatchDecoder {
         let geo = self.engine.geo;
         let beta = self.engine.spec().beta as usize;
         let l = geo.span();
-        let mut out = Vec::with_capacity(jobs.len());
         for job in jobs {
             anyhow::ensure!(job.llr_block.len() == l * beta, "job block length mismatch");
-            // Uniform frame: decode the middle f stages of the block.
-            let span = FrameSpan {
-                index: if job.pin_state0 { 0 } else { 1 },
-                start: 0,
-                len: l,
-                out_start: geo.v1,
-                out_len: geo.f,
-            };
-            let mut bits = vec![0u8; geo.f];
-            self.engine.decode_frame(
-                &job.llr_block,
-                &span,
-                usize::MAX, // never the implicit "last" frame
-                StreamEnd::Truncated,
-                &mut self.scratch,
-                &mut bits,
-            );
-            out.push(FrameResult {
-                request_id: job.request_id,
-                frame_index: job.frame_index,
-                bits,
-            });
+        }
+        let mut out = Vec::with_capacity(jobs.len());
+        if jobs.len() > 1 {
+            if let Some((ptb, lane_scratch)) = &mut self.lane {
+                // Batched path: every chunk of ≤ 64 uniform jobs decodes
+                // in SIMD lockstep (the dynamic batcher's whole point).
+                let trellis = self.engine.trellis();
+                for chunk in jobs.chunks(MAX_LANES) {
+                    let mut bits: Vec<Vec<u8>> =
+                        chunk.iter().map(|_| vec![0u8; geo.f]).collect();
+                    let mut lane_jobs: Vec<LaneJob<'_>> = chunk
+                        .iter()
+                        .zip(bits.iter_mut())
+                        .map(|(job, out)| LaneJob {
+                            llrs: &job.llr_block,
+                            span_index: if job.pin_state0 { 0 } else { 1 },
+                            start_state: if job.pin_state0 { Some(0) } else { None },
+                            tb: TracebackStart::BestMetric,
+                            out,
+                        })
+                        .collect();
+                    decode_lane_group(
+                        trellis,
+                        ptb,
+                        geo.v1,
+                        geo.f,
+                        &mut lane_jobs,
+                        lane_scratch,
+                    );
+                    drop(lane_jobs);
+                    for (job, b) in chunk.iter().zip(bits) {
+                        out.push(FrameResult {
+                            request_id: job.request_id,
+                            frame_index: job.frame_index,
+                            bits: b,
+                        });
+                    }
+                }
+                return Ok(out);
+            }
+        }
+        for job in jobs {
+            let r = self.decode_one(job);
+            out.push(r);
         }
         Ok(out)
     }
@@ -203,11 +270,48 @@ impl BatchDecoder for NativeBatchDecoder {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::channel::Rng64;
+    use crate::channel::{bpsk, llr, AwgnChannel, Rng64};
     use crate::code::{encode, Termination};
     use crate::coordinator::chunker::Chunker;
     use crate::coordinator::request::DecodeRequest;
     use crate::viterbi::StreamEnd;
+
+    fn noisy_jobs(spec: &CodeSpec, geo: FrameGeometry, n: usize, seed: u64) -> Vec<FrameJob> {
+        let mut rng = Rng64::seeded(seed);
+        let mut bits = vec![0u8; n];
+        rng.fill_bits(&mut bits);
+        let enc = encode(spec, &bits, Termination::Truncated);
+        let ch = AwgnChannel::new(3.0, spec.rate());
+        let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+        let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+        let req = DecodeRequest::new(1, llrs, spec.beta as usize, StreamEnd::Truncated);
+        Chunker::new(spec.clone(), geo).chunk(&req)
+    }
+
+    #[test]
+    fn batched_lane_path_equals_per_frame_path() {
+        // The dynamic batcher's full batches take the SIMD lane path;
+        // it must produce bit-identical frames to per-job dispatch,
+        // for both the parallel- and serial-traceback backends.
+        let spec = CodeSpec::standard_k7();
+        let geo = FrameGeometry::new(64, 12, 20);
+        for f0 in [Some(16), None] {
+            let mut backend =
+                BackendSpec::Native { spec: spec.clone(), geo, f0 }.build().unwrap();
+            let jobs = noisy_jobs(&spec, geo, 64 * 7 - 5, 0xBA7C + f0.unwrap_or(0) as u64);
+            assert!(jobs.len() > 1);
+            let batched = backend.decode_batch(&jobs).unwrap();
+            let mut single = Vec::new();
+            for j in &jobs {
+                single.extend(backend.decode_batch(std::slice::from_ref(j)).unwrap());
+            }
+            assert_eq!(batched.len(), single.len());
+            for (a, b) in batched.iter().zip(&single) {
+                assert_eq!(a.frame_index, b.frame_index);
+                assert_eq!(a.bits, b.bits, "f0={f0:?} frame {}", a.frame_index);
+            }
+        }
+    }
 
     #[test]
     fn native_backend_decodes_jobs() {

@@ -3,4 +3,6 @@
 
 pub mod plan;
 
-pub use plan::{overhead_factor, plan_frames, FrameGeometry, FrameSpan};
+pub use plan::{
+    overhead_factor, plan_frames, plan_lane_groups, FrameGeometry, FrameSpan, LaneGroup,
+};

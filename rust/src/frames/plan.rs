@@ -81,6 +81,47 @@ pub fn plan_frames(stages: usize, geo: FrameGeometry) -> Vec<FrameSpan> {
     spans
 }
 
+/// A run of consecutive, geometry-identical frames that can be decoded
+/// in SIMD lockstep by the lane engines (`crate::lanes`): every span in
+/// `spans[first..first + count]` has the same processed length, head
+/// offset and decoded length, and `count ≤ lane_width`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneGroup {
+    /// Index of the group's first span in the plan.
+    pub first: usize,
+    /// Number of spans (lanes) in the group, `1 ..= lane_width`.
+    pub count: usize,
+}
+
+/// Partition a frame plan into [`LaneGroup`]s of at most `lane_width`
+/// geometry-identical consecutive frames.
+///
+/// The first and last frames of a stream usually have clipped overlaps
+/// and land in their own (possibly single-lane) groups; interior frames
+/// share one geometry and fill `lane_width`-wide groups, with a ragged
+/// tail group holding the remainder. Single-lane groups go through the
+/// same lockstep code path, so the partition is total: every span is in
+/// exactly one group.
+pub fn plan_lane_groups(spans: &[FrameSpan], lane_width: usize) -> Vec<LaneGroup> {
+    assert!(lane_width > 0, "lane width must be positive");
+    let mut groups = Vec::new();
+    let mut first = 0usize;
+    while first < spans.len() {
+        let key = (spans[first].len, spans[first].head(), spans[first].out_len);
+        let mut count = 1usize;
+        while count < lane_width
+            && first + count < spans.len()
+            && (spans[first + count].len, spans[first + count].head(), spans[first + count].out_len)
+                == key
+        {
+            count += 1;
+        }
+        groups.push(LaneGroup { first, count });
+        first += count;
+    }
+    groups
+}
+
 /// Stage-overhead factor of a plan: processed stages / decoded stages.
 /// This is the "(1 + v/f)" work inflation in Table I row (b)/(c).
 pub fn overhead_factor(spans: &[FrameSpan]) -> f64 {
@@ -143,6 +184,47 @@ mod tests {
         let oh = overhead_factor(&spans);
         let expect = 1.0 + 32.0 / 128.0;
         assert!((oh - expect).abs() < 0.01, "overhead {oh} vs {expect}");
+    }
+
+    #[test]
+    fn lane_groups_partition_interior_frames() {
+        // 20 frames of f=64: frame 0 (no v1) and frame 19 (no v2) are
+        // singletons; the 18 interior frames split into 8 + 8 + 2.
+        let spans = plan_frames(64 * 20, FrameGeometry::new(64, 8, 12));
+        let groups = plan_lane_groups(&spans, 8);
+        let sizes: Vec<usize> = groups.iter().map(|g| g.count).collect();
+        assert_eq!(sizes, vec![1, 8, 8, 2, 1]);
+    }
+
+    #[test]
+    fn lane_groups_property_total_and_uniform() {
+        check::forall(
+            "lane groups partition the plan into uniform runs",
+            200,
+            0x1A9E,
+            |rng: &mut Rng64| {
+                let (f, v1, v2) = check::gen_frame_geometry(rng);
+                let stages = rng.gen_range_usize(1, 3000);
+                let lanes = rng.gen_range_usize(1, 65);
+                (stages, FrameGeometry::new(f, v1, v2), lanes)
+            },
+            |&(stages, geo, lanes)| {
+                let spans = plan_frames(stages, geo);
+                let groups = plan_lane_groups(&spans, lanes);
+                let mut next = 0usize;
+                for g in &groups {
+                    assert_eq!(g.first, next, "groups must be contiguous");
+                    assert!(g.count >= 1 && g.count <= lanes);
+                    let key =
+                        (spans[g.first].len, spans[g.first].head(), spans[g.first].out_len);
+                    for s in &spans[g.first..g.first + g.count] {
+                        assert_eq!((s.len, s.head(), s.out_len), key, "uniform geometry");
+                    }
+                    next = g.first + g.count;
+                }
+                assert_eq!(next, spans.len(), "every span grouped exactly once");
+            },
+        );
     }
 
     #[test]

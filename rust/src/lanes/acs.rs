@@ -1,0 +1,248 @@
+//! Lane-parallel ACS: the butterfly recurrence of `viterbi::scalar`,
+//! vectorized across lanes instead of states.
+//!
+//! The scalar butterfly iterates states with stride-2 reads of the
+//! previous row — awkward for SIMD. Here the state loop is outer and
+//! the *lane* loop is inner over unit-stride `[state][lane]` slabs, so
+//! every load/store/max in the hot loop is a contiguous fixed-width
+//! pass the autovectorizer turns into packed f32 ops.
+//!
+//! **Bit-exactness contract:** for each lane, every f32 operation is
+//! written in the same form and order as the scalar paths
+//! (`acs_stage_butterfly_b2` for β=2, `fill_branch_metrics` +
+//! `acs_stage_butterfly` for β=3), and decision bits are packed with
+//! the same `pack_signs64` sign-bit rule — so a lane's survivor bits
+//! and metrics are bitwise identical to decoding its frame alone.
+//! `rust/tests/lanes_parity.rs` enforces this across codes and SNRs.
+
+use crate::code::Trellis;
+use crate::viterbi::scalar::pack_signs64;
+
+/// One lane-parallel ACS stage for a rate-1/2 (β=2) butterfly code.
+///
+/// * `half` — `states / 2`; targets `j` and `j + half` share the
+///   predecessor pair `(2j, 2j+1)`.
+/// * `lanes` — lane count of the slabs (`≤ 64`).
+/// * `prev`/`cur` — `[state][lane]` path-metric slabs.
+/// * `sl0`/`sl1` — the trellis sign lanes (per predecessor state).
+/// * `l0`/`l1` — this stage's LLRs, one per lane.
+/// * `d0`/`d1` — lane-width decision-difference scratch.
+/// * `words` — survivor words for this stage, one `u64` per state.
+#[allow(clippy::too_many_arguments)]
+pub fn acs_stage_lanes_b2(
+    half: usize,
+    lanes: usize,
+    prev: &[f32],
+    cur: &mut [f32],
+    sl0: &[f32],
+    sl1: &[f32],
+    l0: &[f32],
+    l1: &[f32],
+    d0: &mut [f32],
+    d1: &mut [f32],
+    words: &mut [u64],
+) {
+    assert!((1..=64).contains(&lanes));
+    assert!(prev.len() >= 2 * half * lanes && cur.len() >= 2 * half * lanes);
+    assert!(sl0.len() >= 2 * half && sl1.len() >= 2 * half);
+    assert!(l0.len() >= lanes && l1.len() >= lanes);
+    assert!(d0.len() >= lanes && d1.len() >= lanes);
+    assert!(words.len() >= 2 * half);
+    let (lo, hi) = cur[..2 * half * lanes].split_at_mut(half * lanes);
+    for j in 0..half {
+        let s0a = sl0[2 * j];
+        let s1a = sl1[2 * j];
+        let s0b = sl0[2 * j + 1];
+        let s1b = sl1[2 * j + 1];
+        let a_row = &prev[(2 * j) * lanes..(2 * j + 1) * lanes];
+        let b_row = &prev[(2 * j + 1) * lanes..(2 * j + 2) * lanes];
+        let lo_row = &mut lo[j * lanes..(j + 1) * lanes];
+        let hi_row = &mut hi[j * lanes..(j + 1) * lanes];
+        for l in 0..lanes {
+            let a = a_row[l];
+            let b = b_row[l];
+            let ga = s0a * l0[l] + s1a * l1[l];
+            let gb = s0b * l0[l] + s1b * l1[l];
+            let m0a = a + ga;
+            let m0b = b + gb;
+            let m1a = a - ga;
+            let m1b = b - gb;
+            lo_row[l] = m0a.max(m0b);
+            hi_row[l] = m1a.max(m1b);
+            d0[l] = m0a - m0b;
+            d1[l] = m1a - m1b;
+        }
+        words[j] = pack_signs64(&d0[..lanes]);
+        words[j + half] = pack_signs64(&d1[..lanes]);
+    }
+}
+
+/// One lane-parallel ACS stage for a rate-1/3 (β=3) butterfly code.
+/// Identical structure to [`acs_stage_lanes_b2`] with a third LLR lane.
+#[allow(clippy::too_many_arguments)]
+pub fn acs_stage_lanes_b3(
+    half: usize,
+    lanes: usize,
+    prev: &[f32],
+    cur: &mut [f32],
+    sl: [&[f32]; 3],
+    llr: [&[f32]; 3],
+    d0: &mut [f32],
+    d1: &mut [f32],
+    words: &mut [u64],
+) {
+    assert!((1..=64).contains(&lanes));
+    assert!(prev.len() >= 2 * half * lanes && cur.len() >= 2 * half * lanes);
+    assert!(sl.iter().all(|s| s.len() >= 2 * half));
+    assert!(llr.iter().all(|l| l.len() >= lanes));
+    assert!(d0.len() >= lanes && d1.len() >= lanes);
+    assert!(words.len() >= 2 * half);
+    let (l0, l1, l2) = (llr[0], llr[1], llr[2]);
+    let (lo, hi) = cur[..2 * half * lanes].split_at_mut(half * lanes);
+    for j in 0..half {
+        let (s0a, s1a, s2a) = (sl[0][2 * j], sl[1][2 * j], sl[2][2 * j]);
+        let (s0b, s1b, s2b) = (sl[0][2 * j + 1], sl[1][2 * j + 1], sl[2][2 * j + 1]);
+        let a_row = &prev[(2 * j) * lanes..(2 * j + 1) * lanes];
+        let b_row = &prev[(2 * j + 1) * lanes..(2 * j + 2) * lanes];
+        let lo_row = &mut lo[j * lanes..(j + 1) * lanes];
+        let hi_row = &mut hi[j * lanes..(j + 1) * lanes];
+        for l in 0..lanes {
+            let a = a_row[l];
+            let b = b_row[l];
+            let ga = s0a * l0[l] + s1a * l1[l] + s2a * l2[l];
+            let gb = s0b * l0[l] + s1b * l1[l] + s2b * l2[l];
+            let m0a = a + ga;
+            let m0b = b + gb;
+            let m1a = a - ga;
+            let m1b = b - gb;
+            lo_row[l] = m0a.max(m0b);
+            hi_row[l] = m1a.max(m1b);
+            d0[l] = m0a - m0b;
+            d1[l] = m1a - m1b;
+        }
+        words[j] = pack_signs64(&d0[..lanes]);
+        words[j + half] = pack_signs64(&d1[..lanes]);
+    }
+}
+
+/// Whether the lane fast path covers `trellis`: the butterfly
+/// reduction must hold and the sign-lane formulas must exist for the
+/// code's rate (β ∈ {2, 3}). Other codes take the per-frame fallback
+/// in [`crate::lanes::engine`], which is bit-exact by construction.
+pub fn lane_fast_path(trellis: &Trellis) -> bool {
+    trellis.butterfly_ok() && matches!(trellis.spec.beta, 2 | 3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Rng64;
+    use crate::code::CodeSpec;
+    use crate::viterbi::scalar::{acs_stage_from_llrs, AcsScratch};
+
+    /// One lane-ACS stage must reproduce the scalar stage bit-for-bit
+    /// in every lane, for both supported rates.
+    #[test]
+    fn lane_stage_matches_scalar_stage_bitwise() {
+        for spec in [CodeSpec::standard_k7(), CodeSpec::standard_k7_r3()] {
+            let trellis = crate::code::Trellis::new(spec.clone());
+            assert!(lane_fast_path(&trellis));
+            let ns = trellis.num_states();
+            let beta = spec.beta as usize;
+            let lanes = 5usize; // deliberately ragged (< 64, odd)
+            let mut rng = Rng64::seeded(0xACE5);
+
+            // Per-lane random previous rows and stage LLRs.
+            let prev_lane: Vec<Vec<f32>> = (0..lanes)
+                .map(|_| (0..ns).map(|_| (rng.uniform() as f32 - 0.5) * 20.0).collect())
+                .collect();
+            let llr_lane: Vec<Vec<f32>> = (0..lanes)
+                .map(|_| (0..beta).map(|_| (rng.uniform() as f32 - 0.5) * 8.0).collect())
+                .collect();
+
+            // Lane-major slabs.
+            let mut prev = vec![0.0f32; ns * lanes];
+            for j in 0..ns {
+                for l in 0..lanes {
+                    prev[j * lanes + l] = prev_lane[l][j];
+                }
+            }
+            let mut llr_slab = vec![0.0f32; beta * lanes];
+            for b in 0..beta {
+                for l in 0..lanes {
+                    llr_slab[b * lanes + l] = llr_lane[l][b];
+                }
+            }
+            let mut cur = vec![0.0f32; ns * lanes];
+            let mut d0 = vec![0.0f32; lanes];
+            let mut d1 = vec![0.0f32; lanes];
+            let mut words = vec![0u64; ns];
+            match beta {
+                2 => acs_stage_lanes_b2(
+                    ns / 2,
+                    lanes,
+                    &prev,
+                    &mut cur,
+                    &trellis.sign_lanes[0],
+                    &trellis.sign_lanes[1],
+                    &llr_slab[..lanes],
+                    &llr_slab[lanes..2 * lanes],
+                    &mut d0,
+                    &mut d1,
+                    &mut words,
+                ),
+                3 => acs_stage_lanes_b3(
+                    ns / 2,
+                    lanes,
+                    &prev,
+                    &mut cur,
+                    [
+                        &trellis.sign_lanes[0],
+                        &trellis.sign_lanes[1],
+                        &trellis.sign_lanes[2],
+                    ],
+                    [
+                        &llr_slab[..lanes],
+                        &llr_slab[lanes..2 * lanes],
+                        &llr_slab[2 * lanes..3 * lanes],
+                    ],
+                    &mut d0,
+                    &mut d1,
+                    &mut words,
+                ),
+                _ => unreachable!(),
+            }
+
+            // Scalar reference per lane.
+            for l in 0..lanes {
+                let mut scratch = AcsScratch::new(ns);
+                let mut cur_ref = vec![0.0f32; ns];
+                let mut words_ref = vec![0u64; (ns + 63) / 64];
+                acs_stage_from_llrs(
+                    &trellis,
+                    &llr_lane[l],
+                    &prev_lane[l],
+                    &mut scratch,
+                    &mut cur_ref,
+                    &mut words_ref,
+                );
+                for j in 0..ns {
+                    assert_eq!(
+                        cur[j * lanes + l].to_bits(),
+                        cur_ref[j].to_bits(),
+                        "beta={beta} lane {l} state {j} metric"
+                    );
+                    let d_ref = (words_ref[j >> 6] >> (j & 63)) & 1;
+                    let d = (words[j] >> l) & 1;
+                    assert_eq!(d, d_ref, "beta={beta} lane {l} state {j} decision");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_path_predicate() {
+        assert!(lane_fast_path(&crate::code::Trellis::new(CodeSpec::standard_k5())));
+        assert!(lane_fast_path(&crate::code::Trellis::new(CodeSpec::standard_k9())));
+    }
+}

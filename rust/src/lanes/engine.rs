@@ -1,0 +1,694 @@
+//! The lane-group decode core and the two registry engines built on
+//! it: `lanes` (single thread, L lanes in lockstep) and `lanes-mt`
+//! (thread pool over lane groups — grid × warp, both parallelism axes
+//! composed).
+
+use std::sync::Arc;
+
+use crate::channel::rng::Rng64;
+use crate::code::{CodeSpec, Trellis};
+use crate::frames::plan::{plan_frames, plan_lane_groups, FrameGeometry, FrameSpan, LaneGroup};
+use crate::util::threadpool::ThreadPool;
+use crate::viterbi::frame::FrameScratch;
+use crate::viterbi::parallel::SharedOut;
+use crate::viterbi::unified::decode_frame_parallel_tb;
+use crate::viterbi::{
+    Engine, ParallelTraceback, StartPolicy, StreamEnd, TracebackStart,
+};
+use super::acs::{acs_stage_lanes_b2, acs_stage_lanes_b3, lane_fast_path};
+use super::metrics::{argmax_lanes, LaneMetrics};
+use super::survivor::LaneSurvivors;
+use super::traceback::traceback_segment_lane;
+use super::MAX_LANES;
+
+/// One lane's frame within a lockstep group. All jobs of a group share
+/// the processed length, head offset and decoded length; start state,
+/// traceback start and outputs are per lane.
+pub struct LaneJob<'a> {
+    /// The frame's stage-major LLRs (`len · β` values).
+    pub llrs: &'a [f32],
+    /// Frame index within its stream (seeds the `Random` start policy).
+    pub span_index: usize,
+    /// Pinned initial state (stream head) or all-equal start.
+    pub start_state: Option<u32>,
+    /// Traceback start for subframes starting at the frame's final
+    /// stage (`State(0)` for a terminated stream's last frame).
+    pub tb: TracebackStart,
+    /// Receives the frame's decoded bits (`out_len` of them).
+    pub out: &'a mut [u8],
+}
+
+/// Reusable scratch for lane-group decoding: lane-major LLR slab,
+/// ping-pong path metrics, bit-packed survivors and per-lane argmax
+/// buffers. One scratch serves any number of groups sequentially.
+pub struct LaneScratch {
+    pm: LaneMetrics,
+    surv: LaneSurvivors,
+    llr_slab: Vec<f32>,
+    d0: Vec<f32>,
+    d1: Vec<f32>,
+    best: Vec<f32>,
+    boundary_states: Vec<u32>,
+    final_best: Vec<u32>,
+}
+
+impl LaneScratch {
+    /// Allocate scratch for groups of up to `lanes` lanes over frames
+    /// of up to `max_stages` stages.
+    pub fn new(states: usize, max_stages: usize, lanes: usize) -> Self {
+        LaneScratch {
+            pm: LaneMetrics::new(states, lanes),
+            surv: LaneSurvivors::new(states, max_stages),
+            llr_slab: Vec::new(),
+            d0: vec![0.0; lanes],
+            d1: vec![0.0; lanes],
+            best: vec![0.0; lanes],
+            boundary_states: Vec::new(),
+            final_best: vec![0; lanes],
+        }
+    }
+
+    fn ensure(
+        &mut self,
+        states: usize,
+        stages: usize,
+        lanes: usize,
+        beta: usize,
+        boundaries: usize,
+    ) {
+        self.pm.ensure(states, lanes);
+        self.surv.ensure(states, stages);
+        self.llr_slab.resize(stages * beta * lanes, 0.0);
+        self.d0.resize(lanes.max(self.d0.len()), 0.0);
+        self.d1.resize(lanes.max(self.d1.len()), 0.0);
+        self.best.resize(lanes.max(self.best.len()), 0.0);
+        self.final_best.resize(lanes.max(self.final_best.len()), 0);
+        self.boundary_states.resize(boundaries * lanes, 0);
+    }
+}
+
+/// Decode `jobs.len() ≤ 64` equal-geometry frames in SIMD lockstep
+/// with the unified parallel-subframe-traceback algorithm. `head` and
+/// `out_len` are the shared frame geometry (offset of the first
+/// decoded stage, number of decoded stages); every lane must present
+/// the same LLR length.
+///
+/// Each lane's output is bit-exactly what
+/// [`decode_frame_parallel_tb`] would produce for that frame alone —
+/// the lane ACS replays the scalar butterfly per lane in the same
+/// operation order (see [`super::acs`]).
+pub fn decode_lane_group(
+    trellis: &Trellis,
+    ptb: &ParallelTraceback,
+    head: usize,
+    out_len: usize,
+    jobs: &mut [LaneJob<'_>],
+    scratch: &mut LaneScratch,
+) {
+    let lanes = jobs.len();
+    assert!((1..=MAX_LANES).contains(&lanes), "1..=64 lanes per group");
+    assert!(lane_fast_path(trellis), "lane fast path unsupported for this code");
+    let beta = trellis.spec.beta as usize;
+    let ns = trellis.num_states();
+    let stages = jobs[0].llrs.len() / beta;
+    assert!(stages > 0, "empty frame");
+    assert!(head + out_len <= stages);
+    for job in jobs.iter() {
+        assert_eq!(job.llrs.len(), stages * beta, "non-uniform lane geometry");
+        assert!(job.out.len() >= out_len);
+    }
+
+    // Subframe traceback starts and the deduplicated boundary stages
+    // whose per-lane argmax states the forward pass records — the same
+    // arithmetic as the unified engine.
+    let n_sub = ptb.num_subframes(out_len);
+    let starts: Vec<usize> = (0..n_sub)
+        .map(|s| (head + (s + 1) * ptb.f0 + ptb.v2).min(stages) - 1)
+        .collect();
+    let mut boundaries: Vec<usize> = starts.clone();
+    boundaries.dedup();
+
+    scratch.ensure(ns, stages, lanes, beta, boundaries.len());
+    let LaneScratch { pm, surv, llr_slab, d0, d1, best, boundary_states, final_best } =
+        scratch;
+
+    // Transpose LLRs to lane-major: slab[(t·β + b)·L + l].
+    for (l, job) in jobs.iter().enumerate() {
+        for (i, &v) in job.llrs.iter().enumerate() {
+            llr_slab[i * lanes + l] = v;
+        }
+    }
+
+    let start_states: Vec<Option<u32>> = jobs.iter().map(|j| j.start_state).collect();
+    pm.init(&start_states);
+
+    // Forward pass: lane-parallel ACS + per-lane boundary argmaxes.
+    let half = ns / 2;
+    let mut bi = 0usize;
+    for t in 0..stages {
+        let (prev, cur) = pm.rows(t & 1);
+        let words = surv.stage_mut(t);
+        let base = t * beta * lanes;
+        match beta {
+            2 => acs_stage_lanes_b2(
+                half,
+                lanes,
+                prev,
+                cur,
+                &trellis.sign_lanes[0],
+                &trellis.sign_lanes[1],
+                &llr_slab[base..base + lanes],
+                &llr_slab[base + lanes..base + 2 * lanes],
+                d0,
+                d1,
+                words,
+            ),
+            3 => acs_stage_lanes_b3(
+                half,
+                lanes,
+                prev,
+                cur,
+                [
+                    &trellis.sign_lanes[0],
+                    &trellis.sign_lanes[1],
+                    &trellis.sign_lanes[2],
+                ],
+                [
+                    &llr_slab[base..base + lanes],
+                    &llr_slab[base + lanes..base + 2 * lanes],
+                    &llr_slab[base + 2 * lanes..base + 3 * lanes],
+                ],
+                d0,
+                d1,
+                words,
+            ),
+            _ => unreachable!("lane_fast_path admits β ∈ {{2, 3}} only"),
+        }
+        if bi < boundaries.len() && boundaries[bi] == t {
+            argmax_lanes(
+                cur,
+                ns,
+                lanes,
+                best,
+                &mut boundary_states[bi * lanes..(bi + 1) * lanes],
+            );
+            bi += 1;
+        }
+        if t == stages - 1 {
+            argmax_lanes(cur, ns, lanes, best, final_best);
+        }
+    }
+
+    // Parallel subframe traceback, per lane.
+    for (l, job) in jobs.iter_mut().enumerate() {
+        let mut rng = match ptb.policy {
+            StartPolicy::Random { seed } => Some(Rng64::seeded(
+                seed ^ (job.span_index as u64).wrapping_mul(0x9e3779b97f4a7c15),
+            )),
+            _ => None,
+        };
+        for s in 0..n_sub {
+            let emit_lo = head + s * ptb.f0;
+            let emit_hi = head + ((s + 1) * ptb.f0).min(out_len);
+            let from = starts[s];
+            let start = if from == stages - 1 {
+                match job.tb {
+                    TracebackStart::BestMetric => final_best[l],
+                    TracebackStart::State(st) => st,
+                }
+            } else {
+                match ptb.policy {
+                    StartPolicy::StoredArgmax => {
+                        let idx =
+                            boundaries.binary_search(&from).expect("boundary recorded");
+                        boundary_states[idx * lanes + l]
+                    }
+                    StartPolicy::Random { .. } => {
+                        rng.as_mut().unwrap().gen_range_usize(0, ns) as u32
+                    }
+                    StartPolicy::Fixed(st) => st,
+                }
+            };
+            traceback_segment_lane(
+                trellis,
+                surv,
+                l,
+                start,
+                from,
+                emit_lo,
+                emit_lo,
+                emit_hi,
+                &mut job.out[emit_lo - head..emit_hi - head],
+            );
+        }
+    }
+}
+
+/// Build the per-lane jobs of one group, carving disjoint output
+/// slices off `out_region` (which must cover exactly the group's
+/// decoded stages, in order).
+fn group_jobs<'a>(
+    spans: &[FrameSpan],
+    g: &LaneGroup,
+    llrs: &'a [f32],
+    beta: usize,
+    stages: usize,
+    end: StreamEnd,
+    out_region: &'a mut [u8],
+) -> Vec<LaneJob<'a>> {
+    let mut jobs = Vec::with_capacity(g.count);
+    let mut rest = out_region;
+    for span in &spans[g.first..g.first + g.count] {
+        let (slice, r) = std::mem::take(&mut rest).split_at_mut(span.out_len);
+        rest = r;
+        jobs.push(LaneJob {
+            llrs: &llrs[span.start * beta..(span.start + span.len) * beta],
+            span_index: span.index,
+            start_state: if span.index == 0 { Some(0) } else { None },
+            tb: lane_tb(span, stages, end),
+            out: slice,
+        });
+    }
+    jobs
+}
+
+/// Traceback start for a span's final stage, mirroring
+/// `TiledEngine::decode_frame`.
+fn lane_tb(span: &FrameSpan, stages: usize, end: StreamEnd) -> TracebackStart {
+    let is_last = span.out_start + span.out_len == stages;
+    match (is_last, end) {
+        (true, StreamEnd::Terminated) => TracebackStart::State(0),
+        _ => TracebackStart::BestMetric,
+    }
+}
+
+/// Single-threaded lane-batched engine (`lanes` in the registry):
+/// frames are grouped into runs of up to `L` geometry-identical lanes
+/// and each run is decoded in lockstep.
+pub struct LanesEngine {
+    spec: CodeSpec,
+    trellis: Trellis,
+    geo: FrameGeometry,
+    ptb: ParallelTraceback,
+    lanes: usize,
+    name: String,
+}
+
+impl LanesEngine {
+    /// Build a lane engine; `lanes` must be in `1..=64`.
+    pub fn new(
+        spec: CodeSpec,
+        geo: FrameGeometry,
+        ptb: ParallelTraceback,
+        lanes: usize,
+    ) -> Self {
+        assert!((1..=MAX_LANES).contains(&lanes), "lane width must be 1..=64");
+        let trellis = Trellis::new(spec.clone());
+        let name = format!(
+            "lanes(f={},v1={},v2={},f0={},L={})",
+            geo.f, geo.v1, geo.v2, ptb.f0, lanes
+        );
+        LanesEngine { spec, trellis, geo, ptb, lanes, name }
+    }
+
+    /// The engine's precomputed trellis tables.
+    pub fn trellis(&self) -> &Trellis {
+        &self.trellis
+    }
+
+    /// Frame tiling geometry.
+    pub fn geo(&self) -> FrameGeometry {
+        self.geo
+    }
+
+    /// Parallel-traceback configuration.
+    pub fn ptb(&self) -> &ParallelTraceback {
+        &self.ptb
+    }
+
+    /// Configured lane width L.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Per-frame fallback for codes outside the lane fast path:
+    /// identical to the unified engine's stream loop (bit-exact by
+    /// construction, just not lane-parallel).
+    fn decode_stream_fallback(
+        &self,
+        llrs: &[f32],
+        stages: usize,
+        end: StreamEnd,
+        spans: &[FrameSpan],
+        out: &mut [u8],
+    ) {
+        let beta = self.spec.beta as usize;
+        let mut scratch = FrameScratch::new(self.trellis.num_states(), self.geo.span());
+        for span in spans {
+            let fl = &llrs[span.start * beta..(span.start + span.len) * beta];
+            let start_state = if span.index == 0 { Some(0) } else { None };
+            decode_frame_parallel_tb(
+                &self.trellis,
+                fl,
+                span,
+                start_state,
+                lane_tb(span, stages, end),
+                &self.ptb,
+                &mut scratch,
+                &mut out[span.out_start..span.out_start + span.out_len],
+            );
+        }
+    }
+}
+
+impl Engine for LanesEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn spec(&self) -> &CodeSpec {
+        &self.spec
+    }
+
+    fn decode_stream(&self, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+        let beta = self.spec.beta as usize;
+        assert_eq!(llrs.len(), stages * beta);
+        let spans = plan_frames(stages, self.geo);
+        let mut out = vec![0u8; stages];
+        if spans.is_empty() {
+            return out;
+        }
+        if !lane_fast_path(&self.trellis) {
+            self.decode_stream_fallback(llrs, stages, end, &spans, &mut out);
+            return out;
+        }
+        let groups = plan_lane_groups(&spans, self.lanes);
+        let mut scratch =
+            LaneScratch::new(self.trellis.num_states(), self.geo.span(), self.lanes);
+        let mut rest: &mut [u8] = &mut out;
+        for g in &groups {
+            let glen: usize =
+                spans[g.first..g.first + g.count].iter().map(|s| s.out_len).sum();
+            let (region, r) = std::mem::take(&mut rest).split_at_mut(glen);
+            rest = r;
+            let mut jobs = group_jobs(&spans, g, llrs, beta, stages, end, region);
+            decode_lane_group(
+                &self.trellis,
+                &self.ptb,
+                spans[g.first].head(),
+                spans[g.first].out_len,
+                &mut jobs,
+                &mut scratch,
+            );
+        }
+        out
+    }
+}
+
+/// Multithreaded lane-batched engine (`lanes-mt` in the registry): a
+/// thread pool fans lane *groups* out to workers, composing the
+/// grid-level (threads) and warp-level (lanes) parallelism axes.
+pub struct LanesMtEngine {
+    inner: Arc<LanesEngine>,
+    pool: Arc<ThreadPool>,
+    name: String,
+}
+
+impl LanesMtEngine {
+    /// Wrap `inner`, fanning lane groups out over `pool`.
+    pub fn new(inner: LanesEngine, pool: Arc<ThreadPool>) -> Self {
+        let name = format!("lanes-mt[{}]×{}", inner.name, pool.size());
+        LanesMtEngine { inner: Arc::new(inner), pool, name }
+    }
+
+    /// The wrapped single-threaded lane engine.
+    pub fn inner(&self) -> &LanesEngine {
+        &self.inner
+    }
+}
+
+impl Engine for LanesMtEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn spec(&self) -> &CodeSpec {
+        self.inner.spec()
+    }
+
+    fn decode_stream(&self, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+        let beta = self.inner.spec.beta as usize;
+        assert_eq!(llrs.len(), stages * beta);
+        if !lane_fast_path(&self.inner.trellis) {
+            return self.inner.decode_stream(llrs, stages, end);
+        }
+        let spans = plan_frames(stages, self.inner.geo);
+        let mut out = vec![0u8; stages];
+        if spans.is_empty() {
+            return out;
+        }
+        let groups = plan_lane_groups(&spans, self.inner.lanes);
+
+        let out_ptr = SharedOut(out.as_mut_ptr());
+        let llrs = Arc::new(llrs.to_vec());
+        let spans = Arc::new(spans);
+        let groups = Arc::new(groups);
+        let n = groups.len();
+        let job_count = (self.pool.size() * 2).min(n).max(1);
+        let per = (n + job_count - 1) / job_count;
+        let mut batch: Vec<Box<dyn FnOnce() + Send>> = Vec::with_capacity(job_count);
+        for c in 0..job_count {
+            let lo = c * per;
+            let hi = ((c + 1) * per).min(n);
+            if lo >= hi {
+                break;
+            }
+            let inner = Arc::clone(&self.inner);
+            let llrs = Arc::clone(&llrs);
+            let spans = Arc::clone(&spans);
+            let groups = Arc::clone(&groups);
+            let out_ptr = out_ptr;
+            batch.push(Box::new(move || {
+                // Rebind the wrapper so edition-2021 disjoint capture
+                // doesn't pull in the bare `*mut u8`.
+                let out_ptr: SharedOut = out_ptr;
+                let mut scratch = LaneScratch::new(
+                    inner.trellis.num_states(),
+                    inner.geo.span(),
+                    inner.lanes,
+                );
+                for g in &groups[lo..hi] {
+                    let glen: usize = spans[g.first..g.first + g.count]
+                        .iter()
+                        .map(|s| s.out_len)
+                        .sum();
+                    // SAFETY: a group's spans decode one contiguous
+                    // run of stages (plan_frames property test), each
+                    // span belongs to exactly one group, and groups
+                    // have pairwise-disjoint decoded regions — so
+                    // concurrent writes never alias.
+                    let region = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            out_ptr.0.add(spans[g.first].out_start),
+                            glen,
+                        )
+                    };
+                    let mut jobs =
+                        group_jobs(&spans, g, llrs.as_slice(), beta, stages, end, region);
+                    decode_lane_group(
+                        &inner.trellis,
+                        &inner.ptb,
+                        spans[g.first].head(),
+                        spans[g.first].out_len,
+                        &mut jobs,
+                        &mut scratch,
+                    );
+                }
+            }));
+        }
+        self.pool.run_batch(batch);
+        out
+    }
+}
+
+fn build_lanes(p: &crate::viterbi::registry::BuildParams) -> LanesEngine {
+    LanesEngine::new(
+        p.spec.clone(),
+        p.geo,
+        ParallelTraceback::new(p.f0, p.geo.v2, StartPolicy::StoredArgmax),
+        p.lanes.clamp(1, MAX_LANES),
+    )
+}
+
+fn lanes_traceback_bytes(p: &crate::viterbi::registry::BuildParams) -> usize {
+    let lanes = p.lanes.clamp(1, MAX_LANES);
+    let boundaries = (p.geo.f + p.f0 - 1) / p.f0;
+    crate::memmodel::lane_traceback_working_bytes(p.spec.num_states(), p.geo.span(), lanes)
+        + boundaries * lanes * 4
+}
+
+/// Registry entry for the single-threaded lane-batched engine.
+pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
+    use crate::viterbi::registry::{BuildParams, EngineSpec};
+    EngineSpec {
+        name: "lanes",
+        description: "lane-batched SIMD engine: L equal-geometry frames decoded in lockstep \
+                      (the CPU analogue of the GPU warp)",
+        build: |p: &BuildParams| std::sync::Arc::new(build_lanes(p)),
+        traceback_bytes: lanes_traceback_bytes,
+        lane_width: |p: &BuildParams| p.lanes.clamp(1, MAX_LANES),
+    }
+}
+
+/// Registry entry for the multithreaded lane-batched engine.
+pub(crate) fn engine_entry_mt() -> crate::viterbi::registry::EngineSpec {
+    use crate::viterbi::registry::{pool_of, BuildParams, EngineSpec};
+    EngineSpec {
+        name: "lanes-mt",
+        description: "thread pool over lane groups: frame-level and lane-level parallelism \
+                      composed (GPU grid × warp)",
+        build: |p: &BuildParams| {
+            std::sync::Arc::new(LanesMtEngine::new(build_lanes(p), pool_of(p.threads)))
+        },
+        traceback_bytes: |p: &BuildParams| {
+            // One scratch per worker actually decoding a group.
+            let lanes = p.lanes.clamp(1, MAX_LANES);
+            let frames = (p.stream_stages + p.geo.f - 1) / p.geo.f;
+            let groups = (frames + lanes - 1) / lanes;
+            lanes_traceback_bytes(p) * p.threads.min(groups).max(1)
+        },
+        lane_width: |p: &BuildParams| p.lanes.clamp(1, MAX_LANES),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{bpsk, llr, AwgnChannel, Rng64};
+    use crate::code::{encode, Termination};
+    use crate::viterbi::{TiledEngine, TracebackMode};
+
+    fn noisy_workload(
+        spec: &CodeSpec,
+        n: usize,
+        ebn0: f64,
+        seed: u64,
+    ) -> (Vec<u8>, Vec<f32>, usize) {
+        let mut rng = Rng64::seeded(seed);
+        let mut bits = vec![0u8; n];
+        rng.fill_bits(&mut bits);
+        let enc = encode(spec, &bits, Termination::Terminated);
+        let stages = n + (spec.k as usize - 1);
+        let ch = AwgnChannel::new(ebn0, spec.rate());
+        let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+        (bits, llr::llrs_from_samples(&rx, ch.sigma()), stages)
+    }
+
+    fn unified_reference(
+        spec: &CodeSpec,
+        geo: FrameGeometry,
+        ptb: ParallelTraceback,
+        llrs: &[f32],
+        stages: usize,
+        end: StreamEnd,
+    ) -> Vec<u8> {
+        TiledEngine::new(spec.clone(), geo, TracebackMode::Parallel(ptb))
+            .decode_stream(llrs, stages, end)
+    }
+
+    #[test]
+    fn lanes_equals_unified_bit_for_bit() {
+        let spec = CodeSpec::standard_k7();
+        let (_bits, llrs, stages) = noisy_workload(&spec, 20_000, 3.0, 0x1A);
+        let geo = FrameGeometry::new(256, 20, 45);
+        let ptb = ParallelTraceback::new(32, 45, StartPolicy::StoredArgmax);
+        let reference =
+            unified_reference(&spec, geo, ptb, &llrs, stages, StreamEnd::Terminated);
+        for lanes in [1usize, 4, 64] {
+            let e = LanesEngine::new(spec.clone(), geo, ptb, lanes);
+            let out = e.decode_stream(&llrs, stages, StreamEnd::Terminated);
+            assert_eq!(out, reference, "L={lanes}");
+        }
+    }
+
+    #[test]
+    fn lanes_mt_equals_unified_bit_for_bit() {
+        let spec = CodeSpec::standard_k7();
+        let (_bits, llrs, stages) = noisy_workload(&spec, 30_000, 2.0, 0x1B);
+        let geo = FrameGeometry::new(128, 20, 30);
+        let ptb = ParallelTraceback::new(16, 30, StartPolicy::StoredArgmax);
+        let reference =
+            unified_reference(&spec, geo, ptb, &llrs, stages, StreamEnd::Terminated);
+        let e = LanesMtEngine::new(
+            LanesEngine::new(spec.clone(), geo, ptb, 8),
+            Arc::new(ThreadPool::new(4)),
+        );
+        assert_eq!(e.decode_stream(&llrs, stages, StreamEnd::Terminated), reference);
+    }
+
+    #[test]
+    fn ragged_tail_and_truncated_stream() {
+        // 11 frames with L=4 → groups 1 + 4 + 4 + 1(ragged) + 1, on a
+        // truncated stream (BestMetric final traceback).
+        let spec = CodeSpec::standard_k5();
+        let (_bits, llrs, stages) = noisy_workload(&spec, 64 * 11 - 17, 4.0, 0x1C);
+        let geo = FrameGeometry::new(64, 8, 16);
+        let ptb = ParallelTraceback::new(8, 16, StartPolicy::StoredArgmax);
+        let reference =
+            unified_reference(&spec, geo, ptb, &llrs, stages, StreamEnd::Truncated);
+        let e = LanesEngine::new(spec.clone(), geo, ptb, 4);
+        assert_eq!(e.decode_stream(&llrs, stages, StreamEnd::Truncated), reference);
+    }
+
+    #[test]
+    fn random_policy_matches_unified() {
+        // The Random start policy draws per (frame, subframe) from the
+        // same seeded stream in both engines.
+        let spec = CodeSpec::standard_k7();
+        let (_bits, llrs, stages) = noisy_workload(&spec, 8_000, 3.0, 0x1D);
+        let geo = FrameGeometry::new(128, 20, 20);
+        let ptb = ParallelTraceback::new(32, 20, StartPolicy::Random { seed: 99 });
+        let reference =
+            unified_reference(&spec, geo, ptb, &llrs, stages, StreamEnd::Terminated);
+        let e = LanesEngine::new(spec.clone(), geo, ptb, 16);
+        assert_eq!(e.decode_stream(&llrs, stages, StreamEnd::Terminated), reference);
+    }
+
+    #[test]
+    fn empty_stream_is_empty() {
+        let spec = CodeSpec::standard_k7();
+        let e = LanesEngine::new(
+            spec,
+            FrameGeometry::new(64, 8, 8),
+            ParallelTraceback::new(8, 8, StartPolicy::StoredArgmax),
+            8,
+        );
+        assert!(e.decode_stream(&[], 0, StreamEnd::Truncated).is_empty());
+    }
+
+    #[test]
+    fn engine_names() {
+        let spec = CodeSpec::standard_k7();
+        let geo = FrameGeometry::new(256, 20, 45);
+        let ptb = ParallelTraceback::new(32, 45, StartPolicy::StoredArgmax);
+        let e = LanesEngine::new(spec.clone(), geo, ptb, 64);
+        assert_eq!(e.name(), "lanes(f=256,v1=20,v2=45,f0=32,L=64)");
+        let mt = LanesMtEngine::new(
+            LanesEngine::new(spec, geo, ptb, 64),
+            Arc::new(ThreadPool::new(2)),
+        );
+        assert!(mt.name().starts_with("lanes-mt[lanes(f=256"));
+    }
+
+    #[test]
+    #[should_panic(expected = "lane width")]
+    fn zero_lanes_rejected() {
+        let spec = CodeSpec::standard_k7();
+        LanesEngine::new(
+            spec,
+            FrameGeometry::new(64, 8, 8),
+            ParallelTraceback::new(8, 8, StartPolicy::StoredArgmax),
+            0,
+        );
+    }
+}

@@ -1,0 +1,151 @@
+//! Lane-major path-metric storage: `[state][lane]` f32 slabs.
+//!
+//! The σ recurrence only ever needs the previous stage's row (paper
+//! §IV-C), so two ping-pong slabs of `states · lanes` f32 suffice for
+//! any frame length — the lane-batched generalization of the two-row
+//! scheme in `viterbi::scalar`.
+
+/// Ping-pong lane-major path-metric slabs for one lane group.
+pub struct LaneMetrics {
+    states: usize,
+    lanes: usize,
+    pm: [Vec<f32>; 2],
+}
+
+impl LaneMetrics {
+    /// Allocate slabs for `states · lanes` metrics.
+    pub fn new(states: usize, lanes: usize) -> Self {
+        LaneMetrics {
+            states,
+            lanes,
+            pm: [vec![0.0; states * lanes], vec![0.0; states * lanes]],
+        }
+    }
+
+    /// Grow (never shrink) to hold `states · lanes` metrics.
+    pub fn ensure(&mut self, states: usize, lanes: usize) {
+        if states * lanes > self.states * self.lanes {
+            self.pm = [vec![0.0; states * lanes], vec![0.0; states * lanes]];
+        }
+        self.states = states;
+        self.lanes = lanes;
+    }
+
+    /// Allocated lane width of the slabs.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Initialize the stage-0 slab: lane `l` with `start_states[l] =
+    /// Some(s)` is pinned (−∞ everywhere except state `s`, exactly as
+    /// the scalar forward pass does); `None` lanes start all-equal.
+    /// Lanes beyond `start_states.len()` are inactive and start at 0.
+    pub fn init(&mut self, start_states: &[Option<u32>]) {
+        assert!(start_states.len() <= self.lanes);
+        let lanes = self.lanes;
+        let row = &mut self.pm[0][..self.states * lanes];
+        row.iter_mut().for_each(|x| *x = 0.0);
+        for (l, ss) in start_states.iter().enumerate() {
+            if let Some(s) = *ss {
+                for j in 0..self.states {
+                    row[j * lanes + l] =
+                        if j == s as usize { 0.0 } else { f32::NEG_INFINITY };
+                }
+            }
+        }
+    }
+
+    /// Split into (previous, current) slabs for stage `t` (`t & 1`
+    /// parity, matching `viterbi::scalar::pm_rows`).
+    #[inline(always)]
+    pub fn rows(&mut self, t_parity: usize) -> (&[f32], &mut [f32]) {
+        let (a, b) = self.pm.split_at_mut(1);
+        if t_parity == 0 {
+            (&a[0][..], &mut b[0][..])
+        } else {
+            (&b[0][..], &mut a[0][..])
+        }
+    }
+
+    /// Read-only view of one slab by parity: after stage `t` the
+    /// current σ row is `row((t + 1) & 1)`, so the final row of an
+    /// `n`-stage pass is `row(n & 1)` — the scalar decoder's
+    /// convention.
+    pub fn row(&self, parity: usize) -> &[f32] {
+        &self.pm[parity]
+    }
+}
+
+/// Per-lane argmax over states of a lane-major slab, with the scalar
+/// decoder's tie-breaking (first strict maximum in ascending state
+/// order wins). `best` is caller-provided scratch of ≥ `lanes` f32;
+/// winners land in `idx[..lanes]`.
+pub fn argmax_lanes(
+    row: &[f32],
+    states: usize,
+    lanes: usize,
+    best: &mut [f32],
+    idx: &mut [u32],
+) {
+    assert!(row.len() >= states * lanes);
+    assert!(best.len() >= lanes && idx.len() >= lanes);
+    assert!(states > 0);
+    best[..lanes].copy_from_slice(&row[..lanes]);
+    idx[..lanes].iter_mut().for_each(|x| *x = 0);
+    for j in 1..states {
+        let r = &row[j * lanes..(j + 1) * lanes];
+        for l in 0..lanes {
+            if r[l] > best[l] {
+                best[l] = r[l];
+                idx[l] = j as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_pins_lanes_independently() {
+        let mut m = LaneMetrics::new(4, 3);
+        m.init(&[Some(2), None]);
+        let row = m.row(0);
+        // Lane 0 pinned to state 2.
+        let at = |j: usize, l: usize| row[j * 3 + l];
+        assert_eq!(at(0, 0), f32::NEG_INFINITY);
+        assert_eq!(at(1, 0), f32::NEG_INFINITY);
+        assert_eq!(at(2, 0), 0.0);
+        assert_eq!(at(3, 0), f32::NEG_INFINITY);
+        // Lane 1 all-equal; lane 2 inactive, all zero.
+        for j in 0..4 {
+            assert_eq!(at(j, 1), 0.0);
+            assert_eq!(at(j, 2), 0.0);
+        }
+    }
+
+    #[test]
+    fn argmax_matches_scalar_semantics() {
+        // Two lanes interleaved: lane 0 = [1, 3, 3, 0], lane 1 = [5, 2, 7, 7].
+        let row = [1.0f32, 5.0, 3.0, 2.0, 3.0, 7.0, 0.0, 7.0];
+        let mut best = [0.0f32; 2];
+        let mut idx = [0u32; 2];
+        argmax_lanes(&row, 4, 2, &mut best, &mut idx);
+        // Ties (states 1/2 in lane 0, states 2/3 in lane 1) go to the
+        // earliest state, as in viterbi::scalar::argmax.
+        assert_eq!(idx, [1, 2]);
+        assert_eq!(best, [3.0, 7.0]);
+    }
+
+    #[test]
+    fn rows_ping_pong() {
+        let mut m = LaneMetrics::new(2, 1);
+        {
+            let (_prev, cur) = m.rows(0);
+            cur[0] = 42.0;
+        }
+        let (prev, _cur) = m.rows(1);
+        assert_eq!(prev[0], 42.0);
+    }
+}

@@ -1,0 +1,50 @@
+//! Lane-batched SIMD decode subsystem — the CPU analogue of the GPU
+//! grid's *data* parallelism.
+//!
+//! The GPU decoder owes its throughput to decoding many frames
+//! simultaneously in one kernel launch: every warp lane carries one
+//! frame through the same instruction stream. The thread-level
+//! `viterbi::parallel` driver models the grid (one pool job per
+//! frame); this module models the warp: `L ≤ 64` equal-geometry frames
+//! are decoded in **lockstep**, with all per-state data stored
+//! lane-major (structure-of-arrays) so the innermost loop is a
+//! fixed-stride pass over lanes the autovectorizer turns into SIMD.
+//!
+//! Layout (one lane group):
+//!
+//! * **LLRs** — transposed to `[stage][beta][lane]` ([`engine`]);
+//! * **path metrics** — `[state][lane]` f32 slabs, ping-pong rows
+//!   ([`metrics::LaneMetrics`]);
+//! * **survivors** — 1 bit per state per stage **per lane**, packed
+//!   into one `u64` word per (stage, state)
+//!   ([`survivor::LaneSurvivors`]) — the same 1-bit decision packing
+//!   the paper uses in shared memory, extended along the lane axis;
+//! * **ACS** — the butterfly recurrence of `viterbi::scalar`, executed
+//!   per lane with bit-identical operation order ([`acs`]), so every
+//!   lane decodes exactly as the `unified` engine would have decoded
+//!   that frame alone;
+//! * **traceback** — parallel subframe traceback per lane
+//!   ([`traceback`]), with `StartPolicy`-resolved start states
+//!   recorded per lane during the forward pass.
+//!
+//! Two registry engines are built on this core: `lanes` (one thread,
+//! `L` lanes in lockstep) and `lanes-mt` (a thread pool over lane
+//! groups, composing both parallelism axes). Both are required by the
+//! parity test (`rust/tests/lanes_parity.rs`) to decode bit-exactly
+//! identically to `unified`.
+
+#![warn(missing_docs)]
+
+pub mod acs;
+pub mod engine;
+pub mod metrics;
+pub mod survivor;
+pub mod traceback;
+
+pub use engine::{decode_lane_group, LaneJob, LaneScratch, LanesEngine, LanesMtEngine};
+pub use metrics::LaneMetrics;
+pub use survivor::LaneSurvivors;
+
+/// Hard upper bound on lanes per group: survivor decisions pack one
+/// bit per lane into a `u64` word per (stage, state).
+pub const MAX_LANES: usize = 64;

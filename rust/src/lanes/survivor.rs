@@ -1,0 +1,87 @@
+//! Bit-packed lane-major survivor storage.
+//!
+//! One `u64` word per (stage, state) holds the survivor decision bit of
+//! every lane: bit `l` is lane `l`'s winning-predecessor selector for
+//! that state at that stage. A full 64-lane group therefore stores
+//! survivors at exactly **1 bit per state per stage per lane** — the
+//! paper's shared-memory survivor density (§IV-C), extended along the
+//! lane axis instead of padded per frame.
+
+use crate::lanes::MAX_LANES;
+
+/// Survivor decision words for one lane group: `[stage][state]` u64.
+pub struct LaneSurvivors {
+    states: usize,
+    data: Vec<u64>,
+}
+
+impl LaneSurvivors {
+    /// Allocate for `states · stages` decision words.
+    pub fn new(states: usize, stages: usize) -> Self {
+        LaneSurvivors { states, data: vec![0u64; states * stages] }
+    }
+
+    /// Grow (never shrink) to hold `stages` stages of `states` words.
+    pub fn ensure(&mut self, states: usize, stages: usize) {
+        if states * stages > self.data.len() {
+            self.data = vec![0u64; states * stages];
+        }
+        self.states = states;
+    }
+
+    /// Mutable word row for stage `t` (one u64 per state).
+    #[inline(always)]
+    pub fn stage_mut(&mut self, t: usize) -> &mut [u64] {
+        &mut self.data[t * self.states..(t + 1) * self.states]
+    }
+
+    /// Decision bit of `lane` for `state` at stage `t`.
+    #[inline(always)]
+    pub fn get(&self, t: usize, state: u32, lane: usize) -> u32 {
+        debug_assert!(lane < MAX_LANES);
+        ((self.data[t * self.states + state as usize] >> lane) & 1) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bits::unpack_bits;
+
+    #[test]
+    fn lane_bits_round_trip() {
+        let mut s = LaneSurvivors::new(4, 3);
+        // Stage 1, state 2: lanes 0 and 5 chose predecessor 1.
+        s.stage_mut(1)[2] = 0b100001;
+        assert_eq!(s.get(1, 2, 0), 1);
+        assert_eq!(s.get(1, 2, 1), 0);
+        assert_eq!(s.get(1, 2, 5), 1);
+        assert_eq!(s.get(0, 2, 0), 0);
+        assert_eq!(s.get(2, 2, 5), 0);
+    }
+
+    #[test]
+    fn words_agree_with_unpack_bits() {
+        // The per-(stage,state) word is exactly a pack_bits word over
+        // lanes: util::bits::unpack_bits must read back the same
+        // per-lane decisions the accessor reports.
+        let mut s = LaneSurvivors::new(2, 1);
+        s.stage_mut(0)[0] = 0b1011;
+        s.stage_mut(0)[1] = 0b0110;
+        for state in 0..2u32 {
+            let word = [s.stage_mut(0)[state as usize]];
+            let bits = unpack_bits(&word, 7);
+            for (lane, &b) in bits.iter().enumerate() {
+                assert_eq!(b as u32, s.get(0, state, lane), "state {state} lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn ensure_grows_and_relabels() {
+        let mut s = LaneSurvivors::new(4, 2);
+        s.ensure(8, 4);
+        s.stage_mut(3)[7] = 1;
+        assert_eq!(s.get(3, 7, 0), 1);
+    }
+}

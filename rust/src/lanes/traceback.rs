@@ -1,0 +1,89 @@
+//! Per-lane traceback over bit-packed lane survivors.
+//!
+//! The lane engines reuse the `unified` engine's parallel-subframe
+//! traceback semantics (`StartPolicy::StoredArgmax` starts recorded
+//! per lane during the forward pass); this module provides the
+//! survivor walk for one lane, mirroring
+//! `viterbi::frame::traceback_segment` exactly.
+
+use crate::code::Trellis;
+use super::survivor::LaneSurvivors;
+
+/// Trace lane `lane` back from `start` at stage `from` (inclusive)
+/// down to stage `to` (inclusive), writing decoded bits for stages in
+/// `[emit_lo, emit_hi)` into `out[t - emit_lo]`. Returns the state at
+/// entry to stage `to`.
+#[allow(clippy::too_many_arguments)]
+pub fn traceback_segment_lane(
+    trellis: &Trellis,
+    surv: &LaneSurvivors,
+    lane: usize,
+    start: u32,
+    from: usize,
+    to: usize,
+    emit_lo: usize,
+    emit_hi: usize,
+    out: &mut [u8],
+) -> u32 {
+    debug_assert!(from >= to);
+    debug_assert!(emit_hi >= emit_lo);
+    debug_assert!(out.len() >= emit_hi - emit_lo);
+    let k = trellis.spec.k;
+    let mask = trellis.spec.state_mask();
+    let mut j = start;
+    let mut t = from;
+    loop {
+        if t >= emit_lo && t < emit_hi {
+            out[t - emit_lo] = (j >> (k - 2)) as u8;
+        }
+        let d = surv.get(t, j, lane);
+        j = (2 * j + d) & mask;
+        if t == to {
+            break;
+        }
+        t -= 1;
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Rng64;
+    use crate::code::{encode, CodeSpec, Termination, Trellis};
+    use crate::viterbi::frame::{forward_frame, FrameScratch};
+
+    /// Copy a FrameScratch decision matrix into one lane of a
+    /// LaneSurvivors and check the lane walk reproduces the scalar
+    /// traceback.
+    #[test]
+    fn lane_walk_matches_frame_traceback() {
+        let spec = CodeSpec::standard_k5();
+        let trellis = Trellis::new(spec.clone());
+        let ns = trellis.num_states();
+        let mut rng = Rng64::seeded(77);
+        let mut bits = vec![0u8; 50];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Truncated);
+        let llrs: Vec<f32> =
+            enc.iter().map(|&b| if b == 0 { 3.0 } else { -3.0 }).collect();
+        let mut scratch = FrameScratch::new(ns, 50);
+        let best = forward_frame(&trellis, &llrs, Some(0), &[], &mut scratch);
+
+        let lane = 3usize;
+        let mut surv = LaneSurvivors::new(ns, 50);
+        for t in 0..50 {
+            for j in 0..ns as u32 {
+                let d = scratch_decision(&scratch, t, j);
+                surv.stage_mut(t)[j as usize] |= (d as u64) << lane;
+            }
+        }
+        let mut out = vec![0u8; 50];
+        traceback_segment_lane(&trellis, &surv, lane, best, 49, 0, 0, 50, &mut out);
+        assert_eq!(out, bits);
+    }
+
+    fn scratch_decision(scratch: &FrameScratch, t: usize, j: u32) -> u32 {
+        scratch.decisions.get(t, j)
+    }
+}

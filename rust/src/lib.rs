@@ -16,9 +16,11 @@
 //!   forward+parallel-traceback frame kernel.
 //!
 //! The decoder engine family is enumerated by [`viterbi::registry`] —
-//! `scalar`, `tiled`, `unified`, `parallel`, `streaming`, `hard` —
-//! which the `bench` CLI subcommand, the docs and the registry smoke
-//! test all read from.
+//! `scalar`, `tiled`, `unified`, `parallel`, `lanes`, `lanes-mt`,
+//! `streaming`, `hard` — which the `bench` CLI subcommand, the docs
+//! and the registry smoke test all read from. The lane-batched pair
+//! lives in [`lanes`]: L equal-geometry frames decoded in SIMD
+//! lockstep, the CPU analogue of the GPU warp.
 //!
 //! See README.md for the quickstart, DESIGN.md for the system
 //! inventory and the per-experiment index, EXPERIMENTS.md for
@@ -33,6 +35,7 @@ pub mod code;
 pub mod coordinator;
 pub mod exp;
 pub mod frames;
+pub mod lanes;
 pub mod memmodel;
 pub mod runtime;
 pub mod util;

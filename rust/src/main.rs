@@ -61,7 +61,8 @@ USAGE:
   viterbi-repro list
   viterbi-repro exp <id|all> [--full] [--out DIR] [--threads N] [--seed S]
   viterbi-repro bench [--engines E,..|all] [--frames N] [--frame-lens F,..]
-                      [--samples S] [--threads N] [--seed S] [--out FILE] [--list]
+                      [--samples S] [--threads N] [--lanes L] [--seed S]
+                      [--out FILE] [--list]
   viterbi-repro ber [--ebn0 DB] [--engine scalar|tiled|ptb] [--threads N]
   viterbi-repro demo [--bits N] [--ebn0 DB]
   viterbi-repro serve [--requests N] [--backend pjrt|native] [--artifact NAME]
@@ -98,7 +99,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
 fn cmd_bench(args: &Args) -> Result<()> {
     args.check_known(&[
         "engines", "frames", "frame-lens", "samples", "warmup", "threads", "seed", "out",
-        "list", "v1", "v2", "f0", "delay",
+        "list", "v1", "v2", "f0", "delay", "lanes",
     ])?;
     if args.has("list") {
         println!("registered engines (viterbi::registry):");
@@ -126,6 +127,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         v2: args.get_usize("v2", defaults.v2)?,
         f0: args.get_usize("f0", defaults.f0)?.max(1),
         delay: args.get_usize("delay", defaults.delay)?.max(1),
+        lanes: args.get_usize("lanes", defaults.lanes)?.clamp(1, 64),
     };
     let out_path = std::path::PathBuf::from(args.get("out").unwrap_or("BENCH_run.json"));
 

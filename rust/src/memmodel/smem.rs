@@ -151,6 +151,21 @@ pub fn traceback_working_bytes(states: usize, stages: usize) -> usize {
     words_per_stage * 8 * stages + 2 * states * 4
 }
 
+/// Peak resident traceback working memory for one **lane group** of
+/// the lane-batched engines (`crate::lanes`): survivor decisions are
+/// packed one bit per state per stage **per lane** into `u64` words
+/// (one word per (stage, state) for up to 64 lanes), plus two
+/// lane-major ping-pong path-metric slabs of `states · lanes` f32.
+///
+/// At `lanes = 64` the survivor term is exactly
+/// `states · stages · lanes / 8` bytes — 1 bit per decision, the same
+/// density the paper's shared-memory survivor layout achieves per
+/// frame, with zero per-frame padding.
+pub fn lane_traceback_working_bytes(states: usize, stages: usize, lanes: usize) -> usize {
+    let words_per_state = (lanes + 63) / 64;
+    states * stages * 8 * words_per_state + 2 * states * lanes * 4
+}
+
 /// Global-memory usage for intermediate (survivor) data per Table I,
 /// in *entries* as the paper states them (O-notation made concrete).
 ///
@@ -267,6 +282,32 @@ mod tests {
         assert_eq!(traceback_working_bytes(64, 100), 8 * 100 + 512);
         // Sub-word state counts still pay one word per stage.
         assert_eq!(traceback_working_bytes(16, 10), 8 * 10 + 2 * 16 * 4);
+    }
+
+    #[test]
+    fn lane_survivors_are_one_bit_per_lane() {
+        // A full 64-lane K=7 group: the survivor portion must account
+        // exactly 1 bit per state per stage per lane.
+        let states = 64;
+        let stages = 321; // v1 + f + v2 at the paper's operating point
+        let lanes = 64;
+        let pm_bytes = 2 * states * lanes * 4;
+        let survivor_bytes = lane_traceback_working_bytes(states, stages, lanes) - pm_bytes;
+        assert_eq!(survivor_bytes, states * stages * lanes / 8);
+        assert_eq!(survivor_bytes * 8, states * stages * lanes, "1 bit per decision");
+    }
+
+    #[test]
+    fn lane_bytes_match_single_lane_baseline() {
+        // A 1-lane group still pays a full u64 word per (stage, state)
+        // (the packing unit), like the scalar layout pays a word per
+        // stage for sub-word state counts.
+        assert_eq!(lane_traceback_working_bytes(64, 100, 1), 64 * 100 * 8 + 2 * 64 * 4);
+        // Widening lanes grows PM linearly but survivors not at all
+        // until the 64-lane word is full.
+        let narrow = lane_traceback_working_bytes(64, 100, 8);
+        let wide = lane_traceback_working_bytes(64, 100, 64);
+        assert_eq!(wide - narrow, 2 * 64 * (64 - 8) * 4);
     }
 
     #[test]

@@ -100,6 +100,27 @@ mod tests {
     }
 
     #[test]
+    fn last_word_zero_padded_and_word_boundaries_roundtrip() {
+        // The lanes survivor path relies on the padding invariant: bits
+        // beyond `n` in the last word are zero, so a ragged lane group
+        // can share a full u64 word without masking. Exercise sizes at,
+        // below and above word boundaries.
+        for n in [1usize, 63, 64, 65, 127, 128, 129] {
+            let bits: Vec<u8> = (0..n).map(|i| (i % 3 == 1) as u8).collect();
+            let words = pack_bits(&bits);
+            assert_eq!(words.len(), (n + 63) / 64);
+            let pad = words.len() * 64 - n;
+            if pad > 0 {
+                let last = *words.last().unwrap();
+                assert_eq!(last >> (64 - pad), 0, "n={n}: padding bits must be zero");
+            }
+            assert_eq!(unpack_bits(&words, n), bits, "n={n}");
+            // Unpacking fewer bits than packed is a prefix.
+            assert_eq!(unpack_bits(&words, n / 2), &bits[..n / 2], "n={n} prefix");
+        }
+    }
+
+    #[test]
     fn bit_errors_counts() {
         assert_eq!(count_bit_errors(&[0, 1, 1, 0], &[0, 1, 1, 0]), 0);
         assert_eq!(count_bit_errors(&[0, 1, 1, 0], &[1, 1, 0, 0]), 2);

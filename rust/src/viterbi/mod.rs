@@ -11,6 +11,9 @@
 //!   traceback (method (c));
 //! * `parallel` — frame-parallel multithreaded driver over the unified
 //!   engine (the CPU analogue of the GPU grid);
+//! * `lanes` / `lanes-mt` — lane-batched SIMD lockstep engines (the
+//!   CPU analogue of the GPU warp; implemented in [`crate::lanes`],
+//!   registered here);
 //! * `streaming` — sliding-window decoder with path-metric carry (the
 //!   overlap-free single-lane ablation);
 //! * `hard` — hard-decision adapter over any soft engine (§II-C).

@@ -24,10 +24,14 @@ pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
             Arc::new(ParallelEngine::new(inner, pool_of(p.threads)))
         },
         traceback_bytes: |p: &BuildParams| {
-            // One frame scratch per in-flight pool job.
+            // One frame scratch per in-flight pool job — never more
+            // than the stream has frames, so short streams on wide
+            // pools don't overstate the working set.
+            let frames = (p.stream_stages + p.geo.f - 1) / p.geo.f;
             crate::memmodel::traceback_working_bytes(p.spec.num_states(), p.geo.span())
-                * p.threads.max(1)
+                * p.threads.min(frames).max(1)
         },
+        lane_width: |_| 1,
     }
 }
 
@@ -117,10 +121,12 @@ impl ParallelEngine {
     }
 }
 
-/// Send-able raw pointer to the output buffer; safety argument at the
-/// single use site.
+/// Send-able raw pointer to a decode output buffer, shared by the
+/// multithreaded drivers here and in `crate::lanes`; the safety
+/// argument (pairwise-disjoint decoded regions) lives at each use
+/// site.
 #[derive(Clone, Copy)]
-struct SharedOut(*mut u8);
+pub(crate) struct SharedOut(pub(crate) *mut u8);
 unsafe impl Send for SharedOut {}
 unsafe impl Sync for SharedOut {}
 

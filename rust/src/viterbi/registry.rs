@@ -34,6 +34,9 @@ pub struct BuildParams {
     pub threads: usize,
     /// Decision delay for the streaming engine (stages).
     pub delay: usize,
+    /// Lane width L for the lane-batched engines (frames decoded in
+    /// SIMD lockstep, `1..=64`).
+    pub lanes: usize,
     /// Stream length in stages the engine will be asked to decode —
     /// used only by the per-engine memory estimate (the whole-stream
     /// engines' survivor storage scales with it).
@@ -43,7 +46,7 @@ pub struct BuildParams {
 impl BuildParams {
     /// The paper's reference configuration: (171,133) K=7 code, frames
     /// of f=256 with v1=20 / v2=45, f0=32 subframes, 96-stage
-    /// streaming delay.
+    /// streaming delay, 64-wide lane batches.
     pub fn paper_default() -> BuildParams {
         BuildParams {
             spec: CodeSpec::standard_k7(),
@@ -51,6 +54,7 @@ impl BuildParams {
             f0: 32,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             delay: 96,
+            lanes: 64,
             stream_stages: 1 << 16,
         }
     }
@@ -71,6 +75,10 @@ pub struct EngineSpec {
     /// decisions + path-metric rows) in bytes, for the BENCH_*.json
     /// `peak_traceback_bytes` field (see memmodel::smem).
     pub traceback_bytes: fn(&BuildParams) -> usize,
+    /// Frames the engine decodes in SIMD lockstep (the BENCH_*.json
+    /// `lane_width` field): 1 for every per-frame engine, L for the
+    /// lane-batched family.
+    pub lane_width: fn(&BuildParams) -> usize,
 }
 
 impl std::fmt::Debug for EngineSpec {
@@ -83,13 +91,16 @@ impl std::fmt::Debug for EngineSpec {
 }
 
 /// All registered engines, in Table-I order: reference first, then the
-/// baselines, then the paper's proposal and its derived drivers.
+/// baselines, then the paper's proposal and its derived drivers (the
+/// thread-parallel grid analogue and the lane-batched warp analogues).
 pub fn registry() -> Vec<EngineSpec> {
     vec![
         super::scalar::engine_entry(),
         super::tiled::engine_entry(),
         super::unified::engine_entry(),
         super::parallel::engine_entry(),
+        crate::lanes::engine::engine_entry(),
+        crate::lanes::engine::engine_entry_mt(),
         super::streaming::engine_entry(),
         super::hard::engine_entry(),
     ]
@@ -117,7 +128,10 @@ mod tests {
         let names: Vec<&str> = reg.iter().map(|e| e.name).collect();
         assert_eq!(
             names,
-            vec!["scalar", "tiled", "unified", "parallel", "streaming", "hard"]
+            vec![
+                "scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "streaming",
+                "hard"
+            ]
         );
         let mut dedup = names.clone();
         dedup.sort();
@@ -142,7 +156,26 @@ mod tests {
             assert!(!engine.name().is_empty(), "{}", e.name);
             assert!((e.traceback_bytes)(&params) > 0, "{}", e.name);
             assert!(!e.description.is_empty(), "{}", e.name);
+            let lw = (e.lane_width)(&params);
+            if e.name.starts_with("lanes") {
+                assert_eq!(lw, params.lanes, "{}", e.name);
+            } else {
+                assert_eq!(lw, 1, "{}", e.name);
+            }
         }
+    }
+
+    #[test]
+    fn parallel_memory_clamped_to_frames_in_flight() {
+        // A 32-thread pool over a 2-frame stream holds at most 2 frame
+        // scratches, not 32.
+        let mut p = BuildParams::paper_default();
+        p.stream_stages = p.geo.f * 2;
+        p.threads = 32;
+        let par = find("parallel").unwrap();
+        let wide = (par.traceback_bytes)(&p);
+        p.threads = 2;
+        assert_eq!(wide, (par.traceback_bytes)(&p));
     }
 
     #[test]

@@ -84,6 +84,7 @@ pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
         traceback_bytes: |p: &BuildParams| {
             crate::memmodel::traceback_working_bytes(p.spec.num_states(), p.stream_stages)
         },
+        lane_width: |_| 1,
     }
 }
 

@@ -38,6 +38,7 @@ pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
             // carried path-metric rows.
             crate::memmodel::traceback_working_bytes(p.spec.num_states(), p.delay)
         },
+        lane_width: |_| 1,
     }
 }
 

@@ -52,6 +52,7 @@ pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
             crate::memmodel::traceback_working_bytes(p.spec.num_states(), p.geo.span())
                 + boundaries * 4
         },
+        lane_width: |_| 1,
     }
 }
 

@@ -31,11 +31,14 @@ fn every_registry_engine_roundtrips_k7_frame_error_free() {
         f0: 32,
         threads: 4,
         delay: 96,
+        // Narrow lanes so the 17-frame stream exercises several lane
+        // groups including a ragged tail group.
+        lanes: 8,
         stream_stages: 4096 + 6,
     };
     let (bits, llrs, stages) = high_snr_workload(4096, 0x5140);
     let reg = registry();
-    assert_eq!(reg.len(), 6, "engine silently dropped from the registry");
+    assert_eq!(reg.len(), 8, "engine silently dropped from the registry");
     for entry in &reg {
         let engine = (entry.build)(&params);
         let out = engine.decode_stream(&llrs, stages, StreamEnd::Terminated);
@@ -56,5 +59,8 @@ fn registry_names_match_bench_cli_contract() {
     // BENCHMARKS.md documents them. Renaming one is a breaking change
     // to recorded BENCH_*.json baselines.
     let names: Vec<&str> = registry().iter().map(|e| e.name).collect();
-    assert_eq!(names, ["scalar", "tiled", "unified", "parallel", "streaming", "hard"]);
+    assert_eq!(
+        names,
+        ["scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "streaming", "hard"]
+    );
 }

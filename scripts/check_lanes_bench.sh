@@ -1,0 +1,64 @@
+#!/usr/bin/env bash
+# CI gate for the lane-batched engines (CI "build-test" job, lanes
+# bench smoke step): the BENCH_lanes.json emitted by
+#   viterbi-repro bench --engines scalar,lanes,lanes-mt ...
+# must contain a `lanes` record with a recorded lane_width, and the
+# lanes median throughput must not be below `scalar` on the same frame
+# geometry — lane batching that loses to the whole-stream reference
+# means the SIMD path has regressed into scalar dispatch.
+set -euo pipefail
+
+file="${1:-BENCH_lanes.json}"
+if [ ! -s "$file" ]; then
+    echo "FAIL: $file missing or empty"
+    exit 1
+fi
+
+python3 - "$file" <<'EOF'
+import json
+import sys
+
+path = sys.argv[1]
+records = []
+with open(path) as f:
+    for line in f:
+        line = line.strip()
+        if line:
+            records.append(json.loads(line))
+
+by_engine = {}
+for r in records:
+    by_engine.setdefault(r["engine"], []).append(r)
+
+if "lanes" not in by_engine:
+    print("FAIL: no `lanes` record in", path)
+    sys.exit(1)
+
+fail = False
+for lanes_rec in by_engine["lanes"]:
+    if lanes_rec.get("lane_width", 0) < 2:
+        print("FAIL: lanes record has lane_width", lanes_rec.get("lane_width"))
+        fail = True
+    peers = [
+        s for s in by_engine.get("scalar", [])
+        if s["frame_len"] == lanes_rec["frame_len"]
+        and s["batch_frames"] == lanes_rec["batch_frames"]
+    ]
+    if not peers:
+        print("FAIL: no scalar record on frame_len", lanes_rec["frame_len"])
+        fail = True
+        continue
+    scalar_mbps = peers[0]["median_mbps"]
+    lanes_mbps = lanes_rec["median_mbps"]
+    ratio = lanes_mbps / scalar_mbps if scalar_mbps > 0 else float("inf")
+    verdict = "OK" if lanes_mbps >= scalar_mbps else "FAIL"
+    print(
+        f"{verdict}: f={lanes_rec['frame_len']} lanes {lanes_mbps:.1f} Mb/s "
+        f"vs scalar {scalar_mbps:.1f} Mb/s ({ratio:.2f}x)"
+    )
+    if lanes_mbps < scalar_mbps:
+        fail = True
+
+sys.exit(1 if fail else 0)
+EOF
+echo "lanes bench OK"
