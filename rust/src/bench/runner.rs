@@ -41,6 +41,12 @@ pub struct BenchOptions {
     pub delay: usize,
     /// Lane width L for the lane-batched engines.
     pub lanes: usize,
+    /// Constraint length K of the benched code (5/7/9 use the
+    /// tabulated standard codes; other values in 3..=16 use a
+    /// synthetic rate-1/2 code — see `CodeSpec::for_constraint`).
+    /// The calibration sweep (`tuner::calibrate`) overrides this per
+    /// grid cell.
+    pub k: u32,
 }
 
 impl Default for BenchOptions {
@@ -55,6 +61,7 @@ impl Default for BenchOptions {
             f0: 32,
             delay: 96,
             lanes: 64,
+            k: 7,
         }
     }
 }
@@ -62,7 +69,7 @@ impl Default for BenchOptions {
 impl BenchOptions {
     fn build_params(&self, frame_len: usize, stream_stages: usize) -> BuildParams {
         BuildParams {
-            spec: CodeSpec::standard_k7(),
+            spec: CodeSpec::for_constraint(self.k),
             geo: FrameGeometry::new(frame_len, self.v1, self.v2),
             f0: self.f0,
             threads: self.threads,
@@ -180,6 +187,17 @@ mod tests {
         assert_eq!(m.engine, "lanes");
         assert_eq!(m.lane_width, 16);
         assert!(m.engine_detail.contains("L=16"));
+        assert!(m.median_mbps > 0.0 && m.median_mbps.is_finite());
+    }
+
+    #[test]
+    fn k_override_changes_the_benched_code() {
+        let entry = registry::find("unified").unwrap();
+        let sc = Scenario { engine: "unified".into(), frame_len: 64, frames: 2 };
+        let mut opts = quick_opts();
+        opts.k = 5;
+        let m = run_scenario(&entry, &sc, &opts);
+        assert_eq!(m.k, 5);
         assert!(m.median_mbps > 0.0 && m.median_mbps.is_finite());
     }
 

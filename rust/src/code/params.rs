@@ -52,6 +52,20 @@ impl CodeSpec {
         CodeSpec::new(7, vec![0o133, 0o171, 0o165])
     }
 
+    /// A rate-1/2 code for an arbitrary constraint length `k`
+    /// (3..=16): the tabulated standard code when one exists (K=5/7/9),
+    /// else a synthetic pair with full-span generators (MSB and LSB
+    /// set, so `is_standard` holds). Used by the calibration sweep and
+    /// the tuner's geometry-only memory estimates.
+    pub fn for_constraint(k: u32) -> Self {
+        match k {
+            5 => CodeSpec::standard_k5(),
+            7 => CodeSpec::standard_k7(),
+            9 => CodeSpec::standard_k9(),
+            _ => CodeSpec::new(k, vec![(1 << k) - 1, (1 << (k - 1)) | 1]),
+        }
+    }
+
     /// Number of trellis states, 2^{k−1}.
     #[inline]
     pub fn num_states(&self) -> usize {
@@ -104,6 +118,19 @@ mod tests {
         assert_eq!(CodeSpec::standard_k7_r3().beta, 3);
         assert!(CodeSpec::standard_k5().is_standard());
         assert!(CodeSpec::standard_k9().is_standard());
+    }
+
+    #[test]
+    fn for_constraint_covers_arbitrary_k() {
+        assert_eq!(CodeSpec::for_constraint(5), CodeSpec::standard_k5());
+        assert_eq!(CodeSpec::for_constraint(7), CodeSpec::standard_k7());
+        assert_eq!(CodeSpec::for_constraint(9), CodeSpec::standard_k9());
+        for k in 3..=16u32 {
+            let c = CodeSpec::for_constraint(k);
+            assert_eq!(c.k, k);
+            assert_eq!(c.beta, 2);
+            assert!(c.is_standard(), "K={k} synthetic code must be standard");
+        }
     }
 
     #[test]

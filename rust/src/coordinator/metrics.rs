@@ -23,6 +23,7 @@ struct Inner {
     batch_occupancy: Summary,
     request_latency: LatencyHistogram,
     batch_exec: Summary,
+    dispatch: Vec<(String, u64)>,
 }
 
 /// A point-in-time snapshot for reporting.
@@ -48,6 +49,10 @@ pub struct MetricsSnapshot {
     pub p99_latency: Duration,
     /// Mean backend execution time per batch.
     pub mean_batch_exec: Duration,
+    /// Cumulative frames decoded per backend route (route name →
+    /// frames), as published by an adaptive backend
+    /// (`BackendSpec::Auto`). Empty for single-route backends.
+    pub dispatch: Vec<(String, u64)>,
 }
 
 impl Metrics {
@@ -76,6 +81,13 @@ impl Metrics {
         m.batch_exec.add(exec.as_secs_f64());
     }
 
+    /// Publish an adaptive backend's cumulative per-route dispatch
+    /// counters (replaces the previous publication — the counters are
+    /// cumulative on the backend side).
+    pub fn on_dispatch(&self, counts: &[(String, u64)]) {
+        self.inner.lock().unwrap().dispatch = counts.to_vec();
+    }
+
     /// Record one completed response of `bits` bits with the given
     /// end-to-end latency.
     pub fn on_response(&self, bits: usize, latency_ns: u64) {
@@ -101,14 +113,25 @@ impl Metrics {
             mean_batch_exec: Duration::from_secs_f64(
                 if m.batch_exec.count() == 0 { 0.0 } else { m.batch_exec.mean() },
             ),
+            dispatch: m.dispatch.clone(),
         }
     }
 }
 
 impl MetricsSnapshot {
+    /// Frames decoded through the named backend route (0 when the
+    /// backend never published that route).
+    pub fn dispatched(&self, route: &str) -> u64 {
+        self.dispatch
+            .iter()
+            .find(|(r, _)| r.as_str() == route)
+            .map(|(_, n)| *n)
+            .unwrap_or(0)
+    }
+
     /// One-line human-readable summary.
     pub fn render(&self) -> String {
-        format!(
+        let mut line = format!(
             "req={} resp={} rej={} frames={} batches={} bits={} occ={:.2} \
              p50={:?} p99={:?} exec={:?}",
             self.requests,
@@ -121,7 +144,17 @@ impl MetricsSnapshot {
             self.p50_latency,
             self.p99_latency,
             self.mean_batch_exec,
-        )
+        );
+        if !self.dispatch.is_empty() {
+            line.push_str(" dispatch=");
+            for (i, (route, n)) in self.dispatch.iter().enumerate() {
+                if i > 0 {
+                    line.push(',');
+                }
+                line.push_str(&format!("{route}:{n}"));
+            }
+        }
+        line
     }
 }
 
@@ -152,5 +185,19 @@ mod tests {
         let line = m.snapshot().render();
         assert!(line.contains("req=1"));
         assert!(line.contains("occ="));
+        assert!(!line.contains("dispatch="));
+    }
+
+    #[test]
+    fn dispatch_counters_publish_and_query() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().dispatched("lanes"), 0);
+        m.on_dispatch(&[("lanes".to_string(), 64)]);
+        m.on_dispatch(&[("lanes".to_string(), 128), ("unified".to_string(), 1)]);
+        let s = m.snapshot();
+        assert_eq!(s.dispatched("lanes"), 128);
+        assert_eq!(s.dispatched("unified"), 1);
+        assert_eq!(s.dispatched("parallel"), 0);
+        assert!(s.render().contains("dispatch=lanes:128,unified:1"));
     }
 }

@@ -1,6 +1,7 @@
 //! L3 coordinator — the serving layer: stream chunking, dynamic
-//! batching, backend routing (PJRT artifact or native engine),
-//! backpressure, reassembly, and metrics.
+//! batching, backend routing (PJRT artifact, native engine, or the
+//! calibration-driven adaptive backend), backpressure, reassembly,
+//! and metrics.
 //!
 //! See `server::DecodeServer` for the thread topology.
 
@@ -22,4 +23,6 @@ pub use metrics::{Metrics, MetricsSnapshot};
 pub use reassembler::Reassembler;
 pub use request::{DecodeRequest, DecodeResponse, FrameJob, FrameResult, RequestId};
 pub use server::{DecodeServer, ServerConfig};
-pub use worker::{BackendSpec, BatchDecoder, NativeBatchDecoder, PjrtBatchDecoder};
+pub use worker::{
+    AutoBatchDecoder, BackendSpec, BatchDecoder, NativeBatchDecoder, PjrtBatchDecoder,
+};

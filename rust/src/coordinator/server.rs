@@ -129,6 +129,10 @@ impl DecodeServer {
                         let t0 = Instant::now();
                         let results = backend.decode_batch(&batch.jobs)?;
                         metrics.on_batch(n, bucket, t0.elapsed());
+                        let routes = backend.dispatch_counts();
+                        if !routes.is_empty() {
+                            metrics.on_dispatch(&routes);
+                        }
                         gate.release(n);
                         let mut done_now = Vec::new();
                         {

@@ -5,13 +5,17 @@
 //! passes a [`BackendSpec`] — plain data — and the executor thread
 //! *builds* its backend after it starts.
 
-use anyhow::{Context, Result};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
 
 use crate::code::CodeSpec;
 use crate::frames::plan::{FrameGeometry, FrameSpan};
 use crate::lanes::acs::lane_fast_path;
 use crate::lanes::{decode_lane_group, LaneJob, LaneScratch, MAX_LANES};
 use crate::runtime::{ExecutorPool, Manifest, PjrtRuntime};
+use crate::tuner::{JobShape, Planner, PlannerConfig};
+use crate::util::threadpool::ThreadPool;
 use crate::viterbi::{
     Engine as _, FrameScratch, ParallelTraceback, StartPolicy, StreamEnd, TiledEngine,
     TracebackMode, TracebackStart,
@@ -30,6 +34,29 @@ pub enum BackendSpec {
         /// None = serial per-frame traceback; Some(f0) = parallel.
         f0: Option<usize>,
     },
+    /// Calibration-driven adaptive backend: a `tuner::Planner` routes
+    /// every dynamic batch to the fastest decode path for its shape
+    /// (uniform lane-groupable batches → the SIMD lane core, ragged
+    /// multi-frame batches → the thread pool, single frames → the
+    /// unified per-frame path), within the planner's memory budget.
+    Auto {
+        /// The convolutional code to decode.
+        spec: CodeSpec,
+        /// The backend's (static) frame geometry.
+        geo: FrameGeometry,
+        /// Parallel-traceback subframe size (clamped to 1..=f).
+        f0: usize,
+        /// Worker threads for the frame-parallel route.
+        threads: usize,
+        /// Planner working-set budget in bytes (None = the
+        /// `VITERBI_TUNER_BUDGET` env override, else the planner's
+        /// default clamp).
+        budget_bytes: Option<usize>,
+        /// Calibration profile to load (None = the planner's default
+        /// search: `VITERBI_CALIBRATION`, then the checked-in
+        /// baseline, then the static heuristic).
+        profile: Option<std::path::PathBuf>,
+    },
 }
 
 impl BackendSpec {
@@ -46,6 +73,7 @@ impl BackendSpec {
                 Ok((meta.spec.clone(), meta.geo))
             }
             BackendSpec::Native { spec, geo, .. } => Ok((spec.clone(), *geo)),
+            BackendSpec::Auto { spec, geo, .. } => Ok((spec.clone(), *geo)),
         }
     }
 
@@ -88,6 +116,51 @@ impl BackendSpec {
                 };
                 Ok(Box::new(NativeBatchDecoder { engine, scratch, lane, max_batch: 32 }))
             }
+            BackendSpec::Auto { spec, geo, f0, threads, budget_bytes, profile } => {
+                let f0 = (*f0).clamp(1, geo.f);
+                let engine = Arc::new(TiledEngine::new(
+                    spec.clone(),
+                    *geo,
+                    TracebackMode::Parallel(ParallelTraceback::new(
+                        f0,
+                        geo.v2,
+                        StartPolicy::StoredArgmax,
+                    )),
+                ));
+                let scratch = FrameScratch::new(spec.num_states(), geo.span());
+                let lane = if lane_fast_path(engine.trellis()) {
+                    let ptb =
+                        ParallelTraceback::new(f0, geo.v2, StartPolicy::StoredArgmax);
+                    Some((ptb, LaneScratch::new(spec.num_states(), geo.span(), MAX_LANES)))
+                } else {
+                    None
+                };
+                let threads = (*threads).max(1);
+                let pool =
+                    if threads > 1 { Some(Arc::new(ThreadPool::new(threads))) } else { None };
+                let cfg = PlannerConfig {
+                    threads,
+                    lanes: MAX_LANES,
+                    f0,
+                    budget_bytes: *budget_bytes,
+                }
+                .with_env_budget();
+                let planner = match profile {
+                    Some(path) => Planner::load(cfg, path)
+                        .map_err(|e| anyhow!(e))
+                        .context("loading calibration profile")?,
+                    None => Planner::load_default(cfg),
+                };
+                Ok(Box::new(AutoBatchDecoder {
+                    engine,
+                    scratch,
+                    lane,
+                    pool,
+                    planner,
+                    counts: Vec::new(),
+                    max_batch: MAX_LANES,
+                }))
+            }
         }
     }
 }
@@ -100,8 +173,14 @@ pub trait BatchDecoder {
     fn geometry(&self) -> (CodeSpec, FrameGeometry);
     /// Largest batch worth submitting at once.
     fn max_batch(&self) -> usize;
-    /// Backend name for metrics/logs (`native:…` / `pjrt:…`).
+    /// Backend name for metrics/logs (`native:…` / `pjrt:…` / `auto:…`).
     fn name(&self) -> String;
+    /// Cumulative per-route dispatch counters (route name → frames),
+    /// published into the service metrics after every batch. Backends
+    /// with a single static route report nothing.
+    fn dispatch_counts(&self) -> Vec<(String, u64)> {
+        Vec::new()
+    }
 }
 
 /// PJRT-artifact backend.
@@ -174,28 +253,72 @@ pub struct NativeBatchDecoder {
     max_batch: usize,
 }
 
+/// Per-frame decode of one uniform zero-padded job — the non-batched
+/// path, shared by the native and adaptive backends.
+fn decode_uniform_job(
+    engine: &TiledEngine,
+    scratch: &mut FrameScratch,
+    job: &FrameJob,
+) -> FrameResult {
+    let geo = engine.geo;
+    // Uniform frame: decode the middle f stages of the block.
+    let span = FrameSpan {
+        index: if job.pin_state0 { 0 } else { 1 },
+        start: 0,
+        len: geo.span(),
+        out_start: geo.v1,
+        out_len: geo.f,
+    };
+    let mut bits = vec![0u8; geo.f];
+    engine.decode_frame(
+        &job.llr_block,
+        &span,
+        usize::MAX, // never the implicit "last" frame
+        StreamEnd::Truncated,
+        scratch,
+        &mut bits,
+    );
+    FrameResult { request_id: job.request_id, frame_index: job.frame_index, bits }
+}
+
+/// Decode one chunk of ≤ 64 uniform jobs in SIMD lockstep — the lane
+/// route shared by the native and adaptive backends.
+fn decode_lane_chunk(
+    engine: &TiledEngine,
+    ptb: &ParallelTraceback,
+    lane_scratch: &mut LaneScratch,
+    chunk: &[FrameJob],
+    out: &mut Vec<FrameResult>,
+) {
+    let geo = engine.geo;
+    let trellis = engine.trellis();
+    let mut bits: Vec<Vec<u8>> = chunk.iter().map(|_| vec![0u8; geo.f]).collect();
+    let mut lane_jobs: Vec<LaneJob<'_>> = chunk
+        .iter()
+        .zip(bits.iter_mut())
+        .map(|(job, out)| LaneJob {
+            llrs: &job.llr_block,
+            span_index: if job.pin_state0 { 0 } else { 1 },
+            start_state: if job.pin_state0 { Some(0) } else { None },
+            tb: TracebackStart::BestMetric,
+            out,
+        })
+        .collect();
+    decode_lane_group(trellis, ptb, geo.v1, geo.f, &mut lane_jobs, lane_scratch);
+    drop(lane_jobs);
+    for (job, b) in chunk.iter().zip(bits) {
+        out.push(FrameResult {
+            request_id: job.request_id,
+            frame_index: job.frame_index,
+            bits: b,
+        });
+    }
+}
+
 impl NativeBatchDecoder {
     /// Per-frame decode of one job (the non-batched path).
     fn decode_one(&mut self, job: &FrameJob) -> FrameResult {
-        let geo = self.engine.geo;
-        // Uniform frame: decode the middle f stages of the block.
-        let span = FrameSpan {
-            index: if job.pin_state0 { 0 } else { 1 },
-            start: 0,
-            len: geo.span(),
-            out_start: geo.v1,
-            out_len: geo.f,
-        };
-        let mut bits = vec![0u8; geo.f];
-        self.engine.decode_frame(
-            &job.llr_block,
-            &span,
-            usize::MAX, // never the implicit "last" frame
-            StreamEnd::Truncated,
-            &mut self.scratch,
-            &mut bits,
-        );
-        FrameResult { request_id: job.request_id, frame_index: job.frame_index, bits }
+        decode_uniform_job(&self.engine, &mut self.scratch, job)
     }
 }
 
@@ -212,37 +335,8 @@ impl BatchDecoder for NativeBatchDecoder {
             if let Some((ptb, lane_scratch)) = &mut self.lane {
                 // Batched path: every chunk of ≤ 64 uniform jobs decodes
                 // in SIMD lockstep (the dynamic batcher's whole point).
-                let trellis = self.engine.trellis();
                 for chunk in jobs.chunks(MAX_LANES) {
-                    let mut bits: Vec<Vec<u8>> =
-                        chunk.iter().map(|_| vec![0u8; geo.f]).collect();
-                    let mut lane_jobs: Vec<LaneJob<'_>> = chunk
-                        .iter()
-                        .zip(bits.iter_mut())
-                        .map(|(job, out)| LaneJob {
-                            llrs: &job.llr_block,
-                            span_index: if job.pin_state0 { 0 } else { 1 },
-                            start_state: if job.pin_state0 { Some(0) } else { None },
-                            tb: TracebackStart::BestMetric,
-                            out,
-                        })
-                        .collect();
-                    decode_lane_group(
-                        trellis,
-                        ptb,
-                        geo.v1,
-                        geo.f,
-                        &mut lane_jobs,
-                        lane_scratch,
-                    );
-                    drop(lane_jobs);
-                    for (job, b) in chunk.iter().zip(bits) {
-                        out.push(FrameResult {
-                            request_id: job.request_id,
-                            frame_index: job.frame_index,
-                            bits: b,
-                        });
-                    }
+                    decode_lane_chunk(&self.engine, ptb, lane_scratch, chunk, &mut out);
                 }
                 return Ok(out);
             }
@@ -264,6 +358,206 @@ impl BatchDecoder for NativeBatchDecoder {
 
     fn name(&self) -> String {
         format!("native:{}", self.engine.name())
+    }
+}
+
+/// Adaptive backend: a `tuner::Planner` picks the decode route per
+/// batch. Four routes share the same bit-exact decode core:
+///
+/// * `lanes` — SIMD lockstep over chunks of ≤ 64 uniform jobs on the
+///   executor thread (the planner chose the single-threaded lane
+///   engine);
+/// * `lanes-mt` — the batch split into one lane group per pool
+///   worker, decoded in lockstep concurrently (the planner chose
+///   `lanes-mt`, so the executed path composes threads × lanes just
+///   like the engine that was scored);
+/// * `parallel` — per-frame decode fanned out over the thread pool;
+/// * `unified` — serial per-frame decode on the executor thread.
+///
+/// Cumulative frames-per-route counters are published to the service
+/// metrics after every batch (`MetricsSnapshot::dispatch`).
+pub struct AutoBatchDecoder {
+    engine: Arc<TiledEngine>,
+    scratch: FrameScratch,
+    /// Lane-group traceback config + scratch; `None` for codes outside
+    /// the lane fast path (those never take the lane route).
+    lane: Option<(ParallelTraceback, LaneScratch)>,
+    /// Thread pool for the frame-parallel route (None when built with
+    /// one thread).
+    pool: Option<Arc<ThreadPool>>,
+    planner: Planner,
+    counts: Vec<(String, u64)>,
+    max_batch: usize,
+}
+
+impl AutoBatchDecoder {
+    /// The planner routing this backend's batches.
+    pub fn planner(&self) -> &Planner {
+        &self.planner
+    }
+
+    fn bump(&mut self, route: &str, frames: usize) {
+        if let Some(entry) = self.counts.iter_mut().find(|(r, _)| r.as_str() == route) {
+            entry.1 += frames as u64;
+        } else {
+            self.counts.push((route.to_string(), frames as u64));
+        }
+    }
+
+    /// The frame-parallel route: per-frame decode fanned out over the
+    /// pool, each worker with its own scratch, results collected in
+    /// job order.
+    fn decode_pool(&self, jobs: &[FrameJob]) -> Vec<FrameResult> {
+        let pool = self.pool.as_ref().expect("parallel route requires a pool");
+        let n = jobs.len();
+        // The pool's jobs are 'static, so the batch must be cloned to
+        // cross into the workers; this copy (and the per-worker
+        // scratch) is part of the dispatch overhead `bench --engines
+        // auto` measures against the single-engine rows.
+        let jobs_arc: Arc<Vec<FrameJob>> = Arc::new(jobs.to_vec());
+        let slots: Arc<Vec<Mutex<Option<FrameResult>>>> =
+            Arc::new((0..n).map(|_| Mutex::new(None)).collect());
+        let workers = pool.size().min(n).max(1);
+        let per = (n + workers - 1) / workers;
+        let mut batch: Vec<Box<dyn FnOnce() + Send>> = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let lo = w * per;
+            let hi = ((w + 1) * per).min(n);
+            if lo >= hi {
+                break;
+            }
+            let engine = Arc::clone(&self.engine);
+            let jobs = Arc::clone(&jobs_arc);
+            let slots = Arc::clone(&slots);
+            batch.push(Box::new(move || {
+                let mut scratch =
+                    FrameScratch::new(engine.spec().num_states(), engine.geo.span());
+                for i in lo..hi {
+                    let r = decode_uniform_job(&engine, &mut scratch, &jobs[i]);
+                    *slots[i].lock().unwrap() = Some(r);
+                }
+            }));
+        }
+        pool.run_batch(batch);
+        slots
+            .iter()
+            .map(|s| s.lock().unwrap().take().expect("worker filled every slot"))
+            .collect()
+    }
+
+    /// The pooled lane route: the batch split into one lane group per
+    /// worker (each ≤ 64 lanes), decoded in lockstep concurrently —
+    /// the batch-sized analogue of the `lanes-mt` engine the planner
+    /// scored.
+    fn decode_lanes_pool(&self, jobs: &[FrameJob]) -> Vec<FrameResult> {
+        let pool = self.pool.as_ref().expect("lanes-mt route requires a pool");
+        let ptb = self.lane.as_ref().expect("lane route requires lane scratch").0;
+        let n = jobs.len();
+        let workers = pool.size().min(n).max(1);
+        let per = ((n + workers - 1) / workers).clamp(1, MAX_LANES);
+        let chunk_count = (n + per - 1) / per;
+        let jobs_arc: Arc<Vec<FrameJob>> = Arc::new(jobs.to_vec());
+        let slots: Arc<Vec<Mutex<Option<Vec<FrameResult>>>>> =
+            Arc::new((0..chunk_count).map(|_| Mutex::new(None)).collect());
+        let mut batch: Vec<Box<dyn FnOnce() + Send>> = Vec::with_capacity(chunk_count);
+        for ci in 0..chunk_count {
+            let lo = ci * per;
+            let hi = ((ci + 1) * per).min(n);
+            let engine = Arc::clone(&self.engine);
+            let jobs = Arc::clone(&jobs_arc);
+            let slots = Arc::clone(&slots);
+            batch.push(Box::new(move || {
+                let mut scratch =
+                    LaneScratch::new(engine.spec().num_states(), engine.geo.span(), hi - lo);
+                let mut out = Vec::with_capacity(hi - lo);
+                decode_lane_chunk(&engine, &ptb, &mut scratch, &jobs[lo..hi], &mut out);
+                *slots[ci].lock().unwrap() = Some(out);
+            }));
+        }
+        pool.run_batch(batch);
+        let mut out = Vec::with_capacity(n);
+        for s in slots.iter() {
+            out.extend(s.lock().unwrap().take().expect("worker filled every chunk"));
+        }
+        out
+    }
+}
+
+impl BatchDecoder for AutoBatchDecoder {
+    fn decode_batch(&mut self, jobs: &[FrameJob]) -> Result<Vec<FrameResult>> {
+        let geo = self.engine.geo;
+        let beta = self.engine.spec().beta as usize;
+        let l = geo.span();
+        for job in jobs {
+            anyhow::ensure!(job.llr_block.len() == l * beta, "job block length mismatch");
+        }
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let shape = JobShape {
+            k: self.engine.spec().k,
+            frame_len: geo.f,
+            v1: geo.v1,
+            v2: geo.v2,
+            batch_frames: jobs.len(),
+            uniform: jobs.len() > 1 && self.lane.is_some(),
+        };
+        let choice = self.planner.plan(&shape);
+        let multi = jobs.len() > 1;
+        let route = if choice.engine == "lanes-mt"
+            && multi
+            && self.lane.is_some()
+            && self.pool.is_some()
+        {
+            "lanes-mt"
+        } else if choice.engine.starts_with("lanes") && multi && self.lane.is_some() {
+            "lanes"
+        } else if choice.engine == "parallel" && multi && self.pool.is_some() {
+            "parallel"
+        } else {
+            "unified"
+        };
+        self.bump(route, jobs.len());
+        match route {
+            "lanes" => {
+                let mut out = Vec::with_capacity(jobs.len());
+                let (ptb, lane_scratch) =
+                    self.lane.as_mut().expect("lane route requires lane scratch");
+                for chunk in jobs.chunks(MAX_LANES) {
+                    decode_lane_chunk(&self.engine, ptb, lane_scratch, chunk, &mut out);
+                }
+                Ok(out)
+            }
+            "lanes-mt" => Ok(self.decode_lanes_pool(jobs)),
+            "parallel" => Ok(self.decode_pool(jobs)),
+            _ => {
+                let mut out = Vec::with_capacity(jobs.len());
+                for job in jobs {
+                    out.push(decode_uniform_job(&self.engine, &mut self.scratch, job));
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    fn geometry(&self) -> (CodeSpec, FrameGeometry) {
+        (self.engine.spec().clone(), self.engine.geo)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "auto:{}[{}]",
+            self.engine.name(),
+            if self.planner.has_profile() { "profile" } else { "heuristic" }
+        )
+    }
+
+    fn dispatch_counts(&self) -> Vec<(String, u64)> {
+        self.counts.clone()
     }
 }
 
@@ -339,6 +633,103 @@ mod tests {
             decoded.extend_from_slice(&r.bits);
         }
         assert_eq!(decoded, bits);
+    }
+
+    #[test]
+    fn auto_backend_routes_and_matches_native() {
+        let spec = CodeSpec::standard_k7();
+        let geo = FrameGeometry::new(64, 12, 20);
+        let auto_spec = BackendSpec::Auto {
+            spec: spec.clone(),
+            geo,
+            f0: 16,
+            threads: 2,
+            budget_bytes: None,
+            profile: None,
+        };
+        let (rspec, rgeo) = auto_spec.resolve_geometry().unwrap();
+        assert_eq!(rspec, spec);
+        assert_eq!(rgeo, geo);
+        let mut auto = auto_spec.build().unwrap();
+        assert!(auto.name().starts_with("auto:"));
+        let mut native =
+            BackendSpec::Native { spec: spec.clone(), geo, f0: Some(16) }.build().unwrap();
+        let jobs = noisy_jobs(&spec, geo, 64 * 20 - 5, 0xA7);
+        assert_eq!(jobs.len(), 20);
+        // Wide uniform batch: the lane route, bit-identical to native.
+        let a = auto.decode_batch(&jobs).unwrap();
+        let n = native.decode_batch(&jobs).unwrap();
+        assert_eq!(a.len(), n.len());
+        for (x, y) in a.iter().zip(&n) {
+            assert_eq!(x.frame_index, y.frame_index);
+            assert_eq!(x.bits, y.bits, "frame {}", x.frame_index);
+        }
+        // Single-job batch: the per-frame route.
+        let one = auto.decode_batch(std::slice::from_ref(&jobs[0])).unwrap();
+        assert_eq!(one[0].bits, n[0].bits);
+        let counts = auto.dispatch_counts();
+        // The wide uniform batch took a lane route (single-threaded or
+        // pooled, whichever the planner scored fastest).
+        let lane_frames: u64 = counts
+            .iter()
+            .filter(|(r, _)| r.starts_with("lanes"))
+            .map(|(_, c)| *c)
+            .sum();
+        assert_eq!(lane_frames, jobs.len() as u64, "{counts:?}");
+        assert!(counts.iter().any(|(r, c)| r == "unified" && *c == 1), "{counts:?}");
+    }
+
+    #[test]
+    fn auto_backend_profile_can_force_the_pool_route() {
+        use crate::tuner::{CalibrationProfile, CalibrationRecord};
+        let spec = CodeSpec::standard_k7();
+        let geo = FrameGeometry::new(64, 12, 20);
+        // A profile claiming the thread pool wins at every batch width.
+        let rec = |engine: &str, batch: usize, mbps: f64| CalibrationRecord {
+            engine: engine.into(),
+            k: 7,
+            frame_len: 64,
+            batch_frames: batch,
+            lanes: 1,
+            threads: 2,
+            median_mbps: mbps,
+            working_set_bytes: 4096,
+            samples: 1,
+            seed: 1,
+        };
+        let profile = CalibrationProfile::new(vec![
+            rec("parallel", 16, 100.0),
+            rec("lanes", 16, 50.0),
+            rec("lanes-mt", 16, 40.0),
+            rec("unified", 16, 10.0),
+        ]);
+        let path = std::env::temp_dir()
+            .join(format!("TUNE_pool_route_{}.jsonl", std::process::id()));
+        profile.write_jsonl(&path).unwrap();
+        let mut auto = BackendSpec::Auto {
+            spec: spec.clone(),
+            geo,
+            f0: 16,
+            threads: 2,
+            budget_bytes: None,
+            profile: Some(path.clone()),
+        }
+        .build()
+        .unwrap();
+        let mut native =
+            BackendSpec::Native { spec: spec.clone(), geo, f0: Some(16) }.build().unwrap();
+        let jobs = noisy_jobs(&spec, geo, 64 * 10, 0xA8);
+        let a = auto.decode_batch(&jobs).unwrap();
+        let n = native.decode_batch(&jobs).unwrap();
+        for (x, y) in a.iter().zip(&n) {
+            assert_eq!(x.bits, y.bits, "frame {}", x.frame_index);
+        }
+        let counts = auto.dispatch_counts();
+        assert!(
+            counts.iter().any(|(r, c)| r == "parallel" && *c == jobs.len() as u64),
+            "{counts:?}"
+        );
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -17,10 +17,13 @@
 //!
 //! The decoder engine family is enumerated by [`viterbi::registry`] —
 //! `scalar`, `tiled`, `unified`, `parallel`, `lanes`, `lanes-mt`,
-//! `streaming`, `hard` — which the `bench` CLI subcommand, the docs
-//! and the registry smoke test all read from. The lane-batched pair
-//! lives in [`lanes`]: L equal-geometry frames decoded in SIMD
-//! lockstep, the CPU analogue of the GPU warp.
+//! `streaming`, `hard`, `auto` — which the `bench` CLI subcommand, the
+//! docs and the registry smoke test all read from. The lane-batched
+//! pair lives in [`lanes`]: L equal-geometry frames decoded in SIMD
+//! lockstep, the CPU analogue of the GPU warp. The `auto` engine and
+//! the calibration machinery behind it live in [`tuner`]: profile the
+//! engine family once (`viterbi-repro tune`), then route every job to
+//! the fastest backend automatically.
 //!
 //! See README.md for the quickstart, DESIGN.md for the system
 //! inventory and the per-experiment index, EXPERIMENTS.md for
@@ -38,6 +41,7 @@ pub mod frames;
 pub mod lanes;
 pub mod memmodel;
 pub mod runtime;
+pub mod tuner;
 pub mod util;
 pub mod viterbi;
 

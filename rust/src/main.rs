@@ -4,9 +4,10 @@
 //! viterbi-repro list                         list experiments
 //! viterbi-repro exp <id|all> [--full] [--out DIR] [--threads N]
 //! viterbi-repro bench [--engines E,..|all] [--frames N] [--out FILE]
+//! viterbi-repro tune [--smoke] [--ks K,..] [--out FILE]  calibrate the engine family
 //! viterbi-repro ber [--ebn0 DB] [--bits N] [--engine E]
 //! viterbi-repro demo [--bits N] [--ebn0 DB]  encode→channel→decode roundtrip
-//! viterbi-repro serve [--requests N] [--backend pjrt|native] [--artifact NAME]
+//! viterbi-repro serve [--requests N] [--backend pjrt|native|auto] [--artifact NAME]
 //! viterbi-repro info                         platform + artifact inventory
 //! ```
 
@@ -22,6 +23,7 @@ use viterbi::code::{encode, CodeSpec, Termination};
 use viterbi::coordinator::{BackendSpec, BatchPolicy, DecodeServer, ServerConfig};
 use viterbi::exp::{run_by_id, Effort, ExpOptions};
 use viterbi::frames::plan::FrameGeometry;
+use viterbi::tuner::{self, CalibrationGrid};
 use viterbi::util::bits::count_bit_errors;
 use viterbi::util::threadpool::ThreadPool;
 use viterbi::viterbi::{
@@ -46,6 +48,7 @@ fn run() -> Result<()> {
         Some("list") => cmd_list(),
         Some("exp") => cmd_exp(&args),
         Some("bench") => cmd_bench(&args),
+        Some("tune") => cmd_tune(&args),
         Some("ber") => cmd_ber(&args),
         Some("demo") => cmd_demo(&args),
         Some("serve") => cmd_serve(&args),
@@ -62,16 +65,25 @@ USAGE:
   viterbi-repro exp <id|all> [--full] [--out DIR] [--threads N] [--seed S]
   viterbi-repro bench [--engines E,..|all] [--frames N] [--frame-lens F,..]
                       [--samples S] [--threads N] [--lanes L] [--seed S]
-                      [--out FILE] [--list]
+                      [--k K] [--out FILE] [--list]
+  viterbi-repro tune [--smoke] [--ks K,..] [--frame-lens F,..] [--batches B,..]
+                     [--engines E,..] [--samples S] [--warmup W] [--threads N]
+                     [--lanes L] [--seed S] [--out FILE]
   viterbi-repro ber [--ebn0 DB] [--engine scalar|tiled|ptb] [--threads N]
   viterbi-repro demo [--bits N] [--ebn0 DB]
-  viterbi-repro serve [--requests N] [--backend pjrt|native] [--artifact NAME]
+  viterbi-repro serve [--requests N] [--backend pjrt|native|auto]
+                      [--artifact NAME] [--profile FILE]
   viterbi-repro info
 
 The bench subcommand runs any subset of the engine registry over a
 frame-length matrix and writes one line-delimited JSON record per
 cell to FILE (default BENCH_run.json, overwritten each run — use
---out for named baselines); see BENCHMARKS.md.
+--out for named baselines); see BENCHMARKS.md. The tune subcommand
+sweeps the bit-exact dispatch candidates over a (K × frame length ×
+batch width) grid and writes a calibration profile (default
+calibration/profile.jsonl) that the `auto` engine and the serve
+backend `auto` load to route every job to the fastest backend; the
+checked-in calibration/baseline.jsonl is the committed default.
 ";
 
 fn cmd_list() -> Result<()> {
@@ -99,7 +111,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
 fn cmd_bench(args: &Args) -> Result<()> {
     args.check_known(&[
         "engines", "frames", "frame-lens", "samples", "warmup", "threads", "seed", "out",
-        "list", "v1", "v2", "f0", "delay", "lanes",
+        "list", "v1", "v2", "f0", "delay", "lanes", "k",
     ])?;
     if args.has("list") {
         println!("registered engines (viterbi::registry):");
@@ -118,6 +130,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
         bail!("--frames must be positive");
     }
     let defaults = BenchOptions::default();
+    let k = args.get_usize("k", defaults.k as usize)?;
+    if !(3..=16).contains(&k) {
+        bail!("--k must be in 3..=16, got {k}");
+    }
     let opts = BenchOptions {
         samples: args.get_usize("samples", defaults.samples)?.max(1),
         warmup: args.get_usize("warmup", defaults.warmup)?,
@@ -128,6 +144,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         f0: args.get_usize("f0", defaults.f0)?.max(1),
         delay: args.get_usize("delay", defaults.delay)?.max(1),
         lanes: args.get_usize("lanes", defaults.lanes)?.clamp(1, 64),
+        k: k as u32,
     };
     let out_path = std::path::PathBuf::from(args.get("out").unwrap_or("BENCH_run.json"));
 
@@ -165,6 +182,86 @@ fn cmd_bench(args: &Args) -> Result<()> {
         records.len(),
         out_path.display(),
         viterbi::bench::SCHEMA_VERSION
+    );
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "smoke", "ks", "frame-lens", "batches", "engines", "samples", "warmup", "threads",
+        "lanes", "seed", "v1", "v2", "f0", "out",
+    ])?;
+    let smoke = args.has("smoke");
+    let mut grid = if smoke { CalibrationGrid::smoke() } else { CalibrationGrid::full() };
+    if let Some(ks) = args.get("ks") {
+        grid.ks = tuner::parse_ks(ks).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(fl) = args.get("frame-lens") {
+        grid.frame_lens = bench::parse_frame_lens(fl).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(bs) = args.get("batches") {
+        grid.batches = tuner::parse_batches(bs).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(es) = args.get("engines") {
+        grid.engines = bench::parse_engines(es).map_err(|e| anyhow!(e))?;
+    }
+    let defaults = BenchOptions::default();
+    let opts = BenchOptions {
+        samples: args.get_usize("samples", if smoke { 2 } else { 5 })?.max(1),
+        warmup: args.get_usize("warmup", 1)?,
+        threads: args.get_usize("threads", defaults.threads)?.max(1),
+        seed: args.get_u64("seed", defaults.seed)?,
+        v1: args.get_usize("v1", defaults.v1)?,
+        v2: args.get_usize("v2", defaults.v2)?,
+        f0: args.get_usize("f0", defaults.f0)?.max(1),
+        delay: defaults.delay,
+        lanes: args.get_usize("lanes", defaults.lanes)?.clamp(1, 64),
+        k: defaults.k,
+    };
+    let out_path =
+        std::path::PathBuf::from(args.get("out").unwrap_or("calibration/profile.jsonl"));
+    println!(
+        "tune: {} cells ({} K × {} frame lengths × {} batches × {} engines), \
+         {} samples (+{} warmup), {} threads",
+        grid.cells(),
+        grid.ks.len(),
+        grid.frame_lens.len(),
+        grid.batches.len(),
+        grid.engines.len(),
+        opts.samples,
+        opts.warmup,
+        opts.threads
+    );
+    println!(
+        "{:>10} {:>4} {:>8} {:>8} {:>6} {:>12} {:>14}",
+        "engine", "K", "f", "batch", "lanes", "median Mb/s", "work set (B)"
+    );
+    let profile = tuner::run_calibration(&grid, &opts, |r| {
+        println!(
+            "{:>10} {:>4} {:>8} {:>8} {:>6} {:>12.2} {:>14}",
+            r.engine, r.k, r.frame_len, r.batch_frames, r.lanes, r.median_mbps,
+            r.working_set_bytes
+        );
+    })
+    .map_err(|e| anyhow!(e))?;
+    if let Some(dir) = out_path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    profile
+        .write_jsonl(&out_path)
+        .with_context(|| format!("writing {}", out_path.display()))?;
+    println!(
+        "wrote {} record(s) to {} (schema {})",
+        profile.len(),
+        out_path.display(),
+        viterbi::tuner::TUNE_SCHEMA_VERSION
+    );
+    println!(
+        "load it via VITERBI_CALIBRATION={} (or commit it as calibration/baseline.jsonl)",
+        out_path.display()
     );
     Ok(())
 }
@@ -242,7 +339,10 @@ fn cmd_demo(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.check_known(&["requests", "backend", "artifact", "bits", "batch-wait-us", "threads", "seed"])?;
+    args.check_known(&[
+        "requests", "backend", "artifact", "bits", "batch-wait-us", "threads", "seed",
+        "profile",
+    ])?;
     let requests = args.get_usize("requests", 64)?;
     let n_bits = args.get_usize("bits", 4096)?;
     let backend = match args.get("backend").unwrap_or("native") {
@@ -255,7 +355,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             geo: FrameGeometry::new(256, 20, 45),
             f0: Some(32),
         },
-        other => bail!("unknown backend {other:?} (pjrt|native)"),
+        "auto" => BackendSpec::Auto {
+            spec: CodeSpec::standard_k7(),
+            geo: FrameGeometry::new(256, 20, 45),
+            f0: 32,
+            threads: args.get_usize("threads", 8)?.max(1),
+            budget_bytes: None,
+            profile: args.get("profile").map(std::path::PathBuf::from),
+        },
+        other => bail!("unknown backend {other:?} (pjrt|native|auto)"),
     };
     let server = DecodeServer::start(ServerConfig {
         backend,

@@ -1,0 +1,166 @@
+//! The `auto` registry engine: the planner behind the shared
+//! [`Engine`] interface. Every `decode_stream` call is shaped
+//! (K, frame length, batch width) and routed to the fastest
+//! registered candidate; dispatched engines are built once and cached,
+//! so steady-state dispatch overhead is one planner lookup plus a
+//! mutex-guarded map hit.
+//!
+//! Because every dispatch candidate decodes bit-exactly identically to
+//! `unified` (see [`super::planner::DISPATCH_CANDIDATES`]), `auto` is
+//! itself bit-exact with `unified` — pinned by
+//! `rust/tests/tuner_props.rs` across K=5/7/9, terminated and
+//! truncated.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::code::CodeSpec;
+use crate::viterbi::registry::{self, BuildParams, EngineSpec};
+use crate::viterbi::{Engine, SharedEngine, StreamEnd};
+use super::planner::{JobShape, Planner, PlannerConfig};
+
+/// Adaptive dispatch engine (`auto` in the registry).
+pub struct AutoEngine {
+    params: BuildParams,
+    planner: Planner,
+    name: String,
+    cache: Mutex<HashMap<&'static str, SharedEngine>>,
+}
+
+impl AutoEngine {
+    /// Build an adaptive engine over `params` (the template every
+    /// dispatched engine is built from) and `planner`.
+    pub fn new(params: BuildParams, planner: Planner) -> AutoEngine {
+        let name = format!(
+            "auto(f={},v1={},v2={},{})",
+            params.geo.f,
+            params.geo.v1,
+            params.geo.v2,
+            if planner.has_profile() { "profile" } else { "heuristic" }
+        );
+        AutoEngine { params, planner, name, cache: Mutex::new(HashMap::new()) }
+    }
+
+    /// The planner routing this engine's streams.
+    pub fn planner(&self) -> &Planner {
+        &self.planner
+    }
+
+    /// The dispatch choice for a stream of `stages` stages (exposed so
+    /// tests and the CLI can inspect routing without decoding).
+    pub fn choice_for(&self, stages: usize) -> super::planner::Choice {
+        self.planner.plan(&self.shape_for(stages))
+    }
+
+    fn shape_for(&self, stages: usize) -> JobShape {
+        JobShape::for_stream(&self.params.spec, self.params.geo, stages)
+    }
+
+    fn engine_for(&self, name: &'static str) -> SharedEngine {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(e) = cache.get(name) {
+            return Arc::clone(e);
+        }
+        let entry = registry::find(name).expect("planner returned an unregistered engine");
+        let built = (entry.build)(&self.params);
+        cache.insert(name, Arc::clone(&built));
+        built
+    }
+}
+
+impl Engine for AutoEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn spec(&self) -> &CodeSpec {
+        &self.params.spec
+    }
+
+    fn decode_stream(&self, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+        let beta = self.params.spec.beta as usize;
+        assert_eq!(llrs.len(), stages * beta);
+        if stages == 0 {
+            return Vec::new();
+        }
+        let choice = self.planner.plan(&self.shape_for(stages));
+        self.engine_for(choice.engine).decode_stream(llrs, stages, end)
+    }
+}
+
+/// Registry entry for the adaptive dispatcher. The memory rule reports
+/// the working set of the engine the planner would pick for these
+/// parameters — already clamped by the planner's budget (the planner
+/// refuses over-budget candidates whenever any candidate fits).
+pub(crate) fn engine_entry() -> EngineSpec {
+    EngineSpec {
+        name: "auto",
+        description: "calibration-driven adaptive dispatch: tuner::Planner routes every \
+                      stream to the fastest registered engine for its geometry",
+        build: |p: &BuildParams| {
+            let planner = Planner::load_default(PlannerConfig::from_build(p));
+            Arc::new(AutoEngine::new(p.clone(), planner))
+        },
+        traceback_bytes: |p: &BuildParams| {
+            let planner = Planner::load_default(PlannerConfig::from_build(p));
+            planner.plan(&JobShape::from_build(p)).working_set_bytes
+        },
+        lane_width: |p: &BuildParams| {
+            let planner = Planner::load_default(PlannerConfig::from_build(p));
+            if planner.plan(&JobShape::from_build(p)).engine.starts_with("lanes") {
+                p.lanes.clamp(1, 64)
+            } else {
+                1
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::DEFAULT_BUDGET_BYTES;
+
+    fn params() -> BuildParams {
+        let mut p = BuildParams::paper_default();
+        p.threads = 2;
+        p.stream_stages = 4096;
+        p
+    }
+
+    #[test]
+    fn auto_engine_dispatches_and_caches() {
+        let p = params();
+        let auto = AutoEngine::new(p.clone(), Planner::heuristic(PlannerConfig::from_build(&p)));
+        // Wide uniform stream → a lane engine; single frame → unified.
+        assert!(auto.choice_for(p.geo.f * 16).engine.starts_with("lanes"));
+        assert_eq!(auto.choice_for(p.geo.f / 2).engine, "unified");
+        // Decoding builds and caches the dispatched engine.
+        let stages = p.geo.f * 4;
+        let llrs = vec![0.5f32; stages * p.spec.beta as usize];
+        let out = auto.decode_stream(&llrs, stages, StreamEnd::Truncated);
+        assert_eq!(out.len(), stages);
+        assert_eq!(auto.cache.lock().unwrap().len(), 1);
+        // Same shape again: cache hit, still one entry.
+        let _ = auto.decode_stream(&llrs, stages, StreamEnd::Truncated);
+        assert_eq!(auto.cache.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn empty_stream_is_empty() {
+        let p = params();
+        let auto = AutoEngine::new(p.clone(), Planner::heuristic(PlannerConfig::from_build(&p)));
+        assert!(auto.decode_stream(&[], 0, StreamEnd::Truncated).is_empty());
+    }
+
+    #[test]
+    fn memory_rule_reports_planner_clamp() {
+        let p = params();
+        let entry = engine_entry();
+        let bytes = (entry.traceback_bytes)(&p);
+        assert!(bytes > 0);
+        // Some candidate always fits the default budget at the paper's
+        // operating point, so the report never exceeds the clamp.
+        assert!(bytes <= DEFAULT_BUDGET_BYTES);
+    }
+}

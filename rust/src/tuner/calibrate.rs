@@ -1,0 +1,166 @@
+//! The calibration runner: sweep the dispatch-candidate engines over
+//! a (K × frame length × batch width) geometry grid with the existing
+//! `bench` machinery and collect one [`CalibrationRecord`] per cell.
+//!
+//! Calibration reuses `bench::run_scenario` verbatim — same warmup
+//! discipline, same median-over-samples statistic, same
+//! `memmodel`-derived working-set estimate — so a calibration profile
+//! and a `BENCH_*.json` baseline measured on the same machine agree
+//! cell for cell. The `viterbi-repro tune` subcommand is a thin
+//! wrapper over this module.
+
+use crate::bench::{run_scenario, BenchOptions, Scenario};
+use crate::viterbi::registry;
+use super::planner::DISPATCH_CANDIDATES;
+use super::profile::{CalibrationProfile, CalibrationRecord};
+
+/// The geometry grid one calibration run sweeps.
+#[derive(Debug, Clone)]
+pub struct CalibrationGrid {
+    /// Constraint lengths to measure (each 3..=16; 5/7/9 use the
+    /// tabulated standard codes).
+    pub ks: Vec<u32>,
+    /// Frame lengths f to measure.
+    pub frame_lens: Vec<usize>,
+    /// Batch widths (frames of payload per measured stream).
+    pub batches: Vec<usize>,
+    /// Registry engines to measure (default: the dispatch candidates).
+    pub engines: Vec<String>,
+}
+
+impl CalibrationGrid {
+    /// The full default grid: the paper's K family crossed with short
+    /// and paper-length frames at single / narrow / wide batches.
+    pub fn full() -> CalibrationGrid {
+        CalibrationGrid {
+            ks: vec![5, 7, 9],
+            frame_lens: vec![64, 256],
+            batches: vec![1, 8, 64],
+            engines: DISPATCH_CANDIDATES.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// The CI smoke grid: one K, one frame length, two batch widths —
+    /// small enough to regenerate on every run.
+    pub fn smoke() -> CalibrationGrid {
+        CalibrationGrid {
+            ks: vec![7],
+            frame_lens: vec![64],
+            batches: vec![1, 8],
+            engines: DISPATCH_CANDIDATES.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Number of cells the grid will measure.
+    pub fn cells(&self) -> usize {
+        self.ks.len() * self.frame_lens.len() * self.batches.len() * self.engines.len()
+    }
+}
+
+/// Run a calibration sweep. `opts` supplies the shared bench knobs
+/// (samples, warmup, threads, seed, overlaps); the grid overrides `k`
+/// and clamps the lane width to each cell's batch so narrow batches
+/// are measured with the lane width they would actually get.
+/// `progress` fires after each measured cell.
+pub fn run_calibration<F: FnMut(&CalibrationRecord)>(
+    grid: &CalibrationGrid,
+    opts: &BenchOptions,
+    mut progress: F,
+) -> Result<CalibrationProfile, String> {
+    let mut records = Vec::with_capacity(grid.cells());
+    for &k in &grid.ks {
+        for &frame_len in &grid.frame_lens {
+            for &batch in &grid.batches {
+                for engine in &grid.engines {
+                    let entry = registry::find(engine).ok_or_else(|| {
+                        format!("engine {engine:?} not in registry")
+                    })?;
+                    let mut o = opts.clone();
+                    o.k = k;
+                    o.lanes = opts.lanes.min(batch.max(1)).clamp(1, 64);
+                    let sc = Scenario {
+                        engine: engine.clone(),
+                        frame_len,
+                        frames: batch,
+                    };
+                    let m = run_scenario(&entry, &sc, &o);
+                    let rec = CalibrationRecord::from_measurement(&m);
+                    progress(&rec);
+                    records.push(rec);
+                }
+            }
+        }
+    }
+    Ok(CalibrationProfile::new(records))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::{JobShape, Planner, PlannerConfig};
+
+    fn quick_opts() -> BenchOptions {
+        BenchOptions { samples: 1, warmup: 0, threads: 2, ..BenchOptions::default() }
+    }
+
+    #[test]
+    fn smoke_grid_measures_every_cell() {
+        let grid = CalibrationGrid {
+            ks: vec![5],
+            frame_lens: vec![32],
+            batches: vec![1, 4],
+            engines: vec!["unified".into(), "lanes".into()],
+        };
+        let mut seen = 0usize;
+        let profile = run_calibration(&grid, &quick_opts(), |_| seen += 1).unwrap();
+        assert_eq!(seen, grid.cells());
+        assert_eq!(profile.len(), 4);
+        for r in &profile.records {
+            assert_eq!(r.k, 5);
+            assert_eq!(r.frame_len, 32);
+            assert!(r.median_mbps > 0.0 && r.median_mbps.is_finite());
+            assert!(r.working_set_bytes > 0);
+        }
+        // Lane width was clamped to the batch.
+        let lane_b1 = profile
+            .records
+            .iter()
+            .find(|r| r.engine == "lanes" && r.batch_frames == 1)
+            .unwrap();
+        assert_eq!(lane_b1.lanes, 1);
+    }
+
+    #[test]
+    fn unknown_engine_errors() {
+        let grid = CalibrationGrid {
+            ks: vec![7],
+            frame_lens: vec![32],
+            batches: vec![1],
+            engines: vec!["warp9".into()],
+        };
+        assert!(run_calibration(&grid, &quick_opts(), |_| {}).is_err());
+    }
+
+    #[test]
+    fn calibration_profile_drives_the_planner() {
+        // End to end: measure a tiny grid, load it into a planner, and
+        // the planner must return one of the measured engines with a
+        // profile-backed score for an on-grid shape.
+        let grid = CalibrationGrid {
+            ks: vec![5],
+            frame_lens: vec![32],
+            batches: vec![8],
+            engines: vec!["unified".into(), "lanes".into()],
+        };
+        let profile = run_calibration(&grid, &quick_opts(), |_| {}).unwrap();
+        let planner = Planner::with_profile(
+            PlannerConfig { threads: 2, lanes: 64, f0: 8, budget_bytes: None },
+            profile,
+        );
+        let shape =
+            JobShape { k: 5, frame_len: 32, v1: 8, v2: 12, batch_frames: 8, uniform: true };
+        let choice = planner.plan(&shape);
+        assert!(choice.from_profile, "on-grid shape must be profile-scored");
+        assert!(choice.engine == "unified" || choice.engine == "lanes");
+    }
+}

@@ -1,0 +1,45 @@
+//! Calibration-driven adaptive engine dispatch — the tuner turns the
+//! bench corpus from a reporting artifact into the serving control
+//! plane.
+//!
+//! The paper's central observation is that the best decode strategy
+//! depends on workload geometry (frame length, constraint length K,
+//! batch width): its unified kernel wins at the paper's operating
+//! point but the crossover against block-based and frame-parallel
+//! baselines moves with the shape. This module makes that decision
+//! automatic, in three pieces:
+//!
+//! * [`calibrate`] — a calibration runner that sweeps the dispatch
+//!   candidates over a (K × frame length × batch width) grid with the
+//!   existing `bench` machinery and persists a versioned
+//!   [`CalibrationProfile`] JSONL file (`viterbi-tune/1`), each cell
+//!   carrying the `memmodel` working-set estimate;
+//! * [`planner`] — [`Planner`] loads a profile, interpolates to the
+//!   nearest measured cell, and returns a ranked engine choice for a
+//!   job geometry under a memory budget, with a static heuristic
+//!   fallback when no profile exists;
+//! * [`auto`] — the `auto` registry engine wrapping the planner behind
+//!   the shared `Engine` interface; the coordinator's
+//!   `BackendSpec::Auto` routes every dynamic batch through the same
+//!   planner (uniform lane-groupable batches to the lane engines,
+//!   ragged ones to `parallel`/`unified`).
+//!
+//! All dispatch candidates decode bit-exactly identically, so routing
+//! is a pure performance decision; `rust/tests/tuner_props.rs` pins
+//! `auto` against `unified` and property-tests the planner's registry
+//! and budget invariants.
+
+#![warn(missing_docs)]
+
+pub mod auto;
+pub mod calibrate;
+pub mod planner;
+pub mod profile;
+
+pub use auto::AutoEngine;
+pub use calibrate::{run_calibration, CalibrationGrid};
+pub use planner::{
+    parse_batches, parse_ks, Choice, JobShape, Planner, PlannerConfig, BUDGET_ENV,
+    DEFAULT_BUDGET_BYTES, DISPATCH_CANDIDATES, LANE_BATCH_MIN, PROFILE_ENV,
+};
+pub use profile::{CalibrationProfile, CalibrationRecord, TUNE_SCHEMA_VERSION};

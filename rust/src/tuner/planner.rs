@@ -1,0 +1,552 @@
+//! The dispatch planner: given a job geometry, rank the bit-exact
+//! engine family and pick the fastest choice that fits the memory
+//! budget.
+//!
+//! Ranking has two sources, in priority order:
+//!
+//! 1. a loaded [`CalibrationProfile`] — each candidate is scored by
+//!    the median throughput of its *nearest measured cell* (log-space
+//!    distance over frame length and batch width, flat penalty for a
+//!    constraint-length mismatch), so off-grid geometries interpolate
+//!    instead of falling off a cliff;
+//! 2. a static heuristic — the shape-based ordering the paper's
+//!    crossover measurements suggest (wide uniform batches → lane
+//!    engines, ragged work → frame-parallel or unified, single frames
+//!    → unified), used when no profile exists or a candidate has no
+//!    measured cell.
+//!
+//! The memory budget is enforced against the *registry's own*
+//! `traceback_bytes` rule evaluated at the queried shape (not the
+//! calibrated cell), so the clamp stays in sync with
+//! `memmodel`-derived accounting. If no candidate fits the budget the
+//! planner degrades to the smallest-footprint candidate rather than
+//! failing — serving never stalls on an infeasible budget.
+
+use std::path::{Path, PathBuf};
+
+use crate::code::CodeSpec;
+use crate::frames::plan::FrameGeometry;
+use crate::viterbi::registry::{self, BuildParams};
+use super::profile::CalibrationProfile;
+
+/// The engines the planner dispatches among. All four decode
+/// bit-exactly identically (`parallel` drives the `unified` inner
+/// engine; the lane pair is pinned by `rust/tests/lanes_parity.rs`),
+/// so routing is a pure performance decision. The first two are the
+/// only candidates for non-uniform (ragged) work.
+pub const DISPATCH_CANDIDATES: [&str; 4] = ["unified", "parallel", "lanes", "lanes-mt"];
+
+/// The subset of [`DISPATCH_CANDIDATES`] eligible for ragged
+/// (non-lane-groupable) work.
+const RAGGED_CANDIDATES: [&str; 2] = ["unified", "parallel"];
+
+/// Batch width from which the heuristic prefers lane engines for
+/// uniform work (below it, lane-group setup overhead dominates).
+pub const LANE_BATCH_MIN: usize = 8;
+
+/// Default planner working-set budget: generous on serving hardware,
+/// but a real clamp — the registry's `auto` memory rule reports the
+/// chosen engine's working set under it.
+pub const DEFAULT_BUDGET_BYTES: usize = 256 << 20;
+
+/// Environment variable overriding the default budget (bytes).
+pub const BUDGET_ENV: &str = "VITERBI_TUNER_BUDGET";
+
+/// Environment variable naming the calibration profile to load.
+pub const PROFILE_ENV: &str = "VITERBI_CALIBRATION";
+
+/// The geometry of one decode job, as the planner sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobShape {
+    /// Constraint length K of the code.
+    pub k: u32,
+    /// Decoded stages per frame (f).
+    pub frame_len: usize,
+    /// Left overlap (warm-up) stages.
+    pub v1: usize,
+    /// Right overlap (traceback convergence) stages.
+    pub v2: usize,
+    /// Frames in the job (batch width).
+    pub batch_frames: usize,
+    /// Whether the frames are lane-groupable: equal geometry and a
+    /// code on the SIMD lane fast path. Ragged work is dispatched to
+    /// the per-frame engines only.
+    pub uniform: bool,
+}
+
+impl JobShape {
+    /// The shape a whole-stream decode of `stages` stages of `spec`,
+    /// tiled at `geo`, presents to the planner — the single source of
+    /// the frames/uniform derivation, shared by the `auto` engine's
+    /// runtime dispatch and the registry entry's analytic rules.
+    pub fn for_stream(spec: &CodeSpec, geo: FrameGeometry, stages: usize) -> JobShape {
+        let f = geo.f.max(1);
+        let frames = if stages == 0 { 1 } else { (stages + f - 1) / f };
+        JobShape {
+            k: spec.k,
+            frame_len: geo.f,
+            v1: geo.v1,
+            v2: geo.v2,
+            batch_frames: frames,
+            uniform: frames > 1,
+        }
+    }
+
+    /// [`JobShape::for_stream`] over a build-parameter bundle's
+    /// `stream_stages` (used by the `auto` registry entry).
+    pub fn from_build(p: &BuildParams) -> JobShape {
+        JobShape::for_stream(&p.spec, p.geo, p.stream_stages)
+    }
+}
+
+/// Planner construction knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PlannerConfig {
+    /// Worker threads available to the multithreaded candidates.
+    pub threads: usize,
+    /// Maximum lane width L for the lane-batched candidates.
+    pub lanes: usize,
+    /// Parallel-traceback subframe size used for memory estimates.
+    pub f0: usize,
+    /// Working-set budget in bytes (None = unbounded).
+    pub budget_bytes: Option<usize>,
+}
+
+impl PlannerConfig {
+    /// Derive a config from shared engine build parameters. The budget
+    /// is left open; [`PlannerConfig::with_env_budget`] resolves it.
+    pub fn from_build(p: &BuildParams) -> PlannerConfig {
+        PlannerConfig {
+            threads: p.threads.max(1),
+            lanes: p.lanes.clamp(1, 64),
+            f0: p.f0.max(1),
+            budget_bytes: None,
+        }
+    }
+
+    /// Resolve an open budget: an explicitly configured budget wins,
+    /// else `VITERBI_TUNER_BUDGET` (bytes; a malformed value warns on
+    /// stderr), else [`DEFAULT_BUDGET_BYTES`]. Every planner
+    /// construction path that serves traffic goes through this, so the
+    /// env override applies uniformly whether or not a profile path
+    /// was given.
+    pub fn with_env_budget(mut self) -> PlannerConfig {
+        if self.budget_bytes.is_none() {
+            self.budget_bytes = Some(match std::env::var(BUDGET_ENV) {
+                Ok(v) => v.trim().parse::<usize>().unwrap_or_else(|_| {
+                    eprintln!(
+                        "warning: {BUDGET_ENV}={v:?} is not a byte count; \
+                         using the default budget"
+                    );
+                    DEFAULT_BUDGET_BYTES
+                }),
+                Err(_) => DEFAULT_BUDGET_BYTES,
+            });
+        }
+        self
+    }
+}
+
+/// One ranked dispatch option.
+#[derive(Debug, Clone)]
+pub struct Choice {
+    /// Registry name of the engine.
+    pub engine: &'static str,
+    /// Median throughput of the nearest calibrated cell, if one
+    /// exists (None = heuristic ranking only).
+    pub expected_mbps: Option<f64>,
+    /// Analytic working set of this engine at the queried shape
+    /// (registry `traceback_bytes` rule), bytes.
+    pub working_set_bytes: usize,
+    /// Whether the ranking of this choice came from a profile cell.
+    pub from_profile: bool,
+}
+
+/// The calibration-driven dispatch planner.
+#[derive(Debug, Clone)]
+pub struct Planner {
+    cfg: PlannerConfig,
+    profile: Option<CalibrationProfile>,
+}
+
+impl Planner {
+    /// A profile-free planner: static heuristic ranking only.
+    pub fn heuristic(cfg: PlannerConfig) -> Planner {
+        Planner { cfg, profile: None }
+    }
+
+    /// A planner ranking by the given profile (empty profiles degrade
+    /// to the heuristic).
+    pub fn with_profile(cfg: PlannerConfig, profile: CalibrationProfile) -> Planner {
+        let profile = if profile.is_empty() { None } else { Some(profile) };
+        Planner { cfg, profile }
+    }
+
+    /// Load a profile from `path` and build a planner over it.
+    pub fn load(cfg: PlannerConfig, path: &Path) -> Result<Planner, String> {
+        CalibrationProfile::read_jsonl(path).map(|p| Planner::with_profile(cfg, p))
+    }
+
+    /// The default construction used by the `auto` registry entry and
+    /// the coordinator: budget resolved by
+    /// [`PlannerConfig::with_env_budget`] (explicit config, else
+    /// `VITERBI_TUNER_BUDGET`, else [`DEFAULT_BUDGET_BYTES`]); profile
+    /// from the process-wide cached default — `VITERBI_CALIBRATION`
+    /// (warning on stderr if the explicit path fails to load), else
+    /// the checked-in `calibration/baseline.jsonl` (repo root or one
+    /// level up, for `cargo test` running inside `rust/`), else the
+    /// static heuristic (noted once on stderr).
+    pub fn load_default(cfg: PlannerConfig) -> Planner {
+        let cfg = cfg.with_env_budget();
+        match default_profile() {
+            Some(p) => Planner::with_profile(cfg, p.clone()),
+            None => Planner::heuristic(cfg),
+        }
+    }
+
+    /// Whether a non-empty profile backs this planner.
+    pub fn has_profile(&self) -> bool {
+        self.profile.is_some()
+    }
+
+    /// The construction knobs (budget, threads, lane width).
+    pub fn config(&self) -> &PlannerConfig {
+        &self.cfg
+    }
+
+    /// Build-parameter bundle for registry memory rules at `shape`.
+    fn shape_params(&self, shape: &JobShape) -> BuildParams {
+        let f = shape.frame_len.max(1);
+        BuildParams {
+            spec: CodeSpec::for_constraint(shape.k),
+            geo: FrameGeometry::new(f, shape.v1, shape.v2),
+            f0: self.cfg.f0.clamp(1, f),
+            threads: self.cfg.threads.max(1),
+            delay: 96,
+            lanes: self.cfg.lanes.min(shape.batch_frames.max(1)).clamp(1, 64),
+            stream_stages: f * shape.batch_frames.max(1),
+        }
+    }
+
+    /// Rank the dispatch candidates for `shape`, fastest first.
+    /// Profile-scored candidates precede heuristic-only ones; the
+    /// heuristic breaks ties among the latter. Only same-K cells
+    /// score a candidate — throughput measured at a different
+    /// constraint length (a different trellis size) is not comparable
+    /// across engines, so such candidates fall back to the heuristic
+    /// ordering instead of winning on an incommensurate number.
+    pub fn rank(&self, shape: &JobShape) -> Vec<Choice> {
+        let params = self.shape_params(shape);
+        let cands = candidates(shape);
+        let order = heuristic_order(shape, self.cfg.threads);
+        let pos = |name: &str| order.iter().position(|n| *n == name).unwrap_or(order.len());
+        let mut choices: Vec<Choice> = cands
+            .iter()
+            .map(|&name| {
+                // nearest() is same-K-only, so profile scores are
+                // always commensurate across engines.
+                let cell = self.profile.as_ref().and_then(|p| {
+                    p.nearest(name, shape.k, shape.frame_len, shape.batch_frames)
+                });
+                Choice {
+                    engine: name,
+                    expected_mbps: cell.map(|c| c.median_mbps),
+                    working_set_bytes: working_set(name, &params),
+                    from_profile: cell.is_some(),
+                }
+            })
+            .collect();
+        choices.sort_by(|a, b| match (a.expected_mbps, b.expected_mbps) {
+            (Some(x), Some(y)) => y.partial_cmp(&x).unwrap_or(std::cmp::Ordering::Equal),
+            (Some(_), None) => std::cmp::Ordering::Less,
+            (None, Some(_)) => std::cmp::Ordering::Greater,
+            (None, None) => pos(a.engine).cmp(&pos(b.engine)),
+        });
+        choices
+    }
+
+    /// Pick the dispatch engine for `shape`: the fastest ranked
+    /// candidate within the budget, else (infeasible budget) the
+    /// smallest-footprint candidate.
+    pub fn plan(&self, shape: &JobShape) -> Choice {
+        let ranked = self.rank(shape);
+        if let Some(budget) = self.cfg.budget_bytes {
+            if let Some(c) = ranked.iter().find(|c| c.working_set_bytes <= budget) {
+                return c.clone();
+            }
+            return ranked
+                .iter()
+                .min_by_key(|c| c.working_set_bytes)
+                .expect("candidate set is never empty")
+                .clone();
+        }
+        ranked.into_iter().next().expect("candidate set is never empty")
+    }
+}
+
+/// The process-wide default calibration profile, resolved once and
+/// cached: the registry's `auto` closures (build, memory rule, lane
+/// width) and every dispatcher built without an explicit path share
+/// one consistent load instead of re-reading the file per call, and
+/// the misconfig/fallback diagnostics print at most once per process.
+fn default_profile() -> &'static Option<CalibrationProfile> {
+    static DEFAULT_PROFILE: std::sync::OnceLock<Option<CalibrationProfile>> =
+        std::sync::OnceLock::new();
+    DEFAULT_PROFILE.get_or_init(|| {
+        if let Some(path) = std::env::var(PROFILE_ENV).ok().map(PathBuf::from) {
+            // An explicit override failing to load is a misconfig the
+            // operator must be able to see — warn, then fall back.
+            if path.is_file() {
+                match CalibrationProfile::read_jsonl(&path) {
+                    Ok(p) => return Some(p),
+                    Err(e) => eprintln!(
+                        "warning: {PROFILE_ENV}={} failed to load ({e}); \
+                         falling back to the default profile search",
+                        path.display()
+                    ),
+                }
+            } else {
+                eprintln!(
+                    "warning: {PROFILE_ENV}={} is not a file; \
+                     falling back to the default profile search",
+                    path.display()
+                );
+            }
+        }
+        for path in [
+            PathBuf::from("calibration/baseline.jsonl"),
+            PathBuf::from("../calibration/baseline.jsonl"),
+        ] {
+            if path.is_file() {
+                if let Ok(p) = CalibrationProfile::read_jsonl(&path) {
+                    return Some(p);
+                }
+            }
+        }
+        eprintln!(
+            "note: no calibration profile found (set {PROFILE_ENV} or commit \
+             calibration/baseline.jsonl); adaptive dispatch uses the static heuristic"
+        );
+        None
+    })
+}
+
+/// The candidate set for a shape: all four bit-exact engines for
+/// uniform (lane-groupable) work, the per-frame pair for ragged work.
+fn candidates(shape: &JobShape) -> &'static [&'static str] {
+    if shape.uniform {
+        &DISPATCH_CANDIDATES
+    } else {
+        &RAGGED_CANDIDATES
+    }
+}
+
+/// Static fallback ordering (fastest-first) when no profile cell
+/// covers a candidate.
+fn heuristic_order(shape: &JobShape, threads: usize) -> &'static [&'static str] {
+    if shape.batch_frames <= 1 {
+        // One frame: nothing to batch or fan out.
+        &["unified", "lanes", "parallel", "lanes-mt"]
+    } else if shape.uniform && shape.batch_frames >= LANE_BATCH_MIN && threads > 1 {
+        &["lanes-mt", "lanes", "parallel", "unified"]
+    } else if shape.uniform {
+        &["lanes", "lanes-mt", "parallel", "unified"]
+    } else if threads > 1 {
+        &["parallel", "unified", "lanes", "lanes-mt"]
+    } else {
+        &["unified", "parallel", "lanes", "lanes-mt"]
+    }
+}
+
+/// Working set of a registry engine at `params`, by its own rule.
+fn working_set(name: &str, params: &BuildParams) -> usize {
+    registry::find(name)
+        .map(|e| (e.traceback_bytes)(params))
+        .unwrap_or(usize::MAX)
+}
+
+/// Parse a comma-separated list of constraint lengths (each 3..=16).
+pub fn parse_ks(arg: &str) -> Result<Vec<u32>, String> {
+    let mut out = Vec::new();
+    for tok in arg.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let k: u32 = tok
+            .parse()
+            .map_err(|_| format!("bad constraint length {tok:?} (expected an integer)"))?;
+        if !(3..=16).contains(&k) {
+            return Err(format!("constraint length {k} outside the supported 3..=16"));
+        }
+        out.push(k);
+    }
+    if out.is_empty() {
+        return Err("no constraint lengths given".to_string());
+    }
+    Ok(out)
+}
+
+/// Parse a comma-separated list of positive batch widths.
+pub fn parse_batches(arg: &str) -> Result<Vec<usize>, String> {
+    let mut out = Vec::new();
+    for tok in arg.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let b: usize = tok
+            .parse()
+            .map_err(|_| format!("bad batch width {tok:?} (expected an integer)"))?;
+        if b == 0 {
+            return Err("batch width must be positive".to_string());
+        }
+        out.push(b);
+    }
+    if out.is_empty() {
+        return Err("no batch widths given".to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::profile::CalibrationRecord;
+
+    fn cfg() -> PlannerConfig {
+        PlannerConfig { threads: 4, lanes: 64, f0: 32, budget_bytes: None }
+    }
+
+    fn shape(batch: usize, uniform: bool) -> JobShape {
+        JobShape { k: 7, frame_len: 256, v1: 20, v2: 45, batch_frames: batch, uniform }
+    }
+
+    fn rec(engine: &str, batch: usize, mbps: f64) -> CalibrationRecord {
+        CalibrationRecord {
+            engine: engine.into(),
+            k: 7,
+            frame_len: 256,
+            batch_frames: batch,
+            lanes: if engine.starts_with("lanes") { batch.min(64) } else { 1 },
+            threads: 4,
+            median_mbps: mbps,
+            working_set_bytes: 4096,
+            samples: 3,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn heuristic_routes_by_shape() {
+        let p = Planner::heuristic(cfg());
+        assert_eq!(p.plan(&shape(64, true)).engine, "lanes-mt");
+        assert_eq!(p.plan(&shape(1, false)).engine, "unified");
+        assert_eq!(p.plan(&shape(16, false)).engine, "parallel");
+        // Single-threaded: the pool engines lose their edge.
+        let single = Planner::heuristic(PlannerConfig { threads: 1, ..cfg() });
+        assert_eq!(single.plan(&shape(64, true)).engine, "lanes");
+        assert_eq!(single.plan(&shape(16, false)).engine, "unified");
+    }
+
+    #[test]
+    fn ragged_shapes_never_get_lane_engines() {
+        let p = Planner::heuristic(cfg());
+        for batch in [1usize, 2, 8, 64, 300] {
+            for c in p.rank(&shape(batch, false)) {
+                assert!(
+                    !c.engine.starts_with("lanes"),
+                    "ragged batch {batch} ranked {}",
+                    c.engine
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn profile_overrides_heuristic() {
+        // A profile claiming `parallel` beats the lane engines at wide
+        // uniform batches must win over the heuristic.
+        let profile = CalibrationProfile::new(vec![
+            rec("parallel", 64, 500.0),
+            rec("lanes-mt", 64, 200.0),
+            rec("lanes", 64, 150.0),
+            rec("unified", 64, 50.0),
+        ]);
+        let p = Planner::with_profile(cfg(), profile);
+        assert!(p.has_profile());
+        let choice = p.plan(&shape(64, true));
+        assert_eq!(choice.engine, "parallel");
+        assert!(choice.from_profile);
+        assert_eq!(choice.expected_mbps, Some(500.0));
+    }
+
+    #[test]
+    fn off_grid_shapes_interpolate_to_nearest_cell() {
+        let profile = CalibrationProfile::new(vec![
+            rec("lanes", 64, 300.0),
+            rec("unified", 64, 40.0),
+            rec("unified", 1, 30.0),
+            rec("parallel", 1, 20.0),
+            rec("parallel", 64, 100.0),
+            rec("lanes-mt", 64, 250.0),
+        ]);
+        let p = Planner::with_profile(cfg(), profile);
+        // batch 48 is off-grid; nearest cells are the batch-64 row.
+        assert_eq!(p.plan(&shape(48, true)).engine, "lanes");
+        // batch 1: unified's batch-1 cell wins.
+        assert_eq!(p.plan(&shape(1, false)).engine, "unified");
+    }
+
+    #[test]
+    fn budget_clamps_the_pick() {
+        let p = Planner::heuristic(cfg());
+        let s = shape(64, true);
+        let unclamped = p.plan(&s);
+        // A budget below the winner's working set forces a smaller
+        // engine; an infeasible budget degrades to the global minimum.
+        let ranked = p.rank(&s);
+        let min_ws = ranked.iter().map(|c| c.working_set_bytes).min().unwrap();
+        let tight = Planner::heuristic(PlannerConfig {
+            budget_bytes: Some(unclamped.working_set_bytes - 1),
+            ..cfg()
+        });
+        let clamped = tight.plan(&s);
+        assert!(clamped.working_set_bytes < unclamped.working_set_bytes);
+        let infeasible =
+            Planner::heuristic(PlannerConfig { budget_bytes: Some(1), ..cfg() });
+        assert_eq!(infeasible.plan(&s).working_set_bytes, min_ws);
+    }
+
+    #[test]
+    fn explicit_budget_survives_env_resolution() {
+        // An explicitly configured budget is never overridden; an open
+        // budget always resolves to Some (env or default).
+        let explicit = PlannerConfig { budget_bytes: Some(12_345), ..cfg() }.with_env_budget();
+        assert_eq!(explicit.budget_bytes, Some(12_345));
+        let open = cfg().with_env_budget();
+        assert!(open.budget_bytes.is_some());
+    }
+
+    #[test]
+    fn cross_k_cells_never_score_a_candidate() {
+        // lanes measured only at K=5 must not outrank same-K cells of
+        // the other engines for a K=7 query — it falls back to the
+        // heuristic position instead.
+        let mut k5_lanes = rec("lanes", 64, 9000.0);
+        k5_lanes.k = 5;
+        let profile = CalibrationProfile::new(vec![
+            k5_lanes,
+            rec("parallel", 64, 90.0),
+            rec("unified", 64, 40.0),
+        ]);
+        let p = Planner::with_profile(cfg(), profile);
+        let ranked = p.rank(&shape(64, true));
+        let lanes_choice = ranked.iter().find(|c| c.engine == "lanes").unwrap();
+        assert!(!lanes_choice.from_profile);
+        assert_eq!(lanes_choice.expected_mbps, None);
+        assert_eq!(p.plan(&shape(64, true)).engine, "parallel");
+    }
+
+    #[test]
+    fn parse_lists() {
+        assert_eq!(parse_ks("5,7,9").unwrap(), vec![5, 7, 9]);
+        assert!(parse_ks("2").is_err());
+        assert!(parse_ks("").is_err());
+        assert_eq!(parse_batches("1, 8,64").unwrap(), vec![1, 8, 64]);
+        assert!(parse_batches("0").is_err());
+        assert!(parse_batches("x").is_err());
+    }
+}

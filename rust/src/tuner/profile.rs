@@ -1,0 +1,294 @@
+//! The versioned calibration profile: one [`CalibrationRecord`] per
+//! measured (engine × K × frame length × batch width) grid cell,
+//! persisted as line-delimited JSON exactly like the `BENCH_*.json`
+//! records (BENCHMARKS.md documents the schema side by side).
+//!
+//! A profile is the tuner's serving control plane: the calibration
+//! runner (`tuner::calibrate`) writes it, the [`crate::tuner::Planner`]
+//! loads it and interpolates to the nearest measured cell when ranking
+//! engines for a job geometry.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::util::json::{Json, ObjBuilder};
+
+/// Schema tag stamped into every calibration record so readers reject
+/// files written by an incompatible harness.
+pub const TUNE_SCHEMA_VERSION: &str = "viterbi-tune/1";
+
+/// One measured calibration grid cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationRecord {
+    /// Registry name of the measured engine (`unified`, `parallel`,
+    /// `lanes`, `lanes-mt`, …).
+    pub engine: String,
+    /// Constraint length K of the measured code.
+    pub k: u32,
+    /// Decoded stages per frame (f) of the cell.
+    pub frame_len: usize,
+    /// Batch width of the cell: frames of payload per measured stream.
+    pub batch_frames: usize,
+    /// Lane width L the lane-batched engines ran with (1 for per-frame
+    /// engines).
+    pub lanes: usize,
+    /// Worker threads available to the engine during calibration.
+    pub threads: usize,
+    /// Median decode throughput over the samples, Mbit/s of
+    /// information bits.
+    pub median_mbps: f64,
+    /// Analytic peak resident working set of the engine at this cell,
+    /// bytes (`memmodel` rule from the registry entry) — lets the
+    /// planner respect a memory budget without rebuilding the engine.
+    pub working_set_bytes: usize,
+    /// Timed samples behind the median.
+    pub samples: usize,
+    /// Workload RNG seed (bit-exact reruns).
+    pub seed: u64,
+}
+
+impl CalibrationRecord {
+    /// Build a calibration record from a bench [`crate::bench::Measurement`].
+    pub fn from_measurement(m: &crate::bench::Measurement) -> CalibrationRecord {
+        CalibrationRecord {
+            engine: m.engine.clone(),
+            k: m.k,
+            frame_len: m.frame_len,
+            batch_frames: m.batch_frames,
+            lanes: m.lane_width,
+            threads: m.threads,
+            median_mbps: m.median_mbps,
+            working_set_bytes: m.peak_traceback_bytes,
+            samples: m.samples,
+            seed: m.seed,
+        }
+    }
+
+    /// Serialize to one JSON object (one profile line).
+    pub fn to_json(&self) -> Json {
+        ObjBuilder::new()
+            .str("schema", TUNE_SCHEMA_VERSION)
+            .str("engine", &self.engine)
+            .num("k", self.k as f64)
+            .num("frame_len", self.frame_len as f64)
+            .num("batch_frames", self.batch_frames as f64)
+            .num("lanes", self.lanes as f64)
+            .num("threads", self.threads as f64)
+            .num("median_mbps", self.median_mbps)
+            .num("working_set_bytes", self.working_set_bytes as f64)
+            .num("samples", self.samples as f64)
+            // String for the same reason as the bench records: a u64
+            // seed does not fit losslessly in a JSON f64 number.
+            .str("seed", &self.seed.to_string())
+            .build()
+    }
+
+    /// Deserialize from a parsed JSON object, validating the schema
+    /// tag and every field.
+    pub fn from_json(j: &Json) -> Result<CalibrationRecord, String> {
+        let schema = str_field(j, "schema")?;
+        if schema != TUNE_SCHEMA_VERSION {
+            return Err(format!(
+                "unsupported schema {schema:?} (this harness reads {TUNE_SCHEMA_VERSION:?})"
+            ));
+        }
+        Ok(CalibrationRecord {
+            engine: str_field(j, "engine")?,
+            k: num_field(j, "k")? as u32,
+            frame_len: num_field(j, "frame_len")? as usize,
+            batch_frames: num_field(j, "batch_frames")? as usize,
+            lanes: num_field(j, "lanes")? as usize,
+            threads: num_field(j, "threads")? as usize,
+            median_mbps: num_field(j, "median_mbps")?,
+            working_set_bytes: num_field(j, "working_set_bytes")? as usize,
+            samples: num_field(j, "samples")? as usize,
+            seed: str_field(j, "seed")?
+                .parse::<u64>()
+                .map_err(|_| "field \"seed\" is not a u64".to_string())?,
+        })
+    }
+}
+
+fn str_field(j: &Json, key: &str) -> Result<String, String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing or non-string field {key:?}"))
+}
+
+fn num_field(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing or non-numeric field {key:?}"))
+}
+
+/// A loaded calibration profile: the measured grid, in file order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CalibrationProfile {
+    /// The measured cells.
+    pub records: Vec<CalibrationRecord>,
+}
+
+impl CalibrationProfile {
+    /// Wrap a record list.
+    pub fn new(records: Vec<CalibrationRecord>) -> CalibrationProfile {
+        CalibrationProfile { records }
+    }
+
+    /// True when the profile holds no cells.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Number of measured cells.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Write the profile as line-delimited JSON (one record per line).
+    pub fn write_jsonl(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        for r in &self.records {
+            writeln!(f, "{}", r.to_json().render())?;
+        }
+        Ok(())
+    }
+
+    /// Read a line-delimited profile back. Blank lines are skipped;
+    /// any malformed line aborts with its line number.
+    pub fn read_jsonl(path: &Path) -> Result<CalibrationProfile, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let mut records = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let j = Json::parse(line).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            records.push(
+                CalibrationRecord::from_json(&j)
+                    .map_err(|e| format!("line {}: {e}", lineno + 1))?,
+            );
+        }
+        Ok(CalibrationProfile { records })
+    }
+
+    /// The measured **same-K** cell of `engine` nearest to
+    /// (frame_len, batch_frames), by log-distance over frame length
+    /// and batch width. Cells of another constraint length are never
+    /// returned: a different trellis size makes throughput
+    /// incomparable across engines, so the planner falls back to its
+    /// static heuristic instead (`Planner::rank`). None when the
+    /// profile has no same-K cell for that engine.
+    pub fn nearest(
+        &self,
+        engine: &str,
+        k: u32,
+        frame_len: usize,
+        batch_frames: usize,
+    ) -> Option<&CalibrationRecord> {
+        self.records
+            .iter()
+            .filter(|r| r.engine == engine && r.k == k)
+            .min_by(|a, b| {
+                let da = cell_distance(a, frame_len, batch_frames);
+                let db = cell_distance(b, frame_len, batch_frames);
+                da.partial_cmp(&db).unwrap_or(std::cmp::Ordering::Equal)
+            })
+    }
+}
+
+/// Log-space geometry distance between a measured cell and a query.
+fn cell_distance(r: &CalibrationRecord, frame_len: usize, batch_frames: usize) -> f64 {
+    let df = ((frame_len.max(1) as f64) / (r.frame_len.max(1) as f64)).ln().abs();
+    let db = ((batch_frames.max(1) as f64) / (r.batch_frames.max(1) as f64)).ln().abs();
+    df + db
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(engine: &str, k: u32, f: usize, b: usize, mbps: f64) -> CalibrationRecord {
+        CalibrationRecord {
+            engine: engine.into(),
+            k,
+            frame_len: f,
+            batch_frames: b,
+            lanes: if engine.starts_with("lanes") { b.min(64) } else { 1 },
+            threads: 4,
+            median_mbps: mbps,
+            working_set_bytes: 4096,
+            samples: 3,
+            seed: 0xBE12,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_record() {
+        let r = sample("lanes", 7, 256, 64, 123.5);
+        let back = CalibrationRecord::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        let reparsed = Json::parse(&r.to_json().render()).unwrap();
+        assert_eq!(CalibrationRecord::from_json(&reparsed).unwrap(), r);
+    }
+
+    #[test]
+    fn rejects_wrong_schema_and_missing_fields() {
+        let mut j = sample("unified", 7, 64, 1, 30.0).to_json();
+        if let Json::Obj(fields) = &mut j {
+            fields[0].1 = Json::str("other-harness/9");
+        }
+        assert!(CalibrationRecord::from_json(&j)
+            .unwrap_err()
+            .contains("unsupported schema"));
+        let partial =
+            Json::parse(r#"{"schema":"viterbi-tune/1","engine":"unified"}"#).unwrap();
+        assert!(CalibrationRecord::from_json(&partial).is_err());
+    }
+
+    #[test]
+    fn jsonl_file_roundtrip() {
+        let profile = CalibrationProfile::new(vec![
+            sample("unified", 7, 64, 1, 30.0),
+            sample("lanes", 7, 256, 64, 140.0),
+        ]);
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("TUNE_test_{}.jsonl", std::process::id()));
+        profile.write_jsonl(&path).unwrap();
+        let back = CalibrationProfile::read_jsonl(&path).unwrap();
+        assert_eq!(back, profile);
+        assert_eq!(back.len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn nearest_prefers_same_k_then_log_geometry() {
+        let profile = CalibrationProfile::new(vec![
+            sample("lanes", 7, 64, 8, 60.0),
+            sample("lanes", 7, 256, 64, 140.0),
+            sample("lanes", 5, 256, 64, 400.0),
+            sample("unified", 7, 256, 1, 28.0),
+        ]);
+        // Exact cell wins.
+        let c = profile.nearest("lanes", 7, 256, 64).unwrap();
+        assert_eq!(c.median_mbps, 140.0);
+        // Off-grid batch interpolates to the nearest cell in log space.
+        let c = profile.nearest("lanes", 7, 256, 48).unwrap();
+        assert_eq!(c.batch_frames, 64);
+        // Only same-K cells are ever returned, even when the geometry
+        // gap to the same-K cell is arbitrarily large.
+        let c = profile.nearest("lanes", 7, 200, 64).unwrap();
+        assert_eq!(c.k, 7);
+        let far = profile.nearest("lanes", 7, 100_000, 1).unwrap();
+        assert_eq!(far.k, 7, "another K must never shadow a same-K cell");
+        // K=5 queries land on the K=5 cell.
+        let c = profile.nearest("lanes", 5, 256, 64).unwrap();
+        assert_eq!(c.k, 5);
+        // Unknown engine or uncalibrated K → no cell (the planner's
+        // heuristic takes over; cross-K throughput is incomparable).
+        assert!(profile.nearest("scalar", 7, 256, 64).is_none());
+        assert!(profile.nearest("lanes", 9, 1, 1).is_none());
+    }
+}

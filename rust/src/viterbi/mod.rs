@@ -16,7 +16,10 @@
 //!   registered here);
 //! * `streaming` — sliding-window decoder with path-metric carry (the
 //!   overlap-free single-lane ablation);
-//! * `hard` — hard-decision adapter over any soft engine (§II-C).
+//! * `hard` — hard-decision adapter over any soft engine (§II-C);
+//! * `auto` — calibration-driven adaptive dispatcher over the
+//!   bit-exact family (implemented in [`crate::tuner`], registered
+//!   here).
 //!
 //! A seventh engine, the PJRT-artifact-backed [`crate::runtime::PjrtEngine`],
 //! implements the same interface but lives in `runtime` because it is

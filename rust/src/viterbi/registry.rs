@@ -92,7 +92,9 @@ impl std::fmt::Debug for EngineSpec {
 
 /// All registered engines, in Table-I order: reference first, then the
 /// baselines, then the paper's proposal and its derived drivers (the
-/// thread-parallel grid analogue and the lane-batched warp analogues).
+/// thread-parallel grid analogue and the lane-batched warp analogues),
+/// and finally the adaptive dispatcher that routes among them
+/// (`crate::tuner`).
 pub fn registry() -> Vec<EngineSpec> {
     vec![
         super::scalar::engine_entry(),
@@ -103,6 +105,7 @@ pub fn registry() -> Vec<EngineSpec> {
         crate::lanes::engine::engine_entry_mt(),
         super::streaming::engine_entry(),
         super::hard::engine_entry(),
+        crate::tuner::auto::engine_entry(),
     ]
 }
 
@@ -130,7 +133,7 @@ mod tests {
             names,
             vec![
                 "scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "streaming",
-                "hard"
+                "hard", "auto"
             ]
         );
         let mut dedup = names.clone();
@@ -159,6 +162,10 @@ mod tests {
             let lw = (e.lane_width)(&params);
             if e.name.starts_with("lanes") {
                 assert_eq!(lw, params.lanes, "{}", e.name);
+            } else if e.name == "auto" {
+                // The dispatcher reports the lane width of whatever
+                // engine its planner picks for these params.
+                assert!(lw == 1 || lw == params.lanes, "{}: lane width {lw}", e.name);
             } else {
                 assert_eq!(lw, 1, "{}", e.name);
             }

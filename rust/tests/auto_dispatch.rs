@@ -1,0 +1,122 @@
+//! End-to-end adaptive dispatch through the decode service: a
+//! `DecodeServer` on `BackendSpec::Auto` (baseline calibration profile
+//! loaded) must route a uniform 64-frame batch through the SIMD lane
+//! route and a ragged single-frame batch through a per-frame route —
+//! verified by the `MetricsSnapshot` dispatch counters — while staying
+//! bit-exact with the requests' payloads.
+
+use std::path::Path;
+use std::time::Duration;
+
+use viterbi::channel::Rng64;
+use viterbi::code::{encode, CodeSpec, Termination};
+use viterbi::coordinator::{BackendSpec, BatchPolicy, DecodeServer, ServerConfig};
+use viterbi::frames::plan::FrameGeometry;
+use viterbi::viterbi::StreamEnd;
+
+fn baseline_profile() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../calibration/baseline.jsonl")
+}
+
+fn auto_server(max_batch: usize, wait_ms: u64) -> DecodeServer {
+    DecodeServer::start(ServerConfig {
+        backend: BackendSpec::Auto {
+            spec: CodeSpec::standard_k5(),
+            geo: FrameGeometry::new(32, 8, 12),
+            f0: 8,
+            threads: 4,
+            budget_bytes: None,
+            profile: Some(baseline_profile()),
+        },
+        batch: BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms) },
+        high_watermark: 4096,
+        low_watermark: 1024,
+    })
+    .unwrap()
+}
+
+fn noiseless_request(seed: u64, n: usize) -> (Vec<u8>, Vec<f32>) {
+    let spec = CodeSpec::standard_k5();
+    let mut rng = Rng64::seeded(seed);
+    let mut bits = vec![0u8; n];
+    rng.fill_bits(&mut bits);
+    let enc = encode(&spec, &bits, Termination::Truncated);
+    let llrs = enc.iter().map(|&b| if b == 0 { 3.0 } else { -3.0 }).collect();
+    (bits, llrs)
+}
+
+#[test]
+fn baseline_profile_is_checked_in_and_loadable() {
+    let path = baseline_profile();
+    assert!(path.is_file(), "missing {}", path.display());
+    let profile = viterbi::tuner::CalibrationProfile::read_jsonl(&path).unwrap();
+    assert!(!profile.is_empty());
+    // The baseline covers every dispatch candidate.
+    for engine in viterbi::tuner::DISPATCH_CANDIDATES {
+        assert!(
+            profile.records.iter().any(|r| r.engine == engine),
+            "baseline has no {engine} cells"
+        );
+    }
+}
+
+#[test]
+fn uniform_batch_takes_the_lane_route_and_ragged_a_frame_route() {
+    let server = auto_server(64, 30);
+    // One request that chunks into exactly 64 uniform frames: the
+    // batcher flushes a full 64-job batch, which the planner must send
+    // down the SIMD lane route.
+    let (bits, llrs) = noiseless_request(0xA07A, 64 * 32);
+    let resp = server.decode_blocking(llrs, StreamEnd::Truncated);
+    assert_eq!(resp.bits, bits);
+    assert_eq!(resp.frames, 64);
+    let m = server.metrics();
+    let lane_frames = m.dispatched("lanes") + m.dispatched("lanes-mt");
+    assert_eq!(
+        lane_frames, 64,
+        "uniform 64-frame batch must take a lane route: {:?}",
+        m.dispatch
+    );
+    // A single-frame request arrives alone (deadline flush): ragged
+    // work goes down a per-frame route, never the lane route.
+    let (bits1, llrs1) = noiseless_request(0xA07B, 20);
+    let resp1 = server.decode_blocking(llrs1, StreamEnd::Truncated);
+    assert_eq!(resp1.bits, bits1);
+    assert_eq!(resp1.frames, 1);
+    let m = server.metrics();
+    assert_eq!(
+        m.dispatched("lanes") + m.dispatched("lanes-mt"),
+        64,
+        "lane counters must not grow: {:?}",
+        m.dispatch
+    );
+    assert_eq!(
+        m.dispatched("unified") + m.dispatched("parallel"),
+        1,
+        "single frame must take a per-frame route: {:?}",
+        m.dispatch
+    );
+    assert!(server.backend_name().starts_with("auto:"), "{}", server.backend_name());
+}
+
+#[test]
+fn auto_server_survives_concurrent_mixed_traffic() {
+    let server = std::sync::Arc::new(auto_server(8, 1));
+    let mut handles = Vec::new();
+    for t in 0..6u64 {
+        let server = std::sync::Arc::clone(&server);
+        handles.push(std::thread::spawn(move || {
+            let (bits, llrs) = noiseless_request(0xC0 + t, 32 * (1 + t as usize * 3));
+            let resp = server.decode_blocking(llrs, StreamEnd::Truncated);
+            assert_eq!(resp.bits, bits, "stream {t}");
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = server.metrics();
+    assert_eq!(m.responses, 6);
+    // Every decoded frame was attributed to some route.
+    let routed: u64 = m.dispatch.iter().map(|(_, n)| *n).sum();
+    assert_eq!(routed, m.frames, "dispatch counters must cover all frames");
+}

@@ -38,7 +38,7 @@ fn every_registry_engine_roundtrips_k7_frame_error_free() {
     };
     let (bits, llrs, stages) = high_snr_workload(4096, 0x5140);
     let reg = registry();
-    assert_eq!(reg.len(), 8, "engine silently dropped from the registry");
+    assert_eq!(reg.len(), 9, "engine silently dropped from the registry");
     for entry in &reg {
         let engine = (entry.build)(&params);
         let out = engine.decode_stream(&llrs, stages, StreamEnd::Terminated);
@@ -61,6 +61,9 @@ fn registry_names_match_bench_cli_contract() {
     let names: Vec<&str> = registry().iter().map(|e| e.name).collect();
     assert_eq!(
         names,
-        ["scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "streaming", "hard"]
+        [
+            "scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "streaming",
+            "hard", "auto"
+        ]
     );
 }

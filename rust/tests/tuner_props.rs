@@ -1,0 +1,212 @@
+//! Tuner invariants: (1) the planner always returns a registered
+//! engine and respects its memory budget for arbitrary geometries,
+//! including K/frame shapes far outside any calibrated grid; (2) the
+//! `auto` engine is bit-exact with `unified` across K=5/7/9 for both
+//! terminated and truncated streams — adaptive dispatch is an
+//! execution-placement decision only, never an output change.
+
+use viterbi::channel::{bpsk, llr, AwgnChannel, Rng64};
+use viterbi::code::{encode, CodeSpec, Termination};
+use viterbi::frames::plan::FrameGeometry;
+use viterbi::tuner::{
+    CalibrationProfile, CalibrationRecord, JobShape, Planner, PlannerConfig,
+    DISPATCH_CANDIDATES,
+};
+use viterbi::util::check;
+use viterbi::viterbi::{registry, BuildParams, Engine as _, StreamEnd};
+
+fn gen_shape(rng: &mut Rng64) -> (JobShape, Option<usize>, usize) {
+    let shape = JobShape {
+        k: rng.gen_range_usize(3, 17) as u32,
+        frame_len: rng.gen_range_usize(1, 2048),
+        v1: rng.gen_range_usize(0, 48),
+        v2: rng.gen_range_usize(0, 64),
+        batch_frames: rng.gen_range_usize(1, 512),
+        uniform: rng.next_u64() & 1 == 0,
+    };
+    let budget = if rng.next_u64() & 1 == 0 {
+        Some(rng.gen_range_usize(1, 1 << 26))
+    } else {
+        None
+    };
+    let threads = rng.gen_range_usize(1, 9);
+    (shape, budget, threads)
+}
+
+fn assert_plan_invariants(planner: &Planner, shape: &JobShape, budget: Option<usize>) {
+    let choice = planner.plan(shape);
+    // (a) Always a registered engine, and one of the dispatch
+    // candidates (so it is bit-exact with `unified`).
+    assert!(
+        registry::find(choice.engine).is_some(),
+        "planner returned unregistered engine {:?}",
+        choice.engine
+    );
+    assert!(
+        DISPATCH_CANDIDATES.contains(&choice.engine),
+        "planner returned non-candidate {:?}",
+        choice.engine
+    );
+    // (b) Ragged shapes never get a lane engine.
+    if !shape.uniform {
+        assert!(
+            !choice.engine.starts_with("lanes"),
+            "ragged shape {shape:?} routed to {}",
+            choice.engine
+        );
+    }
+    // (c) The budget holds whenever it is satisfiable; otherwise the
+    // planner degrades to the smallest-footprint candidate.
+    if let Some(b) = budget {
+        let ranked = planner.rank(shape);
+        assert!(!ranked.is_empty());
+        if ranked.iter().any(|c| c.working_set_bytes <= b) {
+            assert!(
+                choice.working_set_bytes <= b,
+                "shape {shape:?}: picked {} at {} B over budget {b} B",
+                choice.engine,
+                choice.working_set_bytes
+            );
+        } else {
+            let min = ranked.iter().map(|c| c.working_set_bytes).min().unwrap();
+            assert_eq!(
+                choice.working_set_bytes, min,
+                "infeasible budget must degrade to the smallest candidate"
+            );
+        }
+    }
+}
+
+#[test]
+fn planner_returns_registered_engine_within_budget_for_arbitrary_shapes() {
+    check::forall(
+        "planner registry + budget invariants (heuristic)",
+        250,
+        0x7A9E_0001,
+        gen_shape,
+        |&(shape, budget, threads)| {
+            let cfg = PlannerConfig { threads, lanes: 64, f0: 32, budget_bytes: budget };
+            assert_plan_invariants(&Planner::heuristic(cfg), &shape, budget);
+        },
+    );
+}
+
+#[test]
+fn planner_invariants_hold_with_a_profile_loaded() {
+    // A small synthetic profile (deliberately not covering most query
+    // shapes — K up to 16, frames up to 2048 — so nearest-cell
+    // interpolation is exercised off-grid).
+    let rec = |engine: &str, k: u32, f: usize, b: usize, mbps: f64| CalibrationRecord {
+        engine: engine.into(),
+        k,
+        frame_len: f,
+        batch_frames: b,
+        lanes: if engine.starts_with("lanes") { b.min(64) } else { 1 },
+        threads: 4,
+        median_mbps: mbps,
+        working_set_bytes: 4096,
+        samples: 3,
+        seed: 7,
+    };
+    let profile = CalibrationProfile::new(vec![
+        rec("unified", 7, 256, 1, 30.0),
+        rec("parallel", 7, 256, 64, 90.0),
+        rec("lanes", 7, 256, 64, 150.0),
+        rec("lanes-mt", 7, 256, 64, 260.0),
+        rec("unified", 5, 64, 1, 95.0),
+        rec("lanes", 5, 64, 64, 500.0),
+    ]);
+    check::forall(
+        "planner registry + budget invariants (profile)",
+        250,
+        0x7A9E_0002,
+        gen_shape,
+        |&(shape, budget, threads)| {
+            let cfg = PlannerConfig { threads, lanes: 64, f0: 32, budget_bytes: budget };
+            let planner = Planner::with_profile(cfg, profile.clone());
+            assert_plan_invariants(&planner, &shape, budget);
+        },
+    );
+}
+
+fn noisy_workload(
+    spec: &CodeSpec,
+    n: usize,
+    ebn0: f64,
+    seed: u64,
+    term: Termination,
+) -> (Vec<f32>, usize) {
+    let mut rng = Rng64::seeded(seed);
+    let mut bits = vec![0u8; n];
+    rng.fill_bits(&mut bits);
+    let enc = encode(spec, &bits, term);
+    let stages = match term {
+        Termination::Terminated => n + (spec.k as usize - 1),
+        Termination::Truncated => n,
+    };
+    let ch = AwgnChannel::new(ebn0, spec.rate());
+    let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+    (llr::llrs_from_samples(&rx, ch.sigma()), stages)
+}
+
+#[test]
+fn auto_is_bit_exact_with_unified_across_k_and_termination() {
+    // The parity grid of the acceptance criteria: K=5/7/9 ×
+    // terminated/truncated, noisy channel, several frame batches per
+    // stream (so the dispatcher actually exercises batched routes).
+    for (spec, seed) in [
+        (CodeSpec::standard_k5(), 0x5A_u64),
+        (CodeSpec::standard_k7(), 0x7A_u64),
+        (CodeSpec::standard_k9(), 0x9A_u64),
+    ] {
+        for (term, end) in [
+            (Termination::Terminated, StreamEnd::Terminated),
+            (Termination::Truncated, StreamEnd::Truncated),
+        ] {
+            let (llrs, stages) = noisy_workload(&spec, 64 * 21 - 9, 3.0, seed, term);
+            let params = BuildParams {
+                spec: spec.clone(),
+                geo: FrameGeometry::new(64, 12, 20),
+                f0: 16,
+                threads: 4,
+                delay: 96,
+                lanes: 8,
+                stream_stages: stages,
+            };
+            let auto = (registry::find("auto").unwrap().build)(&params);
+            let unified = (registry::find("unified").unwrap().build)(&params);
+            let a = auto.decode_stream(&llrs, stages, end);
+            let u = unified.decode_stream(&llrs, stages, end);
+            assert_eq!(
+                a,
+                u,
+                "auto ({}) diverged from unified at K={} {:?}",
+                auto.name(),
+                spec.k,
+                term
+            );
+        }
+    }
+}
+
+#[test]
+fn auto_single_frame_stream_matches_unified_too() {
+    // The unified-route end of the dispatch spectrum.
+    let spec = CodeSpec::standard_k7();
+    let (llrs, stages) = noisy_workload(&spec, 50, 4.0, 0x51, Termination::Truncated);
+    let params = BuildParams {
+        spec: spec.clone(),
+        geo: FrameGeometry::new(64, 12, 20),
+        f0: 16,
+        threads: 4,
+        delay: 96,
+        lanes: 8,
+        stream_stages: stages,
+    };
+    let auto = (registry::find("auto").unwrap().build)(&params);
+    let unified = (registry::find("unified").unwrap().build)(&params);
+    assert_eq!(
+        auto.decode_stream(&llrs, stages, StreamEnd::Truncated),
+        unified.decode_stream(&llrs, stages, StreamEnd::Truncated)
+    );
+}

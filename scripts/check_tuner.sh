@@ -1,0 +1,66 @@
+#!/usr/bin/env bash
+# CI gate for the adaptive dispatcher (CI "tune-smoke" job): the
+# BENCH_auto.json emitted by
+#   viterbi-repro bench --engines auto,unified,parallel,lanes,lanes-mt ...
+# must contain an `auto` record, and on every measured frame geometry
+# the auto median throughput must not fall below the *worst* single
+# engine it can dispatch to — an adaptive dispatcher that loses to its
+# own worst candidate means the planner is routing pathologically (or
+# dispatch overhead has exploded).
+set -euo pipefail
+
+file="${1:-BENCH_auto.json}"
+if [ ! -s "$file" ]; then
+    echo "FAIL: $file missing or empty"
+    exit 1
+fi
+
+python3 - "$file" <<'EOF'
+import json
+import sys
+
+path = sys.argv[1]
+records = []
+with open(path) as f:
+    for line in f:
+        line = line.strip()
+        if line:
+            records.append(json.loads(line))
+
+by_engine = {}
+for r in records:
+    by_engine.setdefault(r["engine"], []).append(r)
+
+if "auto" not in by_engine:
+    print("FAIL: no `auto` record in", path)
+    sys.exit(1)
+
+# The bit-exact family the planner dispatches among
+# (tuner::DISPATCH_CANDIDATES).
+candidates = ["unified", "parallel", "lanes", "lanes-mt"]
+fail = False
+for auto_rec in by_engine["auto"]:
+    peers = [
+        r
+        for e in candidates
+        for r in by_engine.get(e, [])
+        if r["frame_len"] == auto_rec["frame_len"]
+        and r["batch_frames"] == auto_rec["batch_frames"]
+    ]
+    if not peers:
+        print("FAIL: no candidate records on frame_len", auto_rec["frame_len"])
+        fail = True
+        continue
+    worst = min(p["median_mbps"] for p in peers)
+    auto_mbps = auto_rec["median_mbps"]
+    verdict = "OK" if auto_mbps >= worst else "FAIL"
+    print(
+        f"{verdict}: f={auto_rec['frame_len']} auto {auto_mbps:.1f} Mb/s "
+        f"vs worst dispatch candidate {worst:.1f} Mb/s"
+    )
+    if auto_mbps < worst:
+        fail = True
+
+sys.exit(1 if fail else 0)
+EOF
+echo "tuner bench OK"
