@@ -6,7 +6,9 @@ use viterbi::channel::Rng64;
 use viterbi::code::CodeSpec;
 use viterbi::frames::plan::FrameGeometry;
 use viterbi::util::threadpool::ThreadPool;
-use viterbi::viterbi::{Engine, ParallelEngine, StreamEnd, TiledEngine, TracebackMode};
+use viterbi::viterbi::{
+    DecodeRequest, Engine, ParallelEngine, StreamEnd, TiledEngine, TracebackMode,
+};
 fn main() {
     let bits = 1usize << 20;
     let mut rng = Rng64::seeded(1);
@@ -16,15 +18,17 @@ fn main() {
     for threads in [1usize, 4, 16] {
         let pool = Arc::new(ThreadPool::new(threads));
         let engine = ParallelEngine::new(TiledEngine::new(spec.clone(), geo, TracebackMode::FrameSerial), pool);
-        let _ = engine.decode_stream(&llrs, bits, StreamEnd::Truncated);
+        let req = DecodeRequest::hard(&llrs, bits, StreamEnd::Truncated);
+        let _ = engine.decode(&req).unwrap();
         let t0 = std::time::Instant::now();
-        for _ in 0..3 { std::hint::black_box(engine.decode_stream(&llrs, bits, StreamEnd::Truncated)); }
+        for _ in 0..3 { std::hint::black_box(engine.decode(&req).unwrap()); }
         let dt = t0.elapsed().as_secs_f64();
         println!("threads={threads}: {:.1} Mb/s", 3.0*bits as f64/dt/1e6);
     }
     // single-thread sequential engine for reference
     let eng = TiledEngine::new(spec.clone(), geo, TracebackMode::FrameSerial);
     let t0 = std::time::Instant::now();
-    std::hint::black_box(eng.decode_stream(&llrs, bits, StreamEnd::Truncated));
+    let req = DecodeRequest::hard(&llrs, bits, StreamEnd::Truncated);
+    std::hint::black_box(eng.decode(&req).unwrap());
     println!("sequential TiledEngine: {:.1} Mb/s", bits as f64/t0.elapsed().as_secs_f64()/1e6);
 }

@@ -12,7 +12,7 @@ use viterbi::code::{
 };
 use viterbi::frames::plan::FrameGeometry;
 use viterbi::util::bits::count_bit_errors;
-use viterbi::viterbi::{Engine, StreamEnd, TiledEngine, TracebackMode};
+use viterbi::viterbi::{DecodeRequest, Engine, StreamEnd, TiledEngine, TracebackMode};
 
 fn main() {
     let spec = CodeSpec::standard_k7();
@@ -44,7 +44,10 @@ fn main() {
         let rx = ch.transmit(&bpsk::modulate(&tx_bits), &mut rng);
         let rx_llrs = llr::llrs_from_samples(&rx, ch.sigma());
         let full = depuncture_llrs(&rx_llrs, 2, &pat, stages);
-        let out = engine.decode_stream(&full, stages, StreamEnd::Terminated);
+        let out = engine
+            .decode(&DecodeRequest::hard(&full, stages, StreamEnd::Terminated))
+            .expect("decode")
+            .bits;
         let errors = count_bit_errors(&out[..n], &msg);
         println!(
             "{:>6} {:>12} {:>12} {:>10.2e}",

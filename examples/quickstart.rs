@@ -10,7 +10,8 @@ use viterbi::code::{encode, CodeSpec, Termination};
 use viterbi::frames::plan::FrameGeometry;
 use viterbi::util::bits::count_bit_errors;
 use viterbi::viterbi::{
-    Engine, ParallelTraceback, StartPolicy, StreamEnd, TiledEngine, TracebackMode,
+    DecodeRequest, Engine, ParallelTraceback, StartPolicy, StreamEnd, TiledEngine,
+    TracebackMode,
 };
 
 fn main() {
@@ -38,9 +39,12 @@ fn main() {
         TracebackMode::Parallel(ParallelTraceback::new(32, 45, StartPolicy::StoredArgmax)),
     );
     let stages = message.len() + (spec.k - 1) as usize;
-    let decoded = engine.decode_stream(&llrs, stages, StreamEnd::Terminated);
+    let output = engine
+        .decode(&DecodeRequest::soft(&llrs, stages, StreamEnd::Terminated))
+        .expect("well-formed request");
+    let decoded = &output.bits;
 
-    // 5. Compare.
+    // 5. Compare — and peek at the SOVA reliabilities that came along.
     let errors = count_bit_errors(&decoded[..message.len()], &message);
     println!(
         "decoded with {}: {} bit errors out of {} (BER {:.2e})",
@@ -48,6 +52,13 @@ fn main() {
         errors,
         message.len(),
         errors as f64 / message.len() as f64
+    );
+    let soft = output.soft.as_ref().expect("soft output requested");
+    let mut ranked: Vec<usize> = (0..message.len()).collect();
+    ranked.sort_by(|&a, &b| soft[a].abs().partial_cmp(&soft[b].abs()).unwrap());
+    println!(
+        "least-confident bits (SOVA): {:?} — errors cluster here",
+        &ranked[..5]
     );
     assert!(errors < 50, "unexpectedly high error count");
     println!("quickstart OK");

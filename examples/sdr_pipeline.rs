@@ -86,7 +86,9 @@ fn main() -> anyhow::Result<()> {
             let mut i = c;
             while i < workload.len() {
                 let (msg, llrs) = &workload[i];
-                let resp = server.decode_blocking(llrs.clone(), StreamEnd::Truncated);
+                let resp = server
+                    .decode_blocking(llrs.clone(), StreamEnd::Truncated)
+                    .expect("decode");
                 errors += count_bit_errors(&resp.bits[..msg.len()], msg);
                 bits += msg.len();
                 i += CLIENTS;

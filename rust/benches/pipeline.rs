@@ -55,7 +55,7 @@ fn bench_backend(name: &str, backend: BackendSpec, streams: usize, bits: usize, 
             .map(|llrs| server.submit(llrs.clone(), StreamEnd::Truncated))
             .collect();
         for id in ids {
-            let resp = server.wait(id);
+            let resp = server.wait(id).expect("decode");
             std::hint::black_box(&resp.bits);
         }
     });

@@ -16,7 +16,9 @@ use viterbi::code::CodeSpec;
 use viterbi::frames::plan::FrameGeometry;
 use viterbi::memmodel::{GpuParams, OccupancyModel};
 use viterbi::util::threadpool::ThreadPool;
-use viterbi::viterbi::{Engine, ParallelEngine, StreamEnd, TiledEngine, TracebackMode};
+use viterbi::viterbi::{
+    DecodeRequest, Engine, ParallelEngine, StreamEnd, TiledEngine, TracebackMode,
+};
 
 fn main() {
     let args = harness::parse_args();
@@ -50,7 +52,9 @@ fn main() {
                 Arc::clone(&pool),
             );
             let r = harness::bench(&name, samples, 1, || {
-                let out = engine.decode_stream(&llrs, stream_bits, StreamEnd::Truncated);
+                let out = engine
+                    .decode(&DecodeRequest::hard(&llrs, stream_bits, StreamEnd::Truncated))
+                    .expect("decode");
                 std::hint::black_box(&out);
             });
             r.report(Some((stream_bits as f64, "Gb/s")));

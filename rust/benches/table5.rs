@@ -15,8 +15,8 @@ use viterbi::frames::plan::FrameGeometry;
 use viterbi::memmodel::{GpuParams, OccupancyModel};
 use viterbi::util::threadpool::ThreadPool;
 use viterbi::viterbi::{
-    Engine, ParallelEngine, ParallelTraceback, StartPolicy, StreamEnd, TiledEngine,
-    TracebackMode,
+    DecodeRequest, Engine, ParallelEngine, ParallelTraceback, StartPolicy, StreamEnd,
+    TiledEngine, TracebackMode,
 };
 
 fn main() {
@@ -55,7 +55,9 @@ fn main() {
             let engine =
                 ParallelEngine::new(TiledEngine::new(spec.clone(), geo, mode), Arc::clone(&pool));
             let r = harness::bench(&name, samples, 1, || {
-                let out = engine.decode_stream(&llrs, stream_bits, StreamEnd::Truncated);
+                let out = engine
+                    .decode(&DecodeRequest::hard(&llrs, stream_bits, StreamEnd::Truncated))
+                    .expect("decode");
                 std::hint::black_box(&out);
             });
             r.report(Some((stream_bits as f64, "Gb/s")));

@@ -16,7 +16,7 @@ use crate::code::CodeSpec;
 use crate::frames::plan::FrameGeometry;
 use crate::util::stats::{median, Summary};
 use crate::viterbi::registry::{self, BuildParams, EngineSpec};
-use crate::viterbi::{Engine as _, StreamEnd};
+use crate::viterbi::{DecodeRequest, Engine as _, StreamEnd};
 use super::measurement::Measurement;
 use super::scenario::Scenario;
 
@@ -96,13 +96,14 @@ pub fn run_scenario(entry: &EngineSpec, sc: &Scenario, opts: &BenchOptions) -> M
         .map(|_| (rng.uniform() as f32 - 0.5) * 8.0)
         .collect();
 
+    let req = DecodeRequest::hard(&llrs, stages, StreamEnd::Truncated);
     for _ in 0..opts.warmup {
-        std::hint::black_box(engine.decode_stream(&llrs, stages, StreamEnd::Truncated));
+        std::hint::black_box(engine.decode(&req).expect("bench decode"));
     }
     let mut mbps = Vec::with_capacity(opts.samples);
     for _ in 0..opts.samples {
         let t0 = Instant::now();
-        let out = engine.decode_stream(&llrs, stages, StreamEnd::Truncated);
+        let out = engine.decode(&req).expect("bench decode");
         let dt = t0.elapsed().as_secs_f64();
         std::hint::black_box(&out);
         mbps.push(stages as f64 / dt / 1e6);

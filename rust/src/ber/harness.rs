@@ -9,7 +9,7 @@ use std::sync::{Arc, Mutex};
 use crate::channel::{bpsk, llr, AwgnChannel, Rng64};
 use crate::code::{encode, depuncture_llrs, puncture, CodeSpec, PuncturePattern, Termination};
 use crate::util::threadpool::ThreadPool;
-use crate::viterbi::{Engine, StreamEnd};
+use crate::viterbi::{DecodeError, DecodeRequest, Engine, StreamEnd};
 
 /// One BER measurement point.
 #[derive(Debug, Clone, Copy)]
@@ -77,7 +77,10 @@ fn run_block(
         None => std::mem::take(&mut scratch.llrs),
     };
 
-    let out = engine.decode_stream(&llrs_full, stages, StreamEnd::Terminated);
+    let out = engine
+        .decode(&DecodeRequest::hard(&llrs_full, stages, StreamEnd::Terminated))
+        .expect("BER harness produced a malformed request")
+        .bits;
     if cfg.puncture.is_none() {
         scratch.llrs = llrs_full; // give the buffer back
     }
@@ -175,6 +178,102 @@ pub fn measure_point_parallel(
     }
 }
 
+/// Confidence-split BER at one Eb/N0 point (SOVA validation).
+///
+/// Decodes with [`crate::viterbi::OutputMode::Soft`] and accumulates
+/// bit errors separately for bits whose reliability `|soft|` is above
+/// vs below each block's median. A genuine soft output must
+/// concentrate the errors in the low-confidence half — the check the
+/// CI `soft-smoke` gate and `rust/tests/engine_api.rs` enforce.
+#[derive(Debug, Clone, Copy)]
+pub struct SoftSplitPoint {
+    /// Operating point in dB.
+    pub ebn0_db: f64,
+    /// BER over bits with `|soft|` ≥ the block median.
+    pub high_conf_ber: f64,
+    /// BER over bits with `|soft|` < the block median.
+    pub low_conf_ber: f64,
+    /// Errors / bits in the high-confidence half.
+    pub high_errors: u64,
+    /// Bits tested in the high-confidence half.
+    pub high_bits: u64,
+    /// Errors in the low-confidence half.
+    pub low_errors: u64,
+    /// Bits tested in the low-confidence half.
+    pub low_bits: u64,
+    /// True when enough total errors were seen for the split to mean
+    /// something (same rule as [`BerPoint::reliable`]).
+    pub reliable: bool,
+}
+
+impl SoftSplitPoint {
+    /// The property SOVA must deliver: strictly fewer errors per bit
+    /// among the bits it calls confident.
+    pub fn separates(&self) -> bool {
+        self.low_errors > 0 && self.high_conf_ber < self.low_conf_ber
+    }
+}
+
+/// Measure a [`SoftSplitPoint`] for `engine` at `ebn0_db`. Fails fast
+/// with the engine's [`DecodeError`] when it cannot produce soft
+/// output. Puncturing in `cfg` is honored.
+pub fn measure_soft_split(
+    spec: &CodeSpec,
+    engine: &dyn Engine,
+    cfg: &BerConfig,
+    ebn0_db: f64,
+) -> Result<SoftSplitPoint, DecodeError> {
+    let rate = effective_rate(spec, cfg);
+    let ch = AwgnChannel::new(ebn0_db, rate);
+    let mut rng = Rng64::seeded(cfg.seed ^ (ebn0_db * 1000.0) as u64 ^ 0x50F7);
+    let n = cfg.block_bits;
+    let stages = n + (spec.k - 1) as usize;
+    let (mut he, mut hb, mut le, mut lb) = (0u64, 0u64, 0u64, 0u64);
+    let mut msg = vec![0u8; n];
+    let mut sorted = vec![0f32; n];
+    while he + le < cfg.target_errors && hb + lb < cfg.max_bits {
+        rng.fill_bits(&mut msg);
+        let coded = encode(spec, &msg, Termination::Terminated);
+        let tx_bits = match &cfg.puncture {
+            Some(p) => puncture(&coded, spec.beta as usize, p),
+            None => coded,
+        };
+        let rx = ch.transmit(&bpsk::modulate(&tx_bits), &mut rng);
+        let rx_llrs = llr::llrs_from_samples(&rx, ch.sigma());
+        let llrs_full = match &cfg.puncture {
+            Some(p) => depuncture_llrs(&rx_llrs, spec.beta as usize, p, stages),
+            None => rx_llrs,
+        };
+        let out = engine.decode(&DecodeRequest::soft(&llrs_full, stages, StreamEnd::Terminated))?;
+        let soft = out.soft.expect("soft requested but engine returned none");
+        for (dst, s) in sorted.iter_mut().zip(&soft[..n]) {
+            *dst = s.abs();
+        }
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("reliabilities are not NaN"));
+        let median = sorted[n / 2];
+        for t in 0..n {
+            let err = (out.bits[t] != msg[t]) as u64;
+            if soft[t].abs() >= median {
+                hb += 1;
+                he += err;
+            } else {
+                lb += 1;
+                le += err;
+            }
+        }
+    }
+    Ok(SoftSplitPoint {
+        ebn0_db,
+        high_conf_ber: he as f64 / hb.max(1) as f64,
+        low_conf_ber: le as f64 / lb.max(1) as f64,
+        high_errors: he,
+        high_bits: hb,
+        low_errors: le,
+        low_bits: lb,
+        reliable: he + le >= cfg.target_errors.min(100),
+    })
+}
+
 /// Sweep a range of Eb/N0 values (a BER waterfall curve).
 pub fn sweep(
     spec: &CodeSpec,
@@ -248,6 +347,36 @@ mod tests {
         // other is a loose but meaningful agreement check.
         let ratio = p.ber / s.ber;
         assert!(ratio > 1.0 / 3.0 && ratio < 3.0, "parallel {} vs serial {}", p.ber, s.ber);
+    }
+
+    #[test]
+    fn soft_split_separates_errors_for_scalar() {
+        // At 3 dB the SOVA reliabilities must concentrate errors in
+        // the low-confidence half (the acceptance bar for soft output).
+        let spec = CodeSpec::standard_k7();
+        let engine = ScalarEngine::new(spec.clone());
+        let cfg = BerConfig {
+            block_bits: 8192,
+            target_errors: 60,
+            max_bits: 600_000,
+            seed: 0xABCE,
+            puncture: None,
+        };
+        let p = measure_soft_split(&spec, &engine, &cfg, 3.0).unwrap();
+        assert!(p.reliable, "{p:?}");
+        assert!(p.separates(), "{p:?}");
+        assert!(
+            p.high_conf_ber * 2.0 < p.low_conf_ber,
+            "confidence split too weak: {p:?}"
+        );
+    }
+
+    #[test]
+    fn soft_split_propagates_unsupported_output() {
+        let spec = CodeSpec::standard_k7();
+        let engine = crate::viterbi::HardEngine::new(ScalarEngine::new(spec.clone()));
+        let err = measure_soft_split(&spec, &engine, &quick_cfg(), 3.0).unwrap_err();
+        assert!(matches!(err, DecodeError::UnsupportedOutput { .. }), "{err}");
     }
 
     #[test]

@@ -6,7 +6,10 @@ pub mod harness;
 pub mod metric;
 pub mod theory;
 
-pub use harness::{measure_point, measure_point_parallel, sweep, BerConfig, BerPoint};
+pub use harness::{
+    measure_point, measure_point_parallel, measure_soft_split, sweep, BerConfig, BerPoint,
+    SoftSplitPoint,
+};
 pub use metric::{ebn0_at_ber, ebn0_distance_db, theoretical_ebn0_at_ber};
 pub use theory::{
     hard_viterbi_ber, q_function, soft_viterbi_ber, uncoded_bpsk_ber, DistanceSpectrum,

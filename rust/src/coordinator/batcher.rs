@@ -132,6 +132,7 @@ mod tests {
             frame_index: idx,
             llr_block: Vec::new(),
             pin_state0: idx == 0,
+            output: crate::viterbi::OutputMode::Hard,
             submitted_at: at,
         }
     }

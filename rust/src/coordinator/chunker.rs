@@ -60,6 +60,7 @@ impl Chunker {
                 frame_index: i,
                 llr_block: self.frame_block(&req.llrs, req.stages, i),
                 pin_state0: i == 0,
+                output: req.output,
                 submitted_at: req.submitted_at,
             })
             .collect()

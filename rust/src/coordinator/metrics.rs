@@ -20,6 +20,7 @@ struct Inner {
     batches: u64,
     decoded_bits: u64,
     rejected: u64,
+    errors: u64,
     batch_occupancy: Summary,
     request_latency: LatencyHistogram,
     batch_exec: Summary,
@@ -41,6 +42,9 @@ pub struct MetricsSnapshot {
     pub decoded_bits: u64,
     /// Requests rejected by backpressure.
     pub rejected: u64,
+    /// Requests completed with a `DecodeError` (validation failures
+    /// surfaced at submit, or backend batch failures).
+    pub errors: u64,
     /// Mean batch fill fraction (jobs / bucket size).
     pub mean_batch_occupancy: f64,
     /// Median end-to-end request latency.
@@ -69,6 +73,11 @@ impl Metrics {
     /// Count one backpressure rejection.
     pub fn on_reject(&self) {
         self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// Count one request completed with a decode error.
+    pub fn on_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
     }
 
     /// Record one executed batch of `jobs` jobs in a `bucket`-sized
@@ -107,6 +116,7 @@ impl Metrics {
             batches: m.batches,
             decoded_bits: m.decoded_bits,
             rejected: m.rejected,
+            errors: m.errors,
             mean_batch_occupancy: m.batch_occupancy.mean(),
             p50_latency: Duration::from_nanos(m.request_latency.quantile_ns(0.5)),
             p99_latency: Duration::from_nanos(m.request_latency.quantile_ns(0.99)),
@@ -132,11 +142,12 @@ impl MetricsSnapshot {
     /// One-line human-readable summary.
     pub fn render(&self) -> String {
         let mut line = format!(
-            "req={} resp={} rej={} frames={} batches={} bits={} occ={:.2} \
+            "req={} resp={} rej={} err={} frames={} batches={} bits={} occ={:.2} \
              p50={:?} p99={:?} exec={:?}",
             self.requests,
             self.responses,
             self.rejected,
+            self.errors,
             self.frames,
             self.batches,
             self.decoded_bits,

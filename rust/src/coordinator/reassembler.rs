@@ -8,6 +8,8 @@ use super::request::{DecodeResponse, FrameResult, RequestId};
 /// Book-keeping for one in-flight request.
 struct Pending {
     bits: Vec<u8>,
+    /// Per-bit soft values, allocated iff the request asked for them.
+    soft: Option<Vec<f32>>,
     /// Total frames expected.
     frames: usize,
     /// Frames received so far.
@@ -23,15 +25,20 @@ struct Pending {
 #[derive(Default)]
 pub struct Reassembler {
     pending: HashMap<RequestId, Pending>,
+    /// Requests failed mid-flight (backend batch error) → frames still
+    /// expected to arrive; late frames for these are absorbed silently
+    /// and the entry is dropped when the count reaches zero.
+    failed: HashMap<RequestId, usize>,
 }
 
 impl Reassembler {
     /// Fresh reassembler with no in-flight requests.
     pub fn new() -> Self {
-        Reassembler { pending: HashMap::new() }
+        Reassembler::default()
     }
 
-    /// Register a request before its frames are submitted.
+    /// Register a request before its frames are submitted. `soft`
+    /// reserves the per-bit reliability buffer.
     pub fn expect(
         &mut self,
         id: RequestId,
@@ -39,11 +46,13 @@ impl Reassembler {
         stages: usize,
         f: usize,
         submitted_at: std::time::Instant,
+        soft: bool,
     ) {
         let prev = self.pending.insert(
             id,
             Pending {
                 bits: vec![0u8; frames * f],
+                soft: if soft { Some(vec![0f32; frames * f]) } else { None },
                 frames,
                 received: 0,
                 stages,
@@ -59,9 +68,44 @@ impl Reassembler {
         self.pending.len()
     }
 
+    /// Drop a pending request whose batch failed. `frames_in_batch` is
+    /// how many of the request's frames were in the failed batch —
+    /// those produced no results and must not be waited for; only
+    /// frames still in flight in *other* batches are absorbed by later
+    /// [`accept`](Self::accept) calls. Returns true when this call
+    /// transitioned the request to failed (the caller completes it
+    /// with the error exactly once); false when the id was already
+    /// completed or already failed (a second batch of an
+    /// already-failed request — its frame count is still deducted so
+    /// the absorption bookkeeping drains).
+    pub fn fail(&mut self, id: RequestId, frames_in_batch: usize) -> bool {
+        if let Some(p) = self.pending.remove(&id) {
+            let remaining = (p.frames - p.received).saturating_sub(frames_in_batch);
+            if remaining > 0 {
+                self.failed.insert(id, remaining);
+            }
+            true
+        } else if let Some(rem) = self.failed.get_mut(&id) {
+            *rem = rem.saturating_sub(frames_in_batch);
+            if *rem == 0 {
+                self.failed.remove(&id);
+            }
+            false
+        } else {
+            false
+        }
+    }
+
     /// Accept one frame result; returns the finished response when this
     /// was the request's last outstanding frame.
     pub fn accept(&mut self, fr: FrameResult) -> Option<DecodeResponse> {
+        if let Some(remaining) = self.failed.get_mut(&fr.request_id) {
+            *remaining -= 1;
+            if *remaining == 0 {
+                self.failed.remove(&fr.request_id);
+            }
+            return None;
+        }
         let p = self
             .pending
             .get_mut(&fr.request_id)
@@ -70,6 +114,11 @@ impl Reassembler {
         assert!(fr.bits.len() >= p.f, "short frame result");
         let off = fr.frame_index * p.f;
         p.bits[off..off + p.f].copy_from_slice(&fr.bits[..p.f]);
+        if let Some(buf) = p.soft.as_mut() {
+            let s = fr.soft.as_ref().expect("soft request got a hard frame result");
+            assert!(s.len() >= p.f, "short soft frame result");
+            buf[off..off + p.f].copy_from_slice(&s[..p.f]);
+        }
         p.received += 1;
         if p.received < p.frames {
             return None;
@@ -77,9 +126,14 @@ impl Reassembler {
         let p = self.pending.remove(&fr.request_id).unwrap();
         let mut bits = p.bits;
         bits.truncate(p.stages);
+        let soft = p.soft.map(|mut s| {
+            s.truncate(p.stages);
+            s
+        });
         Some(DecodeResponse {
             id: fr.request_id,
             bits,
+            soft,
             latency_ns: p.submitted_at.elapsed().as_nanos() as u64,
             frames: p.frames,
         })
@@ -92,13 +146,22 @@ mod tests {
     use std::time::Instant;
 
     fn fr(id: RequestId, idx: usize, fill: u8, f: usize) -> FrameResult {
-        FrameResult { request_id: id, frame_index: idx, bits: vec![fill; f] }
+        FrameResult { request_id: id, frame_index: idx, bits: vec![fill; f], soft: None }
+    }
+
+    fn fr_soft(id: RequestId, idx: usize, fill: u8, f: usize) -> FrameResult {
+        FrameResult {
+            request_id: id,
+            frame_index: idx,
+            bits: vec![fill; f],
+            soft: Some(vec![fill as f32 + 0.5; f]),
+        }
     }
 
     #[test]
     fn completes_after_all_frames() {
         let mut r = Reassembler::new();
-        r.expect(1, 3, 70, 32, Instant::now());
+        r.expect(1, 3, 70, 32, Instant::now(), false);
         assert!(r.accept(fr(1, 0, 0, 32)).is_none());
         assert!(r.accept(fr(1, 2, 2, 32)).is_none());
         let resp = r.accept(fr(1, 1, 1, 32)).expect("complete");
@@ -107,20 +170,70 @@ mod tests {
         assert_eq!(&resp.bits[32..64], &[1u8; 32][..]);
         assert_eq!(&resp.bits[64..70], &[2u8; 6][..]);
         assert_eq!(resp.frames, 3);
+        assert!(resp.soft.is_none());
         assert_eq!(r.in_flight(), 0);
+    }
+
+    #[test]
+    fn soft_buffers_stitch_and_truncate() {
+        let mut r = Reassembler::new();
+        r.expect(1, 2, 40, 32, Instant::now(), true);
+        assert!(r.accept(fr_soft(1, 1, 9, 32)).is_none());
+        let resp = r.accept(fr_soft(1, 0, 3, 32)).expect("complete");
+        let soft = resp.soft.expect("soft requested");
+        assert_eq!(soft.len(), 40);
+        assert!(soft[..32].iter().all(|&x| x == 3.5));
+        assert!(soft[32..].iter().all(|&x| x == 9.5));
     }
 
     #[test]
     fn out_of_order_and_interleaved_requests() {
         let mut r = Reassembler::new();
-        r.expect(1, 2, 64, 32, Instant::now());
-        r.expect(2, 1, 20, 32, Instant::now());
+        r.expect(1, 2, 64, 32, Instant::now(), false);
+        r.expect(2, 1, 20, 32, Instant::now(), false);
         assert!(r.accept(fr(1, 1, 9, 32)).is_none());
         let resp2 = r.accept(fr(2, 0, 5, 32)).expect("req 2 done");
         assert_eq!(resp2.bits, vec![5u8; 20]);
         let resp1 = r.accept(fr(1, 0, 3, 32)).expect("req 1 done");
         assert_eq!(&resp1.bits[..32], &[3u8; 32][..]);
         assert_eq!(&resp1.bits[32..], &[9u8; 32][..]);
+    }
+
+    #[test]
+    fn failed_request_absorbs_late_frames() {
+        let mut r = Reassembler::new();
+        r.expect(1, 4, 128, 32, Instant::now(), false);
+        assert!(r.accept(fr(1, 0, 0, 32)).is_none());
+        // A batch holding one of the request's frames fails: that
+        // frame will never arrive; two others are still in flight.
+        assert!(r.fail(1, 1));
+        assert_eq!(r.in_flight(), 0);
+        // The two genuinely outstanding frames arrive late and are
+        // absorbed; the bookkeeping then drains completely.
+        assert!(r.accept(fr(1, 1, 1, 32)).is_none());
+        assert!(r.accept(fr(1, 2, 2, 32)).is_none());
+        assert!(r.failed.is_empty(), "absorption bookkeeping drained");
+    }
+
+    #[test]
+    fn whole_request_in_one_failed_batch_leaves_no_state() {
+        let mut r = Reassembler::new();
+        r.expect(7, 3, 96, 32, Instant::now(), false);
+        // All three frames were in the failed batch: nothing is ever
+        // coming, so no absorption entry may linger.
+        assert!(r.fail(7, 3));
+        assert!(r.failed.is_empty(), "no leaked absorption entry");
+        assert_eq!(r.in_flight(), 0);
+    }
+
+    #[test]
+    fn second_failed_batch_of_same_request_drains_bookkeeping() {
+        let mut r = Reassembler::new();
+        r.expect(3, 4, 128, 32, Instant::now(), false);
+        // Frames split 2 + 2 across two batches; both batches fail.
+        assert!(r.fail(3, 2));
+        assert!(!r.fail(3, 2), "already failed: caller completes only once");
+        assert!(r.failed.is_empty(), "both batches' frames accounted for");
     }
 
     #[test]
@@ -134,7 +247,7 @@ mod tests {
     #[should_panic(expected = "duplicate request id")]
     fn rejects_duplicate_expect() {
         let mut r = Reassembler::new();
-        r.expect(1, 1, 8, 8, Instant::now());
-        r.expect(1, 1, 8, 8, Instant::now());
+        r.expect(1, 1, 8, 8, Instant::now(), false);
+        r.expect(1, 1, 8, 8, Instant::now(), false);
     }
 }

@@ -2,7 +2,7 @@
 
 use std::time::Instant;
 
-use crate::viterbi::StreamEnd;
+use crate::viterbi::{OutputMode, StreamEnd};
 
 /// Monotonically increasing request identifier.
 pub type RequestId = u64;
@@ -18,16 +18,29 @@ pub struct DecodeRequest {
     pub stages: usize,
     /// How the stream ends (fixes the final traceback start).
     pub end: StreamEnd,
+    /// Hard bits only, or bits plus per-bit SOVA reliabilities.
+    pub output: OutputMode,
     /// Submission timestamp (set by the server).
     pub submitted_at: Instant,
 }
 
 impl DecodeRequest {
-    /// Build a request, deriving the stage count from `beta`.
+    /// Build a hard-output request, deriving the stage count from `beta`.
     pub fn new(id: RequestId, llrs: Vec<f32>, beta: usize, end: StreamEnd) -> Self {
+        Self::with_output(id, llrs, beta, end, OutputMode::Hard)
+    }
+
+    /// Build a request with an explicit output mode.
+    pub fn with_output(
+        id: RequestId,
+        llrs: Vec<f32>,
+        beta: usize,
+        end: StreamEnd,
+        output: OutputMode,
+    ) -> Self {
         assert_eq!(llrs.len() % beta, 0, "LLR length not a multiple of beta");
         let stages = llrs.len() / beta;
-        DecodeRequest { id, llrs, stages, end, submitted_at: Instant::now() }
+        DecodeRequest { id, llrs, stages, end, output, submitted_at: Instant::now() }
     }
 }
 
@@ -38,6 +51,10 @@ pub struct DecodeResponse {
     pub id: RequestId,
     /// Decoded bits, one per trellis stage of the request.
     pub bits: Vec<u8>,
+    /// Per-bit signed soft values (`Some` iff the request asked for
+    /// [`OutputMode::Soft`]); same convention as
+    /// `viterbi::DecodeOutput::soft`.
+    pub soft: Option<Vec<f32>>,
     /// End-to-end latency in nanoseconds.
     pub latency_ns: u64,
     /// Number of frames the stream was split into.
@@ -55,6 +72,9 @@ pub struct FrameJob {
     pub llr_block: Vec<f32>,
     /// Pin the initial path metric to state 0 (stream head).
     pub pin_state0: bool,
+    /// The owning request's output mode (soft frames route to the
+    /// SOVA per-frame path in the backend).
+    pub output: OutputMode,
     /// Submission time of the owning request (for deadline batching).
     pub submitted_at: Instant,
 }
@@ -69,4 +89,7 @@ pub struct FrameResult {
     /// f decoded bits (possibly over-length for the tail frame; the
     /// reassembler truncates).
     pub bits: Vec<u8>,
+    /// Per-bit signed soft values for the frame's decoded stages
+    /// (`Some` iff the owning request asked for soft output).
+    pub soft: Option<Vec<f32>>,
 }

@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::viterbi::StreamEnd;
+use crate::viterbi::{DecodeError, OutputMode, StreamEnd};
 use super::backpressure::{Admission, BackpressureGate};
 use super::batcher::{Batch, BatchPolicy, Batcher};
 use super::chunker::Chunker;
@@ -70,7 +70,7 @@ enum ExecMsg {
 }
 
 struct Completion {
-    done: Mutex<HashMap<RequestId, DecodeResponse>>,
+    done: Mutex<HashMap<RequestId, Result<DecodeResponse, DecodeError>>>,
     ready: Condvar,
 }
 
@@ -86,6 +86,8 @@ pub struct DecodeServer {
     pump: Option<std::thread::JoinHandle<()>>,
     executor: Option<std::thread::JoinHandle<Result<()>>>,
     backend_name: Arc<Mutex<String>>,
+    backend_label: &'static str,
+    soft_capable: bool,
 }
 
 impl DecodeServer {
@@ -127,7 +129,35 @@ impl DecodeServer {
                         };
                         let n = batch.jobs.len();
                         let t0 = Instant::now();
-                        let results = backend.decode_batch(&batch.jobs)?;
+                        let results = match backend.decode_batch(&batch.jobs) {
+                            Ok(r) => r,
+                            Err(err) => {
+                                // A failed batch fails every request
+                                // that had a frame in it — the worker
+                                // survives and the callers get a typed
+                                // DecodeError instead of a dead server.
+                                gate.release(n);
+                                // Per-request frame counts within this
+                                // batch: those frames produced no
+                                // results and must not be waited for.
+                                let mut counts: HashMap<RequestId, usize> = HashMap::new();
+                                for job in &batch.jobs {
+                                    *counts.entry(job.request_id).or_insert(0) += 1;
+                                }
+                                let e = DecodeError::Backend { reason: format!("{err:#}") };
+                                let mut r = reassembler.lock().unwrap();
+                                let mut done = completion.done.lock().unwrap();
+                                for (id, in_batch) in counts {
+                                    if r.fail(id, in_batch) {
+                                        metrics.on_error();
+                                        done.insert(id, Err(e.clone()));
+                                    }
+                                }
+                                drop(done);
+                                completion.ready.notify_all();
+                                continue;
+                            }
+                        };
                         metrics.on_batch(n, bucket, t0.elapsed());
                         let routes = backend.dispatch_counts();
                         if !routes.is_empty() {
@@ -147,7 +177,7 @@ impl DecodeServer {
                             let mut done = completion.done.lock().unwrap();
                             for resp in done_now {
                                 metrics.on_response(resp.bits.len(), resp.latency_ns);
-                                done.insert(resp.id, resp);
+                                done.insert(resp.id, Ok(resp));
                             }
                             completion.ready.notify_all();
                         }
@@ -208,6 +238,8 @@ impl DecodeServer {
             pump: Some(pump),
             executor: Some(executor),
             backend_name,
+            backend_label: cfg.backend.label(),
+            soft_capable: cfg.backend.supports_soft(),
         })
     }
 
@@ -231,18 +263,46 @@ impl DecodeServer {
         self.gate.in_flight()
     }
 
-    /// Submit a decode request (non-blocking admission). Returns the
-    /// request id, or None if backpressure rejected it.
+    /// Submit a hard-output decode request (non-blocking admission).
+    /// Returns the request id, or None if backpressure rejected it.
+    /// Validation failures complete the request with a [`DecodeError`]
+    /// surfaced by [`wait`](Self::wait).
     pub fn try_submit(&self, llrs: Vec<f32>, end: StreamEnd) -> Option<RequestId> {
-        self.submit_inner(llrs, end, false)
+        self.submit_inner(llrs, end, OutputMode::Hard, false)
     }
 
-    /// Submit, blocking if the service is saturated.
+    /// Submit a hard-output request, blocking if the service is
+    /// saturated.
     pub fn submit(&self, llrs: Vec<f32>, end: StreamEnd) -> RequestId {
-        self.submit_inner(llrs, end, true).expect("blocking submit cannot be rejected")
+        self.submit_inner(llrs, end, OutputMode::Hard, true)
+            .expect("blocking submit cannot be rejected")
     }
 
-    fn submit_inner(&self, llrs: Vec<f32>, end: StreamEnd, block: bool) -> Option<RequestId> {
+    /// Submit with an explicit output mode, blocking if saturated.
+    pub fn submit_request(
+        &self,
+        llrs: Vec<f32>,
+        end: StreamEnd,
+        output: OutputMode,
+    ) -> RequestId {
+        self.submit_inner(llrs, end, output, true)
+            .expect("blocking submit cannot be rejected")
+    }
+
+    /// Complete `id` immediately with a validation error.
+    fn complete_err(&self, id: RequestId, err: DecodeError) {
+        self.metrics.on_error();
+        self.completion.done.lock().unwrap().insert(id, Err(err));
+        self.completion.ready.notify_all();
+    }
+
+    fn submit_inner(
+        &self,
+        llrs: Vec<f32>,
+        end: StreamEnd,
+        output: OutputMode,
+        block: bool,
+    ) -> Option<RequestId> {
         let beta = self.chunker.spec.beta as usize;
         let id = {
             let mut next = self.next_id.lock().unwrap();
@@ -250,15 +310,47 @@ impl DecodeServer {
             *next += 1;
             id
         };
-        let req = DecodeRequest::new(id, llrs, beta, end);
+        self.metrics.on_request();
+        if llrs.len() % beta != 0 {
+            // Typed completion instead of the seed-era assert. The
+            // server derives the stage count from the payload, so
+            // there is no single "expected" length — any multiple of β
+            // is fine; say exactly that.
+            self.complete_err(
+                id,
+                DecodeError::InvalidRequest {
+                    reason: format!(
+                        "LLR count {} is not a multiple of β = {beta}",
+                        llrs.len()
+                    ),
+                },
+            );
+            return Some(id);
+        }
+        if output == OutputMode::Soft && !self.soft_capable {
+            self.complete_err(
+                id,
+                DecodeError::UnsupportedOutput {
+                    engine: self.backend_label.to_string(),
+                    mode: output,
+                },
+            );
+            return Some(id);
+        }
+        let req = DecodeRequest::with_output(id, llrs, beta, end, output);
         let jobs = self.chunker.chunk(&req);
         let n = jobs.len();
-        self.metrics.on_request();
         if n == 0 {
             // Empty stream: complete immediately.
-            let resp = DecodeResponse { id, bits: Vec::new(), latency_ns: 0, frames: 0 };
+            let resp = DecodeResponse {
+                id,
+                bits: Vec::new(),
+                soft: if output == OutputMode::Soft { Some(Vec::new()) } else { None },
+                latency_ns: 0,
+                frames: 0,
+            };
             self.metrics.on_response(0, 0);
-            self.completion.done.lock().unwrap().insert(id, resp);
+            self.completion.done.lock().unwrap().insert(id, Ok(resp));
             self.completion.ready.notify_all();
             return Some(id);
         }
@@ -274,13 +366,16 @@ impl DecodeServer {
             req.stages,
             self.chunker.geo.f,
             req.submitted_at,
+            output == OutputMode::Soft,
         );
         self.pump_tx.send(PumpMsg::Jobs(jobs)).expect("pump thread alive");
         Some(id)
     }
 
-    /// Block until the response for `id` is ready.
-    pub fn wait(&self, id: RequestId) -> DecodeResponse {
+    /// Block until the response for `id` is ready. Backend batch
+    /// failures and submit-time validation errors surface here as
+    /// [`DecodeError`] values — worker threads never die on them.
+    pub fn wait(&self, id: RequestId) -> Result<DecodeResponse, DecodeError> {
         let mut done = self.completion.done.lock().unwrap();
         loop {
             if let Some(resp) = done.remove(&id) {
@@ -290,9 +385,24 @@ impl DecodeServer {
         }
     }
 
-    /// Convenience: submit and wait.
-    pub fn decode_blocking(&self, llrs: Vec<f32>, end: StreamEnd) -> DecodeResponse {
+    /// Convenience: submit a hard-output request and wait.
+    pub fn decode_blocking(
+        &self,
+        llrs: Vec<f32>,
+        end: StreamEnd,
+    ) -> Result<DecodeResponse, DecodeError> {
         let id = self.submit(llrs, end);
+        self.wait(id)
+    }
+
+    /// Convenience: submit with an explicit output mode and wait.
+    pub fn decode_blocking_with(
+        &self,
+        llrs: Vec<f32>,
+        end: StreamEnd,
+        output: OutputMode,
+    ) -> Result<DecodeResponse, DecodeError> {
+        let id = self.submit_request(llrs, end, output);
         self.wait(id)
     }
 }
@@ -351,7 +461,7 @@ mod tests {
     fn end_to_end_decode() {
         let server = native_server(1);
         let (bits, llrs) = noiseless_request(90, 100);
-        let resp = server.decode_blocking(llrs, StreamEnd::Truncated);
+        let resp = server.decode_blocking(llrs, StreamEnd::Truncated).unwrap();
         assert_eq!(resp.bits, bits);
         assert_eq!(resp.frames, 4);
         assert!(resp.latency_ns > 0);
@@ -369,7 +479,7 @@ mod tests {
             let server = Arc::clone(&server);
             handles.push(std::thread::spawn(move || {
                 let (bits, llrs) = noiseless_request(100 + t, 64 + (t as usize) * 13);
-                let resp = server.decode_blocking(llrs, StreamEnd::Truncated);
+                let resp = server.decode_blocking(llrs, StreamEnd::Truncated).unwrap();
                 assert_eq!(resp.bits, bits, "stream {t}");
             }));
         }
@@ -386,7 +496,7 @@ mod tests {
     #[test]
     fn empty_request_completes_immediately() {
         let server = native_server(1);
-        let resp = server.decode_blocking(Vec::new(), StreamEnd::Truncated);
+        let resp = server.decode_blocking(Vec::new(), StreamEnd::Truncated).unwrap();
         assert!(resp.bits.is_empty());
         assert_eq!(resp.frames, 0);
     }
@@ -397,7 +507,7 @@ mod tests {
         // still complete (deadline path).
         let server = native_server(1);
         let (bits, llrs) = noiseless_request(91, 20);
-        let resp = server.decode_blocking(llrs, StreamEnd::Truncated);
+        let resp = server.decode_blocking(llrs, StreamEnd::Truncated).unwrap();
         assert_eq!(resp.bits, bits);
     }
 
@@ -406,7 +516,64 @@ mod tests {
         let server = native_server(1);
         // Give the executor a moment to build.
         let (_, llrs) = noiseless_request(92, 32);
-        let _ = server.decode_blocking(llrs, StreamEnd::Truncated);
+        let _ = server.decode_blocking(llrs, StreamEnd::Truncated).unwrap();
         assert!(server.backend_name().starts_with("native:"));
+    }
+
+    #[test]
+    fn soft_round_trip_through_native_backend() {
+        let server = native_server(1);
+        let (bits, llrs) = noiseless_request(93, 100);
+        let resp = server
+            .decode_blocking_with(llrs, StreamEnd::Truncated, OutputMode::Soft)
+            .unwrap();
+        assert_eq!(resp.bits, bits);
+        let soft = resp.soft.expect("soft requested");
+        assert_eq!(soft.len(), bits.len());
+        for (t, (&b, &s)) in resp.bits.iter().zip(&soft).enumerate() {
+            assert_eq!(b == 1, s.is_sign_negative(), "sign/bit mismatch at {t}");
+        }
+    }
+
+    #[test]
+    fn malformed_llr_length_surfaces_typed_error() {
+        let server = native_server(1);
+        // 7 values is not a multiple of beta = 2.
+        let err = server.decode_blocking(vec![0.5; 7], StreamEnd::Truncated).unwrap_err();
+        assert!(matches!(err, DecodeError::InvalidRequest { .. }), "{err}");
+        assert!(err.to_string().contains("not a multiple"), "{err}");
+        // The server keeps serving after the bad request.
+        let (bits, llrs) = noiseless_request(94, 40);
+        assert_eq!(server.decode_blocking(llrs, StreamEnd::Truncated).unwrap().bits, bits);
+        assert_eq!(server.metrics().errors, 1);
+    }
+
+    #[test]
+    fn soft_rejected_up_front_on_non_soft_backend() {
+        let server = DecodeServer::start(ServerConfig {
+            backend: BackendSpec::Auto {
+                spec: CodeSpec::standard_k5(),
+                geo: FrameGeometry::new(32, 8, 12),
+                f0: 8,
+                threads: 1,
+                budget_bytes: None,
+                profile: None,
+            },
+            batch: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            high_watermark: 256,
+            low_watermark: 64,
+        })
+        .unwrap();
+        let (_, llrs) = noiseless_request(95, 64);
+        let err = server
+            .decode_blocking_with(llrs, StreamEnd::Truncated, OutputMode::Soft)
+            .unwrap_err();
+        assert!(
+            matches!(err, DecodeError::UnsupportedOutput { .. }),
+            "{err}"
+        );
     }
 }

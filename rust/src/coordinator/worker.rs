@@ -17,8 +17,8 @@ use crate::runtime::{ExecutorPool, Manifest, PjrtRuntime};
 use crate::tuner::{JobShape, Planner, PlannerConfig};
 use crate::util::threadpool::ThreadPool;
 use crate::viterbi::{
-    Engine as _, FrameScratch, ParallelTraceback, StartPolicy, StreamEnd, TiledEngine,
-    TracebackMode, TracebackStart,
+    signed_soft, Engine as _, FrameScratch, OutputMode, ParallelTraceback, SovaScratch,
+    StartPolicy, StreamEnd, TiledEngine, TracebackMode, TracebackStart,
 };
 use super::request::{FrameJob, FrameResult};
 
@@ -60,6 +60,22 @@ pub enum BackendSpec {
 }
 
 impl BackendSpec {
+    /// Short route label for error messages and metrics.
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendSpec::Pjrt { .. } => "pjrt",
+            BackendSpec::Native { .. } => "native",
+            BackendSpec::Auto { .. } => "auto",
+        }
+    }
+
+    /// Whether the backend can serve [`OutputMode::Soft`] requests.
+    /// The server refuses soft submissions up front when this is
+    /// false, so unsupported jobs never reach the executor.
+    pub fn supports_soft(&self) -> bool {
+        matches!(self, BackendSpec::Native { .. })
+    }
+
     /// Resolve the decode geometry without constructing the backend
     /// (the server needs it for chunking before the executor starts).
     pub fn resolve_geometry(&self) -> Result<(CodeSpec, FrameGeometry)> {
@@ -114,7 +130,13 @@ impl BackendSpec {
                 } else {
                     None
                 };
-                Ok(Box::new(NativeBatchDecoder { engine, scratch, lane, max_batch: 32 }))
+                Ok(Box::new(NativeBatchDecoder {
+                    engine,
+                    scratch,
+                    sova: SovaScratch::new(),
+                    lane,
+                    max_batch: 32,
+                }))
             }
             BackendSpec::Auto { spec, geo, f0, threads, budget_bytes, profile } => {
                 let f0 = (*f0).clamp(1, geo.f);
@@ -138,6 +160,19 @@ impl BackendSpec {
                 let threads = (*threads).max(1);
                 let pool =
                     if threads > 1 { Some(Arc::new(ThreadPool::new(threads))) } else { None };
+                // Per-worker scratch pools, allocated once and reused
+                // across every batch the pooled routes decode (workers
+                // previously rebuilt their scratch per batch).
+                let states = spec.num_states();
+                let span = geo.span();
+                let frame_scratches: Arc<Vec<Mutex<FrameScratch>>> = Arc::new(
+                    (0..threads).map(|_| Mutex::new(FrameScratch::new(states, span))).collect(),
+                );
+                let lane_scratches: Arc<Vec<Mutex<LaneScratch>>> = Arc::new(
+                    (0..threads)
+                        .map(|_| Mutex::new(LaneScratch::new(states, span, MAX_LANES)))
+                        .collect(),
+                );
                 let cfg = PlannerConfig {
                     threads,
                     lanes: MAX_LANES,
@@ -156,6 +191,8 @@ impl BackendSpec {
                     scratch,
                     lane,
                     pool,
+                    frame_scratches,
+                    lane_scratches,
                     planner,
                     counts: Vec::new(),
                     max_batch: MAX_LANES,
@@ -190,6 +227,10 @@ pub struct PjrtBatchDecoder {
 
 impl BatchDecoder for PjrtBatchDecoder {
     fn decode_batch(&mut self, jobs: &[FrameJob]) -> Result<Vec<FrameResult>> {
+        anyhow::ensure!(
+            jobs.iter().all(|j| j.output == OutputMode::Hard),
+            "the pjrt backend does not support soft output"
+        );
         let meta = self.pool.meta().clone();
         let beta = meta.spec.beta as usize;
         let states = meta.states();
@@ -221,6 +262,7 @@ impl BatchDecoder for PjrtBatchDecoder {
                     request_id: job.request_id,
                     frame_index: job.frame_index,
                     bits: bits[slot * meta.geo.f..(slot + 1) * meta.geo.f].to_vec(),
+                    soft: None,
                 });
             }
             next += take;
@@ -247,10 +289,25 @@ impl BatchDecoder for PjrtBatchDecoder {
 pub struct NativeBatchDecoder {
     engine: TiledEngine,
     scratch: FrameScratch,
+    /// SOVA working memory for soft-output jobs.
+    sova: SovaScratch,
     /// Lane-group traceback config + scratch; `None` for codes outside
     /// the lane fast path (those always decode per frame).
     lane: Option<(ParallelTraceback, LaneScratch)>,
     max_batch: usize,
+}
+
+/// The uniform zero-padded span every coordinator frame job decodes:
+/// the middle f stages of an L = v1 + f + v2 block.
+fn uniform_span(engine: &TiledEngine, pin_state0: bool) -> FrameSpan {
+    let geo = engine.geo;
+    FrameSpan {
+        index: if pin_state0 { 0 } else { 1 },
+        start: 0,
+        len: geo.span(),
+        out_start: geo.v1,
+        out_len: geo.f,
+    }
 }
 
 /// Per-frame decode of one uniform zero-padded job — the non-batched
@@ -260,16 +317,8 @@ fn decode_uniform_job(
     scratch: &mut FrameScratch,
     job: &FrameJob,
 ) -> FrameResult {
-    let geo = engine.geo;
-    // Uniform frame: decode the middle f stages of the block.
-    let span = FrameSpan {
-        index: if job.pin_state0 { 0 } else { 1 },
-        start: 0,
-        len: geo.span(),
-        out_start: geo.v1,
-        out_len: geo.f,
-    };
-    let mut bits = vec![0u8; geo.f];
+    let span = uniform_span(engine, job.pin_state0);
+    let mut bits = vec![0u8; engine.geo.f];
     engine.decode_frame(
         &job.llr_block,
         &span,
@@ -278,7 +327,33 @@ fn decode_uniform_job(
         scratch,
         &mut bits,
     );
-    FrameResult { request_id: job.request_id, frame_index: job.frame_index, bits }
+    FrameResult { request_id: job.request_id, frame_index: job.frame_index, bits, soft: None }
+}
+
+/// Per-frame SOVA decode of one uniform job: hard bits plus signed
+/// per-bit reliabilities (the native backend's soft route).
+fn decode_uniform_job_soft(
+    engine: &TiledEngine,
+    scratch: &mut FrameScratch,
+    sova: &mut SovaScratch,
+    job: &FrameJob,
+) -> FrameResult {
+    let span = uniform_span(engine, job.pin_state0);
+    let f = engine.geo.f;
+    let mut bits = vec![0u8; f];
+    let mut rel = vec![0f32; f];
+    engine.decode_frame_soft(
+        &job.llr_block,
+        &span,
+        usize::MAX,
+        StreamEnd::Truncated,
+        scratch,
+        sova,
+        &mut bits,
+        &mut rel,
+    );
+    let soft = Some(signed_soft(&bits, &rel));
+    FrameResult { request_id: job.request_id, frame_index: job.frame_index, bits, soft }
 }
 
 /// Decode one chunk of ≤ 64 uniform jobs in SIMD lockstep — the lane
@@ -311,6 +386,7 @@ fn decode_lane_chunk(
             request_id: job.request_id,
             frame_index: job.frame_index,
             bits: b,
+            soft: None,
         });
     }
 }
@@ -331,18 +407,48 @@ impl BatchDecoder for NativeBatchDecoder {
             anyhow::ensure!(job.llr_block.len() == l * beta, "job block length mismatch");
         }
         let mut out = Vec::with_capacity(jobs.len());
-        if jobs.len() > 1 {
-            if let Some((ptb, lane_scratch)) = &mut self.lane {
-                // Batched path: every chunk of ≤ 64 uniform jobs decodes
-                // in SIMD lockstep (the dynamic batcher's whole point).
-                for chunk in jobs.chunks(MAX_LANES) {
-                    decode_lane_chunk(&self.engine, ptb, lane_scratch, chunk, &mut out);
+        if let Some((ptb, lane_scratch)) = &mut self.lane {
+            // Batched path: runs of ≥ 2 consecutive hard jobs decode in
+            // SIMD lockstep chunks of ≤ 64 (the dynamic batcher's whole
+            // point); soft jobs take the per-frame SOVA path without
+            // knocking the hard jobs around them off the lane route.
+            let mut rest = jobs;
+            while !rest.is_empty() {
+                let hard_run =
+                    rest.iter().take_while(|j| j.output == OutputMode::Hard).count();
+                if hard_run > 1 {
+                    for chunk in rest[..hard_run].chunks(MAX_LANES) {
+                        decode_lane_chunk(&self.engine, ptb, lane_scratch, chunk, &mut out);
+                    }
+                    rest = &rest[hard_run..];
+                } else {
+                    let job = &rest[0];
+                    out.push(if job.output == OutputMode::Soft {
+                        decode_uniform_job_soft(
+                            &self.engine,
+                            &mut self.scratch,
+                            &mut self.sova,
+                            job,
+                        )
+                    } else {
+                        decode_uniform_job(&self.engine, &mut self.scratch, job)
+                    });
+                    rest = &rest[1..];
                 }
-                return Ok(out);
             }
+            return Ok(out);
         }
         for job in jobs {
-            let r = self.decode_one(job);
+            let r = if job.output == OutputMode::Soft {
+                decode_uniform_job_soft(
+                    &self.engine,
+                    &mut self.scratch,
+                    &mut self.sova,
+                    job,
+                )
+            } else {
+                self.decode_one(job)
+            };
             out.push(r);
         }
         Ok(out)
@@ -385,6 +491,13 @@ pub struct AutoBatchDecoder {
     /// Thread pool for the frame-parallel route (None when built with
     /// one thread).
     pool: Option<Arc<ThreadPool>>,
+    /// One reusable [`FrameScratch`] per pool worker, shared across
+    /// batches — the pooled per-frame route locks slot `w` instead of
+    /// allocating a scratch per batch.
+    frame_scratches: Arc<Vec<Mutex<FrameScratch>>>,
+    /// One reusable [`LaneScratch`] per pool worker (the pooled lane
+    /// route), indexed modulo the pool size.
+    lane_scratches: Arc<Vec<Mutex<LaneScratch>>>,
     planner: Planner,
     counts: Vec<(String, u64)>,
     max_batch: usize,
@@ -429,9 +542,11 @@ impl AutoBatchDecoder {
             let engine = Arc::clone(&self.engine);
             let jobs = Arc::clone(&jobs_arc);
             let slots = Arc::clone(&slots);
+            let scratches = Arc::clone(&self.frame_scratches);
             batch.push(Box::new(move || {
-                let mut scratch =
-                    FrameScratch::new(engine.spec().num_states(), engine.geo.span());
+                // One persistent scratch per worker slot, reused
+                // across batches (no per-batch allocation).
+                let mut scratch = scratches[w % scratches.len()].lock().unwrap();
                 for i in lo..hi {
                     let r = decode_uniform_job(&engine, &mut scratch, &jobs[i]);
                     *slots[i].lock().unwrap() = Some(r);
@@ -466,9 +581,11 @@ impl AutoBatchDecoder {
             let engine = Arc::clone(&self.engine);
             let jobs = Arc::clone(&jobs_arc);
             let slots = Arc::clone(&slots);
+            let scratches = Arc::clone(&self.lane_scratches);
             batch.push(Box::new(move || {
-                let mut scratch =
-                    LaneScratch::new(engine.spec().num_states(), engine.geo.span(), hi - lo);
+                // Persistent per-worker lane scratch (ensure() inside
+                // decode_lane_group resizes it to this chunk's lanes).
+                let mut scratch = scratches[ci % scratches.len()].lock().unwrap();
                 let mut out = Vec::with_capacity(hi - lo);
                 decode_lane_chunk(&engine, &ptb, &mut scratch, &jobs[lo..hi], &mut out);
                 *slots[ci].lock().unwrap() = Some(out);
@@ -490,6 +607,10 @@ impl BatchDecoder for AutoBatchDecoder {
         let l = geo.span();
         for job in jobs {
             anyhow::ensure!(job.llr_block.len() == l * beta, "job block length mismatch");
+            anyhow::ensure!(
+                job.output == OutputMode::Hard,
+                "the auto backend does not support soft output"
+            );
         }
         if jobs.is_empty() {
             return Ok(Vec::new());
@@ -742,8 +863,105 @@ mod tests {
             frame_index: 0,
             llr_block: vec![0.0; 7],
             pin_state0: true,
+            output: OutputMode::Hard,
             submitted_at: std::time::Instant::now(),
         };
         assert!(backend.decode_batch(&[bad]).is_err());
+    }
+
+    #[test]
+    fn native_soft_jobs_carry_reliabilities() {
+        let spec = CodeSpec::standard_k7();
+        let geo = FrameGeometry::new(64, 12, 20);
+        let mut backend =
+            BackendSpec::Native { spec: spec.clone(), geo, f0: Some(16) }.build().unwrap();
+        let hard_jobs = noisy_jobs(&spec, geo, 64 * 5 - 3, 0xBEEF);
+        let soft_jobs: Vec<FrameJob> = hard_jobs
+            .iter()
+            .cloned()
+            .map(|mut j| {
+                j.output = OutputMode::Soft;
+                j
+            })
+            .collect();
+        let hard = backend.decode_batch(&hard_jobs).unwrap();
+        let soft = backend.decode_batch(&soft_jobs).unwrap();
+        assert_eq!(hard.len(), soft.len());
+        for (h, s) in hard.iter().zip(&soft) {
+            assert_eq!(h.frame_index, s.frame_index);
+            assert!(h.soft.is_none());
+            let rel = s.soft.as_ref().expect("soft requested");
+            assert_eq!(rel.len(), s.bits.len());
+            for (t, (&b, &r)) in s.bits.iter().zip(rel).enumerate() {
+                assert_eq!(
+                    b == 1,
+                    r.is_sign_negative(),
+                    "sign/bit mismatch at frame {} bit {t}",
+                    s.frame_index
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_soft_hard_batch_matches_per_job_dispatch() {
+        // A soft job in the middle of a batch must not disturb the
+        // hard jobs around it (which still take the lane runs).
+        let spec = CodeSpec::standard_k7();
+        let geo = FrameGeometry::new(64, 12, 20);
+        let mut backend =
+            BackendSpec::Native { spec: spec.clone(), geo, f0: Some(16) }.build().unwrap();
+        let mut jobs = noisy_jobs(&spec, geo, 64 * 7 - 5, 0xBEF1);
+        jobs[3].output = OutputMode::Soft;
+        let batched = backend.decode_batch(&jobs).unwrap();
+        let mut single = Vec::new();
+        for j in &jobs {
+            single.extend(backend.decode_batch(std::slice::from_ref(j)).unwrap());
+        }
+        assert_eq!(batched.len(), single.len());
+        for (a, b) in batched.iter().zip(&single) {
+            assert_eq!(a.frame_index, b.frame_index);
+            assert_eq!(a.bits, b.bits, "frame {}", a.frame_index);
+            assert_eq!(a.soft.is_some(), b.soft.is_some(), "frame {}", a.frame_index);
+        }
+        assert!(batched[3].soft.is_some());
+    }
+
+    #[test]
+    fn auto_rejects_soft_jobs() {
+        let spec = CodeSpec::standard_k7();
+        let geo = FrameGeometry::new(64, 12, 20);
+        let mut auto = BackendSpec::Auto {
+            spec: spec.clone(),
+            geo,
+            f0: 16,
+            threads: 2,
+            budget_bytes: None,
+            profile: None,
+        }
+        .build()
+        .unwrap();
+        let mut jobs = noisy_jobs(&spec, geo, 64 * 2, 0xBEF0);
+        jobs[0].output = OutputMode::Soft;
+        assert!(auto.decode_batch(&jobs).is_err());
+    }
+
+    #[test]
+    fn backend_spec_soft_capability() {
+        let spec = CodeSpec::standard_k5();
+        let geo = FrameGeometry::new(32, 8, 12);
+        let native = BackendSpec::Native { spec: spec.clone(), geo, f0: None };
+        assert!(native.supports_soft());
+        assert_eq!(native.label(), "native");
+        let auto = BackendSpec::Auto {
+            spec,
+            geo,
+            f0: 8,
+            threads: 1,
+            budget_bytes: None,
+            profile: None,
+        };
+        assert!(!auto.supports_soft());
+        assert_eq!(auto.label(), "auto");
     }
 }

@@ -23,8 +23,8 @@ use crate::memmodel::{GpuParams, OccupancyModel};
 use crate::util::json::{Json, ObjBuilder};
 use crate::util::threadpool::ThreadPool;
 use crate::viterbi::{
-    Engine, ParallelEngine, ParallelTraceback, StartPolicy, StreamEnd, TiledEngine,
-    TracebackMode,
+    DecodeRequest, Engine, ParallelEngine, ParallelTraceback, StartPolicy, StreamEnd,
+    TiledEngine, TracebackMode,
 };
 use super::{render_table, Effort, ExpOptions};
 
@@ -49,10 +49,11 @@ pub fn measure_gbps(
         .map(|_| (rng.uniform() as f32 - 0.5) * 8.0)
         .collect();
     // Warm-up.
-    let _ = engine.decode_stream(&llrs, stream_bits, StreamEnd::Truncated);
+    let req = DecodeRequest::hard(&llrs, stream_bits, StreamEnd::Truncated);
+    let _ = engine.decode(&req).expect("throughput decode");
     let t0 = Instant::now();
     for _ in 0..reps {
-        let out = engine.decode_stream(&llrs, stream_bits, StreamEnd::Truncated);
+        let out = engine.decode(&req).expect("throughput decode");
         std::hint::black_box(&out);
     }
     let dt = t0.elapsed().as_secs_f64();

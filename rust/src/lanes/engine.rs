@@ -13,7 +13,8 @@ use crate::viterbi::frame::FrameScratch;
 use crate::viterbi::parallel::SharedOut;
 use crate::viterbi::unified::decode_frame_parallel_tb;
 use crate::viterbi::{
-    Engine, ParallelTraceback, StartPolicy, StreamEnd, TracebackStart,
+    final_traceback_start, DecodeError, DecodeOutput, DecodeRequest, DecodeStats, Engine,
+    OutputMode, ParallelTraceback, StartPolicy, StreamEnd, TracebackStart,
 };
 use super::acs::{acs_stage_lanes_b2, acs_stage_lanes_b3, lane_fast_path};
 use super::metrics::{argmax_lanes, LaneMetrics};
@@ -272,14 +273,10 @@ fn group_jobs<'a>(
     jobs
 }
 
-/// Traceback start for a span's final stage, mirroring
-/// `TiledEngine::decode_frame`.
+/// Traceback start for a span's final stage — the shared
+/// `(is_last, StreamEnd)` rule from `viterbi::engine`.
 fn lane_tb(span: &FrameSpan, stages: usize, end: StreamEnd) -> TracebackStart {
-    let is_last = span.out_start + span.out_len == stages;
-    match (is_last, end) {
-        (true, StreamEnd::Terminated) => TracebackStart::State(0),
-        _ => TracebackStart::BestMetric,
-    }
+    final_traceback_start(end, span.out_start + span.out_len == stages)
 }
 
 /// Single-threaded lane-batched engine (`lanes` in the registry):
@@ -370,17 +367,27 @@ impl Engine for LanesEngine {
         &self.spec
     }
 
-    fn decode_stream(&self, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+    fn decode(&self, req: &DecodeRequest<'_>) -> Result<DecodeOutput, DecodeError> {
+        req.validate(&self.spec)?;
+        if req.output == OutputMode::Soft {
+            // The lane survivor memory packs one decision bit per lane
+            // but no margins; soft output awaits a lane-SOVA port.
+            return Err(DecodeError::UnsupportedOutput {
+                engine: self.name.clone(),
+                mode: req.output,
+            });
+        }
+        let (llrs, stages, end) = (req.llrs, req.stages, req.end);
         let beta = self.spec.beta as usize;
-        assert_eq!(llrs.len(), stages * beta);
         let spans = plan_frames(stages, self.geo);
+        let stats = DecodeStats { final_metric: None, frames: spans.len() };
         let mut out = vec![0u8; stages];
         if spans.is_empty() {
-            return out;
+            return Ok(DecodeOutput::hard(out, stats));
         }
         if !lane_fast_path(&self.trellis) {
             self.decode_stream_fallback(llrs, stages, end, &spans, &mut out);
-            return out;
+            return Ok(DecodeOutput::hard(out, stats));
         }
         let groups = plan_lane_groups(&spans, self.lanes);
         let mut scratch =
@@ -401,7 +408,7 @@ impl Engine for LanesEngine {
                 &mut scratch,
             );
         }
-        out
+        Ok(DecodeOutput::hard(out, stats))
     }
 }
 
@@ -436,16 +443,24 @@ impl Engine for LanesMtEngine {
         self.inner.spec()
     }
 
-    fn decode_stream(&self, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+    fn decode(&self, req: &DecodeRequest<'_>) -> Result<DecodeOutput, DecodeError> {
+        req.validate(self.inner.spec())?;
+        if req.output == OutputMode::Soft {
+            return Err(DecodeError::UnsupportedOutput {
+                engine: self.name.clone(),
+                mode: req.output,
+            });
+        }
+        let (llrs, stages, end) = (req.llrs, req.stages, req.end);
         let beta = self.inner.spec.beta as usize;
-        assert_eq!(llrs.len(), stages * beta);
         if !lane_fast_path(&self.inner.trellis) {
-            return self.inner.decode_stream(llrs, stages, end);
+            return self.inner.decode(req);
         }
         let spans = plan_frames(stages, self.inner.geo);
+        let stats = DecodeStats { final_metric: None, frames: spans.len() };
         let mut out = vec![0u8; stages];
         if spans.is_empty() {
-            return out;
+            return Ok(DecodeOutput::hard(out, stats));
         }
         let groups = plan_lane_groups(&spans, self.inner.lanes);
 
@@ -507,7 +522,7 @@ impl Engine for LanesMtEngine {
             }));
         }
         self.pool.run_batch(batch);
-        out
+        Ok(DecodeOutput::hard(out, stats))
     }
 }
 
@@ -537,6 +552,7 @@ pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
         build: |p: &BuildParams| std::sync::Arc::new(build_lanes(p)),
         traceback_bytes: lanes_traceback_bytes,
         lane_width: |p: &BuildParams| p.lanes.clamp(1, MAX_LANES),
+        soft_output: false,
     }
 }
 
@@ -558,6 +574,7 @@ pub(crate) fn engine_entry_mt() -> crate::viterbi::registry::EngineSpec {
             lanes_traceback_bytes(p) * p.threads.min(groups).max(1)
         },
         lane_width: |p: &BuildParams| p.lanes.clamp(1, MAX_LANES),
+        soft_output: false,
     }
 }
 
@@ -584,6 +601,10 @@ mod tests {
         (bits, llr::llrs_from_samples(&rx, ch.sigma()), stages)
     }
 
+    fn run(e: &dyn Engine, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+        e.decode(&DecodeRequest::hard(llrs, stages, end)).expect("decode").bits
+    }
+
     fn unified_reference(
         spec: &CodeSpec,
         geo: FrameGeometry,
@@ -592,8 +613,12 @@ mod tests {
         stages: usize,
         end: StreamEnd,
     ) -> Vec<u8> {
-        TiledEngine::new(spec.clone(), geo, TracebackMode::Parallel(ptb))
-            .decode_stream(llrs, stages, end)
+        run(
+            &TiledEngine::new(spec.clone(), geo, TracebackMode::Parallel(ptb)),
+            llrs,
+            stages,
+            end,
+        )
     }
 
     #[test]
@@ -606,7 +631,7 @@ mod tests {
             unified_reference(&spec, geo, ptb, &llrs, stages, StreamEnd::Terminated);
         for lanes in [1usize, 4, 64] {
             let e = LanesEngine::new(spec.clone(), geo, ptb, lanes);
-            let out = e.decode_stream(&llrs, stages, StreamEnd::Terminated);
+            let out = run(&e, &llrs, stages, StreamEnd::Terminated);
             assert_eq!(out, reference, "L={lanes}");
         }
     }
@@ -623,7 +648,7 @@ mod tests {
             LanesEngine::new(spec.clone(), geo, ptb, 8),
             Arc::new(ThreadPool::new(4)),
         );
-        assert_eq!(e.decode_stream(&llrs, stages, StreamEnd::Terminated), reference);
+        assert_eq!(run(&e, &llrs, stages, StreamEnd::Terminated), reference);
     }
 
     #[test]
@@ -637,7 +662,7 @@ mod tests {
         let reference =
             unified_reference(&spec, geo, ptb, &llrs, stages, StreamEnd::Truncated);
         let e = LanesEngine::new(spec.clone(), geo, ptb, 4);
-        assert_eq!(e.decode_stream(&llrs, stages, StreamEnd::Truncated), reference);
+        assert_eq!(run(&e, &llrs, stages, StreamEnd::Truncated), reference);
     }
 
     #[test]
@@ -651,7 +676,7 @@ mod tests {
         let reference =
             unified_reference(&spec, geo, ptb, &llrs, stages, StreamEnd::Terminated);
         let e = LanesEngine::new(spec.clone(), geo, ptb, 16);
-        assert_eq!(e.decode_stream(&llrs, stages, StreamEnd::Terminated), reference);
+        assert_eq!(run(&e, &llrs, stages, StreamEnd::Terminated), reference);
     }
 
     #[test]
@@ -663,7 +688,7 @@ mod tests {
             ParallelTraceback::new(8, 8, StartPolicy::StoredArgmax),
             8,
         );
-        assert!(e.decode_stream(&[], 0, StreamEnd::Truncated).is_empty());
+        assert!(run(&e, &[], 0, StreamEnd::Truncated).is_empty());
     }
 
     #[test]

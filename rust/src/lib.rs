@@ -18,7 +18,11 @@
 //! The decoder engine family is enumerated by [`viterbi::registry`] —
 //! `scalar`, `tiled`, `unified`, `parallel`, `lanes`, `lanes-mt`,
 //! `streaming`, `hard`, `auto` — which the `bench` CLI subcommand, the
-//! docs and the registry smoke test all read from. The lane-batched
+//! docs and the registry smoke test all read from. Every engine sits
+//! behind one request/response API ([`viterbi::DecodeRequest`] →
+//! [`viterbi::DecodeOutput`] with typed [`viterbi::DecodeError`]s);
+//! `scalar`, `tiled` and `unified` additionally emit SOVA per-bit
+//! reliabilities ([`viterbi::sova`]). The lane-batched
 //! pair lives in [`lanes`]: L equal-geometry frames decoded in SIMD
 //! lockstep, the CPU analogue of the GPU warp. The `auto` engine and
 //! the calibration machinery behind it live in [`tuner`]: profile the

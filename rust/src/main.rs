@@ -16,7 +16,9 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Context, Result};
 
 use viterbi::bench::{self, BenchOptions};
-use viterbi::ber::{measure_point_parallel, soft_viterbi_ber, BerConfig, DistanceSpectrum};
+use viterbi::ber::{
+    measure_point_parallel, measure_soft_split, soft_viterbi_ber, BerConfig, DistanceSpectrum,
+};
 use viterbi::channel::{bpsk, llr, AwgnChannel, Rng64};
 use viterbi::cli::Args;
 use viterbi::code::{encode, CodeSpec, Termination};
@@ -27,8 +29,8 @@ use viterbi::tuner::{self, CalibrationGrid};
 use viterbi::util::bits::count_bit_errors;
 use viterbi::util::threadpool::ThreadPool;
 use viterbi::viterbi::{
-    ParallelTraceback, ScalarEngine, SharedEngine, StartPolicy, StreamEnd, TiledEngine,
-    TracebackMode,
+    DecodeRequest, Engine as _, ParallelTraceback, ScalarEngine, SharedEngine, StartPolicy,
+    StreamEnd, TiledEngine, TracebackMode,
 };
 
 fn main() {
@@ -69,7 +71,7 @@ USAGE:
   viterbi-repro tune [--smoke] [--ks K,..] [--frame-lens F,..] [--batches B,..]
                      [--engines E,..] [--samples S] [--warmup W] [--threads N]
                      [--lanes L] [--seed S] [--out FILE]
-  viterbi-repro ber [--ebn0 DB] [--engine scalar|tiled|ptb] [--threads N]
+  viterbi-repro ber [--ebn0 DB] [--engine scalar|tiled|ptb] [--threads N] [--soft]
   viterbi-repro demo [--bits N] [--ebn0 DB]
   viterbi-repro serve [--requests N] [--backend pjrt|native|auto]
                       [--artifact NAME] [--profile FILE]
@@ -267,7 +269,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
 }
 
 fn cmd_ber(args: &Args) -> Result<()> {
-    args.check_known(&["ebn0", "engine", "threads", "bits", "seed"])?;
+    args.check_known(&["ebn0", "engine", "threads", "bits", "seed", "soft"])?;
     let ebn0 = args.get_f64("ebn0", 3.0)?;
     let threads = args.get_usize("threads", 8)?;
     let spec = CodeSpec::standard_k7();
@@ -290,6 +292,35 @@ fn cmd_ber(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", 0xBE12)?,
         ..BerConfig::default()
     };
+    if args.has("soft") {
+        // SOVA validation mode: decode with soft output and check that
+        // high-confidence bits have a strictly lower error rate than
+        // low-confidence bits (the CI soft-smoke gate).
+        let p = measure_soft_split(&spec, engine.as_ref(), &cfg, ebn0)
+            .map_err(|e| anyhow!("{e}"))?;
+        println!(
+            "Eb/N0={:.2} dB  soft-split: high-conf BER={:.3e} ({} errors / {} bits)  \
+             low-conf BER={:.3e} ({} errors / {} bits)  reliable={}  separates={}",
+            p.ebn0_db,
+            p.high_conf_ber,
+            p.high_errors,
+            p.high_bits,
+            p.low_conf_ber,
+            p.low_errors,
+            p.low_bits,
+            p.reliable,
+            p.separates(),
+        );
+        if p.reliable && !p.separates() {
+            bail!(
+                "SOVA reliabilities do not separate errors: high-conf BER {:.3e} \
+                 vs low-conf BER {:.3e}",
+                p.high_conf_ber,
+                p.low_conf_ber
+            );
+        }
+        return Ok(());
+    }
     let pool = ThreadPool::new(threads);
     let p = measure_point_parallel(&spec, engine, &cfg, ebn0, &pool);
     let bound = soft_viterbi_ber(ebn0, 0.5, &DistanceSpectrum::k7_171_133());
@@ -322,9 +353,11 @@ fn cmd_demo(args: &Args) -> Result<()> {
         FrameGeometry::new(256, 20, 45),
         TracebackMode::Parallel(ParallelTraceback::new(32, 45, StartPolicy::StoredArgmax)),
     );
-    use viterbi::viterbi::Engine as _;
     let t0 = std::time::Instant::now();
-    let out = engine.decode_stream(&llrs, n + 6, StreamEnd::Terminated);
+    let out = engine
+        .decode(&DecodeRequest::hard(&llrs, n + 6, StreamEnd::Terminated))
+        .map_err(|e| anyhow!("{e}"))?
+        .bits;
     let dt = t0.elapsed();
     let errors = count_bit_errors(&out[..n], &msg);
     println!(
@@ -397,7 +430,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .collect();
     let mut total_errors = 0usize;
     for (id, (msg, _)) in ids.into_iter().zip(&payloads) {
-        let resp = server.wait(id);
+        let resp = server.wait(id).map_err(|e| anyhow!("request {id}: {e}"))?;
         total_errors += count_bit_errors(&resp.bits[..msg.len()], msg);
     }
     let dt = t0.elapsed();

@@ -10,7 +10,9 @@
 use anyhow::Result;
 
 use crate::code::CodeSpec;
-use crate::viterbi::{Engine, StreamEnd};
+use crate::viterbi::{
+    DecodeError, DecodeOutput, DecodeRequest, DecodeStats, Engine, OutputMode,
+};
 use super::executor::ExecutorPool;
 
 /// Stream decoder over an [`ExecutorPool`].
@@ -111,13 +113,27 @@ impl Engine for PjrtEngine {
         &self.pool.meta().spec
     }
 
-    /// `end` is accepted for interface parity; the artifact always
+    /// `req.end` is accepted for interface parity; the artifact always
     /// starts its final traceback from the best metric (the terminated
     /// state-0 start differs only in the last ≲ k·5 stages, which the
-    /// zero-LLR tail padding already dominates).
-    fn decode_stream(&self, llrs: &[f32], stages: usize, _end: StreamEnd) -> Vec<u8> {
-        self.decode_stream_result(llrs, stages)
-            .expect("PJRT decode failed")
+    /// zero-LLR tail padding already dominates). Runtime failures
+    /// surface as [`DecodeError::Backend`].
+    fn decode(&self, req: &DecodeRequest<'_>) -> Result<DecodeOutput, DecodeError> {
+        let spec = &self.pool.meta().spec;
+        req.validate(spec)?;
+        if req.output == OutputMode::Soft {
+            // The AOT artifact's output signature is hard bits only.
+            return Err(DecodeError::UnsupportedOutput {
+                engine: self.name.clone(),
+                mode: req.output,
+            });
+        }
+        let bits = self
+            .decode_stream_result(req.llrs, req.stages)
+            .map_err(|e| DecodeError::Backend { reason: format!("{e:#}") })?;
+        let f = self.pool.meta().geo.f;
+        let frames = if req.stages == 0 { 0 } else { (req.stages + f - 1) / f };
+        Ok(DecodeOutput::hard(bits, DecodeStats { final_metric: None, frames }))
     }
 }
 

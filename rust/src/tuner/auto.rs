@@ -1,5 +1,5 @@
 //! The `auto` registry engine: the planner behind the shared
-//! [`Engine`] interface. Every `decode_stream` call is shaped
+//! [`Engine`] interface. Every `decode` call is shaped
 //! (K, frame length, batch width) and routed to the fastest
 //! registered candidate; dispatched engines are built once and cached,
 //! so steady-state dispatch overhead is one planner lookup plus a
@@ -16,7 +16,9 @@ use std::sync::{Arc, Mutex};
 
 use crate::code::CodeSpec;
 use crate::viterbi::registry::{self, BuildParams, EngineSpec};
-use crate::viterbi::{Engine, SharedEngine, StreamEnd};
+use crate::viterbi::{
+    DecodeError, DecodeOutput, DecodeRequest, DecodeStats, Engine, OutputMode, SharedEngine,
+};
 use super::planner::{JobShape, Planner, PlannerConfig};
 
 /// Adaptive dispatch engine (`auto` in the registry).
@@ -77,14 +79,27 @@ impl Engine for AutoEngine {
         &self.params.spec
     }
 
-    fn decode_stream(&self, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
-        let beta = self.params.spec.beta as usize;
-        assert_eq!(llrs.len(), stages * beta);
-        if stages == 0 {
-            return Vec::new();
+    fn decode(&self, req: &DecodeRequest<'_>) -> Result<DecodeOutput, DecodeError> {
+        req.validate(&self.params.spec)?;
+        if req.output == OutputMode::Soft {
+            // Deterministic refusal: the dispatch candidates are not
+            // all soft-capable yet, and whether a given stream routes
+            // to a soft-capable one depends on the local calibration
+            // profile — an API that sometimes supports soft output is
+            // worse than one that says no.
+            return Err(DecodeError::UnsupportedOutput {
+                engine: self.name.clone(),
+                mode: req.output,
+            });
         }
-        let choice = self.planner.plan(&self.shape_for(stages));
-        self.engine_for(choice.engine).decode_stream(llrs, stages, end)
+        if req.stages == 0 {
+            return Ok(DecodeOutput::hard(
+                Vec::new(),
+                DecodeStats { final_metric: None, frames: 0 },
+            ));
+        }
+        let choice = self.planner.plan(&self.shape_for(req.stages));
+        self.engine_for(choice.engine).decode(req)
     }
 }
 
@@ -113,6 +128,7 @@ pub(crate) fn engine_entry() -> EngineSpec {
                 1
             }
         },
+        soft_output: false,
     }
 }
 
@@ -120,6 +136,7 @@ pub(crate) fn engine_entry() -> EngineSpec {
 mod tests {
     use super::*;
     use crate::tuner::DEFAULT_BUDGET_BYTES;
+    use crate::viterbi::StreamEnd;
 
     fn params() -> BuildParams {
         let mut p = BuildParams::paper_default();
@@ -138,11 +155,14 @@ mod tests {
         // Decoding builds and caches the dispatched engine.
         let stages = p.geo.f * 4;
         let llrs = vec![0.5f32; stages * p.spec.beta as usize];
-        let out = auto.decode_stream(&llrs, stages, StreamEnd::Truncated);
+        let out = auto
+            .decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Truncated))
+            .unwrap()
+            .bits;
         assert_eq!(out.len(), stages);
         assert_eq!(auto.cache.lock().unwrap().len(), 1);
         // Same shape again: cache hit, still one entry.
-        let _ = auto.decode_stream(&llrs, stages, StreamEnd::Truncated);
+        let _ = auto.decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Truncated)).unwrap();
         assert_eq!(auto.cache.lock().unwrap().len(), 1);
     }
 
@@ -150,7 +170,11 @@ mod tests {
     fn empty_stream_is_empty() {
         let p = params();
         let auto = AutoEngine::new(p.clone(), Planner::heuristic(PlannerConfig::from_build(&p)));
-        assert!(auto.decode_stream(&[], 0, StreamEnd::Truncated).is_empty());
+        assert!(auto
+            .decode(&DecodeRequest::hard(&[], 0, StreamEnd::Truncated))
+            .unwrap()
+            .bits
+            .is_empty());
     }
 
     #[test]

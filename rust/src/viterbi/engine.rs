@@ -3,16 +3,30 @@
 //! PJRT-artifact-backed engine in `runtime`) decodes a stream of LLRs
 //! behind the same interface, so the BER harness, the benches and the
 //! coordinator can swap them freely.
+//!
+//! The interface is request/response shaped: a [`DecodeRequest`]
+//! (LLRs, stage count, [`StreamEnd`], [`OutputMode`]) goes in, a
+//! [`DecodeOutput`] (hard bits, optional per-bit soft reliabilities,
+//! [`DecodeStats`]) or a typed [`DecodeError`] comes out. Malformed
+//! input is a value, not a panic, and soft (SOVA) output is negotiated
+//! per request — engines that have not been ported yet answer
+//! [`DecodeError::UnsupportedOutput`] instead of guessing.
 
 use crate::code::{CodeSpec, Trellis};
 use crate::frames::plan::{plan_frames, FrameGeometry};
 use super::frame::FrameScratch;
-use super::scalar::{ScalarDecoder, TracebackStart};
+use super::scalar::{argmax, ScalarDecoder, TracebackStart};
+use super::sova::{signed_soft, sova_decode_frame, SovaScratch};
 use super::tiled::decode_frame_serial;
 use super::unified::{decode_frame_parallel_tb, ParallelTraceback};
 
 /// How a stream ends, which fixes the final traceback start.
+///
+/// Marked `#[non_exhaustive]`: tail-biting streams (circular trellis,
+/// no termination tail — the planned WAVA engine) will add a variant
+/// without breaking downstream matches.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
 pub enum StreamEnd {
     /// Trellis terminated with k−1 zero tail bits: ends in state 0.
     Terminated,
@@ -20,7 +34,162 @@ pub enum StreamEnd {
     Truncated,
 }
 
-/// A stream decoder: LLRs in (stage-major, β per stage), bits out.
+/// What a [`DecodeRequest`] asks the engine to produce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum OutputMode {
+    /// Hard decisions only (one bit per trellis stage).
+    Hard,
+    /// Hard decisions plus per-bit soft reliabilities (SOVA).
+    Soft,
+}
+
+impl std::fmt::Display for OutputMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OutputMode::Hard => write!(f, "hard"),
+            OutputMode::Soft => write!(f, "soft"),
+        }
+    }
+}
+
+/// One stream decode request: stage-major LLRs (β per trellis stage),
+/// the stage count, how the stream ends, and the requested output.
+#[derive(Debug, Clone)]
+pub struct DecodeRequest<'a> {
+    /// Stage-major soft LLRs; `llrs.len()` must equal `stages · β`.
+    pub llrs: &'a [f32],
+    /// Number of trellis stages to decode.
+    pub stages: usize,
+    /// How the stream ends (fixes the final traceback start).
+    pub end: StreamEnd,
+    /// Hard bits only, or bits plus per-bit reliabilities.
+    pub output: OutputMode,
+}
+
+impl<'a> DecodeRequest<'a> {
+    /// A hard-output request (the common case).
+    pub fn hard(llrs: &'a [f32], stages: usize, end: StreamEnd) -> Self {
+        DecodeRequest { llrs, stages, end, output: OutputMode::Hard }
+    }
+
+    /// A soft-output (SOVA) request.
+    pub fn soft(llrs: &'a [f32], stages: usize, end: StreamEnd) -> Self {
+        DecodeRequest { llrs, stages, end, output: OutputMode::Soft }
+    }
+
+    /// Check the LLR length against `spec` (every engine calls this
+    /// before touching the data, so malformed requests surface as
+    /// [`DecodeError::LlrLengthMismatch`] rather than a panic).
+    pub fn validate(&self, spec: &CodeSpec) -> Result<(), DecodeError> {
+        let expected = self.stages * spec.beta as usize;
+        if self.llrs.len() != expected {
+            return Err(DecodeError::LlrLengthMismatch { expected, got: self.llrs.len() });
+        }
+        Ok(())
+    }
+}
+
+/// Decode-side statistics returned with every [`DecodeOutput`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DecodeStats {
+    /// Path metric at the final traceback start (the stream's last
+    /// frame). `None` when the engine cannot report it cheaply (the
+    /// thread-fan-out and artifact-backed engines).
+    pub final_metric: Option<f32>,
+    /// Frames the stream was tiled into (1 for whole-stream engines).
+    pub frames: usize,
+}
+
+/// A decoded stream: hard bits, optional reliabilities, statistics.
+#[derive(Debug, Clone)]
+pub struct DecodeOutput {
+    /// Decoded bits, one per trellis stage of the request.
+    pub bits: Vec<u8>,
+    /// Per-bit signed soft values (`Some` iff the request asked for
+    /// [`OutputMode::Soft`]): the sign encodes the hard decision
+    /// (positive = bit 0, the channel-LLR convention) and the
+    /// magnitude is the SOVA reliability.
+    pub soft: Option<Vec<f32>>,
+    /// Decode-side statistics.
+    pub stats: DecodeStats,
+}
+
+impl DecodeOutput {
+    /// A hard-output response.
+    pub fn hard(bits: Vec<u8>, stats: DecodeStats) -> Self {
+        DecodeOutput { bits, soft: None, stats }
+    }
+}
+
+/// Typed decode failure; replaces the seed-era `assert_eq!` panics.
+///
+/// Marked `#[non_exhaustive]`: future request features (tail-biting
+/// iteration caps, per-request geometry) will add variants.
+#[derive(Debug, Clone, PartialEq)]
+#[non_exhaustive]
+pub enum DecodeError {
+    /// `llrs.len()` does not equal `stages · β` for the engine's code.
+    LlrLengthMismatch {
+        /// `stages · β` for the engine's code.
+        expected: usize,
+        /// The request's actual LLR count.
+        got: usize,
+    },
+    /// The engine does not implement the requested output mode.
+    UnsupportedOutput {
+        /// Name of the refusing engine.
+        engine: String,
+        /// The requested mode.
+        mode: OutputMode,
+    },
+    /// The request is malformed in a way no stage count can fix (e.g.
+    /// the coordinator received an LLR payload that is not a multiple
+    /// of β, so no framing could be derived from it).
+    InvalidRequest {
+        /// Human-readable description of the malformation.
+        reason: String,
+    },
+    /// The backing runtime failed (PJRT executor, coordinator worker).
+    Backend {
+        /// Human-readable failure chain.
+        reason: String,
+    },
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::LlrLengthMismatch { expected, got } => {
+                write!(f, "LLR length mismatch: expected {expected} values, got {got}")
+            }
+            DecodeError::UnsupportedOutput { engine, mode } => {
+                write!(f, "engine {engine} does not support {mode} output")
+            }
+            DecodeError::InvalidRequest { reason } => {
+                write!(f, "invalid request: {reason}")
+            }
+            DecodeError::Backend { reason } => write!(f, "backend failure: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Traceback start at a frame's final stage: state 0 only when the
+/// frame is the stream's last *and* the trellis is terminated; the
+/// argmax path metric otherwise.
+///
+/// This is the one place the `(is_last, StreamEnd)` rule lives — the
+/// tiled, scalar, parallel and lane engines all call it.
+pub fn final_traceback_start(end: StreamEnd, is_last: bool) -> TracebackStart {
+    match (is_last, end) {
+        (true, StreamEnd::Terminated) => TracebackStart::State(0),
+        _ => TracebackStart::BestMetric,
+    }
+}
+
+/// A stream decoder: [`DecodeRequest`] in, [`DecodeOutput`] out.
 ///
 /// Deliberately *not* `Send + Sync`: the PJRT-backed engine wraps
 /// `Rc`-based xla-crate handles and must stay on one thread (the
@@ -32,15 +201,33 @@ pub trait Engine {
     /// `unified(f=256,v1=20,v2=45,f0=32)`).
     fn name(&self) -> &str;
 
-    /// Decode `stages` trellis stages. `llrs.len() == stages · β`.
-    fn decode_stream(&self, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8>;
+    /// Decode one request. The primary entry point: length validation
+    /// and output-mode negotiation happen here, and errors are values.
+    fn decode(&self, req: &DecodeRequest<'_>) -> Result<DecodeOutput, DecodeError>;
 
     /// The code this engine decodes.
     fn spec(&self) -> &CodeSpec;
+
+    /// Seed-era entry point, kept as a thin shim over [`Engine::decode`].
+    /// Panics on any [`DecodeError`] — exactly the legacy behavior.
+    #[deprecated(note = "use Engine::decode with a DecodeRequest")]
+    fn decode_stream(&self, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+        self.decode(&DecodeRequest::hard(llrs, stages, end))
+            .unwrap_or_else(|e| panic!("decode_stream: {e}"))
+            .bits
+    }
 }
 
 /// A thread-safe engine handle (native engines all qualify).
 pub type SharedEngine = std::sync::Arc<dyn Engine + Send + Sync>;
+
+/// Path metric of the traceback start state in `row`.
+fn metric_at(row: &[f32], tb: TracebackStart) -> f32 {
+    match tb {
+        TracebackStart::BestMetric => row[argmax(row)],
+        TracebackStart::State(s) => row[s as usize],
+    }
+}
 
 /// Method (a): whole-stream decode, no tiling.
 pub struct ScalarEngine {
@@ -63,14 +250,39 @@ impl Engine for ScalarEngine {
         &self.spec
     }
 
-    fn decode_stream(&self, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
-        assert_eq!(llrs.len(), stages * self.spec.beta as usize);
-        let mut dec = ScalarDecoder::new(self.spec.clone());
-        let tb = match end {
-            StreamEnd::Terminated => TracebackStart::State(0),
-            StreamEnd::Truncated => TracebackStart::BestMetric,
-        };
-        dec.decode(llrs, Some(0), tb)
+    fn decode(&self, req: &DecodeRequest<'_>) -> Result<DecodeOutput, DecodeError> {
+        req.validate(&self.spec)?;
+        let tb = final_traceback_start(req.end, true);
+        let stats = |fm: f32| DecodeStats { final_metric: Some(fm), frames: 1 };
+        match req.output {
+            OutputMode::Hard => {
+                let mut dec = ScalarDecoder::new(self.spec.clone());
+                let bits = dec.decode(req.llrs, Some(0), tb);
+                let fm = metric_at(dec.final_metrics(req.stages), tb);
+                Ok(DecodeOutput::hard(bits, stats(fm)))
+            }
+            OutputMode::Soft => {
+                let trellis = Trellis::new(self.spec.clone());
+                let mut scratch = FrameScratch::new(trellis.num_states(), req.stages.max(1));
+                let mut sova = SovaScratch::new();
+                let mut bits = vec![0u8; req.stages];
+                let mut rel = vec![0f32; req.stages];
+                let fm = sova_decode_frame(
+                    &trellis,
+                    req.llrs,
+                    Some(0),
+                    tb,
+                    0,
+                    req.stages,
+                    &mut scratch,
+                    &mut sova,
+                    &mut bits,
+                    &mut rel,
+                );
+                let soft = signed_soft(&bits, &rel);
+                Ok(DecodeOutput { bits, soft: Some(soft), stats: stats(fm) })
+            }
+        }
     }
 }
 
@@ -123,10 +335,7 @@ impl TiledEngine {
     ) {
         let start_state = if span.index == 0 { Some(0) } else { None };
         let is_last = span.out_start + span.out_len == stages;
-        let tb = match (is_last, end) {
-            (true, StreamEnd::Terminated) => TracebackStart::State(0),
-            _ => TracebackStart::BestMetric,
-        };
+        let tb = final_traceback_start(end, is_last);
         match &self.mode {
             TracebackMode::FrameSerial => {
                 decode_frame_serial(&self.trellis, llrs, span, start_state, tb, scratch, out)
@@ -144,6 +353,43 @@ impl TiledEngine {
         }
     }
 
+    /// Decode one frame with SOVA soft output: hard bits into
+    /// `out_bits`, reliability magnitudes into `out_rel` (both
+    /// `span.out_len` long). Returns the frame's final path metric.
+    ///
+    /// Soft decode always traces the frame's maximum-likelihood path
+    /// serially (the SOVA competitor sweep needs that one path),
+    /// regardless of the engine's hard-output [`TracebackMode`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_frame_soft(
+        &self,
+        llrs: &[f32],
+        span: &crate::frames::plan::FrameSpan,
+        stages: usize,
+        end: StreamEnd,
+        scratch: &mut FrameScratch,
+        sova: &mut SovaScratch,
+        out_bits: &mut [u8],
+        out_rel: &mut [f32],
+    ) -> f32 {
+        let start_state = if span.index == 0 { Some(0) } else { None };
+        let is_last = span.out_start + span.out_len == stages;
+        let tb = final_traceback_start(end, is_last);
+        let head = span.head();
+        sova_decode_frame(
+            &self.trellis,
+            llrs,
+            start_state,
+            tb,
+            head,
+            head + span.out_len,
+            scratch,
+            sova,
+            out_bits,
+            out_rel,
+        )
+    }
+
     /// The engine's precomputed trellis tables.
     pub fn trellis(&self) -> &Trellis {
         &self.trellis
@@ -159,25 +405,66 @@ impl Engine for TiledEngine {
         &self.spec
     }
 
-    fn decode_stream(&self, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+    fn decode(&self, req: &DecodeRequest<'_>) -> Result<DecodeOutput, DecodeError> {
+        req.validate(&self.spec)?;
         let beta = self.spec.beta as usize;
-        assert_eq!(llrs.len(), stages * beta);
+        let stages = req.stages;
         let spans = plan_frames(stages, self.geo);
         let mut scratch = FrameScratch::new(self.trellis.num_states(), self.geo.span());
-        let mut out = vec![0u8; stages];
-        for span in &spans {
-            let fl = &llrs[span.start * beta..(span.start + span.len) * beta];
-            self.decode_frame(
-                fl,
-                span,
-                stages,
-                end,
-                &mut scratch,
-                &mut out[span.out_start..span.out_start + span.out_len],
-            );
+        let mut bits = vec![0u8; stages];
+        let mut stats = DecodeStats { final_metric: None, frames: spans.len() };
+        match req.output {
+            OutputMode::Hard => {
+                for span in &spans {
+                    let fl = llr_slice(req.llrs, span, beta);
+                    self.decode_frame(
+                        fl,
+                        span,
+                        stages,
+                        req.end,
+                        &mut scratch,
+                        &mut bits[span.out_start..span.out_start + span.out_len],
+                    );
+                }
+                if let Some(last) = spans.last() {
+                    // The forward pass leaves the final σ row in
+                    // pm[len & 1] (same parity argument as ScalarDecoder).
+                    let row = &scratch.pm[last.len & 1];
+                    stats.final_metric =
+                        Some(metric_at(row, final_traceback_start(req.end, true)));
+                }
+                Ok(DecodeOutput::hard(bits, stats))
+            }
+            OutputMode::Soft => {
+                let mut sova = SovaScratch::new();
+                let mut rel = vec![0f32; stages];
+                for span in &spans {
+                    let fl = llr_slice(req.llrs, span, beta);
+                    let is_last = span.out_start + span.out_len == stages;
+                    let fm = self.decode_frame_soft(
+                        fl,
+                        span,
+                        stages,
+                        req.end,
+                        &mut scratch,
+                        &mut sova,
+                        &mut bits[span.out_start..span.out_start + span.out_len],
+                        &mut rel[span.out_start..span.out_start + span.out_len],
+                    );
+                    if is_last {
+                        stats.final_metric = Some(fm);
+                    }
+                }
+                let soft = signed_soft(&bits, &rel);
+                Ok(DecodeOutput { bits, soft: Some(soft), stats })
+            }
         }
-        out
     }
+}
+
+/// The frame's stage-major LLR window within the stream.
+fn llr_slice<'a>(llrs: &'a [f32], span: &crate::frames::plan::FrameSpan, beta: usize) -> &'a [f32] {
+    &llrs[span.start * beta..(span.start + span.len) * beta]
 }
 
 #[cfg(test)]
@@ -205,6 +492,10 @@ mod tests {
         (bits, llrs, stages, spec)
     }
 
+    fn decode_bits(e: &dyn Engine, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+        e.decode(&DecodeRequest::hard(llrs, stages, end)).expect("decode").bits
+    }
+
     #[test]
     fn engines_agree_on_clean_channel() {
         let (bits, llrs, stages, spec) = noisy_setup(5000, 10.0, 40);
@@ -226,7 +517,7 @@ mod tests {
             )),
         ];
         for e in &engines {
-            let out = e.decode_stream(&llrs, stages, StreamEnd::Terminated);
+            let out = decode_bits(e.as_ref(), &llrs, stages, StreamEnd::Terminated);
             assert_eq!(&out[..bits.len()], &bits[..], "engine {}", e.name());
         }
     }
@@ -253,13 +544,107 @@ mod tests {
             TracebackMode::FrameSerial,
         );
         let es = count_bit_errors(
-            &scalar.decode_stream(&llrs, stages, StreamEnd::Terminated)[..bits.len()],
+            &decode_bits(&scalar, &llrs, stages, StreamEnd::Terminated)[..bits.len()],
             &bits,
         );
         let et = count_bit_errors(
-            &tiled.decode_stream(&llrs, stages, StreamEnd::Terminated)[..bits.len()],
+            &decode_bits(&tiled, &llrs, stages, StreamEnd::Terminated)[..bits.len()],
             &bits,
         );
         assert!(et as f64 <= es as f64 * 1.4 + 10.0, "tiled {et} vs scalar {es}");
+    }
+
+    #[test]
+    fn length_mismatch_is_a_value_not_a_panic() {
+        let spec = CodeSpec::standard_k7();
+        let scalar = ScalarEngine::new(spec.clone());
+        let err = scalar
+            .decode(&DecodeRequest::hard(&[0.0; 7], 4, StreamEnd::Truncated))
+            .unwrap_err();
+        assert_eq!(err, DecodeError::LlrLengthMismatch { expected: 8, got: 7 });
+        assert!(err.to_string().contains("expected 8"));
+    }
+
+    #[test]
+    fn stats_report_frames_and_final_metric() {
+        let (_bits, llrs, stages, spec) = noisy_setup(2000, 6.0, 42);
+        let tiled = TiledEngine::new(
+            spec.clone(),
+            FrameGeometry::new(256, 20, 20),
+            TracebackMode::FrameSerial,
+        );
+        let out = tiled
+            .decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Terminated))
+            .unwrap();
+        assert_eq!(out.stats.frames, (stages + 255) / 256);
+        assert!(out.stats.final_metric.is_some());
+        let scalar = ScalarEngine::new(spec);
+        let out = scalar
+            .decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Terminated))
+            .unwrap();
+        assert_eq!(out.stats.frames, 1);
+        assert!(out.stats.final_metric.unwrap().is_finite());
+    }
+
+    #[test]
+    fn soft_output_signs_encode_hard_bits() {
+        let (bits, llrs, stages, spec) = noisy_setup(3000, 3.0, 43);
+        for e in [
+            Box::new(ScalarEngine::new(spec.clone())) as Box<dyn Engine>,
+            Box::new(TiledEngine::new(
+                spec.clone(),
+                FrameGeometry::new(256, 20, 45),
+                TracebackMode::Parallel(ParallelTraceback::new(
+                    32,
+                    45,
+                    StartPolicy::StoredArgmax,
+                )),
+            )),
+        ] {
+            let out =
+                e.decode(&DecodeRequest::soft(&llrs, stages, StreamEnd::Terminated)).unwrap();
+            let soft = out.soft.expect("soft requested");
+            assert_eq!(soft.len(), stages);
+            for (t, (&b, &s)) in out.bits.iter().zip(&soft).enumerate() {
+                // A 0.0 reliability is a genuine tie; the sign bit
+                // still encodes the decision (−0.0 for bit 1).
+                assert_eq!(
+                    b == 1,
+                    s.is_sign_negative(),
+                    "sign/bit mismatch at {t} ({})",
+                    e.name()
+                );
+            }
+            // The decoded message still matches at this SNR.
+            let errs = count_bit_errors(&out.bits[..bits.len()], &bits);
+            assert!(errs < 10, "{}: {errs} errors", e.name());
+        }
+    }
+
+    #[test]
+    fn deprecated_shim_matches_decode() {
+        let (_bits, llrs, stages, spec) = noisy_setup(1000, 5.0, 44);
+        let scalar = ScalarEngine::new(spec);
+        #[allow(deprecated)]
+        let via_shim = scalar.decode_stream(&llrs, stages, StreamEnd::Terminated);
+        let via_decode =
+            scalar.decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Terminated)).unwrap();
+        assert_eq!(via_shim, via_decode.bits);
+    }
+
+    #[test]
+    fn final_traceback_start_rule() {
+        assert_eq!(
+            final_traceback_start(StreamEnd::Terminated, true),
+            TracebackStart::State(0)
+        );
+        assert_eq!(
+            final_traceback_start(StreamEnd::Terminated, false),
+            TracebackStart::BestMetric
+        );
+        assert_eq!(
+            final_traceback_start(StreamEnd::Truncated, true),
+            TracebackStart::BestMetric
+        );
     }
 }

@@ -26,6 +26,7 @@ pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
             crate::memmodel::traceback_working_bytes(p.spec.num_states(), p.stream_stages)
         },
         lane_width: |_| 1,
+        soft_output: false,
     }
 }
 
@@ -42,7 +43,8 @@ impl<E: Engine> HardEngine<E> {
         HardEngine { inner, name }
     }
 
-    /// Decode from received hard bits (0/1 per coded bit).
+    /// Decode from received hard bits (0/1 per coded bit). Panics on a
+    /// malformed length, like the legacy stream entry point.
     pub fn decode_bits(&self, coded: &[u8], stages: usize, end: StreamEnd) -> Vec<u8> {
         let llrs: Vec<f32> = coded
             .iter()
@@ -55,7 +57,10 @@ impl<E: Engine> HardEngine<E> {
                 }
             })
             .collect();
-        self.inner.decode_stream(&llrs, stages, end)
+        self.inner
+            .decode(&crate::viterbi::DecodeRequest::hard(&llrs, stages, end))
+            .unwrap_or_else(|e| panic!("hard decode: {e}"))
+            .bits
     }
 }
 
@@ -68,10 +73,25 @@ impl<E: Engine> Engine for HardEngine<E> {
         self.inner.spec()
     }
 
-    /// Soft input is clamped to its sign before decoding.
-    fn decode_stream(&self, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
-        let hard: Vec<f32> = llrs.iter().map(|&x| if x < 0.0 { -1.0 } else { 1.0 }).collect();
-        self.inner.decode_stream(&hard, stages, end)
+    /// Soft *input* is clamped to its sign before decoding; soft
+    /// *output* is refused — SOVA margins over sign-only metrics are
+    /// quantized to branch-weight multiples and would overstate
+    /// confidence, so the adapter stays hard-in/hard-out.
+    fn decode(
+        &self,
+        req: &crate::viterbi::DecodeRequest<'_>,
+    ) -> Result<crate::viterbi::DecodeOutput, crate::viterbi::DecodeError> {
+        use crate::viterbi::{DecodeError, DecodeRequest, OutputMode};
+        req.validate(self.inner.spec())?;
+        if req.output == OutputMode::Soft {
+            return Err(DecodeError::UnsupportedOutput {
+                engine: self.name.clone(),
+                mode: req.output,
+            });
+        }
+        let hard: Vec<f32> =
+            req.llrs.iter().map(|&x| if x < 0.0 { -1.0 } else { 1.0 }).collect();
+        self.inner.decode(&DecodeRequest::hard(&hard, req.stages, req.end))
     }
 }
 
@@ -81,7 +101,7 @@ mod tests {
     use crate::channel::{bpsk, llr, AwgnChannel, Rng64};
     use crate::code::{encode, Termination};
     use crate::util::bits::count_bit_errors;
-    use crate::viterbi::engine::ScalarEngine;
+    use crate::viterbi::engine::{DecodeRequest, ScalarEngine};
 
     #[test]
     fn decodes_error_free_bits() {
@@ -127,8 +147,14 @@ mod tests {
             let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
             let llrs = llr::llrs_from_samples(&rx, ch.sigma());
             let stages = bits.len() + 6;
-            let s = soft_eng.decode_stream(&llrs, stages, StreamEnd::Terminated);
-            let h = hard_eng.decode_stream(&llrs, stages, StreamEnd::Terminated);
+            let s = soft_eng
+                .decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Terminated))
+                .unwrap()
+                .bits;
+            let h = hard_eng
+                .decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Terminated))
+                .unwrap()
+                .bits;
             err_soft += count_bit_errors(&s[..bits.len()], &bits);
             err_hard += count_bit_errors(&h[..bits.len()], &bits);
         }

@@ -34,15 +34,20 @@ pub mod metrics;
 pub mod parallel;
 pub mod registry;
 pub mod scalar;
+pub mod sova;
 pub mod streaming;
 pub mod tiled;
 pub mod unified;
 
-pub use engine::{Engine, ScalarEngine, SharedEngine, StreamEnd, TiledEngine, TracebackMode};
+pub use engine::{
+    final_traceback_start, DecodeError, DecodeOutput, DecodeRequest, DecodeStats, Engine,
+    OutputMode, ScalarEngine, SharedEngine, StreamEnd, TiledEngine, TracebackMode,
+};
 pub use frame::FrameScratch;
 pub use hard::HardEngine;
 pub use parallel::ParallelEngine;
 pub use registry::{registry, BuildParams, EngineSpec};
 pub use scalar::{ScalarDecoder, TracebackStart};
+pub use sova::{signed_soft, sova_decode_frame, SovaScratch};
 pub use streaming::{StreamingDecoder, StreamingEngine};
 pub use unified::{ParallelTraceback, StartPolicy};

@@ -32,6 +32,7 @@ pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
                 * p.threads.min(frames).max(1)
         },
         lane_width: |_| 1,
+        soft_output: false,
     }
 }
 
@@ -139,9 +140,26 @@ impl Engine for ParallelEngine {
         self.inner.spec()
     }
 
-    fn decode_stream(&self, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
-        let spans = plan_frames(stages, self.inner.geo);
-        self.decode_spans(llrs, stages, end, &spans)
+    fn decode(
+        &self,
+        req: &crate::viterbi::DecodeRequest<'_>,
+    ) -> Result<crate::viterbi::DecodeOutput, crate::viterbi::DecodeError> {
+        use crate::viterbi::{DecodeError, DecodeOutput, DecodeStats, OutputMode};
+        req.validate(self.spec())?;
+        if req.output == OutputMode::Soft {
+            // SOVA is not threaded yet (the sweep would need per-frame
+            // reliability stitching across workers).
+            return Err(DecodeError::UnsupportedOutput {
+                engine: self.name.clone(),
+                mode: req.output,
+            });
+        }
+        let spans = plan_frames(req.stages, self.inner.geo);
+        let bits = self.decode_spans(req.llrs, req.stages, req.end, &spans);
+        Ok(DecodeOutput::hard(
+            bits,
+            DecodeStats { final_metric: None, frames: spans.len() },
+        ))
     }
 }
 
@@ -162,6 +180,12 @@ mod tests {
         )
     }
 
+    fn run(e: &dyn Engine, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+        e.decode(&crate::viterbi::DecodeRequest::hard(llrs, stages, end))
+            .expect("decode")
+            .bits
+    }
+
     #[test]
     fn parallel_equals_sequential() {
         let spec = CodeSpec::standard_k7();
@@ -180,9 +204,9 @@ mod tests {
         ] {
             let geo = FrameGeometry::new(256, 20, 45);
             let seq = TiledEngine::new(spec.clone(), geo, mode);
-            let seq_out = seq.decode_stream(&llrs, stages, StreamEnd::Terminated);
+            let seq_out = run(&seq, &llrs, stages, StreamEnd::Terminated);
             let par = make_parallel(mode, geo, 8);
-            let par_out = par.decode_stream(&llrs, stages, StreamEnd::Terminated);
+            let par_out = run(&par, &llrs, stages, StreamEnd::Terminated);
             assert_eq!(seq_out, par_out, "mode {:?}", par.name());
         }
     }
@@ -202,7 +226,7 @@ mod tests {
             FrameGeometry::new(128, 20, 20),
             1,
         );
-        let out = par.decode_stream(&llrs, stages, StreamEnd::Terminated);
+        let out = run(&par, &llrs, stages, StreamEnd::Terminated);
         assert_eq!(&out[..bits.len()], &bits[..]);
     }
 
@@ -213,7 +237,7 @@ mod tests {
             FrameGeometry::new(64, 8, 8),
             2,
         );
-        let out = par.decode_stream(&[], 0, StreamEnd::Truncated);
+        let out = run(&par, &[], 0, StreamEnd::Truncated);
         assert!(out.is_empty());
     }
 }

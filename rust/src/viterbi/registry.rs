@@ -79,6 +79,13 @@ pub struct EngineSpec {
     /// `lane_width` field): 1 for every per-frame engine, L for the
     /// lane-batched family.
     pub lane_width: fn(&BuildParams) -> usize,
+    /// Whether the engine implements [`OutputMode::Soft`] (SOVA
+    /// per-bit reliabilities). Engines with `false` answer
+    /// `DecodeError::UnsupportedOutput` to soft requests — enforced
+    /// registry-wide by `rust/tests/engine_api.rs`.
+    ///
+    /// [`OutputMode::Soft`]: super::engine::OutputMode::Soft
+    pub soft_output: bool,
 }
 
 impl std::fmt::Debug for EngineSpec {
@@ -86,6 +93,7 @@ impl std::fmt::Debug for EngineSpec {
         f.debug_struct("EngineSpec")
             .field("name", &self.name)
             .field("description", &self.description)
+            .field("soft_output", &self.soft_output)
             .finish()
     }
 }
@@ -170,6 +178,16 @@ mod tests {
                 assert_eq!(lw, 1, "{}", e.name);
             }
         }
+    }
+
+    #[test]
+    fn soft_output_flags_name_the_sova_ported_engines() {
+        // SOVA is implemented for the whole-stream reference and the
+        // TiledEngine family (tiled shares unified's sweep); everyone
+        // else must refuse soft requests until ported.
+        let soft: Vec<&str> =
+            registry().iter().filter(|e| e.soft_output).map(|e| e.name).collect();
+        assert_eq!(soft, vec!["scalar", "tiled", "unified"]);
     }
 
     #[test]

@@ -85,6 +85,7 @@ pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
             crate::memmodel::traceback_working_bytes(p.spec.num_states(), p.stream_stages)
         },
         lane_width: |_| 1,
+        soft_output: true,
     }
 }
 
@@ -419,6 +420,52 @@ pub(crate) fn acs_stage_butterfly_b2(
         }
     } else {
         words[0] = pack_signs64(&s0[..half]) | (pack_signs64(&s1[..half]) << half);
+    }
+}
+
+/// One ACS stage that additionally records, per target state, the
+/// margin Δ = |winner − loser| between the two competing path metrics
+/// (`deltas_t.len() == num_states`). The SOVA competitor sweep
+/// (`super::sova`) consumes these margins; the hard-decision hot path
+/// never pays for them.
+#[inline]
+pub(crate) fn acs_stage_from_llrs_deltas(
+    trellis: &Trellis,
+    llr_t: &[f32],
+    prev_row: &[f32],
+    acs: &mut AcsScratch,
+    cur_row: &mut [f32],
+    words: &mut [u64],
+    deltas_t: &mut [f32],
+) {
+    let ns = trellis.num_states();
+    debug_assert_eq!(deltas_t.len(), ns);
+    if trellis.butterfly_ok() {
+        // The butterfly already computes the signed differences into
+        // s0/s1 (that is where the decision bits come from); the
+        // margins are their magnitudes.
+        acs_stage_from_llrs(trellis, llr_t, prev_row, acs, cur_row, words);
+        let half = ns / 2;
+        let (d_lo, d_hi) = deltas_t.split_at_mut(half);
+        for j in 0..half {
+            d_lo[j] = acs.s0[j].abs();
+            d_hi[j] = acs.s1[j].abs();
+        }
+    } else {
+        let sm = StageMetrics::from_llrs(llr_t);
+        for w in words.iter_mut() {
+            *w = 0;
+        }
+        for j in 0..ns {
+            let p0 = trellis.prev[j][0] as usize;
+            let p1 = trellis.prev[j][1] as usize;
+            let m0 = prev_row[p0] + sm.metric(trellis.prev_output[j][0]);
+            let m1 = prev_row[p1] + sm.metric(trellis.prev_output[j][1]);
+            let take1 = m1 > m0;
+            cur_row[j] = if take1 { m1 } else { m0 };
+            words[j >> 6] |= (take1 as u64) << (j & 63);
+            deltas_t[j] = (m1 - m0).abs();
+        }
     }
 }
 

@@ -1,0 +1,294 @@
+//! Soft-output Viterbi (SOVA) — per-bit reliabilities alongside the
+//! hard decisions, so the decoder can sit inside a turbo/iterative
+//! receiver chain (Hagenauer & Hoeher 1989; the HR-SOVA update rule).
+//!
+//! The algorithm, per frame:
+//!
+//! 1. **Forward pass with margins** — the usual ACS recursion, but in
+//!    addition to the 1-bit survivor decisions it records, for every
+//!    state at every stage, the *margin* Δ = |winner − loser| between
+//!    the two competing path metrics
+//!    ([`super::scalar::acs_stage_from_llrs_deltas`]).
+//! 2. **Maximum-likelihood traceback** — one serial traceback from the
+//!    frame's final traceback start, recording the ML state sequence.
+//! 3. **Competitor sweep** — for every stage `s` on the ML path, the
+//!    discarded competitor (the losing predecessor at the ML state,
+//!    metric deficit Δₛ) is traced backwards through the survivor
+//!    memory until it re-merges with the ML path (or a depth cap).
+//!    Wherever the competitor's decoded bit differs from the ML bit at
+//!    stage `t ≤ s`, the reliability of bit `t` is lowered to
+//!    `min(rel[t], Δₛ)` — flipping bit `t` costs at least Δₛ metric.
+//!
+//! Reliabilities start at +∞ (a bit no competitor ever contradicts is
+//! certain) and are clamped to [`SOVA_REL_CLAMP`] so downstream
+//! consumers (JSON writers, LLR combiners) see finite values. The
+//! signed soft value convention matches the channel LLRs: positive
+//! favours bit 0 ([`signed_soft`]).
+
+use crate::code::Trellis;
+use super::frame::FrameScratch;
+use super::scalar::{acs_stage_from_llrs_deltas, argmax, pm_rows, TracebackStart};
+
+/// Competitor traces re-merge with the ML path within a few constraint
+/// lengths in practice; this cap bounds the sweep on adversarial
+/// inputs (≫ the 5·k convergence rule of thumb for every supported k).
+pub const SOVA_COMPETITOR_DEPTH: usize = 256;
+
+/// Finite stand-in for "no competitor ever contradicted this bit".
+pub const SOVA_REL_CLAMP: f32 = 1e30;
+
+/// Reusable SOVA working memory: per-(stage, state) ACS margins and
+/// the ML state path. Grows to the largest frame it has seen.
+#[derive(Default)]
+pub struct SovaScratch {
+    /// Δ margins, `stages × num_states`, stage-major.
+    deltas: Vec<f32>,
+    /// ML path: state at the *end* of each stage.
+    path: Vec<u32>,
+}
+
+impl SovaScratch {
+    /// Empty scratch; buffers are sized on first use.
+    pub fn new() -> Self {
+        SovaScratch::default()
+    }
+}
+
+/// Combine hard bits and reliability magnitudes into signed soft
+/// values: positive favours bit 0 (the channel-LLR convention), and
+/// `|soft[t]|` is the SOVA reliability of bit `t`.
+pub fn signed_soft(bits: &[u8], rel: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(bits.len(), rel.len());
+    bits.iter()
+        .zip(rel)
+        .map(|(&b, &r)| if b == 0 { r } else { -r })
+        .collect()
+}
+
+/// Decode one frame with SOVA: hard bits for stages
+/// `[emit_lo, emit_hi)` into `out_bits`, reliability magnitudes into
+/// `out_rel` (both `emit_hi − emit_lo` long). Returns the path metric
+/// at the traceback start.
+///
+/// `start_state` pins the initial path metric (stream head) exactly as
+/// in [`super::frame::forward_frame`]; competitor sweeps run over the
+/// *whole* frame (including the v1/v2 overlaps), so emitted
+/// reliabilities see every challenger the frame knows about.
+#[allow(clippy::too_many_arguments)]
+pub fn sova_decode_frame(
+    trellis: &Trellis,
+    llrs: &[f32],
+    start_state: Option<u32>,
+    tb: TracebackStart,
+    emit_lo: usize,
+    emit_hi: usize,
+    scratch: &mut FrameScratch,
+    sova: &mut SovaScratch,
+    out_bits: &mut [u8],
+    out_rel: &mut [f32],
+) -> f32 {
+    let beta = trellis.spec.beta as usize;
+    let ns = trellis.num_states();
+    debug_assert_eq!(llrs.len() % beta, 0);
+    let stages = llrs.len() / beta;
+    assert!(emit_lo <= emit_hi && emit_hi <= stages);
+    assert!(out_bits.len() >= emit_hi - emit_lo && out_rel.len() >= emit_hi - emit_lo);
+    if stages == 0 {
+        return 0.0;
+    }
+    scratch.ensure(ns, stages);
+    sova.deltas.resize(stages * ns, 0.0);
+    sova.path.resize(stages, 0);
+
+    // 1. Forward pass with margins.
+    match start_state {
+        Some(s) => {
+            scratch.pm[0].iter_mut().for_each(|x| *x = f32::NEG_INFINITY);
+            scratch.pm[0][s as usize] = 0.0;
+        }
+        None => scratch.pm[0].iter_mut().for_each(|x| *x = 0.0),
+    }
+    for t in 0..stages {
+        let llr_t = &llrs[t * beta..(t + 1) * beta];
+        let (prev_row, cur_row) = pm_rows(&mut scratch.pm, t & 1);
+        let words = scratch.decisions.stage_mut(t);
+        acs_stage_from_llrs_deltas(
+            trellis,
+            llr_t,
+            prev_row,
+            &mut scratch.acs,
+            cur_row,
+            words,
+            &mut sova.deltas[t * ns..(t + 1) * ns],
+        );
+        // Same periodic renormalization (and schedule) as
+        // `ScalarDecoder::forward`: keeps σ bounded on whole-stream
+        // soft decodes — margins are differences, so they are
+        // unaffected — and keeps the float recursion identical to the
+        // hard path, so Soft-mode bits match Hard-mode bits at any
+        // stream length.
+        if t % 4096 == 4095 {
+            let m = cur_row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            cur_row.iter_mut().for_each(|x| *x -= m);
+        }
+    }
+
+    // 2. ML traceback, recording the state at the end of each stage.
+    let final_row = &scratch.pm[stages & 1];
+    let start = match tb {
+        TracebackStart::BestMetric => argmax(final_row) as u32,
+        TracebackStart::State(s) => s,
+    };
+    let final_metric = final_row[start as usize];
+    let k = trellis.spec.k;
+    let mask = trellis.spec.state_mask();
+    let mut j = start;
+    for t in (0..stages).rev() {
+        sova.path[t] = j;
+        let d = scratch.decisions.get(t, j);
+        j = (2 * j + d) & mask;
+    }
+    for t in emit_lo..emit_hi {
+        out_bits[t - emit_lo] = (sova.path[t] >> (k - 2)) as u8;
+    }
+
+    // 3. Competitor sweep (HR-SOVA update rule).
+    let rel = &mut out_rel[..emit_hi - emit_lo];
+    rel.fill(f32::INFINITY);
+    for s in 0..stages {
+        let js = sova.path[s];
+        let delta = sova.deltas[s * ns + js as usize];
+        // ±∞/NaN margins mean the losing predecessor was unreachable —
+        // there is no competitor to sweep.
+        if !delta.is_finite() {
+            continue;
+        }
+        let d = scratch.decisions.get(s, js);
+        let mut jc = (2 * js + (1 - d)) & mask;
+        let floor = s.saturating_sub(SOVA_COMPETITOR_DEPTH);
+        let mut t = s;
+        while t > 0 {
+            t -= 1;
+            if jc == sova.path[t] {
+                break; // merged: all earlier bits agree
+            }
+            if t >= emit_lo && t < emit_hi {
+                let differs = (jc ^ sova.path[t]) >> (k - 2) != 0;
+                if differs && delta < rel[t - emit_lo] {
+                    rel[t - emit_lo] = delta;
+                }
+            }
+            if t == floor {
+                break;
+            }
+            let dc = scratch.decisions.get(t, jc);
+            jc = (2 * jc + dc) & mask;
+        }
+    }
+    rel.iter_mut().for_each(|r| *r = r.min(SOVA_REL_CLAMP));
+    final_metric
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{bpsk, llr, AwgnChannel, Rng64};
+    use crate::code::{encode, CodeSpec, Termination, Trellis};
+    use crate::viterbi::scalar::ScalarDecoder;
+
+    fn noisy(n: usize, ebn0: f64, seed: u64) -> (Vec<u8>, Vec<f32>, CodeSpec) {
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(seed);
+        let mut bits = vec![0u8; n];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let ch = AwgnChannel::new(ebn0, 0.5);
+        let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+        (bits, llr::llrs_from_samples(&rx, ch.sigma()), spec)
+    }
+
+    fn sova_whole_stream(
+        spec: &CodeSpec,
+        llrs: &[f32],
+        stages: usize,
+    ) -> (Vec<u8>, Vec<f32>) {
+        let trellis = Trellis::new(spec.clone());
+        let mut scratch = FrameScratch::new(trellis.num_states(), stages);
+        let mut sova = SovaScratch::new();
+        let mut bits = vec![0u8; stages];
+        let mut rel = vec![0f32; stages];
+        sova_decode_frame(
+            &trellis,
+            llrs,
+            Some(0),
+            TracebackStart::State(0),
+            0,
+            stages,
+            &mut scratch,
+            &mut sova,
+            &mut bits,
+            &mut rel,
+        );
+        (bits, rel)
+    }
+
+    #[test]
+    fn sova_hard_bits_match_scalar_decoder() {
+        // The SOVA forward pass replays ScalarDecoder's float
+        // recursion exactly — including the 4096-stage periodic
+        // renormalization — so the ML bits must match bit-for-bit
+        // even across the renormalization boundary.
+        let (_msg, llrs, spec) = noisy(5000, 2.5, 0x50FA);
+        let stages = 5006;
+        let (bits, rel) = sova_whole_stream(&spec, &llrs, stages);
+        let mut dec = ScalarDecoder::new(spec);
+        let reference = dec.decode(&llrs, Some(0), TracebackStart::State(0));
+        assert_eq!(bits, reference, "SOVA must ride the same ML path");
+        assert!(rel.iter().all(|&r| r > 0.0), "reliabilities must be positive");
+    }
+
+    #[test]
+    fn noiseless_bits_have_clamped_reliability_tail() {
+        // With no noise the ML path is unchallenged almost everywhere:
+        // reliabilities are large, none are zero or negative.
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(0x50FB);
+        let mut msg = vec![0u8; 400];
+        rng.fill_bits(&mut msg);
+        let enc = encode(&spec, &msg, Termination::Terminated);
+        let llrs: Vec<f32> =
+            enc.iter().map(|&b| if b == 0 { 4.0 } else { -4.0 }).collect();
+        let (bits, rel) = sova_whole_stream(&spec, &llrs, 406);
+        assert_eq!(&bits[..400], &msg[..]);
+        assert!(rel.iter().all(|&r| r > 1.0));
+        assert!(rel.iter().all(|&r| r <= SOVA_REL_CLAMP));
+    }
+
+    #[test]
+    fn flipped_bits_get_low_reliability() {
+        // Errors the decoder *almost* made should be the least-reliable
+        // bits: correlate reliability rank with correctness.
+        let (msg, llrs, spec) = noisy(20_000, 2.0, 0x50FC);
+        let stages = 20_006;
+        let (bits, rel) = sova_whole_stream(&spec, &llrs, stages);
+        let errs: Vec<usize> =
+            (0..msg.len()).filter(|&t| bits[t] != msg[t]).collect();
+        assert!(!errs.is_empty(), "need errors at 2 dB to rank");
+        let mut sorted: Vec<f32> = rel[..msg.len()].to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2];
+        let low_conf_errs = errs.iter().filter(|&&t| rel[t] < median).count();
+        assert!(
+            low_conf_errs * 2 > errs.len(),
+            "most errors ({} of {}) should sit below the median reliability",
+            low_conf_errs,
+            errs.len()
+        );
+    }
+
+    #[test]
+    fn signed_soft_convention() {
+        let soft = signed_soft(&[0, 1, 0], &[1.0, 2.0, 3.0]);
+        assert_eq!(soft, vec![1.0, -2.0, 3.0]);
+    }
+}

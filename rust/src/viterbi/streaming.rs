@@ -39,6 +39,7 @@ pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
             crate::memmodel::traceback_working_bytes(p.spec.num_states(), p.delay)
         },
         lane_width: |_| 1,
+        soft_output: false,
     }
 }
 
@@ -90,6 +91,15 @@ impl StreamingDecoder {
     /// Total stages consumed since construction.
     pub fn consumed_stages(&self) -> u64 {
         self.consumed
+    }
+
+    /// Current path metric of `state` (or of the best state when
+    /// `None`) — the value `finish` would start its traceback from.
+    pub fn final_metric(&self, state: Option<u32>) -> f32 {
+        match state {
+            Some(s) => self.pm[s as usize],
+            None => self.pm[argmax(&self.pm)],
+        }
     }
 
     /// Feed `stages = llrs.len()/β` new stages; returns the bits whose
@@ -165,7 +175,7 @@ impl StreamingDecoder {
 }
 
 /// Whole-stream [`Engine`] adapter over [`StreamingDecoder`]: each
-/// `decode_stream` call runs a fresh decoder over the stream (push
+/// `decode` call runs a fresh decoder over the stream (push
 /// everything, then flush), so the adapter is stateless and shareable
 /// like every other registry engine. A terminated stream flushes from
 /// state 0; a truncated one from the best final metric.
@@ -192,17 +202,33 @@ impl Engine for StreamingEngine {
         &self.spec
     }
 
-    fn decode_stream(&self, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
-        let beta = self.spec.beta as usize;
-        assert_eq!(llrs.len(), stages * beta);
+    fn decode(
+        &self,
+        req: &crate::viterbi::DecodeRequest<'_>,
+    ) -> Result<crate::viterbi::DecodeOutput, crate::viterbi::DecodeError> {
+        use crate::viterbi::{DecodeError, DecodeOutput, DecodeStats, OutputMode};
+        req.validate(&self.spec)?;
+        if req.output == OutputMode::Soft {
+            // A sliding window discards survivor history at the
+            // decision horizon, so the SOVA competitor sweep has
+            // nothing to trace; soft output needs a windowed SOVA port.
+            return Err(DecodeError::UnsupportedOutput {
+                engine: self.name.clone(),
+                mode: req.output,
+            });
+        }
         let mut dec = StreamingDecoder::new(self.spec.clone(), self.delay);
-        let mut out = dec.push(llrs);
-        let final_state = match end {
+        let mut bits = dec.push(req.llrs);
+        let final_state = match req.end {
             StreamEnd::Terminated => Some(0),
             StreamEnd::Truncated => None,
         };
-        out.extend(dec.finish(final_state));
-        out
+        let fm = dec.final_metric(final_state);
+        bits.extend(dec.finish(final_state));
+        Ok(DecodeOutput::hard(
+            bits,
+            DecodeStats { final_metric: Some(fm), frames: 1 },
+        ))
     }
 }
 
@@ -212,7 +238,7 @@ mod tests {
     use crate::channel::{bpsk, llr, AwgnChannel, Rng64};
     use crate::code::{encode, Termination};
     use crate::util::bits::count_bit_errors;
-    use crate::viterbi::{Engine, ScalarEngine, StreamEnd};
+    use crate::viterbi::{DecodeRequest, Engine, ScalarEngine, StreamEnd};
 
     fn noiseless(enc: &[u8]) -> Vec<f32> {
         enc.iter().map(|&b| if b == 0 { 3.0 } else { -3.0 }).collect()
@@ -255,7 +281,10 @@ mod tests {
         let stages = bits.len() + 6;
 
         let scalar = ScalarEngine::new(spec.clone());
-        let whole = scalar.decode_stream(&llrs, stages, StreamEnd::Terminated);
+        let whole = scalar
+            .decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Terminated))
+            .unwrap()
+            .bits;
         let e_whole = count_bit_errors(&whole[..bits.len()], &bits);
 
         let mut dec = StreamingDecoder::new(spec, 96);
@@ -345,7 +374,10 @@ mod tests {
         let stages = bits.len() + 6;
 
         let eng = StreamingEngine::new(spec.clone(), 64);
-        let via_engine = eng.decode_stream(&llrs, stages, StreamEnd::Terminated);
+        let via_engine = eng
+            .decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Terminated))
+            .unwrap()
+            .bits;
 
         let mut dec = StreamingDecoder::new(spec, 64);
         let mut manual = dec.push(&llrs);

@@ -28,6 +28,9 @@ pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
             crate::memmodel::traceback_working_bytes(p.spec.num_states(), p.geo.span())
         },
         lane_width: |_| 1,
+        // Shares TiledEngine's SOVA path with `unified` (the soft
+        // sweep always traces the frame serially anyway).
+        soft_output: true,
     }
 }
 
@@ -87,7 +90,7 @@ mod tests {
     /// Decode a whole stream frame-by-frame (the single-threaded tiled
     /// pipeline used by the tests; the engine module wires the same
     /// pieces with threading).
-    fn decode_stream(
+    fn decode_tiled(
         spec: &CodeSpec,
         llrs: &[f32],
         stages: usize,
@@ -130,7 +133,7 @@ mod tests {
         let enc = encode(&spec, &bits, Termination::Terminated);
         let stages = bits.len() + 6;
         let llrs = noiseless(&enc);
-        let tiled = decode_stream(&spec, &llrs, stages, FrameGeometry::new(256, 20, 20), true);
+        let tiled = decode_tiled(&spec, &llrs, stages, FrameGeometry::new(256, 20, 20), true);
         assert_eq!(&tiled[..bits.len()], &bits[..]);
     }
 
@@ -153,7 +156,7 @@ mod tests {
         let whole = scalar.decode(&llrs, Some(0), TracebackStart::State(0));
         let err_whole = count_bit_errors(&whole[..bits.len()], &bits);
 
-        let tiled = decode_stream(&spec, &llrs, stages, FrameGeometry::new(256, 20, 20), true);
+        let tiled = decode_tiled(&spec, &llrs, stages, FrameGeometry::new(256, 20, 20), true);
         let err_tiled = count_bit_errors(&tiled[..bits.len()], &bits);
 
         // Allow a tiny degradation margin (finite overlap).
@@ -178,7 +181,7 @@ mod tests {
         let llrs = llr::llrs_from_samples(&rx, ch.sigma());
 
         let errs = |v2: usize| {
-            let out = decode_stream(&spec, &llrs, stages, FrameGeometry::new(64, 20, v2), true);
+            let out = decode_tiled(&spec, &llrs, stages, FrameGeometry::new(64, 20, v2), true);
             count_bit_errors(&out[..bits.len()], &bits)
         };
         let e0 = errs(0);

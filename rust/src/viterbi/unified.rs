@@ -53,6 +53,7 @@ pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
                 + boundaries * 4
         },
         lane_width: |_| 1,
+        soft_output: true,
     }
 }
 
@@ -187,7 +188,7 @@ mod tests {
         enc.iter().map(|&b| if b == 0 { 3.0 } else { -3.0 }).collect()
     }
 
-    fn decode_stream(
+    fn decode_unified(
         spec: &CodeSpec,
         llrs: &[f32],
         stages: usize,
@@ -233,7 +234,7 @@ mod tests {
         let stages = bits.len() + 6;
         let llrs = noiseless(&enc);
         let ptb = ParallelTraceback::new(32, 45, StartPolicy::StoredArgmax);
-        let out = decode_stream(&spec, &llrs, stages, FrameGeometry::new(256, 20, 45), &ptb, true);
+        let out = decode_unified(&spec, &llrs, stages, FrameGeometry::new(256, 20, 45), &ptb, true);
         assert_eq!(&out[..bits.len()], &bits[..]);
     }
 
@@ -262,7 +263,7 @@ mod tests {
 
         let geo = FrameGeometry::new(256, 20, 45);
         let ptb = ParallelTraceback::new(32, 45, StartPolicy::StoredArgmax);
-        let par = decode_stream(&spec, &llrs, stages, geo, &ptb, true);
+        let par = decode_unified(&spec, &llrs, stages, geo, &ptb, true);
         let err_par = count_bit_errors(&par[..bits.len()], &bits);
 
         // Serial tiled baseline on same geometry.
@@ -305,7 +306,7 @@ mod tests {
         let geo = FrameGeometry::new(256, 20, 20);
         let run = |policy| {
             let ptb = ParallelTraceback::new(32, 20, policy);
-            let out = decode_stream(&spec, &llrs, stages, geo, &ptb, true);
+            let out = decode_unified(&spec, &llrs, stages, geo, &ptb, true);
             count_bit_errors(&out[..bits.len()], &bits)
         };
         let stored = run(StartPolicy::StoredArgmax);
@@ -326,7 +327,7 @@ mod tests {
         let stages = bits.len() + 4;
         let llrs = noiseless(&enc);
         let ptb = ParallelTraceback::new(1, 16, StartPolicy::StoredArgmax);
-        let out = decode_stream(&spec, &llrs, stages, FrameGeometry::new(64, 8, 16), &ptb, true);
+        let out = decode_unified(&spec, &llrs, stages, FrameGeometry::new(64, 8, 16), &ptb, true);
         assert_eq!(&out[..bits.len()], &bits[..]);
     }
 
@@ -343,7 +344,7 @@ mod tests {
         let llrs = llr::llrs_from_samples(&rx, ch.sigma());
         let geo = FrameGeometry::new(128, 20, 20);
         let ptb = ParallelTraceback::new(100_000, 20, StartPolicy::StoredArgmax);
-        let par = decode_stream(&spec, &llrs, stages, geo, &ptb, true);
+        let par = decode_unified(&spec, &llrs, stages, geo, &ptb, true);
         // Compare against serial tiled.
         let trellis = crate::code::Trellis::new(spec.clone());
         let spans = plan_frames(stages, geo);

@@ -67,7 +67,7 @@ fn uniform_batch_takes_the_lane_route_and_ragged_a_frame_route() {
     // batcher flushes a full 64-job batch, which the planner must send
     // down the SIMD lane route.
     let (bits, llrs) = noiseless_request(0xA07A, 64 * 32);
-    let resp = server.decode_blocking(llrs, StreamEnd::Truncated);
+    let resp = server.decode_blocking(llrs, StreamEnd::Truncated).unwrap();
     assert_eq!(resp.bits, bits);
     assert_eq!(resp.frames, 64);
     let m = server.metrics();
@@ -80,7 +80,7 @@ fn uniform_batch_takes_the_lane_route_and_ragged_a_frame_route() {
     // A single-frame request arrives alone (deadline flush): ragged
     // work goes down a per-frame route, never the lane route.
     let (bits1, llrs1) = noiseless_request(0xA07B, 20);
-    let resp1 = server.decode_blocking(llrs1, StreamEnd::Truncated);
+    let resp1 = server.decode_blocking(llrs1, StreamEnd::Truncated).unwrap();
     assert_eq!(resp1.bits, bits1);
     assert_eq!(resp1.frames, 1);
     let m = server.metrics();
@@ -107,7 +107,7 @@ fn auto_server_survives_concurrent_mixed_traffic() {
         let server = std::sync::Arc::clone(&server);
         handles.push(std::thread::spawn(move || {
             let (bits, llrs) = noiseless_request(0xC0 + t, 32 * (1 + t as usize * 3));
-            let resp = server.decode_blocking(llrs, StreamEnd::Truncated);
+            let resp = server.decode_blocking(llrs, StreamEnd::Truncated).unwrap();
             assert_eq!(resp.bits, bits, "stream {t}");
         }));
     }

@@ -85,13 +85,14 @@ fn property_reassembler_any_completion_order() {
         },
         |(frames, f, stages, order)| {
             let mut r = Reassembler::new();
-            r.expect(9, *frames, *stages, *f, Instant::now());
+            r.expect(9, *frames, *stages, *f, Instant::now(), false);
             let mut resp = None;
             for (k, &idx) in order.iter().enumerate() {
                 let fr = viterbi::coordinator::FrameResult {
                     request_id: 9,
                     frame_index: idx,
                     bits: vec![(idx % 2) as u8; *f],
+                    soft: None,
                 };
                 let got = r.accept(fr);
                 if k + 1 < order.len() {
@@ -139,6 +140,7 @@ fn property_batcher_respects_fifo_and_bounds_under_deadline_interleaving() {
                         frame_index: pushed,
                         llr_block: Vec::new(),
                         pin_state0: false,
+                        output: viterbi::viterbi::OutputMode::Hard,
                         submitted_at: Instant::now(),
                     };
                     pushed += 1;
@@ -185,7 +187,7 @@ fn server_stress_mixed_lengths_and_rejection() {
                 let enc = encode(&spec, &msg, Termination::Truncated);
                 let llrs: Vec<f32> =
                     enc.iter().map(|&b| if b == 0 { 4.0 } else { -4.0 }).collect();
-                let resp = server.decode_blocking(llrs, StreamEnd::Truncated);
+                let resp = server.decode_blocking(llrs, StreamEnd::Truncated).unwrap();
                 assert_eq!(resp.bits.len(), n);
                 // Noiseless: all but the trailing (no right context for
                 // the final stages of truncated streams) bits match.
@@ -223,6 +225,6 @@ fn try_submit_rejects_when_saturated() {
     // A 1-frame request is accepted and completes.
     let llrs = vec![0.5f32; 32 * 2];
     let id = server.try_submit(llrs, StreamEnd::Truncated).expect("small request fits");
-    let resp = server.wait(id);
+    let resp = server.wait(id).unwrap();
     assert_eq!(resp.bits.len(), 32);
 }

@@ -1,0 +1,165 @@
+//! Engine API contract tests, registry-wide: typed errors instead of
+//! panics on malformed input, soft-output capability matching each
+//! entry's `soft_output` flag, and the SOVA acceptance criterion
+//! (high-confidence bits have a strictly lower BER than low-confidence
+//! bits at Eb/N0 = 3 dB).
+
+use viterbi::ber::{measure_soft_split, BerConfig};
+use viterbi::channel::{bpsk, llr, AwgnChannel, Rng64};
+use viterbi::code::{encode, CodeSpec, Termination};
+use viterbi::frames::plan::FrameGeometry;
+use viterbi::viterbi::{registry, BuildParams, DecodeError, DecodeRequest, Engine as _, StreamEnd};
+
+fn params() -> BuildParams {
+    BuildParams {
+        spec: CodeSpec::standard_k7(),
+        geo: FrameGeometry::new(64, 12, 20),
+        f0: 16,
+        threads: 2,
+        delay: 96,
+        lanes: 8,
+        stream_stages: 1024,
+    }
+}
+
+fn noisy_workload(n: usize, ebn0: f64, seed: u64) -> (Vec<u8>, Vec<f32>, usize) {
+    let spec = CodeSpec::standard_k7();
+    let mut rng = Rng64::seeded(seed);
+    let mut bits = vec![0u8; n];
+    rng.fill_bits(&mut bits);
+    let enc = encode(&spec, &bits, Termination::Terminated);
+    let ch = AwgnChannel::new(ebn0, spec.rate());
+    let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+    (bits, llr::llrs_from_samples(&rx, ch.sigma()), n + 6)
+}
+
+#[test]
+fn every_engine_returns_typed_error_on_wrong_llr_length() {
+    // The seed-era API asserted; the redesigned API must answer with
+    // DecodeError::LlrLengthMismatch — for every registry engine.
+    let p = params();
+    let stages = 512usize;
+    let llrs = vec![0.5f32; stages * 2 - 3];
+    for entry in registry() {
+        let engine = (entry.build)(&p);
+        let err = engine
+            .decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Truncated))
+            .err()
+            .unwrap_or_else(|| panic!("{} accepted malformed LLRs", entry.name));
+        assert_eq!(
+            err,
+            DecodeError::LlrLengthMismatch { expected: 1024, got: 1021 },
+            "{}",
+            entry.name
+        );
+        // Soft requests validate the length too (before negotiating
+        // the output mode, so the more actionable error wins).
+        let err = engine
+            .decode(&DecodeRequest::soft(&llrs, stages, StreamEnd::Truncated))
+            .err()
+            .unwrap_or_else(|| panic!("{} accepted malformed soft request", entry.name));
+        assert!(
+            matches!(err, DecodeError::LlrLengthMismatch { .. }),
+            "{}: {err}",
+            entry.name
+        );
+    }
+}
+
+#[test]
+fn soft_capability_matches_registry_flag() {
+    let p = params();
+    let (bits, llrs, stages) = noisy_workload(1000, 4.0, 0xA921);
+    for entry in registry() {
+        let engine = (entry.build)(&p);
+        let result = engine.decode(&DecodeRequest::soft(&llrs, stages, StreamEnd::Terminated));
+        if entry.soft_output {
+            let out = result.unwrap_or_else(|e| panic!("{}: {e}", entry.name));
+            let soft = out.soft.expect("soft requested");
+            assert_eq!(soft.len(), stages, "{}", entry.name);
+            for (t, (&b, &s)) in out.bits.iter().zip(&soft).enumerate() {
+                assert_eq!(
+                    b == 1,
+                    s.is_sign_negative(),
+                    "{}: soft sign disagrees with bit at {t}",
+                    entry.name
+                );
+            }
+            // At 4 dB the decode itself is still essentially clean.
+            let errs = viterbi::util::bits::count_bit_errors(&out.bits[..bits.len()], &bits);
+            assert!(errs < 5, "{}: {errs} errors at 4 dB", entry.name);
+        } else {
+            let err = result.err().unwrap_or_else(|| {
+                panic!("{} has soft_output=false but accepted a soft request", entry.name)
+            });
+            assert!(
+                matches!(err, DecodeError::UnsupportedOutput { .. }),
+                "{}: wrong error {err}",
+                entry.name
+            );
+        }
+    }
+}
+
+#[test]
+fn hard_requests_never_return_soft_values() {
+    let p = params();
+    let (_bits, llrs, stages) = noisy_workload(500, 5.0, 0x5EED);
+    for entry in registry() {
+        let engine = (entry.build)(&p);
+        let out = engine
+            .decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Terminated))
+            .unwrap_or_else(|e| panic!("{}: {e}", entry.name));
+        assert!(out.soft.is_none(), "{}", entry.name);
+        assert_eq!(out.bits.len(), stages, "{}", entry.name);
+        assert!(out.stats.frames >= 1, "{}", entry.name);
+    }
+}
+
+#[test]
+fn deprecated_stream_shim_still_decodes() {
+    // The legacy entry point must stay behaviorally identical for the
+    // one release it survives as a shim.
+    let p = params();
+    let (bits, llrs, stages) = noisy_workload(800, 6.0, 0x0DD);
+    let engine = (registry()[0].build)(&p);
+    #[allow(deprecated)]
+    let out = engine.decode_stream(&llrs, stages, StreamEnd::Terminated);
+    assert_eq!(&out[..bits.len()], &bits[..]);
+}
+
+#[test]
+fn sova_reliabilities_separate_errors_for_scalar_and_unified() {
+    // The headline acceptance criterion: at Eb/N0 = 3 dB, bits the
+    // decoder marks confident (|soft| above the median) must show a
+    // strictly lower BER than bits it marks doubtful.
+    let spec = CodeSpec::standard_k7();
+    let cfg = BerConfig {
+        block_bits: 8192,
+        target_errors: 80,
+        max_bits: 800_000,
+        seed: 0x50FA_CE,
+        puncture: None,
+    };
+    for name in ["scalar", "unified"] {
+        let entry = viterbi::viterbi::registry::find(name).unwrap();
+        assert!(entry.soft_output, "{name} must advertise soft output");
+        let mut p = params();
+        p.geo = FrameGeometry::new(256, 20, 45);
+        p.f0 = 32;
+        let engine = (entry.build)(&p);
+        let split = measure_soft_split(&spec, engine.as_ref(), &cfg, 3.0)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(split.reliable, "{name}: not enough errors observed {split:?}");
+        assert!(
+            split.separates(),
+            "{name}: high-conf BER {:.3e} not below low-conf BER {:.3e}",
+            split.high_conf_ber,
+            split.low_conf_ber
+        );
+        assert!(
+            split.high_conf_ber * 2.0 < split.low_conf_ber,
+            "{name}: confidence split too weak {split:?}"
+        );
+    }
+}

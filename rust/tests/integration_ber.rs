@@ -14,9 +14,14 @@ use viterbi::util::bits::count_bit_errors;
 use viterbi::util::check;
 use viterbi::util::threadpool::ThreadPool;
 use viterbi::viterbi::{
-    Engine, HardEngine, ParallelEngine, ParallelTraceback, ScalarEngine, StartPolicy,
-    StreamEnd, TiledEngine, TracebackMode,
+    DecodeRequest, Engine, HardEngine, ParallelEngine, ParallelTraceback, ScalarEngine,
+    StartPolicy, StreamEnd, TiledEngine, TracebackMode,
 };
+
+/// Decode helper over the request/response engine API.
+fn run(e: &dyn Engine, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+    e.decode(&DecodeRequest::hard(llrs, stages, end)).expect("decode").bits
+}
 
 fn engines(spec: &CodeSpec) -> Vec<Box<dyn Engine>> {
     vec![
@@ -60,7 +65,7 @@ fn every_engine_survives_the_full_chain() {
     let stages = n + 6;
 
     for engine in engines(&spec) {
-        let out = engine.decode_stream(&llrs, stages, StreamEnd::Terminated);
+        let out = run(engine.as_ref(), &llrs, stages, StreamEnd::Terminated);
         let errors = count_bit_errors(&out[..n], &msg);
         let ber = errors as f64 / n as f64;
         assert!(
@@ -94,7 +99,7 @@ fn punctured_chain_all_rates() {
         let rx = ch.transmit(&bpsk::modulate(&tx), &mut rng);
         let rx_llrs = llr::llrs_from_samples(&rx, ch.sigma());
         let full = depuncture_llrs(&rx_llrs, 2, &pat, stages);
-        let out = engine.decode_stream(&full, stages, StreamEnd::Terminated);
+        let out = run(&engine, &full, stages, StreamEnd::Terminated);
         bers.push(count_bit_errors(&out[..n], &msg) as f64 / n as f64);
     }
     // Monotone degradation with rate (allowing zero-error ties at the
@@ -119,17 +124,17 @@ fn quantized_llrs_cost_little_at_6bits() {
     let stages = n + 6;
 
     let e_float = count_bit_errors(
-        &engine.decode_stream(&llrs, stages, StreamEnd::Terminated)[..n],
+        &run(&engine, &llrs, stages, StreamEnd::Terminated)[..n],
         &msg,
     );
     let q6 = LlrQuantizer::new(6, 16.0);
     let e_q6 = count_bit_errors(
-        &engine.decode_stream(&q6.roundtrip(&llrs), stages, StreamEnd::Terminated)[..n],
+        &run(&engine, &q6.roundtrip(&llrs), stages, StreamEnd::Terminated)[..n],
         &msg,
     );
     let q2 = LlrQuantizer::new(2, 16.0);
     let e_q2 = count_bit_errors(
-        &engine.decode_stream(&q2.roundtrip(&llrs), stages, StreamEnd::Terminated)[..n],
+        &run(&engine, &q2.roundtrip(&llrs), stages, StreamEnd::Terminated)[..n],
         &msg,
     );
     assert!(
@@ -209,7 +214,7 @@ fn property_roundtrip_noiseless_random_geometry() {
                     StartPolicy::StoredArgmax,
                 )),
             );
-            let out = engine.decode_stream(&llrs, n + 6, StreamEnd::Terminated);
+            let out = run(&engine, &llrs, n + 6, StreamEnd::Terminated);
             assert_eq!(&out[..n], &msg[..], "f={f} v1={v1} v2={v2} f0={f0} n={n}");
         },
     );
@@ -266,8 +271,8 @@ fn property_llr_scale_invariance() {
             let rx = ch.transmit(&bpsk::modulate(&coded), &mut rng);
             let llrs = llr::llrs_from_samples(&rx, ch.sigma());
             let scaled: Vec<f32> = llrs.iter().map(|&x| x * scale as f32).collect();
-            let a = engine.decode_stream(&llrs, 806, StreamEnd::Terminated);
-            let b = engine.decode_stream(&scaled, 806, StreamEnd::Terminated);
+            let a = run(&engine, &llrs, 806, StreamEnd::Terminated);
+            let b = run(&engine, &scaled, 806, StreamEnd::Terminated);
             assert_eq!(a, b, "scale {scale}");
         },
     );

@@ -12,8 +12,13 @@ use viterbi::frames::plan::FrameGeometry;
 use viterbi::lanes::{LanesEngine, LanesMtEngine};
 use viterbi::util::threadpool::ThreadPool;
 use viterbi::viterbi::{
-    Engine as _, ParallelTraceback, StartPolicy, StreamEnd, TiledEngine, TracebackMode,
+    DecodeRequest, Engine, ParallelTraceback, StartPolicy, StreamEnd, TiledEngine,
+    TracebackMode,
 };
+
+fn run(e: &dyn Engine, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+    e.decode(&DecodeRequest::hard(llrs, stages, end)).expect("decode").bits
+}
 
 /// Noisy terminated workload for `spec` at `ebn0` dB.
 fn workload(spec: &CodeSpec, n: usize, ebn0: f64, seed: u64) -> (Vec<f32>, usize) {
@@ -47,11 +52,11 @@ fn lanes_and_lanes_mt_match_unified_bit_for_bit() {
                 let ptb = ParallelTraceback::new(*f0, geo.v2, StartPolicy::StoredArgmax);
                 let unified =
                     TiledEngine::new(spec.clone(), *geo, TracebackMode::Parallel(ptb));
-                let reference = unified.decode_stream(&llrs, stages, StreamEnd::Terminated);
+                let reference = run(&unified, &llrs, stages, StreamEnd::Terminated);
 
                 for lanes in [4usize, 64] {
                     let e = LanesEngine::new(spec.clone(), *geo, ptb, lanes);
-                    let out = e.decode_stream(&llrs, stages, StreamEnd::Terminated);
+                    let out = run(&e, &llrs, stages, StreamEnd::Terminated);
                     assert_eq!(
                         out, reference,
                         "lanes(L={lanes}) vs unified: K={} snr={snr} seed={seed:#x}",
@@ -61,7 +66,7 @@ fn lanes_and_lanes_mt_match_unified_bit_for_bit() {
                         LanesEngine::new(spec.clone(), *geo, ptb, lanes),
                         Arc::clone(&pool),
                     );
-                    let out_mt = mt.decode_stream(&llrs, stages, StreamEnd::Terminated);
+                    let out_mt = run(&mt, &llrs, stages, StreamEnd::Terminated);
                     assert_eq!(
                         out_mt, reference,
                         "lanes-mt(L={lanes}) vs unified: K={} snr={snr} seed={seed:#x}",
@@ -90,7 +95,7 @@ fn truncated_streams_match_too() {
     let llrs = llr::llrs_from_samples(&rx, ch.sigma());
 
     let unified = TiledEngine::new(spec.clone(), geo, TracebackMode::Parallel(ptb));
-    let reference = unified.decode_stream(&llrs, stages, StreamEnd::Truncated);
+    let reference = run(&unified, &llrs, stages, StreamEnd::Truncated);
     let e = LanesEngine::new(spec.clone(), geo, ptb, 64);
-    assert_eq!(e.decode_stream(&llrs, stages, StreamEnd::Truncated), reference);
+    assert_eq!(run(&e, &llrs, stages, StreamEnd::Truncated), reference);
 }

@@ -7,7 +7,7 @@ use viterbi::channel::{bpsk, llr, AwgnChannel, Rng64};
 use viterbi::code::{encode, CodeSpec, Termination};
 use viterbi::frames::plan::FrameGeometry;
 use viterbi::util::bits::count_bit_errors;
-use viterbi::viterbi::{registry, BuildParams, Engine as _, StreamEnd};
+use viterbi::viterbi::{registry, BuildParams, DecodeRequest, Engine as _, StreamEnd};
 
 fn high_snr_workload(n: usize, seed: u64) -> (Vec<u8>, Vec<f32>, usize) {
     let spec = CodeSpec::standard_k7();
@@ -41,7 +41,10 @@ fn every_registry_engine_roundtrips_k7_frame_error_free() {
     assert_eq!(reg.len(), 9, "engine silently dropped from the registry");
     for entry in &reg {
         let engine = (entry.build)(&params);
-        let out = engine.decode_stream(&llrs, stages, StreamEnd::Terminated);
+        let out = engine
+            .decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Terminated))
+            .expect("decode")
+            .bits;
         assert_eq!(out.len(), stages, "{}: wrong output length", entry.name);
         let errors = count_bit_errors(&out[..bits.len()], &bits);
         assert_eq!(

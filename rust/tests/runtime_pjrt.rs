@@ -10,7 +10,8 @@ use viterbi::code::{encode, CodeSpec, Termination};
 use viterbi::frames::plan::FrameGeometry;
 use viterbi::runtime::{Manifest, PjrtEngine, PjrtRuntime, ExecutorPool};
 use viterbi::viterbi::{
-    Engine, ParallelTraceback, StartPolicy, StreamEnd, TiledEngine, TracebackMode,
+    DecodeRequest, Engine, ParallelTraceback, StartPolicy, StreamEnd, TiledEngine,
+    TracebackMode,
 };
 
 fn manifest() -> Option<Manifest> {
@@ -52,7 +53,10 @@ fn pjrt_decodes_noiseless_k5() {
     rng.fill_bits(&mut bits);
     let enc = encode(&spec, &bits, Termination::Truncated);
     let llrs: Vec<f32> = enc.iter().map(|&b| if b == 0 { 4.0 } else { -4.0 }).collect();
-    let out = engine.decode_stream(&llrs, bits.len(), StreamEnd::Truncated);
+    let out = engine
+        .decode(&DecodeRequest::hard(&llrs, bits.len(), StreamEnd::Truncated))
+        .unwrap()
+        .bits;
     assert_eq!(out, bits);
 }
 
@@ -78,7 +82,10 @@ fn pjrt_matches_native_engine_on_noisy_stream() {
     let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
     let llrs = llr::llrs_from_samples(&rx, ch.sigma());
 
-    let pjrt_out = engine.decode_stream(&llrs, bits.len(), StreamEnd::Truncated);
+    let pjrt_out = engine
+        .decode(&DecodeRequest::hard(&llrs, bits.len(), StreamEnd::Truncated))
+        .unwrap()
+        .bits;
 
     // Native engine fed the exact same zero-padded frame blocks.
     let native = native_equivalent(&meta);
@@ -130,7 +137,10 @@ fn pjrt_ref_artifact_matches_unified_serial() {
     let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
     let llrs = llr::llrs_from_samples(&rx, ch.sigma());
 
-    let pjrt_out = engine.decode_stream(&llrs, bits.len(), StreamEnd::Truncated);
+    let pjrt_out = engine
+        .decode(&DecodeRequest::hard(&llrs, bits.len(), StreamEnd::Truncated))
+        .unwrap()
+        .bits;
 
     let native = TiledEngine::new(spec.clone(), meta.geo, TracebackMode::FrameSerial);
     let beta = spec.beta as usize;
@@ -173,7 +183,10 @@ fn pjrt_bucket_routing_handles_odd_frame_counts() {
     rng.fill_bits(&mut bits);
     let enc = encode(&spec, &bits, Termination::Truncated);
     let llrs: Vec<f32> = enc.iter().map(|&b| if b == 0 { 4.0 } else { -4.0 }).collect();
-    let out = engine.decode_stream(&llrs, bits.len(), StreamEnd::Truncated);
+    let out = engine
+        .decode(&DecodeRequest::hard(&llrs, bits.len(), StreamEnd::Truncated))
+        .unwrap()
+        .bits;
     assert_eq!(out, bits);
 
     // Partial last frame (stream not a multiple of f).
@@ -181,7 +194,10 @@ fn pjrt_bucket_routing_handles_odd_frame_counts() {
     rng.fill_bits(&mut bits2);
     let enc2 = encode(&spec, &bits2, Termination::Truncated);
     let llrs2: Vec<f32> = enc2.iter().map(|&b| if b == 0 { 4.0 } else { -4.0 }).collect();
-    let out2 = engine.decode_stream(&llrs2, bits2.len(), StreamEnd::Truncated);
+    let out2 = engine
+        .decode(&DecodeRequest::hard(&llrs2, bits2.len(), StreamEnd::Truncated))
+        .unwrap()
+        .bits;
     assert_eq!(out2.len(), bits2.len());
     // Tail stages beyond the encoder stream lack right context; all but
     // the last few bits must still be exact on a noiseless channel.
@@ -238,7 +254,7 @@ fn decode_server_with_pjrt_backend() {
             let enc = encode(&spec, &bits, Termination::Truncated);
             let llrs: Vec<f32> =
                 enc.iter().map(|&b| if b == 0 { 4.0 } else { -4.0 }).collect();
-            let resp = server.decode_blocking(llrs, StreamEnd::Truncated);
+            let resp = server.decode_blocking(llrs, StreamEnd::Truncated).unwrap();
             assert_eq!(resp.bits, bits, "request {t}");
         }));
     }

@@ -13,7 +13,7 @@ use viterbi::tuner::{
     DISPATCH_CANDIDATES,
 };
 use viterbi::util::check;
-use viterbi::viterbi::{registry, BuildParams, Engine as _, StreamEnd};
+use viterbi::viterbi::{registry, BuildParams, DecodeRequest, Engine as _, StreamEnd};
 
 fn gen_shape(rng: &mut Rng64) -> (JobShape, Option<usize>, usize) {
     let shape = JobShape {
@@ -175,8 +175,14 @@ fn auto_is_bit_exact_with_unified_across_k_and_termination() {
             };
             let auto = (registry::find("auto").unwrap().build)(&params);
             let unified = (registry::find("unified").unwrap().build)(&params);
-            let a = auto.decode_stream(&llrs, stages, end);
-            let u = unified.decode_stream(&llrs, stages, end);
+            let a = auto
+                .decode(&DecodeRequest::hard(&llrs, stages, end))
+                .expect("auto decode")
+                .bits;
+            let u = unified
+                .decode(&DecodeRequest::hard(&llrs, stages, end))
+                .expect("unified decode")
+                .bits;
             assert_eq!(
                 a,
                 u,
@@ -205,8 +211,6 @@ fn auto_single_frame_stream_matches_unified_too() {
     };
     let auto = (registry::find("auto").unwrap().build)(&params);
     let unified = (registry::find("unified").unwrap().build)(&params);
-    assert_eq!(
-        auto.decode_stream(&llrs, stages, StreamEnd::Truncated),
-        unified.decode_stream(&llrs, stages, StreamEnd::Truncated)
-    );
+    let req = DecodeRequest::hard(&llrs, stages, StreamEnd::Truncated);
+    assert_eq!(auto.decode(&req).unwrap().bits, unified.decode(&req).unwrap().bits);
 }

@@ -32,7 +32,25 @@ for d in "${docs[@]}"; do
     done
 done
 
+# The engine-API contract must stay documented: DESIGN.md needs the
+# request/response section (with all three types named) and the README
+# engine table needs its soft-output column.
+if ! grep -qE '^## .*[Ee]ngine API' DESIGN.md; then
+    echo "DESIGN.md: missing the engine API section heading"
+    fail=1
+fi
+for ty in DecodeRequest DecodeOutput DecodeError SOVA; do
+    if ! grep -q "$ty" DESIGN.md; then
+        echo "DESIGN.md: engine API section must mention $ty"
+        fail=1
+    fi
+done
+if ! grep -q 'Soft output' README.md; then
+    echo "README.md: engine table is missing the soft-output column"
+    fail=1
+fi
+
 if [ "$fail" -eq 0 ]; then
-    echo "docs OK: all referenced paths exist"
+    echo "docs OK: all referenced paths exist and the engine API is documented"
 fi
 exit "$fail"

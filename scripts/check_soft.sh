@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Soft-output smoke gate (CI "soft-smoke" step): run the SOVA-vs-hard
+# confidence-split BER check on a tiny grid — both soft-capable engine
+# families at two Eb/N0 points. `ber --soft` exits nonzero when the
+# high-confidence half of the bits does not show a strictly lower BER
+# than the low-confidence half, so this script only orchestrates the
+# grid. Keep the bit budgets small: this is a smoke test, not a sweep.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=(cargo run --release --quiet --)
+
+for engine in scalar ptb; do
+    for ebn0 in 2.5 3.0; do
+        echo "== soft-smoke: engine=$engine ebn0=$ebn0 =="
+        "${BIN[@]}" ber --soft --engine "$engine" --ebn0 "$ebn0" --bits 600000
+    done
+done
+
+echo "soft-smoke OK: SOVA reliabilities separate errors on the whole grid"
