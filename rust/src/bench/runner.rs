@@ -47,6 +47,12 @@ pub struct BenchOptions {
     /// The calibration sweep (`tuner::calibrate`) overrides this per
     /// grid cell.
     pub k: u32,
+    /// Bench tail-biting decode (`--tail-biting`): the stream is
+    /// decoded as one circular frame with `StreamEnd::TailBiting`.
+    /// Only engines with the registry `tail_biting` capability can run
+    /// such scenarios — `run_scenario` panics on any other engine, and
+    /// the CLI filters the selection up front.
+    pub tail_biting: bool,
 }
 
 impl Default for BenchOptions {
@@ -62,6 +68,7 @@ impl Default for BenchOptions {
             delay: 96,
             lanes: 64,
             k: 7,
+            tail_biting: false,
         }
     }
 }
@@ -96,7 +103,17 @@ pub fn run_scenario(entry: &EngineSpec, sc: &Scenario, opts: &BenchOptions) -> M
         .map(|_| (rng.uniform() as f32 - 0.5) * 8.0)
         .collect();
 
-    let req = DecodeRequest::hard(&llrs, stages, StreamEnd::Truncated);
+    let end = if opts.tail_biting {
+        assert!(
+            entry.tail_biting,
+            "engine {:?} has no tail-biting capability; pick wava/auto or drop --tail-biting",
+            entry.name
+        );
+        StreamEnd::TailBiting
+    } else {
+        StreamEnd::Truncated
+    };
+    let req = DecodeRequest::hard(&llrs, stages, end);
     for _ in 0..opts.warmup {
         std::hint::black_box(engine.decode(&req).expect("bench decode"));
     }
@@ -215,6 +232,27 @@ mod tests {
         assert_eq!(seen, 2);
         assert_eq!(records[0].engine, "scalar");
         assert_eq!(records[1].engine, "streaming");
+    }
+
+    #[test]
+    fn tail_biting_scenario_runs_on_wava() {
+        let entry = registry::find("wava").unwrap();
+        let sc = Scenario { engine: "wava".into(), frame_len: 128, frames: 2 };
+        let mut opts = quick_opts();
+        opts.tail_biting = true;
+        let m = run_scenario(&entry, &sc, &opts);
+        assert_eq!(m.engine, "wava");
+        assert!(m.median_mbps > 0.0 && m.median_mbps.is_finite());
+    }
+
+    #[test]
+    #[should_panic(expected = "tail-biting capability")]
+    fn tail_biting_scenario_rejects_linear_engines() {
+        let entry = registry::find("scalar").unwrap();
+        let sc = Scenario { engine: "scalar".into(), frame_len: 64, frames: 2 };
+        let mut opts = quick_opts();
+        opts.tail_biting = true;
+        run_scenario(&entry, &sc, &opts);
     }
 
     #[test]

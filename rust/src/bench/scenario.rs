@@ -91,7 +91,7 @@ mod tests {
             all,
             vec![
                 "scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "streaming",
-                "hard", "auto"
+                "hard", "wava", "auto"
             ]
         );
     }

@@ -274,6 +274,107 @@ pub fn measure_soft_split(
     })
 }
 
+/// Tail-biting BER comparison at one Eb/N0 point: the wrap-around
+/// (WAVA) decoder against a **one-iteration** decode of the same
+/// circular frames — which is exactly a best-state truncated decode
+/// (all-equal initial metrics, best-metric traceback), the baseline a
+/// receiver without WAVA would run. Also collects wrap-iteration
+/// statistics; `scripts/check_wava.sh` gates on
+/// `wava_ber < truncated_ber` and `median_iterations ≤ 3`.
+#[derive(Debug, Clone, Copy)]
+pub struct TailBitingPoint {
+    /// Operating point in dB.
+    pub ebn0_db: f64,
+    /// BER of the wrap-around decoder.
+    pub wava_ber: f64,
+    /// BER of the one-iteration (best-state truncated) baseline.
+    pub truncated_ber: f64,
+    /// Bit errors of the wrap-around decoder.
+    pub wava_errors: u64,
+    /// Bit errors of the one-iteration baseline.
+    pub truncated_errors: u64,
+    /// Message bits tested (same frames for both decoders).
+    pub bits_tested: u64,
+    /// Median wrap iterations per frame.
+    pub median_iterations: u32,
+    /// Maximum wrap iterations observed.
+    pub max_iterations: u32,
+    /// Frames whose emitted path closed (start state == end state).
+    pub converged_frames: u64,
+    /// Frames decoded.
+    pub frames: u64,
+    /// True when the baseline saw ≥ the requested error target.
+    pub reliable: bool,
+}
+
+impl TailBitingPoint {
+    /// The property WAVA must deliver: strictly fewer errors than the
+    /// truncated baseline on the same circular frames.
+    pub fn beats_truncated(&self) -> bool {
+        self.truncated_errors > 0 && self.wava_ber < self.truncated_ber
+    }
+}
+
+/// Measure a [`TailBitingPoint`]: `cfg.block_bits`-bit tail-biting
+/// frames through BPSK/AWGN at `ebn0_db`, decoded by a
+/// [`crate::viterbi::WavaEngine`] with cap `max_iters` and by the same
+/// engine capped at one iteration. Runs until the baseline has
+/// `cfg.target_errors` errors or `cfg.max_bits` bits were tested.
+/// Puncturing in `cfg` is not supported for tail-biting and is
+/// ignored.
+pub fn measure_tail_biting_point(
+    spec: &CodeSpec,
+    cfg: &BerConfig,
+    ebn0_db: f64,
+    max_iters: u32,
+) -> TailBitingPoint {
+    use crate::viterbi::WavaEngine;
+    let n = cfg.block_bits.max(spec.k as usize - 1);
+    let ch = AwgnChannel::new(ebn0_db, spec.rate());
+    let mut rng = Rng64::seeded(cfg.seed ^ (ebn0_db * 1000.0) as u64 ^ 0x7B17);
+    let wava = WavaEngine::new(spec.clone(), max_iters.max(1));
+    let one_iter = WavaEngine::new(spec.clone(), 1);
+    let mut msg = vec![0u8; n];
+    let mut w_bits = vec![0u8; n];
+    let mut t_bits = vec![0u8; n];
+    let (mut we, mut te, mut bits) = (0u64, 0u64, 0u64);
+    let (mut converged, mut frames) = (0u64, 0u64);
+    let mut iter_counts: Vec<u32> = Vec::new();
+    while te < cfg.target_errors && bits < cfg.max_bits {
+        rng.fill_bits(&mut msg);
+        let coded = encode(spec, &msg, Termination::TailBiting);
+        let rx = ch.transmit(&bpsk::modulate(&coded), &mut rng);
+        let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+        let outcome = wava.decode_tail_biting(&llrs, &mut w_bits);
+        let _ = one_iter.decode_tail_biting(&llrs, &mut t_bits);
+        we += crate::util::bits::count_bit_errors(&w_bits, &msg) as u64;
+        te += crate::util::bits::count_bit_errors(&t_bits, &msg) as u64;
+        bits += n as u64;
+        frames += 1;
+        iter_counts.push(outcome.iterations);
+        if outcome.converged {
+            converged += 1;
+        }
+    }
+    iter_counts.sort_unstable();
+    let median_iterations =
+        iter_counts.get(iter_counts.len() / 2).copied().unwrap_or(0);
+    let max_iterations = *iter_counts.last().unwrap_or(&0);
+    TailBitingPoint {
+        ebn0_db,
+        wava_ber: we as f64 / bits.max(1) as f64,
+        truncated_ber: te as f64 / bits.max(1) as f64,
+        wava_errors: we,
+        truncated_errors: te,
+        bits_tested: bits,
+        median_iterations,
+        max_iterations,
+        converged_frames: converged,
+        frames,
+        reliable: te >= cfg.target_errors.min(100),
+    }
+}
+
 /// Sweep a range of Eb/N0 values (a BER waterfall curve).
 pub fn sweep(
     spec: &CodeSpec,
@@ -377,6 +478,28 @@ mod tests {
         let engine = crate::viterbi::HardEngine::new(ScalarEngine::new(spec.clone()));
         let err = measure_soft_split(&spec, &engine, &quick_cfg(), 3.0).unwrap_err();
         assert!(matches!(err, DecodeError::UnsupportedOutput { .. }), "{err}");
+    }
+
+    #[test]
+    fn wava_beats_one_iteration_truncated_on_tail_biting_frames() {
+        // The check_wava.sh gate in miniature: at 3 dB the wrap-around
+        // decoder must make strictly fewer errors than the
+        // one-iteration truncated baseline on the same circular
+        // frames, with a median iteration count within the CI bound.
+        let spec = CodeSpec::standard_k7();
+        let cfg = BerConfig {
+            block_bits: 128,
+            target_errors: 80,
+            max_bits: 400_000,
+            seed: 0x7B17,
+            puncture: None,
+        };
+        let p = measure_tail_biting_point(&spec, &cfg, 3.0, 4);
+        assert!(p.reliable, "needed more bits: {p:?}");
+        assert!(p.beats_truncated(), "{p:?}");
+        assert!(p.median_iterations <= 3, "{p:?}");
+        assert!(p.max_iterations <= 4, "{p:?}");
+        assert!(p.converged_frames * 2 > p.frames, "most frames should close: {p:?}");
     }
 
     #[test]

@@ -13,6 +13,28 @@ pub enum Termination {
     Truncated,
     /// Append k−1 zero input bits; output includes their coded bits.
     Terminated,
+    /// Tail-biting: no tail, and the encoder is pre-loaded with the
+    /// state the message will end in (fixed by its last k−1 bits), so
+    /// the trellis path is circular — LTE PBCH/PDCCH-style control
+    /// channels. Requires a message of at least k−1 bits.
+    TailBiting,
+}
+
+/// The circular start/end state a tail-biting encoding of `bits` uses:
+/// the shift register pre-loaded with the last k−1 message bits under
+/// the MSB-newest convention (`DESIGN.md` §5), so that feeding the
+/// whole message returns the encoder to this exact state.
+pub fn tail_biting_state(spec: &CodeSpec, bits: &[u8]) -> u32 {
+    let km1 = (spec.k - 1) as usize;
+    assert!(bits.len() >= km1, "tail-biting needs at least k-1 = {km1} message bits");
+    let mut state = 0u32;
+    for (i, &b) in bits[bits.len() - km1..].iter().enumerate() {
+        debug_assert!(b <= 1);
+        // bits[len-1] (the newest at the end of the message) lands in
+        // the MSB, matching next(i, b) = (b << (k-2)) | (i >> 1).
+        state |= (b as u32) << i;
+    }
+    state
 }
 
 /// Streaming convolutional encoder.
@@ -54,11 +76,17 @@ impl Encoder {
         }
     }
 
-    /// Encode a whole message. Returns β·(n + tail) output bits.
+    /// Encode a whole message. Returns β·(n + tail) output bits
+    /// (tail = k−1 only for [`Termination::Terminated`]; tail-biting
+    /// encodes exactly β·n bits on a circular trellis).
     pub fn encode(&mut self, bits: &[u8], term: Termination) -> Vec<u8> {
         let tail = match term {
             Termination::Truncated => 0,
             Termination::Terminated => (self.trellis.spec.k - 1) as usize,
+            Termination::TailBiting => {
+                self.state = tail_biting_state(&self.trellis.spec, bits);
+                0
+            }
         };
         let mut out = Vec::with_capacity((bits.len() + tail) * self.trellis.spec.beta as usize);
         for &b in bits {
@@ -66,6 +94,13 @@ impl Encoder {
         }
         for _ in 0..tail {
             self.push_bit(0, &mut out);
+        }
+        if term == Termination::TailBiting {
+            debug_assert_eq!(
+                self.state,
+                tail_biting_state(&self.trellis.spec, bits),
+                "tail-biting path must close"
+            );
         }
         out
     }
@@ -129,6 +164,56 @@ mod tests {
         let eab = encode(&spec, &ab, Termination::Truncated);
         let xor: Vec<u8> = ea.iter().zip(&eb).map(|(x, y)| x ^ y).collect();
         assert_eq!(eab, xor);
+    }
+
+    #[test]
+    fn tail_biting_encoding_is_circular() {
+        // The encoder must end in the state it started in, for every
+        // built-in code and several message lengths.
+        for spec in [
+            CodeSpec::standard_k5(),
+            CodeSpec::standard_k7(),
+            CodeSpec::standard_k7_r3(),
+        ] {
+            let mut rng = crate::channel::Rng64::seeded(0x7B17 + spec.k as u64);
+            for n in [spec.k as usize - 1, 12, 40, 100] {
+                let mut bits = vec![0u8; n];
+                rng.fill_bits(&mut bits);
+                let mut enc = Encoder::new(spec.clone());
+                let out = enc.encode(&bits, Termination::TailBiting);
+                assert_eq!(out.len(), n * spec.beta as usize, "no tail bits");
+                assert_eq!(
+                    enc.state(),
+                    tail_biting_state(&spec, &bits),
+                    "K={} n={n}: path must close",
+                    spec.k
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tail_biting_state_convention() {
+        // MSB = newest message bit (DESIGN.md §5): replay the message
+        // through the trellis from the tail-biting start state and the
+        // final state must equal the start state.
+        let spec = CodeSpec::standard_k5();
+        let bits = [1u8, 0, 1, 1, 0, 0, 1, 1, 1, 0];
+        let s0 = tail_biting_state(&spec, &bits);
+        let trellis = Trellis::new(spec);
+        let mut state = s0;
+        for &b in &bits {
+            let (ns, _) = trellis.step(state, b);
+            state = ns;
+        }
+        assert_eq!(state, s0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least k-1")]
+    fn tail_biting_rejects_short_messages() {
+        let spec = CodeSpec::standard_k7();
+        encode(&spec, &[1, 0, 1], Termination::TailBiting);
     }
 
     #[test]

@@ -6,7 +6,7 @@ pub mod params;
 pub mod puncture;
 pub mod trellis;
 
-pub use encoder::{encode, Encoder, Termination};
+pub use encoder::{encode, tail_biting_state, Encoder, Termination};
 pub use params::CodeSpec;
 pub use puncture::{depuncture_llrs, puncture, punctured_len, PuncturePattern};
 pub use trellis::Trellis;

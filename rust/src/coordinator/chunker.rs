@@ -61,6 +61,7 @@ impl Chunker {
                 llr_block: self.frame_block(&req.llrs, req.stages, i),
                 pin_state0: i == 0,
                 output: req.output,
+                tail_biting: false,
                 submitted_at: req.submitted_at,
             })
             .collect()

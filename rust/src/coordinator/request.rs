@@ -75,6 +75,13 @@ pub struct FrameJob {
     /// The owning request's output mode (soft frames route to the
     /// SOVA per-frame path in the backend).
     pub output: OutputMode,
+    /// Whether this job is a whole tail-biting stream (circular
+    /// trellis). Tail-biting requests bypass the overlap chunker —
+    /// the block is the *entire* stream (`stages · β` LLRs, not the
+    /// uniform `L · β` layout) and the backend decodes it with the
+    /// wrap-around (WAVA) core; uniform-length runs of such jobs take
+    /// the SIMD lane path together.
+    pub tail_biting: bool,
     /// Submission time of the owning request (for deadline batching).
     pub submitted_at: Instant,
 }

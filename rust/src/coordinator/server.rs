@@ -88,6 +88,7 @@ pub struct DecodeServer {
     backend_name: Arc<Mutex<String>>,
     backend_label: &'static str,
     soft_capable: bool,
+    tail_biting_capable: bool,
 }
 
 impl DecodeServer {
@@ -240,6 +241,7 @@ impl DecodeServer {
             backend_name,
             backend_label: cfg.backend.label(),
             soft_capable: cfg.backend.supports_soft(),
+            tail_biting_capable: cfg.backend.supports_tail_biting(),
         })
     }
 
@@ -337,8 +339,71 @@ impl DecodeServer {
             );
             return Some(id);
         }
-        let req = DecodeRequest::with_output(id, llrs, beta, end, output);
-        let jobs = self.chunker.chunk(&req);
+        if end == StreamEnd::TailBiting {
+            if !self.tail_biting_capable {
+                self.complete_err(
+                    id,
+                    DecodeError::UnsupportedStreamEnd {
+                        engine: self.backend_label.to_string(),
+                        end,
+                    },
+                );
+                return Some(id);
+            }
+            if output == OutputMode::Soft {
+                // The WAVA core is hard-output only for now (circular
+                // SOVA needs margin carry across wrap iterations).
+                self.complete_err(
+                    id,
+                    DecodeError::UnsupportedOutput {
+                        engine: "wava".to_string(),
+                        mode: output,
+                    },
+                );
+                return Some(id);
+            }
+            let km1 = (self.chunker.spec.k - 1) as usize;
+            let stages = llrs.len() / beta;
+            if stages > 0 && stages < km1 {
+                // A tail-biting path needs at least k−1 stages to fix
+                // its circular state (the encoder asserts the same).
+                self.complete_err(
+                    id,
+                    DecodeError::InvalidRequest {
+                        reason: format!(
+                            "tail-biting needs at least k-1 = {km1} stages, got {stages}"
+                        ),
+                    },
+                );
+                return Some(id);
+            }
+        }
+        let (jobs, stages, submitted_at) = if end == StreamEnd::TailBiting {
+            // A tail-biting stream is one circular frame: the overlap
+            // chunker does not apply — move the whole payload into a
+            // single WAVA job (uniform-length runs of these jobs still
+            // batch onto the SIMD lane path in the backend).
+            let stages = llrs.len() / beta;
+            let submitted_at = Instant::now();
+            let jobs = if stages == 0 {
+                Vec::new()
+            } else {
+                vec![FrameJob {
+                    request_id: id,
+                    frame_index: 0,
+                    llr_block: llrs,
+                    pin_state0: false,
+                    output,
+                    tail_biting: true,
+                    submitted_at,
+                }]
+            };
+            (jobs, stages, submitted_at)
+        } else {
+            let req = DecodeRequest::with_output(id, llrs, beta, end, output);
+            let jobs = self.chunker.chunk(&req);
+            (jobs, req.stages, req.submitted_at)
+        };
         let n = jobs.len();
         if n == 0 {
             // Empty stream: complete immediately.
@@ -360,12 +425,19 @@ impl DecodeServer {
             self.metrics.on_reject();
             return None;
         }
+        // Tail-biting requests are one whole-stream frame, so the
+        // reassembler's frame output length is the stream itself.
+        let frame_f = if end == StreamEnd::TailBiting {
+            stages
+        } else {
+            self.chunker.geo.f
+        };
         self.reassembler.lock().unwrap().expect(
             id,
             n,
-            req.stages,
-            self.chunker.geo.f,
-            req.submitted_at,
+            stages,
+            frame_f,
+            submitted_at,
             output == OutputMode::Soft,
         );
         self.pump_tx.send(PumpMsg::Jobs(jobs)).expect("pump thread alive");
@@ -546,6 +618,65 @@ mod tests {
         let (bits, llrs) = noiseless_request(94, 40);
         assert_eq!(server.decode_blocking(llrs, StreamEnd::Truncated).unwrap().bits, bits);
         assert_eq!(server.metrics().errors, 1);
+    }
+
+    #[test]
+    fn tail_biting_round_trip_through_native_backend() {
+        let server = native_server(1);
+        let spec = CodeSpec::standard_k5();
+        let mut rng = Rng64::seeded(96);
+        let mut bits = vec![0u8; 100];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, crate::code::Termination::TailBiting);
+        let llrs: Vec<f32> =
+            enc.iter().map(|&b| if b == 0 { 3.0 } else { -3.0 }).collect();
+        let resp = server.decode_blocking(llrs, StreamEnd::TailBiting).unwrap();
+        assert_eq!(resp.bits, bits);
+        assert_eq!(resp.frames, 1, "one circular frame, not chunked");
+        // The server keeps serving linear traffic afterwards.
+        let (lin_bits, lin_llrs) = noiseless_request(97, 40);
+        assert_eq!(
+            server.decode_blocking(lin_llrs, StreamEnd::Truncated).unwrap().bits,
+            lin_bits
+        );
+    }
+
+    #[test]
+    fn tail_biting_rejected_up_front_on_non_capable_backend() {
+        let server = DecodeServer::start(ServerConfig {
+            backend: BackendSpec::Auto {
+                spec: CodeSpec::standard_k5(),
+                geo: FrameGeometry::new(32, 8, 12),
+                f0: 8,
+                threads: 1,
+                budget_bytes: None,
+                profile: None,
+            },
+            batch: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            high_watermark: 256,
+            low_watermark: 64,
+        })
+        .unwrap();
+        let (_, llrs) = noiseless_request(98, 64);
+        let err = server.decode_blocking(llrs, StreamEnd::TailBiting).unwrap_err();
+        assert!(
+            matches!(err, DecodeError::UnsupportedStreamEnd { .. }),
+            "{err}"
+        );
+        assert!(err.to_string().contains("tail-biting"), "{err}");
+    }
+
+    #[test]
+    fn soft_tail_biting_rejected_with_unsupported_output() {
+        let server = native_server(1);
+        let (_, llrs) = noiseless_request(99, 64);
+        let err = server
+            .decode_blocking_with(llrs, StreamEnd::TailBiting, OutputMode::Soft)
+            .unwrap_err();
+        assert!(matches!(err, DecodeError::UnsupportedOutput { .. }), "{err}");
     }
 
     #[test]

@@ -17,8 +17,9 @@ use crate::runtime::{ExecutorPool, Manifest, PjrtRuntime};
 use crate::tuner::{JobShape, Planner, PlannerConfig};
 use crate::util::threadpool::ThreadPool;
 use crate::viterbi::{
-    signed_soft, Engine as _, FrameScratch, OutputMode, ParallelTraceback, SovaScratch,
-    StartPolicy, StreamEnd, TiledEngine, TracebackMode, TracebackStart,
+    signed_soft, wava_decode_frame, wava_decode_lane_group, Engine as _, FrameScratch,
+    OutputMode, ParallelTraceback, SovaScratch, StartPolicy, StreamEnd, TiledEngine,
+    TracebackMode, TracebackStart, WavaLaneJob, WavaLaneScratch, DEFAULT_WAVA_MAX_ITERS,
 };
 use super::request::{FrameJob, FrameResult};
 
@@ -73,6 +74,18 @@ impl BackendSpec {
     /// The server refuses soft submissions up front when this is
     /// false, so unsupported jobs never reach the executor.
     pub fn supports_soft(&self) -> bool {
+        matches!(self, BackendSpec::Native { .. })
+    }
+
+    /// Whether the backend can serve tail-biting
+    /// ([`StreamEnd::TailBiting`]) requests. The server refuses
+    /// tail-biting submissions up front with a typed
+    /// `DecodeError::UnsupportedStreamEnd` when this is false. The
+    /// native backend carries the wrap-around (WAVA) core; the PJRT
+    /// artifact's static linear-trellis shape and the adaptive batch
+    /// backend's uniform-frame planner do not handle circular streams
+    /// yet.
+    pub fn supports_tail_biting(&self) -> bool {
         matches!(self, BackendSpec::Native { .. })
     }
 
@@ -135,6 +148,7 @@ impl BackendSpec {
                     scratch,
                     sova: SovaScratch::new(),
                     lane,
+                    wava_lane: None,
                     max_batch: 32,
                 }))
             }
@@ -231,6 +245,10 @@ impl BatchDecoder for PjrtBatchDecoder {
             jobs.iter().all(|j| j.output == OutputMode::Hard),
             "the pjrt backend does not support soft output"
         );
+        anyhow::ensure!(
+            jobs.iter().all(|j| !j.tail_biting),
+            "the pjrt backend does not support tail-biting streams"
+        );
         let meta = self.pool.meta().clone();
         let beta = meta.spec.beta as usize;
         let states = meta.states();
@@ -294,6 +312,9 @@ pub struct NativeBatchDecoder {
     /// Lane-group traceback config + scratch; `None` for codes outside
     /// the lane fast path (those always decode per frame).
     lane: Option<(ParallelTraceback, LaneScratch)>,
+    /// Lane-major WAVA scratch for batched tail-biting jobs, allocated
+    /// on first use and reused across batches.
+    wava_lane: Option<WavaLaneScratch>,
     max_batch: usize,
 }
 
@@ -392,33 +413,20 @@ fn decode_lane_chunk(
 }
 
 impl NativeBatchDecoder {
-    /// Per-frame decode of one job (the non-batched path).
-    fn decode_one(&mut self, job: &FrameJob) -> FrameResult {
-        decode_uniform_job(&self.engine, &mut self.scratch, job)
-    }
-}
-
-impl BatchDecoder for NativeBatchDecoder {
-    fn decode_batch(&mut self, jobs: &[FrameJob]) -> Result<Vec<FrameResult>> {
-        let geo = self.engine.geo;
-        let beta = self.engine.spec().beta as usize;
-        let l = geo.span();
-        for job in jobs {
-            anyhow::ensure!(job.llr_block.len() == l * beta, "job block length mismatch");
-        }
-        let mut out = Vec::with_capacity(jobs.len());
+    /// Decode a run of uniform linear (non-tail-biting) jobs: runs of
+    /// ≥ 2 consecutive hard jobs decode in SIMD lockstep chunks of
+    /// ≤ 64 (the dynamic batcher's whole point); soft jobs take the
+    /// per-frame SOVA path without knocking the hard jobs around them
+    /// off the lane route.
+    fn decode_linear_run(&mut self, jobs: &[FrameJob], out: &mut Vec<FrameResult>) {
         if let Some((ptb, lane_scratch)) = &mut self.lane {
-            // Batched path: runs of ≥ 2 consecutive hard jobs decode in
-            // SIMD lockstep chunks of ≤ 64 (the dynamic batcher's whole
-            // point); soft jobs take the per-frame SOVA path without
-            // knocking the hard jobs around them off the lane route.
             let mut rest = jobs;
             while !rest.is_empty() {
                 let hard_run =
                     rest.iter().take_while(|j| j.output == OutputMode::Hard).count();
                 if hard_run > 1 {
                     for chunk in rest[..hard_run].chunks(MAX_LANES) {
-                        decode_lane_chunk(&self.engine, ptb, lane_scratch, chunk, &mut out);
+                        decode_lane_chunk(&self.engine, ptb, lane_scratch, chunk, out);
                     }
                     rest = &rest[hard_run..];
                 } else {
@@ -436,7 +444,7 @@ impl BatchDecoder for NativeBatchDecoder {
                     rest = &rest[1..];
                 }
             }
-            return Ok(out);
+            return;
         }
         for job in jobs {
             let r = if job.output == OutputMode::Soft {
@@ -447,9 +455,114 @@ impl BatchDecoder for NativeBatchDecoder {
                     job,
                 )
             } else {
-                self.decode_one(job)
+                decode_uniform_job(&self.engine, &mut self.scratch, job)
             };
             out.push(r);
+        }
+    }
+
+    /// Decode a run of equal-length tail-biting jobs with the
+    /// wrap-around (WAVA) core: runs of ≥ 2 decode as SIMD lane groups
+    /// of ≤ 64 frames in lockstep on fast-path codes — batched
+    /// tail-biting traffic stays on the same SIMD path as linear lane
+    /// batches — and single jobs (or codes off the fast path) take the
+    /// bit-exact scalar core, whose 1-bit survivor packing doesn't pay
+    /// a full u64 word per decision for one lane. Soft tail-biting
+    /// requests are refused at submit time, so every job here is
+    /// hard-output.
+    fn decode_tail_biting_run(&mut self, jobs: &[FrameJob], out: &mut Vec<FrameResult>) {
+        let beta = self.engine.spec().beta as usize;
+        let stages = jobs[0].llr_block.len() / beta;
+        let trellis = self.engine.trellis();
+        if jobs.len() > 1 && lane_fast_path(trellis) {
+            let mut scratch = self.wava_lane.take().unwrap_or_else(|| {
+                WavaLaneScratch::new(trellis.num_states(), stages, MAX_LANES)
+            });
+            for chunk in jobs.chunks(MAX_LANES) {
+                let mut bits: Vec<Vec<u8>> =
+                    chunk.iter().map(|_| vec![0u8; stages]).collect();
+                let mut lane_jobs: Vec<WavaLaneJob<'_>> = chunk
+                    .iter()
+                    .zip(bits.iter_mut())
+                    .map(|(job, out)| WavaLaneJob { llrs: &job.llr_block, out })
+                    .collect();
+                wava_decode_lane_group(
+                    trellis,
+                    DEFAULT_WAVA_MAX_ITERS,
+                    &mut lane_jobs,
+                    &mut scratch,
+                );
+                drop(lane_jobs);
+                for (job, b) in chunk.iter().zip(bits) {
+                    out.push(FrameResult {
+                        request_id: job.request_id,
+                        frame_index: job.frame_index,
+                        bits: b,
+                        soft: None,
+                    });
+                }
+            }
+            self.wava_lane = Some(scratch);
+            return;
+        }
+        for job in jobs {
+            let mut bits = vec![0u8; stages];
+            self.scratch.ensure(trellis.num_states(), stages.max(1));
+            wava_decode_frame(
+                trellis,
+                &job.llr_block,
+                DEFAULT_WAVA_MAX_ITERS,
+                &mut self.scratch,
+                &mut bits,
+            );
+            out.push(FrameResult {
+                request_id: job.request_id,
+                frame_index: job.frame_index,
+                bits,
+                soft: None,
+            });
+        }
+    }
+}
+
+impl BatchDecoder for NativeBatchDecoder {
+    fn decode_batch(&mut self, jobs: &[FrameJob]) -> Result<Vec<FrameResult>> {
+        let geo = self.engine.geo;
+        let beta = self.engine.spec().beta as usize;
+        let l = geo.span();
+        for job in jobs {
+            if job.tail_biting {
+                anyhow::ensure!(
+                    !job.llr_block.is_empty() && job.llr_block.len() % beta == 0,
+                    "tail-biting job block length not a multiple of beta"
+                );
+                anyhow::ensure!(
+                    job.output == OutputMode::Hard,
+                    "tail-biting jobs are hard-output only"
+                );
+            } else {
+                anyhow::ensure!(job.llr_block.len() == l * beta, "job block length mismatch");
+            }
+        }
+        let mut out = Vec::with_capacity(jobs.len());
+        // Tail-biting jobs decode as whole circular frames; the
+        // reassembler matches results by (request, frame) so the two
+        // job kinds can interleave freely within a batch.
+        let mut rest = jobs;
+        while !rest.is_empty() {
+            if rest[0].tail_biting {
+                let len0 = rest[0].llr_block.len();
+                let run = rest
+                    .iter()
+                    .take_while(|j| j.tail_biting && j.llr_block.len() == len0)
+                    .count();
+                self.decode_tail_biting_run(&rest[..run], &mut out);
+                rest = &rest[run..];
+            } else {
+                let run = rest.iter().take_while(|j| !j.tail_biting).count();
+                self.decode_linear_run(&rest[..run], &mut out);
+                rest = &rest[run..];
+            }
         }
         Ok(out)
     }
@@ -611,6 +724,10 @@ impl BatchDecoder for AutoBatchDecoder {
                 job.output == OutputMode::Hard,
                 "the auto backend does not support soft output"
             );
+            anyhow::ensure!(
+                !job.tail_biting,
+                "the auto backend does not support tail-biting streams"
+            );
         }
         if jobs.is_empty() {
             return Ok(Vec::new());
@@ -622,6 +739,8 @@ impl BatchDecoder for AutoBatchDecoder {
             v2: geo.v2,
             batch_frames: jobs.len(),
             uniform: jobs.len() > 1 && self.lane.is_some(),
+            soft: false,
+            tail_biting: false,
         };
         let choice = self.planner.plan(&shape);
         let multi = jobs.len() > 1;
@@ -864,9 +983,123 @@ mod tests {
             llr_block: vec![0.0; 7],
             pin_state0: true,
             output: OutputMode::Hard,
+            tail_biting: false,
             submitted_at: std::time::Instant::now(),
         };
         assert!(backend.decode_batch(&[bad]).is_err());
+    }
+
+    fn tail_biting_jobs(
+        spec: &CodeSpec,
+        n: usize,
+        count: usize,
+        ebn0: f64,
+        seed: u64,
+    ) -> (Vec<Vec<u8>>, Vec<FrameJob>) {
+        let mut rng = Rng64::seeded(seed);
+        let ch = AwgnChannel::new(ebn0, spec.rate());
+        let mut msgs = Vec::with_capacity(count);
+        let mut jobs = Vec::with_capacity(count);
+        for i in 0..count {
+            let mut bits = vec![0u8; n];
+            rng.fill_bits(&mut bits);
+            let enc = encode(spec, &bits, Termination::TailBiting);
+            let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+            jobs.push(FrameJob {
+                request_id: 100 + i as u64,
+                frame_index: 0,
+                llr_block: llr::llrs_from_samples(&rx, ch.sigma()),
+                pin_state0: false,
+                output: OutputMode::Hard,
+                tail_biting: true,
+                submitted_at: std::time::Instant::now(),
+            });
+            msgs.push(bits);
+        }
+        (msgs, jobs)
+    }
+
+    #[test]
+    fn batched_tail_biting_equals_per_job_and_decodes() {
+        // A run of equal-length tail-biting jobs takes the SIMD lane
+        // WAVA path; it must be bit-identical to per-job dispatch and
+        // recover the messages at high SNR.
+        let spec = CodeSpec::standard_k7();
+        let geo = FrameGeometry::new(64, 12, 20);
+        let mut backend =
+            BackendSpec::Native { spec: spec.clone(), geo, f0: Some(16) }.build().unwrap();
+        let (msgs, jobs) = tail_biting_jobs(&spec, 120, 9, 6.0, 0x7B40);
+        let batched = backend.decode_batch(&jobs).unwrap();
+        assert_eq!(batched.len(), jobs.len());
+        let mut single = Vec::new();
+        for j in &jobs {
+            single.extend(backend.decode_batch(std::slice::from_ref(j)).unwrap());
+        }
+        for ((a, b), msg) in batched.iter().zip(&single).zip(&msgs) {
+            assert_eq!(a.request_id, b.request_id);
+            assert_eq!(a.bits, b.bits, "request {}", a.request_id);
+            assert_eq!(&a.bits, msg, "request {}", a.request_id);
+        }
+    }
+
+    #[test]
+    fn mixed_tail_biting_and_linear_batch_decodes_both() {
+        let spec = CodeSpec::standard_k7();
+        let geo = FrameGeometry::new(64, 12, 20);
+        let mut backend =
+            BackendSpec::Native { spec: spec.clone(), geo, f0: Some(16) }.build().unwrap();
+        let linear = noisy_jobs(&spec, geo, 64 * 3, 0x7B50);
+        let (tb_msgs, tb_jobs) = tail_biting_jobs(&spec, 96, 2, 6.0, 0x7B51);
+        // Interleave: linear, tail-biting, linear, tail-biting.
+        let mut jobs = vec![linear[0].clone(), tb_jobs[0].clone()];
+        jobs.extend(linear[1..].iter().cloned());
+        jobs.push(tb_jobs[1].clone());
+        let results = backend.decode_batch(&jobs).unwrap();
+        assert_eq!(results.len(), jobs.len());
+        for (i, msg) in tb_msgs.iter().enumerate() {
+            let r = results
+                .iter()
+                .find(|r| r.request_id == 100 + i as u64)
+                .expect("tail-biting result present");
+            assert_eq!(&r.bits, msg, "tail-biting request {}", r.request_id);
+        }
+    }
+
+    #[test]
+    fn auto_and_pjrt_backends_refuse_tail_biting_jobs() {
+        let spec = CodeSpec::standard_k7();
+        let geo = FrameGeometry::new(64, 12, 20);
+        let mut auto = BackendSpec::Auto {
+            spec: spec.clone(),
+            geo,
+            f0: 16,
+            threads: 1,
+            budget_bytes: None,
+            profile: None,
+        }
+        .build()
+        .unwrap();
+        let (_, tb_jobs) = tail_biting_jobs(&spec, 96, 1, 6.0, 0x7B52);
+        assert!(auto.decode_batch(&tb_jobs).is_err());
+    }
+
+    #[test]
+    fn backend_spec_tail_biting_capability() {
+        let spec = CodeSpec::standard_k5();
+        let geo = FrameGeometry::new(32, 8, 12);
+        assert!(BackendSpec::Native { spec: spec.clone(), geo, f0: None }
+            .supports_tail_biting());
+        assert!(!BackendSpec::Auto {
+            spec: spec.clone(),
+            geo,
+            f0: 8,
+            threads: 1,
+            budget_bytes: None,
+            profile: None,
+        }
+        .supports_tail_biting());
+        assert!(!BackendSpec::Pjrt { artifact: "x".into(), artifact_dir: None }
+            .supports_tail_biting());
     }
 
     #[test]

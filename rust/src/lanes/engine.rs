@@ -369,6 +369,7 @@ impl Engine for LanesEngine {
 
     fn decode(&self, req: &DecodeRequest<'_>) -> Result<DecodeOutput, DecodeError> {
         req.validate(&self.spec)?;
+        crate::viterbi::engine::reject_tail_biting(&self.name, req.end)?;
         if req.output == OutputMode::Soft {
             // The lane survivor memory packs one decision bit per lane
             // but no margins; soft output awaits a lane-SOVA port.
@@ -380,7 +381,7 @@ impl Engine for LanesEngine {
         let (llrs, stages, end) = (req.llrs, req.stages, req.end);
         let beta = self.spec.beta as usize;
         let spans = plan_frames(stages, self.geo);
-        let stats = DecodeStats { final_metric: None, frames: spans.len() };
+        let stats = DecodeStats { final_metric: None, frames: spans.len(), iterations: None };
         let mut out = vec![0u8; stages];
         if spans.is_empty() {
             return Ok(DecodeOutput::hard(out, stats));
@@ -445,6 +446,7 @@ impl Engine for LanesMtEngine {
 
     fn decode(&self, req: &DecodeRequest<'_>) -> Result<DecodeOutput, DecodeError> {
         req.validate(self.inner.spec())?;
+        crate::viterbi::engine::reject_tail_biting(&self.name, req.end)?;
         if req.output == OutputMode::Soft {
             return Err(DecodeError::UnsupportedOutput {
                 engine: self.name.clone(),
@@ -457,7 +459,7 @@ impl Engine for LanesMtEngine {
             return self.inner.decode(req);
         }
         let spans = plan_frames(stages, self.inner.geo);
-        let stats = DecodeStats { final_metric: None, frames: spans.len() };
+        let stats = DecodeStats { final_metric: None, frames: spans.len(), iterations: None };
         let mut out = vec![0u8; stages];
         if spans.is_empty() {
             return Ok(DecodeOutput::hard(out, stats));
@@ -553,6 +555,8 @@ pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
         traceback_bytes: lanes_traceback_bytes,
         lane_width: |p: &BuildParams| p.lanes.clamp(1, MAX_LANES),
         soft_output: false,
+        soft_margin_bytes: |_| 0,
+        tail_biting: false,
     }
 }
 
@@ -575,6 +579,8 @@ pub(crate) fn engine_entry_mt() -> crate::viterbi::registry::EngineSpec {
         },
         lane_width: |p: &BuildParams| p.lanes.clamp(1, MAX_LANES),
         soft_output: false,
+        soft_margin_bytes: |_| 0,
+        tail_biting: false,
     }
 }
 

@@ -74,6 +74,13 @@ impl LaneMetrics {
     pub fn row(&self, parity: usize) -> &[f32] {
         &self.pm[parity]
     }
+
+    /// Mutable view of one slab by parity. The wrap-around (WAVA)
+    /// iterations use this to seed the next pass's stage-0 slab from
+    /// the previous pass's final σ row.
+    pub fn row_mut(&mut self, parity: usize) -> &mut [f32] {
+        &mut self.pm[parity]
+    }
 }
 
 /// Per-lane argmax over states of a lane-major slab, with the scalar

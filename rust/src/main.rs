@@ -67,11 +67,12 @@ USAGE:
   viterbi-repro exp <id|all> [--full] [--out DIR] [--threads N] [--seed S]
   viterbi-repro bench [--engines E,..|all] [--frames N] [--frame-lens F,..]
                       [--samples S] [--threads N] [--lanes L] [--seed S]
-                      [--k K] [--out FILE] [--list]
+                      [--k K] [--tail-biting] [--out FILE] [--list]
   viterbi-repro tune [--smoke] [--ks K,..] [--frame-lens F,..] [--batches B,..]
                      [--engines E,..] [--samples S] [--warmup W] [--threads N]
                      [--lanes L] [--seed S] [--out FILE]
   viterbi-repro ber [--ebn0 DB] [--engine scalar|tiled|ptb] [--threads N] [--soft]
+                    [--tail-biting [--block BITS]]
   viterbi-repro demo [--bits N] [--ebn0 DB]
   viterbi-repro serve [--requests N] [--backend pjrt|native|auto]
                       [--artifact NAME] [--profile FILE]
@@ -113,7 +114,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
 fn cmd_bench(args: &Args) -> Result<()> {
     args.check_known(&[
         "engines", "frames", "frame-lens", "samples", "warmup", "threads", "seed", "out",
-        "list", "v1", "v2", "f0", "delay", "lanes", "k",
+        "list", "v1", "v2", "f0", "delay", "lanes", "k", "tail-biting",
     ])?;
     if args.has("list") {
         println!("registered engines (viterbi::registry):");
@@ -123,8 +124,23 @@ fn cmd_bench(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    let engines =
-        bench::parse_engines(args.get("engines").unwrap_or("all")).map_err(|e| anyhow!(e))?;
+    let tail_biting = args.has("tail-biting");
+    // Under --tail-biting the default selection is the tail-biting
+    // capable subset; an explicit non-capable engine is an error.
+    let default_engines = if tail_biting { "wava,auto" } else { "all" };
+    let engines = bench::parse_engines(args.get("engines").unwrap_or(default_engines))
+        .map_err(|e| anyhow!(e))?;
+    if tail_biting {
+        for name in &engines {
+            let entry = viterbi::viterbi::registry::find(name).expect("parsed engine");
+            if !entry.tail_biting {
+                bail!(
+                    "engine {name:?} has no tail-biting capability; \
+                     --tail-biting admits wava and auto"
+                );
+            }
+        }
+    }
     let frame_lens = bench::parse_frame_lens(args.get("frame-lens").unwrap_or("64,256"))
         .map_err(|e| anyhow!(e))?;
     let frames = args.get_usize("frames", 64)?;
@@ -147,6 +163,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         delay: args.get_usize("delay", defaults.delay)?.max(1),
         lanes: args.get_usize("lanes", defaults.lanes)?.clamp(1, 64),
         k: k as u32,
+        tail_biting,
     };
     let out_path = std::path::PathBuf::from(args.get("out").unwrap_or("BENCH_run.json"));
 
@@ -219,6 +236,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
         delay: defaults.delay,
         lanes: args.get_usize("lanes", defaults.lanes)?.clamp(1, 64),
         k: defaults.k,
+        tail_biting: false,
     };
     let out_path =
         std::path::PathBuf::from(args.get("out").unwrap_or("calibration/profile.jsonl"));
@@ -269,10 +287,53 @@ fn cmd_tune(args: &Args) -> Result<()> {
 }
 
 fn cmd_ber(args: &Args) -> Result<()> {
-    args.check_known(&["ebn0", "engine", "threads", "bits", "seed", "soft"])?;
+    args.check_known(&[
+        "ebn0", "engine", "threads", "bits", "seed", "soft", "tail-biting", "block",
+    ])?;
     let ebn0 = args.get_f64("ebn0", 3.0)?;
     let threads = args.get_usize("threads", 8)?;
     let spec = CodeSpec::standard_k7();
+    if args.has("tail-biting") {
+        // Tail-biting validation mode (the CI check_wava.sh gate):
+        // wava must beat a one-iteration truncated decode of the same
+        // circular frames, with a bounded median iteration count.
+        let cfg = BerConfig {
+            block_bits: args.get_usize("block", 128)?.max(spec.k as usize - 1),
+            target_errors: 100,
+            max_bits: args.get_u64("bits", 600_000)?,
+            seed: args.get_u64("seed", 0x7B17)?,
+            puncture: None,
+        };
+        let p = viterbi::ber::measure_tail_biting_point(&spec, &cfg, ebn0, 4);
+        println!(
+            "Eb/N0={:.2} dB  tail-biting: wava BER={:.3e} ({} errors)  \
+             1-iter truncated BER={:.3e} ({} errors)  {} bits, {} frames  \
+             iterations: median={} max={}  converged={}/{}  reliable={}",
+            p.ebn0_db,
+            p.wava_ber,
+            p.wava_errors,
+            p.truncated_ber,
+            p.truncated_errors,
+            p.bits_tested,
+            p.frames,
+            p.median_iterations,
+            p.max_iterations,
+            p.converged_frames,
+            p.frames,
+            p.reliable,
+        );
+        if p.reliable && !p.beats_truncated() {
+            bail!(
+                "wava BER {:.3e} does not beat the truncated baseline {:.3e}",
+                p.wava_ber,
+                p.truncated_ber
+            );
+        }
+        if p.median_iterations > 3 {
+            bail!("median wrap iterations {} exceeds the bound of 3", p.median_iterations);
+        }
+        return Ok(());
+    }
     let engine: SharedEngine = match args.get("engine").unwrap_or("scalar") {
         "scalar" => Arc::new(ScalarEngine::new(spec.clone())),
         "tiled" => Arc::new(TiledEngine::new(

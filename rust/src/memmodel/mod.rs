@@ -15,6 +15,6 @@ pub mod smem;
 
 pub use occupancy::{GpuParams, OccupancyModel, ThroughputEstimate};
 pub use smem::{
-    global_memory_table, lane_traceback_working_bytes, traceback_working_bytes,
-    FootprintBreakdown, Method, SmemLayout,
+    global_memory_table, lane_traceback_working_bytes, sova_margin_bytes,
+    traceback_working_bytes, FootprintBreakdown, Method, SmemLayout,
 };

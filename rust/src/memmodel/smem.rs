@@ -151,6 +151,18 @@ pub fn traceback_working_bytes(states: usize, stages: usize) -> usize {
     words_per_stage * 8 * stages + 2 * states * 4
 }
 
+/// Additional resident working memory a SOVA (soft-output) decode
+/// carries on top of [`traceback_working_bytes`]: the competitor
+/// sweep's Δ margins cost one f32 per state per stage — **4
+/// bytes/state/stage** — because unlike the 1-bit survivor decisions,
+/// margins cannot be bit-packed. This is the registry's
+/// `soft_margin_bytes` rule, so the planner's budget clamp sees the
+/// true soft-request working set (ROADMAP: the gap the hard-only
+/// `traceback_bytes` rule left).
+pub fn sova_margin_bytes(states: usize, stages: usize) -> usize {
+    4 * states * stages
+}
+
 /// Peak resident traceback working memory for one **lane group** of
 /// the lane-batched engines (`crate::lanes`): survivor decisions are
 /// packed one bit per state per stage **per lane** into `u64` words
@@ -282,6 +294,29 @@ mod tests {
         assert_eq!(traceback_working_bytes(64, 100), 8 * 100 + 512);
         // Sub-word state counts still pay one word per stage.
         assert_eq!(traceback_working_bytes(16, 10), 8 * 10 + 2 * 16 * 4);
+    }
+
+    #[test]
+    fn sova_margins_cost_four_bytes_per_state_stage() {
+        // K=7 (64 states), a 321-stage frame span: 4 B per (state,
+        // stage) — one f32 margin each, no packing possible.
+        assert_eq!(sova_margin_bytes(64, 321), 4 * 64 * 321);
+        // The margins dwarf the 1-bit survivor storage by 32×: the
+        // planner must see them or soft requests blow the budget.
+        let surv_bits_bytes = 8 * 321; // one u64 word per stage at K=7
+        assert_eq!(sova_margin_bytes(64, 321), 32 * surv_bits_bytes);
+        assert_eq!(sova_margin_bytes(0, 100), 0);
+        assert_eq!(sova_margin_bytes(16, 0), 0);
+    }
+
+    #[test]
+    fn soft_working_set_exceeds_hard() {
+        // A soft decode's resident set is the hard set plus margins —
+        // strictly larger for any real geometry.
+        let hard = traceback_working_bytes(64, 256);
+        let soft = hard + sova_margin_bytes(64, 256);
+        assert!(soft > hard);
+        assert_eq!(soft - hard, 65536);
     }
 
     #[test]

@@ -121,6 +121,7 @@ impl Engine for PjrtEngine {
     fn decode(&self, req: &DecodeRequest<'_>) -> Result<DecodeOutput, DecodeError> {
         let spec = &self.pool.meta().spec;
         req.validate(spec)?;
+        crate::viterbi::engine::reject_tail_biting(&self.name, req.end)?;
         if req.output == OutputMode::Soft {
             // The AOT artifact's output signature is hard bits only.
             return Err(DecodeError::UnsupportedOutput {
@@ -133,7 +134,10 @@ impl Engine for PjrtEngine {
             .map_err(|e| DecodeError::Backend { reason: format!("{e:#}") })?;
         let f = self.pool.meta().geo.f;
         let frames = if req.stages == 0 { 0 } else { (req.stages + f - 1) / f };
-        Ok(DecodeOutput::hard(bits, DecodeStats { final_metric: None, frames }))
+        Ok(DecodeOutput::hard(
+            bits,
+            DecodeStats { final_metric: None, frames, iterations: None },
+        ))
     }
 }
 

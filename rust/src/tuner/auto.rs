@@ -18,6 +18,7 @@ use crate::code::CodeSpec;
 use crate::viterbi::registry::{self, BuildParams, EngineSpec};
 use crate::viterbi::{
     DecodeError, DecodeOutput, DecodeRequest, DecodeStats, Engine, OutputMode, SharedEngine,
+    StreamEnd,
 };
 use super::planner::{JobShape, Planner, PlannerConfig};
 
@@ -48,14 +49,18 @@ impl AutoEngine {
         &self.planner
     }
 
-    /// The dispatch choice for a stream of `stages` stages (exposed so
-    /// tests and the CLI can inspect routing without decoding).
+    /// The dispatch choice for a hard linear stream of `stages` stages
+    /// (exposed so tests and the CLI can inspect routing without
+    /// decoding).
     pub fn choice_for(&self, stages: usize) -> super::planner::Choice {
-        self.planner.plan(&self.shape_for(stages))
+        self.planner.plan(&self.shape_for(stages, StreamEnd::Truncated, OutputMode::Hard))
     }
 
-    fn shape_for(&self, stages: usize) -> JobShape {
-        JobShape::for_stream(&self.params.spec, self.params.geo, stages)
+    fn shape_for(&self, stages: usize, end: StreamEnd, output: OutputMode) -> JobShape {
+        let mut shape = JobShape::for_stream(&self.params.spec, self.params.geo, stages);
+        shape.tail_biting = end == StreamEnd::TailBiting;
+        shape.soft = output == OutputMode::Soft;
+        shape
     }
 
     fn engine_for(&self, name: &'static str) -> SharedEngine {
@@ -81,24 +86,22 @@ impl Engine for AutoEngine {
 
     fn decode(&self, req: &DecodeRequest<'_>) -> Result<DecodeOutput, DecodeError> {
         req.validate(&self.params.spec)?;
-        if req.output == OutputMode::Soft {
-            // Deterministic refusal: the dispatch candidates are not
-            // all soft-capable yet, and whether a given stream routes
-            // to a soft-capable one depends on the local calibration
-            // profile — an API that sometimes supports soft output is
-            // worse than one that says no.
-            return Err(DecodeError::UnsupportedOutput {
-                engine: self.name.clone(),
-                mode: req.output,
+        if req.stages == 0 {
+            return Ok(DecodeOutput {
+                bits: Vec::new(),
+                soft: (req.output == OutputMode::Soft).then(Vec::new),
+                stats: DecodeStats { final_metric: None, frames: 0, iterations: None },
             });
         }
-        if req.stages == 0 {
-            return Ok(DecodeOutput::hard(
-                Vec::new(),
-                DecodeStats { final_metric: None, frames: 0 },
-            ));
-        }
-        let choice = self.planner.plan(&self.shape_for(req.stages));
+        // The request's mode and framing shape the plan: the planner's
+        // capability filters admit only `wava` for tail-biting streams
+        // and only SOVA-capable candidates for soft output (with the
+        // margin surcharge applied to the budget clamp), so `auto`
+        // never hands a request to an engine that would refuse it —
+        // except TailBiting + Soft, where the dispatched `wava`
+        // answers the truthful `UnsupportedOutput` until circular
+        // SOVA is ported.
+        let choice = self.planner.plan(&self.shape_for(req.stages, req.end, req.output));
         self.engine_for(choice.engine).decode(req)
     }
 }
@@ -128,7 +131,18 @@ pub(crate) fn engine_entry() -> EngineSpec {
                 1
             }
         },
-        soft_output: false,
+        // Soft requests dispatch to the SOVA-capable candidate family
+        // (today: `unified`), with the margin surcharge applied to the
+        // planner's budget clamp; tail-biting streams dispatch to
+        // `wava`. Both capability filters live in
+        // `super::planner::candidates`.
+        soft_output: true,
+        soft_margin_bytes: |p: &BuildParams| {
+            // The soft dispatch target is frame-tiled, so margins cost
+            // 4 B/state/stage over the frame span (unified's own rule).
+            crate::memmodel::sova_margin_bytes(p.spec.num_states(), p.geo.span())
+        },
+        tail_biting: true,
     }
 }
 
@@ -175,6 +189,56 @@ mod tests {
             .unwrap()
             .bits
             .is_empty());
+    }
+
+    #[test]
+    fn auto_serves_soft_requests_via_unified() {
+        let p = params();
+        let auto =
+            AutoEngine::new(p.clone(), Planner::heuristic(PlannerConfig::from_build(&p)));
+        let mut rng = crate::channel::Rng64::seeded(0xA7C);
+        let mut bits = vec![0u8; 300];
+        rng.fill_bits(&mut bits);
+        let enc = crate::code::encode(&p.spec, &bits, crate::code::Termination::Terminated);
+        let llrs: Vec<f32> =
+            enc.iter().map(|&b| if b == 0 { 3.0 } else { -3.0 }).collect();
+        let req = DecodeRequest::soft(&llrs, 306, StreamEnd::Terminated);
+        let out = auto.decode(&req).expect("auto must serve soft requests");
+        assert_eq!(&out.bits[..300], &bits[..]);
+        let soft = out.soft.expect("soft requested");
+        assert_eq!(soft.len(), 306);
+        for (t, (&b, &s)) in out.bits.iter().zip(&soft).enumerate() {
+            assert_eq!(b == 1, s.is_sign_negative(), "sign/bit mismatch at {t}");
+        }
+        // The dispatched engine is the SOVA-capable candidate.
+        assert_eq!(
+            auto.cache.lock().unwrap().keys().copied().collect::<Vec<_>>(),
+            ["unified"]
+        );
+    }
+
+    #[test]
+    fn auto_routes_tail_biting_to_wava() {
+        use crate::code::{encode, Termination};
+        let p = params();
+        let auto =
+            AutoEngine::new(p.clone(), Planner::heuristic(PlannerConfig::from_build(&p)));
+        let mut rng = crate::channel::Rng64::seeded(0xA7B);
+        let mut bits = vec![0u8; 200];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&p.spec, &bits, Termination::TailBiting);
+        let llrs: Vec<f32> =
+            enc.iter().map(|&b| if b == 0 { 3.0 } else { -3.0 }).collect();
+        let req = DecodeRequest::hard(&llrs, 200, StreamEnd::TailBiting);
+        let out = auto.decode(&req).expect("auto must accept tail-biting");
+        assert_eq!(out.bits, bits);
+        // Bit-exact with a directly built wava engine, iterations and
+        // all (the dispatched engine IS wava).
+        let wava = crate::viterbi::WavaEngine::with_default_iters(p.spec.clone());
+        let direct = wava.decode(&req).unwrap();
+        assert_eq!(out.bits, direct.bits);
+        assert_eq!(out.stats.iterations, direct.stats.iterations);
+        assert_eq!(auto.cache.lock().unwrap().keys().copied().collect::<Vec<_>>(), ["wava"]);
     }
 
     #[test]

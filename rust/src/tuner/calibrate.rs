@@ -157,8 +157,16 @@ mod tests {
             PlannerConfig { threads: 2, lanes: 64, f0: 8, budget_bytes: None },
             profile,
         );
-        let shape =
-            JobShape { k: 5, frame_len: 32, v1: 8, v2: 12, batch_frames: 8, uniform: true };
+        let shape = JobShape {
+            k: 5,
+            frame_len: 32,
+            v1: 8,
+            v2: 12,
+            batch_frames: 8,
+            uniform: true,
+            soft: false,
+            tail_biting: false,
+        };
         let choice = planner.plan(&shape);
         assert!(choice.from_profile, "on-grid shape must be profile-scored");
         assert!(choice.engine == "unified" || choice.engine == "lanes");

@@ -40,6 +40,17 @@ pub const DISPATCH_CANDIDATES: [&str; 4] = ["unified", "parallel", "lanes", "lan
 /// (non-lane-groupable) work.
 const RAGGED_CANDIDATES: [&str; 2] = ["unified", "parallel"];
 
+/// The only candidate for tail-biting (circular-trellis) work: the
+/// wrap-around Viterbi engine. Every other candidate would answer
+/// `DecodeError::UnsupportedStreamEnd`, so `auto` must never dispatch
+/// a tail-biting frame elsewhere.
+const TAIL_BITING_CANDIDATES: [&str; 1] = ["wava"];
+
+/// The subset of [`DISPATCH_CANDIDATES`] that implements SOVA soft
+/// output today (soft shapes must never route to an engine that would
+/// refuse them).
+const SOFT_CANDIDATES: [&str; 1] = ["unified"];
+
 /// Batch width from which the heuristic prefers lane engines for
 /// uniform work (below it, lane-group setup overhead dominates).
 pub const LANE_BATCH_MIN: usize = 8;
@@ -72,6 +83,13 @@ pub struct JobShape {
     /// code on the SIMD lane fast path. Ragged work is dispatched to
     /// the per-frame engines only.
     pub uniform: bool,
+    /// Whether the job asks for soft (SOVA) output: only soft-capable
+    /// candidates are eligible, and the budget clamp charges the
+    /// registry's `soft_margin_bytes` on top of `traceback_bytes`.
+    pub soft: bool,
+    /// Whether the job is a tail-biting (circular-trellis) stream:
+    /// only `tail_biting`-capable candidates are eligible.
+    pub tail_biting: bool,
 }
 
 impl JobShape {
@@ -79,6 +97,8 @@ impl JobShape {
     /// tiled at `geo`, presents to the planner — the single source of
     /// the frames/uniform derivation, shared by the `auto` engine's
     /// runtime dispatch and the registry entry's analytic rules.
+    /// Defaults to a hard-output linear stream; set
+    /// [`JobShape::soft`] / [`JobShape::tail_biting`] for the others.
     pub fn for_stream(spec: &CodeSpec, geo: FrameGeometry, stages: usize) -> JobShape {
         let f = geo.f.max(1);
         let frames = if stages == 0 { 1 } else { (stages + f - 1) / f };
@@ -89,6 +109,8 @@ impl JobShape {
             v2: geo.v2,
             batch_frames: frames,
             uniform: frames > 1,
+            soft: false,
+            tail_biting: false,
         }
     }
 
@@ -251,7 +273,7 @@ impl Planner {
                 Choice {
                     engine: name,
                     expected_mbps: cell.map(|c| c.median_mbps),
-                    working_set_bytes: working_set(name, &params),
+                    working_set_bytes: working_set(name, &params, shape.soft),
                     from_profile: cell.is_some(),
                 }
             })
@@ -331,10 +353,16 @@ fn default_profile() -> &'static Option<CalibrationProfile> {
     })
 }
 
-/// The candidate set for a shape: all four bit-exact engines for
-/// uniform (lane-groupable) work, the per-frame pair for ragged work.
+/// The candidate set for a shape: capability first (tail-biting work
+/// must go to `wava`, soft work to a SOVA-capable engine), then all
+/// four bit-exact engines for uniform (lane-groupable) work and the
+/// per-frame pair for ragged work.
 fn candidates(shape: &JobShape) -> &'static [&'static str] {
-    if shape.uniform {
+    if shape.tail_biting {
+        &TAIL_BITING_CANDIDATES
+    } else if shape.soft {
+        &SOFT_CANDIDATES
+    } else if shape.uniform {
         &DISPATCH_CANDIDATES
     } else {
         &RAGGED_CANDIDATES
@@ -358,10 +386,20 @@ fn heuristic_order(shape: &JobShape, threads: usize) -> &'static [&'static str] 
     }
 }
 
-/// Working set of a registry engine at `params`, by its own rule.
-fn working_set(name: &str, params: &BuildParams) -> usize {
+/// Working set of a registry engine at `params`, by its own rules:
+/// `traceback_bytes`, plus `soft_margin_bytes` (SOVA Δ margins, 4
+/// bytes/state/stage) when the job asks for soft output — the budget
+/// clamp must see the true soft-request footprint.
+fn working_set(name: &str, params: &BuildParams, soft: bool) -> usize {
     registry::find(name)
-        .map(|e| (e.traceback_bytes)(params))
+        .map(|e| {
+            let base = (e.traceback_bytes)(params);
+            if soft {
+                base.saturating_add((e.soft_margin_bytes)(params))
+            } else {
+                base
+            }
+        })
         .unwrap_or(usize::MAX)
 }
 
@@ -411,7 +449,16 @@ mod tests {
     }
 
     fn shape(batch: usize, uniform: bool) -> JobShape {
-        JobShape { k: 7, frame_len: 256, v1: 20, v2: 45, batch_frames: batch, uniform }
+        JobShape {
+            k: 7,
+            frame_len: 256,
+            v1: 20,
+            v2: 45,
+            batch_frames: batch,
+            uniform,
+            soft: false,
+            tail_biting: false,
+        }
     }
 
     fn rec(engine: &str, batch: usize, mbps: f64) -> CalibrationRecord {
@@ -538,6 +585,62 @@ mod tests {
         assert!(!lanes_choice.from_profile);
         assert_eq!(lanes_choice.expected_mbps, None);
         assert_eq!(p.plan(&shape(64, true)).engine, "parallel");
+    }
+
+    #[test]
+    fn tail_biting_shapes_route_only_to_wava() {
+        // Capability filtering: no profile cell, budget, or batch
+        // width may ever push a tail-biting frame to a linear engine.
+        let p = Planner::heuristic(cfg());
+        for batch in [1usize, 8, 64] {
+            for uniform in [false, true] {
+                let mut s = shape(batch, uniform);
+                s.tail_biting = true;
+                let ranked = p.rank(&s);
+                assert!(!ranked.is_empty());
+                for c in &ranked {
+                    assert_eq!(c.engine, "wava", "batch {batch} uniform {uniform}");
+                }
+                assert_eq!(p.plan(&s).engine, "wava");
+            }
+        }
+        // Even with an aggressive profile claiming lanes is fastest.
+        let profile = CalibrationProfile::new(vec![rec("lanes", 64, 9000.0)]);
+        let p = Planner::with_profile(cfg(), profile);
+        let mut s = shape(64, true);
+        s.tail_biting = true;
+        assert_eq!(p.plan(&s).engine, "wava");
+    }
+
+    #[test]
+    fn soft_shapes_route_to_soft_capable_engines_and_pay_margins() {
+        let p = Planner::heuristic(cfg());
+        let hard = shape(16, true);
+        let mut soft = hard;
+        soft.soft = true;
+        // Only SOVA-capable candidates are eligible for soft work.
+        for c in p.rank(&soft) {
+            assert!(
+                registry::find(c.engine).unwrap().soft_output,
+                "soft shape ranked non-soft engine {}",
+                c.engine
+            );
+        }
+        // The budget clamp sees the margin surcharge: the same engine
+        // at the same geometry costs strictly more under soft output.
+        let hard_unified =
+            p.rank(&hard).into_iter().find(|c| c.engine == "unified").unwrap();
+        let soft_unified =
+            p.rank(&soft).into_iter().find(|c| c.engine == "unified").unwrap();
+        assert!(
+            soft_unified.working_set_bytes > hard_unified.working_set_bytes,
+            "soft {} B must exceed hard {} B",
+            soft_unified.working_set_bytes,
+            hard_unified.working_set_bytes
+        );
+        let margin = soft_unified.working_set_bytes - hard_unified.working_set_bytes;
+        // 4 bytes/state/stage over the frame span (K=7 → 64 states).
+        assert_eq!(margin, 4 * 64 * (256 + 20 + 45));
     }
 
     #[test]

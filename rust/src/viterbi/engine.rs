@@ -32,6 +32,23 @@ pub enum StreamEnd {
     Terminated,
     /// Truncated: final start state is the argmax path metric.
     Truncated,
+    /// Tail-biting: no termination tail, circular trellis — the
+    /// encoder starts in the state fixed by the last k−1 message bits,
+    /// so every valid path starts and ends in the same (unknown)
+    /// state. Decoded by the wrap-around Viterbi (`wava`) engine;
+    /// engines without the registry `tail_biting` capability answer
+    /// [`DecodeError::UnsupportedStreamEnd`].
+    TailBiting,
+}
+
+impl std::fmt::Display for StreamEnd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StreamEnd::Terminated => write!(f, "terminated"),
+            StreamEnd::Truncated => write!(f, "truncated"),
+            StreamEnd::TailBiting => write!(f, "tail-biting"),
+        }
+    }
 }
 
 /// What a [`DecodeRequest`] asks the engine to produce.
@@ -99,6 +116,10 @@ pub struct DecodeStats {
     pub final_metric: Option<f32>,
     /// Frames the stream was tiled into (1 for whole-stream engines).
     pub frames: usize,
+    /// Wrap-around Viterbi iterations the decode took (`Some` only for
+    /// tail-biting decodes through the `wava` engine; the CI
+    /// iteration-cap gate reads this).
+    pub iterations: Option<u32>,
 }
 
 /// A decoded stream: hard bits, optional reliabilities, statistics.
@@ -155,6 +176,15 @@ pub enum DecodeError {
         /// Human-readable failure chain.
         reason: String,
     },
+    /// The engine does not implement the requested [`StreamEnd`]
+    /// (today: tail-biting streams on engines without the registry
+    /// `tail_biting` capability).
+    UnsupportedStreamEnd {
+        /// Name of the refusing engine (or coordinator backend label).
+        engine: String,
+        /// The requested stream end.
+        end: StreamEnd,
+    },
 }
 
 impl std::fmt::Display for DecodeError {
@@ -170,6 +200,9 @@ impl std::fmt::Display for DecodeError {
                 write!(f, "invalid request: {reason}")
             }
             DecodeError::Backend { reason } => write!(f, "backend failure: {reason}"),
+            DecodeError::UnsupportedStreamEnd { engine, end } => {
+                write!(f, "engine {engine} does not support {end} streams")
+            }
         }
     }
 }
@@ -178,15 +211,30 @@ impl std::error::Error for DecodeError {}
 
 /// Traceback start at a frame's final stage: state 0 only when the
 /// frame is the stream's last *and* the trellis is terminated; the
-/// argmax path metric otherwise.
+/// argmax path metric otherwise. A tail-biting stream's end state is
+/// unknown a priori, so each wrap-around iteration traces from the
+/// best metric too (the `wava` engine then checks that the traced
+/// path's start and end states agree).
 ///
 /// This is the one place the `(is_last, StreamEnd)` rule lives — the
-/// tiled, scalar, parallel and lane engines all call it.
+/// tiled, scalar, parallel, lane and wava engines all call it.
 pub fn final_traceback_start(end: StreamEnd, is_last: bool) -> TracebackStart {
     match (is_last, end) {
         (true, StreamEnd::Terminated) => TracebackStart::State(0),
         _ => TracebackStart::BestMetric,
     }
+}
+
+/// Capability gate for linear-trellis engines: answer a tail-biting
+/// request with the typed [`DecodeError::UnsupportedStreamEnd`]
+/// instead of silently decoding the circular stream as if it were
+/// truncated. Every engine without the registry `tail_biting` flag
+/// calls this right after length validation.
+pub fn reject_tail_biting(engine: &str, end: StreamEnd) -> Result<(), DecodeError> {
+    if end == StreamEnd::TailBiting {
+        return Err(DecodeError::UnsupportedStreamEnd { engine: engine.to_string(), end });
+    }
+    Ok(())
 }
 
 /// A stream decoder: [`DecodeRequest`] in, [`DecodeOutput`] out.
@@ -252,8 +300,10 @@ impl Engine for ScalarEngine {
 
     fn decode(&self, req: &DecodeRequest<'_>) -> Result<DecodeOutput, DecodeError> {
         req.validate(&self.spec)?;
+        reject_tail_biting(self.name(), req.end)?;
         let tb = final_traceback_start(req.end, true);
-        let stats = |fm: f32| DecodeStats { final_metric: Some(fm), frames: 1 };
+        let stats =
+            |fm: f32| DecodeStats { final_metric: Some(fm), frames: 1, iterations: None };
         match req.output {
             OutputMode::Hard => {
                 let mut dec = ScalarDecoder::new(self.spec.clone());
@@ -407,12 +457,14 @@ impl Engine for TiledEngine {
 
     fn decode(&self, req: &DecodeRequest<'_>) -> Result<DecodeOutput, DecodeError> {
         req.validate(&self.spec)?;
+        reject_tail_biting(self.name(), req.end)?;
         let beta = self.spec.beta as usize;
         let stages = req.stages;
         let spans = plan_frames(stages, self.geo);
         let mut scratch = FrameScratch::new(self.trellis.num_states(), self.geo.span());
         let mut bits = vec![0u8; stages];
-        let mut stats = DecodeStats { final_metric: None, frames: spans.len() };
+        let mut stats =
+            DecodeStats { final_metric: None, frames: spans.len(), iterations: None };
         match req.output {
             OutputMode::Hard => {
                 for span in &spans {
@@ -622,14 +674,35 @@ mod tests {
     }
 
     #[test]
-    fn deprecated_shim_matches_decode() {
-        let (_bits, llrs, stages, spec) = noisy_setup(1000, 5.0, 44);
+    fn decode_request_replaces_the_deprecated_shim() {
+        // The seed-era `decode_stream` shim panicked on malformed
+        // input; the request API answers the same conditions with
+        // typed errors and the same bits on well-formed ones. (The
+        // shim itself is a one-line forwarder with no logic left to
+        // test — these are its migrated assertions.)
+        let (bits, llrs, stages, spec) = noisy_setup(1000, 5.0, 44);
         let scalar = ScalarEngine::new(spec);
-        #[allow(deprecated)]
-        let via_shim = scalar.decode_stream(&llrs, stages, StreamEnd::Terminated);
-        let via_decode =
-            scalar.decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Terminated)).unwrap();
-        assert_eq!(via_shim, via_decode.bits);
+        let out = scalar
+            .decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Terminated))
+            .unwrap();
+        assert_eq!(&out.bits[..bits.len()], &bits[..]);
+        // Old panic path #1: wrong LLR length → typed value.
+        let err = scalar
+            .decode(&DecodeRequest::hard(&llrs[..llrs.len() - 2], stages, StreamEnd::Terminated))
+            .unwrap_err();
+        assert!(matches!(err, DecodeError::LlrLengthMismatch { .. }), "{err}");
+        // Old panic path #2: unsupported stream end → typed value.
+        let err = scalar
+            .decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::TailBiting))
+            .unwrap_err();
+        assert_eq!(
+            err,
+            DecodeError::UnsupportedStreamEnd {
+                engine: "scalar".to_string(),
+                end: StreamEnd::TailBiting
+            }
+        );
+        assert!(err.to_string().contains("tail-biting"));
     }
 
     #[test]
@@ -644,6 +717,12 @@ mod tests {
         );
         assert_eq!(
             final_traceback_start(StreamEnd::Truncated, true),
+            TracebackStart::BestMetric
+        );
+        // A tail-biting frame's end state is unknown: every wrap
+        // iteration traces from the best metric.
+        assert_eq!(
+            final_traceback_start(StreamEnd::TailBiting, true),
             TracebackStart::BestMetric
         );
     }

@@ -27,6 +27,8 @@ pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
         },
         lane_width: |_| 1,
         soft_output: false,
+        soft_margin_bytes: |_| 0,
+        tail_biting: false,
     }
 }
 
@@ -83,6 +85,7 @@ impl<E: Engine> Engine for HardEngine<E> {
     ) -> Result<crate::viterbi::DecodeOutput, crate::viterbi::DecodeError> {
         use crate::viterbi::{DecodeError, DecodeRequest, OutputMode};
         req.validate(self.inner.spec())?;
+        crate::viterbi::engine::reject_tail_biting(&self.name, req.end)?;
         if req.output == OutputMode::Soft {
             return Err(DecodeError::UnsupportedOutput {
                 engine: self.name.clone(),

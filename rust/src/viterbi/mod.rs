@@ -17,6 +17,8 @@
 //! * `streaming` — sliding-window decoder with path-metric carry (the
 //!   overlap-free single-lane ablation);
 //! * `hard` — hard-decision adapter over any soft engine (§II-C);
+//! * `wava` — wrap-around Viterbi for tail-biting codes (circular
+//!   trellis, no termination tail), iterating on the SIMD lane core;
 //! * `auto` — calibration-driven adaptive dispatcher over the
 //!   bit-exact family (implemented in [`crate::tuner`], registered
 //!   here).
@@ -38,10 +40,12 @@ pub mod sova;
 pub mod streaming;
 pub mod tiled;
 pub mod unified;
+pub mod wava;
 
 pub use engine::{
-    final_traceback_start, DecodeError, DecodeOutput, DecodeRequest, DecodeStats, Engine,
-    OutputMode, ScalarEngine, SharedEngine, StreamEnd, TiledEngine, TracebackMode,
+    final_traceback_start, reject_tail_biting, DecodeError, DecodeOutput, DecodeRequest,
+    DecodeStats, Engine, OutputMode, ScalarEngine, SharedEngine, StreamEnd, TiledEngine,
+    TracebackMode,
 };
 pub use frame::FrameScratch;
 pub use hard::HardEngine;
@@ -51,3 +55,7 @@ pub use scalar::{ScalarDecoder, TracebackStart};
 pub use sova::{signed_soft, sova_decode_frame, SovaScratch};
 pub use streaming::{StreamingDecoder, StreamingEngine};
 pub use unified::{ParallelTraceback, StartPolicy};
+pub use wava::{
+    wava_decode_frame, wava_decode_lane_group, WavaEngine, WavaLaneJob, WavaLaneScratch,
+    WavaOutcome, DEFAULT_WAVA_MAX_ITERS,
+};

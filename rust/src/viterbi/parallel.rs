@@ -33,6 +33,8 @@ pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
         },
         lane_width: |_| 1,
         soft_output: false,
+        soft_margin_bytes: |_| 0,
+        tail_biting: false,
     }
 }
 
@@ -146,6 +148,7 @@ impl Engine for ParallelEngine {
     ) -> Result<crate::viterbi::DecodeOutput, crate::viterbi::DecodeError> {
         use crate::viterbi::{DecodeError, DecodeOutput, DecodeStats, OutputMode};
         req.validate(self.spec())?;
+        crate::viterbi::engine::reject_tail_biting(self.name(), req.end)?;
         if req.output == OutputMode::Soft {
             // SOVA is not threaded yet (the sweep would need per-frame
             // reliability stitching across workers).
@@ -158,7 +161,7 @@ impl Engine for ParallelEngine {
         let bits = self.decode_spans(req.llrs, req.stages, req.end, &spans);
         Ok(DecodeOutput::hard(
             bits,
-            DecodeStats { final_metric: None, frames: spans.len() },
+            DecodeStats { final_metric: None, frames: spans.len(), iterations: None },
         ))
     }
 }

@@ -86,6 +86,17 @@ pub struct EngineSpec {
     ///
     /// [`OutputMode::Soft`]: super::engine::OutputMode::Soft
     pub soft_output: bool,
+    /// Additional resident working memory a soft (SOVA) request costs
+    /// on top of `traceback_bytes`: the Δ margins at 4
+    /// bytes/state/stage (`memmodel::sova_margin_bytes`). Zero for
+    /// engines without soft output. The planner adds this to the
+    /// budget clamp for soft job shapes.
+    pub soft_margin_bytes: fn(&BuildParams) -> usize,
+    /// Whether the engine decodes tail-biting streams
+    /// (`StreamEnd::TailBiting`, circular trellis). Engines with
+    /// `false` answer `DecodeError::UnsupportedStreamEnd` — enforced
+    /// registry-wide by `rust/tests/engine_api.rs`.
+    pub tail_biting: bool,
 }
 
 impl std::fmt::Debug for EngineSpec {
@@ -94,6 +105,7 @@ impl std::fmt::Debug for EngineSpec {
             .field("name", &self.name)
             .field("description", &self.description)
             .field("soft_output", &self.soft_output)
+            .field("tail_biting", &self.tail_biting)
             .finish()
     }
 }
@@ -113,6 +125,7 @@ pub fn registry() -> Vec<EngineSpec> {
         crate::lanes::engine::engine_entry_mt(),
         super::streaming::engine_entry(),
         super::hard::engine_entry(),
+        super::wava::engine_entry(),
         crate::tuner::auto::engine_entry(),
     ]
 }
@@ -141,7 +154,7 @@ mod tests {
             names,
             vec![
                 "scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "streaming",
-                "hard", "auto"
+                "hard", "wava", "auto"
             ]
         );
         let mut dedup = names.clone();
@@ -183,11 +196,54 @@ mod tests {
     #[test]
     fn soft_output_flags_name_the_sova_ported_engines() {
         // SOVA is implemented for the whole-stream reference and the
-        // TiledEngine family (tiled shares unified's sweep); everyone
-        // else must refuse soft requests until ported.
+        // TiledEngine family (tiled shares unified's sweep), and the
+        // adaptive dispatcher serves soft requests by routing them to
+        // that family; everyone else must refuse until ported.
         let soft: Vec<&str> =
             registry().iter().filter(|e| e.soft_output).map(|e| e.name).collect();
-        assert_eq!(soft, vec!["scalar", "tiled", "unified"]);
+        assert_eq!(soft, vec!["scalar", "tiled", "unified", "auto"]);
+    }
+
+    #[test]
+    fn tail_biting_flags_name_the_circular_engines() {
+        // wava decodes the circular trellis itself; auto dispatches
+        // tail-biting shapes to it. Everyone else refuses with
+        // DecodeError::UnsupportedStreamEnd.
+        let tb: Vec<&str> =
+            registry().iter().filter(|e| e.tail_biting).map(|e| e.name).collect();
+        assert_eq!(tb, vec!["wava", "auto"]);
+    }
+
+    #[test]
+    fn soft_margin_rule_tracks_the_soft_flag() {
+        // Every soft-capable engine must report a nonzero SOVA margin
+        // working set (4 B/state/stage — memmodel::sova_margin_bytes);
+        // hard-only engines must report zero, so the planner's budget
+        // clamp never charges them for margins.
+        let params = BuildParams::paper_default();
+        for e in registry() {
+            let margin = (e.soft_margin_bytes)(&params);
+            if e.soft_output {
+                assert!(margin > 0, "{}: soft engine with zero margin rule", e.name);
+            } else {
+                assert_eq!(margin, 0, "{}: hard engine charging soft margins", e.name);
+            }
+        }
+        // The whole-stream reference's margins scale with the stream;
+        // the frame engines' with the frame span.
+        let scalar = find("scalar").unwrap();
+        let unified = find("unified").unwrap();
+        assert_eq!(
+            (scalar.soft_margin_bytes)(&params),
+            crate::memmodel::sova_margin_bytes(
+                params.spec.num_states(),
+                params.stream_stages
+            )
+        );
+        assert_eq!(
+            (unified.soft_margin_bytes)(&params),
+            crate::memmodel::sova_margin_bytes(params.spec.num_states(), params.geo.span())
+        );
     }
 
     #[test]

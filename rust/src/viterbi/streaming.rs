@@ -40,6 +40,8 @@ pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
         },
         lane_width: |_| 1,
         soft_output: false,
+        soft_margin_bytes: |_| 0,
+        tail_biting: false,
     }
 }
 
@@ -208,6 +210,7 @@ impl Engine for StreamingEngine {
     ) -> Result<crate::viterbi::DecodeOutput, crate::viterbi::DecodeError> {
         use crate::viterbi::{DecodeError, DecodeOutput, DecodeStats, OutputMode};
         req.validate(&self.spec)?;
+        crate::viterbi::engine::reject_tail_biting(self.name(), req.end)?;
         if req.output == OutputMode::Soft {
             // A sliding window discards survivor history at the
             // decision horizon, so the SOVA competitor sweep has
@@ -221,13 +224,15 @@ impl Engine for StreamingEngine {
         let mut bits = dec.push(req.llrs);
         let final_state = match req.end {
             StreamEnd::Terminated => Some(0),
-            StreamEnd::Truncated => None,
+            // Tail-biting was rejected above; any future linear end
+            // flushes from the best metric like a truncated stream.
+            _ => None,
         };
         let fm = dec.final_metric(final_state);
         bits.extend(dec.finish(final_state));
         Ok(DecodeOutput::hard(
             bits,
-            DecodeStats { final_metric: Some(fm), frames: 1 },
+            DecodeStats { final_metric: Some(fm), frames: 1, iterations: None },
         ))
     }
 }

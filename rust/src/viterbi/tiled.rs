@@ -31,6 +31,10 @@ pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
         // Shares TiledEngine's SOVA path with `unified` (the soft
         // sweep always traces the frame serially anyway).
         soft_output: true,
+        soft_margin_bytes: |p: &BuildParams| {
+            crate::memmodel::sova_margin_bytes(p.spec.num_states(), p.geo.span())
+        },
+        tail_biting: false,
     }
 }
 

@@ -54,6 +54,10 @@ pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
         },
         lane_width: |_| 1,
         soft_output: true,
+        soft_margin_bytes: |p: &BuildParams| {
+            crate::memmodel::sova_margin_bytes(p.spec.num_states(), p.geo.span())
+        },
+        tail_biting: false,
     }
 }
 

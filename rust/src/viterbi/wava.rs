@@ -1,0 +1,675 @@
+//! Wrap-around Viterbi (WAVA) decoding for **tail-biting**
+//! convolutional codes — the circular-trellis workload of
+//! LTE PBCH/PDCCH-style control channels (no termination tail; the
+//! encoder starts in the state its last k−1 message bits fix, so every
+//! valid codeword is a circular trellis path).
+//!
+//! The decoder iterates the frame (Shao et al.'s wrap-around schedule,
+//! as composed with block-parallel GPU decoding by Peng et al.):
+//!
+//! 1. iteration 1 starts with all-equal path metrics (the circular
+//!    start state is unknown);
+//! 2. each iteration runs the ordinary ACS forward pass over the whole
+//!    frame and traces back from the best final metric;
+//! 3. if the traced path's **start state equals its end state** the
+//!    path is tail-biting — the decode converged; otherwise the next
+//!    iteration is seeded with the previous iteration's final σ row
+//!    (renormalized), i.e. the metrics *wrap around* the frame;
+//! 4. a bounded iteration cap ([`DEFAULT_WAVA_MAX_ITERS`]) guarantees
+//!    termination; at the cap the best-metric traceback is emitted
+//!    as-is (the standard WAVA fallback).
+//!
+//! Two bit-exact cores implement the per-iteration ACS:
+//!
+//! * the **lane core** ([`wava_decode_lane_group`]) — up to 64
+//!   equal-length tail-biting frames decoded in SIMD lockstep on the
+//!   `crate::lanes` slabs, so batched tail-biting traffic through the
+//!   coordinator stays on the same SIMD path as linear lane batches;
+//! * a **scalar core** ([`wava_decode_frame`]) — the
+//!   `viterbi::scalar` butterfly on a [`FrameScratch`], used for
+//!   single frames (its 1-bit survivor packing is the registry's
+//!   memory rule; a 1-lane group would pay a full u64 word per
+//!   decision), for codes outside the lane fast path, and as the
+//!   reference the lane core is parity-tested against.
+//!
+//! One iteration with all-equal initial metrics is *exactly* a
+//! best-state truncated decode (`ScalarDecoder::decode(llrs, None,
+//! BestMetric)`) — `rust/tests/wava_parity.rs` pins that property,
+//! plus bit-exact parity against an exhaustive brute-force ML
+//! reference on short blocks.
+
+use crate::code::{CodeSpec, Trellis};
+use crate::lanes::acs::{acs_stage_lanes_b2, acs_stage_lanes_b3, lane_fast_path};
+use crate::lanes::metrics::argmax_lanes;
+use crate::lanes::traceback::traceback_segment_lane;
+use crate::lanes::{LaneMetrics, LaneSurvivors, MAX_LANES};
+use super::engine::{
+    final_traceback_start, DecodeError, DecodeOutput, DecodeRequest, DecodeStats, Engine,
+    OutputMode, StreamEnd,
+};
+use super::frame::FrameScratch;
+use super::scalar::{acs_stage_from_llrs, argmax, pm_rows, ScalarDecoder, TracebackStart};
+
+/// Default wrap-around iteration cap. Two iterations decide almost
+/// every frame at operating SNRs (the CI gate asserts a median ≤ 3);
+/// four bounds the adversarial tail without hurting throughput.
+pub const DEFAULT_WAVA_MAX_ITERS: u32 = 4;
+
+/// What one wrap-around decode reported.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WavaOutcome {
+    /// Iterations actually run (1..=cap; 0 only for an empty frame).
+    pub iterations: u32,
+    /// Whether the emitted path is tail-biting (start state == end
+    /// state). `false` means the iteration cap was hit and the plain
+    /// best-metric traceback was emitted.
+    pub converged: bool,
+    /// Path metric at the emitted traceback start.
+    pub final_metric: f32,
+}
+
+/// Decode one tail-biting frame with the scalar core. `out` receives
+/// `stages = llrs.len() / β` bits.
+///
+/// This is the readable reference implementation: the lane core
+/// ([`wava_decode_lane_group`]) must match it bit-for-bit on fast-path
+/// codes, and it serves every code the lane ACS does not cover.
+pub fn wava_decode_frame(
+    trellis: &Trellis,
+    llrs: &[f32],
+    max_iters: u32,
+    scratch: &mut FrameScratch,
+    out: &mut [u8],
+) -> WavaOutcome {
+    let beta = trellis.spec.beta as usize;
+    let ns = trellis.num_states();
+    debug_assert_eq!(llrs.len() % beta, 0);
+    let stages = llrs.len() / beta;
+    if stages == 0 {
+        return WavaOutcome { iterations: 0, converged: true, final_metric: 0.0 };
+    }
+    assert!(out.len() >= stages);
+    assert!(max_iters >= 1, "need at least one wrap iteration");
+    scratch.ensure(ns, stages);
+
+    // Iteration 1: the circular start state is unknown — all-equal
+    // metrics, exactly the truncated-stream initial condition.
+    scratch.pm[0].iter_mut().for_each(|x| *x = 0.0);
+    let mut iter = 0u32;
+    loop {
+        iter += 1;
+        for t in 0..stages {
+            let llr_t = &llrs[t * beta..(t + 1) * beta];
+            let (prev_row, cur_row) = pm_rows(&mut scratch.pm, t & 1);
+            let words = scratch.decisions.stage_mut(t);
+            acs_stage_from_llrs(trellis, llr_t, prev_row, &mut scratch.acs, cur_row, words);
+            // The scalar reference's periodic renormalization (same
+            // schedule as `ScalarDecoder::forward`), so metrics stay
+            // bounded on arbitrarily long circular frames and the
+            // one-iteration ≡ truncated-decode property holds at any
+            // length.
+            if t % 4096 == 4095 {
+                let m = cur_row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                cur_row.iter_mut().for_each(|x| *x -= m);
+            }
+        }
+        let final_row = &scratch.pm[stages & 1];
+        let start = argmax(final_row) as u32;
+        let final_metric = final_row[start as usize];
+
+        // Traceback, remembering the path's start state (the state at
+        // entry to stage 0): the wrap condition is start == end.
+        let k = trellis.spec.k;
+        let mask = trellis.spec.state_mask();
+        let mut j = start;
+        for t in (0..stages).rev() {
+            out[t] = (j >> (k - 2)) as u8;
+            let d = scratch.decisions.get(t, j);
+            j = (2 * j + d) & mask;
+        }
+        let converged = j == start;
+        if converged || iter >= max_iters {
+            return WavaOutcome { iterations: iter, converged, final_metric };
+        }
+
+        // Wrap around: seed the next pass's stage-0 row with this
+        // pass's final σ row, renormalized so metrics stay bounded
+        // across iterations.
+        if stages & 1 == 1 {
+            let (dst, src) = scratch.pm.split_at_mut(1);
+            dst[0].copy_from_slice(&src[0]);
+        }
+        let m = scratch.pm[0].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        scratch.pm[0].iter_mut().for_each(|x| *x -= m);
+    }
+}
+
+/// One lane's tail-biting frame within a lockstep WAVA group.
+pub struct WavaLaneJob<'a> {
+    /// The frame's stage-major LLRs (`stages · β` values; every lane
+    /// of a group must present the same length).
+    pub llrs: &'a [f32],
+    /// Receives the frame's decoded bits (`stages` of them).
+    pub out: &'a mut [u8],
+}
+
+/// Reusable scratch for lane-batched WAVA: the same lane-major
+/// path-metric slabs and 1-bit/lane survivor packing as the linear
+/// lane engines, plus per-lane argmax buffers.
+pub struct WavaLaneScratch {
+    pm: LaneMetrics,
+    surv: LaneSurvivors,
+    llr_slab: Vec<f32>,
+    d0: Vec<f32>,
+    d1: Vec<f32>,
+    best: Vec<f32>,
+    final_best: Vec<u32>,
+}
+
+impl WavaLaneScratch {
+    /// Allocate scratch for groups of up to `lanes` lanes over frames
+    /// of up to `max_stages` stages.
+    pub fn new(states: usize, max_stages: usize, lanes: usize) -> Self {
+        WavaLaneScratch {
+            pm: LaneMetrics::new(states, lanes),
+            surv: LaneSurvivors::new(states, max_stages),
+            llr_slab: Vec::new(),
+            d0: vec![0.0; lanes],
+            d1: vec![0.0; lanes],
+            best: vec![0.0; lanes],
+            final_best: vec![0; lanes],
+        }
+    }
+
+    fn ensure(&mut self, states: usize, stages: usize, lanes: usize, beta: usize) {
+        self.pm.ensure(states, lanes);
+        self.surv.ensure(states, stages);
+        self.llr_slab.resize(stages * beta * lanes, 0.0);
+        self.d0.resize(lanes.max(self.d0.len()), 0.0);
+        self.d1.resize(lanes.max(self.d1.len()), 0.0);
+        self.best.resize(lanes.max(self.best.len()), 0.0);
+        self.final_best.resize(lanes.max(self.final_best.len()), 0);
+    }
+}
+
+/// Decode `jobs.len() ≤ 64` equal-length tail-biting frames in SIMD
+/// lockstep: the per-iteration ACS runs on the `crate::lanes` core
+/// (lane-major slabs, 1 bit/state/stage/lane survivors), so batched
+/// tail-biting traffic shares the linear lane engines' SIMD path.
+///
+/// Each lane converges independently: a lane whose traced path closes
+/// keeps its output and iteration count from that pass, while the
+/// group keeps iterating for the stragglers (re-running a converged
+/// lane's ACS is wasted-lane work, exactly like a divergent GPU warp —
+/// the metrics carry forward regardless, so its frozen output stays
+/// valid). Every lane's result is bit-exact with
+/// [`wava_decode_frame`] on that frame alone.
+pub fn wava_decode_lane_group(
+    trellis: &Trellis,
+    max_iters: u32,
+    jobs: &mut [WavaLaneJob<'_>],
+    scratch: &mut WavaLaneScratch,
+) -> Vec<WavaOutcome> {
+    let lanes = jobs.len();
+    assert!((1..=MAX_LANES).contains(&lanes), "1..=64 lanes per group");
+    assert!(lane_fast_path(trellis), "lane fast path unsupported for this code");
+    assert!(max_iters >= 1, "need at least one wrap iteration");
+    let beta = trellis.spec.beta as usize;
+    let ns = trellis.num_states();
+    let stages = jobs[0].llrs.len() / beta;
+    if stages == 0 {
+        return vec![WavaOutcome { iterations: 0, converged: true, final_metric: 0.0 }; lanes];
+    }
+    for job in jobs.iter() {
+        assert_eq!(job.llrs.len(), stages * beta, "non-uniform lane geometry");
+        assert!(job.out.len() >= stages);
+    }
+    scratch.ensure(ns, stages, lanes, beta);
+    let WavaLaneScratch { pm, surv, llr_slab, d0, d1, best, final_best } = scratch;
+
+    // Transpose LLRs to lane-major: slab[(t·β + b)·L + l].
+    for (l, job) in jobs.iter().enumerate() {
+        for (i, &v) in job.llrs.iter().enumerate() {
+            llr_slab[i * lanes + l] = v;
+        }
+    }
+
+    // All-equal initial metrics in every lane (unknown circular start).
+    pm.init(&vec![None; lanes]);
+
+    let half = ns / 2;
+    let mut outcomes =
+        vec![WavaOutcome { iterations: 0, converged: false, final_metric: 0.0 }; lanes];
+    let mut open = lanes;
+    let mut iter = 0u32;
+    loop {
+        iter += 1;
+        for t in 0..stages {
+            let (prev, cur) = pm.rows(t & 1);
+            let words = surv.stage_mut(t);
+            let base = t * beta * lanes;
+            match beta {
+                2 => acs_stage_lanes_b2(
+                    half,
+                    lanes,
+                    prev,
+                    cur,
+                    &trellis.sign_lanes[0],
+                    &trellis.sign_lanes[1],
+                    &llr_slab[base..base + lanes],
+                    &llr_slab[base + lanes..base + 2 * lanes],
+                    d0,
+                    d1,
+                    words,
+                ),
+                3 => acs_stage_lanes_b3(
+                    half,
+                    lanes,
+                    prev,
+                    cur,
+                    [
+                        &trellis.sign_lanes[0],
+                        &trellis.sign_lanes[1],
+                        &trellis.sign_lanes[2],
+                    ],
+                    [
+                        &llr_slab[base..base + lanes],
+                        &llr_slab[base + lanes..base + 2 * lanes],
+                        &llr_slab[base + 2 * lanes..base + 3 * lanes],
+                    ],
+                    d0,
+                    d1,
+                    words,
+                ),
+                _ => unreachable!("lane_fast_path admits β ∈ {{2, 3}} only"),
+            }
+            // Per-lane periodic renormalization on the scalar
+            // reference's schedule: each lane subtracts its own max,
+            // exactly the value the scalar core subtracts for that
+            // frame, so lane/scalar bit-exactness survives long frames.
+            if t % 4096 == 4095 {
+                let (_, cur) = pm.rows(t & 1);
+                for l in 0..lanes {
+                    let mut m = f32::NEG_INFINITY;
+                    for j in 0..ns {
+                        m = m.max(cur[j * lanes + l]);
+                    }
+                    for j in 0..ns {
+                        cur[j * lanes + l] -= m;
+                    }
+                }
+            }
+        }
+        let final_parity = stages & 1;
+        argmax_lanes(pm.row(final_parity), ns, lanes, best, final_best);
+
+        for (l, job) in jobs.iter_mut().enumerate() {
+            if outcomes[l].iterations != 0 {
+                continue; // this lane already converged in a prior pass
+            }
+            let start = final_best[l];
+            let entry = traceback_segment_lane(
+                trellis, surv, l, start, stages - 1, 0, 0, stages, job.out,
+            );
+            let converged = entry == start;
+            if converged || iter >= max_iters {
+                outcomes[l] = WavaOutcome {
+                    iterations: iter,
+                    converged,
+                    final_metric: pm.row(final_parity)[start as usize * lanes + l],
+                };
+                open -= 1;
+            }
+        }
+        if open == 0 {
+            return outcomes;
+        }
+
+        // Wrap around: seed the next pass's stage-0 slab with this
+        // pass's final σ slab, renormalized per lane.
+        if final_parity == 1 {
+            let (prev, cur) = pm.rows(1); // (pm[1] = final, &mut pm[0])
+            cur[..ns * lanes].copy_from_slice(&prev[..ns * lanes]);
+        }
+        let row0 = pm.row_mut(0);
+        for l in 0..lanes {
+            let mut m = f32::NEG_INFINITY;
+            for j in 0..ns {
+                m = m.max(row0[j * lanes + l]);
+            }
+            for j in 0..ns {
+                row0[j * lanes + l] -= m;
+            }
+        }
+    }
+}
+
+/// The wrap-around Viterbi engine (`wava` in the registry): the only
+/// engine with the `tail_biting` capability. Linear streams
+/// (terminated/truncated) decode in a single pass with the ordinary
+/// pinned-start forward procedure, so the engine is a drop-in for the
+/// whole-stream reference on non-circular traffic too.
+pub struct WavaEngine {
+    spec: CodeSpec,
+    trellis: Trellis,
+    max_iters: u32,
+    name: String,
+}
+
+impl WavaEngine {
+    /// Build a WAVA engine with an explicit wrap-iteration cap (≥ 1).
+    pub fn new(spec: CodeSpec, max_iters: u32) -> Self {
+        assert!(max_iters >= 1, "need at least one wrap iteration");
+        let trellis = Trellis::new(spec.clone());
+        let name = format!("wava(iters={max_iters})");
+        WavaEngine { spec, trellis, max_iters, name }
+    }
+
+    /// Build with the default cap ([`DEFAULT_WAVA_MAX_ITERS`]).
+    pub fn with_default_iters(spec: CodeSpec) -> Self {
+        WavaEngine::new(spec, DEFAULT_WAVA_MAX_ITERS)
+    }
+
+    /// The engine's wrap-iteration cap.
+    pub fn max_iters(&self) -> u32 {
+        self.max_iters
+    }
+
+    /// The engine's precomputed trellis tables.
+    pub fn trellis(&self) -> &Trellis {
+        &self.trellis
+    }
+
+    /// Decode one tail-biting frame, reporting the wrap outcome
+    /// (exposed for the coordinator backend and the BER harness, which
+    /// track iteration counts).
+    ///
+    /// A single frame runs on the scalar core — its whole-frame
+    /// survivor storage is exactly the registry `traceback_bytes` rule
+    /// (1 bit/state/stage), whereas a 1-lane group would pay the full
+    /// u64 word per decision. The SIMD lane core
+    /// ([`wava_decode_lane_group`], bit-exact with this path) is for
+    /// genuine batches: the coordinator groups uniform-length runs of
+    /// tail-biting jobs onto it.
+    pub fn decode_tail_biting(&self, llrs: &[f32], out: &mut [u8]) -> WavaOutcome {
+        let stages = llrs.len() / self.spec.beta as usize;
+        let mut scratch = FrameScratch::new(self.trellis.num_states(), stages.max(1));
+        wava_decode_frame(&self.trellis, llrs, self.max_iters, &mut scratch, out)
+    }
+}
+
+impl Engine for WavaEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn spec(&self) -> &CodeSpec {
+        &self.spec
+    }
+
+    fn decode(&self, req: &DecodeRequest<'_>) -> Result<DecodeOutput, DecodeError> {
+        req.validate(&self.spec)?;
+        if req.output == OutputMode::Soft {
+            // Circular SOVA needs margin carry across wrap iterations;
+            // refuse until that port lands (rust/tests/engine_api.rs
+            // pins this answer for TailBiting + Soft).
+            return Err(DecodeError::UnsupportedOutput {
+                engine: self.name.clone(),
+                mode: req.output,
+            });
+        }
+        if req.stages == 0 {
+            return Ok(DecodeOutput::hard(
+                Vec::new(),
+                DecodeStats { final_metric: None, frames: 0, iterations: None },
+            ));
+        }
+        match req.end {
+            StreamEnd::TailBiting => {
+                // A tail-biting path needs at least k−1 stages to fix
+                // its circular state — shorter frames are malformed by
+                // construction (the encoder asserts the same bound).
+                let km1 = (self.spec.k - 1) as usize;
+                if req.stages < km1 {
+                    return Err(DecodeError::InvalidRequest {
+                        reason: format!(
+                            "tail-biting needs at least k-1 = {km1} stages, got {}",
+                            req.stages
+                        ),
+                    });
+                }
+                let mut bits = vec![0u8; req.stages];
+                let outcome = self.decode_tail_biting(req.llrs, &mut bits);
+                Ok(DecodeOutput::hard(
+                    bits,
+                    DecodeStats {
+                        final_metric: Some(outcome.final_metric),
+                        frames: 1,
+                        iterations: Some(outcome.iterations),
+                    },
+                ))
+            }
+            _ => {
+                // Linear streams are exactly the whole-stream
+                // reference decode: pinned state-0 start, final
+                // traceback by the shared rule.
+                let tb = final_traceback_start(req.end, true);
+                let mut dec = ScalarDecoder::new(self.spec.clone());
+                let bits = dec.decode(req.llrs, Some(0), tb);
+                let row = dec.final_metrics(req.stages);
+                let fm = match tb {
+                    TracebackStart::BestMetric => row[argmax(row)],
+                    TracebackStart::State(s) => row[s as usize],
+                };
+                Ok(DecodeOutput::hard(
+                    bits,
+                    DecodeStats { final_metric: Some(fm), frames: 1, iterations: None },
+                ))
+            }
+        }
+    }
+}
+
+/// Registry entry for the wrap-around tail-biting engine.
+pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
+    use crate::viterbi::registry::{BuildParams, EngineSpec};
+    EngineSpec {
+        name: "wava",
+        description: "wrap-around Viterbi for tail-biting codes: iterate the circular frame \
+                      on the SIMD lane core until the ML path closes",
+        build: |p: &BuildParams| {
+            std::sync::Arc::new(WavaEngine::with_default_iters(p.spec.clone()))
+        },
+        traceback_bytes: |p: &BuildParams| {
+            // Whole-frame survivor storage, like the scalar reference:
+            // every wrap iteration re-traces the full circular frame.
+            crate::memmodel::traceback_working_bytes(p.spec.num_states(), p.stream_stages)
+        },
+        lane_width: |_| 1,
+        soft_output: false,
+        soft_margin_bytes: |_| 0,
+        tail_biting: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{bpsk, llr, AwgnChannel, Rng64};
+    use crate::code::{encode, Termination};
+    use crate::util::bits::count_bit_errors;
+
+    fn noisy_tail_biting(
+        spec: &CodeSpec,
+        n: usize,
+        ebn0: f64,
+        seed: u64,
+    ) -> (Vec<u8>, Vec<f32>) {
+        let mut rng = Rng64::seeded(seed);
+        let mut bits = vec![0u8; n];
+        rng.fill_bits(&mut bits);
+        let enc = encode(spec, &bits, Termination::TailBiting);
+        let ch = AwgnChannel::new(ebn0, spec.rate());
+        let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+        (bits, llr::llrs_from_samples(&rx, ch.sigma()))
+    }
+
+    #[test]
+    fn noiseless_tail_biting_recovers_exactly() {
+        for spec in [CodeSpec::standard_k5(), CodeSpec::standard_k7()] {
+            let mut rng = Rng64::seeded(0x7B + spec.k as u64);
+            let mut bits = vec![0u8; 120];
+            rng.fill_bits(&mut bits);
+            let enc = encode(&spec, &bits, Termination::TailBiting);
+            let llrs: Vec<f32> =
+                enc.iter().map(|&b| if b == 0 { 4.0 } else { -4.0 }).collect();
+            let e = WavaEngine::with_default_iters(spec.clone());
+            let out = e
+                .decode(&DecodeRequest::hard(&llrs, 120, StreamEnd::TailBiting))
+                .unwrap();
+            assert_eq!(out.bits, bits, "K={}", spec.k);
+            let iters = out.stats.iterations.expect("tail-biting reports iterations");
+            assert!(iters >= 1 && iters <= DEFAULT_WAVA_MAX_ITERS);
+        }
+    }
+
+    #[test]
+    fn noisy_tail_biting_decodes_cleanly_at_high_snr() {
+        let spec = CodeSpec::standard_k7();
+        let (bits, llrs) = noisy_tail_biting(&spec, 400, 7.0, 0x7B1);
+        let e = WavaEngine::with_default_iters(spec);
+        let out = e
+            .decode(&DecodeRequest::hard(&llrs, 400, StreamEnd::TailBiting))
+            .unwrap();
+        assert_eq!(count_bit_errors(&out.bits, &bits), 0);
+    }
+
+    #[test]
+    fn lane_group_matches_scalar_core_per_frame() {
+        // The SIMD lane core and the scalar reference must agree
+        // bit-for-bit, frame by frame, including iteration counts.
+        let spec = CodeSpec::standard_k7();
+        let trellis = Trellis::new(spec.clone());
+        let n = 96usize;
+        let frames = 11usize;
+        let per_frame: Vec<(Vec<u8>, Vec<f32>)> = (0..frames)
+            .map(|i| noisy_tail_biting(&spec, n, 2.0, 0x7B20 + i as u64))
+            .collect();
+
+        let mut lane_bits = vec![vec![0u8; n]; frames];
+        let mut jobs: Vec<WavaLaneJob<'_>> = per_frame
+            .iter()
+            .zip(lane_bits.iter_mut())
+            .map(|((_, llrs), out)| WavaLaneJob { llrs, out })
+            .collect();
+        let mut lscratch = WavaLaneScratch::new(trellis.num_states(), n, frames);
+        let lane_outcomes =
+            wava_decode_lane_group(&trellis, DEFAULT_WAVA_MAX_ITERS, &mut jobs, &mut lscratch);
+        drop(jobs);
+
+        let mut scratch = FrameScratch::new(trellis.num_states(), n);
+        for (i, (_, llrs)) in per_frame.iter().enumerate() {
+            let mut out = vec![0u8; n];
+            let o = wava_decode_frame(
+                &trellis,
+                llrs,
+                DEFAULT_WAVA_MAX_ITERS,
+                &mut scratch,
+                &mut out,
+            );
+            assert_eq!(lane_bits[i], out, "frame {i} bits");
+            assert_eq!(lane_outcomes[i].iterations, o.iterations, "frame {i} iters");
+            assert_eq!(lane_outcomes[i].converged, o.converged, "frame {i} converged");
+        }
+    }
+
+    #[test]
+    fn linear_streams_still_decode() {
+        // The wava engine accepts terminated/truncated streams with a
+        // single pinned-start pass (registry smoke relies on this).
+        let spec = CodeSpec::standard_k7();
+        let mut rng = Rng64::seeded(0x7B30);
+        let mut bits = vec![0u8; 300];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&spec, &bits, Termination::Terminated);
+        let llrs: Vec<f32> =
+            enc.iter().map(|&b| if b == 0 { 3.0 } else { -3.0 }).collect();
+        let e = WavaEngine::with_default_iters(spec);
+        let out = e
+            .decode(&DecodeRequest::hard(&llrs, 306, StreamEnd::Terminated))
+            .unwrap();
+        assert_eq!(&out.bits[..300], &bits[..]);
+        assert!(out.stats.iterations.is_none(), "linear decode reports no wrap count");
+    }
+
+    #[test]
+    fn short_tail_biting_frames_are_invalid_requests() {
+        // The encoder asserts n ≥ k−1; the decoder must answer the
+        // same malformed frames with a typed error, not a bogus Ok.
+        let spec = CodeSpec::standard_k7();
+        let e = WavaEngine::with_default_iters(spec);
+        let llrs = vec![0.5f32; 8]; // 4 stages < k−1 = 6
+        let err = e
+            .decode(&DecodeRequest::hard(&llrs, 4, StreamEnd::TailBiting))
+            .unwrap_err();
+        assert!(matches!(err, DecodeError::InvalidRequest { .. }), "{err}");
+        assert!(err.to_string().contains("k-1"), "{err}");
+        // The k−1 boundary itself is valid.
+        let llrs = vec![0.5f32; 12];
+        assert!(e.decode(&DecodeRequest::hard(&llrs, 6, StreamEnd::TailBiting)).is_ok());
+    }
+
+    #[test]
+    fn long_frame_renormalization_keeps_lane_and_scalar_in_lockstep() {
+        // Crosses the 4096-stage periodic-renorm boundary: the lane
+        // core's per-lane renorm must replay the scalar core's
+        // schedule bit-exactly, iteration counts included.
+        let spec = CodeSpec::standard_k5();
+        let trellis = Trellis::new(spec.clone());
+        let n = 4600usize;
+        let per_frame: Vec<(Vec<u8>, Vec<f32>)> = (0..2)
+            .map(|i| noisy_tail_biting(&spec, n, 2.0, 0x7B60 + i as u64))
+            .collect();
+        let mut lane_bits = vec![vec![0u8; n]; 2];
+        let mut jobs: Vec<WavaLaneJob<'_>> = per_frame
+            .iter()
+            .zip(lane_bits.iter_mut())
+            .map(|((_, llrs), out)| WavaLaneJob { llrs, out })
+            .collect();
+        let mut ls = WavaLaneScratch::new(trellis.num_states(), n, 2);
+        let lane_out =
+            wava_decode_lane_group(&trellis, DEFAULT_WAVA_MAX_ITERS, &mut jobs, &mut ls);
+        drop(jobs);
+        let mut scratch = FrameScratch::new(trellis.num_states(), n);
+        for (i, (_, llrs)) in per_frame.iter().enumerate() {
+            let mut out = vec![0u8; n];
+            let o = wava_decode_frame(
+                &trellis,
+                llrs,
+                DEFAULT_WAVA_MAX_ITERS,
+                &mut scratch,
+                &mut out,
+            );
+            assert_eq!(lane_bits[i], out, "frame {i} bits");
+            assert_eq!(lane_out[i].iterations, o.iterations, "frame {i} iters");
+        }
+    }
+
+    #[test]
+    fn soft_tail_biting_refused_with_typed_error() {
+        let spec = CodeSpec::standard_k7();
+        let e = WavaEngine::with_default_iters(spec);
+        let llrs = vec![0.5f32; 64];
+        let err = e
+            .decode(&DecodeRequest::soft(&llrs, 32, StreamEnd::TailBiting))
+            .unwrap_err();
+        assert!(matches!(err, DecodeError::UnsupportedOutput { .. }), "{err}");
+    }
+
+    #[test]
+    fn engine_name_and_cap() {
+        let e = WavaEngine::new(CodeSpec::standard_k5(), 3);
+        assert_eq!(e.name(), "wava(iters=3)");
+        assert_eq!(e.max_iters(), 3);
+    }
+}

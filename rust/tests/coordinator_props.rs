@@ -141,6 +141,7 @@ fn property_batcher_respects_fifo_and_bounds_under_deadline_interleaving() {
                         llr_block: Vec::new(),
                         pin_state0: false,
                         output: viterbi::viterbi::OutputMode::Hard,
+                        tail_biting: false,
                         submitted_at: Instant::now(),
                     };
                     pushed += 1;

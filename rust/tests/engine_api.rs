@@ -117,15 +117,82 @@ fn hard_requests_never_return_soft_values() {
 }
 
 #[test]
-fn deprecated_stream_shim_still_decodes() {
-    // The legacy entry point must stay behaviorally identical for the
-    // one release it survives as a shim.
+fn request_api_replaces_the_deprecated_stream_shim() {
+    // Migrated from the decode_stream shim's test: the request API
+    // decodes the same bits and answers the shim's old panic
+    // conditions with typed errors.
     let p = params();
     let (bits, llrs, stages) = noisy_workload(800, 6.0, 0x0DD);
     let engine = (registry()[0].build)(&p);
-    #[allow(deprecated)]
-    let out = engine.decode_stream(&llrs, stages, StreamEnd::Terminated);
-    assert_eq!(&out[..bits.len()], &bits[..]);
+    let out = engine
+        .decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Terminated))
+        .expect("well-formed request decodes");
+    assert_eq!(&out.bits[..bits.len()], &bits[..]);
+    // Former panic path: malformed length is a typed value now.
+    let err = engine
+        .decode(&DecodeRequest::hard(&llrs[2..], stages, StreamEnd::Terminated))
+        .unwrap_err();
+    assert!(matches!(err, DecodeError::LlrLengthMismatch { .. }), "{err}");
+}
+
+#[test]
+fn tail_biting_capability_matches_registry_flag() {
+    // Every engine either decodes a tail-biting stream (the wava
+    // engine and the auto dispatcher that routes to it) or answers the
+    // typed DecodeError::UnsupportedStreamEnd — never a panic, never a
+    // silent linear decode.
+    let p = params();
+    let spec = CodeSpec::standard_k7();
+    let mut rng = Rng64::seeded(0x7B17);
+    let mut bits = vec![0u8; 160];
+    rng.fill_bits(&mut bits);
+    let enc = encode(&spec, &bits, Termination::TailBiting);
+    let llrs: Vec<f32> = enc.iter().map(|&b| if b == 0 { 4.0 } else { -4.0 }).collect();
+    for entry in registry() {
+        let engine = (entry.build)(&p);
+        let result =
+            engine.decode(&DecodeRequest::hard(&llrs, bits.len(), StreamEnd::TailBiting));
+        if entry.tail_biting {
+            let out = result.unwrap_or_else(|e| panic!("{}: {e}", entry.name));
+            assert_eq!(out.bits, bits, "{}: noiseless tail-biting decode", entry.name);
+        } else {
+            let err = result.err().unwrap_or_else(|| {
+                panic!("{} has tail_biting=false but accepted the request", entry.name)
+            });
+            assert!(
+                matches!(err, DecodeError::UnsupportedStreamEnd { .. }),
+                "{}: wrong error {err}",
+                entry.name
+            );
+            assert!(err.to_string().contains("tail-biting"), "{}: {err}", entry.name);
+        }
+    }
+}
+
+#[test]
+fn tail_biting_soft_requests_refused_until_sova_is_ported() {
+    // TailBiting + Soft on the capable engines answers
+    // UnsupportedOutput (circular SOVA is not implemented), and
+    // length validation still wins over both negotiations.
+    let p = params();
+    let llrs = vec![0.5f32; 320];
+    for name in ["wava", "auto"] {
+        let engine = (viterbi::viterbi::registry::find(name).unwrap().build)(&p);
+        let err = engine
+            .decode(&DecodeRequest::soft(&llrs, 160, StreamEnd::TailBiting))
+            .unwrap_err();
+        assert!(
+            matches!(err, DecodeError::UnsupportedOutput { .. }),
+            "{name}: wrong error {err}"
+        );
+        let err = engine
+            .decode(&DecodeRequest::hard(&llrs[..319], 160, StreamEnd::TailBiting))
+            .unwrap_err();
+        assert!(
+            matches!(err, DecodeError::LlrLengthMismatch { .. }),
+            "{name}: wrong error {err}"
+        );
+    }
 }
 
 #[test]

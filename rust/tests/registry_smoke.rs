@@ -38,7 +38,7 @@ fn every_registry_engine_roundtrips_k7_frame_error_free() {
     };
     let (bits, llrs, stages) = high_snr_workload(4096, 0x5140);
     let reg = registry();
-    assert_eq!(reg.len(), 9, "engine silently dropped from the registry");
+    assert_eq!(reg.len(), 10, "engine silently dropped from the registry");
     for entry in &reg {
         let engine = (entry.build)(&params);
         let out = engine
@@ -66,7 +66,39 @@ fn registry_names_match_bench_cli_contract() {
         names,
         [
             "scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "streaming",
-            "hard", "auto"
+            "hard", "wava", "auto"
         ]
     );
+}
+
+#[test]
+fn capability_flags_match_the_documented_matrix() {
+    // The README engine table's capability columns, as code: exactly
+    // these engines implement SOVA soft output, and exactly these
+    // decode tail-biting streams. Flipping a flag without porting the
+    // capability (or vice versa) breaks this test and engine_api.rs.
+    let soft: Vec<&str> = registry().iter().filter(|e| e.soft_output).map(|e| e.name).collect();
+    assert_eq!(soft, ["scalar", "tiled", "unified", "auto"]);
+    let tail_biting: Vec<&str> =
+        registry().iter().filter(|e| e.tail_biting).map(|e| e.name).collect();
+    assert_eq!(tail_biting, ["wava", "auto"]);
+    // No engine advertises a nonzero soft-margin working set without
+    // advertising soft output itself.
+    let params = BuildParams {
+        spec: CodeSpec::standard_k7(),
+        geo: FrameGeometry::new(256, 20, 45),
+        f0: 32,
+        threads: 2,
+        delay: 96,
+        lanes: 8,
+        stream_stages: 4096,
+    };
+    for e in registry() {
+        assert_eq!(
+            (e.soft_margin_bytes)(&params) > 0,
+            e.soft_output,
+            "{}: soft margin rule disagrees with the soft flag",
+            e.name
+        );
+    }
 }

@@ -1,0 +1,104 @@
+//! Shared integration-test support: the exhaustive brute-force
+//! maximum-likelihood reference decoder for tail-biting codes.
+//!
+//! The oracle enumerates **every** possible input block (all `2^n`
+//! messages, tractable for `n ≤ 20`, used at `n ≤ 12`), encodes each
+//! circularly, and picks the codeword with the maximum correlation
+//! against the received LLRs — the minimum-distance decision by
+//! construction, with no trellis machinery shared with the decoders
+//! under test. It is the ground truth the WAVA parity suite
+//! (`rust/tests/wava_parity.rs`) gates on, and a reusable oracle for
+//! any engine on short blocks.
+
+use viterbi::code::{encode, CodeSpec, Termination};
+
+/// Correlation score of a codeword against received LLRs under the
+/// decoders' branch-metric convention: a positive LLR favours coded
+/// bit 0, so `score = Σ (coded_i == 0 ? +llr_i : −llr_i)`. Maximizing
+/// this is exactly minimizing soft distance. Accumulated in f64 so the
+/// oracle's comparisons are not at the mercy of f32 summation order.
+pub fn codeword_score(coded: &[u8], llrs: &[f32]) -> f64 {
+    debug_assert_eq!(coded.len(), llrs.len());
+    coded
+        .iter()
+        .zip(llrs)
+        .map(|(&b, &l)| if b == 0 { l as f64 } else { -(l as f64) })
+        .sum()
+}
+
+/// Exhaustive brute-force ML decoder for one tail-biting code at one
+/// block length: all `2^n` circular codewords are precomputed once so
+/// repeated decodes only pay the scoring sweep.
+pub struct BruteForceTailBiting {
+    spec: CodeSpec,
+    n: usize,
+    /// codewords[m] = tail-biting encoding of message m (bit i of `m`
+    /// is message bit i).
+    codewords: Vec<Vec<u8>>,
+}
+
+impl BruteForceTailBiting {
+    /// Precompute the full circular codebook for `n`-bit messages.
+    pub fn new(spec: CodeSpec, n: usize) -> Self {
+        assert!(n <= 20, "brute force is exponential in n");
+        assert!(n >= (spec.k - 1) as usize, "tail-biting needs n ≥ k−1");
+        let codewords = (0u64..(1u64 << n))
+            .map(|m| encode(&spec, &message_bits(m, n), Termination::TailBiting))
+            .collect();
+        BruteForceTailBiting { spec, n, codewords }
+    }
+
+    /// True when every message maps to a distinct codeword — the
+    /// tail-biting map is injective at this length, so ML decoding is
+    /// well defined. (Degenerate (n, K) combinations exist for some
+    /// codes; the parity suite asserts this before trusting parity.)
+    pub fn is_injective(&self) -> bool {
+        let mut seen = std::collections::HashSet::with_capacity(self.codewords.len());
+        self.codewords.iter().all(|c| seen.insert(c.clone()))
+    }
+
+    /// Decode: return the message whose circular codeword scores
+    /// highest against `llrs` (ties break to the lowest message index;
+    /// measure-zero on continuous noisy LLRs). Also returns the
+    /// winning score for optimality cross-checks.
+    pub fn decode_scored(&self, llrs: &[f32]) -> (Vec<u8>, f64) {
+        assert_eq!(llrs.len(), self.n * self.spec.beta as usize);
+        let mut best_m = 0u64;
+        let mut best = f64::NEG_INFINITY;
+        for (m, coded) in self.codewords.iter().enumerate() {
+            let s = codeword_score(coded, llrs);
+            if s > best {
+                best = s;
+                best_m = m as u64;
+            }
+        }
+        (message_bits(best_m, self.n), best)
+    }
+
+    /// Decode, returning the ML message bits only.
+    pub fn decode(&self, llrs: &[f32]) -> Vec<u8> {
+        self.decode_scored(llrs).0
+    }
+}
+
+/// Bit i of `m` as message bit i.
+pub fn message_bits(m: u64, n: usize) -> Vec<u8> {
+    (0..n).map(|i| ((m >> i) & 1) as u8).collect()
+}
+
+/// Noiseless BPSK LLRs for a coded bit sequence (±4.0, the convention
+/// of the unit suites: positive favours bit 0).
+pub fn noiseless_llrs(coded: &[u8]) -> Vec<f32> {
+    coded.iter().map(|&b| if b == 0 { 4.0 } else { -4.0 }).collect()
+}
+
+/// Rotate a message left by `s` positions (bit `s` becomes bit 0) —
+/// the circular-shift the tail-biting equivariance property acts by.
+pub fn rotate_left<T: Clone>(xs: &[T], s: usize) -> Vec<T> {
+    let n = xs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let s = s % n;
+    xs[s..].iter().chain(xs[..s].iter()).cloned().collect()
+}

@@ -23,6 +23,8 @@ fn gen_shape(rng: &mut Rng64) -> (JobShape, Option<usize>, usize) {
         v2: rng.gen_range_usize(0, 64),
         batch_frames: rng.gen_range_usize(1, 512),
         uniform: rng.next_u64() & 1 == 0,
+        soft: rng.next_u64() & 3 == 0,
+        tail_biting: rng.next_u64() & 3 == 0,
     };
     let budget = if rng.next_u64() & 1 == 0 {
         Some(rng.gen_range_usize(1, 1 << 26))
@@ -35,18 +37,28 @@ fn gen_shape(rng: &mut Rng64) -> (JobShape, Option<usize>, usize) {
 
 fn assert_plan_invariants(planner: &Planner, shape: &JobShape, budget: Option<usize>) {
     let choice = planner.plan(shape);
-    // (a) Always a registered engine, and one of the dispatch
-    // candidates (so it is bit-exact with `unified`).
-    assert!(
-        registry::find(choice.engine).is_some(),
-        "planner returned unregistered engine {:?}",
-        choice.engine
-    );
-    assert!(
-        DISPATCH_CANDIDATES.contains(&choice.engine),
-        "planner returned non-candidate {:?}",
-        choice.engine
-    );
+    // (a) Always a registered engine. Tail-biting shapes go to the
+    // only circular-capable candidate; soft shapes only to
+    // SOVA-capable engines; everything else stays within the
+    // bit-exact dispatch family.
+    let entry = registry::find(choice.engine)
+        .unwrap_or_else(|| panic!("planner returned unregistered engine {:?}", choice.engine));
+    if shape.tail_biting {
+        assert_eq!(choice.engine, "wava", "tail-biting shape {shape:?}");
+        assert!(entry.tail_biting);
+    } else if shape.soft {
+        assert!(
+            entry.soft_output,
+            "soft shape {shape:?} routed to non-soft {}",
+            choice.engine
+        );
+    } else {
+        assert!(
+            DISPATCH_CANDIDATES.contains(&choice.engine),
+            "planner returned non-candidate {:?}",
+            choice.engine
+        );
+    }
     // (b) Ragged shapes never get a lane engine.
     if !shape.uniform {
         assert!(
@@ -142,7 +154,7 @@ fn noisy_workload(
     let enc = encode(spec, &bits, term);
     let stages = match term {
         Termination::Terminated => n + (spec.k as usize - 1),
-        Termination::Truncated => n,
+        _ => n,
     };
     let ch = AwgnChannel::new(ebn0, spec.rate());
     let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);

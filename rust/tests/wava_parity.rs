@@ -1,0 +1,264 @@
+//! WAVA correctness suite, gated by CI (`scripts/check_wava.sh`):
+//!
+//! * **exhaustive brute-force ML parity** — every possible short
+//!   message (all 2^n blocks, K=3/5/7, n ≤ 12) is encoded circularly
+//!   and decoded by both the `wava` engine and the brute-force oracle
+//!   (`tests/support`): the outputs must be bit-exact;
+//! * **noisy ML parity** — on AWGN blocks, whenever the wrap decode
+//!   converges on its first iteration its path is provably the
+//!   maximum-likelihood tail-biting path (the best unconstrained path
+//!   is circular, and every circular path is an unconstrained path),
+//!   so it must match the oracle bit-exactly;
+//! * **oracle optimality** — the oracle's codeword never scores below
+//!   wava's emission (the oracle really is ML);
+//! * **circular-shift equivariance** — rotating the received LLRs by
+//!   s stages rotates the decoded bits by s;
+//! * **one-iteration WAVA ≡ best-state truncated decode** — iteration
+//!   one with all-equal initial metrics is exactly
+//!   `ScalarDecoder::decode(llrs, None, BestMetric)`, bit for bit.
+
+mod support;
+
+use support::{message_bits, noiseless_llrs, rotate_left, BruteForceTailBiting};
+use viterbi::channel::{bpsk, llr, AwgnChannel, Rng64};
+use viterbi::code::{encode, CodeSpec, Termination};
+use viterbi::viterbi::{
+    registry, BuildParams, DecodeRequest, Engine as _, ScalarDecoder, StreamEnd,
+    TracebackStart, WavaEngine,
+};
+
+/// The (K, n) grid of the exhaustive suites: every built constraint
+/// length with a block short enough to enumerate all 2^n messages.
+const GRID: [(u32, usize); 3] = [(3, 8), (5, 10), (7, 12)];
+
+fn wava_engine(spec: &CodeSpec) -> WavaEngine {
+    WavaEngine::with_default_iters(spec.clone())
+}
+
+fn noisy_tail_biting_block(
+    spec: &CodeSpec,
+    n: usize,
+    ebn0: f64,
+    rng: &mut Rng64,
+) -> (Vec<u8>, Vec<f32>) {
+    let mut bits = vec![0u8; n];
+    rng.fill_bits(&mut bits);
+    let enc = encode(spec, &bits, Termination::TailBiting);
+    let ch = AwgnChannel::new(ebn0, spec.rate());
+    let rx = ch.transmit(&bpsk::modulate(&enc), rng);
+    (bits, llr::llrs_from_samples(&rx, ch.sigma()))
+}
+
+#[test]
+fn wava_is_bit_exact_with_brute_force_ml_on_all_enumerated_blocks() {
+    // The acceptance criterion: enumerate EVERY message, encode
+    // circularly, decode noiselessly — wava must agree with the
+    // exhaustive ML reference (and both with the message) on all of
+    // them, for K = 3, 5 and 7.
+    for &(k, n) in &GRID {
+        let spec = CodeSpec::for_constraint(k);
+        let oracle = BruteForceTailBiting::new(spec.clone(), n);
+        assert!(
+            oracle.is_injective(),
+            "K={k} n={n}: tail-biting map must be injective for ML to be defined"
+        );
+        let engine = wava_engine(&spec);
+        for m in 0u64..(1u64 << n) {
+            let msg = message_bits(m, n);
+            let coded = encode(&spec, &msg, Termination::TailBiting);
+            let llrs = noiseless_llrs(&coded);
+            let out = engine
+                .decode(&DecodeRequest::hard(&llrs, n, StreamEnd::TailBiting))
+                .expect("wava decode");
+            let ml = oracle.decode(&llrs);
+            assert_eq!(out.bits, ml, "K={k} n={n} m={m}: wava vs brute-force ML");
+            assert_eq!(out.bits, msg, "K={k} n={n} m={m}: ML must recover the message");
+            assert_eq!(
+                out.stats.iterations,
+                Some(1),
+                "K={k} n={n} m={m}: noiseless blocks close on the first wrap"
+            );
+        }
+    }
+}
+
+#[test]
+fn wava_matches_brute_force_ml_on_noisy_first_wrap_blocks() {
+    // Noisy parity: when the first wrap converges, wava's path is
+    // provably the ML tail-biting path, so the oracle must agree bit
+    // for bit. Across the suite's SNRs the first wrap closes on the
+    // large majority of blocks — assert that too, so this test cannot
+    // silently degrade into checking nothing.
+    for &(k, n) in &GRID {
+        let spec = CodeSpec::for_constraint(k);
+        let oracle = BruteForceTailBiting::new(spec.clone(), n);
+        assert!(oracle.is_injective());
+        let engine = wava_engine(&spec);
+        let mut rng = Rng64::seeded(0x7B17_0000 + k as u64);
+        let mut first_wrap = 0usize;
+        let blocks = 60usize;
+        for _ in 0..blocks {
+            let (_msg, llrs) = noisy_tail_biting_block(&spec, n, 4.0, &mut rng);
+            let out = engine
+                .decode(&DecodeRequest::hard(&llrs, n, StreamEnd::TailBiting))
+                .expect("wava decode");
+            if out.stats.iterations == Some(1) {
+                first_wrap += 1;
+                let ml = oracle.decode(&llrs);
+                assert_eq!(out.bits, ml, "K={k}: first-wrap block diverged from ML");
+            }
+        }
+        assert!(
+            first_wrap * 2 > blocks,
+            "K={k}: only {first_wrap}/{blocks} blocks closed on the first wrap"
+        );
+    }
+}
+
+#[test]
+fn oracle_codeword_never_scores_below_wavas() {
+    // The oracle is ML by construction: whatever wava emits, encoding
+    // it circularly can never beat the oracle's score. (Also pins the
+    // score convention both sides share.)
+    for &(k, n) in &GRID {
+        let spec = CodeSpec::for_constraint(k);
+        let oracle = BruteForceTailBiting::new(spec.clone(), n);
+        let engine = wava_engine(&spec);
+        let mut rng = Rng64::seeded(0x7B17_1000 + k as u64);
+        for _ in 0..40 {
+            let (_msg, llrs) = noisy_tail_biting_block(&spec, n, 2.0, &mut rng);
+            let out = engine
+                .decode(&DecodeRequest::hard(&llrs, n, StreamEnd::TailBiting))
+                .expect("wava decode");
+            let (_ml, ml_score) = oracle.decode_scored(&llrs);
+            let wava_word = encode(&spec, &out.bits, Termination::TailBiting);
+            let wava_score = support::codeword_score(&wava_word, &llrs);
+            assert!(
+                ml_score >= wava_score - 1e-3,
+                "K={k}: oracle score {ml_score} below wava's {wava_score}"
+            );
+        }
+    }
+}
+
+#[test]
+fn rotating_the_received_llrs_rotates_the_decoded_bits() {
+    // Circular-shift equivariance. Noiseless blocks: exact and
+    // unconditional (rotating a tail-biting codeword gives the
+    // codeword of the rotated message). Noisy blocks: whenever both
+    // decodes close on the first wrap, both are ML and ML is
+    // shift-equivariant — assert exact equality there.
+    for &(k, n) in &[(5u32, 40usize), (7, 48)] {
+        let spec = CodeSpec::for_constraint(k);
+        let beta = spec.beta as usize;
+        let engine = wava_engine(&spec);
+        let mut rng = Rng64::seeded(0x7B17_2000 + k as u64);
+
+        // The encoder-level circular property the decoder test rides on.
+        let mut msg = vec![0u8; n];
+        rng.fill_bits(&mut msg);
+        let coded = encode(&spec, &msg, Termination::TailBiting);
+        for s in [1usize, 7, n - 3] {
+            assert_eq!(
+                encode(&spec, &rotate_left(&msg, s), Termination::TailBiting),
+                rotate_left(&coded, s * beta),
+                "K={k} s={s}: tail-biting encoding must commute with rotation"
+            );
+        }
+
+        // Noiseless: exact equivariance of the decoder.
+        let llrs = noiseless_llrs(&coded);
+        let base = engine
+            .decode(&DecodeRequest::hard(&llrs, n, StreamEnd::TailBiting))
+            .unwrap()
+            .bits;
+        for s in [1usize, 7, n - 3] {
+            let rot = rotate_left(&llrs, s * beta);
+            let out = engine
+                .decode(&DecodeRequest::hard(&rot, n, StreamEnd::TailBiting))
+                .unwrap()
+                .bits;
+            assert_eq!(out, rotate_left(&base, s), "K={k} s={s}: noiseless equivariance");
+        }
+
+        // Noisy: conditional on both sides closing their first wrap.
+        let mut checked = 0usize;
+        for _ in 0..30 {
+            let (_msg, llrs) = noisy_tail_biting_block(&spec, n, 4.0, &mut rng);
+            let s = 11usize;
+            let a = engine
+                .decode(&DecodeRequest::hard(&llrs, n, StreamEnd::TailBiting))
+                .unwrap();
+            let rot = rotate_left(&llrs, s * beta);
+            let b = engine
+                .decode(&DecodeRequest::hard(&rot, n, StreamEnd::TailBiting))
+                .unwrap();
+            if a.stats.iterations == Some(1) && b.stats.iterations == Some(1) {
+                assert_eq!(
+                    b.bits,
+                    rotate_left(&a.bits, s),
+                    "K={k}: noisy first-wrap equivariance"
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked > 10, "K={k}: only {checked}/30 noisy rotations were checkable");
+    }
+}
+
+#[test]
+fn one_iteration_wava_is_exactly_a_best_state_truncated_decode() {
+    // Iteration one starts all states equal and traces from the best
+    // final metric — precisely ScalarDecoder::decode(llrs, None,
+    // BestMetric). Bit-exact, on both the SIMD lane core (butterfly
+    // codes) and the scalar fallback (a non-butterfly code).
+    let codes = [
+        CodeSpec::standard_k5(),
+        CodeSpec::standard_k7(),
+        CodeSpec::standard_k7_r3(),
+        // MSB-clear generators defeat the butterfly/lane fast path, so
+        // this exercises wava's scalar fallback core.
+        CodeSpec::new(5, vec![0o13, 0o15]),
+    ];
+    for spec in codes {
+        let one_iter = WavaEngine::new(spec.clone(), 1);
+        let mut rng = Rng64::seeded(0x7B17_3000 + spec.generators[0] as u64);
+        // 5000 crosses the 4096-stage periodic-renormalization
+        // boundary, so the equality also pins wava's renorm schedule
+        // against ScalarDecoder's.
+        for n in [37usize, 128, 600, 5000] {
+            // Arbitrary noisy LLRs (around a codeword at low SNR, so
+            // plenty of blocks genuinely disagree with the message).
+            let (_msg, llrs) = noisy_tail_biting_block(&spec, n, 0.5, &mut rng);
+            let via_wava = one_iter
+                .decode(&DecodeRequest::hard(&llrs, n, StreamEnd::TailBiting))
+                .expect("wava decode")
+                .bits;
+            let mut dec = ScalarDecoder::new(spec.clone());
+            let truncated = dec.decode(&llrs, None, TracebackStart::BestMetric);
+            assert_eq!(
+                via_wava,
+                truncated,
+                "{:?} n={n}: one-iteration wava must equal best-state truncated",
+                spec.generators
+            );
+        }
+    }
+}
+
+#[test]
+fn registry_built_wava_decodes_tail_biting_like_the_direct_engine() {
+    // The registry constructor and a hand-built engine must be the
+    // same decoder (guards the BuildParams plumbing).
+    let spec = CodeSpec::standard_k7();
+    let params = BuildParams { spec: spec.clone(), ..BuildParams::paper_default() };
+    let from_registry = (registry::find("wava").unwrap().build)(&params);
+    let direct = wava_engine(&spec);
+    let mut rng = Rng64::seeded(0x7B17_4000);
+    let (_msg, llrs) = noisy_tail_biting_block(&spec, 200, 3.0, &mut rng);
+    let req = DecodeRequest::hard(&llrs, 200, StreamEnd::TailBiting);
+    let a = from_registry.decode(&req).unwrap();
+    let b = direct.decode(&req).unwrap();
+    assert_eq!(a.bits, b.bits);
+    assert_eq!(a.stats.iterations, b.stats.iterations);
+}

@@ -50,6 +50,24 @@ if ! grep -q 'Soft output' README.md; then
     fail=1
 fi
 
+# The tail-biting/WAVA subsystem must stay documented: DESIGN.md needs
+# the circular-trellis section and the README engine table its
+# tail-biting column.
+if ! grep -qE '^## .*[Tt]ail-biting' DESIGN.md; then
+    echo "DESIGN.md: missing the tail-biting/WAVA section heading"
+    fail=1
+fi
+for ty in WAVA TailBiting UnsupportedStreamEnd; do
+    if ! grep -q "$ty" DESIGN.md; then
+        echo "DESIGN.md: tail-biting section must mention $ty"
+        fail=1
+    fi
+done
+if ! grep -q 'Tail-biting' README.md; then
+    echo "README.md: engine table is missing the tail-biting column"
+    fail=1
+fi
+
 if [ "$fail" -eq 0 ]; then
     echo "docs OK: all referenced paths exist and the engine API is documented"
 fi

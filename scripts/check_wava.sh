@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tail-biting / WAVA gate (CI "wava" step):
+#   1. the wava correctness suites — exhaustive brute-force ML parity
+#      on short blocks (K=3/5/7), circular-shift equivariance, and the
+#      one-iteration ≡ best-state-truncated property;
+#   2. a BER smoke at 3 dB — `ber --tail-biting` exits nonzero unless
+#      the wrap-around decoder strictly beats a one-iteration truncated
+#      decode of the same tail-biting frames AND the median wrap
+#      iteration count stays ≤ 3 (the throughput-relevant bound: every
+#      extra wrap is a full re-decode of the frame).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== wava: brute-force ML parity + property suites =="
+cargo test -q --test wava_parity
+
+echo "== wava: tail-biting BER smoke (3 dB, 128-bit control blocks) =="
+cargo run --release --quiet -- ber --tail-biting --ebn0 3.0 --bits 600000 --block 128
+
+echo "wava OK: ML parity green; wava beats truncated at 3 dB within the iteration bound"
