@@ -90,8 +90,8 @@ mod tests {
         assert_eq!(
             all,
             vec![
-                "scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "streaming",
-                "hard", "wava", "auto"
+                "scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "blocks",
+                "streaming", "hard", "wava", "auto"
             ]
         );
     }

@@ -375,6 +375,93 @@ pub fn measure_tail_biting_point(
     }
 }
 
+/// Block-truncation characterization at one depth: the overlapped
+/// block-parallel decoder at overlap depth `m·(K−1)` against a
+/// whole-stream decode of the same noisy streams. A mismatch is a bit
+/// where the block decode disagrees with the whole-stream reference —
+/// a truncation artifact, not a channel error. The engineering rule
+/// the `blocks` engine calibrates to (depth = 5·(K−1)) predicts the
+/// artifact rate decays to negligible by m = 5; `scripts/check_blocks.sh`
+/// gates on the decay via `viterbi-repro ber --blocks`.
+#[derive(Debug, Clone, Copy)]
+pub struct BlocksTruncationPoint {
+    /// Operating point in dB.
+    pub ebn0_db: f64,
+    /// Depth multiplier m (overlap depth = m·(K−1)).
+    pub depth_mult: usize,
+    /// Overlap depth in stages.
+    pub depth: usize,
+    /// Bits where the block decode differs from the whole-stream
+    /// reference.
+    pub mismatched_bits: u64,
+    /// Message bits compared.
+    pub bits_tested: u64,
+    /// `mismatched_bits / bits_tested`.
+    pub mismatch_rate: f64,
+}
+
+/// Measure one [`BlocksTruncationPoint`] per entry of `depth_mults`:
+/// `cfg.block_bits`-stage truncated streams through BPSK/AWGN at
+/// `ebn0_db`, decoded by the whole-stream scalar reference and by a
+/// [`crate::viterbi::BlocksEngine`] at each overlap depth
+/// `m·(K−1)`, counting disagreements. All depths see the *same*
+/// streams, so the points are directly comparable. Runs until the
+/// shallowest depth has `cfg.target_errors` mismatches or
+/// `cfg.max_bits` bits were compared.
+pub fn measure_blocks_truncation(
+    spec: &CodeSpec,
+    cfg: &BerConfig,
+    ebn0_db: f64,
+    depth_mults: &[usize],
+) -> Vec<BlocksTruncationPoint> {
+    use crate::viterbi::{BlocksEngine, ScalarEngine};
+    let km1 = spec.k as usize - 1;
+    let n = cfg.block_bits.max(km1);
+    let ch = AwgnChannel::new(ebn0_db, spec.rate());
+    let mut rng = Rng64::seeded(cfg.seed ^ (ebn0_db * 1000.0) as u64 ^ 0xB10C);
+    let reference = ScalarEngine::new(spec.clone());
+    let engines: Vec<BlocksEngine> = depth_mults
+        .iter()
+        .map(|&m| BlocksEngine::with_depth(spec.clone(), m.max(1) * km1, 32))
+        .collect();
+    let mut mismatches = vec![0u64; engines.len()];
+    let mut bits = 0u64;
+    let mut msg = vec![0u8; n];
+    while bits < cfg.max_bits
+        && mismatches.iter().copied().max().unwrap_or(0) < cfg.target_errors
+    {
+        rng.fill_bits(&mut msg);
+        let coded = encode(spec, &msg, Termination::Truncated);
+        let rx = ch.transmit(&bpsk::modulate(&coded), &mut rng);
+        let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+        let req = DecodeRequest::hard(&llrs, n, StreamEnd::Truncated);
+        let ref_bits = reference
+            .decode(&req)
+            .expect("truncation harness produced a malformed request")
+            .bits;
+        for (e, miss) in engines.iter().zip(&mut mismatches) {
+            let out = e
+                .decode(&req)
+                .expect("blocks engine refused a stream the reference decoded")
+                .bits;
+            *miss += crate::util::bits::count_bit_errors(&out, &ref_bits) as u64;
+        }
+        bits += n as u64;
+    }
+    depth_mults
+        .iter()
+        .zip(&mismatches)
+        .map(|(&m, &miss)| BlocksTruncationPoint {
+            ebn0_db,
+            depth_mult: m,
+            depth: m.max(1) * km1,
+            mismatched_bits: miss,
+            bits_tested: bits,
+            mismatch_rate: miss as f64 / bits.max(1) as f64,
+        })
+        .collect()
+}
+
 /// Sweep a range of Eb/N0 values (a BER waterfall curve).
 pub fn sweep(
     spec: &CodeSpec,
@@ -500,6 +587,37 @@ mod tests {
         assert!(p.median_iterations <= 3, "{p:?}");
         assert!(p.max_iterations <= 4, "{p:?}");
         assert!(p.converged_frames * 2 > p.frames, "most frames should close: {p:?}");
+    }
+
+    #[test]
+    fn blocks_truncation_artifacts_decay_with_depth() {
+        // The check_blocks.sh gate in miniature: shallow overlaps must
+        // show truncation artifacts against the whole-stream
+        // reference, and the calibrated depth (m = 5) must make them
+        // negligible — factor-5 decay with a small-count jitter
+        // allowance, same streams at every depth.
+        let spec = CodeSpec::standard_k5();
+        let cfg = BerConfig {
+            block_bits: 4096,
+            target_errors: 150,
+            max_bits: 400_000,
+            seed: 0xB10C,
+            puncture: None,
+        };
+        let pts = measure_blocks_truncation(&spec, &cfg, 3.0, &[1, 3, 5]);
+        assert_eq!(pts.len(), 3);
+        assert!(
+            pts[0].mismatched_bits > 0,
+            "a (K-1)-stage overlap must show artifacts: {pts:?}"
+        );
+        assert!(
+            pts[2].mismatched_bits * 5 <= pts[0].mismatched_bits + 10,
+            "calibrated depth did not decay the artifact count 5x: {pts:?}"
+        );
+        assert!(
+            pts[2].mismatch_rate < 1e-3,
+            "calibrated depth artifact rate too high: {pts:?}"
+        );
     }
 
     #[test]

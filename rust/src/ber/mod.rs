@@ -7,8 +7,9 @@ pub mod metric;
 pub mod theory;
 
 pub use harness::{
-    measure_point, measure_point_parallel, measure_soft_split, measure_tail_biting_point,
-    sweep, BerConfig, BerPoint, SoftSplitPoint, TailBitingPoint,
+    measure_blocks_truncation, measure_point, measure_point_parallel, measure_soft_split,
+    measure_tail_biting_point, sweep, BerConfig, BerPoint, BlocksTruncationPoint,
+    SoftSplitPoint, TailBitingPoint,
 };
 pub use metric::{ebn0_at_ber, ebn0_distance_db, theoretical_ebn0_at_ber};
 pub use theory::{

@@ -133,6 +133,8 @@ mod tests {
             llr_block: Vec::new(),
             pin_state0: idx == 0,
             output: crate::viterbi::OutputMode::Hard,
+            tail_biting: false,
+            block_stream: false,
             submitted_at: at,
         }
     }

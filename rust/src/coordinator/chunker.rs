@@ -62,6 +62,7 @@ impl Chunker {
                 pin_state0: i == 0,
                 output: req.output,
                 tail_biting: false,
+                block_stream: false,
                 submitted_at: req.submitted_at,
             })
             .collect()

@@ -82,6 +82,13 @@ pub struct FrameJob {
     /// wrap-around (WAVA) core; uniform-length runs of such jobs take
     /// the SIMD lane path together.
     pub tail_biting: bool,
+    /// Whether this job is one whole *linear* stream to decode
+    /// block-parallel: long hard-output streams bypass the overlap
+    /// chunker the same way tail-biting ones do (the block is the
+    /// entire stream, `stages · β` LLRs) and the backend decodes it
+    /// with the overlapped-block `blocks` engine — all blocks in SIMD
+    /// lockstep instead of a serial walk over chunked frames.
+    pub block_stream: bool,
     /// Submission time of the owning request (for deadline batching).
     pub submitted_at: Instant,
 }

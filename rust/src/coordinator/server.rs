@@ -89,6 +89,7 @@ pub struct DecodeServer {
     backend_label: &'static str,
     soft_capable: bool,
     tail_biting_capable: bool,
+    block_capable: bool,
 }
 
 impl DecodeServer {
@@ -242,6 +243,7 @@ impl DecodeServer {
             backend_label: cfg.backend.label(),
             soft_capable: cfg.backend.supports_soft(),
             tail_biting_capable: cfg.backend.supports_tail_biting(),
+            block_capable: cfg.backend.supports_block_streams(),
         })
     }
 
@@ -395,13 +397,35 @@ impl DecodeServer {
                     pin_state0: false,
                     output,
                     tail_biting: true,
+                    block_stream: false,
                     submitted_at,
                 }]
             };
             (jobs, stages, submitted_at)
         } else {
             let req = DecodeRequest::with_output(id, llrs, beta, end, output);
-            let jobs = self.chunker.chunk(&req);
+            // Long hard-output linear streams skip the overlap chunker
+            // the same way tail-biting streams do: one whole-stream job
+            // the backend decodes block-parallel (all overlapped blocks
+            // in SIMD lockstep) instead of a serial walk over chunked
+            // frames.
+            let block_stream = self.block_capable
+                && output == OutputMode::Hard
+                && req.stages >= crate::tuner::BLOCKS_STREAM_MIN;
+            let jobs = if block_stream {
+                vec![FrameJob {
+                    request_id: id,
+                    frame_index: 0,
+                    llr_block: req.llrs,
+                    pin_state0: true,
+                    output,
+                    tail_biting: false,
+                    block_stream: true,
+                    submitted_at: req.submitted_at,
+                }]
+            } else {
+                self.chunker.chunk(&req)
+            };
             (jobs, req.stages, req.submitted_at)
         };
         let n = jobs.len();
@@ -425,9 +449,10 @@ impl DecodeServer {
             self.metrics.on_reject();
             return None;
         }
-        // Tail-biting requests are one whole-stream frame, so the
-        // reassembler's frame output length is the stream itself.
-        let frame_f = if end == StreamEnd::TailBiting {
+        // Tail-biting and block-stream requests are one whole-stream
+        // frame, so the reassembler's frame output length is the
+        // stream itself.
+        let frame_f = if n == 1 && (jobs[0].tail_biting || jobs[0].block_stream) {
             stages
         } else {
             self.chunker.geo.f
@@ -639,6 +664,24 @@ mod tests {
             server.decode_blocking(lin_llrs, StreamEnd::Truncated).unwrap().bits,
             lin_bits
         );
+    }
+
+    #[test]
+    fn long_stream_routes_as_one_block_parallel_frame() {
+        // A stream past the block-stream threshold bypasses the overlap
+        // chunker: the whole payload decodes as a single block-parallel
+        // frame (resp.frames == 1 instead of stages/f), bit-exactly.
+        let server = native_server(5);
+        let n = crate::tuner::BLOCKS_STREAM_MIN + 100;
+        let (bits, llrs) = noiseless_request(200, n);
+        let resp = server.decode_blocking(llrs, StreamEnd::Truncated).unwrap();
+        assert_eq!(resp.frames, 1, "expected the block-stream route");
+        assert_eq!(resp.bits, bits);
+        // The server keeps serving short chunked traffic afterwards.
+        let (short_bits, short_llrs) = noiseless_request(201, 100);
+        let short = server.decode_blocking(short_llrs, StreamEnd::Truncated).unwrap();
+        assert_eq!(short.frames, 4);
+        assert_eq!(short.bits, short_bits);
     }
 
     #[test]

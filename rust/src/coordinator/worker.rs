@@ -17,9 +17,10 @@ use crate::runtime::{ExecutorPool, Manifest, PjrtRuntime};
 use crate::tuner::{JobShape, Planner, PlannerConfig};
 use crate::util::threadpool::ThreadPool;
 use crate::viterbi::{
-    signed_soft, wava_decode_frame, wava_decode_lane_group, Engine as _, FrameScratch,
-    OutputMode, ParallelTraceback, SovaScratch, StartPolicy, StreamEnd, TiledEngine,
-    TracebackMode, TracebackStart, WavaLaneJob, WavaLaneScratch, DEFAULT_WAVA_MAX_ITERS,
+    signed_soft, wava_decode_frame, wava_decode_lane_group, BlocksEngine,
+    DecodeRequest as EngineDecodeRequest, Engine as _, FrameScratch, OutputMode,
+    ParallelTraceback, SovaScratch, StartPolicy, StreamEnd, TiledEngine, TracebackMode,
+    TracebackStart, WavaLaneJob, WavaLaneScratch, DEFAULT_WAVA_MAX_ITERS,
 };
 use super::request::{FrameJob, FrameResult};
 
@@ -89,6 +90,16 @@ impl BackendSpec {
         matches!(self, BackendSpec::Native { .. })
     }
 
+    /// Whether the backend can decode one long *linear* stream as a
+    /// single block-parallel job (`FrameJob::block_stream`). The
+    /// server routes long hard-output streams this way when true —
+    /// the native and adaptive backends carry the overlapped-block
+    /// `blocks` engine; the PJRT artifact's static uniform-frame shape
+    /// cannot hold a whole stream.
+    pub fn supports_block_streams(&self) -> bool {
+        matches!(self, BackendSpec::Native { .. } | BackendSpec::Auto { .. })
+    }
+
     /// Resolve the decode geometry without constructing the backend
     /// (the server needs it for chunking before the executor starts).
     pub fn resolve_geometry(&self) -> Result<(CodeSpec, FrameGeometry)> {
@@ -149,6 +160,7 @@ impl BackendSpec {
                     sova: SovaScratch::new(),
                     lane,
                     wava_lane: None,
+                    blocks: BlocksEngine::new(spec.clone(), f0.unwrap_or(geo.f)),
                     max_batch: 32,
                 }))
             }
@@ -208,6 +220,7 @@ impl BackendSpec {
                     frame_scratches,
                     lane_scratches,
                     planner,
+                    blocks: BlocksEngine::new(spec.clone(), f0),
                     counts: Vec::new(),
                     max_batch: MAX_LANES,
                 }))
@@ -248,6 +261,10 @@ impl BatchDecoder for PjrtBatchDecoder {
         anyhow::ensure!(
             jobs.iter().all(|j| !j.tail_biting),
             "the pjrt backend does not support tail-biting streams"
+        );
+        anyhow::ensure!(
+            jobs.iter().all(|j| !j.block_stream),
+            "the pjrt backend does not support block-parallel streams"
         );
         let meta = self.pool.meta().clone();
         let beta = meta.spec.beta as usize;
@@ -315,6 +332,10 @@ pub struct NativeBatchDecoder {
     /// Lane-major WAVA scratch for batched tail-biting jobs, allocated
     /// on first use and reused across batches.
     wava_lane: Option<WavaLaneScratch>,
+    /// Overlapped block-parallel engine for whole-stream
+    /// (`block_stream`) jobs: all blocks of one long linear stream in
+    /// SIMD lockstep.
+    blocks: BlocksEngine,
     max_batch: usize,
 }
 
@@ -375,6 +396,25 @@ fn decode_uniform_job_soft(
     );
     let soft = Some(signed_soft(&bits, &rel));
     FrameResult { request_id: job.request_id, frame_index: job.frame_index, bits, soft }
+}
+
+/// Whole-stream block-parallel decode of one `block_stream` job — the
+/// long-linear-stream route shared by the native and adaptive
+/// backends. The chunked route decodes every stream as truncated (its
+/// zero padding absorbs a termination tail), so block decode does the
+/// same.
+fn decode_block_stream_job(blocks: &BlocksEngine, job: &FrameJob) -> Result<FrameResult> {
+    let beta = blocks.spec().beta as usize;
+    let stages = job.llr_block.len() / beta;
+    let out = blocks
+        .decode(&EngineDecodeRequest::hard(&job.llr_block, stages, StreamEnd::Truncated))
+        .map_err(|e| anyhow!("block-stream decode failed: {e}"))?;
+    Ok(FrameResult {
+        request_id: job.request_id,
+        frame_index: job.frame_index,
+        bits: out.bits,
+        soft: None,
+    })
 }
 
 /// Decode one chunk of ≤ 64 uniform jobs in SIMD lockstep — the lane
@@ -540,6 +580,15 @@ impl BatchDecoder for NativeBatchDecoder {
                     job.output == OutputMode::Hard,
                     "tail-biting jobs are hard-output only"
                 );
+            } else if job.block_stream {
+                anyhow::ensure!(
+                    !job.llr_block.is_empty() && job.llr_block.len() % beta == 0,
+                    "block-stream job block length not a multiple of beta"
+                );
+                anyhow::ensure!(
+                    job.output == OutputMode::Hard,
+                    "block-stream jobs are hard-output only"
+                );
             } else {
                 anyhow::ensure!(job.llr_block.len() == l * beta, "job block length mismatch");
             }
@@ -550,7 +599,10 @@ impl BatchDecoder for NativeBatchDecoder {
         // job kinds can interleave freely within a batch.
         let mut rest = jobs;
         while !rest.is_empty() {
-            if rest[0].tail_biting {
+            if rest[0].block_stream {
+                out.push(decode_block_stream_job(&self.blocks, &rest[0])?);
+                rest = &rest[1..];
+            } else if rest[0].tail_biting {
                 let len0 = rest[0].llr_block.len();
                 let run = rest
                     .iter()
@@ -559,7 +611,10 @@ impl BatchDecoder for NativeBatchDecoder {
                 self.decode_tail_biting_run(&rest[..run], &mut out);
                 rest = &rest[run..];
             } else {
-                let run = rest.iter().take_while(|j| !j.tail_biting).count();
+                let run = rest
+                    .iter()
+                    .take_while(|j| !j.tail_biting && !j.block_stream)
+                    .count();
                 self.decode_linear_run(&rest[..run], &mut out);
                 rest = &rest[run..];
             }
@@ -612,6 +667,10 @@ pub struct AutoBatchDecoder {
     /// route), indexed modulo the pool size.
     lane_scratches: Arc<Vec<Mutex<LaneScratch>>>,
     planner: Planner,
+    /// Overlapped block-parallel engine for whole-stream
+    /// (`block_stream`) jobs — the fifth route, taken before the
+    /// planner sees the batch.
+    blocks: BlocksEngine,
     counts: Vec<(String, u64)>,
     max_batch: usize,
 }
@@ -719,7 +778,6 @@ impl BatchDecoder for AutoBatchDecoder {
         let beta = self.engine.spec().beta as usize;
         let l = geo.span();
         for job in jobs {
-            anyhow::ensure!(job.llr_block.len() == l * beta, "job block length mismatch");
             anyhow::ensure!(
                 job.output == OutputMode::Hard,
                 "the auto backend does not support soft output"
@@ -728,9 +786,34 @@ impl BatchDecoder for AutoBatchDecoder {
                 !job.tail_biting,
                 "the auto backend does not support tail-biting streams"
             );
+            if job.block_stream {
+                anyhow::ensure!(
+                    !job.llr_block.is_empty() && job.llr_block.len() % beta == 0,
+                    "block-stream job block length not a multiple of beta"
+                );
+            } else {
+                anyhow::ensure!(job.llr_block.len() == l * beta, "job block length mismatch");
+            }
         }
         if jobs.is_empty() {
             return Ok(Vec::new());
+        }
+        if jobs.iter().any(|j| j.block_stream) {
+            // Whole-stream jobs go straight to the overlapped-block
+            // engine; the rest of the batch re-enters the planner-routed
+            // path. The reassembler matches results by (request, frame),
+            // so ordering across the two kinds is free.
+            let mut out = Vec::with_capacity(jobs.len());
+            let mut streams = 0usize;
+            for job in jobs.iter().filter(|j| j.block_stream) {
+                out.push(decode_block_stream_job(&self.blocks, job)?);
+                streams += 1;
+            }
+            self.bump("blocks", streams);
+            let rest: Vec<FrameJob> =
+                jobs.iter().filter(|j| !j.block_stream).cloned().collect();
+            out.extend(self.decode_batch(&rest)?);
+            return Ok(out);
         }
         let shape = JobShape {
             k: self.engine.spec().k,
@@ -741,6 +824,7 @@ impl BatchDecoder for AutoBatchDecoder {
             uniform: jobs.len() > 1 && self.lane.is_some(),
             soft: false,
             tail_biting: false,
+            stream_stages: 0,
         };
         let choice = self.planner.plan(&shape);
         let multi = jobs.len() > 1;
@@ -984,6 +1068,7 @@ mod tests {
             pin_state0: true,
             output: OutputMode::Hard,
             tail_biting: false,
+            block_stream: false,
             submitted_at: std::time::Instant::now(),
         };
         assert!(backend.decode_batch(&[bad]).is_err());
@@ -1012,6 +1097,7 @@ mod tests {
                 pin_state0: false,
                 output: OutputMode::Hard,
                 tail_biting: true,
+                block_stream: false,
                 submitted_at: std::time::Instant::now(),
             });
             msgs.push(bits);
@@ -1063,6 +1149,134 @@ mod tests {
                 .expect("tail-biting result present");
             assert_eq!(&r.bits, msg, "tail-biting request {}", r.request_id);
         }
+    }
+
+    /// One whole linear stream as a single `block_stream` job (the
+    /// long-stream route the server takes past the chunker).
+    fn block_stream_job(spec: &CodeSpec, n: usize, seed: u64) -> (Vec<u8>, FrameJob) {
+        let mut rng = Rng64::seeded(seed);
+        let mut bits = vec![0u8; n];
+        rng.fill_bits(&mut bits);
+        let enc = encode(spec, &bits, Termination::Truncated);
+        let ch = AwgnChannel::new(8.0, spec.rate());
+        let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+        let job = FrameJob {
+            request_id: 9,
+            frame_index: 0,
+            llr_block: llr::llrs_from_samples(&rx, ch.sigma()),
+            pin_state0: true,
+            output: OutputMode::Hard,
+            tail_biting: false,
+            block_stream: true,
+            submitted_at: std::time::Instant::now(),
+        };
+        (bits, job)
+    }
+
+    #[test]
+    fn native_and_auto_decode_block_stream_jobs() {
+        let spec = CodeSpec::standard_k7();
+        let geo = FrameGeometry::new(64, 12, 20);
+        let (bits, job) = block_stream_job(&spec, 5000, 0xB10C_0001);
+        for backend_spec in [
+            BackendSpec::Native { spec: spec.clone(), geo, f0: Some(16) },
+            BackendSpec::Auto {
+                spec: spec.clone(),
+                geo,
+                f0: 16,
+                threads: 1,
+                budget_bytes: None,
+                profile: None,
+            },
+        ] {
+            let mut backend = backend_spec.build().unwrap();
+            let results = backend.decode_batch(std::slice::from_ref(&job)).unwrap();
+            assert_eq!(results.len(), 1, "{}", backend.name());
+            assert_eq!(results[0].frame_index, 0);
+            assert_eq!(results[0].bits, bits, "{}", backend.name());
+        }
+    }
+
+    #[test]
+    fn auto_counts_the_blocks_route() {
+        let spec = CodeSpec::standard_k7();
+        let geo = FrameGeometry::new(64, 12, 20);
+        let (_bits, job) = block_stream_job(&spec, 3000, 0xB10C_0002);
+        let mut auto = BackendSpec::Auto {
+            spec,
+            geo,
+            f0: 16,
+            threads: 1,
+            budget_bytes: None,
+            profile: None,
+        }
+        .build()
+        .unwrap();
+        auto.decode_batch(std::slice::from_ref(&job)).unwrap();
+        let counts = auto.dispatch_counts();
+        assert!(counts.iter().any(|(r, c)| r == "blocks" && *c == 1), "{counts:?}");
+    }
+
+    #[test]
+    fn mixed_block_stream_and_chunked_batch_decodes_both() {
+        // A whole-stream job interleaved with ordinary chunked frames:
+        // the stream decodes on the blocks engine, the frames keep
+        // their lane runs, and neither disturbs the other.
+        let spec = CodeSpec::standard_k7();
+        let geo = FrameGeometry::new(64, 12, 20);
+        for backend_spec in [
+            BackendSpec::Native { spec: spec.clone(), geo, f0: Some(16) },
+            BackendSpec::Auto {
+                spec: spec.clone(),
+                geo,
+                f0: 16,
+                threads: 2,
+                budget_bytes: None,
+                profile: None,
+            },
+        ] {
+            let mut backend = backend_spec.build().unwrap();
+            let linear = noisy_jobs(&spec, geo, 64 * 3, 0xB10C_0003);
+            let (bits, stream) = block_stream_job(&spec, 4000, 0xB10C_0004);
+            let mut jobs = vec![linear[0].clone(), stream.clone()];
+            jobs.extend(linear[1..].iter().cloned());
+            let results = backend.decode_batch(&jobs).unwrap();
+            assert_eq!(results.len(), jobs.len());
+            let r = results
+                .iter()
+                .find(|r| r.request_id == stream.request_id)
+                .expect("block-stream result present");
+            assert_eq!(r.bits, bits, "{}", backend.name());
+            let alone = backend.decode_batch(&linear).unwrap();
+            for a in &alone {
+                let m = results
+                    .iter()
+                    .find(|r| {
+                        r.request_id == a.request_id && r.frame_index == a.frame_index
+                    })
+                    .expect("chunked frame present");
+                assert_eq!(m.bits, a.bits, "frame {}", a.frame_index);
+            }
+        }
+    }
+
+    #[test]
+    fn backend_spec_block_stream_capability() {
+        let spec = CodeSpec::standard_k5();
+        let geo = FrameGeometry::new(32, 8, 12);
+        assert!(BackendSpec::Native { spec: spec.clone(), geo, f0: None }
+            .supports_block_streams());
+        assert!(BackendSpec::Auto {
+            spec: spec.clone(),
+            geo,
+            f0: 8,
+            threads: 1,
+            budget_bytes: None,
+            profile: None,
+        }
+        .supports_block_streams());
+        assert!(!BackendSpec::Pjrt { artifact: "x".into(), artifact_dir: None }
+            .supports_block_streams());
     }
 
     #[test]

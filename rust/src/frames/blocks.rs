@@ -1,0 +1,178 @@
+//! Block planning for overlapped single-stream decode (the `blocks`
+//! engine): one long stream is sliced into up to [`MAX_BLOCKS`]
+//! blocks, each extended by a warmup region of `W` stages on the left
+//! (path metrics converge before the kept region starts) and a
+//! truncation region of `W` stages on the right (tracebacks merge
+//! before the kept region ends), so all blocks can decode **in
+//! parallel** and the overlap bits are discarded — Peng et al.'s
+//! parallel block-based decode (arxiv 1608.00066) expressed on the
+//! frame-tiling substrate of [`super::plan`].
+//!
+//! The warmup rule: `W = m·(K−1)` stages with `m = 5` ([`DEPTH_MULT`])
+//! is deep enough that block decode is indistinguishable from
+//! whole-stream decode (the classic "5 constraint lengths" rule,
+//! pinned with data by `ber --blocks` and `rust/tests/blocks_parity.rs`
+//! rather than folklore).
+
+use super::plan::{plan_frames, FrameGeometry, FrameSpan};
+
+/// Most blocks a stream is split into — one SIMD lane per block, so
+/// this matches `crate::lanes::MAX_LANES`.
+pub const MAX_BLOCKS: usize = 64;
+
+/// Calibrated overlap-depth multiplier: `W = DEPTH_MULT · (K−1)`.
+/// The truncation-depth sweep (`ber --blocks`) shows the block-decode
+/// BER matching full-stream decode at this depth for K = 3/5/7.
+pub const DEPTH_MULT: usize = 5;
+
+/// Overlap depth for a multiplier `m`: `W = m·(K−1)` stages.
+pub fn overlap_depth(k: u32, mult: usize) -> usize {
+    mult * (k as usize).saturating_sub(1)
+}
+
+/// The calibrated overlap depth for constraint length `k`
+/// (`DEPTH_MULT · (K−1)`).
+pub fn calibrated_depth(k: u32) -> usize {
+    overlap_depth(k, DEPTH_MULT)
+}
+
+/// A planned block decomposition of one stream: the per-block
+/// geometry plus the spans (the same [`FrameSpan`] vocabulary the
+/// lane engines consume, so a block plan drops straight onto the
+/// SIMD lane slabs).
+#[derive(Debug, Clone)]
+pub struct BlockPlan {
+    /// Per-block geometry: `f` kept stages, `depth` warmup/truncation
+    /// overlap on each side.
+    pub geo: FrameGeometry,
+    /// The block spans; first block has no warmup (known start
+    /// state), last block has no truncation region (true stream end).
+    pub spans: Vec<FrameSpan>,
+    /// The overlap depth W the plan was built with.
+    pub depth: usize,
+}
+
+impl BlockPlan {
+    /// Processed-stages / kept-stages work inflation of this plan.
+    pub fn overhead_factor(&self) -> f64 {
+        super::plan::overhead_factor(&self.spans)
+    }
+}
+
+/// Pick how many blocks an n-stage stream should split into at
+/// overlap depth `depth`: as many as possible up to `max_blocks`,
+/// while keeping every block's kept region at least
+/// `max(4·depth, 32)` stages — thinner blocks are mostly overlap and
+/// the re-decoded warmup stages eat the parallel speedup.
+pub fn choose_blocks(stages: usize, depth: usize, max_blocks: usize) -> usize {
+    let min_kept = (4 * depth).max(32);
+    (stages / min_kept.max(1)).clamp(1, max_blocks.clamp(1, MAX_BLOCKS))
+}
+
+/// Plan an n-stage stream as (up to) `blocks` overlapped blocks of
+/// depth-`depth` warmup/truncation regions.
+///
+/// The kept regions tile the stream exactly once (inherited from
+/// [`plan_frames`]); `spans.len() <= blocks` always holds because the
+/// per-block kept length is `ceil(stages / blocks)`.
+pub fn plan_blocks(stages: usize, depth: usize, blocks: usize) -> BlockPlan {
+    let blocks = blocks.clamp(1, MAX_BLOCKS);
+    let block_f = if stages == 0 { 1 } else { (stages + blocks - 1) / blocks };
+    let geo = FrameGeometry::new(block_f.max(1), depth, depth);
+    let spans = plan_frames(stages, geo);
+    debug_assert!(spans.len() <= blocks);
+    BlockPlan { geo, spans, depth }
+}
+
+/// Plan with the block count chosen by [`choose_blocks`].
+pub fn plan_stream(stages: usize, depth: usize, max_blocks: usize) -> BlockPlan {
+    plan_blocks(stages, depth, choose_blocks(stages, depth, max_blocks))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::rng::Rng64;
+    use crate::util::check;
+
+    #[test]
+    fn depth_rule_matches_the_5k_formula() {
+        assert_eq!(overlap_depth(7, 1), 6);
+        assert_eq!(overlap_depth(7, 5), 30);
+        assert_eq!(calibrated_depth(3), 10);
+        assert_eq!(calibrated_depth(5), 20);
+        assert_eq!(calibrated_depth(7), 30);
+    }
+
+    #[test]
+    fn requested_block_count_is_honored_up_to_rounding() {
+        // 2^16 stages in 64 blocks: 64 equal kept regions of 1024.
+        let plan = plan_blocks(1 << 16, 30, 64);
+        assert_eq!(plan.spans.len(), 64);
+        assert_eq!(plan.geo.f, 1024);
+        assert!(plan.overhead_factor() < 1.06, "{}", plan.overhead_factor());
+        // Ragged: 1000 stages in 8 blocks → blocks of 125.
+        let plan = plan_blocks(1000, 20, 8);
+        assert_eq!(plan.spans.len(), 8);
+        assert_eq!(plan.geo.f, 125);
+    }
+
+    #[test]
+    fn one_block_plan_is_the_whole_stream() {
+        let plan = plan_blocks(500, 30, 1);
+        assert_eq!(plan.spans.len(), 1);
+        let s = plan.spans[0];
+        assert_eq!((s.start, s.len, s.out_start, s.out_len), (0, 500, 0, 500));
+    }
+
+    #[test]
+    fn empty_stream_plans_no_blocks() {
+        assert!(plan_blocks(0, 30, 64).spans.is_empty());
+        assert!(plan_stream(0, 30, 64).spans.is_empty());
+    }
+
+    #[test]
+    fn choose_blocks_keeps_blocks_mostly_useful() {
+        // Long stream at K=7 depth: full fan-out.
+        assert_eq!(choose_blocks(1 << 16, 30, 64), 64);
+        // Short stream: a single block (sequential decode).
+        assert_eq!(choose_blocks(100, 30, 64), 1);
+        assert_eq!(choose_blocks(0, 30, 64), 1);
+        // Mid-size: every block keeps ≥ 4·depth stages.
+        let b = choose_blocks(4000, 30, 64);
+        assert!(b > 1 && b <= 64);
+        assert!(4000 / b >= 4 * 30, "blocks {b}");
+    }
+
+    #[test]
+    fn property_kept_regions_tile_the_stream() {
+        check::forall(
+            "block plan partitions the stream and bounds overlap",
+            200,
+            0xB10C,
+            |rng: &mut Rng64| {
+                let stages = rng.gen_range_usize(0, 1 << 14);
+                let depth = rng.gen_range_usize(0, 64);
+                let blocks = rng.gen_range_usize(1, 65);
+                (stages, depth, blocks)
+            },
+            |&(stages, depth, blocks)| {
+                let plan = plan_blocks(stages, depth, blocks);
+                assert!(plan.spans.len() <= blocks);
+                let mut next = 0usize;
+                for s in &plan.spans {
+                    assert_eq!(s.out_start, next, "kept regions tile in order");
+                    assert!(s.out_len > 0);
+                    assert!(s.head() <= depth && s.tail() <= depth);
+                    assert!(s.start + s.len <= stages);
+                    next = s.out_start + s.out_len;
+                }
+                assert_eq!(next, stages, "kept regions cover the stream");
+                if !plan.spans.is_empty() {
+                    assert_eq!(plan.spans[0].head(), 0, "first block: known start");
+                    assert_eq!(plan.spans.last().unwrap().tail(), 0, "last block: true end");
+                }
+            },
+        );
+    }
+}

@@ -1,8 +1,14 @@
 //! Frame tiling: geometry planning (paper Fig 2), stream chunking into
-//! overlapping frame LLR blocks, and reassembly of decoded bits.
+//! overlapping frame LLR blocks, reassembly of decoded bits, and the
+//! overlapped-block decomposition of single long streams.
 
+pub mod blocks;
 pub mod plan;
 
+pub use blocks::{
+    calibrated_depth, choose_blocks, overlap_depth, plan_blocks, plan_stream, BlockPlan,
+    DEPTH_MULT, MAX_BLOCKS,
+};
 pub use plan::{
     overhead_factor, plan_frames, plan_lane_groups, FrameGeometry, FrameSpan, LaneGroup,
 };

@@ -247,8 +247,10 @@ pub fn decode_lane_group(
 
 /// Build the per-lane jobs of one group, carving disjoint output
 /// slices off `out_region` (which must cover exactly the group's
-/// decoded stages, in order).
-fn group_jobs<'a>(
+/// decoded stages, in order). Shared with the `blocks` engine, which
+/// lane-groups the overlapped blocks of a single stream the same way
+/// the lane engines group frames.
+pub(crate) fn group_jobs<'a>(
     spans: &[FrameSpan],
     g: &LaneGroup,
     llrs: &'a [f32],
@@ -275,7 +277,7 @@ fn group_jobs<'a>(
 
 /// Traceback start for a span's final stage — the shared
 /// `(is_last, StreamEnd)` rule from `viterbi::engine`.
-fn lane_tb(span: &FrameSpan, stages: usize, end: StreamEnd) -> TracebackStart {
+pub(crate) fn lane_tb(span: &FrameSpan, stages: usize, end: StreamEnd) -> TracebackStart {
     final_traceback_start(end, span.out_start + span.out_len == stages)
 }
 

@@ -72,7 +72,7 @@ USAGE:
                      [--engines E,..] [--samples S] [--warmup W] [--threads N]
                      [--lanes L] [--seed S] [--out FILE]
   viterbi-repro ber [--ebn0 DB] [--engine scalar|tiled|ptb] [--threads N] [--soft]
-                    [--tail-biting [--block BITS]]
+                    [--tail-biting [--block BITS]] [--blocks [--bits N]]
   viterbi-repro demo [--bits N] [--ebn0 DB]
   viterbi-repro serve [--requests N] [--backend pjrt|native|auto]
                       [--artifact NAME] [--profile FILE]
@@ -288,7 +288,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
 
 fn cmd_ber(args: &Args) -> Result<()> {
     args.check_known(&[
-        "ebn0", "engine", "threads", "bits", "seed", "soft", "tail-biting", "block",
+        "ebn0", "engine", "threads", "bits", "seed", "soft", "tail-biting", "block", "blocks",
     ])?;
     let ebn0 = args.get_f64("ebn0", 3.0)?;
     let threads = args.get_usize("threads", 8)?;
@@ -331,6 +331,59 @@ fn cmd_ber(args: &Args) -> Result<()> {
         }
         if p.median_iterations > 3 {
             bail!("median wrap iterations {} exceeds the bound of 3", p.median_iterations);
+        }
+        return Ok(());
+    }
+    if args.has("blocks") {
+        // Block-truncation validation mode (the CI check_blocks.sh
+        // gate): the overlapped block-parallel decoder against the
+        // whole-stream reference across overlap depth multipliers
+        // m·(K−1), m = 1..=5, on the same noisy streams. Artifacts
+        // must decay at least 5× from the shallowest overlap to the
+        // calibrated depth (m = 5), which must itself be negligible.
+        let cfg = BerConfig {
+            block_bits: args.get_usize("block", 8192)?,
+            target_errors: 150,
+            max_bits: args.get_u64("bits", 400_000)?,
+            seed: args.get_u64("seed", 0xB10C)?,
+            puncture: None,
+        };
+        let mults = [1usize, 2, 3, 4, 5];
+        let pts = viterbi::ber::measure_blocks_truncation(&spec, &cfg, ebn0, &mults);
+        println!(
+            "Eb/N0={:.2} dB  blocks truncation sweep (K={}, calibrated depth {}):",
+            ebn0,
+            spec.k,
+            5 * (spec.k as usize - 1)
+        );
+        for p in &pts {
+            println!(
+                "  m={}  depth={:>3}  mismatches={:>6} / {} bits  rate={:.3e}",
+                p.depth_mult, p.depth, p.mismatched_bits, p.bits_tested, p.mismatch_rate
+            );
+        }
+        let (first, last) = (&pts[0], &pts[pts.len() - 1]);
+        if first.mismatched_bits == 0 {
+            bail!(
+                "no truncation artifacts at the shallowest overlap — the sweep measured \
+                 nothing; raise --bits"
+            );
+        }
+        if last.mismatched_bits * 5 > first.mismatched_bits + 10 {
+            bail!(
+                "calibrated depth {} left {} mismatches vs {} at depth {} — the 5·(K−1) \
+                 rule is not holding",
+                last.depth,
+                last.mismatched_bits,
+                first.mismatched_bits,
+                first.depth
+            );
+        }
+        if last.mismatch_rate >= 1e-3 {
+            bail!(
+                "calibrated-depth artifact rate {:.3e} is not negligible",
+                last.mismatch_rate
+            );
         }
         return Ok(());
     }

@@ -9,7 +9,12 @@
 //! `unified` (see [`super::planner::DISPATCH_CANDIDATES`]), `auto` is
 //! itself bit-exact with `unified` — pinned by
 //! `rust/tests/tuner_props.rs` across K=5/7/9, terminated and
-//! truncated.
+//! truncated. The one exception is long contiguous streams (≥
+//! [`super::planner::BLOCKS_STREAM_MIN`] stages), which dispatch to
+//! the overlapped block-parallel `blocks` engine: its output matches
+//! the whole-stream decode up to a truncation-artifact probability
+//! the calibrated `5·(K−1)` overlap makes negligible
+//! (`rust/tests/blocks_parity.rs`).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -239,6 +244,32 @@ mod tests {
         assert_eq!(out.bits, direct.bits);
         assert_eq!(out.stats.iterations, direct.stats.iterations);
         assert_eq!(auto.cache.lock().unwrap().keys().copied().collect::<Vec<_>>(), ["wava"]);
+    }
+
+    #[test]
+    fn long_streams_dispatch_to_blocks() {
+        use crate::code::{encode, Termination};
+        let p = params();
+        let auto =
+            AutoEngine::new(p.clone(), Planner::heuristic(PlannerConfig::from_build(&p)));
+        let stages = crate::tuner::BLOCKS_STREAM_MIN;
+        assert_eq!(auto.choice_for(stages).engine, "blocks");
+        // Just under the threshold the chunked routing still applies.
+        assert_ne!(auto.choice_for(stages - 1).engine, "blocks");
+        let mut rng = crate::channel::Rng64::seeded(0xA7D);
+        let mut bits = vec![0u8; stages];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&p.spec, &bits, Termination::Truncated);
+        let llrs: Vec<f32> =
+            enc.iter().map(|&b| if b == 0 { 3.0 } else { -3.0 }).collect();
+        let out = auto
+            .decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Truncated))
+            .expect("auto must serve long streams");
+        assert_eq!(out.bits, bits);
+        assert_eq!(
+            auto.cache.lock().unwrap().keys().copied().collect::<Vec<_>>(),
+            ["blocks"]
+        );
     }
 
     #[test]

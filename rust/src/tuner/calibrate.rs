@@ -31,12 +31,23 @@ pub struct CalibrationGrid {
 impl CalibrationGrid {
     /// The full default grid: the paper's K family crossed with short
     /// and paper-length frames at single / narrow / wide batches.
+    /// `blocks` rides along so the planner's single-stream route gets
+    /// profile-scored cells too: a blocks scenario of `batch` frames
+    /// of `frame_len` stages *is* one contiguous stream of
+    /// `batch × frame_len` stages (the engine ignores the tiling), so
+    /// its cells are commensurate with the stream shapes the planner
+    /// queries, each at the engine's calibrated overlap depth
+    /// `5·(K−1)` for that K.
     pub fn full() -> CalibrationGrid {
         CalibrationGrid {
             ks: vec![5, 7, 9],
             frame_lens: vec![64, 256],
             batches: vec![1, 8, 64],
-            engines: DISPATCH_CANDIDATES.iter().map(|s| s.to_string()).collect(),
+            engines: DISPATCH_CANDIDATES
+                .iter()
+                .map(|s| s.to_string())
+                .chain(["blocks".to_string()])
+                .collect(),
         }
     }
 
@@ -166,6 +177,7 @@ mod tests {
             uniform: true,
             soft: false,
             tail_biting: false,
+            stream_stages: 0,
         };
         let choice = planner.plan(&shape);
         assert!(choice.from_profile, "on-grid shape must be profile-scored");

@@ -39,7 +39,7 @@ pub mod profile;
 pub use auto::AutoEngine;
 pub use calibrate::{run_calibration, CalibrationGrid};
 pub use planner::{
-    parse_batches, parse_ks, Choice, JobShape, Planner, PlannerConfig, BUDGET_ENV,
-    DEFAULT_BUDGET_BYTES, DISPATCH_CANDIDATES, LANE_BATCH_MIN, PROFILE_ENV,
+    parse_batches, parse_ks, Choice, JobShape, Planner, PlannerConfig, BLOCKS_STREAM_MIN,
+    BUDGET_ENV, DEFAULT_BUDGET_BYTES, DISPATCH_CANDIDATES, LANE_BATCH_MIN, PROFILE_ENV,
 };
 pub use profile::{CalibrationProfile, CalibrationRecord, TUNE_SCHEMA_VERSION};

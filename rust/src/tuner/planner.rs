@@ -51,6 +51,26 @@ const TAIL_BITING_CANDIDATES: [&str; 1] = ["wava"];
 /// refuse them).
 const SOFT_CANDIDATES: [&str; 1] = ["unified"];
 
+/// Candidates for one contiguous hard-output linear stream at or past
+/// [`BLOCKS_STREAM_MIN`]: the overlapped block-parallel engine first,
+/// then the chunked-frame family as fallback.
+const STREAM_CANDIDATES: [&str; 5] =
+    ["blocks", "unified", "parallel", "lanes", "lanes-mt"];
+
+/// [`STREAM_CANDIDATES`] minus the lane engines, for streams whose
+/// frames are not lane-groupable (`uniform == false`) — `blocks`
+/// itself stays eligible because it carries its own per-frame fallback
+/// for codes off the SIMD fast path.
+const STREAM_RAGGED_CANDIDATES: [&str; 3] = ["blocks", "unified", "parallel"];
+
+/// Stream length (stages) from which one contiguous hard-output linear
+/// stream dispatches to the overlapped block-parallel `blocks` engine
+/// instead of the chunked-frame path. Past this point the stream
+/// splits into its full 64 blocks with the warmup overlap amortized to
+/// a few percent of the payload, so lockstep block decode dominates a
+/// serial walk over chunked frames.
+pub const BLOCKS_STREAM_MIN: usize = 1 << 14;
+
 /// Batch width from which the heuristic prefers lane engines for
 /// uniform work (below it, lane-group setup overhead dominates).
 pub const LANE_BATCH_MIN: usize = 8;
@@ -90,6 +110,11 @@ pub struct JobShape {
     /// Whether the job is a tail-biting (circular-trellis) stream:
     /// only `tail_biting`-capable candidates are eligible.
     pub tail_biting: bool,
+    /// Total stages when the job is ONE contiguous linear stream
+    /// (0 = a batch of independent chunked frames). At or past
+    /// [`BLOCKS_STREAM_MIN`], hard linear work routes to the
+    /// overlapped block-parallel `blocks` engine.
+    pub stream_stages: usize,
 }
 
 impl JobShape {
@@ -111,6 +136,7 @@ impl JobShape {
             uniform: frames > 1,
             soft: false,
             tail_biting: false,
+            stream_stages: stages,
         }
     }
 
@@ -246,7 +272,11 @@ impl Planner {
             threads: self.cfg.threads.max(1),
             delay: 96,
             lanes: self.cfg.lanes.min(shape.batch_frames.max(1)).clamp(1, 64),
-            stream_stages: f * shape.batch_frames.max(1),
+            stream_stages: if shape.stream_stages > 0 {
+                shape.stream_stages
+            } else {
+                f * shape.batch_frames.max(1)
+            },
         }
     }
 
@@ -262,12 +292,22 @@ impl Planner {
         let cands = candidates(shape);
         let order = heuristic_order(shape, self.cfg.threads);
         let pos = |name: &str| order.iter().position(|n| *n == name).unwrap_or(order.len());
+        let stream = is_stream(shape);
         let mut choices: Vec<Choice> = cands
             .iter()
             .map(|&name| {
                 // nearest() is same-K-only, so profile scores are
-                // always commensurate across engines.
+                // always commensurate across engines. For one
+                // contiguous stream, the batch-grid cells of the
+                // chunked-frame engines measure a *different workload*
+                // (independent frames, not one long trellis), so only
+                // `blocks` cells — calibrated on the single-stream
+                // scenario — may score a stream shape; the rest rank
+                // by the heuristic.
                 let cell = self.profile.as_ref().and_then(|p| {
+                    if stream && name != "blocks" {
+                        return None;
+                    }
                     p.nearest(name, shape.k, shape.frame_len, shape.batch_frames)
                 });
                 Choice {
@@ -353,8 +393,15 @@ fn default_profile() -> &'static Option<CalibrationProfile> {
     })
 }
 
+/// Whether a shape is one contiguous hard linear stream long enough
+/// for the block-parallel route.
+fn is_stream(shape: &JobShape) -> bool {
+    !shape.tail_biting && !shape.soft && shape.stream_stages >= BLOCKS_STREAM_MIN
+}
+
 /// The candidate set for a shape: capability first (tail-biting work
-/// must go to `wava`, soft work to a SOVA-capable engine), then all
+/// must go to `wava`, soft work to a SOVA-capable engine), then the
+/// block-parallel stream route for long contiguous streams, then all
 /// four bit-exact engines for uniform (lane-groupable) work and the
 /// per-frame pair for ragged work.
 fn candidates(shape: &JobShape) -> &'static [&'static str] {
@@ -362,6 +409,12 @@ fn candidates(shape: &JobShape) -> &'static [&'static str] {
         &TAIL_BITING_CANDIDATES
     } else if shape.soft {
         &SOFT_CANDIDATES
+    } else if is_stream(shape) {
+        if shape.uniform {
+            &STREAM_CANDIDATES
+        } else {
+            &STREAM_RAGGED_CANDIDATES
+        }
     } else if shape.uniform {
         &DISPATCH_CANDIDATES
     } else {
@@ -372,7 +425,15 @@ fn candidates(shape: &JobShape) -> &'static [&'static str] {
 /// Static fallback ordering (fastest-first) when no profile cell
 /// covers a candidate.
 fn heuristic_order(shape: &JobShape, threads: usize) -> &'static [&'static str] {
-    if shape.batch_frames <= 1 {
+    if is_stream(shape) {
+        // One long contiguous stream: the whole point of the blocks
+        // engine. The chunked family follows in its usual order.
+        if threads > 1 {
+            &["blocks", "lanes-mt", "lanes", "parallel", "unified"]
+        } else {
+            &["blocks", "lanes", "lanes-mt", "unified", "parallel"]
+        }
+    } else if shape.batch_frames <= 1 {
         // One frame: nothing to batch or fan out.
         &["unified", "lanes", "parallel", "lanes-mt"]
     } else if shape.uniform && shape.batch_frames >= LANE_BATCH_MIN && threads > 1 {
@@ -458,6 +519,7 @@ mod tests {
             uniform,
             soft: false,
             tail_biting: false,
+            stream_stages: 0,
         }
     }
 
@@ -641,6 +703,56 @@ mod tests {
         let margin = soft_unified.working_set_bytes - hard_unified.working_set_bytes;
         // 4 bytes/state/stage over the frame span (K=7 → 64 states).
         assert_eq!(margin, 4 * 64 * (256 + 20 + 45));
+    }
+
+    #[test]
+    fn long_stream_shapes_route_to_blocks() {
+        let p = Planner::heuristic(cfg());
+        // shape(64, true) is frame_len 256 × 64 frames = 16384 stages.
+        let mut s = shape(64, true);
+        s.stream_stages = BLOCKS_STREAM_MIN;
+        assert_eq!(p.plan(&s).engine, "blocks");
+        // Below the threshold (or for a chunked batch, stream_stages
+        // = 0) the routing is unchanged.
+        s.stream_stages = BLOCKS_STREAM_MIN - 1;
+        assert_eq!(p.plan(&s).engine, "lanes-mt");
+        assert_eq!(p.plan(&shape(64, true)).engine, "lanes-mt");
+        // Capability filters outrank the stream route.
+        let mut tb = shape(64, true);
+        tb.stream_stages = BLOCKS_STREAM_MIN;
+        tb.tail_biting = true;
+        assert_eq!(p.plan(&tb).engine, "wava");
+        let mut soft = shape(64, true);
+        soft.stream_stages = BLOCKS_STREAM_MIN;
+        soft.soft = true;
+        assert_eq!(p.plan(&soft).engine, "unified");
+    }
+
+    #[test]
+    fn batch_grid_cells_never_score_a_stream_shape() {
+        // A profile claiming lanes-mt dominates chunked batches must
+        // not outrank blocks for one contiguous stream — batch cells
+        // measure independent frames, a different workload.
+        let profile = CalibrationProfile::new(vec![
+            rec("lanes-mt", 64, 9000.0),
+            rec("lanes", 64, 500.0),
+            rec("parallel", 64, 100.0),
+            rec("unified", 64, 50.0),
+        ]);
+        let p = Planner::with_profile(cfg(), profile);
+        let mut s = shape(64, true);
+        s.stream_stages = 2 * BLOCKS_STREAM_MIN;
+        let choice = p.plan(&s);
+        assert_eq!(choice.engine, "blocks");
+        assert!(!choice.from_profile);
+        // A measured blocks cell, by contrast, does score the route.
+        let mut brec = rec("blocks", 64, 800.0);
+        brec.lanes = 64;
+        let p = Planner::with_profile(cfg(), CalibrationProfile::new(vec![brec]));
+        let choice = p.plan(&s);
+        assert_eq!(choice.engine, "blocks");
+        assert!(choice.from_profile);
+        assert_eq!(choice.expected_mbps, Some(800.0));
     }
 
     #[test]

@@ -1,0 +1,317 @@
+//! Overlapped block-parallel decode of a **single** stream — the
+//! `blocks` registry engine.
+//!
+//! The frame engines already decode many independent frames in
+//! parallel, but one long stream still walks through them serially.
+//! Following Peng et al.'s parallel block-based decoder (arxiv
+//! 1608.00066), this engine slices the stream into up to 64 blocks
+//! ([`crate::frames::blocks`]), extends each by a warmup region of
+//! `W = m·(K−1)` stages on the left (the path metrics converge to the
+//! true survivor before the kept region starts) and a truncation
+//! region of `W` stages on the right (all tracebacks merge before the
+//! kept region ends), and decodes all blocks **in SIMD lockstep** as
+//! lane groups on the [`crate::lanes`] slabs. The overlap bits are
+//! decoded and discarded; the kept regions concatenate into the
+//! stream.
+//!
+//! With `W` at the calibrated depth (`5·(K−1)`), block decode is
+//! bit-identical to the whole-stream engines with probability so high
+//! the parity suite (`rust/tests/blocks_parity.rs`) pins exact
+//! equality on noisy seeded workloads; `ber --blocks` sweeps the
+//! depth to show the truncation error decaying to zero.
+
+use crate::code::{CodeSpec, Trellis};
+use crate::frames::blocks::{calibrated_depth, plan_blocks, plan_stream, BlockPlan};
+use crate::frames::plan::plan_lane_groups;
+use crate::lanes::acs::lane_fast_path;
+use crate::lanes::engine::{group_jobs, lane_tb};
+use crate::lanes::{decode_lane_group, LaneScratch, MAX_LANES};
+use crate::viterbi::frame::FrameScratch;
+use crate::viterbi::unified::decode_frame_parallel_tb;
+use crate::viterbi::{
+    DecodeError, DecodeOutput, DecodeRequest, DecodeStats, Engine, OutputMode,
+    ParallelTraceback, StartPolicy, StreamEnd,
+};
+
+/// Block-parallel single-stream engine. Geometry is per *request*:
+/// every decode plans its own block decomposition from the stream
+/// length, the configured overlap depth and the block-count policy.
+pub struct BlocksEngine {
+    spec: CodeSpec,
+    trellis: Trellis,
+    /// Warmup/truncation depth W in stages.
+    depth: usize,
+    /// `None` = pick the block count per stream
+    /// ([`crate::frames::blocks::choose_blocks`]); `Some(b)` = always
+    /// split into (up to) exactly `b` blocks.
+    blocks: Option<usize>,
+    /// Parallel-traceback subframe size (clamped to each plan's block
+    /// length).
+    f0: usize,
+    name: String,
+}
+
+impl BlocksEngine {
+    /// Build with the calibrated overlap depth `5·(K−1)` and automatic
+    /// block-count selection.
+    pub fn new(spec: CodeSpec, f0: usize) -> Self {
+        let depth = calibrated_depth(spec.k);
+        Self::with_depth(spec, depth, f0)
+    }
+
+    /// Build with an explicit overlap depth (the BER sweep uses this
+    /// to characterize shallower-than-calibrated depths).
+    pub fn with_depth(spec: CodeSpec, depth: usize, f0: usize) -> Self {
+        let trellis = Trellis::new(spec.clone());
+        let name = format!("blocks(W={depth},B=auto,f0={f0})");
+        BlocksEngine { spec, trellis, depth, blocks: None, f0, name }
+    }
+
+    /// Build with an explicit block count (clamped to `1..=64`); the
+    /// parity suite uses this to prove output invariance across block
+    /// counts.
+    pub fn with_block_count(spec: CodeSpec, depth: usize, blocks: usize, f0: usize) -> Self {
+        let trellis = Trellis::new(spec.clone());
+        let blocks = blocks.clamp(1, MAX_LANES);
+        let name = format!("blocks(W={depth},B={blocks},f0={f0})");
+        BlocksEngine { spec, trellis, depth, blocks: Some(blocks), f0, name }
+    }
+
+    /// The configured overlap depth W.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// The block plan this engine would use for an n-stage stream —
+    /// exposed so tests can build a matched-geometry reference.
+    pub fn plan_for(&self, stages: usize) -> BlockPlan {
+        match self.blocks {
+            Some(b) => plan_blocks(stages, self.depth, b),
+            None => plan_stream(stages, self.depth, MAX_LANES),
+        }
+    }
+
+    /// Per-block fallback for codes outside the lane fast path:
+    /// decode each block with the unified per-frame core (bit-exact
+    /// with the lockstep path, just not block-parallel).
+    fn decode_blocks_fallback(
+        &self,
+        llrs: &[f32],
+        stages: usize,
+        end: StreamEnd,
+        plan: &BlockPlan,
+        out: &mut [u8],
+    ) {
+        let beta = self.spec.beta as usize;
+        let ptb = self.ptb_for(plan);
+        let mut scratch = FrameScratch::new(self.trellis.num_states(), plan.geo.span());
+        for span in &plan.spans {
+            let fl = &llrs[span.start * beta..(span.start + span.len) * beta];
+            let start_state = if span.index == 0 { Some(0) } else { None };
+            decode_frame_parallel_tb(
+                &self.trellis,
+                fl,
+                span,
+                start_state,
+                lane_tb(span, stages, end),
+                &ptb,
+                &mut scratch,
+                &mut out[span.out_start..span.out_start + span.out_len],
+            );
+        }
+    }
+
+    /// The parallel-traceback config for a plan: f0 clamped to the
+    /// block length, v2 = the plan's truncation depth (the subframe
+    /// traceback needs the same right-overlap arithmetic the block
+    /// geometry was planned with).
+    fn ptb_for(&self, plan: &BlockPlan) -> ParallelTraceback {
+        ParallelTraceback::new(
+            self.f0.clamp(1, plan.geo.f),
+            plan.geo.v2,
+            StartPolicy::StoredArgmax,
+        )
+    }
+}
+
+impl Engine for BlocksEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn spec(&self) -> &CodeSpec {
+        &self.spec
+    }
+
+    fn decode(&self, req: &DecodeRequest<'_>) -> Result<DecodeOutput, DecodeError> {
+        req.validate(&self.spec)?;
+        crate::viterbi::engine::reject_tail_biting(&self.name, req.end)?;
+        if req.output == OutputMode::Soft {
+            // Block decode rides the lane survivor memory (1 decision
+            // bit per lane, no margins); soft output awaits lane-SOVA.
+            return Err(DecodeError::UnsupportedOutput {
+                engine: self.name.clone(),
+                mode: req.output,
+            });
+        }
+        let (llrs, stages, end) = (req.llrs, req.stages, req.end);
+        let beta = self.spec.beta as usize;
+        let plan = self.plan_for(stages);
+        let stats =
+            DecodeStats { final_metric: None, frames: plan.spans.len(), iterations: None };
+        let mut out = vec![0u8; stages];
+        if plan.spans.is_empty() {
+            return Ok(DecodeOutput::hard(out, stats));
+        }
+        if !lane_fast_path(&self.trellis) {
+            self.decode_blocks_fallback(llrs, stages, end, &plan, &mut out);
+            return Ok(DecodeOutput::hard(out, stats));
+        }
+        let ptb = self.ptb_for(&plan);
+        let groups = plan_lane_groups(&plan.spans, MAX_LANES);
+        let max_group = groups.iter().map(|g| g.count).max().unwrap_or(1);
+        let mut scratch =
+            LaneScratch::new(self.trellis.num_states(), plan.geo.span(), max_group);
+        let mut rest: &mut [u8] = &mut out;
+        for g in &groups {
+            let glen: usize =
+                plan.spans[g.first..g.first + g.count].iter().map(|s| s.out_len).sum();
+            let (region, r) = std::mem::take(&mut rest).split_at_mut(glen);
+            rest = r;
+            let mut jobs = group_jobs(&plan.spans, g, llrs, beta, stages, end, region);
+            decode_lane_group(
+                &self.trellis,
+                &ptb,
+                plan.spans[g.first].head(),
+                plan.spans[g.first].out_len,
+                &mut jobs,
+                &mut scratch,
+            );
+        }
+        Ok(DecodeOutput::hard(out, stats))
+    }
+}
+
+fn build_blocks(p: &crate::viterbi::registry::BuildParams) -> BlocksEngine {
+    BlocksEngine::new(p.spec.clone(), p.f0)
+}
+
+/// Registry entry for the block-parallel single-stream engine.
+pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
+    use crate::viterbi::registry::{BuildParams, EngineSpec};
+    EngineSpec {
+        name: "blocks",
+        description: "overlapped block-parallel single-stream decode: up to 64 blocks with \
+                      5·(K−1)-stage warmup/truncation regions in SIMD lockstep",
+        build: |p: &BuildParams| std::sync::Arc::new(build_blocks(p)),
+        traceback_bytes: |p: &BuildParams| {
+            // One lane group of as many lanes as the stream splits
+            // into blocks, over the block span, plus the per-boundary
+            // argmax states — the same shape the lanes rule charges.
+            let depth = calibrated_depth(p.spec.k);
+            let plan = plan_stream(p.stream_stages.max(1), depth, MAX_LANES);
+            let nblocks = plan.spans.len().max(1);
+            let f0 = p.f0.clamp(1, plan.geo.f);
+            let boundaries = (plan.geo.f + f0 - 1) / f0;
+            crate::memmodel::lane_traceback_working_bytes(
+                p.spec.num_states(),
+                plan.geo.span(),
+                nblocks,
+            ) + boundaries * nblocks * 4
+        },
+        lane_width: |p: &BuildParams| {
+            // Blocks decoded in lockstep = lanes occupied.
+            let depth = calibrated_depth(p.spec.k);
+            plan_stream(p.stream_stages.max(1), depth, MAX_LANES).spans.len().max(1)
+        },
+        soft_output: false,
+        soft_margin_bytes: |_| 0,
+        tail_biting: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{bpsk, llr, AwgnChannel, Rng64};
+    use crate::code::{encode, Termination};
+    use crate::frames::plan::FrameGeometry;
+    use crate::viterbi::{TiledEngine, TracebackMode};
+
+    fn noisy_workload(
+        spec: &CodeSpec,
+        n: usize,
+        ebn0: f64,
+        seed: u64,
+    ) -> (Vec<u8>, Vec<f32>, usize) {
+        let mut rng = Rng64::seeded(seed);
+        let mut bits = vec![0u8; n];
+        rng.fill_bits(&mut bits);
+        let enc = encode(spec, &bits, Termination::Terminated);
+        let stages = n + (spec.k as usize - 1);
+        let ch = AwgnChannel::new(ebn0, spec.rate());
+        let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+        (bits, llr::llrs_from_samples(&rx, ch.sigma()), stages)
+    }
+
+    fn run(e: &dyn Engine, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+        e.decode(&DecodeRequest::hard(llrs, stages, end)).expect("decode").bits
+    }
+
+    #[test]
+    fn matches_unified_at_the_plans_own_geometry_exactly() {
+        // Structural bit-exactness (no SNR caveat): blocks at its
+        // planned geometry is the lane core over plan_frames spans,
+        // which is pinned bit-exact with TiledEngine at the same
+        // (f, W, W) geometry — so the two must agree on ANY input.
+        let spec = CodeSpec::standard_k7();
+        let (_bits, llrs, stages) = noisy_workload(&spec, 6000, 0.5, 0xB10C_0001);
+        let e = BlocksEngine::with_block_count(spec.clone(), 30, 8, 32);
+        let plan = e.plan_for(stages);
+        assert_eq!(plan.spans.len(), 8);
+        let reference = TiledEngine::new(
+            spec,
+            FrameGeometry::new(plan.geo.f, plan.geo.v1, plan.geo.v2),
+            TracebackMode::Parallel(e.ptb_for(&plan)),
+        );
+        assert_eq!(
+            run(&e, &llrs, stages, StreamEnd::Terminated),
+            run(&reference, &llrs, stages, StreamEnd::Terminated),
+        );
+    }
+
+    #[test]
+    fn decodes_clean_streams_error_free() {
+        let spec = CodeSpec::standard_k7();
+        let (bits, llrs, stages) = noisy_workload(&spec, 8000, 8.0, 0xB10C_0002);
+        let e = BlocksEngine::new(spec, 32);
+        let out = run(&e, &llrs, stages, StreamEnd::Terminated);
+        assert_eq!(&out[..bits.len()], &bits[..]);
+    }
+
+    #[test]
+    fn short_stream_degenerates_to_one_block() {
+        let spec = CodeSpec::standard_k7();
+        let (bits, llrs, stages) = noisy_workload(&spec, 60, 8.0, 0xB10C_0003);
+        let e = BlocksEngine::new(spec, 32);
+        let out = e
+            .decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Terminated))
+            .expect("decode");
+        assert_eq!(out.stats.frames, 1);
+        assert_eq!(&out.bits[..bits.len()], &bits[..]);
+    }
+
+    #[test]
+    fn empty_stream_is_empty() {
+        let e = BlocksEngine::new(CodeSpec::standard_k7(), 32);
+        assert!(run(&e, &[], 0, StreamEnd::Truncated).is_empty());
+    }
+
+    #[test]
+    fn engine_name_reports_depth_and_policy() {
+        let e = BlocksEngine::new(CodeSpec::standard_k7(), 32);
+        assert_eq!(e.name(), "blocks(W=30,B=auto,f0=32)");
+        let e = BlocksEngine::with_block_count(CodeSpec::standard_k5(), 20, 8, 16);
+        assert_eq!(e.name(), "blocks(W=20,B=8,f0=16)");
+    }
+}

@@ -14,6 +14,10 @@
 //! * `lanes` / `lanes-mt` — lane-batched SIMD lockstep engines (the
 //!   CPU analogue of the GPU warp; implemented in [`crate::lanes`],
 //!   registered here);
+//! * `blocks` — overlapped block-parallel decode of one long stream:
+//!   up to 64 blocks with `5·(K−1)`-stage warmup/truncation regions
+//!   decoded in SIMD lockstep on the lane slabs (Peng et al., arxiv
+//!   1608.00066);
 //! * `streaming` — sliding-window decoder with path-metric carry (the
 //!   overlap-free single-lane ablation);
 //! * `hard` — hard-decision adapter over any soft engine (§II-C);
@@ -29,6 +33,7 @@
 
 #![warn(missing_docs)]
 
+pub mod blocks;
 pub mod engine;
 pub mod frame;
 pub mod hard;
@@ -42,6 +47,7 @@ pub mod tiled;
 pub mod unified;
 pub mod wava;
 
+pub use blocks::BlocksEngine;
 pub use engine::{
     final_traceback_start, reject_tail_biting, DecodeError, DecodeOutput, DecodeRequest,
     DecodeStats, Engine, OutputMode, ScalarEngine, SharedEngine, StreamEnd, TiledEngine,

@@ -123,6 +123,7 @@ pub fn registry() -> Vec<EngineSpec> {
         super::parallel::engine_entry(),
         crate::lanes::engine::engine_entry(),
         crate::lanes::engine::engine_entry_mt(),
+        super::blocks::engine_entry(),
         super::streaming::engine_entry(),
         super::hard::engine_entry(),
         super::wava::engine_entry(),
@@ -153,8 +154,8 @@ mod tests {
         assert_eq!(
             names,
             vec![
-                "scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "streaming",
-                "hard", "wava", "auto"
+                "scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "blocks",
+                "streaming", "hard", "wava", "auto"
             ]
         );
         let mut dedup = names.clone();
@@ -187,6 +188,10 @@ mod tests {
                 // The dispatcher reports the lane width of whatever
                 // engine its planner picks for these params.
                 assert!(lw == 1 || lw == params.lanes, "{}: lane width {lw}", e.name);
+            } else if e.name == "blocks" {
+                // Blocks in lockstep = lanes occupied; a 4096-stage
+                // K=7 stream splits into 4096/120 = 34 blocks.
+                assert!((2..=64).contains(&lw), "{}: lane width {lw}", e.name);
             } else {
                 assert_eq!(lw, 1, "{}", e.name);
             }

@@ -142,6 +142,7 @@ fn property_batcher_respects_fifo_and_bounds_under_deadline_interleaving() {
                         pin_state0: false,
                         output: viterbi::viterbi::OutputMode::Hard,
                         tail_biting: false,
+                        block_stream: false,
                         submitted_at: Instant::now(),
                     };
                     pushed += 1;
@@ -157,6 +158,74 @@ fn property_batcher_respects_fifo_and_bounds_under_deadline_interleaving() {
             assert_eq!(emitted, (0..pushed).collect::<Vec<_>>());
         },
     );
+}
+
+#[test]
+fn block_parallel_matches_sequential_chunk_reassembly() {
+    // The same noiseless stream decoded two ways through the worker —
+    // as one block-parallel whole-stream job and as sequential
+    // overlap-chunked frames — must reassemble to the same message,
+    // for ragged lengths including a stream shorter than one
+    // overlapped block (where the block planner degenerates to a
+    // single whole-stream block).
+    let spec = CodeSpec::standard_k5();
+    let geo = FrameGeometry::new(64, 12, 20);
+    let mut decoder = BackendSpec::Native { spec: spec.clone(), geo, f0: Some(16) }
+        .build()
+        .unwrap();
+    let chunker = Chunker::new(spec.clone(), geo);
+    let mut rng = Rng64::seeded(0xB10C);
+    for n in [37usize, 64, 100, 333, 1000, 4097] {
+        let mut msg = vec![0u8; n];
+        rng.fill_bits(&mut msg);
+        let enc = encode(&spec, &msg, Termination::Truncated);
+        let llrs: Vec<f32> =
+            enc.iter().map(|&b| if b == 0 { 4.0 } else { -4.0 }).collect();
+
+        // Sequential chunked route: the chunker's overlapped frames.
+        let req =
+            viterbi::coordinator::DecodeRequest::new(1, llrs.clone(), 2, StreamEnd::Truncated);
+        let jobs = chunker.chunk(&req);
+        let results = decoder.decode_batch(&jobs).unwrap();
+        let mut r = Reassembler::new();
+        r.expect(1, jobs.len(), n, geo.f, Instant::now(), false);
+        let mut chunked = None;
+        for fr in results {
+            chunked = r.accept(fr);
+        }
+        let chunked = chunked.expect("chunked reassembly must complete").bits;
+
+        // Block-parallel route: one whole-stream job, reassembled with
+        // the whole-stream frame length the server uses for such jobs.
+        let job = FrameJob {
+            request_id: 2,
+            frame_index: 0,
+            llr_block: llrs.clone(),
+            pin_state0: true,
+            output: viterbi::viterbi::OutputMode::Hard,
+            tail_biting: false,
+            block_stream: true,
+            submitted_at: Instant::now(),
+        };
+        let results = decoder.decode_batch(&[job]).unwrap();
+        assert_eq!(results.len(), 1);
+        let mut r = Reassembler::new();
+        r.expect(2, 1, n, n, Instant::now(), false);
+        let blocked = r
+            .accept(results.into_iter().next().unwrap())
+            .expect("a single whole-stream frame completes the request")
+            .bits;
+
+        // Noiseless, every wrong path pays at least one branch error,
+        // so the block route is exact on every bit; the chunked
+        // route's last frame is right-padded with neutral zero LLRs,
+        // so only its trailing v2 stages may tie-break differently.
+        assert_eq!(blocked, msg, "block route n={n}");
+        assert_eq!(chunked.len(), n);
+        let head = n.saturating_sub(geo.v2);
+        assert_eq!(&chunked[..head], &msg[..head], "chunked route n={n}");
+        assert_eq!(&blocked[..head], &chunked[..head], "routes diverge n={n}");
+    }
 }
 
 #[test]

@@ -38,7 +38,7 @@ fn every_registry_engine_roundtrips_k7_frame_error_free() {
     };
     let (bits, llrs, stages) = high_snr_workload(4096, 0x5140);
     let reg = registry();
-    assert_eq!(reg.len(), 10, "engine silently dropped from the registry");
+    assert_eq!(reg.len(), 11, "engine silently dropped from the registry");
     for entry in &reg {
         let engine = (entry.build)(&params);
         let out = engine
@@ -65,8 +65,8 @@ fn registry_names_match_bench_cli_contract() {
     assert_eq!(
         names,
         [
-            "scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "streaming",
-            "hard", "wava", "auto"
+            "scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "blocks",
+            "streaming", "hard", "wava", "auto"
         ]
     );
 }

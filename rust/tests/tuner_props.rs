@@ -10,7 +10,7 @@ use viterbi::code::{encode, CodeSpec, Termination};
 use viterbi::frames::plan::FrameGeometry;
 use viterbi::tuner::{
     CalibrationProfile, CalibrationRecord, JobShape, Planner, PlannerConfig,
-    DISPATCH_CANDIDATES,
+    BLOCKS_STREAM_MIN, DISPATCH_CANDIDATES,
 };
 use viterbi::util::check;
 use viterbi::viterbi::{registry, BuildParams, DecodeRequest, Engine as _, StreamEnd};
@@ -25,6 +25,13 @@ fn gen_shape(rng: &mut Rng64) -> (JobShape, Option<usize>, usize) {
         uniform: rng.next_u64() & 1 == 0,
         soft: rng.next_u64() & 3 == 0,
         tail_biting: rng.next_u64() & 3 == 0,
+        // A quarter of the shapes are one contiguous stream, with
+        // lengths landing on both sides of the block-stream threshold.
+        stream_stages: if rng.next_u64() & 3 == 0 {
+            rng.gen_range_usize(1, 1 << 17)
+        } else {
+            0
+        },
     };
     let budget = if rng.next_u64() & 1 == 0 {
         Some(rng.gen_range_usize(1, 1 << 26))
@@ -52,6 +59,17 @@ fn assert_plan_invariants(planner: &Planner, shape: &JobShape, budget: Option<us
             "soft shape {shape:?} routed to non-soft {}",
             choice.engine
         );
+    } else if shape.stream_stages >= BLOCKS_STREAM_MIN {
+        // One contiguous long hard linear stream: the block-parallel
+        // route is eligible (and wins whenever the budget allows).
+        assert!(
+            choice.engine == "blocks" || DISPATCH_CANDIDATES.contains(&choice.engine),
+            "stream shape {shape:?} routed to non-candidate {:?}",
+            choice.engine
+        );
+        if budget.is_none() {
+            assert_eq!(choice.engine, "blocks", "unbudgeted stream shape {shape:?}");
+        }
     } else {
         assert!(
             DISPATCH_CANDIDATES.contains(&choice.engine),

@@ -1,0 +1,58 @@
+#!/usr/bin/env bash
+# Block-parallel single-stream gate (CI "build-test" job, blocks step):
+#   1. the blocks correctness suites — bit-exactness against the
+#      whole-stream reference at the calibrated overlap depth, output
+#      invariance across block counts, and the coordinator's
+#      block-parallel vs sequential-chunk reassembly equality;
+#   2. a truncation-depth characterization at 3 dB — `ber --blocks`
+#      exits nonzero unless the overlap-boundary artifact count decays
+#      at least 5x from a (K-1)-stage overlap to the calibrated
+#      5·(K-1) depth, which must itself be negligible;
+#   3. a bench smoke on one 2^16-stage stream (1024 × 64) — the whole
+#      point of the engine: decoding a single long stream block-parallel
+#      must beat the serial whole-stream `unified` walk.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== blocks: parity + planner + reassembly suites =="
+cargo test -q --test blocks_parity
+cargo test -q --test coordinator_props block_parallel_matches_sequential_chunk_reassembly
+
+echo "== blocks: truncation-depth sweep (3 dB, overlap m·(K-1), m=1..5) =="
+cargo run --release --quiet -- ber --blocks --ebn0 3.0 --bits 400000
+
+echo "== blocks: single-stream bench smoke (2^16 stages) =="
+cargo run --release -- bench --engines blocks,unified --frames 64 \
+    --frame-lens 1024 --samples 3 --warmup 1 --out BENCH_blocks.json
+test -s BENCH_blocks.json
+
+python3 - BENCH_blocks.json <<'EOF'
+import json
+import sys
+
+path = sys.argv[1]
+records = []
+with open(path) as f:
+    for line in f:
+        line = line.strip()
+        if line:
+            records.append(json.loads(line))
+
+by_engine = {r["engine"]: r for r in records if r["frame_len"] == 1024}
+for name in ("blocks", "unified"):
+    if name not in by_engine:
+        print(f"FAIL: no `{name}` record at frame_len 1024 in", path)
+        sys.exit(1)
+
+blocks_mbps = by_engine["blocks"]["median_mbps"]
+unified_mbps = by_engine["unified"]["median_mbps"]
+ratio = blocks_mbps / unified_mbps if unified_mbps > 0 else float("inf")
+verdict = "OK" if blocks_mbps > unified_mbps else "FAIL"
+print(
+    f"{verdict}: 65536-stage stream: blocks {blocks_mbps:.1f} Mb/s "
+    f"vs unified {unified_mbps:.1f} Mb/s ({ratio:.2f}x)"
+)
+sys.exit(0 if blocks_mbps > unified_mbps else 1)
+EOF
+
+echo "blocks OK: parity green; artifacts decay with depth; block-parallel beats the serial walk"
