@@ -9,8 +9,29 @@ use std::path::Path;
 use crate::util::json::{Json, ObjBuilder};
 
 /// Schema tag stamped into every record so readers can reject files
-/// written by an incompatible harness. v2 added `lane_width`.
-pub const SCHEMA_VERSION: &str = "viterbi-bench/2";
+/// written by an incompatible harness. v2 added `lane_width`; v3 added
+/// `git_rev` provenance and the `stage_*_ns` timing columns.
+pub const SCHEMA_VERSION: &str = "viterbi-bench/3";
+
+/// Short git revision of the working tree this harness runs from,
+/// resolved once per process (`git rev-parse --short HEAD`);
+/// `"unknown"` when git or the repository is unavailable. Stamped into
+/// every [`Measurement`] so perf-trajectory records in `bench/records/`
+/// tie back to the commit that produced them.
+pub fn git_revision() -> &'static str {
+    static REV: std::sync::OnceLock<String> = std::sync::OnceLock::new();
+    REV.get_or_init(|| {
+        std::process::Command::new("git")
+            .args(["rev-parse", "--short", "HEAD"])
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .and_then(|o| String::from_utf8(o.stdout).ok())
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .unwrap_or_else(|| "unknown".to_string())
+    })
+}
 
 /// One engine × scenario benchmark measurement.
 #[derive(Debug, Clone, PartialEq)]
@@ -55,6 +76,21 @@ pub struct Measurement {
     pub peak_traceback_bytes: usize,
     /// RNG seed the workload was generated from (reproducibility).
     pub seed: u64,
+    /// Short git revision of the harness that wrote the record
+    /// (`"unknown"` outside a repository) — provenance for the
+    /// perf-trajectory files in `bench/records/`.
+    pub git_rev: String,
+    /// ACS (add-compare-select forward pass) nanoseconds of the last
+    /// timed sample, 0 when stage timing was off (`--stage-timings`).
+    pub stage_acs_ns: u64,
+    /// Traceback nanoseconds of the last timed sample (0 = off).
+    pub stage_traceback_ns: u64,
+    /// Lane-group transpose/fill nanoseconds of the last timed sample
+    /// (0 for per-frame engines or when off).
+    pub stage_lane_fill_ns: u64,
+    /// Warmup/truncation redecode overlap nanoseconds of the last
+    /// timed sample (0 = off; WAVA wrap iterations land here).
+    pub stage_overlap_ns: u64,
 }
 
 impl Measurement {
@@ -83,6 +119,14 @@ impl Measurement {
             // in a JSON number (f64 mantissa), and the seed must allow
             // bit-exact reruns.
             .str("seed", &self.seed.to_string())
+            .str("git_rev", &self.git_rev)
+            // Stage nanoseconds stay far below the 2^53 f64 mantissa
+            // (a timed sample is well under 10^16 ns), so numbers are
+            // lossless here.
+            .num("stage_acs_ns", self.stage_acs_ns as f64)
+            .num("stage_traceback_ns", self.stage_traceback_ns as f64)
+            .num("stage_lane_fill_ns", self.stage_lane_fill_ns as f64)
+            .num("stage_overlap_ns", self.stage_overlap_ns as f64)
             .build()
     }
 
@@ -116,6 +160,11 @@ impl Measurement {
             seed: str_field(j, "seed")?
                 .parse::<u64>()
                 .map_err(|_| "field \"seed\" is not a u64".to_string())?,
+            git_rev: str_field(j, "git_rev")?,
+            stage_acs_ns: num_field(j, "stage_acs_ns")? as u64,
+            stage_traceback_ns: num_field(j, "stage_traceback_ns")? as u64,
+            stage_lane_fill_ns: num_field(j, "stage_lane_fill_ns")? as u64,
+            stage_overlap_ns: num_field(j, "stage_overlap_ns")? as u64,
         })
     }
 }
@@ -183,6 +232,11 @@ mod tests {
             max_mbps: 42.0,
             peak_traceback_bytes: 3080,
             seed: 0xBE12,
+            git_rev: "abc1234".into(),
+            stage_acs_ns: 900_000,
+            stage_traceback_ns: 300_000,
+            stage_lane_fill_ns: 0,
+            stage_overlap_ns: 12_000,
         }
     }
 
@@ -204,8 +258,44 @@ mod tests {
             fields[0].1 = Json::str("other-harness/9");
         }
         assert!(Measurement::from_json(&j).unwrap_err().contains("unsupported schema"));
-        let partial = Json::parse(r#"{"schema":"viterbi-bench/2","engine":"scalar"}"#).unwrap();
+        let partial = Json::parse(r#"{"schema":"viterbi-bench/3","engine":"scalar"}"#).unwrap();
         assert!(Measurement::from_json(&partial).is_err());
+        // v2 records (no git_rev / stage columns) are explicitly
+        // rejected by the schema tag, not by a missing-field error.
+        let mut v2 = sample().to_json();
+        if let Json::Obj(fields) = &mut v2 {
+            fields[0].1 = Json::str("viterbi-bench/2");
+        }
+        assert!(Measurement::from_json(&v2).unwrap_err().contains("unsupported schema"));
+    }
+
+    #[test]
+    fn git_revision_is_nonempty_and_cached() {
+        let rev = git_revision();
+        assert!(!rev.is_empty());
+        // OnceLock: repeated calls return the identical cached str.
+        assert!(std::ptr::eq(rev, git_revision()));
+    }
+
+    #[test]
+    fn checked_in_baseline_record_parses() {
+        // The first perf-trajectory baseline (bench/records/). Tests
+        // run from the repo root or from rust/.
+        let path = [
+            "bench/records/BENCH_baseline.jsonl",
+            "../bench/records/BENCH_baseline.jsonl",
+        ]
+        .iter()
+        .map(std::path::Path::new)
+        .find(|p| p.is_file())
+        .expect("checked-in bench baseline present");
+        let records = read_jsonl(path).unwrap();
+        assert!(!records.is_empty());
+        for r in &records {
+            assert!(r.median_mbps > 0.0 && r.median_mbps.is_finite(), "{}", r.engine);
+            assert!(!r.git_rev.is_empty());
+            assert!(r.stream_bits > 0);
+        }
     }
 
     #[test]

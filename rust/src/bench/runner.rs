@@ -53,6 +53,13 @@ pub struct BenchOptions {
     /// such scenarios — `run_scenario` panics on any other engine, and
     /// the CLI filters the selection up front.
     pub tail_biting: bool,
+    /// Record per-stage decode timings (`--stage-timings`): enables
+    /// the `obs` stage accumulator for the run and stamps the last
+    /// timed sample's breakdown into the `stage_*_ns` record columns.
+    /// Off by default — the instrumented path costs two clock reads
+    /// per stage, which the throughput columns should not pay
+    /// unasked.
+    pub stage_timings: bool,
 }
 
 impl Default for BenchOptions {
@@ -69,6 +76,7 @@ impl Default for BenchOptions {
             lanes: 64,
             k: 7,
             tail_biting: false,
+            stage_timings: false,
         }
     }
 }
@@ -114,16 +122,28 @@ pub fn run_scenario(entry: &EngineSpec, sc: &Scenario, opts: &BenchOptions) -> M
         StreamEnd::Truncated
     };
     let req = DecodeRequest::hard(&llrs, stages, end);
+    if opts.stage_timings {
+        // Process-wide and monotonic: once a stage-timed scenario ran,
+        // the rest of the run is timed too (the flag is per-run, not
+        // per-scenario).
+        crate::obs::set_stage_timings_enabled(true);
+    }
     for _ in 0..opts.warmup {
         std::hint::black_box(engine.decode(&req).expect("bench decode"));
     }
     let mut mbps = Vec::with_capacity(opts.samples);
+    let mut stage = crate::obs::StageTimings::default();
     for _ in 0..opts.samples {
         let t0 = Instant::now();
         let out = engine.decode(&req).expect("bench decode");
         let dt = t0.elapsed().as_secs_f64();
         std::hint::black_box(&out);
         mbps.push(stages as f64 / dt / 1e6);
+        // Keep the last sample's breakdown (steady-state, post-warmup;
+        // pool-fanned engines report None and leave the columns 0).
+        if let Some(st) = out.stats.stage_timings {
+            stage = st;
+        }
     }
     let mut summary = Summary::new();
     mbps.iter().for_each(|&x| summary.add(x));
@@ -147,6 +167,11 @@ pub fn run_scenario(entry: &EngineSpec, sc: &Scenario, opts: &BenchOptions) -> M
         max_mbps: summary.max(),
         peak_traceback_bytes: (entry.traceback_bytes)(&params),
         seed: opts.seed,
+        git_rev: super::measurement::git_revision().to_string(),
+        stage_acs_ns: stage.acs_ns,
+        stage_traceback_ns: stage.traceback_ns,
+        stage_lane_fill_ns: stage.lane_fill_ns,
+        stage_overlap_ns: stage.overlap_ns,
     }
 }
 
@@ -206,6 +231,18 @@ mod tests {
         assert_eq!(m.lane_width, 16);
         assert!(m.engine_detail.contains("L=16"));
         assert!(m.median_mbps > 0.0 && m.median_mbps.is_finite());
+    }
+
+    #[test]
+    fn stage_timed_scenario_records_the_breakdown() {
+        let entry = registry::find("unified").unwrap();
+        let sc = Scenario { engine: "unified".into(), frame_len: 128, frames: 4 };
+        let mut opts = quick_opts();
+        opts.stage_timings = true;
+        let m = run_scenario(&entry, &sc, &opts);
+        assert!(m.stage_acs_ns > 0, "{m:?}");
+        assert!(m.stage_traceback_ns > 0, "{m:?}");
+        assert!(!m.git_rev.is_empty());
     }
 
     #[test]

@@ -1,9 +1,14 @@
-//! Service metrics: counters, batch occupancy, and latency histograms.
+//! Service metrics: counters, batch occupancy, latency histograms,
+//! per-route latency tracking, per-variant error counters, and the
+//! per-batch stage-timing aggregate.
 
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::obs::{DecayedEwma, StageTimings};
+use crate::util::json::{Json, ObjBuilder};
 use crate::util::stats::{LatencyHistogram, Summary};
+use crate::viterbi::DecodeError;
 
 /// Shared metrics registry (Mutex-guarded; the hot path touches it once
 /// per batch, not per frame).
@@ -21,10 +26,54 @@ struct Inner {
     decoded_bits: u64,
     rejected: u64,
     errors: u64,
+    error_kinds: Vec<(String, u64)>,
     batch_occupancy: Summary,
     request_latency: LatencyHistogram,
     batch_exec: Summary,
     dispatch: Vec<(String, u64)>,
+    routes: Vec<RouteStat>,
+    stage: StageTimings,
+    stage_batches: u64,
+}
+
+/// Per-dispatch-route latency tracking: a histogram of routed batch
+/// execution times plus a decayed average that weighs recent batches
+/// more heavily (the drift signal).
+struct RouteStat {
+    route: String,
+    batches: u64,
+    frames: u64,
+    latency: LatencyHistogram,
+    ewma_ns: DecayedEwma,
+}
+
+impl RouteStat {
+    fn new(route: &str) -> RouteStat {
+        RouteStat {
+            route: route.to_string(),
+            batches: 0,
+            frames: 0,
+            latency: LatencyHistogram::default(),
+            ewma_ns: DecayedEwma::default(),
+        }
+    }
+}
+
+/// Latency view of one dispatch route in a [`MetricsSnapshot`].
+#[derive(Debug, Clone)]
+pub struct RouteLatency {
+    /// Dispatch route name (`"lanes"`, `"blocks"`, …).
+    pub route: String,
+    /// Batches executed through this route.
+    pub batches: u64,
+    /// Frames decoded through this route.
+    pub frames: u64,
+    /// Median routed batch execution time.
+    pub p50: Duration,
+    /// 99th-percentile routed batch execution time.
+    pub p99: Duration,
+    /// Decayed (recency-weighted) mean batch execution time.
+    pub ewma: Duration,
 }
 
 /// A point-in-time snapshot for reporting.
@@ -45,6 +94,9 @@ pub struct MetricsSnapshot {
     /// Requests completed with a `DecodeError` (validation failures
     /// surfaced at submit, or backend batch failures).
     pub errors: u64,
+    /// Errors broken down by [`DecodeError`] variant
+    /// (`variant_name()` → count), in first-seen order.
+    pub error_kinds: Vec<(String, u64)>,
     /// Mean batch fill fraction (jobs / bucket size).
     pub mean_batch_occupancy: f64,
     /// Median end-to-end request latency.
@@ -57,6 +109,15 @@ pub struct MetricsSnapshot {
     /// frames), as published by an adaptive backend
     /// (`BackendSpec::Auto`). Empty for single-route backends.
     pub dispatch: Vec<(String, u64)>,
+    /// Per-route latency breakdown (histogram quantiles + decayed
+    /// average), in first-seen order.
+    pub routes: Vec<RouteLatency>,
+    /// Cumulative per-stage decode timings aggregated across batches
+    /// (`None` until the first batch reports stage timings — i.e.
+    /// unless stage timing is enabled via `obs::ObsConfig`).
+    pub stage_timings: Option<StageTimings>,
+    /// Batches that contributed to `stage_timings`.
+    pub stage_batches: u64,
 }
 
 impl Metrics {
@@ -75,9 +136,16 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
-    /// Count one request completed with a decode error.
-    pub fn on_error(&self) {
-        self.inner.lock().unwrap().errors += 1;
+    /// Count one request completed with a decode error, bumping the
+    /// per-variant breakdown.
+    pub fn on_error(&self, err: &DecodeError) {
+        let mut m = self.inner.lock().unwrap();
+        m.errors += 1;
+        let kind = err.variant_name();
+        match m.error_kinds.iter_mut().find(|(k, _)| k == kind) {
+            Some((_, n)) => *n += 1,
+            None => m.error_kinds.push((kind.to_string(), 1)),
+        }
     }
 
     /// Record one executed batch of `jobs` jobs in a `bucket`-sized
@@ -91,10 +159,44 @@ impl Metrics {
     }
 
     /// Publish an adaptive backend's cumulative per-route dispatch
-    /// counters (replaces the previous publication — the counters are
-    /// cumulative on the backend side).
+    /// counters, **merging by route name**: a partial publication
+    /// updates the routes it names and leaves the rest standing (the
+    /// counters are cumulative on the backend side, so the newest
+    /// value per route wins).
     pub fn on_dispatch(&self, counts: &[(String, u64)]) {
-        self.inner.lock().unwrap().dispatch = counts.to_vec();
+        let mut m = self.inner.lock().unwrap();
+        for (route, n) in counts {
+            match m.dispatch.iter_mut().find(|(r, _)| r == route) {
+                Some((_, cur)) => *cur = *n,
+                None => m.dispatch.push((route.clone(), *n)),
+            }
+        }
+    }
+
+    /// Record one routed batch execution: `elapsed_ns` through `route`
+    /// decoding `frames` frames. Feeds the per-route histogram and the
+    /// decayed latency average.
+    pub fn on_route_decode(&self, route: &str, elapsed_ns: u64, frames: usize) {
+        let mut m = self.inner.lock().unwrap();
+        let stat = match m.routes.iter().position(|s| s.route == route) {
+            Some(i) => &mut m.routes[i],
+            None => {
+                m.routes.push(RouteStat::new(route));
+                m.routes.last_mut().expect("just pushed")
+            }
+        };
+        stat.batches += 1;
+        stat.frames += frames as u64;
+        stat.latency.record(elapsed_ns);
+        stat.ewma_ns.observe(elapsed_ns as f64);
+    }
+
+    /// Fold one batch's per-stage decode timings into the cumulative
+    /// aggregate.
+    pub fn on_stage_timings(&self, st: &StageTimings) {
+        let mut m = self.inner.lock().unwrap();
+        m.stage.merge(st);
+        m.stage_batches += 1;
     }
 
     /// Record one completed response of `bits` bits with the given
@@ -117,6 +219,7 @@ impl Metrics {
             decoded_bits: m.decoded_bits,
             rejected: m.rejected,
             errors: m.errors,
+            error_kinds: m.error_kinds.clone(),
             mean_batch_occupancy: m.batch_occupancy.mean(),
             p50_latency: Duration::from_nanos(m.request_latency.quantile_ns(0.5)),
             p99_latency: Duration::from_nanos(m.request_latency.quantile_ns(0.99)),
@@ -124,6 +227,20 @@ impl Metrics {
                 if m.batch_exec.count() == 0 { 0.0 } else { m.batch_exec.mean() },
             ),
             dispatch: m.dispatch.clone(),
+            routes: m
+                .routes
+                .iter()
+                .map(|s| RouteLatency {
+                    route: s.route.clone(),
+                    batches: s.batches,
+                    frames: s.frames,
+                    p50: Duration::from_nanos(s.latency.quantile_ns(0.5)),
+                    p99: Duration::from_nanos(s.latency.quantile_ns(0.99)),
+                    ewma: Duration::from_nanos(s.ewma_ns.value().unwrap_or(0.0) as u64),
+                })
+                .collect(),
+            stage_timings: (m.stage_batches > 0).then_some(m.stage),
+            stage_batches: m.stage_batches,
         }
     }
 }
@@ -137,6 +254,21 @@ impl MetricsSnapshot {
             .find(|(r, _)| r.as_str() == route)
             .map(|(_, n)| *n)
             .unwrap_or(0)
+    }
+
+    /// Errors counted for the named [`DecodeError`] variant.
+    pub fn errors_of(&self, kind: &str) -> u64 {
+        self.error_kinds
+            .iter()
+            .find(|(k, _)| k.as_str() == kind)
+            .map(|(_, n)| *n)
+            .unwrap_or(0)
+    }
+
+    /// The latency view of the named route, if any batch went through
+    /// it.
+    pub fn route(&self, route: &str) -> Option<&RouteLatency> {
+        self.routes.iter().find(|r| r.route == route)
     }
 
     /// One-line human-readable summary.
@@ -156,6 +288,15 @@ impl MetricsSnapshot {
             self.p99_latency,
             self.mean_batch_exec,
         );
+        if !self.error_kinds.is_empty() {
+            line.push_str(" errkinds=");
+            for (i, (kind, n)) in self.error_kinds.iter().enumerate() {
+                if i > 0 {
+                    line.push(',');
+                }
+                line.push_str(&format!("{kind}:{n}"));
+            }
+        }
         if !self.dispatch.is_empty() {
             line.push_str(" dispatch=");
             for (i, (route, n)) in self.dispatch.iter().enumerate() {
@@ -165,7 +306,79 @@ impl MetricsSnapshot {
                 line.push_str(&format!("{route}:{n}"));
             }
         }
+        if !self.routes.is_empty() {
+            line.push_str(" routes=");
+            for (i, r) in self.routes.iter().enumerate() {
+                if i > 0 {
+                    line.push(',');
+                }
+                line.push_str(&format!("{}:p50={:?}/ewma={:?}", r.route, r.p50, r.ewma));
+            }
+        }
+        if let Some(st) = &self.stage_timings {
+            line.push_str(&format!(
+                " stage=bm:{}ns,acs:{}ns,tb:{}ns,ov:{}ns,fill:{}ns",
+                st.branch_metric_ns, st.acs_ns, st.traceback_ns, st.overlap_ns, st.lane_fill_ns
+            ));
+        }
         line
+    }
+
+    /// The same snapshot as one machine-parseable JSON object (the
+    /// scrape-friendly sibling of [`MetricsSnapshot::render`]).
+    pub fn render_json(&self) -> String {
+        let mut b = ObjBuilder::new()
+            .num("requests", self.requests as f64)
+            .num("responses", self.responses as f64)
+            .num("rejected", self.rejected as f64)
+            .num("errors", self.errors as f64)
+            .num("frames", self.frames as f64)
+            .num("batches", self.batches as f64)
+            .num("decoded_bits", self.decoded_bits as f64)
+            .num("mean_batch_occupancy", self.mean_batch_occupancy)
+            .num("p50_latency_ns", self.p50_latency.as_nanos() as f64)
+            .num("p99_latency_ns", self.p99_latency.as_nanos() as f64)
+            .num("mean_batch_exec_ns", self.mean_batch_exec.as_nanos() as f64);
+        let mut kinds = ObjBuilder::new();
+        for (kind, n) in &self.error_kinds {
+            kinds = kinds.num(kind, *n as f64);
+        }
+        b = b.field("error_kinds", kinds.build());
+        let mut dispatch = ObjBuilder::new();
+        for (route, n) in &self.dispatch {
+            dispatch = dispatch.num(route, *n as f64);
+        }
+        b = b.field("dispatch", dispatch.build());
+        let routes: Vec<Json> = self
+            .routes
+            .iter()
+            .map(|r| {
+                ObjBuilder::new()
+                    .str("route", &r.route)
+                    .num("batches", r.batches as f64)
+                    .num("frames", r.frames as f64)
+                    .num("p50_ns", r.p50.as_nanos() as f64)
+                    .num("p99_ns", r.p99.as_nanos() as f64)
+                    .num("ewma_ns", r.ewma.as_nanos() as f64)
+                    .build()
+            })
+            .collect();
+        b = b.field("routes", Json::Arr(routes));
+        match &self.stage_timings {
+            Some(st) => {
+                let stage = ObjBuilder::new()
+                    .num("branch_metric_ns", st.branch_metric_ns as f64)
+                    .num("acs_ns", st.acs_ns as f64)
+                    .num("traceback_ns", st.traceback_ns as f64)
+                    .num("overlap_ns", st.overlap_ns as f64)
+                    .num("lane_fill_ns", st.lane_fill_ns as f64)
+                    .num("batches", self.stage_batches as f64)
+                    .build();
+                b = b.field("stage_timings", stage);
+            }
+            None => b = b.field("stage_timings", Json::Null),
+        }
+        b.build().render()
     }
 }
 
@@ -210,5 +423,97 @@ mod tests {
         assert_eq!(s.dispatched("unified"), 1);
         assert_eq!(s.dispatched("parallel"), 0);
         assert!(s.render().contains("dispatch=lanes:128,unified:1"));
+    }
+
+    #[test]
+    fn partial_dispatch_publication_keeps_other_routes() {
+        // Regression: publishing a partial route list used to replace
+        // the whole snapshot, silently dropping the other routes.
+        let m = Metrics::new();
+        m.on_dispatch(&[("lanes".to_string(), 64), ("blocks".to_string(), 2)]);
+        m.on_dispatch(&[("lanes".to_string(), 96)]);
+        let s = m.snapshot();
+        assert_eq!(s.dispatched("lanes"), 96, "named route takes the newest value");
+        assert_eq!(s.dispatched("blocks"), 2, "unnamed route must survive");
+    }
+
+    #[test]
+    fn errors_break_down_by_variant() {
+        let m = Metrics::new();
+        m.on_error(&DecodeError::LlrLengthMismatch { expected: 8, got: 7 });
+        m.on_error(&DecodeError::LlrLengthMismatch { expected: 4, got: 2 });
+        m.on_error(&DecodeError::Backend { reason: "boom".into() });
+        let s = m.snapshot();
+        assert_eq!(s.errors, 3);
+        assert_eq!(s.errors_of("llr-length-mismatch"), 2);
+        assert_eq!(s.errors_of("backend"), 1);
+        assert_eq!(s.errors_of("invalid-request"), 0);
+        assert!(s.render().contains("errkinds=llr-length-mismatch:2,backend:1"));
+    }
+
+    #[test]
+    fn route_latency_histograms_and_ewma() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.on_route_decode("lanes", 2_000_000, 64);
+        }
+        m.on_route_decode("unified", 500_000, 1);
+        let s = m.snapshot();
+        let lanes = s.route("lanes").expect("lanes route recorded");
+        assert_eq!(lanes.batches, 10);
+        assert_eq!(lanes.frames, 640);
+        assert!(lanes.p50 >= Duration::from_millis(2));
+        assert!(lanes.ewma >= Duration::from_millis(1));
+        assert!(s.route("unified").is_some());
+        assert!(s.route("blocks").is_none());
+    }
+
+    #[test]
+    fn stage_timings_aggregate_across_batches() {
+        let m = Metrics::new();
+        assert!(m.snapshot().stage_timings.is_none());
+        m.on_stage_timings(&StageTimings { acs_ns: 100, traceback_ns: 40, ..Default::default() });
+        m.on_stage_timings(&StageTimings { acs_ns: 50, lane_fill_ns: 7, ..Default::default() });
+        let s = m.snapshot();
+        let st = s.stage_timings.expect("aggregated");
+        assert_eq!(st.acs_ns, 150);
+        assert_eq!(st.traceback_ns, 40);
+        assert_eq!(st.lane_fill_ns, 7);
+        assert_eq!(s.stage_batches, 2);
+        assert!(s.render().contains("stage=bm:0ns,acs:150ns"));
+    }
+
+    #[test]
+    fn render_json_is_machine_parseable() {
+        let m = Metrics::new();
+        m.on_request();
+        m.on_batch(6, 8, Duration::from_millis(3));
+        m.on_response(1000, 5_000_000);
+        m.on_dispatch(&[("lanes".to_string(), 64)]);
+        m.on_route_decode("lanes", 2_000_000, 64);
+        m.on_error(&DecodeError::Backend { reason: "x".into() });
+        m.on_stage_timings(&StageTimings { acs_ns: 123, ..Default::default() });
+        let j = Json::parse(&m.snapshot().render_json()).expect("valid JSON");
+        assert_eq!(j.get("requests").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("errors").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(
+            j.get("error_kinds").and_then(|e| e.get("backend")).and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(
+            j.get("dispatch").and_then(|d| d.get("lanes")).and_then(Json::as_f64),
+            Some(64.0)
+        );
+        let routes = j.get("routes").and_then(Json::as_arr).expect("routes array");
+        assert_eq!(routes.len(), 1);
+        assert_eq!(routes[0].get("route").and_then(Json::as_str), Some("lanes"));
+        assert!(routes[0].get("ewma_ns").and_then(Json::as_f64).unwrap() > 0.0);
+        assert_eq!(
+            j.get("stage_timings").and_then(|s| s.get("acs_ns")).and_then(Json::as_f64),
+            Some(123.0)
+        );
+        // An empty registry still renders valid JSON with a null stage.
+        let empty = Json::parse(&Metrics::new().snapshot().render_json()).unwrap();
+        assert!(matches!(empty.get("stage_timings"), Some(Json::Null)));
     }
 }

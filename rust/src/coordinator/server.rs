@@ -131,6 +131,11 @@ impl DecodeServer {
                         };
                         let n = batch.jobs.len();
                         let t0 = Instant::now();
+                        // Stage-timing bracket: engines accumulate into
+                        // the executor thread's accumulator (pool-fanned
+                        // work lands in worker thread-locals and is not
+                        // visible here — see `crate::obs::stage`).
+                        crate::obs::reset_stage_acc();
                         let results = match backend.decode_batch(&batch.jobs) {
                             Ok(r) => r,
                             Err(err) => {
@@ -151,7 +156,7 @@ impl DecodeServer {
                                 let mut done = completion.done.lock().unwrap();
                                 for (id, in_batch) in counts {
                                     if r.fail(id, in_batch) {
-                                        metrics.on_error();
+                                        metrics.on_error(&e);
                                         done.insert(id, Err(e.clone()));
                                     }
                                 }
@@ -161,9 +166,15 @@ impl DecodeServer {
                             }
                         };
                         metrics.on_batch(n, bucket, t0.elapsed());
+                        if let Some(st) = crate::obs::take_stage_acc() {
+                            metrics.on_stage_timings(&st);
+                        }
                         let routes = backend.dispatch_counts();
                         if !routes.is_empty() {
                             metrics.on_dispatch(&routes);
+                        }
+                        for obs in backend.take_route_observations() {
+                            metrics.on_route_decode(&obs.route, obs.elapsed_ns, obs.frames);
                         }
                         gate.release(n);
                         let mut done_now = Vec::new();
@@ -295,7 +306,7 @@ impl DecodeServer {
 
     /// Complete `id` immediately with a validation error.
     fn complete_err(&self, id: RequestId, err: DecodeError) {
-        self.metrics.on_error();
+        self.metrics.on_error(&err);
         self.completion.done.lock().unwrap().insert(id, Err(err));
         self.completion.ready.notify_all();
     }
@@ -643,6 +654,46 @@ mod tests {
         let (bits, llrs) = noiseless_request(94, 40);
         assert_eq!(server.decode_blocking(llrs, StreamEnd::Truncated).unwrap().bits, bits);
         assert_eq!(server.metrics().errors, 1);
+    }
+
+    #[test]
+    fn stage_timings_flow_into_metrics_when_enabled() {
+        // Monotonic enable: other tests may run with timings on; none
+        // ever turns them off.
+        crate::obs::set_stage_timings_enabled(true);
+        let server = native_server(1);
+        let (bits, llrs) = noiseless_request(98, 100);
+        assert_eq!(server.decode_blocking(llrs, StreamEnd::Truncated).unwrap().bits, bits);
+        let m = server.metrics();
+        let st = m.stage_timings.expect("executor bracket captured stage timings");
+        assert!(st.total_ns() > 0, "{st:?}");
+        assert!(m.stage_batches >= 1);
+        assert!(m.render().contains("stage="));
+    }
+
+    #[test]
+    fn route_latency_flows_into_metrics_for_auto_backend() {
+        let server = DecodeServer::start(ServerConfig {
+            backend: BackendSpec::Auto {
+                spec: CodeSpec::standard_k5(),
+                geo: FrameGeometry::new(32, 8, 12),
+                f0: 8,
+                threads: 1,
+                budget_bytes: None,
+                profile: None,
+            },
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            high_watermark: 256,
+            low_watermark: 64,
+        })
+        .unwrap();
+        let (bits, llrs) = noiseless_request(99, 100);
+        assert_eq!(server.decode_blocking(llrs, StreamEnd::Truncated).unwrap().bits, bits);
+        let m = server.metrics();
+        assert!(!m.routes.is_empty(), "the adaptive backend reports route timings");
+        let routed: u64 = m.routes.iter().map(|r| r.frames).sum();
+        assert_eq!(routed, m.frames, "{:?}", m.routes);
+        assert!(m.render_json().contains("\"routes\""));
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! *builds* its backend after it starts.
 
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -222,6 +223,7 @@ impl BackendSpec {
                     planner,
                     blocks: BlocksEngine::new(spec.clone(), f0),
                     counts: Vec::new(),
+                    observations: Vec::new(),
                     max_batch: MAX_LANES,
                 }))
             }
@@ -245,6 +247,25 @@ pub trait BatchDecoder {
     fn dispatch_counts(&self) -> Vec<(String, u64)> {
         Vec::new()
     }
+    /// Drain the per-route execution timings recorded since the last
+    /// call (empty for single-route backends). The server feeds these
+    /// into `Metrics::on_route_decode` after every batch.
+    fn take_route_observations(&mut self) -> Vec<RouteObservation> {
+        Vec::new()
+    }
+}
+
+/// One routed batch execution, reported by adaptive backends so the
+/// service metrics can track per-route latency and the planner can
+/// fold measured throughput drift into its ranking.
+#[derive(Debug, Clone)]
+pub struct RouteObservation {
+    /// Dispatch route name (`"lanes"`, `"blocks"`, …).
+    pub route: String,
+    /// Wall-clock execution time in nanoseconds.
+    pub elapsed_ns: u64,
+    /// Frames decoded in this execution.
+    pub frames: usize,
 }
 
 /// PJRT-artifact backend.
@@ -672,6 +693,8 @@ pub struct AutoBatchDecoder {
     /// planner sees the batch.
     blocks: BlocksEngine,
     counts: Vec<(String, u64)>,
+    /// Routed batch timings since the last `take_route_observations`.
+    observations: Vec<RouteObservation>,
     max_batch: usize,
 }
 
@@ -686,6 +709,22 @@ impl AutoBatchDecoder {
             entry.1 += frames as u64;
         } else {
             self.counts.push((route.to_string(), frames as u64));
+        }
+    }
+
+    /// Record one routed execution: queue it for the server's metrics
+    /// drain and feed the measured payload throughput back into the
+    /// planner's per-route EWMA (the drift signal that re-ranks future
+    /// plans).
+    fn observe_route(&mut self, route: &str, elapsed: Duration, frames: usize, payload_bits: usize) {
+        self.observations.push(RouteObservation {
+            route: route.to_string(),
+            elapsed_ns: elapsed.as_nanos() as u64,
+            frames,
+        });
+        let secs = elapsed.as_secs_f64();
+        if secs > 0.0 && payload_bits > 0 {
+            self.planner.observe(route, payload_bits as f64 / secs / 1e6);
         }
     }
 
@@ -805,11 +844,15 @@ impl BatchDecoder for AutoBatchDecoder {
             // so ordering across the two kinds is free.
             let mut out = Vec::with_capacity(jobs.len());
             let mut streams = 0usize;
+            let mut payload_stages = 0usize;
+            let t0 = Instant::now();
             for job in jobs.iter().filter(|j| j.block_stream) {
+                payload_stages += job.llr_block.len() / beta;
                 out.push(decode_block_stream_job(&self.blocks, job)?);
                 streams += 1;
             }
             self.bump("blocks", streams);
+            self.observe_route("blocks", t0.elapsed(), streams, payload_stages);
             let rest: Vec<FrameJob> =
                 jobs.iter().filter(|j| !j.block_stream).cloned().collect();
             out.extend(self.decode_batch(&rest)?);
@@ -842,7 +885,8 @@ impl BatchDecoder for AutoBatchDecoder {
             "unified"
         };
         self.bump(route, jobs.len());
-        match route {
+        let t0 = Instant::now();
+        let out = match route {
             "lanes" => {
                 let mut out = Vec::with_capacity(jobs.len());
                 let (ptb, lane_scratch) =
@@ -850,18 +894,20 @@ impl BatchDecoder for AutoBatchDecoder {
                 for chunk in jobs.chunks(MAX_LANES) {
                     decode_lane_chunk(&self.engine, ptb, lane_scratch, chunk, &mut out);
                 }
-                Ok(out)
+                out
             }
-            "lanes-mt" => Ok(self.decode_lanes_pool(jobs)),
-            "parallel" => Ok(self.decode_pool(jobs)),
+            "lanes-mt" => self.decode_lanes_pool(jobs),
+            "parallel" => self.decode_pool(jobs),
             _ => {
                 let mut out = Vec::with_capacity(jobs.len());
                 for job in jobs {
                     out.push(decode_uniform_job(&self.engine, &mut self.scratch, job));
                 }
-                Ok(out)
+                out
             }
-        }
+        };
+        self.observe_route(route, t0.elapsed(), jobs.len(), jobs.len() * geo.f);
+        Ok(out)
     }
 
     fn geometry(&self) -> (CodeSpec, FrameGeometry) {
@@ -882,6 +928,10 @@ impl BatchDecoder for AutoBatchDecoder {
 
     fn dispatch_counts(&self) -> Vec<(String, u64)> {
         self.counts.clone()
+    }
+
+    fn take_route_observations(&mut self) -> Vec<RouteObservation> {
+        std::mem::take(&mut self.observations)
     }
 }
 

@@ -134,16 +134,19 @@ pub fn decode_lane_group(
         scratch;
 
     // Transpose LLRs to lane-major: slab[(t·β + b)·L + l].
+    let obs_t0 = crate::obs::maybe_now();
     for (l, job) in jobs.iter().enumerate() {
         for (i, &v) in job.llrs.iter().enumerate() {
             llr_slab[i * lanes + l] = v;
         }
     }
+    crate::obs::record_lane_fill(obs_t0);
 
     let start_states: Vec<Option<u32>> = jobs.iter().map(|j| j.start_state).collect();
     pm.init(&start_states);
 
     // Forward pass: lane-parallel ACS + per-lane boundary argmaxes.
+    let obs_t0 = crate::obs::maybe_now();
     let half = ns / 2;
     let mut bi = 0usize;
     for t in 0..stages {
@@ -199,8 +202,10 @@ pub fn decode_lane_group(
             argmax_lanes(cur, ns, lanes, best, final_best);
         }
     }
+    crate::obs::record_acs(obs_t0);
 
     // Parallel subframe traceback, per lane.
+    let obs_t0 = crate::obs::maybe_now();
     for (l, job) in jobs.iter_mut().enumerate() {
         let mut rng = match ptb.policy {
             StartPolicy::Random { seed } => Some(Rng64::seeded(
@@ -243,6 +248,7 @@ pub fn decode_lane_group(
             );
         }
     }
+    crate::obs::record_traceback(obs_t0);
 }
 
 /// Build the per-lane jobs of one group, carving disjoint output
@@ -381,15 +387,23 @@ impl Engine for LanesEngine {
             });
         }
         let (llrs, stages, end) = (req.llrs, req.stages, req.end);
+        crate::obs::reset_stage_acc();
         let beta = self.spec.beta as usize;
         let spans = plan_frames(stages, self.geo);
-        let stats = DecodeStats { final_metric: None, frames: spans.len(), iterations: None };
+        let mut stats = DecodeStats {
+            final_metric: None,
+            frames: spans.len(),
+            iterations: None,
+            stage_timings: None,
+        };
         let mut out = vec![0u8; stages];
         if spans.is_empty() {
+            stats.stage_timings = crate::obs::take_stage_acc();
             return Ok(DecodeOutput::hard(out, stats));
         }
         if !lane_fast_path(&self.trellis) {
             self.decode_stream_fallback(llrs, stages, end, &spans, &mut out);
+            stats.stage_timings = crate::obs::take_stage_acc();
             return Ok(DecodeOutput::hard(out, stats));
         }
         let groups = plan_lane_groups(&spans, self.lanes);
@@ -411,6 +425,7 @@ impl Engine for LanesEngine {
                 &mut scratch,
             );
         }
+        stats.stage_timings = crate::obs::take_stage_acc();
         Ok(DecodeOutput::hard(out, stats))
     }
 }
@@ -461,7 +476,15 @@ impl Engine for LanesMtEngine {
             return self.inner.decode(req);
         }
         let spans = plan_frames(stages, self.inner.geo);
-        let stats = DecodeStats { final_metric: None, frames: spans.len(), iterations: None };
+        // Pool-fanned: workers accumulate into their own thread-locals,
+        // which the coordinator's per-batch aggregation picks up; no
+        // per-decode timings here.
+        let stats = DecodeStats {
+            final_metric: None,
+            frames: spans.len(),
+            iterations: None,
+            stage_timings: None,
+        };
         let mut out = vec![0u8; stages];
         if spans.is_empty() {
             return Ok(DecodeOutput::hard(out, stats));

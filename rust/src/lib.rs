@@ -44,6 +44,7 @@ pub mod exp;
 pub mod frames;
 pub mod lanes;
 pub mod memmodel;
+pub mod obs;
 pub mod runtime;
 pub mod tuner;
 pub mod util;

@@ -8,6 +8,7 @@
 //! viterbi-repro ber [--ebn0 DB] [--bits N] [--engine E]
 //! viterbi-repro demo [--bits N] [--ebn0 DB]  encode→channel→decode roundtrip
 //! viterbi-repro serve [--requests N] [--backend pjrt|native|auto] [--artifact NAME]
+//! viterbi-repro trace [--stages N] [--engine E] [--out FILE]  traced decode -> Chrome JSONL
 //! viterbi-repro info                         platform + artifact inventory
 //! ```
 
@@ -25,6 +26,7 @@ use viterbi::code::{encode, CodeSpec, Termination};
 use viterbi::coordinator::{BackendSpec, BatchPolicy, DecodeServer, ServerConfig};
 use viterbi::exp::{run_by_id, Effort, ExpOptions};
 use viterbi::frames::plan::FrameGeometry;
+use viterbi::obs::{self, ObsConfig};
 use viterbi::tuner::{self, CalibrationGrid};
 use viterbi::util::bits::count_bit_errors;
 use viterbi::util::threadpool::ThreadPool;
@@ -54,6 +56,7 @@ fn run() -> Result<()> {
         Some("ber") => cmd_ber(&args),
         Some("demo") => cmd_demo(&args),
         Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
         Some("info") => cmd_info(),
         Some(other) => bail!("unknown command {other:?}; try `viterbi-repro help`"),
     }
@@ -67,7 +70,7 @@ USAGE:
   viterbi-repro exp <id|all> [--full] [--out DIR] [--threads N] [--seed S]
   viterbi-repro bench [--engines E,..|all] [--frames N] [--frame-lens F,..]
                       [--samples S] [--threads N] [--lanes L] [--seed S]
-                      [--k K] [--tail-biting] [--out FILE] [--list]
+                      [--k K] [--tail-biting] [--stage-timings] [--out FILE] [--list]
   viterbi-repro tune [--smoke] [--ks K,..] [--frame-lens F,..] [--batches B,..]
                      [--engines E,..] [--samples S] [--warmup W] [--threads N]
                      [--lanes L] [--seed S] [--out FILE]
@@ -75,7 +78,8 @@ USAGE:
                     [--tail-biting [--block BITS]] [--blocks [--bits N]]
   viterbi-repro demo [--bits N] [--ebn0 DB]
   viterbi-repro serve [--requests N] [--backend pjrt|native|auto]
-                      [--artifact NAME] [--profile FILE]
+                      [--artifact NAME] [--profile FILE] [--metrics-every N]
+  viterbi-repro trace [--stages N] [--engine E] [--seed S] [--out FILE]
   viterbi-repro info
 
 The bench subcommand runs any subset of the engine registry over a
@@ -87,6 +91,13 @@ batch width) grid and writes a calibration profile (default
 calibration/profile.jsonl) that the `auto` engine and the serve
 backend `auto` load to route every job to the fastest backend; the
 checked-in calibration/baseline.jsonl is the committed default.
+
+The trace subcommand runs one traced decode with the observability
+layer fully on, validates the span stream (balanced begin/end,
+stage timings consistent with the wall clock), and writes Chrome
+trace-event JSONL to FILE (default trace.json) for chrome://tracing
+or Perfetto. serve --metrics-every N prints a MetricsSnapshot JSON
+line after every N completed responses.
 ";
 
 fn cmd_list() -> Result<()> {
@@ -114,7 +125,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
 fn cmd_bench(args: &Args) -> Result<()> {
     args.check_known(&[
         "engines", "frames", "frame-lens", "samples", "warmup", "threads", "seed", "out",
-        "list", "v1", "v2", "f0", "delay", "lanes", "k", "tail-biting",
+        "list", "v1", "v2", "f0", "delay", "lanes", "k", "tail-biting", "stage-timings",
     ])?;
     if args.has("list") {
         println!("registered engines (viterbi::registry):");
@@ -164,6 +175,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         lanes: args.get_usize("lanes", defaults.lanes)?.clamp(1, 64),
         k: k as u32,
         tail_biting,
+        stage_timings: args.has("stage-timings"),
     };
     let out_path = std::path::PathBuf::from(args.get("out").unwrap_or("BENCH_run.json"));
 
@@ -178,12 +190,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
         opts.warmup,
         opts.threads
     );
-    println!(
+    let stage_cols = opts.stage_timings;
+    let mut header = format!(
         "{:>10} {:>8} {:>12} {:>12} {:>12} {:>12} {:>14}",
         "engine", "f", "bits", "median Mb/s", "mean Mb/s", "stddev", "tb mem (B)"
     );
+    if stage_cols {
+        header.push_str(&format!(" {:>12} {:>12}", "acs (ns)", "tb (ns)"));
+    }
+    println!("{header}");
     let records = bench::run_matrix(&scenarios, &opts, |m| {
-        println!(
+        let mut row = format!(
             "{:>10} {:>8} {:>12} {:>12.2} {:>12.2} {:>12.2} {:>14}",
             m.engine,
             m.frame_len,
@@ -193,6 +210,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
             m.stddev_mbps,
             m.peak_traceback_bytes
         );
+        if stage_cols {
+            row.push_str(&format!(" {:>12} {:>12}", m.stage_acs_ns, m.stage_traceback_ns));
+        }
+        println!("{row}");
     });
     bench::write_jsonl(&out_path, &records)
         .with_context(|| format!("writing {}", out_path.display()))?;
@@ -237,6 +258,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
         lanes: args.get_usize("lanes", defaults.lanes)?.clamp(1, 64),
         k: defaults.k,
         tail_biting: false,
+        stage_timings: false,
     };
     let out_path =
         std::path::PathBuf::from(args.get("out").unwrap_or("calibration/profile.jsonl"));
@@ -488,9 +510,12 @@ fn cmd_demo(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.check_known(&[
         "requests", "backend", "artifact", "bits", "batch-wait-us", "threads", "seed",
-        "profile",
+        "profile", "metrics-every",
     ])?;
     let requests = args.get_usize("requests", 64)?;
+    // 0 = only the final summary line; N > 0 prints a MetricsSnapshot
+    // JSON line after every N completed responses.
+    let metrics_every = args.get_usize("metrics-every", 0)?;
     let n_bits = args.get_usize("bits", 4096)?;
     let backend = match args.get("backend").unwrap_or("native") {
         "pjrt" => BackendSpec::Pjrt {
@@ -543,9 +568,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .map(|(_, llrs)| server.submit(llrs.clone(), StreamEnd::Truncated))
         .collect();
     let mut total_errors = 0usize;
-    for (id, (msg, _)) in ids.into_iter().zip(&payloads) {
+    for (i, (id, (msg, _))) in ids.into_iter().zip(&payloads).enumerate() {
         let resp = server.wait(id).map_err(|e| anyhow!("request {id}: {e}"))?;
         total_errors += count_bit_errors(&resp.bits[..msg.len()], msg);
+        if metrics_every > 0 && (i + 1) % metrics_every == 0 {
+            println!("metrics {}", server.metrics().render_json());
+        }
     }
     let dt = t0.elapsed();
     let total_bits = requests * n_bits;
@@ -558,6 +586,129 @@ fn cmd_serve(args: &Args) -> Result<()> {
         total_errors as f64 / total_bits as f64,
     );
     println!("metrics: {}", server.metrics().render());
+    Ok(())
+}
+
+/// `trace`: run one decode with the full observability layer on,
+/// self-validate the span stream, and export it as Chrome trace-event
+/// JSONL (load in `chrome://tracing` / Perfetto).
+fn cmd_trace(args: &Args) -> Result<()> {
+    args.check_known(&["stages", "engine", "seed", "out", "f0", "lanes", "threads"])?;
+    let stages = args.get_usize("stages", 1 << 16)?;
+    if stages == 0 {
+        bail!("--stages must be positive");
+    }
+    let engine_name = args.get("engine").unwrap_or("blocks").to_string();
+    let out_path = std::path::PathBuf::from(args.get("out").unwrap_or("trace.json"));
+    let entry = viterbi::viterbi::registry::find(&engine_name).ok_or_else(|| {
+        anyhow!("engine {engine_name:?} not in registry (see `bench --list`)")
+    })?;
+    let params = viterbi::viterbi::registry::BuildParams {
+        spec: CodeSpec::standard_k7(),
+        geo: FrameGeometry::new(256, 20, 45),
+        f0: args.get_usize("f0", 32)?.max(1),
+        threads: args.get_usize("threads", 8)?.max(1),
+        delay: 96,
+        lanes: args.get_usize("lanes", 64)?.clamp(1, 64),
+        stream_stages: stages,
+    };
+    let engine = (entry.build)(&params);
+
+    // Everything on, and start from an empty ring buffer so the export
+    // holds exactly this decode.
+    ObsConfig::enabled().apply();
+    let _ = obs::drain_trace();
+
+    let beta = params.spec.beta as usize;
+    let mut rng = Rng64::seeded(args.get_u64("seed", 0xBE12)?);
+    let llrs: Vec<f32> =
+        (0..stages * beta).map(|_| (rng.uniform() as f32 - 0.5) * 8.0).collect();
+    let req = DecodeRequest::hard(&llrs, stages, StreamEnd::Truncated);
+
+    let t0 = std::time::Instant::now();
+    obs::begin_with("decode", &[("stages", stages as f64)]);
+    let out = engine.decode(&req).map_err(|e| anyhow!("{e}"))?;
+    obs::end("decode");
+    let wall = t0.elapsed();
+
+    let stage = out.stats.stage_timings.unwrap_or_default();
+    obs::counter("acs_ns", stage.acs_ns as f64);
+    obs::counter("traceback_ns", stage.traceback_ns as f64);
+    let events = obs::drain_trace();
+    validate_trace(&events, stage, wall, &engine_name)?;
+    obs::write_chrome_jsonl(&out_path, &events)
+        .with_context(|| format!("writing {}", out_path.display()))?;
+    println!(
+        "traced {} decode of {stages} stages in {:.2?} ({:.1} Mb/s): {} events \
+         (acs {} ns, traceback {} ns) -> {}",
+        engine.name(),
+        wall,
+        stages as f64 / wall.as_secs_f64() / 1e6,
+        events.len(),
+        stage.acs_ns,
+        stage.traceback_ns,
+        out_path.display()
+    );
+    Ok(())
+}
+
+/// Validate one traced decode: every span begin has a matching end
+/// (per thread, properly nested), the block-parallel engine produced
+/// its per-group `lane_group` spans, and the stage clocks are
+/// consistent with the wall clock (each stage is timed at most once
+/// per pass, so ACS + traceback can never exceed 2x wall).
+fn validate_trace(
+    events: &[obs::TraceEvent],
+    stage: obs::StageTimings,
+    wall: std::time::Duration,
+    engine_name: &str,
+) -> Result<()> {
+    let mut open: std::collections::HashMap<u64, Vec<&'static str>> =
+        std::collections::HashMap::new();
+    let mut lane_groups = 0usize;
+    for ev in events {
+        match ev.phase {
+            obs::TracePhase::Begin => {
+                if ev.name == "lane_group" {
+                    lane_groups += 1;
+                }
+                open.entry(ev.tid).or_default().push(ev.name);
+            }
+            obs::TracePhase::End => match open.entry(ev.tid).or_default().pop() {
+                Some(begun) if begun == ev.name => {}
+                other => bail!(
+                    "unbalanced trace: end of {:?} on tid {} after begin of {other:?}",
+                    ev.name,
+                    ev.tid
+                ),
+            },
+            obs::TracePhase::Counter => {}
+        }
+    }
+    for (tid, stack) in &open {
+        if !stack.is_empty() {
+            bail!("unbalanced trace: spans {stack:?} never ended on tid {tid}");
+        }
+    }
+    if engine_name == "blocks" && lane_groups == 0 {
+        bail!("blocks decode produced no lane_group spans");
+    }
+    if stage.acs_ns == 0 || stage.traceback_ns == 0 {
+        bail!(
+            "stage timings missing: acs={} ns traceback={} ns (engine {engine_name:?} \
+             may not report per-stage timings)",
+            stage.acs_ns,
+            stage.traceback_ns
+        );
+    }
+    let wall_ns = wall.as_nanos() as u64;
+    if stage.acs_ns + stage.traceback_ns > wall_ns.saturating_mul(2) {
+        bail!(
+            "stage clocks inconsistent: acs {} ns + traceback {} ns > 2 x wall {wall_ns} ns",
+            stage.acs_ns,
+            stage.traceback_ns
+        );
+    }
     Ok(())
 }
 

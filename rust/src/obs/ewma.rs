@@ -1,0 +1,101 @@
+//! Exponentially-decayed moving average for per-route feedback.
+//!
+//! The coordinator observes per-route decode throughput and latency as
+//! batches complete; [`DecayedEwma`] folds those samples into a single
+//! drift-tracking estimate the planner can blend into its calibrated
+//! profile ranking. A decayed average (rather than a plain mean) is
+//! the right shape because route performance drifts with load and
+//! machine state — old samples should age out.
+
+/// Exponentially-decayed moving average: `v' = v + alpha * (x - v)`.
+///
+/// The first observation seeds the average exactly; after `n`
+/// observations the weight of the oldest sample is `(1 - alpha)^(n-1)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecayedEwma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl DecayedEwma {
+    /// A new average with decay factor `alpha` in `(0, 1]`; larger
+    /// alpha weighs recent samples more heavily.
+    ///
+    /// # Panics
+    /// If `alpha` is outside `(0, 1]` or not finite.
+    pub fn new(alpha: f64) -> DecayedEwma {
+        assert!(
+            alpha.is_finite() && alpha > 0.0 && alpha <= 1.0,
+            "EWMA alpha must be in (0, 1], got {alpha}"
+        );
+        DecayedEwma { alpha, value: None }
+    }
+
+    /// Fold one sample into the average.
+    pub fn observe(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        });
+    }
+
+    /// The current average, `None` until the first observation.
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+
+    /// The decay factor this average was built with.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+}
+
+impl Default for DecayedEwma {
+    /// Alpha 0.2: a new sample moves the estimate a fifth of the way,
+    /// so ~10 samples retire an old regime.
+    fn default() -> DecayedEwma {
+        DecayedEwma::new(0.2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_observation_seeds_exactly() {
+        let mut e = DecayedEwma::new(0.1);
+        assert_eq!(e.value(), None);
+        e.observe(250.0);
+        assert_eq!(e.value(), Some(250.0));
+    }
+
+    #[test]
+    fn converges_toward_a_shifted_level() {
+        let mut e = DecayedEwma::new(0.2);
+        e.observe(100.0);
+        for _ in 0..50 {
+            e.observe(10.0);
+        }
+        let v = e.value().unwrap();
+        assert!((v - 10.0).abs() < 1.0, "after 50 samples at 10, got {v}");
+        // And monotone: one more low sample cannot raise it.
+        let before = v;
+        e.observe(10.0);
+        assert!(e.value().unwrap() <= before);
+    }
+
+    #[test]
+    fn alpha_one_tracks_the_last_sample() {
+        let mut e = DecayedEwma::new(1.0);
+        e.observe(5.0);
+        e.observe(7.0);
+        assert_eq!(e.value(), Some(7.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha")]
+    fn zero_alpha_is_rejected() {
+        let _ = DecayedEwma::new(0.0);
+    }
+}

@@ -1,0 +1,81 @@
+//! Observability: span/event tracing, per-stage decode profiling, and
+//! the decayed-EWMA feedback primitive the planner's drift blending is
+//! built on.
+//!
+//! Three layers, all dependency-free:
+//!
+//! * [`trace`] — a ring-buffered span/event tracer with a Chrome
+//!   trace-event JSONL exporter on the `util/json` writer. Engines and
+//!   the CLI emit begin/end spans and counter events; `viterbi-repro
+//!   trace` drains the buffer into a `trace.json` loadable by
+//!   `chrome://tracing` / Perfetto.
+//! * [`stage`] — per-stage decode timings ([`StageTimings`]:
+//!   branch-metric, ACS, traceback, warmup/truncation redecode,
+//!   lane-group fill) accumulated in a thread-local by the decode hot
+//!   paths and surfaced through `DecodeStats::stage_timings`.
+//! * [`ewma`] — [`DecayedEwma`], the decayed moving average behind the
+//!   per-route throughput feedback (`tuner::Planner::observe`) and the
+//!   coordinator metrics.
+//!
+//! Both tracing and stage timing are **off by default** and gated by
+//! process-wide atomic flags: the uninstrumented hot path pays one
+//! relaxed atomic load per instrumentation point. Building with the
+//! `obs-off` cargo feature compiles the gates to constant `false`, so
+//! every instrumentation branch folds away entirely.
+
+pub mod ewma;
+pub mod stage;
+pub mod trace;
+
+pub use ewma::DecayedEwma;
+pub use stage::{
+    maybe_now, record_acs, record_branch_metric, record_lane_fill, record_overlap,
+    record_traceback, reset_stage_acc, set_stage_timings_enabled, stage_timings_enabled,
+    take_stage_acc, StageTimings,
+};
+pub use trace::{
+    begin, begin_with, counter, drain_trace, end, export_chrome_jsonl, set_trace_enabled,
+    span, span_with, trace_enabled, write_chrome_jsonl, SpanGuard, TraceEvent, TracePhase,
+};
+
+/// Process-wide observability configuration: which instrumentation
+/// layers are live. Apply with [`ObsConfig::apply`]; under the
+/// `obs-off` feature, `apply` is a no-op and both layers stay compiled
+/// out.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Populate `DecodeStats::stage_timings` in the instrumented
+    /// engines (scalar / unified / lanes / blocks / wava).
+    pub stage_timings: bool,
+    /// Record begin/end spans and counter events into the trace ring
+    /// buffer.
+    pub trace: bool,
+}
+
+impl ObsConfig {
+    /// Everything on — what the `trace` CLI and `bench
+    /// --stage-timings` use.
+    pub fn enabled() -> ObsConfig {
+        ObsConfig { stage_timings: true, trace: true }
+    }
+
+    /// Install this configuration process-wide.
+    pub fn apply(self) {
+        set_stage_timings_enabled(self.stage_timings);
+        set_trace_enabled(self.trace);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_round_trips_through_the_flags() {
+        // Monotonic enable only: tests never turn the global flags off
+        // (other tests in the same binary may rely on them).
+        ObsConfig::enabled().apply();
+        assert!(stage_timings_enabled());
+        assert!(trace_enabled());
+    }
+}

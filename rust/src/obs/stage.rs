@@ -1,0 +1,227 @@
+//! Per-stage decode profiling: a thread-local [`StageTimings`]
+//! accumulator the decode hot paths add elapsed nanoseconds into.
+//!
+//! The hot paths (`forward_frame`, `traceback_segment`, the lane-group
+//! core, the WAVA iteration loop) call [`maybe_now`] at a phase
+//! boundary and one of the `record_*` functions at its end. When stage
+//! timing is disabled — the default — `maybe_now` returns `None` and
+//! every `record_*` call is a no-op, so the uninstrumented cost is a
+//! single relaxed atomic load. Engines bracket a decode with
+//! [`reset_stage_acc`] / [`take_stage_acc`] and publish the result in
+//! `DecodeStats::stage_timings`.
+//!
+//! The accumulator is thread-local on purpose: the instrumented
+//! engines (scalar, unified, lanes, blocks, wava) decode on the
+//! calling thread, so no signature has to thread a timings struct
+//! through the shared frame kernels. Pool-fanned engines
+//! (`parallel`, `lanes-mt`) accumulate into their workers' own
+//! thread-locals, which nobody takes — their aggregate view is the
+//! coordinator's per-batch aggregation instead.
+
+use std::cell::Cell;
+use std::time::Instant;
+
+#[cfg(not(feature = "obs-off"))]
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Decode wall time split by pipeline stage, in nanoseconds.
+///
+/// The unified kernels fuse branch-metric computation into the ACS
+/// recursion, so `branch_metric_ns` is only nonzero on paths that
+/// compute branch metrics separately; fused work lands in `acs_ns`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageTimings {
+    /// Standalone branch-metric computation (zero on fused paths).
+    pub branch_metric_ns: u64,
+    /// Add-compare-select forward recursion (includes fused branch
+    /// metrics).
+    pub acs_ns: u64,
+    /// Survivor traceback (serial or per-subframe parallel).
+    pub traceback_ns: u64,
+    /// Warmup / truncation redecode overhead: work whose output is
+    /// discarded (block overlap regions, WAVA wrap iterations past the
+    /// first).
+    pub overlap_ns: u64,
+    /// Lane-group fill: transposing per-frame LLRs into the lane-major
+    /// slabs before lockstep ACS.
+    pub lane_fill_ns: u64,
+}
+
+impl StageTimings {
+    /// Sum of every stage, saturating.
+    pub fn total_ns(&self) -> u64 {
+        self.branch_metric_ns
+            .saturating_add(self.acs_ns)
+            .saturating_add(self.traceback_ns)
+            .saturating_add(self.overlap_ns)
+            .saturating_add(self.lane_fill_ns)
+    }
+
+    /// Accumulate `other` into `self`, field-wise saturating.
+    pub fn merge(&mut self, other: &StageTimings) {
+        self.branch_metric_ns = self.branch_metric_ns.saturating_add(other.branch_metric_ns);
+        self.acs_ns = self.acs_ns.saturating_add(other.acs_ns);
+        self.traceback_ns = self.traceback_ns.saturating_add(other.traceback_ns);
+        self.overlap_ns = self.overlap_ns.saturating_add(other.overlap_ns);
+        self.lane_fill_ns = self.lane_fill_ns.saturating_add(other.lane_fill_ns);
+    }
+}
+
+#[cfg(not(feature = "obs-off"))]
+static STAGE_TIMINGS_ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Whether stage timing is live. Constant `false` under `obs-off`, so
+/// the instrumentation branches compile away.
+#[cfg(not(feature = "obs-off"))]
+#[inline]
+pub fn stage_timings_enabled() -> bool {
+    STAGE_TIMINGS_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Whether stage timing is live. Constant `false` under `obs-off`, so
+/// the instrumentation branches compile away.
+#[cfg(feature = "obs-off")]
+#[inline(always)]
+pub fn stage_timings_enabled() -> bool {
+    false
+}
+
+/// Turn stage timing on or off process-wide (no-op under `obs-off`).
+pub fn set_stage_timings_enabled(on: bool) {
+    #[cfg(not(feature = "obs-off"))]
+    STAGE_TIMINGS_ENABLED.store(on, Ordering::Relaxed);
+    #[cfg(feature = "obs-off")]
+    let _ = on;
+}
+
+thread_local! {
+    static STAGE_ACC: Cell<StageTimings> = const {
+        Cell::new(StageTimings {
+            branch_metric_ns: 0,
+            acs_ns: 0,
+            traceback_ns: 0,
+            overlap_ns: 0,
+            lane_fill_ns: 0,
+        })
+    };
+}
+
+/// Phase-start timestamp: `Some(now)` only when stage timing is
+/// enabled, so disabled runs never touch the clock.
+#[inline]
+pub fn maybe_now() -> Option<Instant> {
+    if stage_timings_enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+#[inline]
+fn add(t0: Option<Instant>, apply: impl FnOnce(&mut StageTimings, u64)) {
+    if let Some(t0) = t0 {
+        let ns = t0.elapsed().as_nanos() as u64;
+        STAGE_ACC.with(|acc| {
+            let mut cur = acc.get();
+            apply(&mut cur, ns);
+            acc.set(cur);
+        });
+    }
+}
+
+/// Credit the time since `t0` to the branch-metric stage.
+#[inline]
+pub fn record_branch_metric(t0: Option<Instant>) {
+    add(t0, |s, ns| s.branch_metric_ns = s.branch_metric_ns.saturating_add(ns));
+}
+
+/// Credit the time since `t0` to the ACS forward recursion.
+#[inline]
+pub fn record_acs(t0: Option<Instant>) {
+    add(t0, |s, ns| s.acs_ns = s.acs_ns.saturating_add(ns));
+}
+
+/// Credit the time since `t0` to survivor traceback.
+#[inline]
+pub fn record_traceback(t0: Option<Instant>) {
+    add(t0, |s, ns| s.traceback_ns = s.traceback_ns.saturating_add(ns));
+}
+
+/// Credit the time since `t0` to warmup / truncation redecode.
+#[inline]
+pub fn record_overlap(t0: Option<Instant>) {
+    add(t0, |s, ns| s.overlap_ns = s.overlap_ns.saturating_add(ns));
+}
+
+/// Credit the time since `t0` to lane-group fill (LLR transpose).
+#[inline]
+pub fn record_lane_fill(t0: Option<Instant>) {
+    add(t0, |s, ns| s.lane_fill_ns = s.lane_fill_ns.saturating_add(ns));
+}
+
+/// Zero this thread's accumulator (engines call this at decode start).
+#[inline]
+pub fn reset_stage_acc() {
+    if stage_timings_enabled() {
+        STAGE_ACC.with(|acc| acc.set(StageTimings::default()));
+    }
+}
+
+/// Take this thread's accumulated timings since the last reset:
+/// `Some` whenever stage timing is enabled, `None` otherwise. Taking
+/// zeroes the accumulator.
+#[inline]
+pub fn take_stage_acc() -> Option<StageTimings> {
+    if !stage_timings_enabled() {
+        return None;
+    }
+    Some(STAGE_ACC.with(|acc| acc.replace(StageTimings::default())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_and_total() {
+        let mut a = StageTimings { acs_ns: 10, traceback_ns: 5, ..Default::default() };
+        let b = StageTimings {
+            branch_metric_ns: 1,
+            acs_ns: 2,
+            traceback_ns: 3,
+            overlap_ns: 4,
+            lane_fill_ns: 5,
+        };
+        a.merge(&b);
+        assert_eq!(a.acs_ns, 12);
+        assert_eq!(a.traceback_ns, 8);
+        assert_eq!(a.overlap_ns, 4);
+        assert_eq!(a.total_ns(), 1 + 12 + 8 + 4 + 5);
+    }
+
+    #[test]
+    fn merge_saturates_at_extreme_ns() {
+        let mut a = StageTimings { acs_ns: u64::MAX - 1, ..Default::default() };
+        a.merge(&StageTimings { acs_ns: 100, ..Default::default() });
+        assert_eq!(a.acs_ns, u64::MAX);
+        assert_eq!(a.total_ns(), u64::MAX);
+    }
+
+    #[test]
+    fn accumulator_records_and_takes() {
+        // Enable-only (never disabled): other tests in this binary may
+        // depend on the flag staying up once set.
+        set_stage_timings_enabled(true);
+        reset_stage_acc();
+        let t0 = maybe_now();
+        assert!(t0.is_some());
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        record_acs(t0);
+        record_traceback(maybe_now());
+        let taken = take_stage_acc().expect("enabled");
+        assert!(taken.acs_ns >= 1_000_000, "slept 2ms, recorded {} ns", taken.acs_ns);
+        // Taking zeroes the accumulator.
+        let again = take_stage_acc().expect("enabled");
+        assert_eq!(again, StageTimings::default());
+    }
+}

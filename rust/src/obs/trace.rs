@@ -1,0 +1,342 @@
+//! Lightweight span/event tracer: a bounded ring buffer of
+//! [`TraceEvent`]s with a Chrome trace-event JSONL exporter.
+//!
+//! Producers call [`begin`]/[`end`] (or the RAII [`span`] guard) and
+//! [`counter`]; nothing is recorded unless tracing was switched on
+//! with [`set_trace_enabled`], so the default cost per call site is
+//! one relaxed atomic load. The buffer drops the *oldest* events once
+//! [`TRACE_CAPACITY`] is reached — a long traced run keeps its most
+//! recent window instead of failing or growing without bound.
+//!
+//! The export format is Chrome's trace-event JSON, one object per
+//! line (JSONL): load the file in `chrome://tracing` or Perfetto
+//! after wrapping the lines in a top-level array, or feed it to the
+//! validation in `scripts/check_obs.sh` as-is.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+#[cfg(not(feature = "obs-off"))]
+use std::sync::atomic::AtomicBool;
+
+use crate::util::json::{Json, ObjBuilder};
+
+/// Ring-buffer capacity in events; the oldest events are dropped past
+/// this point.
+pub const TRACE_CAPACITY: usize = 1 << 16;
+
+/// Chrome trace-event phase of one event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TracePhase {
+    /// Span begin (`"B"`).
+    Begin,
+    /// Span end (`"E"`).
+    End,
+    /// Counter sample (`"C"`).
+    Counter,
+}
+
+impl TracePhase {
+    /// The one-letter Chrome trace-event phase code.
+    pub fn code(&self) -> &'static str {
+        match self {
+            TracePhase::Begin => "B",
+            TracePhase::End => "E",
+            TracePhase::Counter => "C",
+        }
+    }
+}
+
+/// One traced event. Names are `&'static str` by design: the tracer
+/// sits on decode hot paths and must not allocate per event.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Span or counter name.
+    pub name: &'static str,
+    /// Begin / end / counter.
+    pub phase: TracePhase,
+    /// Microseconds since the process trace epoch.
+    pub ts_us: f64,
+    /// Small per-thread id (assigned on first emission per thread).
+    pub tid: u64,
+    /// Numeric arguments (`args` in the Chrome format).
+    pub args: Vec<(&'static str, f64)>,
+}
+
+#[cfg(not(feature = "obs-off"))]
+static TRACE_ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Whether tracing is live. Constant `false` under `obs-off`.
+#[cfg(not(feature = "obs-off"))]
+#[inline]
+pub fn trace_enabled() -> bool {
+    TRACE_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Whether tracing is live. Constant `false` under `obs-off`.
+#[cfg(feature = "obs-off")]
+#[inline(always)]
+pub fn trace_enabled() -> bool {
+    false
+}
+
+/// Turn tracing on or off process-wide (no-op under `obs-off`).
+/// Enabling pins the trace epoch if it was not already pinned.
+pub fn set_trace_enabled(on: bool) {
+    #[cfg(not(feature = "obs-off"))]
+    {
+        if on {
+            let _ = epoch();
+        }
+        TRACE_ENABLED.store(on, Ordering::Relaxed);
+    }
+    #[cfg(feature = "obs-off")]
+    let _ = on;
+}
+
+/// The process-wide timestamp origin all `ts_us` values are relative
+/// to (pinned on first use).
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn buffer() -> &'static Mutex<VecDeque<TraceEvent>> {
+    static BUF: OnceLock<Mutex<VecDeque<TraceEvent>>> = OnceLock::new();
+    BUF.get_or_init(|| Mutex::new(VecDeque::new()))
+}
+
+static TID_COUNTER: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+/// This thread's small trace id (assigned on first call).
+fn tid() -> u64 {
+    TID.with(|t| {
+        if t.get() == 0 {
+            t.set(TID_COUNTER.fetch_add(1, Ordering::Relaxed));
+        }
+        t.get()
+    })
+}
+
+fn emit(name: &'static str, phase: TracePhase, args: Vec<(&'static str, f64)>) {
+    let ts_us = epoch().elapsed().as_secs_f64() * 1e6;
+    let ev = TraceEvent { name, phase, ts_us, tid: tid(), args };
+    let mut buf = buffer().lock().unwrap_or_else(|e| e.into_inner());
+    if buf.len() >= TRACE_CAPACITY {
+        buf.pop_front();
+    }
+    buf.push_back(ev);
+}
+
+/// Record a span begin (no-op when tracing is off).
+#[inline]
+pub fn begin(name: &'static str) {
+    if trace_enabled() {
+        emit(name, TracePhase::Begin, Vec::new());
+    }
+}
+
+/// Record a span begin with numeric arguments.
+#[inline]
+pub fn begin_with(name: &'static str, args: &[(&'static str, f64)]) {
+    if trace_enabled() {
+        emit(name, TracePhase::Begin, args.to_vec());
+    }
+}
+
+/// Record a span end (no-op when tracing is off).
+#[inline]
+pub fn end(name: &'static str) {
+    if trace_enabled() {
+        emit(name, TracePhase::End, Vec::new());
+    }
+}
+
+/// Record a counter sample (no-op when tracing is off).
+#[inline]
+pub fn counter(name: &'static str, value: f64) {
+    if trace_enabled() {
+        emit(name, TracePhase::Counter, vec![("value", value)]);
+    }
+}
+
+/// RAII span: ends the span on drop. Inert when tracing was off at
+/// construction.
+pub struct SpanGuard {
+    name: &'static str,
+    active: bool,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.active {
+            end(self.name);
+        }
+    }
+}
+
+/// Begin a span that ends when the returned guard drops.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    let active = trace_enabled();
+    if active {
+        begin(name);
+    }
+    SpanGuard { name, active }
+}
+
+/// [`span`] with numeric arguments on the begin event.
+#[inline]
+pub fn span_with(name: &'static str, args: &[(&'static str, f64)]) -> SpanGuard {
+    let active = trace_enabled();
+    if active {
+        begin_with(name, args);
+    }
+    SpanGuard { name, active }
+}
+
+/// Drain every buffered event, oldest first.
+pub fn drain_trace() -> Vec<TraceEvent> {
+    buffer().lock().unwrap_or_else(|e| e.into_inner()).drain(..).collect()
+}
+
+/// One event as a Chrome trace-event JSON object.
+pub fn to_chrome_json(ev: &TraceEvent) -> Json {
+    let mut b = ObjBuilder::new()
+        .str("name", ev.name)
+        .str("ph", ev.phase.code())
+        .num("ts", ev.ts_us)
+        .num("pid", 1.0)
+        .num("tid", ev.tid as f64);
+    if !ev.args.is_empty() {
+        let mut args = ObjBuilder::new();
+        for (k, v) in &ev.args {
+            args = args.num(k, *v);
+        }
+        b = b.field("args", args.build());
+    }
+    b.build()
+}
+
+/// Render events as Chrome trace-event JSONL (one object per line,
+/// trailing newline).
+pub fn export_chrome_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&to_chrome_json(ev).render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write events as Chrome trace-event JSONL to `path`.
+pub fn write_chrome_jsonl(path: &std::path::Path, events: &[TraceEvent]) -> std::io::Result<()> {
+    std::fs::write(path, export_chrome_jsonl(events))
+}
+
+/// Serialize trace-buffer-touching tests: the buffer and enable flag
+/// are process-global, so concurrent tests would steal each other's
+/// events.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_and_counters_round_trip() {
+        let _g = test_guard();
+        set_trace_enabled(true);
+        let _ = drain_trace();
+        {
+            let _outer = span_with("decode", &[("stages", 128.0)]);
+            counter("acs_ns", 42.0);
+            let _inner = span("lane_group");
+        }
+        let events = drain_trace();
+        assert_eq!(events.len(), 5);
+        assert_eq!(events[0].name, "decode");
+        assert_eq!(events[0].phase, TracePhase::Begin);
+        assert_eq!(events[0].args, vec![("stages", 128.0)]);
+        assert_eq!(events[1].name, "acs_ns");
+        assert_eq!(events[1].phase, TracePhase::Counter);
+        // Inner span ends before outer (drop order).
+        assert_eq!(events[3].name, "lane_group");
+        assert_eq!(events[3].phase, TracePhase::End);
+        assert_eq!(events[4].name, "decode");
+        assert_eq!(events[4].phase, TracePhase::End);
+        // Timestamps are monotone; all on one thread.
+        for w in events.windows(2) {
+            assert!(w[0].ts_us <= w[1].ts_us);
+            assert_eq!(w[0].tid, w[1].tid);
+        }
+    }
+
+    #[test]
+    fn ring_buffer_drops_oldest() {
+        let _g = test_guard();
+        set_trace_enabled(true);
+        let _ = drain_trace();
+        for i in 0..(TRACE_CAPACITY + 10) {
+            counter("tick", i as f64);
+        }
+        let events = drain_trace();
+        assert_eq!(events.len(), TRACE_CAPACITY);
+        // The survivors are the most recent window.
+        assert_eq!(events[0].args[0].1, 10.0);
+        assert_eq!(events.last().unwrap().args[0].1, (TRACE_CAPACITY + 9) as f64);
+    }
+
+    #[test]
+    fn chrome_export_parses_line_per_event() {
+        let _g = test_guard();
+        set_trace_enabled(true);
+        let _ = drain_trace();
+        begin_with("blk", &[("lanes", 64.0)]);
+        end("blk");
+        let events = drain_trace();
+        let text = export_chrome_jsonl(&events);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let b = Json::parse(lines[0]).unwrap();
+        assert_eq!(b.get("name").and_then(Json::as_str), Some("blk"));
+        assert_eq!(b.get("ph").and_then(Json::as_str), Some("B"));
+        assert!(b.get("ts").and_then(Json::as_f64).is_some());
+        assert_eq!(b.get("pid").and_then(Json::as_f64), Some(1.0));
+        assert!(b.get("tid").and_then(Json::as_f64).unwrap() >= 1.0);
+        assert_eq!(
+            b.get("args").and_then(|a| a.get("lanes")).and_then(Json::as_f64),
+            Some(64.0)
+        );
+        let e = Json::parse(lines[1]).unwrap();
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("E"));
+        assert!(e.get("args").is_none());
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let _g = test_guard();
+        // Flip off only under the test lock, restore before releasing
+        // it so other tests see tracing in a known state.
+        set_trace_enabled(false);
+        let _ = drain_trace();
+        begin("ghost");
+        counter("ghost", 1.0);
+        {
+            let _s = span("ghost");
+        }
+        assert!(drain_trace().is_empty());
+        set_trace_enabled(true);
+    }
+}

@@ -136,7 +136,12 @@ impl Engine for PjrtEngine {
         let frames = if req.stages == 0 { 0 } else { (req.stages + f - 1) / f };
         Ok(DecodeOutput::hard(
             bits,
-            DecodeStats { final_metric: None, frames, iterations: None },
+            DecodeStats {
+                final_metric: None,
+                frames,
+                iterations: None,
+                stage_timings: None,
+            },
         ))
     }
 }

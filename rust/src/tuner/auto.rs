@@ -95,7 +95,12 @@ impl Engine for AutoEngine {
             return Ok(DecodeOutput {
                 bits: Vec::new(),
                 soft: (req.output == OutputMode::Soft).then(Vec::new),
-                stats: DecodeStats { final_metric: None, frames: 0, iterations: None },
+                stats: DecodeStats {
+                    final_metric: None,
+                    frames: 0,
+                    iterations: None,
+                    stage_timings: None,
+                },
             });
         }
         // The request's mode and framing shape the plan: the planner's

@@ -23,9 +23,11 @@
 //! failing — serving never stalls on an infeasible budget.
 
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 use crate::code::CodeSpec;
 use crate::frames::plan::FrameGeometry;
+use crate::obs::DecayedEwma;
 use crate::viterbi::registry::{self, BuildParams};
 use super::profile::CalibrationProfile;
 
@@ -215,19 +217,25 @@ pub struct Choice {
 pub struct Planner {
     cfg: PlannerConfig,
     profile: Option<CalibrationProfile>,
+    /// Measured per-route payload throughput (route name → decayed
+    /// Mbps), fed by the adaptive backend's routed executions
+    /// ([`Planner::observe`]) and blended into [`Planner::rank`]
+    /// scores. Shared across clones, so the coordinator's planner and
+    /// the registry's cached dispatcher see one drift signal.
+    feedback: Arc<Mutex<Vec<(String, DecayedEwma)>>>,
 }
 
 impl Planner {
     /// A profile-free planner: static heuristic ranking only.
     pub fn heuristic(cfg: PlannerConfig) -> Planner {
-        Planner { cfg, profile: None }
+        Planner { cfg, profile: None, feedback: Arc::new(Mutex::new(Vec::new())) }
     }
 
     /// A planner ranking by the given profile (empty profiles degrade
     /// to the heuristic).
     pub fn with_profile(cfg: PlannerConfig, profile: CalibrationProfile) -> Planner {
         let profile = if profile.is_empty() { None } else { Some(profile) };
-        Planner { cfg, profile }
+        Planner { cfg, profile, feedback: Arc::new(Mutex::new(Vec::new())) }
     }
 
     /// Load a profile from `path` and build a planner over it.
@@ -262,6 +270,36 @@ impl Planner {
         &self.cfg
     }
 
+    /// Fold one measured routed execution into the per-route
+    /// throughput EWMA (`mbps` = payload megabits per second).
+    /// Non-finite or non-positive samples are ignored — a degenerate
+    /// timing must not poison the drift signal.
+    pub fn observe(&self, engine: &str, mbps: f64) {
+        if !mbps.is_finite() || mbps <= 0.0 {
+            return;
+        }
+        let mut fb = self.feedback.lock().unwrap();
+        match fb.iter_mut().find(|(name, _)| name == engine) {
+            Some((_, ewma)) => ewma.observe(mbps),
+            None => {
+                let mut ewma = DecayedEwma::default();
+                ewma.observe(mbps);
+                fb.push((engine.to_string(), ewma));
+            }
+        }
+    }
+
+    /// The decayed measured throughput of `engine`, if any routed
+    /// execution has been observed for it.
+    pub fn observed_mbps(&self, engine: &str) -> Option<f64> {
+        self.feedback
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|(name, _)| name == engine)
+            .and_then(|(_, ewma)| ewma.value())
+    }
+
     /// Build-parameter bundle for registry memory rules at `shape`.
     fn shape_params(&self, shape: &JobShape) -> BuildParams {
         let f = shape.frame_len.max(1);
@@ -287,6 +325,14 @@ impl Planner {
     /// constraint length (a different trellis size) is not comparable
     /// across engines, so such candidates fall back to the heuristic
     /// ordering instead of winning on an incommensurate number.
+    ///
+    /// Measured drift: when [`Planner::observe`] has recorded routed
+    /// executions for a candidate, its score is the geometric mean of
+    /// the calibrated cell and the decayed measurement — an engine
+    /// that degrades in production loses its ranking even though the
+    /// (stale) profile still favors it. Observation eligibility
+    /// follows the same workload rule as profile cells: batch-route
+    /// measurements never score a contiguous-stream shape.
     pub fn rank(&self, shape: &JobShape) -> Vec<Choice> {
         let params = self.shape_params(shape);
         let cands = candidates(shape);
@@ -310,9 +356,20 @@ impl Planner {
                     }
                     p.nearest(name, shape.k, shape.frame_len, shape.batch_frames)
                 });
+                let observed = if stream && name != "blocks" {
+                    None
+                } else {
+                    self.observed_mbps(name)
+                };
+                let expected_mbps = match (cell.map(|c| c.median_mbps), observed) {
+                    (Some(p), Some(o)) => Some((p * o).sqrt()),
+                    (Some(p), None) => Some(p),
+                    (None, Some(o)) => Some(o),
+                    (None, None) => None,
+                };
                 Choice {
                     engine: name,
-                    expected_mbps: cell.map(|c| c.median_mbps),
+                    expected_mbps,
                     working_set_bytes: working_set(name, &params, shape.soft),
                     from_profile: cell.is_some(),
                 }
@@ -753,6 +810,56 @@ mod tests {
         assert_eq!(choice.engine, "blocks");
         assert!(choice.from_profile);
         assert_eq!(choice.expected_mbps, Some(800.0));
+    }
+
+    #[test]
+    fn observed_drift_flips_the_plan() {
+        // A stale profile says the lane route dominates; production
+        // measurements say it has degraded. The blended score
+        // (geometric mean of profile and decayed measurement) must let
+        // the measured drift flip an `auto` dispatch decision.
+        let profile = CalibrationProfile::new(vec![
+            rec("lanes", 64, 400.0),
+            rec("parallel", 64, 100.0),
+        ]);
+        let p = Planner::with_profile(cfg(), profile);
+        let s = shape(64, true);
+        assert_eq!(p.plan(&s).engine, "lanes");
+        // Degenerate samples must be ignored, not poison the signal.
+        p.observe("lanes", f64::NAN);
+        p.observe("lanes", 0.0);
+        assert_eq!(p.observed_mbps("lanes"), None);
+        for _ in 0..50 {
+            p.observe("lanes", 1.0);
+        }
+        // blend = sqrt(400 × 1) = 20 Mbps < parallel's calibrated 100.
+        let flipped = p.plan(&s);
+        assert_eq!(flipped.engine, "parallel");
+        assert_eq!(flipped.expected_mbps, Some(100.0));
+        let lanes = p.rank(&s).into_iter().find(|c| c.engine == "lanes").unwrap();
+        assert!(lanes.from_profile, "the cell still exists; only its score moved");
+        assert!(lanes.expected_mbps.unwrap() < 100.0);
+        // Clones share the drift signal: the coordinator's planner and
+        // the registry's cached dispatcher see one feedback stream.
+        assert_eq!(p.clone().plan(&s).engine, "parallel");
+    }
+
+    #[test]
+    fn stream_shapes_ignore_batch_route_observations() {
+        // Batch-route measurements are a different workload; only
+        // `blocks` observations may score a contiguous stream.
+        let p = Planner::heuristic(cfg());
+        for _ in 0..10 {
+            p.observe("lanes-mt", 9000.0);
+        }
+        let mut s = shape(64, true);
+        s.stream_stages = 2 * BLOCKS_STREAM_MIN;
+        assert_eq!(p.plan(&s).engine, "blocks");
+        p.observe("blocks", 800.0);
+        let choice = p.plan(&s);
+        assert_eq!(choice.engine, "blocks");
+        assert_eq!(choice.expected_mbps, Some(800.0));
+        assert!(!choice.from_profile, "measured, not calibrated");
     }
 
     #[test]

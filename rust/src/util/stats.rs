@@ -217,6 +217,79 @@ mod tests {
     }
 
     #[test]
+    fn summary_merge_is_associative() {
+        // (a ⊕ b) ⊕ c and a ⊕ (b ⊕ c) must agree — the coordinator
+        // merges per-route summaries in whatever order batches land.
+        let xs: Vec<f64> = (0..90).map(|i| (i as f64 * 0.7).cos() * 5.0 + 10.0).collect();
+        let chunk = |r: std::ops::Range<usize>| {
+            let mut s = Summary::new();
+            xs[r].iter().for_each(|&x| s.add(x));
+            s
+        };
+        let (a, b, c) = (chunk(0..20), chunk(20..61), chunk(61..90));
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left.count(), right.count());
+        assert!((left.mean() - right.mean()).abs() < 1e-9);
+        assert!((left.variance() - right.variance()).abs() < 1e-9);
+        assert_eq!(left.min(), right.min());
+        assert_eq!(left.max(), right.max());
+        // The empty summary is the identity on either side.
+        let mut with_empty = a.clone();
+        with_empty.merge(&Summary::new());
+        assert_eq!(with_empty.count(), a.count());
+        assert!((with_empty.mean() - a.mean()).abs() < 1e-12);
+        let mut empty = Summary::new();
+        empty.merge(&a);
+        assert_eq!(empty.count(), a.count());
+        assert!((empty.mean() - a.mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantile_brackets_the_sample() {
+        // One recorded value: every quantile returns the upper bound
+        // of its bucket — at least the value, and (power-of-two
+        // buckets) less than twice it.
+        for v in [1_500u64, 3_000, 1_000_000, 750_000_000, 5_000_000_000] {
+            let mut h = LatencyHistogram::new();
+            h.record(v);
+            for q in [0.5, 0.99, 1.0] {
+                let b = h.quantile_ns(q);
+                assert!(b >= v, "q{q}: bound {b} < sample {v}");
+                assert!(b < v * 2, "q{q}: bound {b} >= 2x sample {v}");
+            }
+        }
+        // Values at or below the first bound land in the 1us bucket.
+        let mut h = LatencyHistogram::new();
+        h.record(1);
+        assert_eq!(h.quantile_ns(0.5), 1_000);
+    }
+
+    #[test]
+    fn histogram_overflow_bucket_catches_extreme_ns() {
+        // Bounds stop at 1000·2^24 ns (~16.8 s); anything beyond lands
+        // in the overflow bucket, reported as twice the last bound
+        // rather than panicking or saturating to zero.
+        let mut h = LatencyHistogram::new();
+        h.record(25_000_000_000); // ~25 s
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile_ns(0.5), 33_554_432_000);
+        assert_eq!(h.quantile_ns(1.0), 33_554_432_000);
+        // Overflow samples do not disturb the in-range quantiles'
+        // bucket arithmetic.
+        for _ in 0..98 {
+            h.record(2_000_000); // 2 ms, lands in the 2_048_000 bucket
+        }
+        assert_eq!(h.quantile_ns(0.5), 2_048_000);
+    }
+
+    #[test]
     fn histogram_quantile_monotone() {
         let mut h = LatencyHistogram::new();
         for i in 1..=1000u64 {

@@ -155,16 +155,23 @@ impl Engine for BlocksEngine {
             });
         }
         let (llrs, stages, end) = (req.llrs, req.stages, req.end);
+        crate::obs::reset_stage_acc();
         let beta = self.spec.beta as usize;
         let plan = self.plan_for(stages);
-        let stats =
-            DecodeStats { final_metric: None, frames: plan.spans.len(), iterations: None };
+        let mut stats = DecodeStats {
+            final_metric: None,
+            frames: plan.spans.len(),
+            iterations: None,
+            stage_timings: None,
+        };
         let mut out = vec![0u8; stages];
         if plan.spans.is_empty() {
+            stats.stage_timings = crate::obs::take_stage_acc();
             return Ok(DecodeOutput::hard(out, stats));
         }
         if !lane_fast_path(&self.trellis) {
             self.decode_blocks_fallback(llrs, stages, end, &plan, &mut out);
+            stats.stage_timings = crate::obs::take_stage_acc();
             return Ok(DecodeOutput::hard(out, stats));
         }
         let ptb = self.ptb_for(&plan);
@@ -173,7 +180,11 @@ impl Engine for BlocksEngine {
         let mut scratch =
             LaneScratch::new(self.trellis.num_states(), plan.geo.span(), max_group);
         let mut rest: &mut [u8] = &mut out;
-        for g in &groups {
+        for (gi, g) in groups.iter().enumerate() {
+            let _span = crate::obs::span_with(
+                "lane_group",
+                &[("group", gi as f64), ("lanes", g.count as f64)],
+            );
             let glen: usize =
                 plan.spans[g.first..g.first + g.count].iter().map(|s| s.out_len).sum();
             let (region, r) = std::mem::take(&mut rest).split_at_mut(glen);
@@ -188,6 +199,7 @@ impl Engine for BlocksEngine {
                 &mut scratch,
             );
         }
+        stats.stage_timings = crate::obs::take_stage_acc();
         Ok(DecodeOutput::hard(out, stats))
     }
 }

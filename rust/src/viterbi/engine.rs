@@ -120,6 +120,12 @@ pub struct DecodeStats {
     /// tail-biting decodes through the `wava` engine; the CI
     /// iteration-cap gate reads this).
     pub iterations: Option<u32>,
+    /// Per-stage wall-time breakdown (`Some` only when stage timing is
+    /// enabled via [`crate::obs::ObsConfig`] *and* the engine is
+    /// instrumented — scalar/tiled/unified/lanes/blocks/wava; the
+    /// thread-fan-out engines report `None`, their workers' timings
+    /// land in the coordinator's per-batch aggregate instead).
+    pub stage_timings: Option<crate::obs::StageTimings>,
 }
 
 /// A decoded stream: hard bits, optional reliabilities, statistics.
@@ -185,6 +191,20 @@ pub enum DecodeError {
         /// The requested stream end.
         end: StreamEnd,
     },
+}
+
+impl DecodeError {
+    /// Stable short name of the variant, for per-variant error
+    /// counters (`coordinator::Metrics`) and log lines.
+    pub fn variant_name(&self) -> &'static str {
+        match self {
+            DecodeError::LlrLengthMismatch { .. } => "llr-length-mismatch",
+            DecodeError::UnsupportedOutput { .. } => "unsupported-output",
+            DecodeError::InvalidRequest { .. } => "invalid-request",
+            DecodeError::Backend { .. } => "backend",
+            DecodeError::UnsupportedStreamEnd { .. } => "unsupported-stream-end",
+        }
+    }
 }
 
 impl std::fmt::Display for DecodeError {
@@ -301,9 +321,16 @@ impl Engine for ScalarEngine {
     fn decode(&self, req: &DecodeRequest<'_>) -> Result<DecodeOutput, DecodeError> {
         req.validate(&self.spec)?;
         reject_tail_biting(self.name(), req.end)?;
+        crate::obs::reset_stage_acc();
         let tb = final_traceback_start(req.end, true);
-        let stats =
-            |fm: f32| DecodeStats { final_metric: Some(fm), frames: 1, iterations: None };
+        // Called after the decode work, so the stage accumulator holds
+        // this request's timings.
+        let stats = |fm: f32| DecodeStats {
+            final_metric: Some(fm),
+            frames: 1,
+            iterations: None,
+            stage_timings: crate::obs::take_stage_acc(),
+        };
         match req.output {
             OutputMode::Hard => {
                 let mut dec = ScalarDecoder::new(self.spec.clone());
@@ -458,13 +485,18 @@ impl Engine for TiledEngine {
     fn decode(&self, req: &DecodeRequest<'_>) -> Result<DecodeOutput, DecodeError> {
         req.validate(&self.spec)?;
         reject_tail_biting(self.name(), req.end)?;
+        crate::obs::reset_stage_acc();
         let beta = self.spec.beta as usize;
         let stages = req.stages;
         let spans = plan_frames(stages, self.geo);
         let mut scratch = FrameScratch::new(self.trellis.num_states(), self.geo.span());
         let mut bits = vec![0u8; stages];
-        let mut stats =
-            DecodeStats { final_metric: None, frames: spans.len(), iterations: None };
+        let mut stats = DecodeStats {
+            final_metric: None,
+            frames: spans.len(),
+            iterations: None,
+            stage_timings: None,
+        };
         match req.output {
             OutputMode::Hard => {
                 for span in &spans {
@@ -485,6 +517,7 @@ impl Engine for TiledEngine {
                     stats.final_metric =
                         Some(metric_at(row, final_traceback_start(req.end, true)));
                 }
+                stats.stage_timings = crate::obs::take_stage_acc();
                 Ok(DecodeOutput::hard(bits, stats))
             }
             OutputMode::Soft => {
@@ -508,6 +541,7 @@ impl Engine for TiledEngine {
                     }
                 }
                 let soft = signed_soft(&bits, &rel);
+                stats.stage_timings = crate::obs::take_stage_acc();
                 Ok(DecodeOutput { bits, soft: Some(soft), stats })
             }
         }

@@ -65,6 +65,7 @@ pub fn forward_frame(
     boundaries: &[usize],
     scratch: &mut FrameScratch,
 ) -> u32 {
+    let obs_t0 = crate::obs::maybe_now();
     let beta = trellis.spec.beta as usize;
     let ns = trellis.num_states();
     debug_assert_eq!(llrs.len() % beta, 0);
@@ -100,6 +101,7 @@ pub fn forward_frame(
             final_best = argmax(cur_row) as u32;
         }
     }
+    crate::obs::record_acs(obs_t0);
     final_best
 }
 
@@ -117,6 +119,7 @@ pub fn traceback_segment(
     emit_hi: usize,
     out: &mut [u8],
 ) -> u32 {
+    let obs_t0 = crate::obs::maybe_now();
     debug_assert!(from >= to);
     debug_assert!(emit_hi >= emit_lo);
     debug_assert!(out.len() >= emit_hi - emit_lo);
@@ -135,6 +138,7 @@ pub fn traceback_segment(
         }
         t -= 1;
     }
+    crate::obs::record_traceback(obs_t0);
     j
 }
 

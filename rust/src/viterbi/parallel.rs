@@ -161,7 +161,15 @@ impl Engine for ParallelEngine {
         let bits = self.decode_spans(req.llrs, req.stages, req.end, &spans);
         Ok(DecodeOutput::hard(
             bits,
-            DecodeStats { final_metric: None, frames: spans.len(), iterations: None },
+            // Pool-fanned: workers accumulate stage timings into their
+            // own thread-locals (see `crate::obs::stage`); no
+            // per-decode breakdown here.
+            DecodeStats {
+                final_metric: None,
+                frames: spans.len(),
+                iterations: None,
+                stage_timings: None,
+            },
         ))
     }
 }

@@ -129,7 +129,9 @@ impl ScalarDecoder {
         let ns = self.trellis.num_states();
 
         let mut decisions = DecisionMatrix::new(ns, stages);
+        let obs_t0 = crate::obs::maybe_now();
         self.forward(llrs, stages, start_state, &mut decisions);
+        crate::obs::record_acs(obs_t0);
 
         // After stage t the current row is pm[(t+1) & 1]; the final
         // stage t = stages−1 therefore leaves σ in pm[stages & 1].
@@ -141,7 +143,10 @@ impl ScalarDecoder {
                 s
             }
         };
-        self.traceback(&decisions, stages, start)
+        let obs_t0 = crate::obs::maybe_now();
+        let out = self.traceback(&decisions, stages, start);
+        crate::obs::record_traceback(obs_t0);
+        out
     }
 
     /// Forward procedure (Alg 1): fills `decisions`; leaves the final σ

@@ -232,7 +232,12 @@ impl Engine for StreamingEngine {
         bits.extend(dec.finish(final_state));
         Ok(DecodeOutput::hard(
             bits,
-            DecodeStats { final_metric: Some(fm), frames: 1, iterations: None },
+            DecodeStats {
+                final_metric: Some(fm),
+                frames: 1,
+                iterations: None,
+                stage_timings: None,
+            },
         ))
     }
 }

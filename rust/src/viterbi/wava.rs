@@ -98,6 +98,10 @@ pub fn wava_decode_frame(
     let mut iter = 0u32;
     loop {
         iter += 1;
+        // Stage attribution: the first pass is the genuine decode
+        // (ACS/traceback); every wrap past it re-decodes the same
+        // stages, which is warmup-style redecode overhead (overlap).
+        let obs_t0 = crate::obs::maybe_now();
         for t in 0..stages {
             let llr_t = &llrs[t * beta..(t + 1) * beta];
             let (prev_row, cur_row) = pm_rows(&mut scratch.pm, t & 1);
@@ -113,12 +117,18 @@ pub fn wava_decode_frame(
                 cur_row.iter_mut().for_each(|x| *x -= m);
             }
         }
+        if iter == 1 {
+            crate::obs::record_acs(obs_t0);
+        } else {
+            crate::obs::record_overlap(obs_t0);
+        }
         let final_row = &scratch.pm[stages & 1];
         let start = argmax(final_row) as u32;
         let final_metric = final_row[start as usize];
 
         // Traceback, remembering the path's start state (the state at
         // entry to stage 0): the wrap condition is start == end.
+        let obs_t0 = crate::obs::maybe_now();
         let k = trellis.spec.k;
         let mask = trellis.spec.state_mask();
         let mut j = start;
@@ -126,6 +136,11 @@ pub fn wava_decode_frame(
             out[t] = (j >> (k - 2)) as u8;
             let d = scratch.decisions.get(t, j);
             j = (2 * j + d) & mask;
+        }
+        if iter == 1 {
+            crate::obs::record_traceback(obs_t0);
+        } else {
+            crate::obs::record_overlap(obs_t0);
         }
         let converged = j == start;
         if converged || iter >= max_iters {
@@ -421,9 +436,15 @@ impl Engine for WavaEngine {
         if req.stages == 0 {
             return Ok(DecodeOutput::hard(
                 Vec::new(),
-                DecodeStats { final_metric: None, frames: 0, iterations: None },
+                DecodeStats {
+                    final_metric: None,
+                    frames: 0,
+                    iterations: None,
+                    stage_timings: None,
+                },
             ));
         }
+        crate::obs::reset_stage_acc();
         match req.end {
             StreamEnd::TailBiting => {
                 // A tail-biting path needs at least k−1 stages to fix
@@ -446,6 +467,7 @@ impl Engine for WavaEngine {
                         final_metric: Some(outcome.final_metric),
                         frames: 1,
                         iterations: Some(outcome.iterations),
+                        stage_timings: crate::obs::take_stage_acc(),
                     },
                 ))
             }
@@ -463,7 +485,12 @@ impl Engine for WavaEngine {
                 };
                 Ok(DecodeOutput::hard(
                     bits,
-                    DecodeStats { final_metric: Some(fm), frames: 1, iterations: None },
+                    DecodeStats {
+                        final_metric: Some(fm),
+                        frames: 1,
+                        iterations: None,
+                        stage_timings: crate::obs::take_stage_acc(),
+                    },
                 ))
             }
         }

@@ -1,0 +1,99 @@
+//! Acceptance suite for the observability layer: a traced 2^16-stage
+//! block-parallel decode must export valid Chrome trace-event JSONL
+//! with per-group `lane_group` spans, and the per-stage clocks (ACS,
+//! traceback) must be nonzero and consistent with the wall clock.
+//!
+//! This file holds exactly one test on purpose: the trace ring buffer
+//! and the enable flags are process-global, so no other test may share
+//! the binary without stealing events.
+
+use std::collections::HashMap;
+
+use viterbi::channel::Rng64;
+use viterbi::code::CodeSpec;
+use viterbi::obs::{self, ObsConfig, TracePhase};
+use viterbi::util::json::Json;
+use viterbi::viterbi::{BlocksEngine, DecodeRequest, Engine, StreamEnd};
+
+#[test]
+fn traced_blocks_decode_exports_valid_chrome_jsonl() {
+    ObsConfig::enabled().apply();
+    let _ = obs::drain_trace();
+
+    let stages = 1usize << 16;
+    let spec = CodeSpec::standard_k7();
+    let beta = spec.beta as usize;
+    let mut rng = Rng64::seeded(0x0B5);
+    let llrs: Vec<f32> =
+        (0..stages * beta).map(|_| (rng.uniform() as f32 - 0.5) * 8.0).collect();
+    let engine = BlocksEngine::new(spec, 32);
+
+    let t0 = std::time::Instant::now();
+    obs::begin_with("decode", &[("stages", stages as f64)]);
+    let out = engine
+        .decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Truncated))
+        .expect("blocks decode");
+    obs::end("decode");
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    assert_eq!(out.bits.len(), stages);
+
+    // Stage clocks: present, nonzero, and within 2x the wall clock
+    // (each stage is timed at most once per decode pass, so their sum
+    // can never exceed 2x wall even with clock-read jitter).
+    let stage = out.stats.stage_timings.expect("stage timings enabled");
+    assert!(stage.acs_ns > 0, "{stage:?}");
+    assert!(stage.traceback_ns > 0, "{stage:?}");
+    assert!(
+        stage.acs_ns + stage.traceback_ns <= wall_ns.saturating_mul(2),
+        "acs {} + traceback {} vs wall {wall_ns}",
+        stage.acs_ns,
+        stage.traceback_ns
+    );
+
+    let events = obs::drain_trace();
+    assert!(!events.is_empty());
+
+    // Balanced, properly nested spans per thread, and the block engine
+    // emitted at least one lane_group span carrying its lane count.
+    let mut open: HashMap<u64, Vec<&str>> = HashMap::new();
+    let mut lane_groups = 0usize;
+    for ev in &events {
+        match ev.phase {
+            TracePhase::Begin => {
+                if ev.name == "lane_group" {
+                    lane_groups += 1;
+                    assert!(
+                        ev.args.iter().any(|(k, v)| *k == "lanes" && *v >= 1.0),
+                        "{ev:?}"
+                    );
+                }
+                open.entry(ev.tid).or_default().push(ev.name);
+            }
+            TracePhase::End => {
+                assert_eq!(open.entry(ev.tid).or_default().pop(), Some(ev.name), "{ev:?}");
+            }
+            TracePhase::Counter => {}
+        }
+    }
+    assert!(open.values().all(Vec::is_empty), "unclosed spans: {open:?}");
+    assert!(lane_groups >= 1, "no lane_group spans in {} events", events.len());
+
+    // The Chrome JSONL export: one well-formed object per line with
+    // the required keys; the block decode is single-threaded, so the
+    // buffer order gives monotone timestamps.
+    let text = obs::export_chrome_jsonl(&events);
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut lines = 0usize;
+    for line in text.lines() {
+        let j = Json::parse(line).expect("well-formed trace line");
+        assert!(j.get("name").and_then(Json::as_str).is_some());
+        let ph = j.get("ph").and_then(Json::as_str).expect("phase");
+        assert!(matches!(ph, "B" | "E" | "C"), "{ph}");
+        let ts = j.get("ts").and_then(Json::as_f64).expect("timestamp");
+        assert!(ts >= last_ts, "timestamps must be monotone");
+        last_ts = ts;
+        assert!(j.get("tid").and_then(Json::as_f64).is_some());
+        lines += 1;
+    }
+    assert_eq!(lines, events.len());
+}

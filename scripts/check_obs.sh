@@ -1,0 +1,112 @@
+#!/usr/bin/env bash
+# Observability gate (CI "build-test" job, obs step):
+#   1. the obs unit suites — tracer ring buffer, stage-timing
+#      accumulator, decayed-EWMA feedback, the metrics registry
+#      (per-route latency + error-kind counters), and the planner's
+#      observed-drift blend;
+#   2. the traced-decode acceptance suite (2^16-stage block-parallel
+#      stream -> balanced Chrome spans, nonzero ACS/traceback clocks);
+#   3. a `viterbi-repro trace` run — the CLI self-validates the span
+#      stream and exits nonzero on any violation — plus an independent
+#      re-validation of the emitted trace.json here;
+#   4. a stage-timed bench smoke: the stage_*_ns record columns must be
+#      populated for the instrumented engines.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== obs: unit suites (trace / stage / ewma / metrics / planner) =="
+cargo test -q --lib obs::
+cargo test -q --lib coordinator::metrics
+cargo test -q --lib tuner::planner
+
+echo "== obs: traced-decode acceptance suite =="
+cargo test -q --test obs_trace
+
+echo "== obs: traced 2^16-stage blocks decode -> trace.json =="
+cargo run --release --quiet -- trace --stages 65536 --engine blocks --out trace.json
+test -s trace.json
+
+python3 - trace.json <<'EOF'
+import json
+import sys
+
+path = sys.argv[1]
+events = []
+with open(path) as f:
+    for line in f:
+        line = line.strip()
+        if line:
+            events.append(json.loads(line))
+if not events:
+    print("FAIL: empty trace in", path)
+    sys.exit(1)
+
+open_spans = {}
+lane_groups = 0
+acs = traceback = 0.0
+for ev in events:
+    ph, tid = ev["ph"], ev["tid"]
+    if ph == "B":
+        if ev["name"] == "lane_group":
+            lane_groups += 1
+        open_spans.setdefault(tid, []).append(ev["name"])
+    elif ph == "E":
+        stack = open_spans.setdefault(tid, [])
+        if not stack or stack.pop() != ev["name"]:
+            print(f"FAIL: unbalanced span {ev['name']!r} on tid {tid}")
+            sys.exit(1)
+    elif ph == "C":
+        if ev["name"] == "acs_ns":
+            acs = ev["args"]["value"]
+        elif ev["name"] == "traceback_ns":
+            traceback = ev["args"]["value"]
+
+leftover = {t: s for t, s in open_spans.items() if s}
+if leftover:
+    print("FAIL: unclosed spans:", leftover)
+    sys.exit(1)
+if lane_groups < 1:
+    print("FAIL: no lane_group spans")
+    sys.exit(1)
+if acs <= 0 or traceback <= 0:
+    print(f"FAIL: stage counters missing (acs={acs}, traceback={traceback})")
+    sys.exit(1)
+print(
+    f"OK: {len(events)} events, {lane_groups} lane group(s), "
+    f"acs {acs:.0f} ns, traceback {traceback:.0f} ns"
+)
+EOF
+
+echo "== obs: stage-timed bench smoke (stage_*_ns columns populated) =="
+cargo run --release --quiet -- bench --engines unified,blocks --frames 16 \
+    --frame-lens 256 --samples 2 --warmup 1 --stage-timings --out BENCH_obs.json
+test -s BENCH_obs.json
+
+python3 - BENCH_obs.json <<'EOF'
+import json
+import sys
+
+path = sys.argv[1]
+records = []
+with open(path) as f:
+    for line in f:
+        line = line.strip()
+        if line:
+            records.append(json.loads(line))
+if not records:
+    print("FAIL: no bench records in", path)
+    sys.exit(1)
+for r in records:
+    if r["stage_acs_ns"] <= 0 or r["stage_traceback_ns"] <= 0:
+        print(
+            f"FAIL: {r['engine']}: stage columns empty "
+            f"(acs={r['stage_acs_ns']}, tb={r['stage_traceback_ns']})"
+        )
+        sys.exit(1)
+print("OK:", "; ".join(
+    f"{r['engine']} acs {r['stage_acs_ns']} ns / tb {r['stage_traceback_ns']} ns"
+    for r in records
+))
+EOF
+
+echo "obs OK: suites green; trace.json balanced with lane_group spans; stage columns live"
