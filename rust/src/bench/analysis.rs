@@ -1,0 +1,571 @@
+//! Perf-trajectory analysis over saved `BENCH_*.jsonl` record sets —
+//! the reading half of the rebar-style benchmark discipline
+//! (BurntSushi/rebar's `diff` command over its FORMAT records is the
+//! exemplar; BENCHMARKS.md "The perf trajectory" documents the
+//! workflow).
+//!
+//! The writer half has existed since PR 1 (`measurement::write_jsonl`);
+//! this module makes the records *comparable across revisions*:
+//!
+//! * [`MeasureKey`] — the identity of one measured cell, stable across
+//!   record sets: (engine, K, rate, puncture, frame length, batch
+//!   width, lane width). Two records with equal keys measure the same
+//!   workload on the same engine, so their throughput delta is
+//!   meaningful; everything else (samples, git_rev, machine state) is
+//!   allowed to differ.
+//! * [`diff`] — align two record sets by key and classify every
+//!   matched cell against a configurable noise threshold
+//!   ([`DiffOptions::threshold_pct`]). The optional
+//!   [`DiffOptions::normalize`] mode scores each cell *relative to a
+//!   reference engine in the same set* (throughput ratios instead of
+//!   absolute Mb/s), which cancels machine-speed differences when the
+//!   two sets were recorded on different hardware — the CI gate
+//!   (`scripts/check_bench_diff.sh`) diffs a fresh run against the
+//!   committed baseline this way, normalized by `scalar`.
+//!
+//! The `bench diff` CLI subcommand is a thin wrapper; its exit-status
+//! contract (0 clean, 2 regression) is what makes the report machine
+//! readable for CI. Ranked comparisons and side-by-side tables live in
+//! [`super::compare`].
+
+use std::fmt::Write as _;
+
+use super::measurement::Measurement;
+
+/// Default noise threshold for [`diff`], percent: a matched cell whose
+/// score moves by less than this (either direction) is classified
+/// [`DeltaClass::Unchanged`]. Same-machine medians over ≥5 samples sit
+/// well inside ±10%; cross-machine gates should widen it and normalize
+/// (see `scripts/check_bench_diff.sh`).
+pub const DEFAULT_NOISE_PCT: f64 = 10.0;
+
+/// The identity of one measured cell across record sets: engine plus
+/// the full workload geometry. Records with equal keys are comparable;
+/// the measured statistics and provenance columns are not part of it.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct MeasureKey {
+    /// Registry name of the engine.
+    pub engine: String,
+    /// Constraint length K.
+    pub k: u32,
+    /// Mother-code rate label.
+    pub rate: String,
+    /// Puncturing label (`none`, `2/3`, `3/4`).
+    pub puncture: String,
+    /// Decoded stages per frame (f).
+    pub frame_len: usize,
+    /// Frames of payload per measured stream.
+    pub batch_frames: usize,
+    /// Frames decoded in SIMD lockstep (1 for per-frame engines).
+    pub lane_width: usize,
+}
+
+impl MeasureKey {
+    /// The key of a measurement.
+    pub fn of(m: &Measurement) -> MeasureKey {
+        MeasureKey {
+            engine: m.engine.clone(),
+            k: m.k,
+            rate: m.rate.clone(),
+            puncture: m.puncture.clone(),
+            frame_len: m.frame_len,
+            batch_frames: m.batch_frames,
+            lane_width: m.lane_width,
+        }
+    }
+
+    /// The scenario identity — the key minus the engine (and the lane
+    /// width, which is an engine configuration detail): measurements
+    /// sharing a scenario decoded the same workload, so their
+    /// throughputs are directly comparable across engines.
+    pub fn scenario(&self) -> ScenarioKey {
+        ScenarioKey {
+            k: self.k,
+            rate: self.rate.clone(),
+            puncture: self.puncture.clone(),
+            frame_len: self.frame_len,
+            batch_frames: self.batch_frames,
+        }
+    }
+
+    /// Compact human-readable label, e.g. `lanes K=7 f=256 b=64 L=64`.
+    pub fn label(&self) -> String {
+        let mut s = format!(
+            "{} K={} f={} b={}",
+            self.engine, self.k, self.frame_len, self.batch_frames
+        );
+        if self.lane_width > 1 {
+            let _ = write!(s, " L={}", self.lane_width);
+        }
+        if self.puncture != "none" {
+            let _ = write!(s, " p={}", self.puncture);
+        }
+        s
+    }
+}
+
+/// One workload geometry shared by every engine that measured it (the
+/// grouping unit of `bench rank` and the normalization unit of
+/// `bench diff --normalize`).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ScenarioKey {
+    /// Constraint length K.
+    pub k: u32,
+    /// Mother-code rate label.
+    pub rate: String,
+    /// Puncturing label.
+    pub puncture: String,
+    /// Decoded stages per frame (f).
+    pub frame_len: usize,
+    /// Frames of payload per measured stream.
+    pub batch_frames: usize,
+}
+
+impl ScenarioKey {
+    /// Compact label, e.g. `K=7 f=256 b=64`.
+    pub fn label(&self) -> String {
+        let mut s = format!("K={} f={} b={}", self.k, self.frame_len, self.batch_frames);
+        if self.puncture != "none" {
+            let _ = write!(s, " p={}", self.puncture);
+        }
+        s
+    }
+}
+
+/// Collapse a record list to one measurement per [`MeasureKey`],
+/// **last wins**, preserving first-seen key order. Record files
+/// concatenate across runs (BENCHMARKS.md), so the newest line for a
+/// key is the one a trajectory analysis should see.
+pub fn dedupe_last(records: &[Measurement]) -> Vec<(MeasureKey, Measurement)> {
+    let mut out: Vec<(MeasureKey, Measurement)> = Vec::new();
+    for m in records {
+        let key = MeasureKey::of(m);
+        match out.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, slot)) => *slot = m.clone(),
+            None => out.push((key, m.clone())),
+        }
+    }
+    out
+}
+
+/// Knobs for [`diff`].
+#[derive(Debug, Clone)]
+pub struct DiffOptions {
+    /// Noise threshold, percent: deltas inside ±threshold are
+    /// [`DeltaClass::Unchanged`].
+    pub threshold_pct: f64,
+    /// Score cells relative to this engine's throughput at the same
+    /// scenario *within the same record set* instead of raw Mb/s —
+    /// cancels machine-speed differences for cross-hardware diffs.
+    /// The reference engine must be present at every compared
+    /// scenario in both sets.
+    pub normalize: Option<String>,
+}
+
+impl Default for DiffOptions {
+    fn default() -> DiffOptions {
+        DiffOptions { threshold_pct: DEFAULT_NOISE_PCT, normalize: None }
+    }
+}
+
+/// Classification of one matched cell's throughput delta.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeltaClass {
+    /// Score dropped by more than the noise threshold.
+    Regression,
+    /// Score rose by more than the noise threshold.
+    Improvement,
+    /// Score moved within the noise threshold.
+    Unchanged,
+}
+
+impl DeltaClass {
+    /// Short table label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            DeltaClass::Regression => "REGRESSION",
+            DeltaClass::Improvement => "improved",
+            DeltaClass::Unchanged => "ok",
+        }
+    }
+}
+
+/// One matched cell in a [`DiffReport`].
+#[derive(Debug, Clone)]
+pub struct DiffEntry {
+    /// The cell's identity.
+    pub key: MeasureKey,
+    /// Raw median throughput in the old set, Mb/s.
+    pub old_mbps: f64,
+    /// Raw median throughput in the new set, Mb/s.
+    pub new_mbps: f64,
+    /// The compared score in the old set (raw Mb/s, or the ratio to
+    /// the normalize engine).
+    pub old_score: f64,
+    /// The compared score in the new set.
+    pub new_score: f64,
+    /// `(new_score / old_score − 1) · 100`.
+    pub delta_pct: f64,
+    /// Classification against the noise threshold.
+    pub class: DeltaClass,
+}
+
+/// The aligned comparison of two record sets.
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    /// Matched cells, in the old set's key order.
+    pub entries: Vec<DiffEntry>,
+    /// Keys present only in the new set (new engines/scenarios).
+    pub added: Vec<MeasureKey>,
+    /// Keys present only in the old set (cells the new run skipped —
+    /// not a failure: partial reruns gate only what they measured).
+    pub removed: Vec<MeasureKey>,
+    /// The noise threshold the classification used, percent.
+    pub threshold_pct: f64,
+    /// The normalization engine, if relative scoring was used.
+    pub normalize: Option<String>,
+}
+
+impl DiffReport {
+    /// The matched cells classified as regressions.
+    pub fn regressions(&self) -> Vec<&DiffEntry> {
+        self.entries.iter().filter(|e| e.class == DeltaClass::Regression).collect()
+    }
+
+    /// The matched cells classified as improvements.
+    pub fn improvements(&self) -> Vec<&DiffEntry> {
+        self.entries.iter().filter(|e| e.class == DeltaClass::Improvement).collect()
+    }
+
+    /// Whether any matched cell regressed beyond the threshold (the
+    /// `bench diff` exit-2 condition).
+    pub fn has_regressions(&self) -> bool {
+        self.entries.iter().any(|e| e.class == DeltaClass::Regression)
+    }
+
+    /// Render the aligned table plus a one-line summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        match &self.normalize {
+            Some(engine) => {
+                let _ = writeln!(
+                    out,
+                    "bench diff (scores = Mb/s relative to {engine:?} per scenario, \
+                     noise ±{:.1}%):",
+                    self.threshold_pct
+                );
+            }
+            None => {
+                let _ = writeln!(
+                    out,
+                    "bench diff (scores = raw median Mb/s, noise ±{:.1}%):",
+                    self.threshold_pct
+                );
+            }
+        }
+        let width = self
+            .entries
+            .iter()
+            .map(|e| e.key.label().len())
+            .max()
+            .unwrap_or(8)
+            .max(8);
+        let _ = writeln!(
+            out,
+            "{:<width$} {:>12} {:>12} {:>12} {:>12} {:>9}  {}",
+            "cell", "old Mb/s", "new Mb/s", "old score", "new score", "delta", "class",
+        );
+        for e in &self.entries {
+            let _ = writeln!(
+                out,
+                "{:<width$} {:>12.2} {:>12.2} {:>12.3} {:>12.3} {:>+8.1}%  {}",
+                e.key.label(),
+                e.old_mbps,
+                e.new_mbps,
+                e.old_score,
+                e.new_score,
+                e.delta_pct,
+                e.class.label(),
+            );
+        }
+        for key in &self.added {
+            let _ = writeln!(out, "{:<width$} (only in new set)", key.label());
+        }
+        for key in &self.removed {
+            let _ = writeln!(out, "{:<width$} (only in old set)", key.label());
+        }
+        let _ = writeln!(
+            out,
+            "summary: {} matched, {} regression(s), {} improvement(s), {} added, \
+             {} removed",
+            self.entries.len(),
+            self.regressions().len(),
+            self.improvements().len(),
+            self.added.len(),
+            self.removed.len(),
+        );
+        out
+    }
+}
+
+/// Align `old` and `new` by [`MeasureKey`] and classify every matched
+/// cell's throughput delta against the noise threshold. Errors when a
+/// set is empty, the threshold is not a finite non-negative number, or
+/// normalization is requested and the reference engine is missing (or
+/// measured a non-positive median) at a compared scenario.
+pub fn diff(
+    old: &[Measurement],
+    new: &[Measurement],
+    opts: &DiffOptions,
+) -> Result<DiffReport, String> {
+    if !(opts.threshold_pct.is_finite() && opts.threshold_pct >= 0.0) {
+        return Err(format!("noise threshold must be a non-negative percentage, got {}", opts.threshold_pct));
+    }
+    if old.is_empty() {
+        return Err("old record set is empty".to_string());
+    }
+    if new.is_empty() {
+        return Err("new record set is empty".to_string());
+    }
+    let old_cells = dedupe_last(old);
+    let new_cells = dedupe_last(new);
+
+    let score = |cells: &[(MeasureKey, Measurement)],
+                 key: &MeasureKey,
+                 mbps: f64,
+                 which: &str|
+     -> Result<f64, String> {
+        match &opts.normalize {
+            None => Ok(mbps),
+            Some(reference) => {
+                let scenario = key.scenario();
+                let cell = cells
+                    .iter()
+                    .find(|(k, _)| k.engine == *reference && k.scenario() == scenario)
+                    .ok_or_else(|| {
+                        format!(
+                            "normalize engine {reference:?} has no record at scenario \
+                             {} in the {which} set",
+                            scenario.label()
+                        )
+                    })?;
+                let ref_mbps = cell.1.median_mbps;
+                if !(ref_mbps.is_finite() && ref_mbps > 0.0) {
+                    return Err(format!(
+                        "normalize engine {reference:?} measured a non-positive median \
+                         ({ref_mbps}) at scenario {} in the {which} set",
+                        scenario.label()
+                    ));
+                }
+                Ok(mbps / ref_mbps)
+            }
+        }
+    };
+
+    let mut entries = Vec::new();
+    let mut removed = Vec::new();
+    for (key, old_m) in &old_cells {
+        let Some((_, new_m)) = new_cells.iter().find(|(k, _)| k == key) else {
+            removed.push(key.clone());
+            continue;
+        };
+        let old_score = score(&old_cells, key, old_m.median_mbps, "old")?;
+        let new_score = score(&new_cells, key, new_m.median_mbps, "new")?;
+        if !(old_score.is_finite() && old_score > 0.0) {
+            return Err(format!(
+                "cell {} has a non-positive old score ({old_score}); cannot diff",
+                key.label()
+            ));
+        }
+        let delta_pct = (new_score / old_score - 1.0) * 100.0;
+        let class = if delta_pct < -opts.threshold_pct {
+            DeltaClass::Regression
+        } else if delta_pct > opts.threshold_pct {
+            DeltaClass::Improvement
+        } else {
+            DeltaClass::Unchanged
+        };
+        entries.push(DiffEntry {
+            key: key.clone(),
+            old_mbps: old_m.median_mbps,
+            new_mbps: new_m.median_mbps,
+            old_score,
+            new_score,
+            delta_pct,
+            class,
+        });
+    }
+    let added = new_cells
+        .iter()
+        .filter(|(k, _)| !old_cells.iter().any(|(ok, _)| ok == k))
+        .map(|(k, _)| k.clone())
+        .collect();
+    Ok(DiffReport {
+        entries,
+        added,
+        removed,
+        threshold_pct: opts.threshold_pct,
+        normalize: opts.normalize.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(engine: &str, frame_len: usize, batch: usize, mbps: f64) -> Measurement {
+        Measurement {
+            engine: engine.into(),
+            engine_detail: format!("{engine}(test)"),
+            k: 7,
+            rate: "1/2".into(),
+            puncture: "none".into(),
+            frame_len,
+            batch_frames: batch,
+            stream_bits: frame_len * batch,
+            samples: 5,
+            warmup: 1,
+            threads: 8,
+            lane_width: if engine.starts_with("lanes") { batch.min(64) } else { 1 },
+            median_mbps: mbps,
+            mean_mbps: mbps,
+            stddev_mbps: 0.1,
+            max_mbps: mbps * 1.02,
+            peak_traceback_bytes: 4096,
+            seed: 7,
+            git_rev: "fixture".into(),
+            stage_acs_ns: 1000,
+            stage_traceback_ns: 400,
+            stage_lane_fill_ns: 0,
+            stage_overlap_ns: 0,
+        }
+    }
+
+    #[test]
+    fn keys_align_on_geometry_not_statistics() {
+        let a = m("scalar", 256, 64, 35.0);
+        let mut b = m("scalar", 256, 64, 99.0);
+        b.git_rev = "other".into();
+        b.samples = 9;
+        assert_eq!(MeasureKey::of(&a), MeasureKey::of(&b));
+        let c = m("scalar", 128, 64, 35.0);
+        assert_ne!(MeasureKey::of(&a), MeasureKey::of(&c));
+        assert_eq!(MeasureKey::of(&a).scenario(), MeasureKey::of(&b).scenario());
+        // Scenario drops the engine: same workload across engines.
+        let d = m("unified", 256, 64, 52.0);
+        assert_eq!(MeasureKey::of(&a).scenario(), MeasureKey::of(&d).scenario());
+    }
+
+    #[test]
+    fn dedupe_keeps_the_newest_line_per_key() {
+        let records = vec![m("scalar", 256, 64, 30.0), m("unified", 256, 64, 50.0), m("scalar", 256, 64, 36.0)];
+        let cells = dedupe_last(&records);
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].0.engine, "scalar");
+        assert_eq!(cells[0].1.median_mbps, 36.0, "last wins");
+        assert_eq!(cells[1].0.engine, "unified");
+    }
+
+    #[test]
+    fn diff_classifies_against_the_threshold() {
+        let old = vec![m("scalar", 256, 64, 100.0), m("unified", 256, 64, 200.0), m("lanes", 256, 64, 400.0)];
+        let new = vec![m("scalar", 256, 64, 105.0), m("unified", 256, 64, 150.0), m("lanes", 256, 64, 480.0)];
+        let report = diff(&old, &new, &DiffOptions { threshold_pct: 10.0, normalize: None }).unwrap();
+        assert_eq!(report.entries.len(), 3);
+        assert_eq!(report.entries[0].class, DeltaClass::Unchanged, "+5% is noise");
+        assert_eq!(report.entries[1].class, DeltaClass::Regression, "-25%");
+        assert_eq!(report.entries[2].class, DeltaClass::Improvement, "+20%");
+        assert!(report.has_regressions());
+        assert_eq!(report.regressions().len(), 1);
+        assert_eq!(report.regressions()[0].key.engine, "unified");
+        assert!((report.entries[1].delta_pct + 25.0).abs() < 1e-9);
+        // A wider threshold absorbs the same delta.
+        let lax = diff(&old, &new, &DiffOptions { threshold_pct: 30.0, normalize: None }).unwrap();
+        assert!(!lax.has_regressions());
+    }
+
+    #[test]
+    fn diff_reports_added_and_removed_cells_without_failing() {
+        let old = vec![m("scalar", 256, 64, 100.0), m("parallel", 256, 64, 300.0)];
+        let new = vec![m("scalar", 256, 64, 100.0), m("blocks", 256, 64, 250.0)];
+        let report = diff(&old, &new, &DiffOptions::default()).unwrap();
+        assert_eq!(report.entries.len(), 1);
+        assert_eq!(report.removed.len(), 1);
+        assert_eq!(report.removed[0].engine, "parallel");
+        assert_eq!(report.added.len(), 1);
+        assert_eq!(report.added[0].engine, "blocks");
+        assert!(!report.has_regressions(), "a skipped cell is not a regression");
+    }
+
+    #[test]
+    fn normalized_diff_cancels_machine_speed() {
+        // The "new machine" is uniformly 2x slower, but the engine
+        // ratios are identical: a raw diff screams regression, the
+        // normalized diff is clean.
+        let old = vec![m("scalar", 256, 64, 100.0), m("lanes", 256, 64, 400.0)];
+        let new = vec![m("scalar", 256, 64, 50.0), m("lanes", 256, 64, 200.0)];
+        let raw = diff(&old, &new, &DiffOptions { threshold_pct: 10.0, normalize: None }).unwrap();
+        assert!(raw.has_regressions());
+        let norm = diff(
+            &old,
+            &new,
+            &DiffOptions { threshold_pct: 10.0, normalize: Some("scalar".into()) },
+        )
+        .unwrap();
+        assert!(!norm.has_regressions());
+        let lanes = norm.entries.iter().find(|e| e.key.engine == "lanes").unwrap();
+        assert!((lanes.old_score - 4.0).abs() < 1e-9);
+        assert!((lanes.new_score - 4.0).abs() < 1e-9);
+        // A *relative* regression still shows through normalization.
+        let drifted = vec![m("scalar", 256, 64, 50.0), m("lanes", 256, 64, 100.0)];
+        let caught = diff(
+            &old,
+            &drifted,
+            &DiffOptions { threshold_pct: 10.0, normalize: Some("scalar".into()) },
+        )
+        .unwrap();
+        assert!(caught.has_regressions());
+        assert_eq!(caught.regressions()[0].key.engine, "lanes");
+    }
+
+    #[test]
+    fn normalize_requires_the_reference_engine_everywhere() {
+        let old = vec![m("lanes", 256, 64, 400.0)];
+        let new = vec![m("lanes", 256, 64, 400.0)];
+        let err = diff(
+            &old,
+            &new,
+            &DiffOptions { threshold_pct: 10.0, normalize: Some("scalar".into()) },
+        )
+        .unwrap_err();
+        assert!(err.contains("scalar"), "{err}");
+        assert!(err.contains("no record"), "{err}");
+    }
+
+    #[test]
+    fn diff_rejects_degenerate_inputs() {
+        let set = vec![m("scalar", 256, 64, 100.0)];
+        assert!(diff(&[], &set, &DiffOptions::default()).unwrap_err().contains("old"));
+        assert!(diff(&set, &[], &DiffOptions::default()).unwrap_err().contains("new"));
+        let bad = DiffOptions { threshold_pct: f64::NAN, normalize: None };
+        assert!(diff(&set, &set, &bad).is_err());
+        let neg = DiffOptions { threshold_pct: -1.0, normalize: None };
+        assert!(diff(&set, &set, &neg).is_err());
+    }
+
+    #[test]
+    fn render_is_a_stable_aligned_table() {
+        let old = vec![m("scalar", 256, 64, 100.0), m("lanes", 256, 64, 400.0)];
+        let new = vec![m("scalar", 256, 64, 100.0), m("lanes", 256, 64, 200.0)];
+        let report = diff(&old, &new, &DiffOptions { threshold_pct: 10.0, normalize: None }).unwrap();
+        let text = report.render();
+        assert!(text.contains("noise ±10.0%"), "{text}");
+        assert!(text.contains("lanes K=7 f=256 b=64 L=64"), "{text}");
+        assert!(text.contains("REGRESSION"), "{text}");
+        assert!(text.contains("-50.0%"), "{text}");
+        assert!(text.contains("summary: 2 matched, 1 regression(s), 0 improvement(s)"), "{text}");
+        // Every data row is aligned: same column count under the header.
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.len() >= 4);
+    }
+}

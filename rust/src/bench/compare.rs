@@ -1,0 +1,384 @@
+//! Ranked and side-by-side comparisons over saved bench record sets —
+//! the `bench rank` and `bench cmp` halves of the rebar-style
+//! trajectory tooling (alignment keys and `bench diff` live in
+//! [`super::analysis`]).
+//!
+//! * [`rank`] groups one record set by [`ScenarioKey`], orders engines
+//!   within each scenario by median throughput, and summarizes each
+//!   engine across scenarios with the geometric mean of its
+//!   best-over-engine throughput ratio (rebar's summary statistic:
+//!   1.00 means "always the winner", 4.00 means "4× off the winner on
+//!   a typical scenario"). Geomean, not arithmetic mean, so one
+//!   scenario with a huge ratio can't dominate the summary.
+//! * [`cmp`] lays several labelled record sets side by side per cell,
+//!   including the v3 stage-timing columns, so an ACS-vs-traceback
+//!   shift between revisions is attributable rather than folded into
+//!   a single Mb/s delta.
+
+use std::fmt::Write as _;
+
+use super::analysis::{dedupe_last, MeasureKey, ScenarioKey};
+use super::measurement::Measurement;
+
+/// One engine's standing within a single scenario.
+#[derive(Debug, Clone)]
+pub struct RankRow {
+    /// The measured cell.
+    pub key: MeasureKey,
+    /// Median throughput, Mb/s.
+    pub mbps: f64,
+    /// Scenario winner's throughput over this engine's (1.0 = winner).
+    pub ratio: f64,
+}
+
+/// One scenario's ranking, best engine first.
+#[derive(Debug, Clone)]
+pub struct ScenarioRank {
+    /// The shared workload geometry.
+    pub scenario: ScenarioKey,
+    /// Rows sorted by descending throughput.
+    pub rows: Vec<RankRow>,
+}
+
+/// One engine's cross-scenario summary.
+#[derive(Debug, Clone)]
+pub struct EngineSummary {
+    /// Registry name of the engine.
+    pub engine: String,
+    /// Geometric mean of the engine's winner-over-self ratios across
+    /// the scenarios it measured (1.0 = won everywhere).
+    pub geomean_ratio: f64,
+    /// Scenarios where this engine was fastest.
+    pub wins: usize,
+    /// Scenarios this engine measured.
+    pub scenarios: usize,
+}
+
+/// The full output of `bench rank`.
+#[derive(Debug, Clone)]
+pub struct RankReport {
+    /// Per-scenario rankings, in first-seen scenario order.
+    pub scenarios: Vec<ScenarioRank>,
+    /// Per-engine summaries, best geomean first.
+    pub engines: Vec<EngineSummary>,
+}
+
+impl RankReport {
+    /// Render the per-scenario tables and the engine summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for sr in &self.scenarios {
+            let _ = writeln!(out, "scenario {}:", sr.scenario.label());
+            for row in &sr.rows {
+                let lane = if row.key.lane_width > 1 {
+                    format!(" L={}", row.key.lane_width)
+                } else {
+                    String::new()
+                };
+                let _ = writeln!(
+                    out,
+                    "  {:<12} {:>10.2} Mb/s  {:>6.2}x{}",
+                    row.key.engine, row.mbps, row.ratio, lane,
+                );
+            }
+        }
+        let _ = writeln!(out, "engine summary (geomean of winner/self across scenarios):");
+        for e in &self.engines {
+            let _ = writeln!(
+                out,
+                "  {:<12} {:>6.2}x  ({} win(s) over {} scenario(s))",
+                e.engine, e.geomean_ratio, e.wins, e.scenarios,
+            );
+        }
+        out
+    }
+}
+
+/// Rank engines within each scenario of one record set and summarize
+/// each engine with a geometric-mean ratio across scenarios. Errors on
+/// an empty set or a non-positive median (a ratio would be undefined).
+pub fn rank(records: &[Measurement]) -> Result<RankReport, String> {
+    if records.is_empty() {
+        return Err("record set is empty".to_string());
+    }
+    let cells = dedupe_last(records);
+    for (key, m) in &cells {
+        if !(m.median_mbps.is_finite() && m.median_mbps > 0.0) {
+            return Err(format!(
+                "cell {} has a non-positive median ({}); cannot rank",
+                key.label(),
+                m.median_mbps
+            ));
+        }
+    }
+    let mut scenarios: Vec<ScenarioRank> = Vec::new();
+    for (key, m) in &cells {
+        let scenario = key.scenario();
+        let row = RankRow { key: key.clone(), mbps: m.median_mbps, ratio: 1.0 };
+        match scenarios.iter_mut().find(|sr| sr.scenario == scenario) {
+            Some(sr) => sr.rows.push(row),
+            None => scenarios.push(ScenarioRank { scenario, rows: vec![row] }),
+        }
+    }
+    for sr in &mut scenarios {
+        sr.rows.sort_by(|a, b| b.mbps.partial_cmp(&a.mbps).expect("finite medians"));
+        let best = sr.rows[0].mbps;
+        for row in &mut sr.rows {
+            row.ratio = best / row.mbps;
+        }
+    }
+
+    let mut engines: Vec<EngineSummary> = Vec::new();
+    for sr in &scenarios {
+        for (i, row) in sr.rows.iter().enumerate() {
+            let entry = match engines.iter_mut().find(|e| e.engine == row.key.engine) {
+                Some(e) => e,
+                None => {
+                    engines.push(EngineSummary {
+                        engine: row.key.engine.clone(),
+                        geomean_ratio: 0.0, // accumulates sum of ln(ratio) until finalized
+                        wins: 0,
+                        scenarios: 0,
+                    });
+                    engines.last_mut().expect("just pushed")
+                }
+            };
+            entry.geomean_ratio += row.ratio.ln();
+            entry.scenarios += 1;
+            if i == 0 {
+                entry.wins += 1;
+            }
+        }
+    }
+    for e in &mut engines {
+        e.geomean_ratio = (e.geomean_ratio / e.scenarios as f64).exp();
+    }
+    engines.sort_by(|a, b| {
+        a.geomean_ratio
+            .partial_cmp(&b.geomean_ratio)
+            .expect("finite geomeans")
+            .then_with(|| a.engine.cmp(&b.engine))
+    });
+    Ok(RankReport { scenarios, engines })
+}
+
+/// One cell of a [`CmpReport`]: the same [`MeasureKey`] across every
+/// labelled set (`None` where a set has no record for the key).
+#[derive(Debug, Clone)]
+pub struct CmpRow {
+    /// The cell's identity.
+    pub key: MeasureKey,
+    /// One entry per input set, in input order.
+    pub cells: Vec<Option<Measurement>>,
+}
+
+/// The full output of `bench cmp`.
+#[derive(Debug, Clone)]
+pub struct CmpReport {
+    /// The input sets' labels, in input order.
+    pub labels: Vec<String>,
+    /// Union of keys across sets, in first-seen order.
+    pub rows: Vec<CmpRow>,
+}
+
+impl CmpReport {
+    /// Render the side-by-side table: per set, median Mb/s plus the v3
+    /// ACS / traceback stage timings (µs) when the set recorded them.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let key_width = self.rows.iter().map(|r| r.key.label().len()).max().unwrap_or(8).max(8);
+        let _ = write!(out, "{:<key_width$}", "cell");
+        for label in &self.labels {
+            let _ = write!(out, "  {:>28}", label);
+        }
+        let _ = writeln!(out);
+        let _ = write!(out, "{:<key_width$}", "");
+        for _ in &self.labels {
+            let _ = write!(out, "  {:>28}", "Mb/s  acs-µs  tb-µs");
+        }
+        let _ = writeln!(out);
+        for row in &self.rows {
+            let _ = write!(out, "{:<key_width$}", row.key.label());
+            for cell in &row.cells {
+                match cell {
+                    Some(m) => {
+                        let stages = if m.stage_acs_ns > 0 || m.stage_traceback_ns > 0 {
+                            format!(
+                                "{:>8.1} {:>6.1}",
+                                m.stage_acs_ns as f64 / 1e3,
+                                m.stage_traceback_ns as f64 / 1e3,
+                            )
+                        } else {
+                            format!("{:>8} {:>6}", "-", "-")
+                        };
+                        let _ = write!(out, "  {:>12.2} {stages}", m.median_mbps);
+                    }
+                    None => {
+                        let _ = write!(out, "  {:>28}", "(absent)");
+                    }
+                }
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+}
+
+/// Lay several labelled record sets side by side, aligned by
+/// [`MeasureKey`]. Errors when no sets are given or any set is empty.
+pub fn cmp(sets: &[(String, Vec<Measurement>)]) -> Result<CmpReport, String> {
+    if sets.is_empty() {
+        return Err("no record sets given".to_string());
+    }
+    for (label, records) in sets {
+        if records.is_empty() {
+            return Err(format!("record set {label:?} is empty"));
+        }
+    }
+    let deduped: Vec<Vec<(MeasureKey, Measurement)>> =
+        sets.iter().map(|(_, records)| dedupe_last(records)).collect();
+    let mut rows: Vec<CmpRow> = Vec::new();
+    for cells in &deduped {
+        for (key, _) in cells {
+            if !rows.iter().any(|r| r.key == *key) {
+                rows.push(CmpRow { key: key.clone(), cells: Vec::new() });
+            }
+        }
+    }
+    for row in &mut rows {
+        for cells in &deduped {
+            row.cells.push(cells.iter().find(|(k, _)| k == &row.key).map(|(_, m)| m.clone()));
+        }
+    }
+    Ok(CmpReport { labels: sets.iter().map(|(l, _)| l.clone()).collect(), rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(engine: &str, frame_len: usize, batch: usize, mbps: f64) -> Measurement {
+        Measurement {
+            engine: engine.into(),
+            engine_detail: format!("{engine}(test)"),
+            k: 7,
+            rate: "1/2".into(),
+            puncture: "none".into(),
+            frame_len,
+            batch_frames: batch,
+            stream_bits: frame_len * batch,
+            samples: 5,
+            warmup: 1,
+            threads: 8,
+            lane_width: if engine.starts_with("lanes") { batch.min(64) } else { 1 },
+            median_mbps: mbps,
+            mean_mbps: mbps,
+            stddev_mbps: 0.1,
+            max_mbps: mbps * 1.02,
+            peak_traceback_bytes: 4096,
+            seed: 7,
+            git_rev: "fixture".into(),
+            stage_acs_ns: 1200,
+            stage_traceback_ns: 300,
+            stage_lane_fill_ns: 0,
+            stage_overlap_ns: 0,
+        }
+    }
+
+    #[test]
+    fn rank_orders_within_scenario_and_ratios_anchor_on_the_winner() {
+        let records = vec![
+            m("scalar", 256, 64, 100.0),
+            m("lanes", 256, 64, 400.0),
+            m("unified", 256, 64, 200.0),
+        ];
+        let report = rank(&records).unwrap();
+        assert_eq!(report.scenarios.len(), 1);
+        let rows = &report.scenarios[0].rows;
+        assert_eq!(rows[0].key.engine, "lanes");
+        assert!((rows[0].ratio - 1.0).abs() < 1e-9);
+        assert_eq!(rows[1].key.engine, "unified");
+        assert!((rows[1].ratio - 2.0).abs() < 1e-9);
+        assert_eq!(rows[2].key.engine, "scalar");
+        assert!((rows[2].ratio - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_geomean_summarizes_across_scenarios() {
+        // lanes wins f=256 (2x over scalar) but loses f=32 (scalar 2x
+        // over lanes): both engines geomean to sqrt(1*2) = sqrt(2).
+        let records = vec![
+            m("scalar", 256, 64, 100.0),
+            m("lanes", 256, 64, 200.0),
+            m("scalar", 32, 64, 100.0),
+            m("lanes", 32, 64, 50.0),
+        ];
+        let report = rank(&records).unwrap();
+        assert_eq!(report.scenarios.len(), 2);
+        assert_eq!(report.engines.len(), 2);
+        for e in &report.engines {
+            assert!((e.geomean_ratio - 2.0_f64.sqrt()).abs() < 1e-9, "{e:?}");
+            assert_eq!(e.wins, 1);
+            assert_eq!(e.scenarios, 2);
+        }
+    }
+
+    #[test]
+    fn rank_summary_orders_best_geomean_first() {
+        let records = vec![
+            m("scalar", 256, 64, 100.0),
+            m("lanes", 256, 64, 400.0),
+            m("scalar", 32, 64, 100.0),
+            m("lanes", 32, 64, 300.0),
+        ];
+        let report = rank(&records).unwrap();
+        assert_eq!(report.engines[0].engine, "lanes");
+        assert!((report.engines[0].geomean_ratio - 1.0).abs() < 1e-9);
+        assert_eq!(report.engines[0].wins, 2);
+        assert_eq!(report.engines[1].engine, "scalar");
+        assert!(report.engines[1].geomean_ratio > 3.0);
+    }
+
+    #[test]
+    fn rank_rejects_empty_and_non_positive() {
+        assert!(rank(&[]).is_err());
+        let bad = vec![m("scalar", 256, 64, 0.0)];
+        assert!(rank(&bad).unwrap_err().contains("non-positive"));
+    }
+
+    #[test]
+    fn rank_render_mentions_every_engine_and_the_summary() {
+        let records = vec![m("scalar", 256, 64, 100.0), m("lanes", 256, 64, 400.0)];
+        let text = rank(&records).unwrap().render();
+        assert!(text.contains("scenario K=7 f=256 b=64"), "{text}");
+        assert!(text.contains("lanes"), "{text}");
+        assert!(text.contains("4.00x"), "{text}");
+        assert!(text.contains("engine summary"), "{text}");
+    }
+
+    #[test]
+    fn cmp_aligns_cells_and_marks_absences() {
+        let a = vec![m("scalar", 256, 64, 100.0), m("parallel", 256, 64, 300.0)];
+        let b = vec![m("scalar", 256, 64, 110.0), m("blocks", 256, 64, 250.0)];
+        let report =
+            cmp(&[("old".to_string(), a), ("new".to_string(), b)]).unwrap();
+        assert_eq!(report.labels, vec!["old", "new"]);
+        assert_eq!(report.rows.len(), 3);
+        let scalar = report.rows.iter().find(|r| r.key.engine == "scalar").unwrap();
+        assert!(scalar.cells[0].is_some() && scalar.cells[1].is_some());
+        let par = report.rows.iter().find(|r| r.key.engine == "parallel").unwrap();
+        assert!(par.cells[0].is_some() && par.cells[1].is_none());
+        let text = report.render();
+        assert!(text.contains("(absent)"), "{text}");
+        assert!(text.contains("acs-µs"), "{text}");
+        // Stage nanoseconds render as microseconds: 1200ns = 1.2µs.
+        assert!(text.contains("1.2"), "{text}");
+    }
+
+    #[test]
+    fn cmp_rejects_empty_inputs() {
+        assert!(cmp(&[]).is_err());
+        let err = cmp(&[("x".to_string(), vec![])]).unwrap_err();
+        assert!(err.contains("\"x\""), "{err}");
+    }
+}

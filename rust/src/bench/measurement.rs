@@ -191,21 +191,66 @@ pub fn write_jsonl(path: &Path, records: &[Measurement]) -> std::io::Result<()> 
     Ok(())
 }
 
-/// Read a line-delimited `BENCH_*.json` file back into records. Blank
-/// lines are skipped; any malformed line aborts with its line number.
-pub fn read_jsonl(path: &Path) -> Result<Vec<Measurement>, String> {
+/// What [`read_jsonl_lenient`] found in one `BENCH_*.jsonl` file: the
+/// current-schema records plus a count of superseded-schema lines it
+/// skipped (so callers can surface the loss instead of silently
+/// shrinking the trajectory).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReadOutcome {
+    /// Records that parsed under the current [`SCHEMA_VERSION`].
+    pub records: Vec<Measurement>,
+    /// Lines carrying an older `viterbi-bench/N` tag (v1/v2), skipped.
+    pub skipped_old: usize,
+}
+
+/// Schema versions this reader recognizes as *superseded*: their lines
+/// are skipped (the trajectory predates the columns we need) rather
+/// than treated as corruption. Anything else that isn't the current
+/// version — future versions, foreign harnesses — still errors loudly.
+const SUPERSEDED_SCHEMAS: [&str; 2] = ["viterbi-bench/1", "viterbi-bench/2"];
+
+/// Read a line-delimited `BENCH_*.json` file back into current-schema
+/// records, skipping (and counting) lines written under superseded
+/// schema versions. Record directories accumulate across PRs, so old
+/// files legitimately mix v1/v2 lines with v3 ones; a future or
+/// foreign schema tag, malformed JSON, or a missing field still aborts
+/// with its line number.
+pub fn read_jsonl_lenient(path: &Path) -> Result<ReadOutcome, String> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| format!("reading {}: {e}", path.display()))?;
-    let mut out = Vec::new();
+    let mut records = Vec::new();
+    let mut skipped_old = 0;
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() {
             continue;
         }
         let j = Json::parse(line).map_err(|e| format!("line {}: {e}", lineno + 1))?;
-        out.push(Measurement::from_json(&j).map_err(|e| format!("line {}: {e}", lineno + 1))?);
+        let schema = j.get("schema").and_then(Json::as_str).unwrap_or("");
+        if SUPERSEDED_SCHEMAS.contains(&schema) {
+            skipped_old += 1;
+            continue;
+        }
+        records
+            .push(Measurement::from_json(&j).map_err(|e| format!("line {}: {e}", lineno + 1))?);
     }
-    Ok(out)
+    Ok(ReadOutcome { records, skipped_old })
+}
+
+/// Read a line-delimited `BENCH_*.json` file back into records,
+/// warning on stderr when superseded-schema (v1/v2) lines were
+/// skipped. See [`read_jsonl_lenient`] for the skip rules.
+pub fn read_jsonl(path: &Path) -> Result<Vec<Measurement>, String> {
+    let outcome = read_jsonl_lenient(path)?;
+    if outcome.skipped_old > 0 {
+        eprintln!(
+            "warning: {}: skipped {} record(s) from superseded bench schemas \
+             (this harness reads {SCHEMA_VERSION:?})",
+            path.display(),
+            outcome.skipped_old
+        );
+    }
+    Ok(outcome.records)
 }
 
 #[cfg(test)]
@@ -306,6 +351,56 @@ mod tests {
         m.seed = (1u64 << 53) + 1;
         let back = Measurement::from_json(&Json::parse(&m.to_json().render()).unwrap()).unwrap();
         assert_eq!(back.seed, m.seed);
+    }
+
+    #[test]
+    fn mixed_schema_file_skips_superseded_lines_and_counts_them() {
+        // A record directory accumulated across PRs: one v1 line (no
+        // lane_width), one v2 line (no git_rev/stage columns), two
+        // current lines, and a blank line. Only the current lines load;
+        // the superseded ones are counted, not fatal.
+        let v1 = r#"{"schema":"viterbi-bench/1","engine":"scalar","median_mbps":10.0}"#;
+        let v2 = r#"{"schema":"viterbi-bench/2","engine":"scalar","lane_width":1,"median_mbps":11.0}"#;
+        let mut a = sample();
+        a.engine = "scalar".into();
+        let b = sample();
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("BENCH_mixed_{}.jsonl", std::process::id()));
+        let body = format!(
+            "{v1}\n{v2}\n{}\n\n{}\n",
+            a.to_json().render(),
+            b.to_json().render()
+        );
+        std::fs::write(&path, body).unwrap();
+        let outcome = read_jsonl_lenient(&path).unwrap();
+        assert_eq!(outcome.skipped_old, 2);
+        assert_eq!(outcome.records, vec![a.clone(), b.clone()]);
+        // The warning wrapper returns the same records.
+        assert_eq!(read_jsonl(&path).unwrap(), vec![a, b]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn future_and_foreign_schemas_still_error() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("BENCH_future_{}.jsonl", std::process::id()));
+        // A future v4 line must abort: silently dropping it would make
+        // a trajectory diff lie about coverage.
+        let mut v4 = sample().to_json();
+        if let Json::Obj(fields) = &mut v4 {
+            fields[0].1 = Json::str("viterbi-bench/4");
+        }
+        std::fs::write(&path, format!("{}\n", v4.render())).unwrap();
+        let err = read_jsonl_lenient(&path).unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(err.contains("unsupported schema"), "{err}");
+        // A foreign harness tag errors the same way.
+        std::fs::write(&path, "{\"schema\":\"other-harness/9\"}\n").unwrap();
+        assert!(read_jsonl_lenient(&path).is_err());
+        // Malformed JSON is still corruption, not a skip.
+        std::fs::write(&path, "{not json\n").unwrap();
+        assert!(read_jsonl_lenient(&path).unwrap_err().contains("line 1"));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -16,14 +16,26 @@
 //!   (`viterbi::registry`) over a declarative [`scenario`] matrix and
 //!   produces the records. The `bench` CLI subcommand
 //!   (`viterbi-repro bench`) is a thin wrapper over this module.
+//! * [`analysis`] / [`compare`] — the perf-trajectory readers: align
+//!   saved record sets by measurement key and power the `bench diff`
+//!   (no-regression gate), `bench rank` (per-scenario standings with
+//!   geomean summaries) and `bench cmp` (side-by-side with stage
+//!   timings) subcommands.
 //!
 //! Every future perf PR is judged against the `BENCH_*.json` baselines
-//! this subsystem emits (ROADMAP "fast as the hardware allows").
+//! this subsystem emits (ROADMAP "fast as the hardware allows");
+//! `scripts/check_bench_diff.sh` turns that judgment into a CI gate.
 
+pub mod analysis;
+pub mod compare;
 pub mod measurement;
 pub mod runner;
 pub mod scenario;
 
-pub use measurement::{read_jsonl, write_jsonl, Measurement, SCHEMA_VERSION};
+pub use analysis::{diff, DeltaClass, DiffOptions, DiffReport, MeasureKey, ScenarioKey};
+pub use compare::{cmp, rank, CmpReport, RankReport};
+pub use measurement::{
+    read_jsonl, read_jsonl_lenient, write_jsonl, Measurement, ReadOutcome, SCHEMA_VERSION,
+};
 pub use runner::{run_matrix, run_scenario, BenchOptions};
 pub use scenario::{matrix, parse_engines, parse_frame_lens, Scenario};

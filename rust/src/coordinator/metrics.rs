@@ -516,4 +516,85 @@ mod tests {
         let empty = Json::parse(&Metrics::new().snapshot().render_json()).unwrap();
         assert!(matches!(empty.get("stage_timings"), Some(Json::Null)));
     }
+
+    #[test]
+    fn render_json_round_trips_every_error_variant() {
+        use crate::viterbi::{OutputMode, StreamEnd};
+        let m = Metrics::new();
+        // Count variant i exactly i+1 times so a transposed counter
+        // cannot pass.
+        let variants: Vec<DecodeError> = vec![
+            DecodeError::LlrLengthMismatch { expected: 8, got: 7 },
+            DecodeError::UnsupportedOutput { engine: "hard".into(), mode: OutputMode::Soft },
+            DecodeError::InvalidRequest { reason: "payload not a multiple of beta".into() },
+            DecodeError::Backend { reason: "executor died".into() },
+            DecodeError::UnsupportedStreamEnd {
+                engine: "scalar".into(),
+                end: StreamEnd::TailBiting,
+            },
+        ];
+        for (i, e) in variants.iter().enumerate() {
+            for _ in 0..=i {
+                m.on_error(e);
+            }
+        }
+        let snap = m.snapshot();
+        let j = Json::parse(&snap.render_json()).expect("valid JSON");
+        assert_eq!(j.get("errors").and_then(Json::as_f64), Some(15.0));
+        let kinds = j.get("error_kinds").expect("error_kinds object");
+        let expected = [
+            ("llr-length-mismatch", 1.0),
+            ("unsupported-output", 2.0),
+            ("invalid-request", 3.0),
+            ("backend", 4.0),
+            ("unsupported-stream-end", 5.0),
+        ];
+        for (kind, n) in expected {
+            assert_eq!(kinds.get(kind).and_then(Json::as_f64), Some(n), "variant {kind}");
+            assert_eq!(snap.errors_of(kind) as f64, n, "snapshot agrees for {kind}");
+        }
+        // Exactly the five variants — no stray keys, none dropped.
+        match kinds {
+            Json::Obj(fields) => assert_eq!(fields.len(), 5, "{fields:?}"),
+            other => panic!("error_kinds is not an object: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn render_json_round_trips_route_histograms() {
+        let m = Metrics::new();
+        // Three routes with distinct shapes: counters, quantiles, and
+        // the decayed average must all survive the JSON round trip.
+        for _ in 0..8 {
+            m.on_route_decode("lanes", 2_000_000, 64);
+        }
+        for _ in 0..4 {
+            m.on_route_decode("blocks", 9_000_000, 54);
+        }
+        m.on_route_decode("unified", 500_000, 1);
+        let snap = m.snapshot();
+        let j = Json::parse(&snap.render_json()).expect("valid JSON");
+        let routes = j.get("routes").and_then(Json::as_arr).expect("routes array");
+        assert_eq!(routes.len(), 3);
+        let expected = [("lanes", 8.0, 512.0), ("blocks", 4.0, 216.0), ("unified", 1.0, 1.0)];
+        for (r, (name, batches, frames)) in routes.iter().zip(expected) {
+            assert_eq!(r.get("route").and_then(Json::as_str), Some(name));
+            assert_eq!(r.get("batches").and_then(Json::as_f64), Some(batches));
+            assert_eq!(r.get("frames").and_then(Json::as_f64), Some(frames));
+            let view = snap.route(name).expect("route in snapshot");
+            for (field, dur) in [
+                ("p50_ns", view.p50),
+                ("p99_ns", view.p99),
+                ("ewma_ns", view.ewma),
+            ] {
+                let got = r.get(field).and_then(Json::as_f64).expect(field);
+                assert!(got > 0.0, "{name}.{field}");
+                assert_eq!(got, dur.as_nanos() as f64, "{name}.{field}");
+            }
+        }
+        // The p50s keep their ordering through serialization: blocks is
+        // the slow route, unified the fast one.
+        let p50 = |i: usize| routes[i].get("p50_ns").and_then(Json::as_f64).unwrap();
+        assert!(p50(1) > p50(0) && p50(0) > p50(2), "{} {} {}", p50(1), p50(0), p50(2));
+    }
 }

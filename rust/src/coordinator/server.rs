@@ -66,6 +66,10 @@ enum PumpMsg {
 
 enum ExecMsg {
     Batch(Batch),
+    /// Persist the backend's observed-route drift signal to the path
+    /// and answer on the reply channel (the backend lives only on the
+    /// executor thread, so persistence must run there).
+    Persist(std::path::PathBuf, mpsc::Sender<Result<usize, String>>),
     Shutdown,
 }
 
@@ -85,6 +89,7 @@ pub struct DecodeServer {
     reassembler: Arc<Mutex<Reassembler>>,
     pump: Option<std::thread::JoinHandle<()>>,
     executor: Option<std::thread::JoinHandle<Result<()>>>,
+    exec_tx: mpsc::Sender<ExecMsg>,
     backend_name: Arc<Mutex<String>>,
     backend_label: &'static str,
     soft_capable: bool,
@@ -127,6 +132,14 @@ impl DecodeServer {
                     while let Ok(msg) = exec_rx.recv() {
                         let batch = match msg {
                             ExecMsg::Batch(b) => b,
+                            ExecMsg::Persist(path, reply) => {
+                                let _ = reply.send(
+                                    backend
+                                        .persist_observed(&path)
+                                        .map_err(|e| format!("{e:#}")),
+                                );
+                                continue;
+                            }
                             ExecMsg::Shutdown => break,
                         };
                         let n = batch.jobs.len();
@@ -201,6 +214,7 @@ impl DecodeServer {
         };
 
         // Pump thread: batching state machine driven by the job channel.
+        let persist_tx = exec_tx.clone();
         let pump = {
             let policy = cfg.batch;
             std::thread::Builder::new()
@@ -250,6 +264,7 @@ impl DecodeServer {
             reassembler,
             pump: Some(pump),
             executor: Some(executor),
+            exec_tx: persist_tx,
             backend_name,
             backend_label: cfg.backend.label(),
             soft_capable: cfg.backend.supports_soft(),
@@ -276,6 +291,24 @@ impl DecodeServer {
     /// Frames admitted and not yet decoded.
     pub fn in_flight_frames(&self) -> usize {
         self.gate.in_flight()
+    }
+
+    /// Persist the backend's observed per-route throughput EWMAs to a
+    /// sidecar JSONL at `path`, returning how many routes were written.
+    ///
+    /// The backend lives on the executor thread, so the request is
+    /// relayed there and this call blocks until it is served (queued
+    /// batches ahead of it drain first). Only the adaptive `auto`
+    /// backend accumulates route observations; every other backend
+    /// answers with an error.
+    pub fn save_observed(&self, path: &std::path::Path) -> Result<usize, String> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.exec_tx
+            .send(ExecMsg::Persist(path.to_path_buf(), reply_tx))
+            .map_err(|_| "executor thread is gone".to_string())?;
+        reply_rx
+            .recv()
+            .map_err(|_| "executor thread dropped the persist request".to_string())?
     }
 
     /// Submit a hard-output decode request (non-blocking admission).
@@ -694,6 +727,42 @@ mod tests {
         let routed: u64 = m.routes.iter().map(|r| r.frames).sum();
         assert_eq!(routed, m.frames, "{:?}", m.routes);
         assert!(m.render_json().contains("\"routes\""));
+    }
+
+    #[test]
+    fn save_observed_persists_auto_route_ewmas() {
+        let server = DecodeServer::start(ServerConfig {
+            backend: BackendSpec::Auto {
+                spec: CodeSpec::standard_k5(),
+                geo: FrameGeometry::new(32, 8, 12),
+                f0: 8,
+                threads: 1,
+                budget_bytes: None,
+                profile: None,
+            },
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            high_watermark: 256,
+            low_watermark: 64,
+        })
+        .unwrap();
+        let (bits, llrs) = noiseless_request(95, 100);
+        assert_eq!(server.decode_blocking(llrs, StreamEnd::Truncated).unwrap().bits, bits);
+        let path = std::env::temp_dir()
+            .join(format!("OBSERVED_server_{}.jsonl", std::process::id()));
+        let n = server.save_observed(&path).expect("auto backend persists observations");
+        assert!(n >= 1, "at least one route was exercised");
+        let routes = crate::tuner::observed::read_jsonl(&path).unwrap();
+        assert_eq!(routes.len(), n);
+        assert!(routes.iter().all(|r| r.mbps > 0.0), "{routes:?}");
+        let _ = std::fs::remove_file(&path);
+
+        // Every non-adaptive backend refuses: there is no drift signal
+        // to save, and silently writing an empty sidecar would mask
+        // a misconfigured deployment.
+        let native = native_server(1);
+        let err = native.save_observed(&path).unwrap_err();
+        assert!(err.contains("no route observations"), "{err}");
+        assert!(!path.exists(), "refusal must not create the file");
     }
 
     #[test]

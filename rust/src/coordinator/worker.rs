@@ -253,6 +253,19 @@ pub trait BatchDecoder {
     fn take_route_observations(&mut self) -> Vec<RouteObservation> {
         Vec::new()
     }
+    /// Persist the backend's per-route throughput drift signal (the
+    /// planner's observed EWMAs) to an observed-route sidecar at
+    /// `path` (`tuner::observed`); returns the number of routes
+    /// written. Persistence is explicit (`DecodeServer::save_observed`
+    /// / `serve --save-observed`), never automatic on shutdown —
+    /// backends without a drift signal answer with an error.
+    fn persist_observed(&self, path: &std::path::Path) -> Result<usize> {
+        Err(anyhow!(
+            "backend {} has no route observations to persist to {}",
+            self.name(),
+            path.display()
+        ))
+    }
 }
 
 /// One routed batch execution, reported by adaptive backends so the
@@ -932,6 +945,10 @@ impl BatchDecoder for AutoBatchDecoder {
 
     fn take_route_observations(&mut self) -> Vec<RouteObservation> {
         std::mem::take(&mut self.observations)
+    }
+
+    fn persist_observed(&self, path: &std::path::Path) -> Result<usize> {
+        self.planner.save_observed(path).map_err(|e| anyhow!(e))
     }
 }
 

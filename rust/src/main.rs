@@ -4,6 +4,7 @@
 //! viterbi-repro list                         list experiments
 //! viterbi-repro exp <id|all> [--full] [--out DIR] [--threads N]
 //! viterbi-repro bench [--engines E,..|all] [--frames N] [--out FILE]
+//! viterbi-repro bench diff|rank|cmp <records...>  perf-trajectory analysis
 //! viterbi-repro tune [--smoke] [--ks K,..] [--out FILE]  calibrate the engine family
 //! viterbi-repro ber [--ebn0 DB] [--bits N] [--engine E]
 //! viterbi-repro demo [--bits N] [--ebn0 DB]  encode→channel→decode roundtrip
@@ -71,6 +72,9 @@ USAGE:
   viterbi-repro bench [--engines E,..|all] [--frames N] [--frame-lens F,..]
                       [--samples S] [--threads N] [--lanes L] [--seed S]
                       [--k K] [--tail-biting] [--stage-timings] [--out FILE] [--list]
+  viterbi-repro bench diff <old.jsonl> <new.jsonl> [--threshold PCT] [--normalize ENGINE]
+  viterbi-repro bench rank <records.jsonl...>
+  viterbi-repro bench cmp <records.jsonl...>
   viterbi-repro tune [--smoke] [--ks K,..] [--frame-lens F,..] [--batches B,..]
                      [--engines E,..] [--samples S] [--warmup W] [--threads N]
                      [--lanes L] [--seed S] [--out FILE]
@@ -79,13 +83,23 @@ USAGE:
   viterbi-repro demo [--bits N] [--ebn0 DB]
   viterbi-repro serve [--requests N] [--backend pjrt|native|auto]
                       [--artifact NAME] [--profile FILE] [--metrics-every N]
+                      [--save-observed FILE]
   viterbi-repro trace [--stages N] [--engine E] [--seed S] [--out FILE]
   viterbi-repro info
 
 The bench subcommand runs any subset of the engine registry over a
 frame-length matrix and writes one line-delimited JSON record per
 cell to FILE (default BENCH_run.json, overwritten each run — use
---out for named baselines); see BENCHMARKS.md. The tune subcommand
+--out for named baselines); see BENCHMARKS.md. The trajectory
+subcommands read those records back: `bench diff` aligns two sets by
+measurement key and classifies each cell against a noise threshold
+(default ±10%; --normalize ENGINE scores relative to that engine per
+scenario, cancelling machine speed for cross-hardware diffs) — exit
+status 0 = clean, 1 = operational error, 2 = regression, the
+contract scripts/check_bench_diff.sh gates CI on; `bench rank`
+orders engines per scenario with geometric-mean speedup summaries;
+`bench cmp` lays sets side by side with the v3 ACS/traceback stage
+columns. The tune subcommand
 sweeps the bit-exact dispatch candidates over a (K × frame length ×
 batch width) grid and writes a calibration profile (default
 calibration/profile.jsonl) that the `auto` engine and the serve
@@ -97,7 +111,11 @@ layer fully on, validates the span stream (balanced begin/end,
 stage timings consistent with the wall clock), and writes Chrome
 trace-event JSONL to FILE (default trace.json) for chrome://tracing
 or Perfetto. serve --metrics-every N prints a MetricsSnapshot JSON
-line after every N completed responses.
+line after every N completed responses. serve --save-observed FILE
+persists the auto backend's measured per-route throughput EWMAs to
+FILE after the run; write to the profile's `*.observed.jsonl` sidecar
+(see `tuner::observed::sidecar_path`) and the next planner built from
+that profile reloads the drift signal automatically.
 ";
 
 fn cmd_list() -> Result<()> {
@@ -123,6 +141,14 @@ fn cmd_exp(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
+    // Trajectory-analysis subcommands read saved record files; they
+    // take their own flags, so dispatch before check_known.
+    match args.pos(1) {
+        Some("diff") => return cmd_bench_diff(args),
+        Some("rank") => return cmd_bench_rank(args),
+        Some("cmp") => return cmd_bench_cmp(args),
+        _ => {}
+    }
     args.check_known(&[
         "engines", "frames", "frame-lens", "samples", "warmup", "threads", "seed", "out",
         "list", "v1", "v2", "f0", "delay", "lanes", "k", "tail-biting", "stage-timings",
@@ -223,6 +249,81 @@ fn cmd_bench(args: &Args) -> Result<()> {
         out_path.display(),
         viterbi::bench::SCHEMA_VERSION
     );
+    Ok(())
+}
+
+/// Load one record file for trajectory analysis, surfacing skipped
+/// superseded-schema lines on stderr (via `bench::read_jsonl`).
+fn load_records(path: &str) -> Result<Vec<viterbi::bench::Measurement>> {
+    bench::read_jsonl(std::path::Path::new(path)).map_err(|e| anyhow!(e))
+}
+
+/// Label for one record set in `rank`/`cmp` output: the file stem
+/// (`bench/records/BENCH_baseline.jsonl` → `BENCH_baseline`).
+fn record_label(path: &str) -> String {
+    std::path::Path::new(path)
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| path.to_string())
+}
+
+/// `bench diff <old> <new>`: align two record sets by measurement key
+/// and classify every matched cell against the noise threshold.
+/// Exit status: 0 clean, 1 operational error, 2 regression detected —
+/// the machine-readable contract `scripts/check_bench_diff.sh` gates on.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    args.check_known(&["threshold", "normalize"])?;
+    let (old_path, new_path) = match (args.pos(2), args.pos(3)) {
+        (Some(old), Some(new)) if args.pos(4).is_none() => (old, new),
+        _ => bail!("usage: bench diff <old.jsonl> <new.jsonl> [--threshold PCT] [--normalize ENGINE]"),
+    };
+    let opts = viterbi::bench::DiffOptions {
+        threshold_pct: args.get_f64("threshold", viterbi::bench::analysis::DEFAULT_NOISE_PCT)?,
+        normalize: args.get("normalize").map(str::to_string),
+    };
+    let old = load_records(old_path)?;
+    let new = load_records(new_path)?;
+    let report = viterbi::bench::diff(&old, &new, &opts).map_err(|e| anyhow!(e))?;
+    print!("{}", report.render());
+    if report.has_regressions() {
+        std::process::exit(2);
+    }
+    Ok(())
+}
+
+/// `bench rank <records...>`: engines ranked per scenario with
+/// geometric-mean speedup summaries (rebar-style). Several files
+/// concatenate into one set before ranking (last record per key wins).
+fn cmd_bench_rank(args: &Args) -> Result<()> {
+    args.check_known(&[])?;
+    let paths = &args.positional()[2..];
+    if paths.is_empty() {
+        bail!("usage: bench rank <records.jsonl...>");
+    }
+    let mut records = Vec::new();
+    for path in paths {
+        records.extend(load_records(path)?);
+    }
+    let report = viterbi::bench::rank(&records).map_err(|e| anyhow!(e))?;
+    print!("{}", report.render());
+    Ok(())
+}
+
+/// `bench cmp <records...>`: side-by-side table of several record
+/// sets, including the v3 stage-timing columns so ACS-vs-traceback
+/// shifts are attributable across revisions.
+fn cmd_bench_cmp(args: &Args) -> Result<()> {
+    args.check_known(&[])?;
+    let paths = &args.positional()[2..];
+    if paths.is_empty() {
+        bail!("usage: bench cmp <records.jsonl...>");
+    }
+    let mut sets = Vec::new();
+    for path in paths {
+        sets.push((record_label(path), load_records(path)?));
+    }
+    let report = viterbi::bench::cmp(&sets).map_err(|e| anyhow!(e))?;
+    print!("{}", report.render());
     Ok(())
 }
 
@@ -510,7 +611,7 @@ fn cmd_demo(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.check_known(&[
         "requests", "backend", "artifact", "bits", "batch-wait-us", "threads", "seed",
-        "profile", "metrics-every",
+        "profile", "metrics-every", "save-observed",
     ])?;
     let requests = args.get_usize("requests", 64)?;
     // 0 = only the final summary line; N > 0 prints a MetricsSnapshot
@@ -586,6 +687,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         total_errors as f64 / total_bits as f64,
     );
     println!("metrics: {}", server.metrics().render());
+    if let Some(out) = args.get("save-observed") {
+        let out = std::path::PathBuf::from(out);
+        let n = server
+            .save_observed(&out)
+            .map_err(|e| anyhow!("saving observed routes: {e}"))?;
+        println!("saved {n} observed route(s) to {}", out.display());
+    }
     Ok(())
 }
 

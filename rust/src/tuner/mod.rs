@@ -22,7 +22,12 @@
 //!   the shared `Engine` interface; the coordinator's
 //!   `BackendSpec::Auto` routes every dynamic batch through the same
 //!   planner (uniform lane-groupable batches to the lane engines,
-//!   ragged ones to `parallel`/`unified`).
+//!   ragged ones to `parallel`/`unified`);
+//! * [`observed`] — the persisted drift signal: the planner's measured
+//!   per-route throughput EWMAs save to an `*.observed.jsonl` sidecar
+//!   next to the profile (explicitly — `serve --save-observed` or
+//!   `DecodeServer::save_observed`) and reload at planner
+//!   construction, so drift-driven route flips survive restarts.
 //!
 //! All dispatch candidates decode bit-exactly identically, so routing
 //! is a pure performance decision; `rust/tests/tuner_props.rs` pins
@@ -33,11 +38,13 @@
 
 pub mod auto;
 pub mod calibrate;
+pub mod observed;
 pub mod planner;
 pub mod profile;
 
 pub use auto::AutoEngine;
 pub use calibrate::{run_calibration, CalibrationGrid};
+pub use observed::{sidecar_path, ObservedRoute, OBSERVED_SCHEMA_VERSION};
 pub use planner::{
     parse_batches, parse_ks, Choice, JobShape, Planner, PlannerConfig, BLOCKS_STREAM_MIN,
     BUDGET_ENV, DEFAULT_BUDGET_BYTES, DISPATCH_CANDIDATES, LANE_BATCH_MIN, PROFILE_ENV,

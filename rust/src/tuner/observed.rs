@@ -1,0 +1,163 @@
+//! Persisted route observations — the sidecar JSONL that carries the
+//! planner's measured per-route throughput EWMAs across process
+//! restarts.
+//!
+//! [`crate::tuner::Planner::observe`] accumulates a decayed per-route
+//! throughput signal from the adaptive backend's routed executions,
+//! and [`Planner::rank`](crate::tuner::Planner::rank) blends it into
+//! the calibrated scores so production drift can flip a dispatch
+//! decision. Without persistence that drift signal dies with the
+//! process and the next restart re-routes on the stale profile until
+//! it re-learns the degradation. The sidecar closes the loop:
+//!
+//! * [`sidecar_path`] — the convention: observations live next to the
+//!   calibration profile they amend (`calibration/baseline.jsonl` →
+//!   `calibration/baseline.observed.jsonl`), so a profile and its
+//!   drift history travel together.
+//! * [`ObservedRoute`] — one route's decayed Mb/s, schema-tagged
+//!   (`viterbi-observed/1`) line-delimited JSON like every other
+//!   persisted record in this repo.
+//! * Saving is **explicit** (`serve --save-observed`, or
+//!   `DecodeServer::save_observed`): an automatic save-on-shutdown
+//!   would write sidecars during every test run and silently couple
+//!   runs to each other. Loading is automatic at planner
+//!   construction ([`Planner::load`] /
+//!   [`Planner::load_default`](crate::tuner::Planner::load_default))
+//!   whenever the sidecar exists.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{Json, ObjBuilder};
+
+/// Schema tag stamped into every observed-route record.
+pub const OBSERVED_SCHEMA_VERSION: &str = "viterbi-observed/1";
+
+/// One persisted route observation: the decayed measured throughput of
+/// a dispatch route at save time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObservedRoute {
+    /// Registry name of the routed engine.
+    pub route: String,
+    /// Decayed payload throughput, Mbit/s.
+    pub mbps: f64,
+}
+
+impl ObservedRoute {
+    /// Serialize to one JSON object (one sidecar line).
+    pub fn to_json(&self) -> Json {
+        ObjBuilder::new()
+            .str("schema", OBSERVED_SCHEMA_VERSION)
+            .str("route", &self.route)
+            .num("mbps", self.mbps)
+            .build()
+    }
+
+    /// Deserialize from a parsed JSON object, validating the schema
+    /// tag and every field.
+    pub fn from_json(j: &Json) -> Result<ObservedRoute, String> {
+        let schema = j
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "missing or non-string field \"schema\"".to_string())?;
+        if schema != OBSERVED_SCHEMA_VERSION {
+            return Err(format!(
+                "unsupported schema {schema:?} (this harness reads {OBSERVED_SCHEMA_VERSION:?})"
+            ));
+        }
+        let route = j
+            .get("route")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| "missing or non-string field \"route\"".to_string())?;
+        let mbps = j
+            .get("mbps")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| "missing or non-numeric field \"mbps\"".to_string())?;
+        if !(mbps.is_finite() && mbps > 0.0) {
+            return Err(format!("route {route:?} has a non-positive mbps ({mbps})"));
+        }
+        Ok(ObservedRoute { route, mbps })
+    }
+}
+
+/// The sidecar path for a calibration profile:
+/// `<dir>/<stem>.observed.jsonl` next to the profile file.
+pub fn sidecar_path(profile: &Path) -> PathBuf {
+    let stem = profile
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "profile".to_string());
+    profile.with_file_name(format!("{stem}.observed.jsonl"))
+}
+
+/// Write route observations as line-delimited JSON (one per line).
+pub fn write_jsonl(path: &Path, routes: &[ObservedRoute]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    for r in routes {
+        writeln!(f, "{}", r.to_json().render())?;
+    }
+    Ok(())
+}
+
+/// Read a sidecar back. Blank lines are skipped; any malformed line
+/// aborts with its line number.
+pub fn read_jsonl(path: &Path) -> Result<Vec<ObservedRoute>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading {}: {e}", path.display()))?;
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        out.push(
+            ObservedRoute::from_json(&j).map_err(|e| format!("line {}: {e}", lineno + 1))?,
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sidecar_sits_next_to_the_profile() {
+        assert_eq!(
+            sidecar_path(Path::new("calibration/baseline.jsonl")),
+            PathBuf::from("calibration/baseline.observed.jsonl")
+        );
+        assert_eq!(
+            sidecar_path(Path::new("profile.jsonl")),
+            PathBuf::from("profile.observed.jsonl")
+        );
+    }
+
+    #[test]
+    fn json_roundtrip_and_validation() {
+        let r = ObservedRoute { route: "lanes-mt".into(), mbps: 312.5 };
+        let back = ObservedRoute::from_json(&Json::parse(&r.to_json().render()).unwrap()).unwrap();
+        assert_eq!(back, r);
+        let wrong =
+            Json::parse(r#"{"schema":"viterbi-observed/9","route":"lanes","mbps":1.0}"#).unwrap();
+        assert!(ObservedRoute::from_json(&wrong).unwrap_err().contains("unsupported schema"));
+        let bad =
+            Json::parse(r#"{"schema":"viterbi-observed/1","route":"lanes","mbps":0.0}"#).unwrap();
+        assert!(ObservedRoute::from_json(&bad).unwrap_err().contains("non-positive"));
+    }
+
+    #[test]
+    fn jsonl_file_roundtrip() {
+        let routes = vec![
+            ObservedRoute { route: "lanes".into(), mbps: 400.0 },
+            ObservedRoute { route: "parallel".into(), mbps: 180.25 },
+        ];
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("OBSERVED_test_{}.jsonl", std::process::id()));
+        write_jsonl(&path, &routes).unwrap();
+        assert_eq!(read_jsonl(&path).unwrap(), routes);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -29,6 +29,7 @@ use crate::code::CodeSpec;
 use crate::frames::plan::FrameGeometry;
 use crate::obs::DecayedEwma;
 use crate::viterbi::registry::{self, BuildParams};
+use super::observed::{self, ObservedRoute};
 use super::profile::CalibrationProfile;
 
 /// The engines the planner dispatches among. All four decode
@@ -238,9 +239,16 @@ impl Planner {
         Planner { cfg, profile, feedback: Arc::new(Mutex::new(Vec::new())) }
     }
 
-    /// Load a profile from `path` and build a planner over it.
+    /// Load a profile from `path` and build a planner over it. When an
+    /// observed-route sidecar (`observed::sidecar_path`) exists next to
+    /// the profile, its routes seed the drift feedback, so route flips
+    /// learned before a restart survive it; a malformed sidecar warns
+    /// on stderr and is ignored (drift history is advisory, never a
+    /// reason to refuse to serve).
     pub fn load(cfg: PlannerConfig, path: &Path) -> Result<Planner, String> {
-        CalibrationProfile::read_jsonl(path).map(|p| Planner::with_profile(cfg, p))
+        let planner = CalibrationProfile::read_jsonl(path).map(|p| Planner::with_profile(cfg, p))?;
+        planner.load_sidecar(&observed::sidecar_path(path));
+        Ok(planner)
     }
 
     /// The default construction used by the `auto` registry entry and
@@ -252,10 +260,16 @@ impl Planner {
     /// the checked-in `calibration/baseline.jsonl` (repo root or one
     /// level up, for `cargo test` running inside `rust/`), else the
     /// static heuristic (noted once on stderr).
+    /// An observed-route sidecar next to the resolved profile seeds
+    /// the drift feedback, exactly as in [`Planner::load`].
     pub fn load_default(cfg: PlannerConfig) -> Planner {
         let cfg = cfg.with_env_budget();
         match default_profile() {
-            Some(p) => Planner::with_profile(cfg, p.clone()),
+            Some((p, path)) => {
+                let planner = Planner::with_profile(cfg, p.clone());
+                planner.load_sidecar(&observed::sidecar_path(path));
+                planner
+            }
             None => Planner::heuristic(cfg),
         }
     }
@@ -298,6 +312,67 @@ impl Planner {
             .iter()
             .find(|(name, _)| name == engine)
             .and_then(|(_, ewma)| ewma.value())
+    }
+
+    /// Snapshot of the drift feedback: every route with at least one
+    /// observation, in first-observed order.
+    pub fn observations(&self) -> Vec<ObservedRoute> {
+        self.feedback
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|(name, ewma)| {
+                ewma.value().map(|mbps| ObservedRoute { route: name.clone(), mbps })
+            })
+            .collect()
+    }
+
+    /// Persist the drift feedback to an observed-route sidecar at
+    /// `path` (`observed::sidecar_path` gives the conventional
+    /// location next to a profile). Returns the number of routes
+    /// written. Saving is always explicit — see the `observed` module
+    /// docs for why there is no save-on-drop.
+    pub fn save_observed(&self, path: &Path) -> Result<usize, String> {
+        let routes = self.observations();
+        observed::write_jsonl(path, &routes)
+            .map_err(|e| format!("writing {}: {e}", path.display()))?;
+        Ok(routes.len())
+    }
+
+    /// Seed the drift feedback from persisted route observations: each
+    /// route's EWMA starts at exactly its saved value (a
+    /// [`DecayedEwma`]'s first sample seeds exactly), as if one routed
+    /// execution at the decayed throughput had already been observed.
+    /// Routes that already have live observations are left alone — the
+    /// running signal is fresher than the sidecar.
+    pub fn seed_observations(&self, routes: &[ObservedRoute]) {
+        let mut fb = self.feedback.lock().unwrap();
+        for r in routes {
+            if !(r.mbps.is_finite() && r.mbps > 0.0) {
+                continue;
+            }
+            if fb.iter().any(|(name, _)| name == &r.route) {
+                continue;
+            }
+            let mut ewma = DecayedEwma::default();
+            ewma.observe(r.mbps);
+            fb.push((r.route.clone(), ewma));
+        }
+    }
+
+    /// Seed from the sidecar at `path` if it exists; a malformed
+    /// sidecar warns on stderr and is ignored.
+    fn load_sidecar(&self, path: &Path) {
+        if !path.is_file() {
+            return;
+        }
+        match observed::read_jsonl(path) {
+            Ok(routes) => self.seed_observations(&routes),
+            Err(e) => eprintln!(
+                "warning: ignoring observed-route sidecar {} ({e})",
+                path.display()
+            ),
+        }
     }
 
     /// Build-parameter bundle for registry memory rules at `shape`.
@@ -403,13 +478,15 @@ impl Planner {
     }
 }
 
-/// The process-wide default calibration profile, resolved once and
-/// cached: the registry's `auto` closures (build, memory rule, lane
-/// width) and every dispatcher built without an explicit path share
-/// one consistent load instead of re-reading the file per call, and
-/// the misconfig/fallback diagnostics print at most once per process.
-fn default_profile() -> &'static Option<CalibrationProfile> {
-    static DEFAULT_PROFILE: std::sync::OnceLock<Option<CalibrationProfile>> =
+/// The process-wide default calibration profile (and the path it was
+/// resolved from, for locating its observed-route sidecar), resolved
+/// once and cached: the registry's `auto` closures (build, memory
+/// rule, lane width) and every dispatcher built without an explicit
+/// path share one consistent load instead of re-reading the file per
+/// call, and the misconfig/fallback diagnostics print at most once per
+/// process.
+fn default_profile() -> &'static Option<(CalibrationProfile, PathBuf)> {
+    static DEFAULT_PROFILE: std::sync::OnceLock<Option<(CalibrationProfile, PathBuf)>> =
         std::sync::OnceLock::new();
     DEFAULT_PROFILE.get_or_init(|| {
         if let Some(path) = std::env::var(PROFILE_ENV).ok().map(PathBuf::from) {
@@ -417,7 +494,7 @@ fn default_profile() -> &'static Option<CalibrationProfile> {
             // operator must be able to see — warn, then fall back.
             if path.is_file() {
                 match CalibrationProfile::read_jsonl(&path) {
-                    Ok(p) => return Some(p),
+                    Ok(p) => return Some((p, path)),
                     Err(e) => eprintln!(
                         "warning: {PROFILE_ENV}={} failed to load ({e}); \
                          falling back to the default profile search",
@@ -438,7 +515,7 @@ fn default_profile() -> &'static Option<CalibrationProfile> {
         ] {
             if path.is_file() {
                 if let Ok(p) = CalibrationProfile::read_jsonl(&path) {
-                    return Some(p);
+                    return Some((p, path));
                 }
             }
         }
@@ -842,6 +919,54 @@ mod tests {
         // Clones share the drift signal: the coordinator's planner and
         // the registry's cached dispatcher see one feedback stream.
         assert_eq!(p.clone().plan(&s).engine, "parallel");
+    }
+
+    #[test]
+    fn observed_routes_roundtrip_through_the_sidecar() {
+        // Drift learned before a restart must survive it: a planner
+        // whose feedback flipped the plan saves its observations, and
+        // a freshly constructed planner over the same profile path
+        // re-ranks the same way after the sidecar auto-loads.
+        let profile = CalibrationProfile::new(vec![
+            rec("lanes", 64, 400.0),
+            rec("parallel", 64, 100.0),
+        ]);
+        let s = shape(64, true);
+        let dir = std::env::temp_dir();
+        let profile_path =
+            dir.join(format!("planner_roundtrip_{}.jsonl", std::process::id()));
+        profile.write_jsonl(&profile_path).unwrap();
+        let sidecar = crate::tuner::observed::sidecar_path(&profile_path);
+        let _ = std::fs::remove_file(&sidecar);
+
+        // First process lifetime: no sidecar yet, profile routing, then
+        // measured degradation flips the plan.
+        let first = Planner::load(cfg(), &profile_path).unwrap();
+        assert_eq!(first.plan(&s).engine, "lanes");
+        for _ in 0..50 {
+            first.observe("lanes", 1.0);
+        }
+        assert_eq!(first.plan(&s).engine, "parallel");
+        let saved = first.save_observed(&sidecar).unwrap();
+        assert_eq!(saved, 1);
+
+        // Second lifetime: the sidecar seeds the feedback, so the
+        // restarted planner re-ranks with the learned drift — the flip
+        // survives, and the seeded EWMA equals the saved value.
+        let second = Planner::load(cfg(), &profile_path).unwrap();
+        let lanes_mbps = second.observed_mbps("lanes").unwrap();
+        assert!((lanes_mbps - first.observed_mbps("lanes").unwrap()).abs() < 1e-12);
+        assert_eq!(second.plan(&s).engine, "parallel");
+
+        // Live observations outrank a stale sidecar: a planner that
+        // already observed the route keeps its own signal on seeding.
+        let third = Planner::with_profile(cfg(), profile);
+        third.observe("lanes", 500.0);
+        third.seed_observations(&crate::tuner::observed::read_jsonl(&sidecar).unwrap());
+        assert!((third.observed_mbps("lanes").unwrap() - 500.0).abs() < 1e-12);
+
+        let _ = std::fs::remove_file(&sidecar);
+        let _ = std::fs::remove_file(&profile_path);
     }
 
     #[test]

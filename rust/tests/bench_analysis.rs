@@ -1,0 +1,117 @@
+//! Golden tests for the perf-trajectory analysis commands over
+//! committed fixture record sets: `bench diff` alignment and
+//! classification, `bench rank` standings, `bench cmp` side-by-side,
+//! and the lenient reader's superseded-schema skipping. The fixtures
+//! (`tests/fixtures/BENCH_old.jsonl` / `BENCH_new.jsonl`) encode one
+//! of each outcome — an unchanged cell, a regression, an improvement,
+//! an added engine, a removed engine, and a skipped v2 line — so every
+//! classification path is pinned against real files, not in-memory
+//! records.
+
+use std::path::PathBuf;
+
+use viterbi::bench::{cmp, diff, rank, read_jsonl_lenient, DeltaClass, DiffOptions};
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+#[test]
+fn lenient_reader_skips_the_v2_line_in_the_old_fixture() {
+    let old = read_jsonl_lenient(&fixture("BENCH_old.jsonl")).unwrap();
+    assert_eq!(old.skipped_old, 1, "exactly the one v2 line is skipped");
+    assert_eq!(old.records.len(), 4);
+    let new = read_jsonl_lenient(&fixture("BENCH_new.jsonl")).unwrap();
+    assert_eq!(new.skipped_old, 0);
+    assert_eq!(new.records.len(), 4);
+}
+
+#[test]
+fn golden_diff_between_the_committed_fixtures() {
+    let old = read_jsonl_lenient(&fixture("BENCH_old.jsonl")).unwrap().records;
+    let new = read_jsonl_lenient(&fixture("BENCH_new.jsonl")).unwrap().records;
+    let report = diff(&old, &new, &DiffOptions::default()).unwrap();
+
+    // Matched cells keep the old set's order: scalar, unified, lanes.
+    let classes: Vec<(&str, DeltaClass)> = report
+        .entries
+        .iter()
+        .map(|e| (e.key.engine.as_str(), e.class))
+        .collect();
+    assert_eq!(
+        classes,
+        vec![
+            ("scalar", DeltaClass::Unchanged),
+            ("unified", DeltaClass::Regression),
+            ("lanes", DeltaClass::Improvement),
+        ]
+    );
+    assert!((report.entries[0].delta_pct - 0.857).abs() < 0.01, "{}", report.entries[0].delta_pct);
+    assert!((report.entries[1].delta_pct + 15.0).abs() < 1e-9, "{}", report.entries[1].delta_pct);
+    assert!((report.entries[2].delta_pct - 20.0).abs() < 1e-9, "{}", report.entries[2].delta_pct);
+
+    // streaming appears only in the new set, blocks only in the old.
+    assert_eq!(report.added.len(), 1);
+    assert_eq!(report.added[0].engine, "streaming");
+    assert_eq!(report.removed.len(), 1);
+    assert_eq!(report.removed[0].engine, "blocks");
+    assert!(report.has_regressions(), "the unified -15% cell gates");
+
+    let table = report.render();
+    assert!(table.contains("REGRESSION"), "{table}");
+    assert!(table.contains("improved"), "{table}");
+    assert!(table.contains("(only in new set)"), "{table}");
+    assert!(table.contains("(only in old set)"), "{table}");
+    assert!(
+        table.contains("summary: 3 matched, 1 regression(s), 1 improvement(s), 1 added, 1 removed"),
+        "{table}"
+    );
+}
+
+#[test]
+fn widening_the_noise_threshold_clears_the_regression() {
+    let old = read_jsonl_lenient(&fixture("BENCH_old.jsonl")).unwrap().records;
+    let new = read_jsonl_lenient(&fixture("BENCH_new.jsonl")).unwrap().records;
+    let opts = DiffOptions { threshold_pct: 16.0, normalize: None };
+    let report = diff(&old, &new, &opts).unwrap();
+    assert!(!report.has_regressions(), "-15% is inside ±16%");
+    assert_eq!(report.improvements().len(), 1, "+20% still clears ±16%");
+    assert_eq!(report.improvements()[0].key.engine, "lanes");
+}
+
+#[test]
+fn rank_orders_the_new_fixture_by_throughput() {
+    let new = read_jsonl_lenient(&fixture("BENCH_new.jsonl")).unwrap().records;
+    let report = rank(&new).unwrap();
+    assert_eq!(report.scenarios.len(), 1, "one K=7/f=256/b=64 scenario");
+    let rows = &report.scenarios[0].rows;
+    let order: Vec<&str> = rows.iter().map(|r| r.key.engine.as_str()).collect();
+    assert_eq!(order, vec!["lanes", "unified", "scalar", "streaming"]);
+    assert!((rows[0].ratio - 1.0).abs() < 1e-12, "the winner's ratio is 1");
+    assert!(rows[3].ratio > 15.0, "streaming trails lanes 15x: {}", rows[3].ratio);
+    // Engine standings: best geomean first; one scenario, so the
+    // geomean is just each engine's ratio.
+    assert_eq!(report.engines[0].engine, "lanes");
+    assert_eq!(report.engines[0].wins, 1);
+    let rendered = report.render();
+    assert!(rendered.contains("lanes"), "{rendered}");
+}
+
+#[test]
+fn cmp_lays_the_fixture_sets_side_by_side() {
+    let old = read_jsonl_lenient(&fixture("BENCH_old.jsonl")).unwrap().records;
+    let new = read_jsonl_lenient(&fixture("BENCH_new.jsonl")).unwrap().records;
+    let report = cmp(&[("old".to_string(), old), ("new".to_string(), new)]).unwrap();
+    // Union of cells in first-seen order: the old set's four engines,
+    // then the engine only the new set has.
+    let engines: Vec<&str> = report.rows.iter().map(|r| r.key.engine.as_str()).collect();
+    assert_eq!(engines, vec!["scalar", "unified", "lanes", "blocks", "streaming"]);
+    let blocks = &report.rows[3];
+    assert!(blocks.cells[0].is_some() && blocks.cells[1].is_none(), "blocks only in old");
+    let streaming = &report.rows[4];
+    assert!(streaming.cells[0].is_none() && streaming.cells[1].is_some());
+    let rendered = report.render();
+    assert!(rendered.contains("(absent)"), "{rendered}");
+    assert!(rendered.contains("Mb/s"), "{rendered}");
+    assert!(rendered.contains("acs-µs"), "{rendered}");
+}

@@ -1,0 +1,73 @@
+#!/usr/bin/env bash
+# Perf-trajectory gate (CI "build-test" job, bench-diff step):
+#   1. the unit + golden suites for the trajectory readers — key
+#      alignment, delta classification, rank geomeans, side-by-side
+#      cmp, and the lenient v1/v2-skipping record reader;
+#   2. self-diff sanity: the committed baseline against itself must be
+#      regression-free by construction (exit 0);
+#   3. exit-contract check: a synthetically slowed copy of the
+#      baseline MUST make `bench diff` exit 2 — proves the gate has
+#      teeth before we trust leg 4;
+#   4. the live gate: re-run the baseline scenario on this runner,
+#      diff against bench/records/BENCH_baseline.jsonl normalized by
+#      the scalar reference engine (cancels raw machine speed) under a
+#      generous noise threshold, fail on any regression, and refresh
+#      bench/records/BENCH_current.jsonl so each PR carries the record
+#      it was judged with.
+# BENCH_DIFF_THRESHOLD overrides the live-gate noise threshold (%).
+# BENCH_DIFF_SKIP_RERUN=1 runs only the hermetic legs 1-3.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BASELINE=bench/records/BENCH_baseline.jsonl
+CURRENT=bench/records/BENCH_current.jsonl
+THRESHOLD="${BENCH_DIFF_THRESHOLD:-40}"
+
+echo "== bench-diff: unit + golden suites (analysis / compare / reader) =="
+cargo test -q --lib bench::
+cargo test -q --test bench_analysis
+
+echo "== bench-diff: baseline vs itself is clean =="
+cargo run --release --quiet -- bench diff "$BASELINE" "$BASELINE"
+
+echo "== bench-diff: synthetic regression must exit 2 =="
+python3 - "$BASELINE" /tmp/BENCH_regressed.jsonl <<'EOF'
+import json
+import sys
+
+src, dst = sys.argv[1], sys.argv[2]
+with open(src) as f, open(dst, "w") as g:
+    for line in f:
+        line = line.strip()
+        if not line:
+            continue
+        r = json.loads(line)
+        if r["engine"] == "lanes":
+            for k in ("median_mbps", "mean_mbps", "max_mbps"):
+                r[k] = round(r[k] * 0.5, 3)
+        g.write(json.dumps(r) + "\n")
+EOF
+rc=0
+cargo run --release --quiet -- bench diff "$BASELINE" /tmp/BENCH_regressed.jsonl || rc=$?
+if [ "$rc" -ne 2 ]; then
+    echo "FAIL: halved lanes throughput exited $rc, want 2"
+    exit 1
+fi
+echo "OK: regression detected (exit 2)"
+
+if [ "${BENCH_DIFF_SKIP_RERUN:-0}" = "1" ]; then
+    echo "bench-diff OK (hermetic legs only; rerun skipped)"
+    exit 0
+fi
+
+echo "== bench-diff: live gate (normalized by scalar, noise +/-${THRESHOLD}%) =="
+# parallel is excluded from the rerun: its throughput tracks the
+# runner's core count, which normalizing by the single-threaded scalar
+# engine cannot cancel. Its baseline cell just reports as removed.
+cargo run --release -- bench --engines scalar,unified,lanes,blocks,streaming \
+    --frames 64 --frame-lens 256 --samples 5 --warmup 2 --out "$CURRENT"
+test -s "$CURRENT"
+cargo run --release --quiet -- bench diff "$BASELINE" "$CURRENT" \
+    --normalize scalar --threshold "$THRESHOLD"
+
+echo "bench-diff OK: no regression beyond ${THRESHOLD}% vs $BASELINE; refreshed $CURRENT"

@@ -68,6 +68,28 @@ if ! grep -q 'Tail-biting' README.md; then
     fail=1
 fi
 
+# The perf-trajectory tooling must stay documented: BENCHMARKS.md
+# needs the trajectory section (diff/rank/cmp + the CI gate) and the
+# README the subcommand trio.
+if ! grep -q 'bench diff' BENCHMARKS.md; then
+    echo "BENCHMARKS.md: missing the bench diff trajectory documentation"
+    fail=1
+fi
+for ref in 'bench rank' 'bench cmp' 'check_bench_diff' 'BENCH_baseline.jsonl'; do
+    if ! grep -q "$ref" BENCHMARKS.md; then
+        echo "BENCHMARKS.md: trajectory section must mention $ref"
+        fail=1
+    fi
+done
+if ! grep -q 'bench diff' README.md; then
+    echo "README.md: missing the bench diff/rank/cmp subcommands"
+    fail=1
+fi
+if ! grep -q 'bench diff' EXPERIMENTS.md; then
+    echo "EXPERIMENTS.md: missing the worked bench diff example"
+    fail=1
+fi
+
 if [ "$fail" -eq 0 ]; then
     echo "docs OK: all referenced paths exist and the engine API is documented"
 fi
