@@ -409,6 +409,176 @@ pub fn diff(
     })
 }
 
+/// One cell's trajectory across N record sets (oldest revision
+/// first).
+#[derive(Debug, Clone)]
+pub struct TrendCell {
+    /// The cell's identity.
+    pub key: MeasureKey,
+    /// Median Mb/s at each revision; `None` where that revision has
+    /// no record for the cell.
+    pub mbps: Vec<Option<f64>>,
+    /// `(last present / first present − 1) · 100` — the cell's drift
+    /// over the whole trajectory.
+    pub total_delta_pct: f64,
+    /// Classification of the total drift against the noise threshold.
+    pub class: DeltaClass,
+}
+
+/// Per-cell throughput trajectory over N revisions — what
+/// `bench diff NEW --against OLD1 --against OLD2 …` renders.
+#[derive(Debug, Clone)]
+pub struct TrendReport {
+    /// Revision labels, oldest first (column order of every cell's
+    /// `mbps` vector).
+    pub labels: Vec<String>,
+    /// Every cell seen in any revision, in first-seen order.
+    pub cells: Vec<TrendCell>,
+    /// The noise threshold the classification used, percent.
+    pub threshold_pct: f64,
+}
+
+impl TrendReport {
+    /// Whether any cell's total drift is a regression beyond the
+    /// threshold (the `bench diff` exit-2 condition, unchanged in
+    /// trend mode).
+    pub fn has_regressions(&self) -> bool {
+        self.cells.iter().any(|c| c.class == DeltaClass::Regression)
+    }
+
+    /// Render the trajectory table: one column per revision plus the
+    /// total drift, with a legend mapping column labels to inputs.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "bench trend over {} revisions (total drift vs noise ±{:.1}%):",
+            self.labels.len(),
+            self.threshold_pct
+        );
+        for (i, label) in self.labels.iter().enumerate() {
+            let _ = writeln!(out, "  r{i} = {label}");
+        }
+        let width = self
+            .cells
+            .iter()
+            .map(|c| c.key.label().len())
+            .max()
+            .unwrap_or(8)
+            .max(8);
+        let mut header = format!("{:<width$}", "cell");
+        for i in 0..self.labels.len() {
+            let _ = write!(header, " {:>10}", format!("r{i} Mb/s"));
+        }
+        let _ = write!(header, " {:>9}  {}", "drift", "class");
+        let _ = writeln!(out, "{header}");
+        for c in &self.cells {
+            let mut row = format!("{:<width$}", c.key.label());
+            for v in &c.mbps {
+                match v {
+                    Some(x) => {
+                        let _ = write!(row, " {x:>10.2}");
+                    }
+                    None => {
+                        let _ = write!(row, " {:>10}", "-");
+                    }
+                }
+            }
+            let _ = write!(row, " {:>+8.1}%  {}", c.total_delta_pct, c.class.label());
+            let _ = writeln!(out, "{row}");
+        }
+        let _ = writeln!(
+            out,
+            "summary: {} cell(s), {} regression(s), {} improvement(s)",
+            self.cells.len(),
+            self.cells.iter().filter(|c| c.class == DeltaClass::Regression).count(),
+            self.cells.iter().filter(|c| c.class == DeltaClass::Improvement).count(),
+        );
+        out
+    }
+}
+
+/// Build the per-cell trajectory across `revisions` (label + record
+/// set, oldest first — the newest run goes last). Each cell's drift
+/// compares its last present revision to its first present one, so a
+/// cell skipped by intermediate runs still gets a meaningful total.
+/// Cells present in fewer than two revisions classify as unchanged
+/// (nothing to compare). Errors on fewer than two revisions, an empty
+/// revision, a non-finite threshold, or a non-positive median.
+pub fn trend(
+    revisions: &[(String, Vec<Measurement>)],
+    threshold_pct: f64,
+) -> Result<TrendReport, String> {
+    if !(threshold_pct.is_finite() && threshold_pct >= 0.0) {
+        return Err(format!(
+            "noise threshold must be a non-negative percentage, got {threshold_pct}"
+        ));
+    }
+    if revisions.len() < 2 {
+        return Err(format!(
+            "a trend needs at least two record sets, got {}",
+            revisions.len()
+        ));
+    }
+    for (label, records) in revisions {
+        if records.is_empty() {
+            return Err(format!("record set {label:?} is empty"));
+        }
+    }
+    let deduped: Vec<(&String, Vec<(MeasureKey, Measurement)>)> =
+        revisions.iter().map(|(l, r)| (l, dedupe_last(r))).collect();
+    // Union of keys in first-seen order, oldest revision first.
+    let mut keys: Vec<MeasureKey> = Vec::new();
+    for (_, cells) in &deduped {
+        for (key, _) in cells {
+            if !keys.contains(key) {
+                keys.push(key.clone());
+            }
+        }
+    }
+    let mut out_cells = Vec::with_capacity(keys.len());
+    for key in keys {
+        let mbps: Vec<Option<f64>> = deduped
+            .iter()
+            .map(|(_, cells)| {
+                cells.iter().find(|(k, _)| *k == key).map(|(_, m)| m.median_mbps)
+            })
+            .collect();
+        let present: Vec<f64> = mbps.iter().filter_map(|v| *v).collect();
+        for (v, (label, _)) in mbps.iter().zip(revisions) {
+            if let Some(x) = v {
+                if !(x.is_finite() && *x > 0.0) {
+                    return Err(format!(
+                        "cell {} has a non-positive median ({x}) in {label:?}",
+                        key.label()
+                    ));
+                }
+            }
+        }
+        let (total_delta_pct, class) = if present.len() < 2 {
+            (0.0, DeltaClass::Unchanged)
+        } else {
+            let first = present[0];
+            let last = present[present.len() - 1];
+            let delta = (last / first - 1.0) * 100.0;
+            let class = if delta < -threshold_pct {
+                DeltaClass::Regression
+            } else if delta > threshold_pct {
+                DeltaClass::Improvement
+            } else {
+                DeltaClass::Unchanged
+            };
+            (delta, class)
+        };
+        out_cells.push(TrendCell { key, mbps, total_delta_pct, class });
+    }
+    Ok(TrendReport {
+        labels: revisions.iter().map(|(l, _)| l.clone()).collect(),
+        cells: out_cells,
+        threshold_pct,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -551,6 +721,73 @@ mod tests {
         assert!(diff(&set, &set, &bad).is_err());
         let neg = DiffOptions { threshold_pct: -1.0, normalize: None };
         assert!(diff(&set, &set, &neg).is_err());
+    }
+
+    #[test]
+    fn trend_tracks_cells_across_revisions() {
+        let r0 = vec![m("scalar", 256, 64, 100.0), m("lanes", 256, 64, 400.0)];
+        let r1 = vec![m("scalar", 256, 64, 102.0), m("lanes", 256, 64, 300.0)];
+        let r2 = vec![
+            m("scalar", 256, 64, 98.0),
+            m("lanes", 256, 64, 200.0),
+            m("blocks", 256, 64, 500.0),
+        ];
+        let report = trend(
+            &[
+                ("v1".to_string(), r0),
+                ("v2".to_string(), r1),
+                ("v3".to_string(), r2),
+            ],
+            10.0,
+        )
+        .unwrap();
+        assert_eq!(report.labels, vec!["v1", "v2", "v3"]);
+        assert_eq!(report.cells.len(), 3);
+        let scalar = &report.cells[0];
+        assert_eq!(scalar.key.engine, "scalar");
+        assert_eq!(scalar.mbps, vec![Some(100.0), Some(102.0), Some(98.0)]);
+        assert_eq!(scalar.class, DeltaClass::Unchanged, "-2% is noise");
+        let lanes = &report.cells[1];
+        assert_eq!(lanes.class, DeltaClass::Regression, "400 → 200 is -50%");
+        assert!((lanes.total_delta_pct + 50.0).abs() < 1e-9);
+        // A cell present only in the newest revision has no trajectory.
+        let blocks = &report.cells[2];
+        assert_eq!(blocks.mbps, vec![None, None, Some(500.0)]);
+        assert_eq!(blocks.class, DeltaClass::Unchanged);
+        assert!(report.has_regressions());
+        let text = report.render();
+        assert!(text.contains("r0 = v1"), "{text}");
+        assert!(text.contains("REGRESSION"), "{text}");
+        assert!(text.contains("-50.0%"), "{text}");
+        assert!(text.contains("summary: 3 cell(s), 1 regression(s)"), "{text}");
+    }
+
+    #[test]
+    fn trend_skipped_intermediate_revision_still_compares_ends() {
+        // The middle run skipped the cell; drift is last vs first.
+        let r0 = vec![m("lanes", 256, 64, 400.0)];
+        let r1 = vec![m("scalar", 256, 64, 100.0)];
+        let r2 = vec![m("lanes", 256, 64, 480.0), m("scalar", 256, 64, 100.0)];
+        let report = trend(
+            &[("a".into(), r0), ("b".into(), r1), ("c".into(), r2)],
+            10.0,
+        )
+        .unwrap();
+        let lanes = report.cells.iter().find(|c| c.key.engine == "lanes").unwrap();
+        assert_eq!(lanes.mbps, vec![Some(400.0), None, Some(480.0)]);
+        assert_eq!(lanes.class, DeltaClass::Improvement, "+20% end to end");
+    }
+
+    #[test]
+    fn trend_rejects_degenerate_inputs() {
+        let set = vec![m("scalar", 256, 64, 100.0)];
+        assert!(trend(&[("only".into(), set.clone())], 10.0)
+            .unwrap_err()
+            .contains("at least two"));
+        assert!(trend(&[("a".into(), set.clone()), ("b".into(), vec![])], 10.0)
+            .unwrap_err()
+            .contains("empty"));
+        assert!(trend(&[("a".into(), set.clone()), ("b".into(), set)], f64::NAN).is_err());
     }
 
     #[test]

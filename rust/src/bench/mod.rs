@@ -32,7 +32,10 @@ pub mod measurement;
 pub mod runner;
 pub mod scenario;
 
-pub use analysis::{diff, DeltaClass, DiffOptions, DiffReport, MeasureKey, ScenarioKey};
+pub use analysis::{
+    diff, trend, DeltaClass, DiffOptions, DiffReport, MeasureKey, ScenarioKey, TrendCell,
+    TrendReport,
+};
 pub use compare::{cmp, rank, CmpReport, RankReport};
 pub use measurement::{
     read_jsonl, read_jsonl_lenient, write_jsonl, Measurement, ReadOutcome, SCHEMA_VERSION,

@@ -7,11 +7,18 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
+/// Flags that may legally repeat (`--against A --against B`); every
+/// occurrence is kept, in order, and read back with [`Args::get_all`].
+/// Everything else still rejects duplicates as a likely typo.
+const REPEATABLE: &[&str] = &["against"];
+
 /// Parsed arguments.
 #[derive(Debug, Default)]
 pub struct Args {
     positional: Vec<String>,
     flags: HashMap<String, String>,
+    /// All values of repeatable flags, in command-line order.
+    multi: HashMap<String, Vec<String>>,
     /// Order-preserved flag names for unknown-flag reporting.
     seen: Vec<String>,
 }
@@ -43,7 +50,12 @@ impl Args {
                         }
                     }
                 };
-                if args.flags.insert(key.clone(), value).is_some() {
+                if REPEATABLE.contains(&key.as_str()) {
+                    // First occurrence also lands in `flags` so `get`
+                    // keeps working for the single-use case.
+                    args.flags.entry(key.clone()).or_insert_with(|| value.clone());
+                    args.multi.entry(key.clone()).or_default().push(value);
+                } else if args.flags.insert(key.clone(), value).is_some() {
                     bail!("duplicate flag --{key}");
                 }
                 args.seen.push(key);
@@ -72,6 +84,12 @@ impl Args {
 
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Every value a repeatable flag was given, in command-line order
+    /// (empty for flags never passed, or non-repeatable ones).
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.multi.get(key).map(Vec::as_slice).unwrap_or(&[])
     }
 
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
@@ -141,6 +159,21 @@ mod tests {
     #[test]
     fn duplicate_flag_rejected() {
         assert!(Args::parse(["--x".into(), "1".into(), "--x".into(), "2".into()]).is_err());
+    }
+
+    #[test]
+    fn repeatable_flag_keeps_every_value_in_order() {
+        let a = parse("bench diff new.json --against a.json --against b.json --against c.json");
+        assert_eq!(a.get_all("against"), &["a.json", "b.json", "c.json"]);
+        // `get` still answers the first value for single-use callers.
+        assert_eq!(a.get("against"), Some("a.json"));
+        // Single use looks unchanged from a plain flag.
+        let single = parse("bench diff new.json --against old.json");
+        assert_eq!(single.get_all("against"), &["old.json"]);
+        assert_eq!(single.get("against"), Some("old.json"));
+        // Unused repeatable flags read back empty.
+        assert!(parse("bench diff").get_all("against").is_empty());
+        assert!(parse("bench diff").get("against").is_none());
     }
 
     #[test]

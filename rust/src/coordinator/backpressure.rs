@@ -141,4 +141,128 @@ mod tests {
         let g = BackpressureGate::new(4, 1);
         g.release(1);
     }
+
+    #[test]
+    fn property_no_readmission_between_watermarks() {
+        // Hysteresis invariant: once the gate saturates, nothing is
+        // re-admitted while in-flight sits strictly above the low
+        // watermark — an acceptance after a rejection proves the gate
+        // drained to ≤ low in between. Checked against a reference
+        // model over random admit/release interleavings.
+        crate::util::check::forall(
+            "gate hysteresis over random admit/release sequences",
+            80,
+            0x6A7E,
+            |rng| {
+                let low = rng.gen_range_usize(1, 20);
+                let high = rng.gen_range_usize(low + 1, low + 40);
+                let ops = rng.gen_range_usize(1, 200);
+                let plan: Vec<(bool, usize)> = (0..ops)
+                    .map(|_| (rng.gen_range_usize(0, 3) < 2, rng.gen_range_usize(1, 12)))
+                    .collect();
+                (low, high, plan)
+            },
+            |(low, high, plan)| {
+                let g = BackpressureGate::new(*high, *low);
+                let mut in_flight = 0usize;
+                let mut saturated_since_reject = false;
+                let mut drained_to_low = true;
+                for &(is_admit, n) in plan {
+                    if is_admit {
+                        match g.try_admit(n) {
+                            Admission::Accepted => {
+                                assert!(
+                                    !saturated_since_reject || drained_to_low,
+                                    "re-admitted between watermarks \
+                                     (in_flight {in_flight}, low {low}, high {high})"
+                                );
+                                in_flight += n;
+                                saturated_since_reject = false;
+                                drained_to_low = in_flight <= *low;
+                            }
+                            Admission::Rejected => {
+                                saturated_since_reject = true;
+                                drained_to_low = in_flight <= *low;
+                            }
+                        }
+                    } else {
+                        let m = n.min(in_flight);
+                        if m > 0 {
+                            g.release(m);
+                            in_flight -= m;
+                        }
+                        if in_flight <= *low {
+                            drained_to_low = true;
+                        }
+                    }
+                    assert_eq!(g.in_flight(), in_flight, "gate and model disagree");
+                    assert!(in_flight <= *high, "in-flight above the high watermark");
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn blocking_producer_wakes_exactly_at_low() {
+        // A blocked producer must stay blocked while the gate drains
+        // from high toward (but not to) the low watermark, and wake
+        // once in-flight reaches it.
+        use std::sync::atomic::{AtomicBool, Ordering};
+
+        let g = Arc::new(BackpressureGate::new(16, 4));
+        g.try_admit(16);
+        let woken = Arc::new(AtomicBool::new(false));
+        let g2 = Arc::clone(&g);
+        let woken2 = Arc::clone(&woken);
+        let producer = std::thread::spawn(move || {
+            g2.admit_blocking(2);
+            woken2.store(true, Ordering::SeqCst);
+        });
+        // Drain to one above low: still saturated, producer must hold.
+        g.release(11); // 5 in flight > low 4
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        assert!(!woken.load(Ordering::SeqCst), "woke above the low watermark");
+        // One more release reaches low: hysteresis clears, producer admits.
+        g.release(1); // 4 ≤ low
+        producer.join().unwrap();
+        assert!(woken.load(Ordering::SeqCst));
+        assert_eq!(g.in_flight(), 6); // 4 remaining + 2 admitted
+    }
+
+    #[test]
+    fn concurrent_admit_release_stress_conserves_in_flight() {
+        // Hammer the gate from many threads; the count must never
+        // exceed the high watermark, and everything admitted must be
+        // releasable back to exactly zero.
+        let g = Arc::new(BackpressureGate::new(64, 16));
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let g = Arc::clone(&g);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500usize {
+                    let n = 1 + ((t as usize + i) % 7);
+                    match g.try_admit(n) {
+                        Admission::Accepted => {
+                            assert!(g.in_flight() <= 64, "watermark breached");
+                            // Hold briefly so admissions overlap.
+                            if i % 16 == 0 {
+                                std::thread::yield_now();
+                            }
+                            g.release(n);
+                        }
+                        Admission::Rejected => {
+                            // Let the gate drain below low before retrying.
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(g.in_flight(), 0, "admit/release imbalance");
+        assert_eq!(g.try_admit(1), Admission::Accepted);
+        g.release(1);
+    }
 }

@@ -136,6 +136,7 @@ mod tests {
             tail_biting: false,
             block_stream: false,
             submitted_at: at,
+            deadline: None,
         }
     }
 

@@ -64,6 +64,7 @@ impl Chunker {
                 tail_biting: false,
                 block_stream: false,
                 submitted_at: req.submitted_at,
+                deadline: req.deadline,
             })
             .collect()
     }

@@ -532,6 +532,7 @@ mod tests {
                 engine: "scalar".into(),
                 end: StreamEnd::TailBiting,
             },
+            DecodeError::Overloaded { retry_after_ms: 25 },
         ];
         for (i, e) in variants.iter().enumerate() {
             for _ in 0..=i {
@@ -540,7 +541,7 @@ mod tests {
         }
         let snap = m.snapshot();
         let j = Json::parse(&snap.render_json()).expect("valid JSON");
-        assert_eq!(j.get("errors").and_then(Json::as_f64), Some(15.0));
+        assert_eq!(j.get("errors").and_then(Json::as_f64), Some(21.0));
         let kinds = j.get("error_kinds").expect("error_kinds object");
         let expected = [
             ("llr-length-mismatch", 1.0),
@@ -548,14 +549,15 @@ mod tests {
             ("invalid-request", 3.0),
             ("backend", 4.0),
             ("unsupported-stream-end", 5.0),
+            ("overloaded", 6.0),
         ];
         for (kind, n) in expected {
             assert_eq!(kinds.get(kind).and_then(Json::as_f64), Some(n), "variant {kind}");
             assert_eq!(snap.errors_of(kind) as f64, n, "snapshot agrees for {kind}");
         }
-        // Exactly the five variants — no stray keys, none dropped.
+        // Exactly the six variants — no stray keys, none dropped.
         match kinds {
-            Json::Obj(fields) => assert_eq!(fields.len(), 5, "{fields:?}"),
+            Json::Obj(fields) => assert_eq!(fields.len(), 6, "{fields:?}"),
             other => panic!("error_kinds is not an object: {other:?}"),
         }
     }

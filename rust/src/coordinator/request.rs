@@ -22,6 +22,11 @@ pub struct DecodeRequest {
     pub output: OutputMode,
     /// Submission timestamp (set by the server).
     pub submitted_at: Instant,
+    /// Absolute completion deadline. `None` = best-effort. Requests
+    /// whose deadline has already passed are shed at admission with
+    /// [`crate::viterbi::DecodeError::Overloaded`]; jobs whose
+    /// deadline expires while queued are reaped before dispatch.
+    pub deadline: Option<Instant>,
 }
 
 impl DecodeRequest {
@@ -40,7 +45,21 @@ impl DecodeRequest {
     ) -> Self {
         assert_eq!(llrs.len() % beta, 0, "LLR length not a multiple of beta");
         let stages = llrs.len() / beta;
-        DecodeRequest { id, llrs, stages, end, output, submitted_at: Instant::now() }
+        DecodeRequest {
+            id,
+            llrs,
+            stages,
+            end,
+            output,
+            submitted_at: Instant::now(),
+            deadline: None,
+        }
+    }
+
+    /// Attach an absolute completion deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
     }
 }
 
@@ -91,6 +110,10 @@ pub struct FrameJob {
     pub block_stream: bool,
     /// Submission time of the owning request (for deadline batching).
     pub submitted_at: Instant,
+    /// The owning request's completion deadline, if any. The executor
+    /// reaps expired jobs before dispatch instead of decoding work
+    /// nobody is waiting for.
+    pub deadline: Option<Instant>,
 }
 
 /// Result of decoding one frame.

@@ -78,6 +78,18 @@ struct Completion {
     ready: Condvar,
 }
 
+/// Suggested client back-off when the service sheds a request:
+/// roughly four median batch round-trips once the service has latency
+/// data, a flat 25 ms before the first response.
+fn overload_retry_hint(metrics: &Metrics) -> u64 {
+    let p50_ms = metrics.snapshot().p50_latency.as_millis() as u64;
+    if p50_ms == 0 {
+        25
+    } else {
+        (p50_ms * 4).clamp(1, 2_000)
+    }
+}
+
 /// The decode service.
 pub struct DecodeServer {
     chunker: Chunker,
@@ -142,6 +154,41 @@ impl DecodeServer {
                             }
                             ExecMsg::Shutdown => break,
                         };
+                        let mut batch = batch;
+                        // Reap expired-deadline jobs before dispatch:
+                        // nobody is waiting for their bits, so decoding
+                        // them would only push the live jobs' latency
+                        // further past their own deadlines.
+                        let now = Instant::now();
+                        if batch.jobs.iter().any(|j| j.deadline.is_some_and(|d| d <= now)) {
+                            let (expired, live): (Vec<FrameJob>, Vec<FrameJob>) = batch
+                                .jobs
+                                .drain(..)
+                                .partition(|j| j.deadline.is_some_and(|d| d <= now));
+                            batch.jobs = live;
+                            gate.release(expired.len());
+                            let mut counts: HashMap<RequestId, usize> = HashMap::new();
+                            for job in &expired {
+                                *counts.entry(job.request_id).or_insert(0) += 1;
+                            }
+                            let e = DecodeError::Overloaded {
+                                retry_after_ms: overload_retry_hint(&metrics),
+                            };
+                            let mut r = reassembler.lock().unwrap();
+                            let mut done = completion.done.lock().unwrap();
+                            for (id, in_batch) in counts {
+                                if r.fail(id, in_batch) {
+                                    metrics.on_error(&e);
+                                    done.insert(id, Err(e.clone()));
+                                }
+                            }
+                            drop(done);
+                            drop(r);
+                            completion.ready.notify_all();
+                            if batch.jobs.is_empty() {
+                                continue;
+                            }
+                        }
                         let n = batch.jobs.len();
                         let t0 = Instant::now();
                         // Stage-timing bracket: engines accumulate into
@@ -316,13 +363,31 @@ impl DecodeServer {
     /// Validation failures complete the request with a [`DecodeError`]
     /// surfaced by [`wait`](Self::wait).
     pub fn try_submit(&self, llrs: Vec<f32>, end: StreamEnd) -> Option<RequestId> {
-        self.submit_inner(llrs, end, OutputMode::Hard, false)
+        self.submit_inner(llrs, end, OutputMode::Hard, false, None).ok()
+    }
+
+    /// Deadline-aware non-blocking submission — the gateway's admission
+    /// path. Sheds instead of queueing: a request whose `deadline` has
+    /// already passed, or that arrives while the backpressure gate is
+    /// saturated, is answered immediately with
+    /// [`DecodeError::Overloaded`] carrying a back-off hint derived
+    /// from the observed batch latency. Admitted requests whose
+    /// deadline expires while queued are reaped before dispatch and
+    /// complete with the same error through [`wait`](Self::wait).
+    pub fn try_submit_request(
+        &self,
+        llrs: Vec<f32>,
+        end: StreamEnd,
+        output: OutputMode,
+        deadline: Option<Instant>,
+    ) -> Result<RequestId, DecodeError> {
+        self.submit_inner(llrs, end, output, false, deadline)
     }
 
     /// Submit a hard-output request, blocking if the service is
     /// saturated.
     pub fn submit(&self, llrs: Vec<f32>, end: StreamEnd) -> RequestId {
-        self.submit_inner(llrs, end, OutputMode::Hard, true)
+        self.submit_inner(llrs, end, OutputMode::Hard, true, None)
             .expect("blocking submit cannot be rejected")
     }
 
@@ -333,7 +398,7 @@ impl DecodeServer {
         end: StreamEnd,
         output: OutputMode,
     ) -> RequestId {
-        self.submit_inner(llrs, end, output, true)
+        self.submit_inner(llrs, end, output, true, None)
             .expect("blocking submit cannot be rejected")
     }
 
@@ -350,7 +415,8 @@ impl DecodeServer {
         end: StreamEnd,
         output: OutputMode,
         block: bool,
-    ) -> Option<RequestId> {
+        deadline: Option<Instant>,
+    ) -> Result<RequestId, DecodeError> {
         let beta = self.chunker.spec.beta as usize;
         let id = {
             let mut next = self.next_id.lock().unwrap();
@@ -359,6 +425,15 @@ impl DecodeServer {
             id
         };
         self.metrics.on_request();
+        if deadline.is_some_and(|d| d <= Instant::now()) {
+            // Dead on arrival: shed at admission instead of spending
+            // decode time on a response nobody is waiting for.
+            let err = DecodeError::Overloaded {
+                retry_after_ms: overload_retry_hint(&self.metrics),
+            };
+            self.metrics.on_error(&err);
+            return Err(err);
+        }
         if llrs.len() % beta != 0 {
             // Typed completion instead of the seed-era assert. The
             // server derives the stage count from the payload, so
@@ -373,7 +448,7 @@ impl DecodeServer {
                     ),
                 },
             );
-            return Some(id);
+            return Ok(id);
         }
         if output == OutputMode::Soft && !self.soft_capable {
             self.complete_err(
@@ -383,7 +458,7 @@ impl DecodeServer {
                     mode: output,
                 },
             );
-            return Some(id);
+            return Ok(id);
         }
         if end == StreamEnd::TailBiting {
             if !self.tail_biting_capable {
@@ -394,7 +469,7 @@ impl DecodeServer {
                         end,
                     },
                 );
-                return Some(id);
+                return Ok(id);
             }
             if output == OutputMode::Soft {
                 // The WAVA core is hard-output only for now (circular
@@ -406,7 +481,7 @@ impl DecodeServer {
                         mode: output,
                     },
                 );
-                return Some(id);
+                return Ok(id);
             }
             let km1 = (self.chunker.spec.k - 1) as usize;
             let stages = llrs.len() / beta;
@@ -421,7 +496,7 @@ impl DecodeServer {
                         ),
                     },
                 );
-                return Some(id);
+                return Ok(id);
             }
         }
         let (jobs, stages, submitted_at) = if end == StreamEnd::TailBiting {
@@ -443,11 +518,13 @@ impl DecodeServer {
                     tail_biting: true,
                     block_stream: false,
                     submitted_at,
+                    deadline,
                 }]
             };
             (jobs, stages, submitted_at)
         } else {
-            let req = DecodeRequest::with_output(id, llrs, beta, end, output);
+            let mut req = DecodeRequest::with_output(id, llrs, beta, end, output);
+            req.deadline = deadline;
             // Long hard-output linear streams skip the overlap chunker
             // the same way tail-biting streams do: one whole-stream job
             // the backend decodes block-parallel (all overlapped blocks
@@ -466,6 +543,7 @@ impl DecodeServer {
                     tail_biting: false,
                     block_stream: true,
                     submitted_at: req.submitted_at,
+                    deadline,
                 }]
             } else {
                 self.chunker.chunk(&req)
@@ -485,13 +563,15 @@ impl DecodeServer {
             self.metrics.on_response(0, 0);
             self.completion.done.lock().unwrap().insert(id, Ok(resp));
             self.completion.ready.notify_all();
-            return Some(id);
+            return Ok(id);
         }
         if block {
             self.gate.admit_blocking(n);
         } else if self.gate.try_admit(n) == Admission::Rejected {
             self.metrics.on_reject();
-            return None;
+            return Err(DecodeError::Overloaded {
+                retry_after_ms: overload_retry_hint(&self.metrics),
+            });
         }
         // Tail-biting and block-stream requests are one whole-stream
         // frame, so the reassembler's frame output length is the
@@ -510,7 +590,7 @@ impl DecodeServer {
             output == OutputMode::Soft,
         );
         self.pump_tx.send(PumpMsg::Jobs(jobs)).expect("pump thread alive");
-        Some(id)
+        Ok(id)
     }
 
     /// Block until the response for `id` is ready. Backend batch
@@ -802,6 +882,54 @@ mod tests {
         let short = server.decode_blocking(short_llrs, StreamEnd::Truncated).unwrap();
         assert_eq!(short.frames, 4);
         assert_eq!(short.bits, short_bits);
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_at_admission() {
+        let server = native_server(1);
+        let (_, llrs) = noiseless_request(300, 64);
+        let deadline = Instant::now() - Duration::from_millis(5);
+        let err = server
+            .try_submit_request(llrs, StreamEnd::Truncated, OutputMode::Hard, Some(deadline))
+            .unwrap_err();
+        assert!(matches!(err, DecodeError::Overloaded { .. }), "{err}");
+        if let DecodeError::Overloaded { retry_after_ms } = err {
+            assert!(retry_after_ms > 0);
+        }
+        let m = server.metrics();
+        assert_eq!(m.errors_of("overloaded"), 1);
+        assert_eq!(server.in_flight_frames(), 0, "nothing was admitted");
+        // The server keeps serving afterwards.
+        let (bits, llrs) = noiseless_request(301, 64);
+        assert_eq!(server.decode_blocking(llrs, StreamEnd::Truncated).unwrap().bits, bits);
+    }
+
+    #[test]
+    fn queued_deadline_expiry_is_reaped_before_dispatch() {
+        // A long batch wait keeps admitted jobs queued in the batcher;
+        // a deadline shorter than the wait expires there and the
+        // executor reaps the job instead of decoding it.
+        let server = native_server(200);
+        let (_, llrs) = noiseless_request(302, 20); // one frame: sits until the flush
+        let deadline = Instant::now() + Duration::from_millis(5);
+        let id = server
+            .try_submit_request(llrs, StreamEnd::Truncated, OutputMode::Hard, Some(deadline))
+            .expect("admitted while live");
+        let err = server.wait(id).unwrap_err();
+        assert!(matches!(err, DecodeError::Overloaded { .. }), "{err}");
+        assert_eq!(server.in_flight_frames(), 0, "reaped frames release the gate");
+        assert_eq!(server.metrics().errors_of("overloaded"), 1);
+    }
+
+    #[test]
+    fn generous_deadline_decodes_normally() {
+        let server = native_server(1);
+        let (bits, llrs) = noiseless_request(303, 100);
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let id = server
+            .try_submit_request(llrs, StreamEnd::Truncated, OutputMode::Hard, Some(deadline))
+            .expect("admitted");
+        assert_eq!(server.wait(id).unwrap().bits, bits);
     }
 
     #[test]

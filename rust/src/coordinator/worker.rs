@@ -1137,6 +1137,7 @@ mod tests {
             tail_biting: false,
             block_stream: false,
             submitted_at: std::time::Instant::now(),
+            deadline: None,
         };
         assert!(backend.decode_batch(&[bad]).is_err());
     }
@@ -1166,6 +1167,7 @@ mod tests {
                 tail_biting: true,
                 block_stream: false,
                 submitted_at: std::time::Instant::now(),
+                deadline: None,
             });
             msgs.push(bits);
         }
@@ -1236,6 +1238,7 @@ mod tests {
             tail_biting: false,
             block_stream: true,
             submitted_at: std::time::Instant::now(),
+            deadline: None,
         };
         (bits, job)
     }

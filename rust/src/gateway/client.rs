@@ -1,0 +1,148 @@
+//! Blocking gateway client: speaks `viterbi-wire/1` over one TCP
+//! connection.
+//!
+//! The client is pipelined — [`GatewayClient::submit`] queues a
+//! request without waiting, [`GatewayClient::recv`] pulls the next
+//! reply (the gateway answers a connection's requests in submission
+//! order) — and [`GatewayClient::decode`] wraps the pair for the
+//! common one-at-a-time case.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::code::CodeSpec;
+use crate::viterbi::{OutputMode, StreamEnd};
+
+use super::wire::{read_frame, write_frame, WireError, WireFrame, WireRequest};
+
+/// A reply the gateway refused or failed, already demultiplexed from
+/// transport-level failures.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientError {
+    /// The gateway shed the request (admission overload or deadline
+    /// expiry); back off roughly this many milliseconds.
+    Overloaded {
+        /// Suggested back-off from the gateway's error frame.
+        retry_after_ms: u64,
+    },
+    /// The gateway answered a typed non-overload error.
+    Remote {
+        /// Stable error kind (`DecodeError::variant_name()` or `"wire"`).
+        kind: String,
+        /// Human-readable message from the gateway.
+        message: String,
+    },
+    /// The connection or framing layer failed.
+    Wire(WireError),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Overloaded { retry_after_ms } => {
+                write!(f, "gateway shed the request; retry after ~{retry_after_ms} ms")
+            }
+            ClientError::Remote { kind, message } => write!(f, "gateway error [{kind}]: {message}"),
+            ClientError::Wire(e) => write!(f, "wire failure: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+/// One decoded stream as the client sees it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientResponse {
+    /// The wire request id this answers.
+    pub id: u64,
+    /// Gateway-side end-to-end latency in nanoseconds.
+    pub latency_ns: u64,
+    /// Decoded bits.
+    pub bits: Vec<u8>,
+    /// Per-bit soft values when soft output was requested.
+    pub soft: Option<Vec<f32>>,
+}
+
+/// A blocking `viterbi-wire/1` client over one TCP connection.
+pub struct GatewayClient {
+    stream: TcpStream,
+    spec: CodeSpec,
+    next_id: u64,
+}
+
+impl GatewayClient {
+    /// Connect to a gateway serving `spec`.
+    pub fn connect(addr: &str, spec: CodeSpec) -> Result<Self, ClientError> {
+        let stream = TcpStream::connect(addr).map_err(|e| {
+            ClientError::Wire(WireError::Io(format!("connecting to {addr}: {e}")))
+        })?;
+        stream.set_nodelay(true).ok();
+        Ok(GatewayClient { stream, spec, next_id: 1 })
+    }
+
+    /// Queue one request without waiting for its reply; returns the
+    /// wire id the matching [`recv`](Self::recv) will carry.
+    pub fn submit(
+        &mut self,
+        llrs: Vec<f32>,
+        end: StreamEnd,
+        output: OutputMode,
+        deadline: Option<Duration>,
+    ) -> Result<u64, ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let frame = WireFrame::Request(WireRequest {
+            id,
+            k: self.spec.k as u8,
+            rate: format!("1/{}", self.spec.beta),
+            puncture: "none".to_string(),
+            end,
+            output,
+            deadline_us: deadline.map(|d| d.as_micros() as u64).unwrap_or(0),
+            llrs,
+        });
+        write_frame(&mut self.stream, &frame).map_err(ClientError::Wire)?;
+        Ok(id)
+    }
+
+    /// Pull the next reply off the connection (submission order).
+    pub fn recv(&mut self) -> Result<ClientResponse, ClientError> {
+        match read_frame(&mut self.stream).map_err(ClientError::Wire)? {
+            WireFrame::Response(r) => Ok(ClientResponse {
+                id: r.id,
+                latency_ns: r.latency_ns,
+                bits: r.bits,
+                soft: r.soft,
+            }),
+            WireFrame::Error(e) => {
+                if e.kind == "overloaded" {
+                    Err(ClientError::Overloaded { retry_after_ms: e.retry_after_ms })
+                } else {
+                    Err(ClientError::Remote { kind: e.kind, message: e.message })
+                }
+            }
+            WireFrame::Request(_) => Err(ClientError::Wire(WireError::Malformed(
+                "gateway sent a request frame".to_string(),
+            ))),
+        }
+    }
+
+    /// Submit one stream and block for its reply.
+    pub fn decode(
+        &mut self,
+        llrs: Vec<f32>,
+        end: StreamEnd,
+        output: OutputMode,
+        deadline: Option<Duration>,
+    ) -> Result<ClientResponse, ClientError> {
+        let id = self.submit(llrs, end, output, deadline)?;
+        let resp = self.recv()?;
+        if resp.id != id {
+            return Err(ClientError::Wire(WireError::Malformed(format!(
+                "reply id {} does not match request id {id}",
+                resp.id
+            ))));
+        }
+        Ok(resp)
+    }
+}

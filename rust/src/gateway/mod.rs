@@ -1,0 +1,21 @@
+//! Out-of-process serve gateway: the `viterbi-wire/1` protocol, a
+//! TCP accept loop over N sharded [`crate::coordinator::DecodeServer`]
+//! coordinators, a shape-affine router, a pipelined client, and the
+//! mixed-traffic stress harness behind `viterbi-repro serve --stress`.
+//!
+//! See DESIGN.md §13 for the wire format, the shard-affinity rules,
+//! and the admission/deadline state machine.
+
+#![warn(missing_docs)]
+
+pub mod client;
+pub mod router;
+pub mod server;
+pub mod stress;
+pub mod wire;
+
+pub use client::{ClientError, ClientResponse, GatewayClient};
+pub use router::{RequestShape, ShardRouter};
+pub use server::{Gateway, GatewayConfig};
+pub use stress::{StressConfig, StressReport};
+pub use wire::{WireError, WireFrame, WireRequest, WireResponse, WIRE_SCHEMA_VERSION};

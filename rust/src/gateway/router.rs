@@ -1,0 +1,132 @@
+//! Shape-affine shard router.
+//!
+//! The gateway runs N independent `DecodeServer` shards. Routing is
+//! by request *shape*, not round-robin alone: uniform lane-friendly
+//! traffic (hard output, not tail-biting, a whole multiple of the
+//! lane frame length) is pinned to shard 0 so its batcher sees only
+//! homogeneous frames and the auto planner's lane routes stay hot;
+//! everything ragged, soft, or tail-biting round-robins across the
+//! remaining shards so a tail-biting burst can never stall the
+//! uniform fast path. With a single shard everything maps to it.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// The routing-relevant shape of one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestShape {
+    /// Trellis stages in the stream.
+    pub stages: usize,
+    /// Whether SOVA soft output was requested.
+    pub soft: bool,
+    /// Whether the stream is tail-biting.
+    pub tail_biting: bool,
+}
+
+impl RequestShape {
+    /// Whether this shape belongs on the uniform fast path for the
+    /// given lane frame length.
+    pub fn is_uniform(&self, lane_f: usize) -> bool {
+        !self.soft
+            && !self.tail_biting
+            && self.stages > 0
+            && lane_f > 0
+            && self.stages % lane_f == 0
+    }
+}
+
+/// Routes requests to shards and counts where they went.
+pub struct ShardRouter {
+    shards: usize,
+    lane_f: usize,
+    cursor: AtomicUsize,
+    routed: Vec<AtomicU64>,
+}
+
+impl ShardRouter {
+    /// Build a router over `shards` shards (`shards > 0`) whose
+    /// uniform fast path is frames of `lane_f` stages.
+    pub fn new(shards: usize, lane_f: usize) -> Self {
+        assert!(shards > 0, "a gateway needs at least one shard");
+        ShardRouter {
+            shards,
+            lane_f,
+            cursor: AtomicUsize::new(0),
+            routed: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Number of shards routed over.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Pick the shard for a request shape and record the decision.
+    pub fn route(&self, shape: RequestShape) -> usize {
+        let shard = if self.shards == 1 || shape.is_uniform(self.lane_f) {
+            0
+        } else {
+            1 + self.cursor.fetch_add(1, Ordering::Relaxed) % (self.shards - 1)
+        };
+        self.routed[shard].fetch_add(1, Ordering::Relaxed);
+        shard
+    }
+
+    /// How many requests each shard has received.
+    pub fn routed_counts(&self) -> Vec<u64> {
+        self.routed.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape(stages: usize, soft: bool, tail_biting: bool) -> RequestShape {
+        RequestShape { stages, soft, tail_biting }
+    }
+
+    #[test]
+    fn single_shard_takes_everything() {
+        let r = ShardRouter::new(1, 32);
+        assert_eq!(r.route(shape(64, false, false)), 0);
+        assert_eq!(r.route(shape(33, true, true)), 0);
+        assert_eq!(r.routed_counts(), vec![2]);
+    }
+
+    #[test]
+    fn uniform_traffic_pins_to_shard_zero() {
+        let r = ShardRouter::new(4, 32);
+        for mult in 1..20 {
+            assert_eq!(r.route(shape(32 * mult, false, false)), 0);
+        }
+        assert_eq!(r.routed_counts()[0], 19);
+    }
+
+    #[test]
+    fn ragged_soft_and_tail_biting_avoid_shard_zero() {
+        let r = ShardRouter::new(4, 32);
+        let shapes = [
+            shape(33, false, false), // ragged
+            shape(64, true, false),  // soft
+            shape(64, false, true),  // tail-biting
+            shape(0, false, false),  // empty
+        ];
+        for (i, &s) in shapes.iter().cycle().take(24).enumerate() {
+            let shard = r.route(s);
+            assert!(shard >= 1, "shape {i} landed on the uniform shard");
+        }
+        // Round-robin spreads evenly over shards 1..4.
+        let counts = r.routed_counts();
+        assert_eq!(counts[0], 0);
+        assert_eq!(&counts[1..], &[8, 8, 8]);
+    }
+
+    #[test]
+    fn two_shard_split_is_uniform_vs_rest() {
+        let r = ShardRouter::new(2, 16);
+        assert_eq!(r.route(shape(16, false, false)), 0);
+        assert_eq!(r.route(shape(17, false, false)), 1);
+        assert_eq!(r.route(shape(16, true, false)), 1);
+        assert_eq!(r.routed_counts(), vec![1, 2]);
+    }
+}

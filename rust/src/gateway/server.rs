@@ -1,0 +1,469 @@
+//! The out-of-process serve gateway: a TCP accept loop in front of N
+//! sharded [`DecodeServer`] coordinators.
+//!
+//! Thread topology (std threads only — no async runtime in this
+//! image):
+//!
+//! ```text
+//! [accept thread] ──TcpStream──► per connection:
+//!    [reader thread] ── parse frame → validate → route → admit ──┐
+//!         │ (typed refusals short-circuit)                       │
+//!         ▼                                                      ▼
+//!    per-connection mpsc queue ──► [writer thread] ── wait(shard) → frame
+//! ```
+//!
+//! Responses travel back in per-connection submission order (the
+//! protocol has ids, but ordered delivery keeps the writer a simple
+//! FIFO; a slow request delays its successors on the *same*
+//! connection only). Admission is deadline-aware: requests whose
+//! deadline already expired and requests the backpressure gate
+//! refuses are answered with a typed `overloaded` error frame
+//! carrying a retry hint, not queued.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::code::CodeSpec;
+use crate::coordinator::{
+    BackendSpec, BatchPolicy, DecodeServer, RequestId, ServerConfig,
+};
+use crate::frames::plan::FrameGeometry;
+use crate::obs;
+use crate::util::json::{Json, ObjBuilder};
+use crate::viterbi::DecodeError;
+
+use super::router::{RequestShape, ShardRouter};
+use super::wire::{
+    read_frame, write_frame, WireError, WireErrorFrame, WireFrame, WireRequest,
+    WireResponse,
+};
+
+/// Gateway configuration.
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Listen address (`127.0.0.1:0` binds an ephemeral port).
+    pub listen: String,
+    /// Number of coordinator shards (≥ 1).
+    pub shards: usize,
+    /// Code every shard decodes.
+    pub spec: CodeSpec,
+    /// Frame geometry every shard chunks with.
+    pub geo: FrameGeometry,
+    /// Sub-frame length for frame-parallel lanes.
+    pub f0: usize,
+    /// Dynamic-batching policy per shard.
+    pub batch: BatchPolicy,
+    /// Backpressure high watermark per shard (in-flight frames).
+    pub high_watermark: usize,
+    /// Backpressure low watermark per shard.
+    pub low_watermark: usize,
+    /// Worker threads for the uniform shard's auto backend.
+    pub threads: usize,
+    /// Calibration profile for the uniform shard's planner; every
+    /// shard's planner shares this one observed-throughput sidecar.
+    pub profile: Option<PathBuf>,
+}
+
+impl GatewayConfig {
+    /// A ready-to-serve configuration on an ephemeral loopback port.
+    pub fn loopback(spec: CodeSpec, geo: FrameGeometry, shards: usize) -> Self {
+        GatewayConfig {
+            listen: "127.0.0.1:0".to_string(),
+            shards,
+            spec,
+            geo,
+            f0: (geo.f / 4).max(1),
+            batch: BatchPolicy::default(),
+            high_watermark: 4096,
+            low_watermark: 1024,
+            threads: 2,
+            profile: None,
+        }
+    }
+
+    /// The backend spec for one shard. Shard 0 carries the uniform
+    /// lane-friendly fast path: with more than one shard it runs the
+    /// auto backend (planner-routed lanes, hard output only — exactly
+    /// what the router pins there). Every other shard — and a lone
+    /// single shard, which must accept *all* traffic — runs the fully
+    /// capable native backend (soft output, tail-biting, ragged
+    /// lengths).
+    fn shard_backend(&self, shard: usize) -> BackendSpec {
+        if shard == 0 && self.shards > 1 {
+            BackendSpec::Auto {
+                spec: self.spec.clone(),
+                geo: self.geo,
+                f0: self.f0,
+                threads: self.threads,
+                budget_bytes: None,
+                profile: self.profile.clone(),
+            }
+        } else {
+            BackendSpec::Native {
+                spec: self.spec.clone(),
+                geo: self.geo,
+                f0: Some(self.f0),
+            }
+        }
+    }
+}
+
+/// One queued reply for a connection's writer thread.
+enum Reply {
+    /// Wait on this shard for this coordinator request id, then
+    /// answer wire request `wire_id`.
+    Wait { wire_id: u64, shard: usize, server_id: RequestId },
+    /// Send this frame as-is (admission refusals, protocol errors).
+    Immediate(WireFrame),
+}
+
+/// The serve gateway. Dropping it stops the accept loop; shards shut
+/// down once the last connection thread releases its handle.
+pub struct Gateway {
+    local_addr: SocketAddr,
+    shards: Arc<Vec<DecodeServer>>,
+    router: Arc<ShardRouter>,
+    spec: CodeSpec,
+    geo: FrameGeometry,
+    shed: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Bind the listen address, start the shards, and spawn the
+    /// accept loop.
+    pub fn start(cfg: GatewayConfig) -> Result<Self> {
+        assert!(cfg.shards > 0, "a gateway needs at least one shard");
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding gateway listener on {}", cfg.listen))?;
+        let local_addr = listener.local_addr().context("resolving bound address")?;
+
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for shard in 0..cfg.shards {
+            let server = DecodeServer::start(ServerConfig {
+                backend: cfg.shard_backend(shard),
+                batch: cfg.batch,
+                high_watermark: cfg.high_watermark,
+                low_watermark: cfg.low_watermark,
+            })
+            .with_context(|| format!("starting coordinator shard {shard}"))?;
+            shards.push(server);
+        }
+        let shards = Arc::new(shards);
+        let router = Arc::new(ShardRouter::new(cfg.shards, cfg.geo.f));
+        let shed = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let accept = {
+            let shards = Arc::clone(&shards);
+            let router = Arc::clone(&router);
+            let shed = Arc::clone(&shed);
+            let stop = Arc::clone(&stop);
+            let spec = cfg.spec.clone();
+            std::thread::Builder::new()
+                .name("gw-accept".to_string())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(stream) = conn else { continue };
+                        obs::counter("gateway.connections", 1.0);
+                        serve_connection(
+                            stream,
+                            Arc::clone(&shards),
+                            Arc::clone(&router),
+                            Arc::clone(&shed),
+                            spec.clone(),
+                        );
+                    }
+                })
+                .context("spawning gateway accept thread")?
+        };
+
+        Ok(Gateway {
+            local_addr,
+            shards,
+            router,
+            spec: cfg.spec,
+            geo: cfg.geo,
+            shed,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound listen address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The code this gateway serves.
+    pub fn spec(&self) -> &CodeSpec {
+        &self.spec
+    }
+
+    /// The frame geometry the shards chunk with.
+    pub fn geo(&self) -> FrameGeometry {
+        self.geo
+    }
+
+    /// The coordinator shards, for direct inspection in tests.
+    pub fn shards(&self) -> &[DecodeServer] {
+        &self.shards
+    }
+
+    /// Per-shard routed-request counts.
+    pub fn routed_counts(&self) -> Vec<u64> {
+        self.router.routed_counts()
+    }
+
+    /// Requests answered with `overloaded` (admission shed + deadline
+    /// reaping observed at reply time).
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Persist each shard's observed per-route throughput EWMAs.
+    /// With one shard this writes `base` itself; with N > 1 each
+    /// shard writes its own `<stem>.shard<i>.jsonl` sidecar next to
+    /// `base` so concurrent shards never clobber one file. Shards
+    /// whose backend keeps no observations (the specialty native
+    /// shards) are skipped. Returns `(shard, path, routes)` per file
+    /// written.
+    pub fn save_observed(&self, base: &Path) -> Vec<(usize, PathBuf, usize)> {
+        let mut written = Vec::new();
+        for (i, shard) in self.shards.iter().enumerate() {
+            let path = if self.shards.len() == 1 {
+                base.to_path_buf()
+            } else {
+                crate::tuner::observed::shard_sidecar_path(base, i)
+            };
+            if let Ok(routes) = shard.save_observed(&path) {
+                written.push((i, path, routes));
+            }
+        }
+        written
+    }
+
+    /// One JSON object describing the gateway: per-shard metrics
+    /// snapshots, routed counts, and the shed counter.
+    pub fn metrics_json(&self) -> Json {
+        let routed = self.router.routed_counts();
+        let shards: Vec<Json> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                ObjBuilder::new()
+                    .num("shard", i as f64)
+                    .str("backend", &s.backend_name())
+                    .num("routed", routed[i] as f64)
+                    .field("metrics", s.metrics().render_json())
+                    .build()
+            })
+            .collect();
+        ObjBuilder::new()
+            .str("schema", super::wire::WIRE_SCHEMA_VERSION)
+            .num("shed", self.shed.load(Ordering::Relaxed) as f64)
+            .field("shards", Json::Arr(shards))
+            .build()
+    }
+
+    /// Stop accepting connections and join the accept thread. Live
+    /// connections finish on their own threads.
+    pub fn stop(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Build the wire error frame for a decode failure and count sheds.
+fn decode_error_frame(shed: &AtomicU64, wire_id: u64, err: &DecodeError) -> WireFrame {
+    let retry_after_ms = match err {
+        DecodeError::Overloaded { retry_after_ms } => {
+            shed.fetch_add(1, Ordering::Relaxed);
+            obs::counter("gateway.shed", 1.0);
+            *retry_after_ms
+        }
+        _ => 0,
+    };
+    WireFrame::Error(WireErrorFrame {
+        id: wire_id,
+        retry_after_ms,
+        kind: err.variant_name().to_string(),
+        message: err.to_string(),
+    })
+}
+
+/// A refusal the framing/validation layer produces itself.
+fn wire_refusal(wire_id: u64, message: String) -> WireFrame {
+    WireFrame::Error(WireErrorFrame {
+        id: wire_id,
+        retry_after_ms: 0,
+        kind: "wire".to_string(),
+        message,
+    })
+}
+
+/// Spawn the reader/writer thread pair for one accepted connection.
+fn serve_connection(
+    stream: TcpStream,
+    shards: Arc<Vec<DecodeServer>>,
+    router: Arc<ShardRouter>,
+    shed: Arc<AtomicU64>,
+    spec: CodeSpec,
+) {
+    let Ok(write_stream) = stream.try_clone() else { return };
+    let (tx, rx) = mpsc::channel::<Reply>();
+
+    let shards_r = Arc::clone(&shards);
+    let shed_r = Arc::clone(&shed);
+    let _ = std::thread::Builder::new().name("gw-read".to_string()).spawn(move || {
+        reader_loop(stream, &shards_r, &router, &shed_r, &spec, &tx);
+    });
+    let _ = std::thread::Builder::new().name("gw-write".to_string()).spawn(move || {
+        writer_loop(write_stream, &shards, &shed, rx);
+    });
+}
+
+/// Parse frames off the socket, admit them, and queue replies until
+/// EOF or a framing error.
+fn reader_loop(
+    mut stream: TcpStream,
+    shards: &[DecodeServer],
+    router: &ShardRouter,
+    shed: &AtomicU64,
+    spec: &CodeSpec,
+    tx: &mpsc::Sender<Reply>,
+) {
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(WireError::Eof) => break,
+            Err(e) => {
+                // The stream can no longer be trusted to be in sync;
+                // answer once and hang up.
+                let _ = tx.send(Reply::Immediate(wire_refusal(0, e.to_string())));
+                break;
+            }
+        };
+        let req = match frame {
+            WireFrame::Request(r) => r,
+            WireFrame::Response(_) | WireFrame::Error(_) => {
+                let _ = tx.send(Reply::Immediate(wire_refusal(
+                    0,
+                    "only request frames flow client→gateway".to_string(),
+                )));
+                break;
+            }
+        };
+        let reply = admit(&req, shards, router, shed, spec);
+        if tx.send(reply).is_err() {
+            break;
+        }
+    }
+}
+
+/// Validate one request against the served code, route it, and admit
+/// it to a shard.
+fn admit(
+    req: &WireRequest,
+    shards: &[DecodeServer],
+    router: &ShardRouter,
+    shed: &AtomicU64,
+    spec: &CodeSpec,
+) -> Reply {
+    let _g = obs::span("gateway.admit");
+    let expect_rate = format!("1/{}", spec.beta);
+    if u32::from(req.k) != spec.k || req.rate != expect_rate {
+        return Reply::Immediate(wire_refusal(
+            req.id,
+            format!(
+                "this gateway serves K={} rate {expect_rate}; got K={} rate {}",
+                spec.k, req.k, req.rate
+            ),
+        ));
+    }
+    if req.puncture != "none" {
+        return Reply::Immediate(wire_refusal(
+            req.id,
+            format!(
+                "punctured streams must be de-punctured client-side; got pattern {}",
+                req.puncture
+            ),
+        ));
+    }
+    let beta = spec.beta as usize;
+    if beta == 0 || req.llrs.len() % beta != 0 {
+        return Reply::Immediate(wire_refusal(
+            req.id,
+            format!("{} LLRs is not a multiple of beta={beta}", req.llrs.len()),
+        ));
+    }
+    let shape = RequestShape {
+        stages: req.llrs.len() / beta,
+        soft: matches!(req.output, crate::viterbi::OutputMode::Soft),
+        tail_biting: matches!(req.end, crate::viterbi::StreamEnd::TailBiting),
+    };
+    let shard = router.route(shape);
+    let deadline = (req.deadline_us > 0)
+        .then(|| Instant::now() + Duration::from_micros(req.deadline_us));
+    obs::counter("gateway.requests", 1.0);
+    match shards[shard].try_submit_request(req.llrs.clone(), req.end, req.output, deadline)
+    {
+        Ok(server_id) => Reply::Wait { wire_id: req.id, shard, server_id },
+        Err(e) => Reply::Immediate(decode_error_frame(shed, req.id, &e)),
+    }
+}
+
+/// Drain the reply queue in submission order, waiting on shards and
+/// writing frames until the queue closes or the socket dies.
+fn writer_loop(
+    mut stream: TcpStream,
+    shards: &[DecodeServer],
+    shed: &AtomicU64,
+    rx: mpsc::Receiver<Reply>,
+) {
+    while let Ok(reply) = rx.recv() {
+        let frame = match reply {
+            Reply::Immediate(f) => f,
+            Reply::Wait { wire_id, shard, server_id } => {
+                let _g = obs::span("gateway.reply");
+                match shards[shard].wait(server_id) {
+                    Ok(resp) => WireFrame::Response(WireResponse {
+                        id: wire_id,
+                        latency_ns: resp.latency_ns,
+                        bits: resp.bits,
+                        soft: resp.soft,
+                    }),
+                    // Overloaded can still surface from wait(): jobs
+                    // whose deadline expired in the queue are reaped
+                    // before dispatch. Count those sheds too.
+                    Err(e) => decode_error_frame(shed, wire_id, &e),
+                }
+            }
+        };
+        if write_frame(&mut stream, &frame).is_err() {
+            break;
+        }
+    }
+}

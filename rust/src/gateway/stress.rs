@@ -1,0 +1,203 @@
+//! Mixed-traffic stress harness behind `viterbi-repro serve --stress`.
+//!
+//! Drives a running [`Gateway`] with C client connections generating
+//! reproducible mixed traffic — uniform lane-friendly streams, ragged
+//! lengths, ~10% soft-output, ~10% tail-biting — at a controlled
+//! aggregate arrival rate, through the same encoder/AWGN channel
+//! machinery the BER harness uses. Publishes client-observed p50/p99
+//! latency, completion/shed/error counts, and (via
+//! [`report_json`]) the gateway's per-shard dispatch and metrics.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::channel::{bpsk, llr, AwgnChannel, Rng64};
+use crate::code::{encode, CodeSpec, Termination};
+use crate::util::json::{Json, ObjBuilder};
+use crate::util::stats::quantile;
+use crate::viterbi::{OutputMode, StreamEnd};
+
+use super::client::{ClientError, GatewayClient};
+use super::server::Gateway;
+
+/// Stress-run configuration.
+#[derive(Debug, Clone)]
+pub struct StressConfig {
+    /// Total requests across all connections.
+    pub requests: usize,
+    /// Aggregate arrival rate in requests/second (0 = as fast as the
+    /// connections can go).
+    pub rate_hz: f64,
+    /// Concurrent client connections.
+    pub connections: usize,
+    /// Per-request completion deadline (None = unbounded).
+    pub deadline: Option<Duration>,
+    /// Channel operating point for the generated traffic.
+    pub ebn0_db: f64,
+    /// Traffic-generation seed.
+    pub seed: u64,
+}
+
+impl Default for StressConfig {
+    fn default() -> Self {
+        StressConfig {
+            requests: 200,
+            rate_hz: 0.0,
+            connections: 4,
+            deadline: None,
+            ebn0_db: 4.0,
+            seed: 0x57E55,
+        }
+    }
+}
+
+/// What one stress run observed, client-side.
+#[derive(Debug, Clone)]
+pub struct StressReport {
+    /// Requests submitted.
+    pub submitted: usize,
+    /// Requests decoded successfully.
+    pub completed: usize,
+    /// Requests the gateway shed (`overloaded` replies).
+    pub shed: usize,
+    /// Non-overload failures (should be zero).
+    pub errors: usize,
+    /// Client-observed median latency in nanoseconds.
+    pub p50_ns: u64,
+    /// Client-observed 99th-percentile latency in nanoseconds.
+    pub p99_ns: u64,
+    /// Wall-clock duration of the run in nanoseconds.
+    pub wall_ns: u64,
+}
+
+/// One generated request.
+struct TrafficItem {
+    llrs: Vec<f32>,
+    end: StreamEnd,
+    output: OutputMode,
+}
+
+/// Generate one reproducible traffic item: uniform multiples of the
+/// lane frame length most of the time, ragged lengths, soft output,
+/// and tail-biting streams mixed in.
+fn gen_item(rng: &mut Rng64, spec: &CodeSpec, lane_f: usize, ebn0_db: f64) -> TrafficItem {
+    let style = rng.gen_range_usize(0, 10);
+    let (n, end, output) = match style {
+        // ~10% tail-biting (hard output, modest lengths).
+        0 => (rng.gen_range_usize(24, 200), StreamEnd::TailBiting, OutputMode::Hard),
+        // ~10% soft output on ragged truncated streams.
+        1 => (rng.gen_range_usize(17, 400), StreamEnd::Truncated, OutputMode::Soft),
+        // ~20% ragged hard traffic.
+        2 | 3 => (rng.gen_range_usize(1, 600), StreamEnd::Truncated, OutputMode::Hard),
+        // ~60% uniform lane-friendly traffic.
+        _ => {
+            let mult = rng.gen_range_usize(1, 5);
+            (lane_f * mult, StreamEnd::Truncated, OutputMode::Hard)
+        }
+    };
+    let mut msg = vec![0u8; n];
+    rng.fill_bits(&mut msg);
+    let term = match end {
+        StreamEnd::TailBiting => Termination::TailBiting,
+        _ => Termination::Truncated,
+    };
+    let enc = encode(spec, &msg, term);
+    let ch = AwgnChannel::new(ebn0_db, spec.rate());
+    let rx = ch.transmit(&bpsk::modulate(&enc), rng);
+    let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+    TrafficItem { llrs, end, output }
+}
+
+/// Run the stress load against a gateway and gather the report.
+pub fn run(cfg: &StressConfig, gateway: &Gateway) -> StressReport {
+    let addr = gateway.local_addr().to_string();
+    let spec = gateway.spec().clone();
+    let lane_f = gateway.geo().f;
+    let cfg = Arc::new(cfg.clone());
+    let connections = cfg.connections.max(1);
+    // Aggregate rate split evenly across connections.
+    let period = (cfg.rate_hz > 0.0)
+        .then(|| Duration::from_secs_f64(connections as f64 / cfg.rate_hz));
+
+    let started = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..connections {
+        let quota = cfg.requests / connections
+            + if t < cfg.requests % connections { 1 } else { 0 };
+        let addr = addr.clone();
+        let spec = spec.clone();
+        let cfg = Arc::clone(&cfg);
+        handles.push(std::thread::spawn(move || {
+            let mut latencies: Vec<u64> = Vec::with_capacity(quota);
+            let (mut completed, mut shed, mut errors) = (0usize, 0usize, 0usize);
+            let mut rng = Rng64::seeded(cfg.seed ^ (0x9E37 + t as u64));
+            let Ok(mut client) = GatewayClient::connect(&addr, spec.clone()) else {
+                return (latencies, completed, shed, quota);
+            };
+            for _ in 0..quota {
+                let item = gen_item(&mut rng, &spec, lane_f, cfg.ebn0_db);
+                let t0 = Instant::now();
+                match client.decode(item.llrs, item.end, item.output, cfg.deadline) {
+                    Ok(resp) => {
+                        completed += 1;
+                        latencies.push(t0.elapsed().as_nanos() as u64);
+                        debug_assert!(!resp.bits.is_empty());
+                    }
+                    Err(ClientError::Overloaded { retry_after_ms: _ }) => shed += 1,
+                    Err(_) => errors += 1,
+                }
+                if let Some(p) = period {
+                    let next = t0 + p;
+                    let now = Instant::now();
+                    if next > now {
+                        std::thread::sleep(next - now);
+                    }
+                }
+            }
+            (latencies, completed, shed, errors)
+        }));
+    }
+
+    let mut latencies: Vec<u64> = Vec::new();
+    let (mut completed, mut shed, mut errors) = (0usize, 0usize, 0usize);
+    for h in handles {
+        let (l, c, s, e) = h.join().expect("stress connection thread panicked");
+        latencies.extend(l);
+        completed += c;
+        shed += s;
+        errors += e;
+    }
+    let wall_ns = started.elapsed().as_nanos() as u64;
+    let mut sorted: Vec<f64> = latencies.iter().map(|&n| n as f64).collect();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (p50_ns, p99_ns) = if sorted.is_empty() {
+        (0, 0)
+    } else {
+        (quantile(&sorted, 0.50) as u64, quantile(&sorted, 0.99) as u64)
+    };
+    StressReport {
+        submitted: cfg.requests,
+        completed,
+        shed,
+        errors,
+        p50_ns,
+        p99_ns,
+        wall_ns,
+    }
+}
+
+/// The `viterbi-stress/1` JSON record: client-side observations plus
+/// the gateway's per-shard dispatch and metrics.
+pub fn report_json(report: &StressReport, gateway: &Gateway) -> Json {
+    ObjBuilder::new()
+        .str("schema", "viterbi-stress/1")
+        .num("submitted", report.submitted as f64)
+        .num("completed", report.completed as f64)
+        .num("shed", report.shed as f64)
+        .num("errors", report.errors as f64)
+        .num("client_p50_ns", report.p50_ns as f64)
+        .num("client_p99_ns", report.p99_ns as f64)
+        .num("wall_ns", report.wall_ns as f64)
+        .field("gateway", gateway.metrics_json())
+        .build()
+}

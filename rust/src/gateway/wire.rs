@@ -1,0 +1,624 @@
+//! The `viterbi-wire/1` framing protocol: length-prefixed binary
+//! frames carrying decode requests, responses, and typed errors over
+//! a byte stream (TCP in the gateway, byte slices in the tests).
+//!
+//! Every frame is a fixed 10-byte header followed by a payload:
+//!
+//! | bytes | field       | value                                  |
+//! |-------|-------------|----------------------------------------|
+//! | 0..4  | magic       | `b"VITW"`                              |
+//! | 4     | version     | `1`                                    |
+//! | 5     | kind        | 1 = request, 2 = response, 3 = error   |
+//! | 6..10 | payload len | u32 LE, ≤ [`MAX_PAYLOAD`]              |
+//!
+//! All integers are little-endian. Malformed input decodes to a typed
+//! [`WireError`] instead of a panic or a silent desync: bad magic,
+//! unknown version/kind, oversize payloads, truncation mid-frame, and
+//! payload-level malformations are all distinct variants, and a clean
+//! EOF at a frame boundary is [`WireError::Eof`] so connection
+//! shutdown is distinguishable from corruption.
+
+use std::io::{Read, Write};
+
+use crate::viterbi::{OutputMode, StreamEnd};
+
+/// Schema tag for logs and docs.
+pub const WIRE_SCHEMA_VERSION: &str = "viterbi-wire/1";
+
+/// Frame magic: the first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"VITW";
+
+/// Protocol version this build speaks.
+pub const VERSION: u8 = 1;
+
+/// Hard payload ceiling (64 MiB ≈ 16M LLRs): anything larger is a
+/// protocol error, not an allocation request.
+pub const MAX_PAYLOAD: usize = 1 << 26;
+
+/// Header length in bytes (magic + version + kind + payload length).
+pub const HEADER_LEN: usize = 10;
+
+const KIND_REQUEST: u8 = 1;
+const KIND_RESPONSE: u8 = 2;
+const KIND_ERROR: u8 = 3;
+
+/// One decode request as it travels on the wire. The `k`/`rate`/
+/// `puncture` labels describe the code the client encoded with; the
+/// gateway validates them against its configured code and answers a
+/// typed error frame on mismatch instead of decoding garbage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    /// Client-chosen request id, echoed on the matching response.
+    pub id: u64,
+    /// Constraint length of the client's code.
+    pub k: u8,
+    /// Mother-code rate label, e.g. `"1/2"`.
+    pub rate: String,
+    /// Puncturing label (`"none"` for un-punctured streams; punctured
+    /// clients de-puncture to neutral LLRs before submitting).
+    pub puncture: String,
+    /// How the stream ends.
+    pub end: StreamEnd,
+    /// Hard bits only, or bits plus SOVA reliabilities.
+    pub output: OutputMode,
+    /// Completion deadline in microseconds from arrival (0 = none).
+    pub deadline_us: u64,
+    /// Stage-major LLRs (β per trellis stage).
+    pub llrs: Vec<f32>,
+}
+
+/// One decoded stream as it travels back.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireResponse {
+    /// The request id this answers.
+    pub id: u64,
+    /// Server-side end-to-end latency in nanoseconds.
+    pub latency_ns: u64,
+    /// Decoded bits, one per trellis stage.
+    pub bits: Vec<u8>,
+    /// Per-bit signed soft values (present iff the request asked for
+    /// soft output).
+    pub soft: Option<Vec<f32>>,
+}
+
+/// A typed failure frame: the wire form of a `DecodeError` (or a
+/// gateway-level refusal).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireErrorFrame {
+    /// The request id this answers (0 when the failure is not tied to
+    /// one request, e.g. an unreadable frame).
+    pub id: u64,
+    /// Suggested back-off before resubmitting, in milliseconds
+    /// (nonzero only for overload shedding).
+    pub retry_after_ms: u64,
+    /// Stable error kind — `DecodeError::variant_name()` for decode
+    /// failures, `"wire"` for protocol-level refusals.
+    pub kind: String,
+    /// Human-readable message.
+    pub message: String,
+}
+
+/// Any frame of the protocol.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireFrame {
+    /// A decode request (client → gateway).
+    Request(WireRequest),
+    /// A decoded stream (gateway → client).
+    Response(WireResponse),
+    /// A typed failure (gateway → client).
+    Error(WireErrorFrame),
+}
+
+/// Typed decode failure of the framing layer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireError {
+    /// Clean end of stream at a frame boundary (normal shutdown).
+    Eof,
+    /// The first four bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// The frame declared a version this build does not speak.
+    UnsupportedVersion(u8),
+    /// The frame declared an unknown kind byte.
+    UnknownKind(u8),
+    /// The declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversize(usize),
+    /// The stream ended mid-frame.
+    Truncated,
+    /// The payload did not parse as its declared kind.
+    Malformed(String),
+    /// An I/O failure underneath the framing.
+    Io(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Eof => write!(f, "end of stream"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:?}"),
+            WireError::UnsupportedVersion(v) => {
+                write!(f, "unsupported {WIRE_SCHEMA_VERSION} version byte {v}")
+            }
+            WireError::UnknownKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::Oversize(n) => {
+                write!(f, "payload of {n} bytes exceeds the {MAX_PAYLOAD}-byte cap")
+            }
+            WireError::Truncated => write!(f, "stream ended mid-frame"),
+            WireError::Malformed(why) => write!(f, "malformed payload: {why}"),
+            WireError::Io(why) => write!(f, "i/o failure: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+fn end_code(end: StreamEnd) -> u8 {
+    match end {
+        StreamEnd::Terminated => 0,
+        StreamEnd::Truncated => 1,
+        StreamEnd::TailBiting => 2,
+    }
+}
+
+fn end_from(code: u8) -> Result<StreamEnd, WireError> {
+    match code {
+        0 => Ok(StreamEnd::Terminated),
+        1 => Ok(StreamEnd::Truncated),
+        2 => Ok(StreamEnd::TailBiting),
+        other => Err(WireError::Malformed(format!("unknown stream-end code {other}"))),
+    }
+}
+
+fn output_code(output: OutputMode) -> u8 {
+    match output {
+        OutputMode::Hard => 0,
+        OutputMode::Soft => 1,
+    }
+}
+
+fn output_from(code: u8) -> Result<OutputMode, WireError> {
+    match code {
+        0 => Ok(OutputMode::Hard),
+        1 => Ok(OutputMode::Soft),
+        other => Err(WireError::Malformed(format!("unknown output-mode code {other}"))),
+    }
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_short_str(out: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    debug_assert!(bytes.len() <= u8::MAX as usize, "label too long for the wire");
+    out.push(bytes.len().min(u8::MAX as usize) as u8);
+    out.extend_from_slice(&bytes[..bytes.len().min(u8::MAX as usize)]);
+}
+
+fn put_long_str(out: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(bytes);
+}
+
+/// Encode one frame to bytes (header + payload).
+pub fn encode_frame(frame: &WireFrame) -> Vec<u8> {
+    let (kind, payload) = match frame {
+        WireFrame::Request(r) => {
+            let mut p = Vec::with_capacity(32 + 4 * r.llrs.len());
+            p.extend_from_slice(&r.id.to_le_bytes());
+            p.push(r.k);
+            put_short_str(&mut p, &r.rate);
+            put_short_str(&mut p, &r.puncture);
+            p.push(end_code(r.end));
+            p.push(output_code(r.output));
+            p.extend_from_slice(&r.deadline_us.to_le_bytes());
+            p.extend_from_slice(&(r.llrs.len() as u32).to_le_bytes());
+            for &x in &r.llrs {
+                p.extend_from_slice(&x.to_le_bytes());
+            }
+            (KIND_REQUEST, p)
+        }
+        WireFrame::Response(r) => {
+            let soft_len = r.soft.as_ref().map(Vec::len).unwrap_or(0);
+            let mut p = Vec::with_capacity(24 + r.bits.len() + 4 * soft_len);
+            p.extend_from_slice(&r.id.to_le_bytes());
+            p.extend_from_slice(&r.latency_ns.to_le_bytes());
+            p.extend_from_slice(&(r.bits.len() as u32).to_le_bytes());
+            p.extend_from_slice(&r.bits);
+            match &r.soft {
+                Some(soft) => {
+                    p.push(1);
+                    p.extend_from_slice(&(soft.len() as u32).to_le_bytes());
+                    for &x in soft {
+                        p.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                None => p.push(0),
+            }
+            (KIND_RESPONSE, p)
+        }
+        WireFrame::Error(e) => {
+            let mut p = Vec::with_capacity(32 + e.kind.len() + e.message.len());
+            p.extend_from_slice(&e.id.to_le_bytes());
+            p.extend_from_slice(&e.retry_after_ms.to_le_bytes());
+            put_short_str(&mut p, &e.kind);
+            put_long_str(&mut p, &e.message);
+            (KIND_ERROR, p)
+        }
+    };
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(kind);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Strict little-endian payload reader; every getter fails with
+/// [`WireError::Malformed`] instead of panicking on short input.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                WireError::Malformed(format!(
+                    "payload too short: wanted {n} bytes at offset {}",
+                    self.pos
+                ))
+            })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn short_str(&mut self) -> Result<String, WireError> {
+        let n = self.u8()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::Malformed("label is not UTF-8".to_string()))
+    }
+
+    fn long_str(&mut self) -> Result<String, WireError> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::Malformed("message is not UTF-8".to_string()))
+    }
+
+    fn finish(&self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::Malformed(format!(
+                "{} trailing payload bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Decode one payload of the given kind byte.
+fn decode_payload(kind: u8, payload: &[u8]) -> Result<WireFrame, WireError> {
+    let mut c = Cursor::new(payload);
+    let frame = match kind {
+        KIND_REQUEST => {
+            let id = c.u64()?;
+            let k = c.u8()?;
+            let rate = c.short_str()?;
+            let puncture = c.short_str()?;
+            let end = end_from(c.u8()?)?;
+            let output = output_from(c.u8()?)?;
+            let deadline_us = c.u64()?;
+            let n = c.u32()? as usize;
+            // The count must be consistent with the payload size before
+            // any allocation happens.
+            if payload.len().saturating_sub(c.pos) != 4 * n {
+                return Err(WireError::Malformed(format!(
+                    "LLR count {n} disagrees with {} remaining payload bytes",
+                    payload.len() - c.pos
+                )));
+            }
+            let mut llrs = Vec::with_capacity(n);
+            for _ in 0..n {
+                llrs.push(c.f32()?);
+            }
+            WireFrame::Request(WireRequest {
+                id,
+                k,
+                rate,
+                puncture,
+                end,
+                output,
+                deadline_us,
+                llrs,
+            })
+        }
+        KIND_RESPONSE => {
+            let id = c.u64()?;
+            let latency_ns = c.u64()?;
+            let nbits = c.u32()? as usize;
+            let bits = c.take(nbits)?.to_vec();
+            let soft = match c.u8()? {
+                0 => None,
+                1 => {
+                    let n = c.u32()? as usize;
+                    if payload.len().saturating_sub(c.pos) != 4 * n {
+                        return Err(WireError::Malformed(format!(
+                            "soft count {n} disagrees with {} remaining payload bytes",
+                            payload.len() - c.pos
+                        )));
+                    }
+                    let mut soft = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        soft.push(c.f32()?);
+                    }
+                    Some(soft)
+                }
+                other => {
+                    return Err(WireError::Malformed(format!(
+                        "unknown soft-presence byte {other}"
+                    )))
+                }
+            };
+            WireFrame::Response(WireResponse { id, latency_ns, bits, soft })
+        }
+        KIND_ERROR => {
+            let id = c.u64()?;
+            let retry_after_ms = c.u64()?;
+            let kind = c.short_str()?;
+            let message = c.long_str()?;
+            WireFrame::Error(WireErrorFrame { id, retry_after_ms, kind, message })
+        }
+        other => return Err(WireError::UnknownKind(other)),
+    };
+    c.finish()?;
+    Ok(frame)
+}
+
+/// Fill `buf` from `r`. A clean EOF before the first byte is
+/// [`WireError::Eof`] when `at_boundary`; an EOF anywhere else is
+/// [`WireError::Truncated`].
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8], at_boundary: bool) -> Result<(), WireError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(if at_boundary && filled == 0 {
+                    WireError::Eof
+                } else {
+                    WireError::Truncated
+                });
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e.to_string())),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame from a byte stream.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<WireFrame, WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    read_full(r, &mut header, true)?;
+    let magic: [u8; 4] = header[0..4].try_into().expect("4 bytes");
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    if header[4] != VERSION {
+        return Err(WireError::UnsupportedVersion(header[4]));
+    }
+    let kind = header[5];
+    let len = u32::from_le_bytes(header[6..10].try_into().expect("4 bytes")) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(WireError::Oversize(len));
+    }
+    let mut payload = vec![0u8; len];
+    read_full(r, &mut payload, false)?;
+    decode_payload(kind, &payload)
+}
+
+/// Write one frame to a byte stream.
+pub fn write_frame<W: Write>(w: &mut W, frame: &WireFrame) -> Result<(), WireError> {
+    let bytes = encode_frame(frame);
+    w.write_all(&bytes).map_err(|e| WireError::Io(e.to_string()))?;
+    w.flush().map_err(|e| WireError::Io(e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn request() -> WireFrame {
+        WireFrame::Request(WireRequest {
+            id: 42,
+            k: 7,
+            rate: "1/2".to_string(),
+            puncture: "none".to_string(),
+            end: StreamEnd::TailBiting,
+            output: OutputMode::Soft,
+            deadline_us: 12_500,
+            llrs: vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE],
+        })
+    }
+
+    fn roundtrip(frame: &WireFrame) -> WireFrame {
+        let bytes = encode_frame(frame);
+        let mut r = &bytes[..];
+        let back = read_frame(&mut r).expect("decodes");
+        assert!(r.is_empty(), "whole frame consumed");
+        back
+    }
+
+    #[test]
+    fn request_round_trips() {
+        let f = request();
+        assert_eq!(roundtrip(&f), f);
+    }
+
+    #[test]
+    fn response_round_trips_hard_and_soft() {
+        let hard = WireFrame::Response(WireResponse {
+            id: 7,
+            latency_ns: 123_456,
+            bits: vec![0, 1, 1, 0, 1],
+            soft: None,
+        });
+        assert_eq!(roundtrip(&hard), hard);
+        let soft = WireFrame::Response(WireResponse {
+            id: 8,
+            latency_ns: 1,
+            bits: vec![1, 0],
+            soft: Some(vec![-3.5, 4.25]),
+        });
+        assert_eq!(roundtrip(&soft), soft);
+    }
+
+    #[test]
+    fn error_round_trips() {
+        let f = WireFrame::Error(WireErrorFrame {
+            id: 9,
+            retry_after_ms: 25,
+            kind: "overloaded".to_string(),
+            message: "service overloaded; retry after ~25 ms".to_string(),
+        });
+        assert_eq!(roundtrip(&f), f);
+    }
+
+    #[test]
+    fn consecutive_frames_stay_in_sync() {
+        let frames = vec![
+            request(),
+            WireFrame::Response(WireResponse {
+                id: 42,
+                latency_ns: 10,
+                bits: vec![1],
+                soft: None,
+            }),
+            WireFrame::Error(WireErrorFrame {
+                id: 43,
+                retry_after_ms: 0,
+                kind: "invalid-request".to_string(),
+                message: "nope".to_string(),
+            }),
+        ];
+        let mut bytes = Vec::new();
+        for f in &frames {
+            bytes.extend_from_slice(&encode_frame(f));
+        }
+        let mut r = &bytes[..];
+        for f in &frames {
+            assert_eq!(&read_frame(&mut r).unwrap(), f);
+        }
+        assert!(matches!(read_frame(&mut r), Err(WireError::Eof)));
+    }
+
+    #[test]
+    fn clean_eof_vs_truncation() {
+        let empty: &[u8] = &[];
+        assert!(matches!(read_frame(&mut { empty }), Err(WireError::Eof)));
+        let bytes = encode_frame(&request());
+        // Any proper prefix is Truncated, never Eof and never a panic.
+        for cut in [1, 4, HEADER_LEN - 1, HEADER_LEN, HEADER_LEN + 3, bytes.len() - 1] {
+            let mut r = &bytes[..cut];
+            assert!(
+                matches!(read_frame(&mut r), Err(WireError::Truncated)),
+                "cut at {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_and_kind_are_typed() {
+        let good = encode_frame(&request());
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(read_frame(&mut &bad[..]), Err(WireError::BadMagic(_))));
+        let mut bad = good.clone();
+        bad[4] = 9;
+        assert!(matches!(
+            read_frame(&mut &bad[..]),
+            Err(WireError::UnsupportedVersion(9))
+        ));
+        let mut bad = good.clone();
+        bad[5] = 200;
+        assert!(matches!(read_frame(&mut &bad[..]), Err(WireError::UnknownKind(200))));
+    }
+
+    #[test]
+    fn oversize_payload_is_refused_before_allocation() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.push(VERSION);
+        bytes.push(1);
+        bytes.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut &bytes[..]),
+            Err(WireError::Oversize(n)) if n == u32::MAX as usize
+        ));
+    }
+
+    #[test]
+    fn malformed_payloads_are_typed() {
+        // A request payload whose LLR count disagrees with its size.
+        let good = encode_frame(&request());
+        let mut lying = good.clone();
+        // The LLR count field sits 4 bytes before the LLR data; patch
+        // it to claim one more LLR than the payload holds.
+        let count_off = good.len() - 4 * 4 - 4;
+        lying[count_off..count_off + 4].copy_from_slice(&5u32.to_le_bytes());
+        assert!(matches!(read_frame(&mut &lying[..]), Err(WireError::Malformed(_))));
+
+        // An unknown stream-end code inside an otherwise valid frame.
+        let mut bad_end = good.clone();
+        // id(8) + k(1) + "1/2"(1+3) + "none"(1+4) → end byte offset 18
+        // within the payload, after the 10-byte header.
+        bad_end[HEADER_LEN + 18] = 77;
+        assert!(matches!(read_frame(&mut &bad_end[..]), Err(WireError::Malformed(_))));
+
+        // Trailing garbage after a valid payload.
+        let mut trailing = good.clone();
+        trailing.extend_from_slice(&[0xAB]);
+        let len_off = 6;
+        let declared =
+            u32::from_le_bytes(trailing[len_off..len_off + 4].try_into().unwrap()) + 1;
+        trailing[len_off..len_off + 4].copy_from_slice(&declared.to_le_bytes());
+        assert!(matches!(read_frame(&mut &trailing[..]), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn non_utf8_label_is_malformed() {
+        let good = encode_frame(&request());
+        let mut bad = good.clone();
+        // First byte of the rate label ("1/2") follows id(8)+k(1)+len(1).
+        bad[HEADER_LEN + 10] = 0xFF;
+        assert!(matches!(read_frame(&mut &bad[..]), Err(WireError::Malformed(_))));
+    }
+}

@@ -42,6 +42,7 @@ pub mod code;
 pub mod coordinator;
 pub mod exp;
 pub mod frames;
+pub mod gateway;
 pub mod lanes;
 pub mod memmodel;
 pub mod obs;

@@ -9,6 +9,7 @@
 //! viterbi-repro ber [--ebn0 DB] [--bits N] [--engine E]
 //! viterbi-repro demo [--bits N] [--ebn0 DB]  encode→channel→decode roundtrip
 //! viterbi-repro serve [--requests N] [--backend pjrt|native|auto] [--artifact NAME]
+//! viterbi-repro serve --listen ADDR | --connect ADDR | --stress   out-of-process gateway
 //! viterbi-repro trace [--stages N] [--engine E] [--out FILE]  traced decode -> Chrome JSONL
 //! viterbi-repro info                         platform + artifact inventory
 //! ```
@@ -27,13 +28,14 @@ use viterbi::code::{encode, CodeSpec, Termination};
 use viterbi::coordinator::{BackendSpec, BatchPolicy, DecodeServer, ServerConfig};
 use viterbi::exp::{run_by_id, Effort, ExpOptions};
 use viterbi::frames::plan::FrameGeometry;
+use viterbi::gateway::{stress, Gateway, GatewayClient, GatewayConfig, StressConfig};
 use viterbi::obs::{self, ObsConfig};
 use viterbi::tuner::{self, CalibrationGrid};
 use viterbi::util::bits::count_bit_errors;
 use viterbi::util::threadpool::ThreadPool;
 use viterbi::viterbi::{
-    DecodeRequest, Engine as _, ParallelTraceback, ScalarEngine, SharedEngine, StartPolicy,
-    StreamEnd, TiledEngine, TracebackMode,
+    DecodeRequest, Engine as _, OutputMode, ParallelTraceback, ScalarEngine, SharedEngine,
+    StartPolicy, StreamEnd, TiledEngine, TracebackMode,
 };
 
 fn main() {
@@ -73,6 +75,7 @@ USAGE:
                       [--samples S] [--threads N] [--lanes L] [--seed S]
                       [--k K] [--tail-biting] [--stage-timings] [--out FILE] [--list]
   viterbi-repro bench diff <old.jsonl> <new.jsonl> [--threshold PCT] [--normalize ENGINE]
+  viterbi-repro bench diff <new.jsonl> --against <old.jsonl|DIR> [--against ...]
   viterbi-repro bench rank <records.jsonl...>
   viterbi-repro bench cmp <records.jsonl...>
   viterbi-repro tune [--smoke] [--ks K,..] [--frame-lens F,..] [--batches B,..]
@@ -83,6 +86,11 @@ USAGE:
   viterbi-repro demo [--bits N] [--ebn0 DB]
   viterbi-repro serve [--requests N] [--backend pjrt|native|auto]
                       [--artifact NAME] [--profile FILE] [--metrics-every N]
+                      [--save-observed FILE]
+  viterbi-repro serve --listen ADDR [--shards N] [--profile FILE]
+  viterbi-repro serve --connect ADDR [--requests N] [--bits N]
+  viterbi-repro serve --stress [--shards N] [--requests N] [--rate HZ]
+                      [--connections C] [--deadline-us D] [--ebn0 DB]
                       [--save-observed FILE]
   viterbi-repro trace [--stages N] [--engine E] [--seed S] [--out FILE]
   viterbi-repro info
@@ -96,15 +104,31 @@ measurement key and classifies each cell against a noise threshold
 (default ±10%; --normalize ENGINE scores relative to that engine per
 scenario, cancelling machine speed for cross-hardware diffs) — exit
 status 0 = clean, 1 = operational error, 2 = regression, the
-contract scripts/check_bench_diff.sh gates CI on; `bench rank`
+contract scripts/check_bench_diff.sh gates CI on. With repeated
+--against flags (each a record file or a directory of them, oldest
+first) `bench diff` renders the per-cell throughput trajectory over
+all N revisions instead, classifying each cell's end-to-end drift
+under the same exit contract. `bench rank`
 orders engines per scenario with geometric-mean speedup summaries;
 `bench cmp` lays sets side by side with the v3 ACS/traceback stage
 columns. The tune subcommand
 sweeps the bit-exact dispatch candidates over a (K × frame length ×
-batch width) grid and writes a calibration profile (default
-calibration/profile.jsonl) that the `auto` engine and the serve
+batch width) grid and writes a per-host calibration profile (default
+calibration/<hostname>.jsonl) that the `auto` engine and the serve
 backend `auto` load to route every job to the fastest backend; the
-checked-in calibration/baseline.jsonl is the committed default.
+planner prefers this host's profile and falls back to the checked-in
+calibration/baseline.jsonl.
+
+serve --listen runs the out-of-process gateway: N sharded decode
+coordinators behind the viterbi-wire/1 TCP protocol, with uniform
+lane-friendly traffic pinned to the auto-backend shard 0 and ragged/
+soft/tail-biting traffic round-robined across native shards (shard
+affinity, DESIGN.md §13). serve --connect drives a running gateway
+as a client. serve --stress starts an in-process gateway and hammers
+it with reproducible mixed traffic at a controlled arrival rate,
+printing one viterbi-stress/1 JSON line (client p50/p99, per-shard
+dispatch, shed counts); deadline-expired and overload-shed requests
+come back as typed `overloaded` errors with a retry hint.
 
 The trace subcommand runs one traced decode with the observability
 layer fully on, validates the span stream (balanced begin/end,
@@ -267,23 +291,90 @@ fn record_label(path: &str) -> String {
         .unwrap_or_else(|| path.to_string())
 }
 
-/// `bench diff <old> <new>`: align two record sets by measurement key
-/// and classify every matched cell against the noise threshold.
+/// Expand one `--against` argument into record-file paths: a file is
+/// itself, a directory contributes every `.json`/`.jsonl` inside it in
+/// sorted (chronological-by-name) order.
+fn expand_against(arg: &str) -> Result<Vec<String>> {
+    let path = std::path::Path::new(arg);
+    if path.is_dir() {
+        let mut files: Vec<String> = std::fs::read_dir(path)
+            .with_context(|| format!("reading baseline directory {arg}"))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.is_file()
+                    && matches!(
+                        p.extension().and_then(|e| e.to_str()),
+                        Some("json") | Some("jsonl")
+                    )
+            })
+            .map(|p| p.to_string_lossy().into_owned())
+            .collect();
+        if files.is_empty() {
+            bail!("baseline directory {arg} holds no .json/.jsonl record files");
+        }
+        files.sort();
+        Ok(files)
+    } else {
+        Ok(vec![arg.to_string()])
+    }
+}
+
+/// `bench diff <old> <new>` or `bench diff <new> --against <old>...`:
+/// align record sets by measurement key and classify every matched
+/// cell against the noise threshold. One baseline gives the two-point
+/// diff; several `--against` values (files or directories of record
+/// files, oldest first) render the per-cell trajectory across all
+/// revisions and judge the end-to-end drift instead.
 /// Exit status: 0 clean, 1 operational error, 2 regression detected —
 /// the machine-readable contract `scripts/check_bench_diff.sh` gates on.
 fn cmd_bench_diff(args: &Args) -> Result<()> {
-    args.check_known(&["threshold", "normalize"])?;
-    let (old_path, new_path) = match (args.pos(2), args.pos(3)) {
-        (Some(old), Some(new)) if args.pos(4).is_none() => (old, new),
-        _ => bail!("usage: bench diff <old.jsonl> <new.jsonl> [--threshold PCT] [--normalize ENGINE]"),
+    args.check_known(&["threshold", "normalize", "against"])?;
+    let threshold = args.get_f64("threshold", viterbi::bench::analysis::DEFAULT_NOISE_PCT)?;
+    let against = args.get_all("against");
+    let (old_paths, new_path): (Vec<String>, &str) = if against.is_empty() {
+        match (args.pos(2), args.pos(3)) {
+            (Some(old), Some(new)) if args.pos(4).is_none() => (vec![old.to_string()], new),
+            _ => bail!(
+                "usage: bench diff <old.jsonl> <new.jsonl> | bench diff <new.jsonl> \
+                 --against <old.jsonl|DIR> [--against ...] [--threshold PCT] [--normalize ENGINE]"
+            ),
+        }
+    } else {
+        let new = match (args.pos(2), args.pos(3)) {
+            (Some(new), None) => new,
+            _ => bail!("bench diff with --against takes exactly one positional record file"),
+        };
+        let mut olds = Vec::new();
+        for arg in against {
+            olds.extend(expand_against(arg)?);
+        }
+        (olds, new)
     };
-    let opts = viterbi::bench::DiffOptions {
-        threshold_pct: args.get_f64("threshold", viterbi::bench::analysis::DEFAULT_NOISE_PCT)?,
-        normalize: args.get("normalize").map(str::to_string),
-    };
-    let old = load_records(old_path)?;
-    let new = load_records(new_path)?;
-    let report = viterbi::bench::diff(&old, &new, &opts).map_err(|e| anyhow!(e))?;
+    if old_paths.len() == 1 {
+        let opts = viterbi::bench::DiffOptions {
+            threshold_pct: threshold,
+            normalize: args.get("normalize").map(str::to_string),
+        };
+        let old = load_records(&old_paths[0])?;
+        let new = load_records(new_path)?;
+        let report = viterbi::bench::diff(&old, &new, &opts).map_err(|e| anyhow!(e))?;
+        print!("{}", report.render());
+        if report.has_regressions() {
+            std::process::exit(2);
+        }
+        return Ok(());
+    }
+    // Multi-baseline trend mode: oldest → ... → newest.
+    if args.has("normalize") {
+        bail!("--normalize is not supported in multi-baseline trend mode");
+    }
+    let mut revisions = Vec::new();
+    for path in &old_paths {
+        revisions.push((record_label(path), load_records(path)?));
+    }
+    revisions.push((record_label(new_path), load_records(new_path)?));
+    let report = viterbi::bench::trend(&revisions, threshold).map_err(|e| anyhow!(e))?;
     print!("{}", report.render());
     if report.has_regressions() {
         std::process::exit(2);
@@ -361,8 +452,12 @@ fn cmd_tune(args: &Args) -> Result<()> {
         tail_biting: false,
         stage_timings: false,
     };
+    // Default output is per-host so profiles from different machines
+    // coexist in calibration/ — the planner prefers this host's file
+    // and falls back to the committed calibration/baseline.jsonl.
+    let default_out = format!("calibration/{}.jsonl", tuner::host_name());
     let out_path =
-        std::path::PathBuf::from(args.get("out").unwrap_or("calibration/profile.jsonl"));
+        std::path::PathBuf::from(args.get("out").map(str::to_string).unwrap_or(default_out));
     println!(
         "tune: {} cells ({} K × {} frame lengths × {} batches × {} engines), \
          {} samples (+{} warmup), {} threads",
@@ -403,7 +498,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
         viterbi::tuner::TUNE_SCHEMA_VERSION
     );
     println!(
-        "load it via VITERBI_CALIBRATION={} (or commit it as calibration/baseline.jsonl)",
+        "the planner auto-loads calibration/{}.jsonl on this host; override with \
+         VITERBI_CALIBRATION={} (or commit it as calibration/baseline.jsonl)",
+        tuner::host_name(),
         out_path.display()
     );
     Ok(())
@@ -609,6 +706,12 @@ fn cmd_demo(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    // The out-of-process gateway modes (`--listen`, `--connect`,
+    // `--stress`) have their own flag surface; everything else is the
+    // original in-process loopback demo.
+    if args.has("listen") || args.has("connect") || args.has("stress") {
+        return cmd_serve_gateway(args);
+    }
     args.check_known(&[
         "requests", "backend", "artifact", "bits", "batch-wait-us", "threads", "seed",
         "profile", "metrics-every", "save-observed",
@@ -695,6 +798,126 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("saved {n} observed route(s) to {}", out.display());
     }
     Ok(())
+}
+
+/// The out-of-process serve gateway modes:
+///
+/// * `serve --listen ADDR [--shards N]` — bind the `viterbi-wire/1`
+///   gateway and serve until killed.
+/// * `serve --connect ADDR` — drive a running gateway as a client and
+///   report throughput/BER.
+/// * `serve --stress` — start an in-process gateway, hammer it with
+///   reproducible mixed traffic, and print one `viterbi-stress/1`
+///   JSON line.
+fn cmd_serve_gateway(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "listen", "connect", "stress", "shards", "requests", "rate", "connections",
+        "deadline-us", "ebn0", "bits", "seed", "threads", "profile", "save-observed",
+        "batch-wait-us",
+    ])?;
+    let spec = CodeSpec::standard_k7();
+    let geo = FrameGeometry::new(256, 20, 45);
+
+    if let Some(addr) = args.get("connect") {
+        // Client mode: decode generated noisy traffic over the wire
+        // and check it against the transmitted messages.
+        let requests = args.get_usize("requests", 32)?.max(1);
+        let n_bits = args.get_usize("bits", 4096)?.max(1);
+        let ebn0 = args.get_f64("ebn0", 4.0)?;
+        let deadline_us = args.get_u64("deadline-us", 0)?;
+        let deadline =
+            (deadline_us > 0).then(|| std::time::Duration::from_micros(deadline_us));
+        let mut rng = Rng64::seeded(args.get_u64("seed", 7)?);
+        let ch = AwgnChannel::new(ebn0, spec.rate());
+        let mut client = GatewayClient::connect(addr, spec.clone())
+            .map_err(|e| anyhow!("connecting to {addr}: {e}"))?;
+        println!("sending {requests} requests of {n_bits} bits each to {addr}…");
+        let t0 = std::time::Instant::now();
+        let (mut errors, mut shed) = (0usize, 0usize);
+        for _ in 0..requests {
+            let mut msg = vec![0u8; n_bits];
+            rng.fill_bits(&mut msg);
+            let coded = encode(&spec, &msg, Termination::Truncated);
+            let rx = ch.transmit(&bpsk::modulate(&coded), &mut rng);
+            let llrs = llr::llrs_from_samples(&rx, ch.sigma());
+            match client.decode(llrs, StreamEnd::Truncated, OutputMode::Hard, deadline) {
+                Ok(resp) => errors += count_bit_errors(&resp.bits[..msg.len()], &msg),
+                Err(viterbi::gateway::ClientError::Overloaded { .. }) => shed += 1,
+                Err(e) => bail!("gateway request failed: {e}"),
+            }
+        }
+        let dt = t0.elapsed();
+        let total_bits = requests * n_bits;
+        println!(
+            "decoded {} bits in {:.2?} -> {:.1} Mb/s over the wire, BER {:.2e}, {} shed",
+            total_bits,
+            dt,
+            total_bits as f64 / dt.as_secs_f64() / 1e6,
+            errors as f64 / total_bits as f64,
+            shed,
+        );
+        return Ok(());
+    }
+
+    // Both remaining modes start a gateway.
+    let shards = args.get_usize("shards", 2)?.max(1);
+    let cfg = GatewayConfig {
+        listen: args.get("listen").unwrap_or("127.0.0.1:0").to_string(),
+        shards,
+        spec: spec.clone(),
+        geo,
+        f0: 32,
+        batch: BatchPolicy {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_micros(args.get_u64("batch-wait-us", 2000)?),
+        },
+        high_watermark: 4096,
+        low_watermark: 1024,
+        threads: args.get_usize("threads", 8)?.max(1),
+        profile: args.get("profile").map(std::path::PathBuf::from),
+    };
+    let mut gateway = Gateway::start(cfg)?;
+    println!(
+        "gateway listening on {} ({} shard(s), K={}, rate 1/{})",
+        gateway.local_addr(),
+        shards,
+        spec.k,
+        spec.beta
+    );
+
+    if args.has("stress") {
+        let stress_cfg = StressConfig {
+            requests: args.get_usize("requests", 200)?.max(1),
+            rate_hz: args.get_f64("rate", 0.0)?,
+            connections: args.get_usize("connections", 4)?.max(1),
+            deadline: {
+                let us = args.get_u64("deadline-us", 0)?;
+                (us > 0).then(|| std::time::Duration::from_micros(us))
+            },
+            ebn0_db: args.get_f64("ebn0", 4.0)?,
+            seed: args.get_u64("seed", StressConfig::default().seed)?,
+        };
+        let report = stress::run(&stress_cfg, &gateway);
+        println!("{}", stress::report_json(&report, &gateway));
+        if let Some(out) = args.get("save-observed") {
+            for (shard, path, routes) in gateway.save_observed(std::path::Path::new(out)) {
+                println!(
+                    "saved {routes} observed route(s) from shard {shard} to {}",
+                    path.display()
+                );
+            }
+        }
+        gateway.stop();
+        if report.errors > 0 {
+            bail!("{} request(s) failed with non-overload errors", report.errors);
+        }
+        return Ok(());
+    }
+
+    // Plain `--listen`: serve until the process is killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }
 
 /// `trace`: run one decode with the full observability layer on,

@@ -44,9 +44,12 @@ pub mod profile;
 
 pub use auto::AutoEngine;
 pub use calibrate::{run_calibration, CalibrationGrid};
-pub use observed::{sidecar_path, ObservedRoute, OBSERVED_SCHEMA_VERSION};
+pub use observed::{
+    read_merged, shard_sidecar_path, sidecar_path, ObservedRoute, OBSERVED_SCHEMA_VERSION,
+};
 pub use planner::{
-    parse_batches, parse_ks, Choice, JobShape, Planner, PlannerConfig, BLOCKS_STREAM_MIN,
-    BUDGET_ENV, DEFAULT_BUDGET_BYTES, DISPATCH_CANDIDATES, LANE_BATCH_MIN, PROFILE_ENV,
+    host_name, parse_batches, parse_ks, Choice, JobShape, Planner, PlannerConfig,
+    BLOCKS_STREAM_MIN, BUDGET_ENV, DEFAULT_BUDGET_BYTES, DISPATCH_CANDIDATES, LANE_BATCH_MIN,
+    PROFILE_ENV,
 };
 pub use profile::{CalibrationProfile, CalibrationRecord, TUNE_SCHEMA_VERSION};

@@ -91,6 +91,65 @@ pub fn sidecar_path(profile: &Path) -> PathBuf {
     profile.with_file_name(format!("{stem}.observed.jsonl"))
 }
 
+/// The per-shard sidecar path for a gateway shard: shard 2 of
+/// `calibration/baseline.observed.jsonl` writes
+/// `calibration/baseline.observed.shard2.jsonl`, so N concurrent
+/// shards never clobber one file.
+pub fn shard_sidecar_path(base: &Path, shard: usize) -> PathBuf {
+    let stem = base
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "observed".to_string());
+    let ext = base.extension().map(|s| s.to_string_lossy().into_owned());
+    let name = match ext {
+        Some(ext) => format!("{stem}.shard{shard}.{ext}"),
+        None => format!("{stem}.shard{shard}"),
+    };
+    base.with_file_name(name)
+}
+
+/// Read a sidecar together with any per-shard siblings
+/// (`<stem>.shard<i>.jsonl`), merging duplicate routes by geometric
+/// mean — the natural average for throughputs that the planner
+/// compares by ratio. A missing base file with present shard files is
+/// fine; so is the reverse; nothing present at all is `Ok(empty)`
+/// (absence of drift history is the normal cold-start case, not an
+/// error — only malformed files fail).
+pub fn read_merged(base: &Path) -> Result<Vec<ObservedRoute>, String> {
+    let mut sources: Vec<PathBuf> = Vec::new();
+    if base.is_file() {
+        sources.push(base.to_path_buf());
+    }
+    // Shard files are probed by index, not by directory scan: bounded,
+    // deterministic order, and no dependence on readdir semantics.
+    for shard in 0..64 {
+        let p = shard_sidecar_path(base, shard);
+        if p.is_file() {
+            sources.push(p);
+        }
+    }
+    // (sum of ln mbps, count) per route.
+    let mut merged: Vec<(String, f64, usize)> = Vec::new();
+    for path in &sources {
+        for r in read_jsonl(path)? {
+            match merged.iter_mut().find(|(name, _, _)| *name == r.route) {
+                Some((_, ln_sum, n)) => {
+                    *ln_sum += r.mbps.ln();
+                    *n += 1;
+                }
+                None => merged.push((r.route, r.mbps.ln(), 1)),
+            }
+        }
+    }
+    Ok(merged
+        .into_iter()
+        .map(|(route, ln_sum, n)| ObservedRoute {
+            route,
+            mbps: (ln_sum / n as f64).exp(),
+        })
+        .collect())
+}
+
 /// Write route observations as line-delimited JSON (one per line).
 pub fn write_jsonl(path: &Path, routes: &[ObservedRoute]) -> std::io::Result<()> {
     let mut f = std::fs::File::create(path)?;
@@ -146,6 +205,52 @@ mod tests {
         let bad =
             Json::parse(r#"{"schema":"viterbi-observed/1","route":"lanes","mbps":0.0}"#).unwrap();
         assert!(ObservedRoute::from_json(&bad).unwrap_err().contains("non-positive"));
+    }
+
+    #[test]
+    fn shard_sidecar_naming() {
+        assert_eq!(
+            shard_sidecar_path(Path::new("calibration/baseline.observed.jsonl"), 2),
+            PathBuf::from("calibration/baseline.observed.shard2.jsonl")
+        );
+        assert_eq!(
+            shard_sidecar_path(Path::new("obs"), 0),
+            PathBuf::from("obs.shard0")
+        );
+    }
+
+    #[test]
+    fn read_merged_combines_base_and_shards_by_geometric_mean() {
+        let dir = std::env::temp_dir().join(format!("OBSERVED_merge_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("prof.observed.jsonl");
+        write_jsonl(&base, &[ObservedRoute { route: "lanes".into(), mbps: 100.0 }]).unwrap();
+        write_jsonl(
+            &shard_sidecar_path(&base, 0),
+            &[
+                ObservedRoute { route: "lanes".into(), mbps: 400.0 },
+                ObservedRoute { route: "parallel".into(), mbps: 50.0 },
+            ],
+        )
+        .unwrap();
+        write_jsonl(
+            &shard_sidecar_path(&base, 3),
+            &[ObservedRoute { route: "lanes".into(), mbps: 200.0 }],
+        )
+        .unwrap();
+        let merged = read_merged(&base).unwrap();
+        let lanes = merged.iter().find(|r| r.route == "lanes").unwrap();
+        // Geometric mean of 100, 400, 200 = (100·400·200)^(1/3) = 200.
+        assert!((lanes.mbps - 200.0).abs() < 1e-9, "got {}", lanes.mbps);
+        let par = merged.iter().find(|r| r.route == "parallel").unwrap();
+        assert!((par.mbps - 50.0).abs() < 1e-9);
+        // Shard files alone (no base) still load.
+        std::fs::remove_file(&base).unwrap();
+        let merged = read_merged(&base).unwrap();
+        assert_eq!(merged.len(), 2);
+        // Nothing present at all is the cold-start case: Ok(empty).
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(read_merged(&base).unwrap(), Vec::new());
     }
 
     #[test]

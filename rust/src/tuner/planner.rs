@@ -360,13 +360,12 @@ impl Planner {
         }
     }
 
-    /// Seed from the sidecar at `path` if it exists; a malformed
-    /// sidecar warns on stderr and is ignored.
+    /// Seed from the sidecar at `path` and any per-shard siblings
+    /// (`<stem>.shard<i>.jsonl`, written by a multi-shard gateway's
+    /// `serve --save-observed`), merged by geometric mean; a
+    /// malformed sidecar warns on stderr and is ignored.
     fn load_sidecar(&self, path: &Path) {
-        if !path.is_file() {
-            return;
-        }
-        match observed::read_jsonl(path) {
+        match observed::read_merged(path) {
             Ok(routes) => self.seed_observations(&routes),
             Err(e) => eprintln!(
                 "warning: ignoring observed-route sidecar {} ({e})",
@@ -509,7 +508,13 @@ fn default_profile() -> &'static Option<(CalibrationProfile, PathBuf)> {
                 );
             }
         }
+        // Per-host calibration outranks the checked-in baseline: a
+        // profile measured on *this* machine beats one measured on
+        // whatever machine committed the baseline.
+        let host = host_name();
         for path in [
+            PathBuf::from(format!("calibration/{host}.jsonl")),
+            PathBuf::from(format!("../calibration/{host}.jsonl")),
             PathBuf::from("calibration/baseline.jsonl"),
             PathBuf::from("../calibration/baseline.jsonl"),
         ] {
@@ -520,11 +525,42 @@ fn default_profile() -> &'static Option<(CalibrationProfile, PathBuf)> {
             }
         }
         eprintln!(
-            "note: no calibration profile found (set {PROFILE_ENV} or commit \
+            "note: no calibration profile found (set {PROFILE_ENV}, run \
+             `viterbi-repro tune` to write calibration/{host}.jsonl, or commit \
              calibration/baseline.jsonl); adaptive dispatch uses the static heuristic"
         );
         None
     })
+}
+
+/// This machine's name for per-host calibration files
+/// (`calibration/<host>.jsonl`): `$HOSTNAME`, else the kernel's
+/// hostname, else `"host"`; sanitized to `[A-Za-z0-9._-]` so the name
+/// is always a safe file stem. Never equal to `"baseline"` — a
+/// machine actually named that would silently shadow the checked-in
+/// fallback, so it gets a suffix instead.
+pub fn host_name() -> String {
+    let raw = std::env::var("HOSTNAME")
+        .ok()
+        .filter(|s| !s.trim().is_empty())
+        .or_else(|| {
+            std::fs::read_to_string("/proc/sys/kernel/hostname")
+                .ok()
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+        })
+        .unwrap_or_else(|| "host".to_string());
+    let mut name: String = raw
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || ".-_".contains(c) { c } else { '-' })
+        .collect();
+    if name.is_empty() {
+        name = "host".to_string();
+    }
+    if name == "baseline" {
+        name.push_str("-host");
+    }
+    name
 }
 
 /// Whether a shape is one contiguous hard linear stream long enough
@@ -985,6 +1021,17 @@ mod tests {
         assert_eq!(choice.engine, "blocks");
         assert_eq!(choice.expected_mbps, Some(800.0));
         assert!(!choice.from_profile, "measured, not calibrated");
+    }
+
+    #[test]
+    fn host_name_is_a_safe_file_stem() {
+        let name = host_name();
+        assert!(!name.is_empty());
+        assert_ne!(name, "baseline", "would shadow the checked-in fallback");
+        assert!(
+            name.chars().all(|c| c.is_ascii_alphanumeric() || ".-_".contains(c)),
+            "unsafe characters in {name:?}"
+        );
     }
 
     #[test]

@@ -191,6 +191,16 @@ pub enum DecodeError {
         /// The requested stream end.
         end: StreamEnd,
     },
+    /// The service shed this request instead of queueing it: the
+    /// backpressure gate was saturated at admission, or the request's
+    /// deadline had already expired (at admission or while waiting for
+    /// dispatch). Callers should back off for roughly
+    /// `retry_after_ms` before resubmitting.
+    Overloaded {
+        /// Suggested client back-off, derived from the observed
+        /// batch latency when the service has data.
+        retry_after_ms: u64,
+    },
 }
 
 impl DecodeError {
@@ -203,6 +213,7 @@ impl DecodeError {
             DecodeError::InvalidRequest { .. } => "invalid-request",
             DecodeError::Backend { .. } => "backend",
             DecodeError::UnsupportedStreamEnd { .. } => "unsupported-stream-end",
+            DecodeError::Overloaded { .. } => "overloaded",
         }
     }
 }
@@ -222,6 +233,9 @@ impl std::fmt::Display for DecodeError {
             DecodeError::Backend { reason } => write!(f, "backend failure: {reason}"),
             DecodeError::UnsupportedStreamEnd { engine, end } => {
                 write!(f, "engine {engine} does not support {end} streams")
+            }
+            DecodeError::Overloaded { retry_after_ms } => {
+                write!(f, "service overloaded; retry after ~{retry_after_ms} ms")
             }
         }
     }

@@ -144,6 +144,7 @@ fn property_batcher_respects_fifo_and_bounds_under_deadline_interleaving() {
                         tail_biting: false,
                         block_stream: false,
                         submitted_at: Instant::now(),
+                        deadline: None,
                     };
                     pushed += 1;
                     if let Some(batch) = b.push(job) {
@@ -206,6 +207,7 @@ fn block_parallel_matches_sequential_chunk_reassembly() {
             tail_biting: false,
             block_stream: true,
             submitted_at: Instant::now(),
+            deadline: None,
         };
         let results = decoder.decode_batch(&[job]).unwrap();
         assert_eq!(results.len(), 1);

@@ -1,0 +1,261 @@
+//! Serve-gateway end-to-end tests over real loopback sockets: wire
+//! round-trips must be bit-exact against the in-process coordinator,
+//! overload must shed (never queue unboundedly), expired deadlines
+//! must be reaped, and the stress harness must complete cleanly under
+//! light load.
+
+use std::time::Duration;
+
+use viterbi::channel::{bpsk, llr, AwgnChannel, Rng64};
+use viterbi::code::{encode, CodeSpec, Termination};
+use viterbi::coordinator::{BackendSpec, BatchPolicy, DecodeServer, ServerConfig};
+use viterbi::frames::plan::FrameGeometry;
+use viterbi::gateway::{stress, ClientError, Gateway, GatewayClient, GatewayConfig, StressConfig};
+use viterbi::viterbi::{OutputMode, StreamEnd};
+
+fn small_geo() -> FrameGeometry {
+    FrameGeometry::new(32, 8, 12)
+}
+
+/// Encode `n` random message bits with `term` and push them through a
+/// seeded AWGN channel — both decode paths get the identical LLRs.
+fn noisy_llrs(
+    rng: &mut Rng64,
+    spec: &CodeSpec,
+    n: usize,
+    term: Termination,
+) -> Vec<f32> {
+    let mut msg = vec![0u8; n];
+    rng.fill_bits(&mut msg);
+    let coded = encode(spec, &msg, term);
+    let ch = AwgnChannel::new(4.0, spec.rate());
+    let rx = ch.transmit(&bpsk::modulate(&coded), rng);
+    llr::llrs_from_samples(&rx, ch.sigma())
+}
+
+#[test]
+fn gateway_is_bit_exact_against_in_process_server_across_shards() {
+    let spec = CodeSpec::standard_k5();
+    let geo = small_geo();
+    let mut gw =
+        Gateway::start(GatewayConfig::loopback(spec.clone(), geo, 3)).expect("gateway");
+    let reference = DecodeServer::start(ServerConfig {
+        backend: BackendSpec::Native {
+            spec: spec.clone(),
+            geo,
+            f0: Some((geo.f / 4).max(1)),
+        },
+        batch: BatchPolicy::default(),
+        high_watermark: 4096,
+        low_watermark: 1024,
+    })
+    .expect("reference server");
+    let mut client = GatewayClient::connect(&gw.local_addr().to_string(), spec.clone())
+        .expect("connect");
+
+    // Uniform hard traffic (terminated and truncated), ragged lengths,
+    // soft output, and tail-biting — every shard class gets exercised.
+    let cases: &[(usize, Termination, StreamEnd, OutputMode)] = &[
+        (32, Termination::Truncated, StreamEnd::Truncated, OutputMode::Hard),
+        (64, Termination::Truncated, StreamEnd::Truncated, OutputMode::Hard),
+        (28, Termination::Terminated, StreamEnd::Terminated, OutputMode::Hard),
+        (17, Termination::Truncated, StreamEnd::Truncated, OutputMode::Hard),
+        (45, Termination::Truncated, StreamEnd::Truncated, OutputMode::Soft),
+        (48, Termination::TailBiting, StreamEnd::TailBiting, OutputMode::Hard),
+        (100, Termination::Truncated, StreamEnd::Truncated, OutputMode::Soft),
+        (33, Termination::TailBiting, StreamEnd::TailBiting, OutputMode::Hard),
+    ];
+    let mut rng = Rng64::seeded(0x6A7E_11);
+    let mut uniform = 0u64;
+    let mut specialty = 0u64;
+    for &(n, term, end, output) in cases {
+        let llrs = noisy_llrs(&mut rng, &spec, n, term);
+        let stages = llrs.len() / spec.beta as usize;
+        if output == OutputMode::Hard && end != StreamEnd::TailBiting && stages % geo.f == 0
+        {
+            uniform += 1;
+        } else {
+            specialty += 1;
+        }
+        let got = client
+            .decode(llrs.clone(), end, output, None)
+            .unwrap_or_else(|e| panic!("gateway decode ({n} bits, {end:?}, {output:?}): {e}"));
+        let want = reference
+            .decode_blocking_with(llrs, end, output)
+            .unwrap_or_else(|e| panic!("reference decode ({n} bits, {end:?}, {output:?}): {e}"));
+        assert_eq!(got.bits, want.bits, "hard bits differ ({n} bits, {end:?}, {output:?})");
+        assert_eq!(got.soft, want.soft, "soft values differ ({n} bits, {end:?}, {output:?})");
+        assert!(got.latency_ns > 0, "gateway latency must be measured");
+    }
+
+    // Shard affinity: uniform lane-friendly traffic pinned to shard 0,
+    // everything else round-robined over the specialty shards.
+    let routed = gw.routed_counts();
+    assert_eq!(routed.len(), 3);
+    assert_eq!(routed[0], uniform, "uniform traffic must pin to shard 0: {routed:?}");
+    assert_eq!(routed[1] + routed[2], specialty, "specialty traffic spread: {routed:?}");
+    assert!(routed[1] > 0 && routed[2] > 0, "round-robin must use every shard: {routed:?}");
+    assert_eq!(gw.shed_count(), 0);
+    gw.stop();
+}
+
+#[test]
+fn gateway_sheds_under_overload_and_keeps_serving() {
+    let spec = CodeSpec::standard_k5();
+    let geo = small_geo();
+    let mut cfg = GatewayConfig::loopback(spec.clone(), geo, 1);
+    // A tiny gate plus a slow batcher: admitted frames linger in the
+    // batch window, so a pipelined burst at far more than capacity
+    // must trip the high watermark.
+    cfg.high_watermark = 4;
+    cfg.low_watermark = 1;
+    cfg.batch = BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(50) };
+    let mut gw = Gateway::start(cfg).expect("gateway");
+    let mut client =
+        GatewayClient::connect(&gw.local_addr().to_string(), spec.clone()).expect("connect");
+
+    let mut rng = Rng64::seeded(0x0E21);
+    let llrs = noisy_llrs(&mut rng, &spec, 32, Termination::Truncated);
+    let burst = 64usize;
+    for _ in 0..burst {
+        client
+            .submit(llrs.clone(), StreamEnd::Truncated, OutputMode::Hard, None)
+            .expect("submit");
+    }
+    let (mut ok, mut shed) = (0usize, 0usize);
+    for _ in 0..burst {
+        match client.recv() {
+            Ok(resp) => {
+                ok += 1;
+                assert!(!resp.bits.is_empty());
+            }
+            Err(ClientError::Overloaded { retry_after_ms }) => {
+                shed += 1;
+                assert!(retry_after_ms >= 1, "shed replies must carry a retry hint");
+            }
+            Err(e) => panic!("only overload errors are acceptable under burst: {e}"),
+        }
+    }
+    assert!(ok > 0, "the gate must admit up to the high watermark");
+    assert!(shed > 0, "a {burst}-deep burst over a 4-frame gate must shed");
+    assert_eq!(gw.shed_count(), shed as u64, "client and gateway shed counts agree");
+
+    // Once the burst drains the gate falls below the low watermark and
+    // the same connection is served again.
+    let resp = client
+        .decode(llrs, StreamEnd::Truncated, OutputMode::Hard, None)
+        .expect("gateway must recover after shedding");
+    assert!(!resp.bits.is_empty());
+    gw.stop();
+}
+
+#[test]
+fn expired_deadline_is_shed_not_decoded() {
+    let spec = CodeSpec::standard_k5();
+    let geo = small_geo();
+    let mut cfg = GatewayConfig::loopback(spec.clone(), geo, 1);
+    // A long batch window guarantees a microsecond deadline expires
+    // while the job sits in the queue.
+    cfg.batch = BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(40) };
+    let mut gw = Gateway::start(cfg).expect("gateway");
+    let mut client =
+        GatewayClient::connect(&gw.local_addr().to_string(), spec.clone()).expect("connect");
+    let mut rng = Rng64::seeded(0xDEAD_11);
+    let llrs = noisy_llrs(&mut rng, &spec, 40, Termination::Truncated);
+
+    match client.decode(
+        llrs.clone(),
+        StreamEnd::Truncated,
+        OutputMode::Hard,
+        Some(Duration::from_micros(50)),
+    ) {
+        Err(ClientError::Overloaded { .. }) => {}
+        other => panic!("a 50µs deadline under a 40ms batch window must shed, got {other:?}"),
+    }
+    assert!(gw.shed_count() >= 1);
+
+    // Without a deadline the same stream decodes fine.
+    let resp = client
+        .decode(llrs, StreamEnd::Truncated, OutputMode::Hard, None)
+        .expect("undeadlined request succeeds");
+    assert!(!resp.bits.is_empty());
+    gw.stop();
+}
+
+#[test]
+fn malformed_bytes_get_a_typed_wire_refusal_then_hangup() {
+    use std::io::Write as _;
+
+    use viterbi::gateway::wire::{read_frame, WireError};
+    use viterbi::gateway::WireFrame;
+
+    let spec = CodeSpec::standard_k5();
+    let mut gw =
+        Gateway::start(GatewayConfig::loopback(spec, small_geo(), 1)).expect("gateway");
+    let mut s = std::net::TcpStream::connect(gw.local_addr()).expect("connect");
+    s.write_all(b"NOPE\x01\x01\x00\x00\x00\x00").expect("write garbage");
+    match read_frame(&mut s) {
+        Ok(WireFrame::Error(e)) => {
+            assert_eq!(e.kind, "wire");
+            assert_eq!(e.retry_after_ms, 0);
+        }
+        other => panic!("expected a typed wire refusal, got {other:?}"),
+    }
+    // After a framing error the stream is out of sync; the gateway
+    // hangs up rather than guessing at resynchronisation.
+    match read_frame(&mut s) {
+        Err(WireError::Eof) => {}
+        other => panic!("expected the gateway to hang up, got {other:?}"),
+    }
+    gw.stop();
+}
+
+#[test]
+fn wrong_code_parameters_are_refused_with_context() {
+    let spec = CodeSpec::standard_k5();
+    let mut gw =
+        Gateway::start(GatewayConfig::loopback(spec, small_geo(), 1)).expect("gateway");
+    // A K=7 client against a K=5 gateway.
+    let wrong = CodeSpec::standard_k7();
+    let mut client =
+        GatewayClient::connect(&gw.local_addr().to_string(), wrong).expect("connect");
+    match client.decode(vec![1.0; 64], StreamEnd::Truncated, OutputMode::Hard, None) {
+        Err(ClientError::Remote { kind, message }) => {
+            assert_eq!(kind, "wire");
+            assert!(message.contains("K=5"), "refusal names the served code: {message}");
+        }
+        other => panic!("expected a typed refusal, got {other:?}"),
+    }
+    gw.stop();
+}
+
+#[test]
+fn stress_harness_light_load_completes_cleanly() {
+    let spec = CodeSpec::standard_k5();
+    let mut gw =
+        Gateway::start(GatewayConfig::loopback(spec, small_geo(), 2)).expect("gateway");
+    let cfg = StressConfig {
+        requests: 40,
+        rate_hz: 0.0,
+        connections: 2,
+        deadline: None,
+        ebn0_db: 4.0,
+        seed: 0x5EED,
+    };
+    let report = stress::run(&cfg, &gw);
+    assert_eq!(report.submitted, 40);
+    assert_eq!(
+        report.completed + report.shed + report.errors,
+        report.submitted,
+        "every request must be accounted for"
+    );
+    assert_eq!(report.errors, 0, "light load must not produce hard errors");
+    assert_eq!(report.shed, 0, "default watermarks must absorb 40 requests");
+    assert!(report.completed > 0 && report.p50_ns > 0 && report.p99_ns >= report.p50_ns);
+
+    let json = format!("{}", stress::report_json(&report, &gw));
+    assert!(json.contains("viterbi-stress/1"), "schema tag missing: {json}");
+    assert!(json.contains("\"shards\""), "per-shard dispatch missing: {json}");
+    assert!(json.contains("\"shed\""), "shed counter missing: {json}");
+    gw.stop();
+}

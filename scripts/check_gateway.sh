@@ -1,0 +1,84 @@
+#!/usr/bin/env bash
+# Serve-gateway gate (CI "build-test" job, gateway step):
+#   1. wire-protocol + shard-router unit suites — viterbi-wire/1
+#      round-trips and typed rejection of malformed frames (bad magic,
+#      truncated payloads, corrupt counts, trailing bytes);
+#   2. the loopback end-to-end suite — bit-exact equality against the
+#      in-process coordinator across shards for hard/soft output and
+#      terminated/truncated/tail-biting streams, admission shedding
+#      under a pipelined burst, deadline reaping, and typed refusals
+#      over a real socket;
+#   3. two CLI stress runs — light load must complete every request
+#      with zero shed and zero hard errors; an expiring-deadline
+#      overload run must shed (typed `overloaded` replies, counted on
+#      both sides) while still producing zero hard errors.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== gateway: wire + router unit suites =="
+cargo test -q gateway::
+
+echo "== gateway: loopback end-to-end suite =="
+cargo test -q --test gateway
+
+echo "== gateway: stress (light load, 2 shards) =="
+cargo run --release --quiet -- serve --stress --shards 2 --requests 60 \
+    --connections 3 --seed 1234 | tee stress_light.out
+
+echo "== gateway: stress (overload via expiring deadlines) =="
+cargo run --release --quiet -- serve --stress --shards 2 --requests 40 \
+    --connections 4 --deadline-us 1000 --batch-wait-us 50000 \
+    --seed 1234 | tee stress_overload.out
+
+python3 - stress_light.out stress_overload.out <<'EOF'
+import json
+import sys
+
+
+def report(path):
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line.startswith("{"):
+                continue
+            rec = json.loads(line)
+            if rec.get("schema") == "viterbi-stress/1":
+                return rec
+    print(f"FAIL: no viterbi-stress/1 record in {path}")
+    sys.exit(1)
+
+
+def check(cond, msg):
+    if not cond:
+        print("FAIL:", msg)
+        sys.exit(1)
+
+
+light = report(sys.argv[1])
+over = report(sys.argv[2])
+
+check(light["errors"] == 0, f"light load produced hard errors: {light}")
+check(light["shed"] == 0, f"light load shed requests: {light}")
+check(light["completed"] == light["submitted"], f"light load dropped requests: {light}")
+check(light["client_p99_ns"] > 0, f"light load published no latency: {light}")
+check(len(light["gateway"]["shards"]) == 2, f"expected 2 shards: {light}")
+check(
+    sum(s["routed"] for s in light["gateway"]["shards"]) == light["submitted"],
+    f"per-shard dispatch does not cover the load: {light}",
+)
+
+check(over["errors"] == 0, f"overload run produced hard errors: {over}")
+check(over["shed"] > 0, f"overload run shed nothing: {over}")
+check(
+    over["gateway"]["shed"] == over["shed"],
+    f"client and gateway shed counts disagree: {over}",
+)
+print(
+    f"OK: light {light['completed']}/{light['submitted']} completed "
+    f"(p99 {light['client_p99_ns'] / 1e6:.2f} ms); "
+    f"overload shed {over['shed']}/{over['submitted']} with zero hard errors"
+)
+EOF
+rm -f stress_light.out stress_overload.out
+
+echo "gateway OK: wire protocol typed; loopback bit-exact across shards; sheds under pressure, clean under light load"
