@@ -91,7 +91,7 @@ mod tests {
             all,
             vec![
                 "scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "blocks",
-                "streaming", "hard", "wava", "auto"
+                "tgemm", "streaming", "hard", "wava", "auto"
             ]
         );
     }

@@ -19,9 +19,9 @@ use crate::tuner::{JobShape, Planner, PlannerConfig};
 use crate::util::threadpool::ThreadPool;
 use crate::viterbi::{
     signed_soft, wava_decode_frame, wava_decode_lane_group, BlocksEngine,
-    DecodeRequest as EngineDecodeRequest, Engine as _, FrameScratch, OutputMode,
-    ParallelTraceback, SovaScratch, StartPolicy, StreamEnd, TiledEngine, TracebackMode,
-    TracebackStart, WavaLaneJob, WavaLaneScratch, DEFAULT_WAVA_MAX_ITERS,
+    DecodeRequest as EngineDecodeRequest, Engine, FrameScratch, OutputMode,
+    ParallelTraceback, SovaScratch, StartPolicy, StreamEnd, TgemmEngine, TiledEngine,
+    TracebackMode, TracebackStart, WavaLaneJob, WavaLaneScratch, DEFAULT_WAVA_MAX_ITERS,
 };
 use super::request::{FrameJob, FrameResult};
 
@@ -222,6 +222,7 @@ impl BackendSpec {
                     lane_scratches,
                     planner,
                     blocks: BlocksEngine::new(spec.clone(), f0),
+                    tgemm: TgemmEngine::new(spec.clone()),
                     counts: Vec::new(),
                     observations: Vec::new(),
                     max_batch: MAX_LANES,
@@ -432,15 +433,18 @@ fn decode_uniform_job_soft(
     FrameResult { request_id: job.request_id, frame_index: job.frame_index, bits, soft }
 }
 
-/// Whole-stream block-parallel decode of one `block_stream` job — the
+/// Whole-stream decode of one `block_stream` job — the
 /// long-linear-stream route shared by the native and adaptive
-/// backends. The chunked route decodes every stream as truncated (its
-/// zero padding absorbs a termination tail), so block decode does the
-/// same.
-fn decode_block_stream_job(blocks: &BlocksEngine, job: &FrameJob) -> Result<FrameResult> {
-    let beta = blocks.spec().beta as usize;
+/// backends. `engine` is whichever whole-stream engine the route
+/// picked: the overlapped block-parallel `blocks` engine, or the
+/// tropical-matrix `tgemm` engine when the adaptive planner prefers
+/// it for the shape. The chunked route decodes every stream as
+/// truncated (its zero padding absorbs a termination tail), so stream
+/// decode does the same.
+fn decode_block_stream_job(engine: &dyn Engine, job: &FrameJob) -> Result<FrameResult> {
+    let beta = engine.spec().beta as usize;
     let stages = job.llr_block.len() / beta;
-    let out = blocks
+    let out = engine
         .decode(&EngineDecodeRequest::hard(&job.llr_block, stages, StreamEnd::Truncated))
         .map_err(|e| anyhow!("block-stream decode failed: {e}"))?;
     Ok(FrameResult {
@@ -705,6 +709,10 @@ pub struct AutoBatchDecoder {
     /// (`block_stream`) jobs — the fifth route, taken before the
     /// planner sees the batch.
     blocks: BlocksEngine,
+    /// Tropical-matrix whole-stream engine — the sixth route, picked
+    /// over `blocks` when the planner's stream ranking prefers the
+    /// min-plus sweep for the job's shape (large constraint lengths).
+    tgemm: TgemmEngine,
     counts: Vec<(String, u64)>,
     /// Routed batch timings since the last `take_route_observations`.
     observations: Vec<RouteObservation>,
@@ -851,21 +859,27 @@ impl BatchDecoder for AutoBatchDecoder {
             return Ok(Vec::new());
         }
         if jobs.iter().any(|j| j.block_stream) {
-            // Whole-stream jobs go straight to the overlapped-block
-            // engine; the rest of the batch re-enters the planner-routed
-            // path. The reassembler matches results by (request, frame),
-            // so ordering across the two kinds is free.
+            // Whole-stream jobs go to a whole-stream engine — the
+            // planner's stream ranking picks `tgemm` or `blocks` per
+            // job shape; the rest of the batch re-enters the
+            // planner-routed path. The reassembler matches results by
+            // (request, frame), so ordering across the kinds is free.
             let mut out = Vec::with_capacity(jobs.len());
-            let mut streams = 0usize;
-            let mut payload_stages = 0usize;
-            let t0 = Instant::now();
             for job in jobs.iter().filter(|j| j.block_stream) {
-                payload_stages += job.llr_block.len() / beta;
-                out.push(decode_block_stream_job(&self.blocks, job)?);
-                streams += 1;
+                let stages = job.llr_block.len() / beta;
+                let shape = JobShape::for_stream(self.engine.spec(), geo, stages);
+                let route = if self.planner.plan(&shape).engine == "tgemm" {
+                    "tgemm"
+                } else {
+                    "blocks"
+                };
+                let t0 = Instant::now();
+                let engine: &dyn Engine =
+                    if route == "tgemm" { &self.tgemm } else { &self.blocks };
+                out.push(decode_block_stream_job(engine, job)?);
+                self.bump(route, 1);
+                self.observe_route(route, t0.elapsed(), 1, stages);
             }
-            self.bump("blocks", streams);
-            self.observe_route("blocks", t0.elapsed(), streams, payload_stages);
             let rest: Vec<FrameJob> =
                 jobs.iter().filter(|j| !j.block_stream).cloned().collect();
             out.extend(self.decode_batch(&rest)?);
@@ -1285,6 +1299,34 @@ mod tests {
         auto.decode_batch(std::slice::from_ref(&job)).unwrap();
         let counts = auto.dispatch_counts();
         assert!(counts.iter().any(|(r, c)| r == "blocks" && *c == 1), "{counts:?}");
+    }
+
+    #[test]
+    fn auto_routes_large_k_streams_to_tgemm() {
+        // At K=9 the planner's stream ranking prefers the
+        // tropical-matrix engine once the stream crosses the
+        // long-stream threshold; the adaptive backend must follow it
+        // and count the route.
+        let spec = CodeSpec::standard_k9();
+        let geo = FrameGeometry::new(64, 16, 40);
+        let stages = crate::tuner::BLOCKS_STREAM_MIN;
+        let (bits, job) = block_stream_job(&spec, stages, 0xB10C_0005);
+        let mut auto = BackendSpec::Auto {
+            spec,
+            geo,
+            f0: 16,
+            threads: 1,
+            budget_bytes: None,
+            profile: None,
+        }
+        .build()
+        .unwrap();
+        let results = auto.decode_batch(std::slice::from_ref(&job)).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].bits, bits);
+        let counts = auto.dispatch_counts();
+        assert!(counts.iter().any(|(r, c)| r == "tgemm" && *c == 1), "{counts:?}");
+        assert!(!counts.iter().any(|(r, _)| r == "blocks"), "{counts:?}");
     }
 
     #[test]

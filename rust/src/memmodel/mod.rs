@@ -15,6 +15,7 @@ pub mod smem;
 
 pub use occupancy::{GpuParams, OccupancyModel, ThroughputEstimate};
 pub use smem::{
-    global_memory_table, lane_traceback_working_bytes, sova_margin_bytes,
-    traceback_working_bytes, FootprintBreakdown, Method, SmemLayout,
+    global_memory_table, lane_traceback_working_bytes, sova_margin_bytes, tgemm_slab_bytes,
+    tgemm_stage_batch, tgemm_tile_states, traceback_working_bytes, FootprintBreakdown, Method,
+    SmemLayout,
 };

@@ -163,6 +163,45 @@ pub fn sova_margin_bytes(states: usize, stages: usize) -> usize {
     4 * states * stages
 }
 
+/// L1 working-set budget for one tgemm state tile, in bytes. Half a
+/// typical 32 KiB L1d: the tile's streams (previous path-metric pair,
+/// slab metrics, output row, sign-difference buffers) should co-reside
+/// with the stack and the decision words without evicting each other.
+pub const TGEMM_L1_TILE_BUDGET: usize = 16 * 1024;
+
+/// Bytes one butterfly index `j` touches per tgemm tile pass: two
+/// previous-row f32, two slab f32, two output f32 (lo/hi halves) and
+/// two sign-difference f32 — 8 × 4 B.
+pub const TGEMM_TILE_BYTES_PER_INDEX: usize = 32;
+
+/// L2 budget for the tgemm stage-batched branch-metric slab, in bytes
+/// (a conservative slice of a per-core L2, leaving room for the
+/// survivor words streaming through).
+pub const TGEMM_L2_SLAB_BUDGET: usize = 256 * 1024;
+
+/// Butterfly indices per tgemm state tile: as many `j` as fit the L1
+/// tile budget, clamped to the half-trellis. K ≤ 11 fits in one tile;
+/// larger codes split so each pass stays L1-resident.
+pub fn tgemm_tile_states(states: usize) -> usize {
+    let half = (states / 2).max(1);
+    (TGEMM_L1_TILE_BUDGET / TGEMM_TILE_BYTES_PER_INDEX).min(half).max(1)
+}
+
+/// Stages per tgemm branch-metric slab: as many as keep the slab
+/// (`batch · states` f32) inside the L2 budget, clamped to 4..=64 so
+/// tiny codes do not batch absurdly and huge codes still amortize the
+/// per-batch sweep setup.
+pub fn tgemm_stage_batch(states: usize) -> usize {
+    (TGEMM_L2_SLAB_BUDGET / (states.max(1) * 4)).clamp(4, 64)
+}
+
+/// Resident bytes of the tgemm branch-metric slab at the calibrated
+/// batch — the term the registry's `traceback_bytes` rule adds on top
+/// of the whole-stream survivor storage.
+pub fn tgemm_slab_bytes(states: usize) -> usize {
+    tgemm_stage_batch(states) * states * 4
+}
+
 /// Peak resident traceback working memory for one **lane group** of
 /// the lane-batched engines (`crate::lanes`): survivor decisions are
 /// packed one bit per state per stage **per lane** into `u64` words
@@ -343,6 +382,36 @@ mod tests {
         let narrow = lane_traceback_working_bytes(64, 100, 8);
         let wide = lane_traceback_working_bytes(64, 100, 64);
         assert_eq!(wide - narrow, 2 * 64 * (64 - 8) * 4);
+    }
+
+    #[test]
+    fn tgemm_tiles_keep_small_codes_whole_and_split_large_ones() {
+        // K ≤ 11 (half ≤ 512): one tile covers the whole butterfly.
+        assert_eq!(tgemm_tile_states(64), 32); // K=7
+        assert_eq!(tgemm_tile_states(256), 128); // K=9
+        assert_eq!(tgemm_tile_states(1024), 512); // K=11
+        // K=13 (half = 2048): the L1 budget forces a split.
+        assert_eq!(tgemm_tile_states(4096), 512);
+        assert!(tgemm_tile_states(4096) * TGEMM_TILE_BYTES_PER_INDEX <= TGEMM_L1_TILE_BUDGET);
+        assert_eq!(tgemm_tile_states(1), 1);
+    }
+
+    #[test]
+    fn tgemm_stage_batch_tracks_the_l2_budget() {
+        // Small codes hit the 64-stage clamp; the slab still fits L2.
+        assert_eq!(tgemm_stage_batch(64), 64); // K=7
+        assert_eq!(tgemm_stage_batch(256), 64); // K=9
+        // K=13: 4096 states × 4 B = 16 KiB/stage → 16 stages.
+        assert_eq!(tgemm_stage_batch(4096), 16);
+        for states in [64usize, 256, 1024, 4096, 32768] {
+            let batch = tgemm_stage_batch(states);
+            assert!((4..=64).contains(&batch), "{states} states: batch {batch}");
+            assert!(
+                batch == 4 || batch * states * 4 <= TGEMM_L2_SLAB_BUDGET,
+                "{states} states: slab over budget"
+            );
+        }
+        assert_eq!(tgemm_slab_bytes(256), 64 * 256 * 4);
     }
 
     #[test]

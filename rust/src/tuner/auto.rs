@@ -11,10 +11,13 @@
 //! `rust/tests/tuner_props.rs` across K=5/7/9, terminated and
 //! truncated. The one exception is long contiguous streams (≥
 //! [`super::planner::BLOCKS_STREAM_MIN`] stages), which dispatch to
-//! the overlapped block-parallel `blocks` engine: its output matches
-//! the whole-stream decode up to a truncation-artifact probability
-//! the calibrated `5·(K−1)` overlap makes negligible
-//! (`rust/tests/blocks_parity.rs`).
+//! the stream-only family: the overlapped block-parallel `blocks`
+//! engine, whose output matches the whole-stream decode up to a
+//! truncation-artifact probability the calibrated `5·(K−1)` overlap
+//! makes negligible (`rust/tests/blocks_parity.rs`), or — for large
+//! constraint lengths (K ≥ [`super::planner::TGEMM_K_MIN`]) — the
+//! tropical-matrix `tgemm` engine, which is bit-exact with the
+//! whole-stream decode outright (`rust/tests/tgemm_parity.rs`).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -274,6 +277,33 @@ mod tests {
         assert_eq!(
             auto.cache.lock().unwrap().keys().copied().collect::<Vec<_>>(),
             ["blocks"]
+        );
+    }
+
+    #[test]
+    fn long_large_k_streams_dispatch_to_tgemm() {
+        use crate::code::{encode, Termination};
+        let mut p = params();
+        p.spec = crate::code::CodeSpec::standard_k9();
+        let auto =
+            AutoEngine::new(p.clone(), Planner::heuristic(PlannerConfig::from_build(&p)));
+        let stages = crate::tuner::BLOCKS_STREAM_MIN;
+        // At K=9 the stream route prefers the tropical-matrix engine.
+        assert_eq!(auto.choice_for(stages).engine, "tgemm");
+        assert_ne!(auto.choice_for(stages - 1).engine, "tgemm");
+        let mut rng = crate::channel::Rng64::seeded(0xA7E);
+        let mut bits = vec![0u8; stages];
+        rng.fill_bits(&mut bits);
+        let enc = encode(&p.spec, &bits, Termination::Truncated);
+        let llrs: Vec<f32> =
+            enc.iter().map(|&b| if b == 0 { 3.0 } else { -3.0 }).collect();
+        let out = auto
+            .decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Truncated))
+            .expect("auto must serve long K=9 streams");
+        assert_eq!(out.bits, bits);
+        assert_eq!(
+            auto.cache.lock().unwrap().keys().copied().collect::<Vec<_>>(),
+            ["tgemm"]
         );
     }
 

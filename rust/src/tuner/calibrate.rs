@@ -31,13 +31,14 @@ pub struct CalibrationGrid {
 impl CalibrationGrid {
     /// The full default grid: the paper's K family crossed with short
     /// and paper-length frames at single / narrow / wide batches.
-    /// `blocks` rides along so the planner's single-stream route gets
-    /// profile-scored cells too: a blocks scenario of `batch` frames
-    /// of `frame_len` stages *is* one contiguous stream of
-    /// `batch × frame_len` stages (the engine ignores the tiling), so
-    /// its cells are commensurate with the stream shapes the planner
-    /// queries, each at the engine's calibrated overlap depth
-    /// `5·(K−1)` for that K.
+    /// `blocks` and `tgemm` ride along so the planner's single-stream
+    /// route gets profile-scored cells too: a scenario of `batch`
+    /// frames of `frame_len` stages *is* one contiguous stream of
+    /// `batch × frame_len` stages to a whole-stream engine (blocks
+    /// ignores the tiling, tgemm sweeps the stream stage by stage), so
+    /// those cells are commensurate with the stream shapes the planner
+    /// queries — blocks at its calibrated overlap depth `5·(K−1)` for
+    /// that K, tgemm at its memmodel-sized batch/tile blocking.
     pub fn full() -> CalibrationGrid {
         CalibrationGrid {
             ks: vec![5, 7, 9],
@@ -46,7 +47,7 @@ impl CalibrationGrid {
             engines: DISPATCH_CANDIDATES
                 .iter()
                 .map(|s| s.to_string())
-                .chain(["blocks".to_string()])
+                .chain(["blocks".to_string(), "tgemm".to_string()])
                 .collect(),
         }
     }

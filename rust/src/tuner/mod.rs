@@ -50,6 +50,6 @@ pub use observed::{
 pub use planner::{
     host_name, parse_batches, parse_ks, Choice, JobShape, Planner, PlannerConfig,
     BLOCKS_STREAM_MIN, BUDGET_ENV, DEFAULT_BUDGET_BYTES, DISPATCH_CANDIDATES, LANE_BATCH_MIN,
-    PROFILE_ENV,
+    PROFILE_ENV, TGEMM_K_MIN,
 };
 pub use profile::{CalibrationProfile, CalibrationRecord, TUNE_SCHEMA_VERSION};

@@ -55,16 +55,19 @@ const TAIL_BITING_CANDIDATES: [&str; 1] = ["wava"];
 const SOFT_CANDIDATES: [&str; 1] = ["unified"];
 
 /// Candidates for one contiguous hard-output linear stream at or past
-/// [`BLOCKS_STREAM_MIN`]: the overlapped block-parallel engine first,
-/// then the chunked-frame family as fallback.
-const STREAM_CANDIDATES: [&str; 5] =
-    ["blocks", "unified", "parallel", "lanes", "lanes-mt"];
+/// [`BLOCKS_STREAM_MIN`]: the overlapped block-parallel engine and the
+/// tropical-GEMM whole-stream engine first (the heuristic orders the
+/// pair by constraint length — see [`TGEMM_K_MIN`]), then the
+/// chunked-frame family as fallback.
+const STREAM_CANDIDATES: [&str; 6] =
+    ["blocks", "tgemm", "unified", "parallel", "lanes", "lanes-mt"];
 
 /// [`STREAM_CANDIDATES`] minus the lane engines, for streams whose
 /// frames are not lane-groupable (`uniform == false`) — `blocks`
 /// itself stays eligible because it carries its own per-frame fallback
-/// for codes off the SIMD fast path.
-const STREAM_RAGGED_CANDIDATES: [&str; 3] = ["blocks", "unified", "parallel"];
+/// for codes off the SIMD fast path, and `tgemm` decodes the whole
+/// stream without lane grouping at all.
+const STREAM_RAGGED_CANDIDATES: [&str; 4] = ["blocks", "tgemm", "unified", "parallel"];
 
 /// Stream length (stages) from which one contiguous hard-output linear
 /// stream dispatches to the overlapped block-parallel `blocks` engine
@@ -73,6 +76,14 @@ const STREAM_RAGGED_CANDIDATES: [&str; 3] = ["blocks", "unified", "parallel"];
 /// a few percent of the payload, so lockstep block decode dominates a
 /// serial walk over chunked frames.
 pub const BLOCKS_STREAM_MIN: usize = 1 << 14;
+
+/// Constraint length from which the heuristic puts the tropical-GEMM
+/// engine ahead of `blocks` for long contiguous streams: at K ≥ 9 the
+/// per-state butterfly starves (256+ states spill registers) and the
+/// stage-batched, cache-tiled min-plus sweep wins, while at K ≤ 7 the
+/// lockstep block decode keeps its SIMD edge. Calibration cells and
+/// measured drift override this ordering per shape as usual.
+pub const TGEMM_K_MIN: u32 = 9;
 
 /// Batch width from which the heuristic prefers lane engines for
 /// uniform work (below it, lane-group setup overhead dominates).
@@ -421,20 +432,17 @@ impl Planner {
                 // contiguous stream, the batch-grid cells of the
                 // chunked-frame engines measure a *different workload*
                 // (independent frames, not one long trellis), so only
-                // `blocks` cells — calibrated on the single-stream
-                // scenario — may score a stream shape; the rest rank
-                // by the heuristic.
+                // the whole-stream routes — `blocks` and `tgemm`,
+                // calibrated on the single-stream scenario — may score
+                // a stream shape; the rest rank by the heuristic.
+                let stream_scorable = !stream || name == "blocks" || name == "tgemm";
                 let cell = self.profile.as_ref().and_then(|p| {
-                    if stream && name != "blocks" {
+                    if !stream_scorable {
                         return None;
                     }
                     p.nearest(name, shape.k, shape.frame_len, shape.batch_frames)
                 });
-                let observed = if stream && name != "blocks" {
-                    None
-                } else {
-                    self.observed_mbps(name)
-                };
+                let observed = if stream_scorable { self.observed_mbps(name) } else { None };
                 let expected_mbps = match (cell.map(|c| c.median_mbps), observed) {
                     (Some(p), Some(o)) => Some((p * o).sqrt()),
                     (Some(p), None) => Some(p),
@@ -596,12 +604,15 @@ fn candidates(shape: &JobShape) -> &'static [&'static str] {
 /// covers a candidate.
 fn heuristic_order(shape: &JobShape, threads: usize) -> &'static [&'static str] {
     if is_stream(shape) {
-        // One long contiguous stream: the whole point of the blocks
-        // engine. The chunked family follows in its usual order.
-        if threads > 1 {
-            &["blocks", "lanes-mt", "lanes", "parallel", "unified"]
-        } else {
-            &["blocks", "lanes", "lanes-mt", "unified", "parallel"]
+        // One long contiguous stream: the whole-stream routes lead —
+        // tgemm ahead of blocks from TGEMM_K_MIN (large trellises
+        // favor the cache-tiled min-plus sweep), blocks ahead below
+        // it. The chunked family follows in its usual order.
+        match (shape.k >= TGEMM_K_MIN, threads > 1) {
+            (true, true) => &["tgemm", "blocks", "lanes-mt", "lanes", "parallel", "unified"],
+            (true, false) => &["tgemm", "blocks", "lanes", "lanes-mt", "unified", "parallel"],
+            (false, true) => &["blocks", "tgemm", "lanes-mt", "lanes", "parallel", "unified"],
+            (false, false) => &["blocks", "tgemm", "lanes", "lanes-mt", "unified", "parallel"],
         }
     } else if shape.batch_frames <= 1 {
         // One frame: nothing to batch or fan out.
@@ -896,6 +907,53 @@ mod tests {
         soft.stream_stages = BLOCKS_STREAM_MIN;
         soft.soft = true;
         assert_eq!(p.plan(&soft).engine, "unified");
+    }
+
+    #[test]
+    fn large_k_streams_prefer_tgemm() {
+        let p = Planner::heuristic(cfg());
+        let mut s = shape(64, true);
+        s.stream_stages = 2 * BLOCKS_STREAM_MIN;
+        // K ≥ TGEMM_K_MIN: the tropical sweep leads the stream route.
+        for k in [TGEMM_K_MIN, 11] {
+            s.k = k;
+            assert_eq!(p.plan(&s).engine, "tgemm", "K={k}");
+        }
+        // Below it the lockstep block decode keeps the lead…
+        s.k = 7;
+        assert_eq!(p.plan(&s).engine, "blocks");
+        // …and tgemm never ranks for chunked (non-stream) batches.
+        for batch in [1usize, 8, 64] {
+            for uniform in [false, true] {
+                let mut c = shape(batch, uniform);
+                c.k = 9;
+                for choice in p.rank(&c) {
+                    assert_ne!(choice.engine, "tgemm", "batch {batch} uniform {uniform}");
+                }
+            }
+        }
+        // Ragged streams stay eligible: the whole-stream sweep needs
+        // no lane grouping.
+        let mut r = shape(64, false);
+        r.stream_stages = 2 * BLOCKS_STREAM_MIN;
+        r.k = 11;
+        assert_eq!(p.plan(&r).engine, "tgemm");
+    }
+
+    #[test]
+    fn tgemm_observations_score_stream_shapes() {
+        // tgemm is calibrated on the single-stream workload, so (like
+        // blocks) its measured drift may flip a stream dispatch even
+        // where the heuristic prefers blocks.
+        let p = Planner::heuristic(cfg());
+        let mut s = shape(64, true);
+        s.stream_stages = 2 * BLOCKS_STREAM_MIN;
+        assert_eq!(p.plan(&s).engine, "blocks");
+        p.observe("tgemm", 900.0);
+        let choice = p.plan(&s);
+        assert_eq!(choice.engine, "tgemm");
+        assert_eq!(choice.expected_mbps, Some(900.0));
+        assert!(!choice.from_profile, "measured, not calibrated");
     }
 
     #[test]

@@ -18,6 +18,10 @@
 //!   up to 64 blocks with `5·(K−1)`-stage warmup/truncation regions
 //!   decoded in SIMD lockstep on the lane slabs (Peng et al., arxiv
 //!   1608.00066);
+//! * `tgemm` — tropical (min-plus) matrix ACS: each stage is a sparse
+//!   `T ⊗ m` product swept in cache-blocked state tiles over a
+//!   stage-batched branch-metric slab, the blocked formulation of the
+//!   authors' tensor-core follow-up (arxiv 2011.13579);
 //! * `streaming` — sliding-window decoder with path-metric carry (the
 //!   overlap-free single-lane ablation);
 //! * `hard` — hard-decision adapter over any soft engine (§II-C);
@@ -43,6 +47,7 @@ pub mod registry;
 pub mod scalar;
 pub mod sova;
 pub mod streaming;
+pub mod tgemm;
 pub mod tiled;
 pub mod unified;
 pub mod wava;
@@ -60,6 +65,10 @@ pub use registry::{registry, BuildParams, EngineSpec};
 pub use scalar::{ScalarDecoder, TracebackStart};
 pub use sova::{signed_soft, sova_decode_frame, SovaScratch};
 pub use streaming::{StreamingDecoder, StreamingEngine};
+pub use tgemm::{
+    stage_matrix, tropical_identity, tropical_matmul_blocked, tropical_matmul_naive,
+    tropical_matvec, TgemmEngine, TROPICAL_ZERO,
+};
 pub use unified::{ParallelTraceback, StartPolicy};
 pub use wava::{
     wava_decode_frame, wava_decode_lane_group, WavaEngine, WavaLaneJob, WavaLaneScratch,

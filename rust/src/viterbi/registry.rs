@@ -124,6 +124,7 @@ pub fn registry() -> Vec<EngineSpec> {
         crate::lanes::engine::engine_entry(),
         crate::lanes::engine::engine_entry_mt(),
         super::blocks::engine_entry(),
+        super::tgemm::engine_entry(),
         super::streaming::engine_entry(),
         super::hard::engine_entry(),
         super::wava::engine_entry(),
@@ -155,7 +156,7 @@ mod tests {
             names,
             vec![
                 "scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "blocks",
-                "streaming", "hard", "wava", "auto"
+                "tgemm", "streaming", "hard", "wava", "auto"
             ]
         );
         let mut dedup = names.clone();

@@ -1,0 +1,632 @@
+//! Tropical-GEMM ACS engine (`tgemm`): one trellis stage as a blocked
+//! min-plus matrix-vector product `m' = T ⊗ m`.
+//!
+//! The authors' tensor-core follow-up (arxiv 2011.13579) recasts the
+//! add-compare-select recursion over the tropical semiring
+//! (ℝ ∪ {+∞}, min, +): stage `t`'s transition matrix `T_t` holds the
+//! branch cost on entry `(j, i)` when state `i` reaches state `j`, and
+//! `+∞` (the semiring's additive identity, [`TROPICAL_ZERO`])
+//! everywhere else. For a rate-1/n code every state has exactly two
+//! predecessors, so each row of `T_t` has exactly two finite entries —
+//! the matrix is as sparse as the butterfly, but the *formulation* is
+//! a GEMM, which is the kernel shape a PJRT artifact would compile.
+//!
+//! This repo's native engines maximize correlation metrics (σ = max);
+//! the two conventions are isomorphic under negation
+//! (`min(x, y) = −max(−x, −y)`), and [`stage_matrix`] builds `T_t`
+//! with negated branch metrics so the algebra here is genuinely
+//! min-plus while the engine's hot path stays bit-compatible with the
+//! max-plus family. The dense kernels ([`tropical_matmul_naive`],
+//! [`tropical_matmul_blocked`], [`tropical_matvec`]) are the algebraic
+//! reference the property suite (`rust/tests/tgemm_props.rs`) proves
+//! associativity, identity and blocking-invariance on; the engine
+//! itself exploits the two-finite-entries-per-row sparsity and never
+//! materializes `T_t`.
+//!
+//! Two blocking levers, both sized off [`crate::memmodel`]:
+//!
+//! * **Stage batching** — branch metrics for `B` consecutive stages
+//!   are precomputed into one contiguous slab
+//!   ([`crate::memmodel::tgemm_stage_batch`] keeps the slab inside the
+//!   L2 budget) before the min-plus sweep walks the batch, so the
+//!   sweep streams one sequential array instead of re-deriving
+//!   per-stage tables.
+//! * **State tiling** — the butterfly sweep over `j < 2^{K−1}/2` is
+//!   cut into tiles of [`crate::memmodel::tgemm_tile_states`] indices
+//!   so the per-tile working set (previous row, slab row, output row,
+//!   sign buffers) stays L1-resident for K = 9/11 instead of
+//!   thrashing.
+//!
+//! Tiling and batching only regroup *independent* per-state updates —
+//! every path metric and decision bit is computed by the same f32
+//! expression in the same per-element order as the scalar butterfly —
+//! so the engine is bit-exact against the whole-stream family (pinned
+//! exhaustively by `rust/tests/tgemm_parity.rs`).
+
+use crate::code::{CodeSpec, Trellis};
+use super::engine::{
+    final_traceback_start, reject_tail_biting, DecodeError, DecodeOutput, DecodeRequest,
+    DecodeStats, Engine, OutputMode,
+};
+use super::metrics::StageMetrics;
+use super::scalar::{
+    acs_stage_from_llrs, argmax, fill_branch_metrics, pack_signs64, pm_rows, AcsScratch,
+    DecisionMatrix, TracebackStart,
+};
+
+/// The tropical semiring's additive identity: `min(x, +∞) = x`, and
+/// `+∞` annihilates under ⊗ (`x + ∞ = ∞`). A matrix entry of
+/// `TROPICAL_ZERO` means "no transition".
+pub const TROPICAL_ZERO: f32 = f32::INFINITY;
+
+/// The `n × n` tropical identity matrix: 0 (the multiplicative
+/// identity) on the diagonal, [`TROPICAL_ZERO`] elsewhere.
+/// `I ⊗ A = A ⊗ I = A` — pinned by the property suite.
+pub fn tropical_identity(n: usize) -> Vec<f32> {
+    let mut m = vec![TROPICAL_ZERO; n * n];
+    for i in 0..n {
+        m[i * n + i] = 0.0;
+    }
+    m
+}
+
+/// Naive row-major min-plus matrix product:
+/// `C[i][j] = min_k (A[i][k] + B[k][j])`.
+///
+/// The reference the blocked kernel is proven against. Entries must be
+/// finite or [`TROPICAL_ZERO`] (no `−∞`/NaN — the semiring has
+/// neither).
+pub fn tropical_matmul_naive(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), n * n, "A is not n×n");
+    assert_eq!(b.len(), n * n, "B is not n×n");
+    let mut c = vec![TROPICAL_ZERO; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            if !aik.is_finite() {
+                continue; // +∞ never wins a min
+            }
+            for j in 0..n {
+                let v = aik + b[k * n + j];
+                if v < c[i * n + j] {
+                    c[i * n + j] = v;
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Cache-blocked min-plus matrix product over `block × block` tiles.
+///
+/// min is exactly associative and commutative on non-NaN floats, and
+/// every candidate `A[i][k] + B[k][j]` is the same f32 sum in either
+/// loop order, so the blocked product equals [`tropical_matmul_naive`]
+/// for every block size — the invariance the engine's state tiling
+/// rides on, proven in `rust/tests/tgemm_props.rs`.
+pub fn tropical_matmul_blocked(a: &[f32], b: &[f32], n: usize, block: usize) -> Vec<f32> {
+    assert_eq!(a.len(), n * n, "A is not n×n");
+    assert_eq!(b.len(), n * n, "B is not n×n");
+    assert!(block > 0, "block size must be positive");
+    let mut c = vec![TROPICAL_ZERO; n * n];
+    for i0 in (0..n).step_by(block) {
+        for k0 in (0..n).step_by(block) {
+            for j0 in (0..n).step_by(block) {
+                for i in i0..(i0 + block).min(n) {
+                    for k in k0..(k0 + block).min(n) {
+                        let aik = a[i * n + k];
+                        if !aik.is_finite() {
+                            continue;
+                        }
+                        for j in j0..(j0 + block).min(n) {
+                            let v = aik + b[k * n + j];
+                            if v < c[i * n + j] {
+                                c[i * n + j] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Min-plus matrix-vector product `out[i] = min_j (T[i][j] + m[j])` —
+/// one dense ACS stage in the tropical formulation.
+pub fn tropical_matvec(t: &[f32], m: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(t.len(), n * n, "T is not n×n");
+    assert_eq!(m.len(), n, "m is not length n");
+    let mut out = vec![TROPICAL_ZERO; n];
+    for (i, o) in out.iter_mut().enumerate() {
+        let row = &t[i * n..(i + 1) * n];
+        let mut best = TROPICAL_ZERO;
+        for (&tij, &mj) in row.iter().zip(m) {
+            if tij.is_finite() {
+                best = best.min(tij + mj);
+            }
+        }
+        *o = best;
+    }
+    out
+}
+
+/// The dense stage-transition matrix `T_t` for one trellis stage:
+/// entry `(j, prev[j][d])` holds the *negated* branch metric (the
+/// min-plus cost of the max-plus correlation), every other entry is
+/// [`TROPICAL_ZERO`]. Each row has exactly two finite entries for the
+/// rate-1/n codes this repo decodes — the sparsity the engine's
+/// butterfly sweep exploits instead of materializing this matrix.
+pub fn stage_matrix(trellis: &Trellis, llr_t: &[f32]) -> Vec<f32> {
+    let ns = trellis.num_states();
+    let sm = StageMetrics::from_llrs(llr_t);
+    let mut t = vec![TROPICAL_ZERO; ns * ns];
+    for j in 0..ns {
+        for d in 0..2 {
+            let p = trellis.prev[j][d] as usize;
+            t[j * ns + p] = -sm.metric(trellis.prev_output[j][d]);
+        }
+    }
+    t
+}
+
+/// State-tiled butterfly ACS stage: identical per-element arithmetic
+/// to [`acs_stage_butterfly`], with the `j` sweep cut into `tile`-wide
+/// segments so the working set stays L1-resident at large K. Each `j`
+/// is independent, so tiling only regroups iterations — the outputs
+/// (metrics, sign differences, packed decisions) are bitwise identical
+/// to the untiled sweep for every tile size.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn acs_stage_butterfly_tiled(
+    half: usize,
+    prev_row: &[f32],
+    g: &[f32],
+    s0: &mut [f32],
+    s1: &mut [f32],
+    cur_row: &mut [f32],
+    words: &mut [u64],
+    tile: usize,
+) {
+    assert!(prev_row.len() == 2 * half && g.len() == 2 * half && cur_row.len() == 2 * half);
+    assert!(s0.len() >= half && s1.len() >= half);
+    assert!(tile > 0);
+    let (lo, hi) = cur_row.split_at_mut(half);
+    for j0 in (0..half).step_by(tile) {
+        let j1 = (j0 + tile).min(half);
+        for j in j0..j1 {
+            let a = prev_row[2 * j];
+            let b = prev_row[2 * j + 1];
+            let ga = g[2 * j];
+            let gb = g[2 * j + 1];
+            let m0a = a + ga;
+            let m0b = b + gb;
+            let m1a = a - ga;
+            let m1b = b - gb;
+            lo[j] = m0a.max(m0b);
+            hi[j] = m1a.max(m1b);
+            s0[j] = m0a - m0b;
+            s1[j] = m1a - m1b;
+        }
+    }
+    // Sign packing runs once over the full row, exactly like the
+    // untiled butterfly (the pack reads s0/s1 sequentially — tiling it
+    // would only fragment the movmskps chunks).
+    if half >= 64 {
+        for (w, chunk) in s0[..half].chunks_exact(64).enumerate() {
+            words[w] = pack_signs64(chunk);
+        }
+        for (w, chunk) in s1[..half].chunks_exact(64).enumerate() {
+            words[(half >> 6) + w] = pack_signs64(chunk);
+        }
+    } else {
+        words[0] = pack_signs64(&s0[..half]) | (pack_signs64(&s1[..half]) << half);
+    }
+}
+
+/// Whole-stream tropical-GEMM engine: stage-batched branch-metric
+/// slab + cache-blocked state tiles over the sparse `T ⊗ m` sweep.
+pub struct TgemmEngine {
+    spec: CodeSpec,
+    trellis: Trellis,
+    /// Stages per branch-metric slab (B).
+    batch: usize,
+    /// Butterfly indices per state tile.
+    tile: usize,
+    name: String,
+}
+
+impl TgemmEngine {
+    /// Build with blocking sized off the memory model:
+    /// [`crate::memmodel::tgemm_stage_batch`] stages per slab,
+    /// [`crate::memmodel::tgemm_tile_states`] indices per tile.
+    pub fn new(spec: CodeSpec) -> Self {
+        let ns = spec.num_states();
+        let batch = crate::memmodel::tgemm_stage_batch(ns);
+        let tile = crate::memmodel::tgemm_tile_states(ns);
+        Self::with_blocking(spec, batch, tile)
+    }
+
+    /// Build with explicit blocking (the parity and property suites
+    /// sweep these to prove output invariance).
+    pub fn with_blocking(spec: CodeSpec, batch: usize, tile: usize) -> Self {
+        let trellis = Trellis::new(spec.clone());
+        let batch = batch.max(1);
+        let tile = tile.max(1);
+        let name = format!("tgemm(B={batch},T={tile})");
+        TgemmEngine { spec, trellis, batch, tile, name }
+    }
+
+    /// Stages per branch-metric slab.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Butterfly indices per state tile.
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    /// Forward sweep: fill `decisions`, leaving the final σ row in
+    /// `pm[stages & 1]` (same parity argument as the scalar decoder).
+    fn forward(
+        &self,
+        llrs: &[f32],
+        stages: usize,
+        pm: &mut [Vec<f32>; 2],
+        decisions: &mut DecisionMatrix,
+    ) {
+        let ns = self.trellis.num_states();
+        let beta = self.trellis.spec.beta as usize;
+        if !self.trellis.butterfly_ok() {
+            // Exotic codes fall back to the per-stage table path (no
+            // slab: the generic ACS re-derives metrics per branch).
+            let mut acs = AcsScratch::new(ns);
+            let t0 = crate::obs::maybe_now();
+            for t in 0..stages {
+                let llr_t = &llrs[t * beta..(t + 1) * beta];
+                let (prev_row, cur_row) = pm_rows(pm, t & 1);
+                let words = decisions.stage_mut(t);
+                acs_stage_from_llrs(&self.trellis, llr_t, prev_row, &mut acs, cur_row, words);
+                renorm(cur_row, t);
+            }
+            crate::obs::record_acs(t0);
+            return;
+        }
+        let half = ns / 2;
+        let mut slab = vec![0f32; self.batch * ns];
+        let mut s0 = vec![0f32; half.max(1)];
+        let mut s1 = vec![0f32; half.max(1)];
+        let mut t = 0usize;
+        while t < stages {
+            let chunk = self.batch.min(stages - t);
+            // Phase 1: branch metrics for B consecutive stages into
+            // one contiguous slab (stage-major, ns per stage).
+            let t0 = crate::obs::maybe_now();
+            for b in 0..chunk {
+                let llr_t = &llrs[(t + b) * beta..(t + b + 1) * beta];
+                fill_branch_metrics(&self.trellis, llr_t, &mut slab[b * ns..(b + 1) * ns]);
+            }
+            crate::obs::record_branch_metric(t0);
+            // Phase 2: the min-plus sweep walks the slab in state
+            // tiles; each stage reads its slab row sequentially.
+            let t0 = crate::obs::maybe_now();
+            for b in 0..chunk {
+                let tt = t + b;
+                let (prev_row, cur_row) = pm_rows(pm, tt & 1);
+                let words = decisions.stage_mut(tt);
+                acs_stage_butterfly_tiled(
+                    half,
+                    prev_row,
+                    &slab[b * ns..(b + 1) * ns],
+                    &mut s0,
+                    &mut s1,
+                    cur_row,
+                    words,
+                    self.tile,
+                );
+                renorm(cur_row, tt);
+            }
+            crate::obs::record_acs(t0);
+            t += chunk;
+        }
+    }
+}
+
+/// Periodic renormalization keeps σ bounded on long streams — same
+/// cadence as the scalar decoder so the two stay bit-identical.
+#[inline(always)]
+fn renorm(cur_row: &mut [f32], t: usize) {
+    if t % 4096 == 4095 {
+        let m = cur_row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        cur_row.iter_mut().for_each(|x| *x -= m);
+    }
+}
+
+/// Serial traceback from `start` at the last stage (Alg 2 — identical
+/// to the scalar decoder's).
+fn traceback(trellis: &Trellis, decisions: &DecisionMatrix, stages: usize, start: u32) -> Vec<u8> {
+    let k = trellis.spec.k;
+    let mask = trellis.spec.state_mask();
+    let mut out = vec![0u8; stages];
+    let mut j = start;
+    for t in (0..stages).rev() {
+        out[t] = (j >> (k - 2)) as u8;
+        let d = decisions.get(t, j);
+        j = (2 * j + d) & mask;
+    }
+    out
+}
+
+impl Engine for TgemmEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn spec(&self) -> &CodeSpec {
+        &self.spec
+    }
+
+    fn decode(&self, req: &DecodeRequest<'_>) -> Result<DecodeOutput, DecodeError> {
+        req.validate(&self.spec)?;
+        reject_tail_biting(&self.name, req.end)?;
+        if req.output == OutputMode::Soft {
+            // The tropical sweep keeps 1-bit survivor decisions only
+            // (no Δ margins); soft output awaits a min-plus SOVA.
+            return Err(DecodeError::UnsupportedOutput {
+                engine: self.name.clone(),
+                mode: req.output,
+            });
+        }
+        crate::obs::reset_stage_acc();
+        let stages = req.stages;
+        let ns = self.trellis.num_states();
+        let mut stats = DecodeStats {
+            final_metric: None,
+            frames: 1,
+            iterations: None,
+            stage_timings: None,
+        };
+        if stages == 0 {
+            stats.stage_timings = crate::obs::take_stage_acc();
+            return Ok(DecodeOutput::hard(Vec::new(), stats));
+        }
+        let mut decisions = DecisionMatrix::new(ns, stages);
+        // Whole-stream decode from a fresh encoder: strongly prefer
+        // the known start state 0, like the scalar reference.
+        let mut pm = [vec![0f32; ns], vec![0f32; ns]];
+        pm[0].iter_mut().for_each(|x| *x = f32::NEG_INFINITY);
+        pm[0][0] = 0.0;
+        self.forward(req.llrs, stages, &mut pm, &mut decisions);
+        let row = &pm[stages & 1];
+        let start = match final_traceback_start(req.end, true) {
+            TracebackStart::BestMetric => argmax(row) as u32,
+            TracebackStart::State(s) => s,
+        };
+        stats.final_metric = Some(row[start as usize]);
+        let t0 = crate::obs::maybe_now();
+        let bits = traceback(&self.trellis, &decisions, stages, start);
+        crate::obs::record_traceback(t0);
+        stats.stage_timings = crate::obs::take_stage_acc();
+        Ok(DecodeOutput::hard(bits, stats))
+    }
+}
+
+/// Registry entry for the tropical-GEMM engine.
+pub(crate) fn engine_entry() -> crate::viterbi::registry::EngineSpec {
+    use crate::viterbi::registry::{BuildParams, EngineSpec};
+    EngineSpec {
+        name: "tgemm",
+        description: "tropical (min-plus) matrix ACS: stage-batched branch-metric slab + \
+                      cache-blocked state tiles (arxiv 2011.13579)",
+        build: |p: &BuildParams| std::sync::Arc::new(TgemmEngine::new(p.spec.clone())),
+        traceback_bytes: |p: &BuildParams| {
+            // Whole-stream survivor storage like the scalar rule, plus
+            // the resident branch-metric slab.
+            crate::memmodel::traceback_working_bytes(p.spec.num_states(), p.stream_stages)
+                + crate::memmodel::tgemm_slab_bytes(p.spec.num_states())
+        },
+        lane_width: |_| 1,
+        soft_output: false,
+        soft_margin_bytes: |_| 0,
+        tail_biting: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{bpsk, llr, AwgnChannel, Rng64};
+    use crate::code::{encode, Termination};
+    use crate::viterbi::scalar::acs_stage_butterfly;
+    use crate::viterbi::{ScalarEngine, StreamEnd};
+
+    fn noisy_workload(
+        spec: &CodeSpec,
+        n: usize,
+        ebn0: f64,
+        seed: u64,
+    ) -> (Vec<u8>, Vec<f32>, usize) {
+        let mut rng = Rng64::seeded(seed);
+        let mut bits = vec![0u8; n];
+        rng.fill_bits(&mut bits);
+        let enc = encode(spec, &bits, Termination::Terminated);
+        let stages = n + (spec.k as usize - 1);
+        let ch = AwgnChannel::new(ebn0, spec.rate());
+        let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+        (bits, llr::llrs_from_samples(&rx, ch.sigma()), stages)
+    }
+
+    fn run(e: &dyn Engine, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+        e.decode(&DecodeRequest::hard(llrs, stages, end)).expect("decode").bits
+    }
+
+    #[test]
+    fn tiled_butterfly_is_bitwise_identical_to_untiled() {
+        // Any tile size must reproduce the untiled sweep exactly —
+        // metrics AND packed decision words.
+        for k in [7u32, 9, 11] {
+            let spec = CodeSpec::for_constraint(k);
+            let trellis = Trellis::new(spec);
+            let ns = trellis.num_states();
+            let half = ns / 2;
+            let mut rng = Rng64::seeded(0x7E33 + k as u64);
+            let prev: Vec<f32> =
+                (0..ns).map(|_| (rng.uniform() as f32 - 0.5) * 20.0).collect();
+            let mut g = vec![0f32; ns];
+            let llr_t = [
+                (rng.uniform() as f32 - 0.5) * 8.0,
+                (rng.uniform() as f32 - 0.5) * 8.0,
+            ];
+            fill_branch_metrics(&trellis, &llr_t, &mut g);
+            let words_len = (ns + 63) / 64;
+            let mut s0 = vec![0f32; half];
+            let mut s1 = vec![0f32; half];
+            let mut want_row = vec![0f32; ns];
+            let mut want_words = vec![0u64; words_len];
+            acs_stage_butterfly(half, &prev, &g, &mut s0, &mut s1, &mut want_row, &mut want_words);
+            for tile in [1usize, 3, 16, 64, 100, half, half * 2] {
+                let mut row = vec![0f32; ns];
+                let mut words = vec![0u64; words_len];
+                acs_stage_butterfly_tiled(
+                    half, &prev, &g, &mut s0, &mut s1, &mut row, &mut words, tile,
+                );
+                assert_eq!(
+                    row.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    want_row.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "K={k} tile={tile}: metric rows differ"
+                );
+                assert_eq!(words, want_words, "K={k} tile={tile}: decisions differ");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_sweep_matches_dense_tropical_matvec() {
+        // The engine's max-plus butterfly stage IS the min-plus matvec
+        // under negation: −(T ⊗ (−σ)) equals the ACS output row.
+        let spec = CodeSpec::standard_k5();
+        let trellis = Trellis::new(spec);
+        let ns = trellis.num_states();
+        let mut rng = Rng64::seeded(0x7E35);
+        let prev: Vec<f32> = (0..ns).map(|_| (rng.uniform() as f32 - 0.5) * 10.0).collect();
+        let llr_t = [1.25f32, -0.5];
+        let t = stage_matrix(&trellis, &llr_t);
+        let neg_prev: Vec<f32> = prev.iter().map(|x| -x).collect();
+        let dense: Vec<f32> =
+            tropical_matvec(&t, &neg_prev, ns).iter().map(|x| -x).collect();
+        let mut acs = AcsScratch::new(ns);
+        let mut row = vec![0f32; ns];
+        let mut words = vec![0u64; 1];
+        acs_stage_from_llrs(&trellis, &llr_t, &prev, &mut acs, &mut row, &mut words);
+        for j in 0..ns {
+            assert_eq!(dense[j].to_bits(), row[j].to_bits(), "state {j}");
+        }
+    }
+
+    #[test]
+    fn stage_matrix_has_two_finite_entries_per_row() {
+        for k in [3u32, 7, 9] {
+            let trellis = Trellis::new(CodeSpec::for_constraint(k));
+            let ns = trellis.num_states();
+            let t = stage_matrix(&trellis, &[0.75, -1.5]);
+            for j in 0..ns {
+                let finite = t[j * ns..(j + 1) * ns].iter().filter(|x| x.is_finite()).count();
+                assert_eq!(finite, 2, "K={k} row {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_scalar_bitwise_on_noisy_streams() {
+        // Structural bit-exactness: same expressions, same order —
+        // any input, any blocking, both stream ends.
+        for (k, seed) in [(7u32, 0x7E01u64), (9, 0x7E02)] {
+            let spec = CodeSpec::for_constraint(k);
+            let (_bits, llrs, stages) = noisy_workload(&spec, 3000, 1.0, seed);
+            let scalar = ScalarEngine::new(spec.clone());
+            for (batch, tile) in [(1usize, 1usize), (7, 16), (64, 512)] {
+                let e = TgemmEngine::with_blocking(spec.clone(), batch, tile);
+                for end in [StreamEnd::Terminated, StreamEnd::Truncated] {
+                    assert_eq!(
+                        run(&e, &llrs, stages, end),
+                        run(&scalar, &llrs, stages, end),
+                        "K={k} batch={batch} tile={tile} {end}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decodes_clean_k9_streams_error_free() {
+        let spec = CodeSpec::standard_k9();
+        let (bits, llrs, stages) = noisy_workload(&spec, 5000, 8.0, 0x7E09);
+        let e = TgemmEngine::new(spec);
+        let out = run(&e, &llrs, stages, StreamEnd::Terminated);
+        assert_eq!(&out[..bits.len()], &bits[..]);
+    }
+
+    #[test]
+    fn rate_third_code_matches_scalar() {
+        // β=3 exercises the three-lane branch-metric fill through the
+        // slab path (or the generic fallback if the code is exotic).
+        let spec = CodeSpec::standard_k7_r3();
+        let (_bits, llrs, stages) = noisy_workload(&spec, 800, 2.0, 0x7E03);
+        let e = TgemmEngine::new(spec.clone());
+        let scalar = ScalarEngine::new(spec);
+        assert_eq!(
+            run(&e, &llrs, stages, StreamEnd::Terminated),
+            run(&scalar, &llrs, stages, StreamEnd::Terminated),
+        );
+    }
+
+    #[test]
+    fn long_stream_renormalization_stays_bit_exact() {
+        // Cross a renorm boundary (t = 4095) mid-batch: the cadence
+        // must line up with the scalar decoder's exactly.
+        let spec = CodeSpec::standard_k7();
+        let (_bits, llrs, stages) = noisy_workload(&spec, 9000, 1.5, 0x7E04);
+        let e = TgemmEngine::new(spec.clone());
+        let scalar = ScalarEngine::new(spec);
+        assert_eq!(
+            run(&e, &llrs, stages, StreamEnd::Truncated),
+            run(&scalar, &llrs, stages, StreamEnd::Truncated),
+        );
+    }
+
+    #[test]
+    fn empty_stream_is_empty() {
+        let e = TgemmEngine::new(CodeSpec::standard_k7());
+        assert!(run(&e, &[], 0, StreamEnd::Truncated).is_empty());
+    }
+
+    #[test]
+    fn name_reports_blocking() {
+        let e = TgemmEngine::with_blocking(CodeSpec::standard_k7(), 48, 128);
+        assert_eq!(e.name(), "tgemm(B=48,T=128)");
+        let auto = TgemmEngine::new(CodeSpec::standard_k9());
+        assert_eq!(auto.batch(), crate::memmodel::tgemm_stage_batch(256));
+        assert_eq!(auto.tile(), crate::memmodel::tgemm_tile_states(256));
+    }
+
+    #[test]
+    fn soft_and_tail_biting_are_typed_refusals() {
+        let e = TgemmEngine::new(CodeSpec::standard_k7());
+        let llrs = vec![0.5f32; 8];
+        let err = e.decode(&DecodeRequest::soft(&llrs, 4, StreamEnd::Truncated)).unwrap_err();
+        assert!(matches!(err, DecodeError::UnsupportedOutput { .. }), "{err}");
+        let err = e.decode(&DecodeRequest::hard(&llrs, 4, StreamEnd::TailBiting)).unwrap_err();
+        assert!(matches!(err, DecodeError::UnsupportedStreamEnd { .. }), "{err}");
+    }
+
+    #[test]
+    fn stats_report_final_metric_and_one_frame() {
+        let spec = CodeSpec::standard_k7();
+        let (_bits, llrs, stages) = noisy_workload(&spec, 500, 6.0, 0x7E05);
+        let e = TgemmEngine::new(spec);
+        let out =
+            e.decode(&DecodeRequest::hard(&llrs, stages, StreamEnd::Terminated)).unwrap();
+        assert_eq!(out.stats.frames, 1);
+        assert!(out.stats.final_metric.unwrap().is_finite());
+    }
+}

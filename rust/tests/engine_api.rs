@@ -196,6 +196,37 @@ fn tail_biting_soft_requests_refused_until_sova_is_ported() {
 }
 
 #[test]
+fn tgemm_refusals_are_typed_and_name_the_engine() {
+    // The tropical-matrix engine is hard-output / linear-stream only;
+    // both refusals must be the typed variants carrying the engine's
+    // own name, so callers can tell which route in a dispatch chain
+    // declined the request.
+    use viterbi::viterbi::OutputMode;
+    let p = params();
+    let engine = (viterbi::viterbi::registry::find("tgemm").unwrap().build)(&p);
+    let llrs = vec![0.5f32; 320];
+    match engine.decode(&DecodeRequest::soft(&llrs, 160, StreamEnd::Truncated)) {
+        Err(DecodeError::UnsupportedOutput { engine: name, mode }) => {
+            assert!(name.starts_with("tgemm"), "{name}");
+            assert_eq!(mode, OutputMode::Soft);
+        }
+        other => panic!("soft request must be a typed refusal, got {other:?}"),
+    }
+    match engine.decode(&DecodeRequest::hard(&llrs, 160, StreamEnd::TailBiting)) {
+        Err(DecodeError::UnsupportedStreamEnd { engine: name, end }) => {
+            assert!(name.starts_with("tgemm"), "{name}");
+            assert_eq!(end, StreamEnd::TailBiting);
+        }
+        other => panic!("tail-biting request must be a typed refusal, got {other:?}"),
+    }
+    // Length validation still wins over capability negotiation.
+    let err = engine
+        .decode(&DecodeRequest::soft(&llrs[..319], 160, StreamEnd::Truncated))
+        .unwrap_err();
+    assert!(matches!(err, DecodeError::LlrLengthMismatch { .. }), "{err}");
+}
+
+#[test]
 fn sova_reliabilities_separate_errors_for_scalar_and_unified() {
     // The headline acceptance criterion: at Eb/N0 = 3 dB, bits the
     // decoder marks confident (|soft| above the median) must show a

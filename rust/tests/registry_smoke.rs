@@ -38,7 +38,7 @@ fn every_registry_engine_roundtrips_k7_frame_error_free() {
     };
     let (bits, llrs, stages) = high_snr_workload(4096, 0x5140);
     let reg = registry();
-    assert_eq!(reg.len(), 11, "engine silently dropped from the registry");
+    assert_eq!(reg.len(), 12, "engine silently dropped from the registry");
     for entry in &reg {
         let engine = (entry.build)(&params);
         let out = engine
@@ -65,7 +65,7 @@ fn registry_names_match_bench_cli_contract() {
     assert_eq!(
         names,
         [
-            "scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "blocks",
+            "scalar", "tiled", "unified", "parallel", "lanes", "lanes-mt", "blocks", "tgemm",
             "streaming", "hard", "wava", "auto"
         ]
     );
@@ -82,6 +82,11 @@ fn capability_flags_match_the_documented_matrix() {
     let tail_biting: Vec<&str> =
         registry().iter().filter(|e| e.tail_biting).map(|e| e.name).collect();
     assert_eq!(tail_biting, ["wava", "auto"]);
+    // The tropical-matrix engine's row: hard-output linear streams
+    // only, like the other whole-stream accelerators.
+    let tgemm = registry::find("tgemm").expect("tgemm registered");
+    assert!(!tgemm.soft_output, "tgemm has no SOVA port");
+    assert!(!tgemm.tail_biting, "tgemm decodes linear streams only");
     // No engine advertises a nonzero soft-margin working set without
     // advertising soft output itself.
     let params = BuildParams {

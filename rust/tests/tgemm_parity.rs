@@ -1,0 +1,184 @@
+//! Parity gate for the tropical-GEMM engine (`tgemm`): bit-exact
+//! against the `unified` reference.
+//!
+//! The equivalence argument has two halves, both pinned here:
+//!
+//! 1. `tgemm`'s tiled min-plus sweep computes the same f32 expression
+//!    per state as the scalar butterfly, in the same per-element
+//!    order — tiling and stage batching only regroup independent
+//!    updates — so it matches the whole-stream decode bitwise.
+//! 2. `unified` with a degenerate geometry (frame and traceback
+//!    subframe at least as long as the stream) *is* the whole-stream
+//!    decode. So against that geometry the parity claim is exact,
+//!    message by message, not statistical.
+//!
+//! K = 3/5/7 are swept exhaustively over every short message;
+//! K = 9 (the constraint length the planner prefers `tgemm` for) gets
+//! randomized noisy streams, both terminated and truncated, plus an
+//! overlapped production geometry at high SNR. A blocking sweep pins
+//! that the (batch, tile) levers never change a single output bit.
+
+use viterbi::channel::{bpsk, llr, AwgnChannel, Rng64};
+use viterbi::code::{encode, CodeSpec, Termination};
+use viterbi::frames::plan::FrameGeometry;
+use viterbi::viterbi::{registry, BuildParams, DecodeRequest, Engine, StreamEnd, TgemmEngine};
+
+fn run(e: &dyn Engine, llrs: &[f32], stages: usize, end: StreamEnd) -> Vec<u8> {
+    e.decode(&DecodeRequest::hard(llrs, stages, end)).expect("decode").bits
+}
+
+/// The `unified` reference in its degenerate whole-stream
+/// configuration: one frame covering the whole stream, parallel
+/// traceback subframe covering the whole frame — exactly the scalar
+/// whole-stream recursion, which is what `tgemm` claims bit-parity
+/// with.
+fn unified_whole_stream(spec: &CodeSpec, stages: usize) -> std::sync::Arc<dyn Engine> {
+    let f = stages.max(16);
+    let p = BuildParams {
+        spec: spec.clone(),
+        geo: FrameGeometry::new(f, 4, 4),
+        f0: f,
+        threads: 1,
+        delay: 96,
+        lanes: 8,
+        stream_stages: stages,
+    };
+    (registry::find("unified").expect("unified registered").build)(&p)
+}
+
+/// Noiseless LLRs for an encoded stream: +4.0 for a transmitted 0,
+/// −4.0 for a transmitted 1 (the repo's noiseless-parity idiom).
+fn noiseless_llrs(coded: &[u8]) -> Vec<f32> {
+    coded.iter().map(|&b| if b == 0 { 4.0 } else { -4.0 }).collect()
+}
+
+/// Noisy terminated-or-truncated workload at `ebn0` dB.
+fn workload(
+    spec: &CodeSpec,
+    n: usize,
+    ebn0: f64,
+    seed: u64,
+    term: Termination,
+) -> (Vec<u8>, Vec<f32>, usize) {
+    let mut rng = Rng64::seeded(seed);
+    let mut bits = vec![0u8; n];
+    rng.fill_bits(&mut bits);
+    let enc = encode(spec, &bits, term);
+    let stages = match term {
+        Termination::Terminated => n + (spec.k as usize - 1),
+        _ => n,
+    };
+    let ch = AwgnChannel::new(ebn0, spec.rate());
+    let rx = ch.transmit(&bpsk::modulate(&enc), &mut rng);
+    (bits, llr::llrs_from_samples(&rx, ch.sigma()), stages)
+}
+
+#[test]
+fn exhaustive_short_messages_match_unified_bit_for_bit() {
+    // Every message of every length up to the cap, both stream ends,
+    // K = 3/5/7. Noiseless, so besides the engine-vs-engine parity the
+    // decode must also invert the encoder exactly (the standard codes
+    // are non-catastrophic and the start state is known, so the ML
+    // path is unique at zero noise).
+    for (k, max_n) in [(3u32, 8usize), (5, 8), (7, 6)] {
+        let spec = CodeSpec::for_constraint(k);
+        for n in 1..=max_n {
+            for msg in 0u32..(1u32 << n) {
+                let bits: Vec<u8> = (0..n).map(|i| ((msg >> i) & 1) as u8).collect();
+                for (term, end) in [
+                    (Termination::Terminated, StreamEnd::Terminated),
+                    (Termination::Truncated, StreamEnd::Truncated),
+                ] {
+                    let llrs = noiseless_llrs(&encode(&spec, &bits, term));
+                    let stages = match term {
+                        Termination::Terminated => n + (k as usize - 1),
+                        _ => n,
+                    };
+                    let tgemm = TgemmEngine::new(spec.clone());
+                    let got = run(&tgemm, &llrs, stages, end);
+                    let want =
+                        run(unified_whole_stream(&spec, stages).as_ref(), &llrs, stages, end);
+                    assert_eq!(got, want, "K={k} n={n} msg={msg:#b} {term:?}: tgemm vs unified");
+                    assert_eq!(
+                        &got[..n],
+                        &bits[..],
+                        "K={k} n={n} msg={msg:#b} {term:?}: not the transmitted message"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn k9_noisy_streams_match_unified_bit_for_bit() {
+    // The constraint length the planner routes to tgemm: randomized
+    // noisy streams near the waterfall, where the decoded bits depend
+    // on every metric comparison — structural parity, not just
+    // both-error-free agreement. Both stream ends (the truncated end
+    // takes the argmax start, a different final-traceback path).
+    let spec = CodeSpec::standard_k9();
+    for (term, end) in [
+        (Termination::Terminated, StreamEnd::Terminated),
+        (Termination::Truncated, StreamEnd::Truncated),
+    ] {
+        for seed in [0x7634_0900u64, 0x7634_0901, 0x7634_0902] {
+            let (_bits, llrs, stages) = workload(&spec, 4000, 3.0, seed, term);
+            let tgemm = TgemmEngine::new(spec.clone());
+            let got = run(&tgemm, &llrs, stages, end);
+            let want = run(unified_whole_stream(&spec, stages).as_ref(), &llrs, stages, end);
+            assert_eq!(got, want, "K=9 seed={seed:#x} {term:?}");
+        }
+    }
+}
+
+#[test]
+fn k9_overlapped_production_geometry_agrees_at_high_snr() {
+    // The registry-default comparison the bench gate runs: unified in
+    // an overlapped production geometry (256-stage frames, 48/72
+    // overlap, 32-stage parallel traceback). Far above the waterfall
+    // both decoders recover the transmitted stream exactly, so they
+    // agree with each other through it.
+    let spec = CodeSpec::standard_k9();
+    let (bits, llrs, stages) = workload(&spec, 8192, 10.0, 0x7634_0910, Termination::Terminated);
+    let p = BuildParams {
+        spec: spec.clone(),
+        geo: FrameGeometry::new(256, 48, 72),
+        f0: 32,
+        threads: 1,
+        delay: 96,
+        lanes: 8,
+        stream_stages: stages,
+    };
+    let unified = (registry::find("unified").unwrap().build)(&p);
+    let tgemm = TgemmEngine::new(spec.clone());
+    let got = run(&tgemm, &llrs, stages, StreamEnd::Terminated);
+    let want = run(unified.as_ref(), &llrs, stages, StreamEnd::Terminated);
+    assert_eq!(&got[..bits.len()], &bits[..], "tgemm not error-free at 10 dB");
+    assert_eq!(got, want, "tgemm vs overlapped unified at 10 dB");
+}
+
+#[test]
+fn blocking_sweep_never_changes_the_output() {
+    // Stage batching and state tiling are pure execution-layout
+    // levers: every (batch, tile) pair — degenerate, tiny, L1-sized,
+    // and larger than the state space — decodes the identical bit
+    // stream on a noisy input where any arithmetic reordering would
+    // show.
+    for (spec, seed) in
+        [(CodeSpec::standard_k7(), 0x7634_0920u64), (CodeSpec::standard_k9(), 0x7634_0921)]
+    {
+        let (_bits, llrs, stages) = workload(&spec, 3000, 3.0, seed, Termination::Terminated);
+        let reference = run(&TgemmEngine::new(spec.clone()), &llrs, stages, StreamEnd::Terminated);
+        for (batch, tile) in [(1usize, 1usize), (1, 64), (4, 8), (16, 1000), (64, 512), (256, 7)] {
+            let e = TgemmEngine::with_blocking(spec.clone(), batch, tile);
+            let out = run(&e, &llrs, stages, StreamEnd::Terminated);
+            assert_eq!(
+                out,
+                reference,
+                "K={} blocking (B={batch}, T={tile}) changed the output",
+                spec.k
+            );
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Semiring property suite for the tropical-GEMM ACS engine: the
+//! min-plus matrix algebra the `tgemm` engine is built on must actually
+//! be a semiring on the representable inputs, and every blocking the
+//! engine applies (cache tiles, stage batching) must be output-
+//! invariant. Matrices here use *integer-valued* f32 entries so that
+//! float addition is exactly associative and the algebraic identities
+//! hold bitwise, not just approximately — the same reason min over
+//! non-NaN floats is order-independent makes the blocked kernels
+//! exactly equal to the naive ones even on continuous inputs.
+
+use viterbi::channel::Rng64;
+use viterbi::code::{CodeSpec, Trellis};
+use viterbi::util::check;
+use viterbi::viterbi::{
+    stage_matrix, tropical_identity, tropical_matmul_blocked, tropical_matmul_naive,
+    tropical_matvec, TROPICAL_ZERO,
+};
+
+/// Random n×n tropical matrix: integer values in [-32, 32], with a
+/// quarter of the entries set to the additive identity `+∞` so the
+/// sparse/no-transition paths are exercised.
+fn gen_matrix(rng: &mut Rng64, n: usize) -> Vec<f32> {
+    (0..n * n)
+        .map(|_| {
+            if rng.gen_range_usize(0, 4) == 0 {
+                TROPICAL_ZERO
+            } else {
+                rng.gen_range_usize(0, 65) as f32 - 32.0
+            }
+        })
+        .collect()
+}
+
+/// Random length-n tropical vector, integer-valued like the matrices.
+fn gen_vector(rng: &mut Rng64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.gen_range_usize(0, 65) as f32 - 32.0).collect()
+}
+
+/// Bitwise equality (f32::to_bits), so `+∞ == +∞` passes and a stray
+/// `-0.0`/NaN would fail loudly instead of comparing equal.
+fn assert_bitwise_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: entry {i} diverged ({x} vs {y})");
+    }
+}
+
+#[test]
+fn matmul_is_associative_on_integer_matrices() {
+    // (A ⊗ B) ⊗ C = A ⊗ (B ⊗ C): min is associative outright, and with
+    // integer entries every three-term sum is exact in f32, so the two
+    // parenthesizations agree bitwise.
+    check::forall(
+        "tropical matmul associativity",
+        40,
+        0x7634_0001,
+        |rng| {
+            let n = rng.gen_range_usize(1, 13);
+            (gen_matrix(rng, n), gen_matrix(rng, n), gen_matrix(rng, n), n)
+        },
+        |(a, b, c, n)| {
+            let left = tropical_matmul_naive(&tropical_matmul_naive(a, b, *n), c, *n);
+            let right = tropical_matmul_naive(a, &tropical_matmul_naive(b, c, *n), *n);
+            assert_bitwise_eq(&left, &right, "associativity");
+        },
+    );
+}
+
+#[test]
+fn identity_matrix_is_neutral_on_both_sides() {
+    check::forall(
+        "tropical identity",
+        40,
+        0x7634_0002,
+        |rng| {
+            let n = rng.gen_range_usize(1, 17);
+            (gen_matrix(rng, n), n)
+        },
+        |(a, n)| {
+            let i = tropical_identity(*n);
+            assert_bitwise_eq(&tropical_matmul_naive(&i, a, *n), a, "I ⊗ A");
+            assert_bitwise_eq(&tropical_matmul_naive(a, &i, *n), a, "A ⊗ I");
+        },
+    );
+}
+
+#[test]
+fn blocked_matmul_matches_naive_for_every_block_size() {
+    // The invariance the engine's state tiling rides on: min over
+    // non-NaN floats is order-independent, and each candidate sum
+    // A[i][k] + B[k][j] is the same f32 value in either loop nest, so
+    // reordering by tiles cannot change a single bit. Continuous
+    // entries would pass too; integer ones keep the generator shared.
+    for n in [1usize, 4, 16, 64] {
+        let mut rng = Rng64::seeded(0x7634_0003 ^ n as u64);
+        let a = gen_matrix(&mut rng, n);
+        let b = gen_matrix(&mut rng, n);
+        let reference = tropical_matmul_naive(&a, &b, n);
+        for block in [1usize, 2, 3, 5, 8, 16, n, n + 3] {
+            let blocked = tropical_matmul_blocked(&a, &b, n, block);
+            assert_bitwise_eq(&blocked, &reference, &format!("n={n} block={block}"));
+        }
+    }
+}
+
+#[test]
+fn matvec_agrees_with_matmul_against_a_one_column_matrix() {
+    // T ⊗ m as a matvec equals the column of the n×n product where m
+    // is embedded as a column — the matvec is not a separate algebra.
+    check::forall(
+        "matvec embeds in matmul",
+        40,
+        0x7634_0004,
+        |rng| {
+            let n = rng.gen_range_usize(1, 17);
+            (gen_matrix(rng, n), gen_vector(rng, n), n)
+        },
+        |(t, m, n)| {
+            let n = *n;
+            // Embed m as column 0 of an otherwise-+∞ matrix.
+            let mut mm = vec![TROPICAL_ZERO; n * n];
+            for i in 0..n {
+                mm[i * n] = m[i];
+            }
+            let product = tropical_matmul_naive(t, &mm, n);
+            let column: Vec<f32> = (0..n).map(|i| product[i * n]).collect();
+            assert_bitwise_eq(&tropical_matvec(t, m, n), &column, "matvec vs matmul column");
+        },
+    );
+}
+
+#[test]
+fn stage_batching_composes_stage_matrices_exactly() {
+    // The algebra behind the engine's stage batching: sweeping two
+    // stages one matvec at a time equals pre-composing the stage
+    // matrices with one matmul and applying the product once —
+    // T₂ ⊗ (T₁ ⊗ m) = (T₂ ⊗ T₁) ⊗ m. With integer-valued LLRs the
+    // branch metrics are integers, every sum is exact, and the
+    // equality is bitwise.
+    for spec in [CodeSpec::standard_k5(), CodeSpec::standard_k7()] {
+        let trellis = Trellis::new(spec.clone());
+        let ns = trellis.num_states();
+        let beta = spec.beta as usize;
+        let mut rng = Rng64::seeded(0x7634_0005 ^ spec.k as u64);
+        for _ in 0..8 {
+            let llrs: Vec<f32> =
+                (0..2 * beta).map(|_| rng.gen_range_usize(0, 17) as f32 - 8.0).collect();
+            let t1 = stage_matrix(&trellis, &llrs[..beta]);
+            let t2 = stage_matrix(&trellis, &llrs[beta..]);
+            let m = gen_vector(&mut rng, ns);
+            let per_stage = tropical_matvec(&t2, &tropical_matvec(&t1, &m, ns), ns);
+            let composed = tropical_matvec(&tropical_matmul_naive(&t2, &t1, ns), &m, ns);
+            assert_bitwise_eq(&per_stage, &composed, &format!("K={} composition", spec.k));
+        }
+    }
+}
+
+#[test]
+fn stage_matrices_have_exactly_two_finite_entries_per_row_and_column() {
+    // The sparsity the engine exploits: for a rate-1/n code every state
+    // has exactly two predecessors (row sparsity) and exactly two
+    // successors (column sparsity) — T is a permutation-like butterfly,
+    // never denser.
+    for k in [3u32, 5, 7, 9] {
+        let spec = CodeSpec::for_constraint(k);
+        let trellis = Trellis::new(spec.clone());
+        let ns = trellis.num_states();
+        let beta = spec.beta as usize;
+        let mut rng = Rng64::seeded(0x7634_0006 ^ k as u64);
+        let llrs: Vec<f32> = (0..beta).map(|_| (rng.uniform() as f32 - 0.5) * 8.0).collect();
+        let t = stage_matrix(&trellis, &llrs);
+        let mut col_counts = vec![0usize; ns];
+        for j in 0..ns {
+            let row = &t[j * ns..(j + 1) * ns];
+            let finite = row.iter().filter(|x| x.is_finite()).count();
+            assert_eq!(finite, 2, "K={k}: row {j} has {finite} finite entries");
+            for (i, x) in row.iter().enumerate() {
+                if x.is_finite() {
+                    col_counts[i] += 1;
+                }
+            }
+        }
+        assert!(
+            col_counts.iter().all(|&c| c == 2),
+            "K={k}: column sparsity broken: {col_counts:?}"
+        );
+    }
+}

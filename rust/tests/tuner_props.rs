@@ -10,7 +10,7 @@ use viterbi::code::{encode, CodeSpec, Termination};
 use viterbi::frames::plan::FrameGeometry;
 use viterbi::tuner::{
     CalibrationProfile, CalibrationRecord, JobShape, Planner, PlannerConfig,
-    BLOCKS_STREAM_MIN, DISPATCH_CANDIDATES,
+    BLOCKS_STREAM_MIN, DISPATCH_CANDIDATES, TGEMM_K_MIN,
 };
 use viterbi::util::check;
 use viterbi::viterbi::{registry, BuildParams, DecodeRequest, Engine as _, StreamEnd};
@@ -60,15 +60,19 @@ fn assert_plan_invariants(planner: &Planner, shape: &JobShape, budget: Option<us
             choice.engine
         );
     } else if shape.stream_stages >= BLOCKS_STREAM_MIN {
-        // One contiguous long hard linear stream: the block-parallel
-        // route is eligible (and wins whenever the budget allows).
+        // One contiguous long hard linear stream: the whole-stream
+        // routes (block-parallel, and the tropical-matrix sweep for
+        // large K) are eligible and win whenever the budget allows.
         assert!(
-            choice.engine == "blocks" || DISPATCH_CANDIDATES.contains(&choice.engine),
+            choice.engine == "blocks"
+                || choice.engine == "tgemm"
+                || DISPATCH_CANDIDATES.contains(&choice.engine),
             "stream shape {shape:?} routed to non-candidate {:?}",
             choice.engine
         );
         if budget.is_none() {
-            assert_eq!(choice.engine, "blocks", "unbudgeted stream shape {shape:?}");
+            let expected = if shape.k >= TGEMM_K_MIN { "tgemm" } else { "blocks" };
+            assert_eq!(choice.engine, expected, "unbudgeted stream shape {shape:?}");
         }
     } else {
         assert!(

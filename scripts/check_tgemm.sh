@@ -1,0 +1,99 @@
+#!/usr/bin/env bash
+# Tropical-GEMM gate (CI "build-test" job, tgemm step):
+#   1. the semiring property suite — min-plus associativity/identity,
+#      blocked-vs-naive kernel equivalence, stage-batch composition —
+#      and the parity suite: exhaustive K=3/5/7 bit-exactness against
+#      the whole-stream `unified` reference plus randomized K=9 parity
+#      and blocking-sweep output invariance;
+#   2. a bench smoke at K=9 (the constraint length the planner routes
+#      to tgemm): the stage-batched, state-tiled min-plus sweep must
+#      beat the serial `unified` walk outright at 256 states, and stay
+#      within noise of it at K=7 (64 states, where the slab buys less);
+#   3. the committed bench/records/BENCH_pr10.jsonl must parse
+#      alongside the baseline: `bench diff` in trend mode over the two
+#      committed record sets, failing on any beyond-noise drift.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tgemm: semiring property + parity suites =="
+cargo test -q --test tgemm_props
+cargo test -q --test tgemm_parity
+
+echo "== tgemm: K=9 bench smoke (2^16 stages, 256 states) =="
+cargo run --release -- bench --k 9 --engines tgemm,unified --frames 64 \
+    --frame-lens 1024 --samples 3 --warmup 1 --out BENCH_tgemm_k9.json
+test -s BENCH_tgemm_k9.json
+
+python3 - BENCH_tgemm_k9.json <<'EOF'
+import json
+import sys
+
+path = sys.argv[1]
+records = []
+with open(path) as f:
+    for line in f:
+        line = line.strip()
+        if line:
+            records.append(json.loads(line))
+
+by_engine = {r["engine"]: r for r in records if r["k"] == 9}
+for name in ("tgemm", "unified"):
+    if name not in by_engine:
+        print(f"FAIL: no `{name}` record at K=9 in", path)
+        sys.exit(1)
+
+tgemm_mbps = by_engine["tgemm"]["median_mbps"]
+unified_mbps = by_engine["unified"]["median_mbps"]
+ratio = tgemm_mbps / unified_mbps if unified_mbps > 0 else float("inf")
+verdict = "OK" if tgemm_mbps > unified_mbps else "FAIL"
+print(
+    f"{verdict}: K=9 65536-stage stream: tgemm {tgemm_mbps:.1f} Mb/s "
+    f"vs unified {unified_mbps:.1f} Mb/s ({ratio:.2f}x)"
+)
+sys.exit(0 if tgemm_mbps > unified_mbps else 1)
+EOF
+
+echo "== tgemm: K=7 bench smoke (64 states, parity-with-noise check) =="
+cargo run --release -- bench --k 7 --engines tgemm,unified --frames 64 \
+    --frame-lens 1024 --samples 3 --warmup 1 --out BENCH_tgemm_k7.json
+test -s BENCH_tgemm_k7.json
+
+python3 - BENCH_tgemm_k7.json <<'EOF'
+import json
+import sys
+
+path = sys.argv[1]
+records = []
+with open(path) as f:
+    for line in f:
+        line = line.strip()
+        if line:
+            records.append(json.loads(line))
+
+by_engine = {r["engine"]: r for r in records if r["k"] == 7}
+for name in ("tgemm", "unified"):
+    if name not in by_engine:
+        print(f"FAIL: no `{name}` record at K=7 in", path)
+        sys.exit(1)
+
+tgemm_mbps = by_engine["tgemm"]["median_mbps"]
+unified_mbps = by_engine["unified"]["median_mbps"]
+ratio = tgemm_mbps / unified_mbps if unified_mbps > 0 else 0.0
+# At 64 states the slab amortizes little; tgemm only has to stay
+# within noise of the serial reference, not beat it.
+verdict = "OK" if ratio >= 0.85 else "FAIL"
+print(
+    f"{verdict}: K=7 65536-stage stream: tgemm {tgemm_mbps:.1f} Mb/s "
+    f"vs unified {unified_mbps:.1f} Mb/s ({ratio:.2f}x, floor 0.85x)"
+)
+sys.exit(0 if ratio >= 0.85 else 1)
+EOF
+
+echo "== tgemm: committed record trend (baseline -> pr10) =="
+# Explicit file paths, not the records directory: the bench-diff step
+# refreshes BENCH_current.jsonl in the same directory on CI runners,
+# and this leg must stay deterministic over committed records only.
+cargo run --release --quiet -- bench diff bench/records/BENCH_pr10.jsonl \
+    --against bench/records/BENCH_baseline.jsonl
+
+echo "tgemm OK: semiring laws + parity green; min-plus sweep wins at K=9; records parse"
